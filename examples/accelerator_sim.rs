@@ -1,0 +1,79 @@
+//! Hardware-architect view: sweep the accelerator design space with the
+//! cycle simulator + cost model and print the trade-off table — the
+//! exploration behind Figs. 7/8.
+//!
+//!     cargo run --release --example accelerator_sim [-- --head-dim 64]
+
+use hfa::benchlib::Table;
+use hfa::cli::Args;
+use hfa::config::AcceleratorConfig;
+use hfa::hw::cost::{report, Arith};
+use hfa::hw::pipeline::{simulate, LatencyModel};
+use hfa::hw::Accelerator;
+use hfa::proptest::Rng;
+use hfa::Mat;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let d = args.get_usize("head-dim", 64)?;
+    let n = args.get_usize("seq-len", 1024)?;
+
+    let mut t = Table::new(
+        &format!("design-space sweep (d={d}, N={n}, one query datapath)"),
+        &["arith", "p", "cycles/query-round", "time us", "area mm^2", "power mW",
+          "edp (uJ*us)"],
+    );
+    let lat = LatencyModel::for_head_dim(d);
+    for arith in [Arith::Fa2, Arith::Hfa] {
+        for p in [1usize, 2, 4, 8] {
+            let cfg = AcceleratorConfig {
+                head_dim: d,
+                seq_len: n,
+                kv_blocks: p,
+                parallel_queries: 1,
+                freq_mhz: 500.0,
+            };
+            let s = simulate(d, n, p, 1, 1, lat);
+            let r = report(arith, &cfg, 16);
+            let time_us = s.time_us(500.0);
+            let energy_uj = r.total_power_mw() * time_us / 1e3 / 1e3 * 1e3; // mW*us -> nJ -> uJ
+            t.row(&[
+                arith.name().into(),
+                p.to_string(),
+                s.cycles.to_string(),
+                format!("{time_us:.2}"),
+                format!("{:.3}", r.total_area_mm2()),
+                format!("{:.0}", r.total_power_mw()),
+                format!("{:.4}", energy_uj * time_us),
+            ]);
+        }
+    }
+    t.emit("accelerator_sim_sweep");
+
+    // functional check on the chosen design point: run real data through
+    // the RTL-equivalent model and compare H-FA vs FA-2 outputs
+    let cfg = AcceleratorConfig {
+        head_dim: d,
+        seq_len: n,
+        kv_blocks: 4,
+        parallel_queries: 1,
+        freq_mhz: 500.0,
+    };
+    let mut rng = Rng::new(11);
+    let k = Mat::from_vec(n, d, rng.normal_vec(n * d));
+    let v = Mat::from_vec(n, d, rng.normal_vec(n * d));
+    let q = Mat::from_vec(4, d, rng.normal_vec(4 * d));
+    let mut hfa_acc = Accelerator::new(Arith::Hfa, cfg.clone());
+    let mut fa2_acc = Accelerator::new(Arith::Fa2, cfg);
+    hfa_acc.load_kv(k.clone(), v.clone())?;
+    fa2_acc.load_kv(k, v)?;
+    let (oh, sh) = hfa_acc.compute_batch(&q)?;
+    let (of, sf) = fa2_acc.compute_batch(&q)?;
+    println!(
+        "\nfunctional run: 4 queries, {} cycles each design (identical latency — paper Section VI-C)",
+        sh.cycles
+    );
+    assert_eq!(sh.cycles, sf.cycles);
+    println!("max |H-FA - FA-2| over outputs: {:.4}", oh.max_abs_diff(&of));
+    Ok(())
+}

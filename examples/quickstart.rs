@@ -1,0 +1,48 @@
+//! Quickstart: compute attention with the exact oracle, the FA-2 baseline
+//! and the H-FA hybrid float/log datapath; compare accuracy and the
+//! modelled 28 nm hardware cost.
+//!
+//!     cargo run --release --example quickstart
+
+use hfa::attention::{compute, Impl};
+use hfa::config::AcceleratorConfig;
+use hfa::hw::cost::compare;
+use hfa::proptest::Rng;
+use hfa::Mat;
+
+fn main() {
+    // a single attention head: 8 queries against 256 keys, d = 64
+    let (b, n, d) = (8, 256, 64);
+    let mut rng = Rng::new(42);
+    let q = Mat::from_vec(b, d, rng.normal_vec(b * d)).round_bf16();
+    let k = Mat::from_vec(n, d, rng.normal_vec(n * d)).round_bf16();
+    let v = Mat::from_vec(n, d, rng.normal_vec(n * d)).round_bf16();
+
+    let exact = compute(Impl::Exact, &q, &k, &v, None);
+    let fa2 = compute(Impl::Fa2, &q, &k, &v, None);
+    let hfa = compute(Impl::Hfa, &q, &k, &v, None);
+
+    println!("attention output, first query, first 6 lanes:");
+    println!("  exact: {:?}", &exact.row(0)[..6]);
+    println!("  FA-2 : {:?}", &fa2.row(0)[..6]);
+    println!("  H-FA : {:?}", &hfa.row(0)[..6]);
+    println!(
+        "\nerror vs exact:  FA-2 max|d| = {:.2e}   H-FA max|d| = {:.3}",
+        fa2.max_abs_diff(&exact),
+        hfa.max_abs_diff(&exact)
+    );
+    println!("(H-FA trades bounded Mitchell/PWL/quantization error for hardware savings)");
+
+    // what that buys in silicon (paper Fig. 7 point at d=64)
+    let cfg = AcceleratorConfig::default();
+    let (fa2_cost, hfa_cost, area_s, power_s) = compare(&cfg, 64);
+    println!("\n28 nm accelerator @ 500 MHz, N=1024, 4 KV blocks, d=64:");
+    println!(
+        "  FA-2: {:.2} mm^2, {:.0} mW    H-FA: {:.2} mm^2, {:.0} mW",
+        fa2_cost.total_area_mm2(),
+        fa2_cost.total_power_mw(),
+        hfa_cost.total_area_mm2(),
+        hfa_cost.total_power_mw()
+    );
+    println!("  H-FA saves {area_s:.1}% area and {power_s:.1}% power (paper: 26.5% / 23.4%)");
+}

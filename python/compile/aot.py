@@ -1,0 +1,129 @@
+"""AOT artifact builder: python runs ONCE here, never on the request path.
+
+Emits into ``artifacts/``:
+  * ``hlo/``      — HLO **text** modules (kernel-only attention + full tiny-LM
+    forwards with weights baked as constants) loadable by the rust PJRT
+    runtime.  Text, not serialized protos: jax >= 0.5 emits 64-bit
+    instruction ids that xla_extension 0.5.1 rejects; the text parser
+    reassigns ids (see /opt/xla-example/README.md).
+  * ``models/<size>/`` — trained weights (flat f32 bin + manifest) for the
+    rust-native inference engine.
+  * ``eval/``     — synthetic benchmark task files (Table I/II substitutes).
+  * ``golden/``   — golden vectors pinning rust arithmetic to the python spec.
+  * ``.stamp``    — build marker for make.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import goldens, model, tasks, train
+from .kernels import fa2 as fa2_kernel
+from .kernels import hfa as hfa_kernel
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True: the tiny-LM weights are baked into the
+    # module; the default printer elides them as `constant({...})` which
+    # the rust-side HLO text parser cannot reconstruct.
+    return comp.as_hlo_text(True)
+
+
+def write_hlo(path: str, fn, *specs) -> None:
+    t0 = time.time()
+    text = to_hlo_text(jax.jit(fn).lower(*specs))
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"[aot] {path}  ({len(text)/1e3:.0f} kB, {time.time()-t0:.1f}s)")
+
+
+def build_attention_kernels(hlo_dir: str) -> None:
+    """Standalone attention executables for the serving path.
+
+    Shapes follow the paper's accelerator configuration: N = 1024 keys
+    (four 256-row KV sub-blocks), head dims 32/64; plus a small d=32
+    variant for quick tests.  B is the query batch the coordinator forms.
+    """
+    configs = [
+        ("fa2", 32, 256, 8), ("hfa", 32, 256, 8),
+        ("fa2", 64, 1024, 16), ("hfa", 64, 1024, 16),
+        ("fa2", 128, 1024, 16), ("hfa", 128, 1024, 16),
+    ]
+    for kind, d, n, b in configs:
+        kfn = fa2_kernel.fa2_attention if kind == "fa2" else hfa_kernel.hfa_attention
+        fn = lambda q, k, v, _kfn=kfn: (_kfn(q, k, v),)
+        sq = jax.ShapeDtypeStruct((b, d), jnp.bfloat16)
+        skv = jax.ShapeDtypeStruct((n, d), jnp.bfloat16)
+        write_hlo(f"{hlo_dir}/attn_{kind}_d{d}_n{n}_b{b}.hlo.txt", fn, sq, skv, skv)
+
+
+def build_model_hlos(hlo_dir: str, sizes: list[str], models_dir: str) -> None:
+    """Full-model forwards with baked weights, one per (size, attn_impl)."""
+    for size in sizes:
+        params, cfg = model.load_params(f"{models_dir}/{size}")
+        impls = ["fa2", "hfa", "exact"] if size == "s1" else ["fa2", "hfa"]
+        for impl in impls:
+            fn = (lambda toks, _p=params, _c=cfg, _i=impl:
+                  (model.forward(_p, _c, toks, attn_impl=_i),))
+            spec = jax.ShapeDtypeStruct((1, cfg.seq_len), jnp.int32)
+            write_hlo(f"{hlo_dir}/model_{size}_{impl}.hlo.txt", fn, spec)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="H-FA AOT artifact builder")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default="s0,s1,s2")
+    ap.add_argument("--skip-train", action="store_true",
+                    help="fail instead of training if weights are missing")
+    ap.add_argument("--only", default="",
+                    help="comma-set of phases: train,eval,golden,kernels,models")
+    args = ap.parse_args()
+
+    out = args.out_dir
+    sizes = [s for s in args.sizes.split(",") if s]
+    phases = set(args.only.split(",")) if args.only else {
+        "train", "eval", "golden", "kernels", "models"}
+    os.makedirs(f"{out}/hlo", exist_ok=True)
+    os.makedirs(f"{out}/models", exist_ok=True)
+
+    if "train" in phases:
+        for size in sizes:
+            mdir = f"{out}/models/{size}"
+            if os.path.exists(f"{mdir}/weights.bin"):
+                print(f"[aot] {mdir} exists — skipping training")
+                continue
+            if args.skip_train:
+                raise SystemExit(f"missing weights for {size} and --skip-train given")
+            print(f"[aot] training {size} ...")
+            train.train_and_save(model.SIZES[size], mdir, seed=0)
+
+    if "eval" in phases:
+        paths = tasks.gen_eval_files(f"{out}/eval", num_per_task=100)
+        print(f"[aot] wrote {len(paths)} eval task files")
+
+    if "golden" in phases:
+        goldens.dump_all(f"{out}/golden")
+
+    if "kernels" in phases:
+        build_attention_kernels(f"{out}/hlo")
+
+    if "models" in phases:
+        build_model_hlos(f"{out}/hlo", sizes, f"{out}/models")
+
+    with open(f"{out}/.stamp", "w") as f:
+        f.write(str(time.time()) + "\n")
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

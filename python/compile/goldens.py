@@ -1,0 +1,128 @@
+"""Golden-vector dump: pins the rust arithmetic to the python spec.
+
+Every primitive of the H-FA datapath gets a table of (input -> expected
+output) pairs generated from the bit-exact python emulation; the rust test
+suite (rust/tests/golden_replay.rs) replays them and asserts bit equality.
+Whole-attention cases additionally record the f32 score matrix so the rust
+LNS pipeline can be checked bit-exactly independent of dot-product
+association order (see DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from .kernels import logmath as lm
+from .kernels import ref
+
+
+def _f32_bits(x: np.ndarray) -> np.ndarray:
+    return np.ascontiguousarray(x, dtype=np.float32).view(np.uint32)
+
+
+def dump_pwl(path: str) -> None:
+    with open(path, "w") as f:
+        f.write("# c0_q14 c1_q14 (8 segments of 2^-f PWL)\n")
+        for c0, c1 in zip(lm.PWL_C0, lm.PWL_C1):
+            f.write(f"{c0} {c1}\n")
+
+
+def dump_log_conv(path: str, rng) -> None:
+    """bf16 bits -> (sign, q7 log) including edge cases."""
+    edge = [0x0000, 0x8000, 0x3F80, 0xBF80, 0x0080, 0x7F7F, 0xFF7F,
+            0x0001, 0x4000, 0x3400, 0x7F80 - 1]
+    rand = rng.integers(0, 1 << 16, size=2000).tolist()
+    bits = np.array(edge + rand, dtype=np.int64).astype(np.int32)
+    s, l = lm.bf16_bits_to_log_q7(bits, xp=np)
+    with open(path, "w") as f:
+        f.write("# bf16_bits sign log_q7\n")
+        for b, ss, ll in zip(bits, s, l):
+            f.write(f"{int(b) & 0xFFFF} {ss} {ll}\n")
+
+
+def dump_back_conv(path: str, rng) -> None:
+    """(sign, q7 log) -> bf16 bits, sweeping the reachable log range."""
+    logs = np.concatenate([
+        np.array([lm.LOG_ZERO, -(127 << 7), -(127 << 7) + 1, 0, 1, -1,
+                  (128 << 7) - 1, (130 << 7), -(130 << 7)], dtype=np.int64),
+        rng.integers(-(140 << 7), 130 << 7, size=2000),
+    ]).astype(np.int32)
+    signs = rng.integers(0, 2, size=logs.size).astype(np.int32)
+    bits = lm.log_q7_to_bf16_bits(signs, logs, xp=np)
+    with open(path, "w") as f:
+        f.write("# sign log_q7 bf16_bits\n")
+        for s, l, b in zip(signs, logs, bits):
+            f.write(f"{s} {l} {int(b)}\n")
+
+
+def dump_quant(path: str, rng) -> None:
+    """f32 score difference -> q7 (clamp [-15,0], x log2e, floor)."""
+    edge = np.array([0.0, -0.0, -1e-8, -1.0, -14.999, -15.0, -16.0, -1e30,
+                     -np.inf, np.nan, 0.5, 3.0], dtype=np.float32)
+    rand = (-rng.random(size=2000) * 20).astype(np.float32)
+    x = np.concatenate([edge, rand])
+    q = lm.quant_diff_q7(x, xp=np)
+    with open(path, "w") as f:
+        f.write("# f32_bits q7\n")
+        for xb, qq in zip(_f32_bits(x), q):
+            f.write(f"{int(xb)} {qq}\n")
+
+
+def dump_lns_add(path: str, rng) -> None:
+    n = 4000
+    a = rng.integers(-(40 << 7), 40 << 7, size=n).astype(np.int32)
+    b = rng.integers(-(40 << 7), 40 << 7, size=n).astype(np.int32)
+    # inject sentinels and exact ties
+    a[:50] = lm.LOG_ZERO
+    b[25:75] = lm.LOG_ZERO
+    b[100:150] = a[100:150]
+    sa = rng.integers(0, 2, size=n).astype(np.int32)
+    sb = rng.integers(0, 2, size=n).astype(np.int32)
+    s, l = lm.lns_add(sa, a, sb, b, xp=np)
+    with open(path, "w") as f:
+        f.write("# sa a sb b -> s l\n")
+        for row in zip(sa, a, sb, b, s, l):
+            f.write(" ".join(map(str, map(int, row))) + "\n")
+
+
+def dump_attn_case(path: str, rng, b: int, n: int, d: int,
+                   num_blocks: int = 1) -> None:
+    """Whole-attention golden: inputs, scores, and expected output bits."""
+    import jax.numpy as jnp
+    bf = lambda x: np.asarray(jnp.asarray(x, jnp.bfloat16), np.float32)
+    q = bf(rng.standard_normal((b, d)))
+    k = bf(rng.standard_normal((n, d)))
+    v = bf(rng.standard_normal((n, d)))
+    scale = np.float32(1.0 / np.sqrt(d))
+    scores = np.stack([(q.astype(np.float32) @ k[i]) * scale
+                       for i in range(n)], axis=1)      # (B, N)
+    if num_blocks == 1:
+        out = ref.hfa_attention_int(q, k, v)
+    else:
+        out = ref.hfa_attention_int_blocked(q, k, v, num_blocks)
+    out_bits = lm.f32_to_bf16_bits(out, xp=np)
+    fa2 = ref.fa2_attention(q, k, v)
+    with open(path, "w") as f:
+        f.write(f"{b} {n} {d} {num_blocks}\n")
+        for name, arr in [("q", _f32_bits(q)), ("k", _f32_bits(k)),
+                          ("v", _f32_bits(v)), ("scores", _f32_bits(scores)),
+                          ("out_bf16", out_bits.astype(np.int64)),
+                          ("fa2_f32", _f32_bits(fa2.astype(np.float32)))]:
+            f.write(name + ": " + " ".join(map(str, arr.ravel().tolist())) + "\n")
+
+
+def dump_all(out_dir: str, seed: int = 7) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    rng = np.random.default_rng(seed)
+    dump_pwl(f"{out_dir}/pwl_table.txt")
+    dump_log_conv(f"{out_dir}/log_conv.txt", rng)
+    dump_back_conv(f"{out_dir}/back_conv.txt", rng)
+    dump_quant(f"{out_dir}/quant.txt", rng)
+    dump_lns_add(f"{out_dir}/lns_add.txt", rng)
+    dump_attn_case(f"{out_dir}/attn_case_small.txt", rng, b=2, n=16, d=8)
+    dump_attn_case(f"{out_dir}/attn_case_mid.txt", rng, b=4, n=64, d=32)
+    dump_attn_case(f"{out_dir}/attn_case_blocked.txt", rng, b=2, n=64, d=16,
+                   num_blocks=4)
+    print(f"[goldens] wrote golden vectors to {out_dir}")

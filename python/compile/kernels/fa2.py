@@ -1,0 +1,110 @@
+"""FA-2 baseline Pallas kernel: all-float FlashAttention-2 (Alg. 2).
+
+This is the comparison design of the paper's evaluation ('FA-2'): the same
+streaming recurrence and tiling as the H-FA kernel, but with every
+operation — exponentials, vector-wide multiplications, the final division —
+kept in floating point.  Matches the rust ``attention::fa2`` golden model.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30  # python float: avoid captured-constant error in pallas
+
+
+def _fa2_kernel(q_ref, k_ref, v_ref, mask_ref,
+                o_ref, m_ref, l_ref, acc_ref,
+                *, scale: float, num_blocks: int):
+    """One grid step of the FA-2 recurrence over a KV tile (tile-level
+    online softmax — mathematically identical to the per-key loop)."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    valid = mask_ref[...]
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_cur = jnp.max(scores, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)                       # rescale factor
+    p = jnp.exp(scores - m_new[:, None])                  # (B, blk)
+    p = jnp.where(valid, p, 0.0)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1)
+    acc_new = acc_prev * alpha[:, None] + p @ v
+
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(j == num_blocks - 1)
+    def _finalize():
+        o_ref[...] = (acc_new / l_new[:, None]).astype(jnp.bfloat16)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_k"))
+def fa2_attention(q, k, v, mask=None, *, scale: float | None = None,
+                  block_k: int = 64):
+    """FA-2 attention for one head.  q: (B, d), k/v: (N, d), bf16 in/out."""
+    b, d = q.shape
+    n = k.shape[0]
+    if scale is None:
+        scale = float(1.0 / (d ** 0.5))
+    if n % block_k != 0:
+        raise ValueError(f"N={n} not divisible by block_k={block_k}")
+    num_blocks = n // block_k
+    if mask is None:
+        mask = jnp.ones((b, n), dtype=jnp.bool_)
+
+    kernel = functools.partial(_fa2_kernel, scale=scale, num_blocks=num_blocks)
+    out_shapes = (
+        jax.ShapeDtypeStruct((b, d), jnp.bfloat16),
+        jax.ShapeDtypeStruct((b,), jnp.float32),
+        jax.ShapeDtypeStruct((b,), jnp.float32),
+        jax.ShapeDtypeStruct((b, d), jnp.float32),
+    )
+    o, _, _, _ = pl.pallas_call(
+        kernel,
+        grid=(num_blocks,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda j: (0, 0)),
+            pl.BlockSpec((block_k, d), lambda j: (j, 0)),
+            pl.BlockSpec((block_k, d), lambda j: (j, 0)),
+            pl.BlockSpec((b, block_k), lambda j: (0, j)),
+        ],
+        out_specs=(
+            pl.BlockSpec((b, d), lambda j: (0, 0)),
+            pl.BlockSpec((b,), lambda j: (0,)),
+            pl.BlockSpec((b,), lambda j: (0,)),
+            pl.BlockSpec((b, d), lambda j: (0, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=True,
+    )(q.astype(jnp.bfloat16), k.astype(jnp.bfloat16),
+      v.astype(jnp.bfloat16), mask)
+    return o
+
+
+def fa2_attention_mha(q, k, v, mask=None, *, scale: float | None = None,
+                      block_k: int = 64):
+    """Multi-head wrapper: q/k/v (H, T, d); mask (T, T) shared across heads."""
+    f = functools.partial(fa2_attention, scale=scale, block_k=block_k)
+    if mask is None:
+        return jax.vmap(lambda a, b_, c: f(a, b_, c))(q, k, v)
+    return jax.vmap(lambda a, b_, c: f(a, b_, c, mask))(q, k, v)

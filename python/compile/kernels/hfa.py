@@ -1,0 +1,155 @@
+"""H-FA Pallas kernel: hybrid float/log-domain FlashAttention-2 (the paper's
+core contribution, Sections IV-V).
+
+Score path (Q K^T, running max, score differences) in float; the fused
+accumulation of the sum-of-exponentials and the output vector in Q9.7
+fixed-point LNS with Mitchell's approximation and an 8-segment PWL for
+2^-f — the same bit-exact arithmetic as ``logmath.py`` / ``ref.py`` /
+``rust/src/arith``.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper's FAU
+streams one key per cycle from an SRAM KV buffer; here the Pallas grid
+iterates over KV tiles (the BlockSpec expresses the HBM->VMEM schedule) and
+an in-kernel ``fori_loop`` reproduces the per-key recurrence exactly.  The
+triplet (m, sign, log|O|) is carried across grid steps in accumulator refs.
+Always lowered with ``interpret=True`` — real-TPU Mosaic custom-calls are
+not executable on the CPU PJRT plugin.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import logmath as lm
+
+NEG_INF = -1e30  # python float: avoid captured-constant error in pallas
+
+
+def _hfa_kernel(q_ref, k_ref, v_ref, mask_ref, c0_ref, c1_ref,
+                o_ref, m_ref, sgn_ref, log_ref,
+                *, scale: float, num_blocks: int, block_k: int):
+    """One grid step: stream one KV tile through the log-domain FAU."""
+    j = pl.program_id(0)
+    tables = (c0_ref[...], c1_ref[...])   # PWL coefficient LUTs (Eq. 19)
+
+    # ---- init accumulators at the first KV tile -------------------------
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        sgn_ref[...] = jnp.zeros_like(sgn_ref)
+        log_ref[...] = jnp.full_like(log_ref, lm.LOG_ZERO)
+
+    q = q_ref[...].astype(jnp.float32)                    # (B, d)
+    k = k_ref[...].astype(jnp.float32)                    # (blk, d)
+    v = v_ref[...]                                        # (blk, d) bf16
+    valid = mask_ref[...]                                 # (B, blk) bool
+
+    # float score path (dot-product unit of the FAU)
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (B, blk)
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    # value vector + prepended 1-lane (ell), converted to LNS once per tile
+    ones = jnp.ones((v.shape[0], 1), dtype=v.dtype)
+    v_ext = jnp.concatenate([ones, v], axis=1)            # (blk, d+1)
+    v_bits = jax.lax.bitcast_convert_type(v_ext, jnp.uint16)
+    sv_t, logv_t = lm.bf16_bits_to_log_q7(v_bits, xp=jnp)  # (blk, d+1)
+
+    def body(i, carry):
+        m, sgn, log_o = carry
+        s = jax.lax.dynamic_index_in_dim(scores, i, axis=1, keepdims=False)
+        msk = jax.lax.dynamic_index_in_dim(valid, i, axis=1, keepdims=False)
+        sv = jax.lax.dynamic_index_in_dim(sv_t, i, axis=0, keepdims=False)
+        logv = jax.lax.dynamic_index_in_dim(logv_t, i, axis=0, keepdims=False)
+
+        m_new = jnp.where(msk, jnp.maximum(m, s), m)
+        dm_q = lm.quant_diff_q7(m - m_new, xp=jnp)         # (B,)
+        ds_q = lm.quant_diff_q7(s - m_new, xp=jnp)         # (B,)
+        a = lm.shift_log(log_o, dm_q[:, None], xp=jnp)     # (B, d+1)
+        b = lm.shift_log(logv[None, :], ds_q[:, None], xp=jnp)
+        b = jnp.where(msk[:, None], b, jnp.int32(lm.LOG_ZERO))
+        sv_b = jnp.broadcast_to(sv[None, :], sgn.shape)
+        sgn_n, log_n = lm.lns_add(sgn, a, sv_b, b, xp=jnp, tables=tables)
+        return m_new, sgn_n, log_n
+
+    carry = (m_ref[...], sgn_ref[...], log_ref[...])
+    m, sgn, log_o = jax.lax.fori_loop(0, block_k, body, carry)
+    m_ref[...] = m
+    sgn_ref[...] = sgn
+    log_ref[...] = log_o
+
+    # ---- LogDiv + back-conversion at the last KV tile (Eqs. 15, 22) -----
+    @pl.when(j == num_blocks - 1)
+    def _finalize():
+        s_attn = sgn[:, 1:] ^ sgn[:, :1]
+        log_attn = log_o[:, 1:] - log_o[:, :1]
+        log_attn = jnp.where(log_o[:, 1:] <= jnp.int32(lm.LOG_ZERO // 2),
+                             jnp.int32(lm.LOG_ZERO), log_attn)
+        bits = lm.log_q7_to_bf16_bits(s_attn, log_attn, xp=jnp)
+        o_ref[...] = jax.lax.bitcast_convert_type(bits, jnp.bfloat16)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_k"))
+def hfa_attention(q, k, v, mask=None, *, scale: float | None = None,
+                  block_k: int = 64):
+    """H-FA attention for one head.  q: (B, d), k/v: (N, d), bf16 in/out.
+
+    ``mask``: optional (B, N) bool, True = attend.  ``block_k`` is the KV
+    tile streamed per grid step (the FAU's KV sub-block depth).
+    """
+    b, d = q.shape
+    n = k.shape[0]
+    if scale is None:
+        scale = float(1.0 / (d ** 0.5))
+    if n % block_k != 0:
+        raise ValueError(f"N={n} not divisible by block_k={block_k}")
+    num_blocks = n // block_k
+    if mask is None:
+        mask = jnp.ones((b, n), dtype=jnp.bool_)
+
+    kernel = functools.partial(_hfa_kernel, scale=scale,
+                               num_blocks=num_blocks, block_k=block_k)
+    out_shapes = (
+        jax.ShapeDtypeStruct((b, d), jnp.bfloat16),       # attention out
+        jax.ShapeDtypeStruct((b,), jnp.float32),          # m carry
+        jax.ShapeDtypeStruct((b, d + 1), jnp.int32),      # sign carry
+        jax.ShapeDtypeStruct((b, d + 1), jnp.int32),      # log|O| carry
+    )
+    grid = (num_blocks,)
+    o, _, _, _ = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, d), lambda j: (0, 0)),
+            pl.BlockSpec((block_k, d), lambda j: (j, 0)),
+            pl.BlockSpec((block_k, d), lambda j: (j, 0)),
+            pl.BlockSpec((b, block_k), lambda j: (0, j)),
+            pl.BlockSpec((lm.PWL_SEGMENTS,), lambda j: (0,)),
+            pl.BlockSpec((lm.PWL_SEGMENTS,), lambda j: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((b, d), lambda j: (0, 0)),
+            pl.BlockSpec((b,), lambda j: (0,)),
+            pl.BlockSpec((b, d + 1), lambda j: (0, 0)),
+            pl.BlockSpec((b, d + 1), lambda j: (0, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=True,
+    )(q.astype(jnp.bfloat16), k.astype(jnp.bfloat16),
+      v.astype(jnp.bfloat16), mask,
+      jnp.asarray(lm.PWL_C0, jnp.int32), jnp.asarray(lm.PWL_C1, jnp.int32))
+    return o
+
+
+def hfa_attention_mha(q, k, v, mask=None, *, scale: float | None = None,
+                      block_k: int = 64):
+    """Multi-head wrapper: q/k/v (H, T, d); mask (T, T) shared across heads."""
+    f = functools.partial(hfa_attention, scale=scale, block_k=block_k)
+    if mask is None:
+        return jax.vmap(lambda a, b_, c: f(a, b_, c))(q, k, v)
+    return jax.vmap(lambda a, b_, c: f(a, b_, c, mask))(q, k, v)

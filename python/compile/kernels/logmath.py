@@ -1,0 +1,198 @@
+"""Bit-accurate emulation primitives for the H-FA fixed-point LNS datapath.
+
+This file is the *executable specification* of the hardware arithmetic
+described in Sections IV-V of the paper.  The rust crate
+(`rust/src/arith/`) implements the same operations bit-for-bit; golden
+vectors dumped by ``python/compile/goldens.py`` pin the two sides
+together.
+
+Number formats
+--------------
+* All logarithmic quantities are **Q9.7** fixed point stored in int32
+  (value x 128): 9 integer bits (incl. sign) and 7 fraction bits, the
+  format the paper derives from BFloat16 (8 exponent + 7 mantissa bits,
+  plus one sign-extension bit).
+* ``LOG_ZERO`` is the -inf sentinel for the logarithm of 0.
+* PWL coefficients for 2^-f are Q14, derived from a closed-form f64
+  expression so that python and rust compute identical tables.
+
+Every function exists in two flavours:
+* a jnp flavour (vectorised, traceable -> usable inside Pallas kernels
+  under ``interpret=True``), and
+* the same code also runs eagerly on numpy arrays for tests.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# Format constants (mirrored in rust/src/arith/fix.rs — keep in sync)
+# --------------------------------------------------------------------------
+
+FRAC_BITS = 7                     # Q9.7: 7 fractional bits
+FRAC_ONE = 1 << FRAC_BITS         # 128
+FRAC_MASK = FRAC_ONE - 1          # 0x7f
+BF16_BIAS = 127
+LOG_ZERO = -(1 << 24)             # -inf sentinel, far below any reachable Q9.7
+CLAMP_LO = -15.0                  # paper: score differences constrained to [-15, 0]
+LOG2E_F32 = np.float32(1.4426950408889634)
+PWL_SEGMENTS = 8
+PWL_SEG_BITS = 3                  # log2(PWL_SEGMENTS)
+PWL_IN_BITS = FRAC_BITS - PWL_SEG_BITS   # 4 low bits index within a segment
+PWL_COEF_BITS = 14                # Q14 coefficients
+MAX_SHIFT = 24                    # beyond this the Q7 result underflows to 0
+
+
+def _round_half_away(x: float) -> int:
+    """floor(x + 0.5) — identical in python and rust (no banker's rounding)."""
+    return int(np.floor(x + 0.5))
+
+
+def pwl_tables() -> tuple[np.ndarray, np.ndarray]:
+    """Closed-form endpoint-interpolated PWL fit of 2^-x on [0,1), 8 segments.
+
+    Returns (C0, C1) int32 arrays of length 8 in Q14 such that for a Q7
+    fractional input f (0..127), with segment j = f >> 4 and u = f & 15:
+
+        2^{-f/128} * 2^14  ~=  C0[j] - C1[j] * u
+    """
+    c0 = np.zeros(PWL_SEGMENTS, dtype=np.int64)
+    c1 = np.zeros(PWL_SEGMENTS, dtype=np.int64)
+    for j in range(PWL_SEGMENTS):
+        y0 = 2.0 ** (-(j / 8.0))
+        y1 = 2.0 ** (-((j + 1) / 8.0))
+        c0[j] = _round_half_away(y0 * (1 << PWL_COEF_BITS))
+        c1[j] = _round_half_away((y0 - y1) * (1 << PWL_COEF_BITS) / 16.0)
+    return c0.astype(np.int32), c1.astype(np.int32)
+
+
+PWL_C0, PWL_C1 = pwl_tables()
+
+
+# --------------------------------------------------------------------------
+# Primitive ops. `xp` is the array module: np for eager tests, jnp inside
+# traced code. All integer work happens in int32.
+# --------------------------------------------------------------------------
+
+def pwl_pow2_neg_frac_q14(f, xp=jnp, tables=None):
+    """Q14 approximation of 2^{-f/128} for f in [0, 128) (int32).
+
+    ``tables`` lets Pallas kernels pass the (C0, C1) coefficient LUTs as
+    kernel inputs (array constants cannot be captured in a pallas trace).
+    """
+    if tables is not None:
+        c0, c1 = tables
+    else:
+        c0 = xp.asarray(PWL_C0, dtype=xp.int32)
+        c1 = xp.asarray(PWL_C1, dtype=xp.int32)
+    j = (f >> PWL_IN_BITS).astype(xp.int32)
+    u = (f & ((1 << PWL_IN_BITS) - 1)).astype(xp.int32)
+    return c0[j] - c1[j] * u
+
+
+def bf16_bits_to_log_q7(bits, xp=jnp):
+    """(sign, Q9.7 log2|v|) of a BFloat16 given its raw uint16 bits (Eq. 18).
+
+    Mitchell: log2(2^{E-b}(1+M)) ~= (E-b) + M, computed implicitly by
+    reinterpreting E.M as fixed point.  E == 0 (zero/subnormal) maps to the
+    LOG_ZERO sentinel.
+    """
+    b = bits.astype(xp.int32)
+    sign = (b >> 15) & 1
+    exp_mant = b & 0x7FFF                      # E.M as Q8.7, biased
+    logq = exp_mant - (BF16_BIAS << FRAC_BITS)  # subtract bias from integer part
+    is_zero = (b & 0x7F80) == 0                # E == 0
+    logq = xp.where(is_zero, xp.int32(LOG_ZERO), logq)
+    return sign.astype(xp.int32), logq.astype(xp.int32)
+
+
+def log_q7_to_bf16_bits(sign, logq, xp=jnp):
+    """Inverse of the above (Eq. 22): Q9.7 log -> BFloat16 bits.
+
+    I = floor(logq), F = frac(logq); bits = (s, I + bias, F).  Exponent
+    underflow saturates to +-0, overflow saturates to the max finite value.
+    """
+    i_part = logq >> FRAC_BITS                 # arithmetic shift (floor)
+    f_part = logq & FRAC_MASK
+    ebits = i_part + BF16_BIAS
+    underflow = (ebits <= 0) | (logq <= xp.int32(LOG_ZERO // 2))
+    overflow = ebits >= 255
+    bits = (sign << 15) | (ebits << FRAC_BITS) | f_part
+    max_finite = (sign << 15) | (254 << FRAC_BITS) | FRAC_MASK
+    bits = xp.where(overflow, max_finite, bits)
+    bits = xp.where(underflow, sign << 15, bits)
+    return bits.astype(xp.uint16) if xp is np else bits.astype(jnp.uint16)
+
+
+def quant_diff_q7(dz, xp=jnp):
+    """quant[(dz) * log2 e] for a (non-positive) f32 score difference.
+
+    Clamp to [-15, 0] first (paper Section IV-B), multiply by log2(e) in
+    f32, truncate (floor) to Q9.7.  NaN inputs (from -inf - -inf at warmup)
+    are treated as the clamp floor.
+    """
+    dz = dz.astype(xp.float32)
+    dz = xp.where(xp.isnan(dz), xp.float32(CLAMP_LO), dz)
+    dz = xp.clip(dz, CLAMP_LO, 0.0)
+    t = dz * LOG2E_F32
+    return xp.floor(t * FRAC_ONE).astype(xp.int32)
+
+
+def lns_add(sa, a, sb, b, xp=jnp, tables=None):
+    """Signed LNS addition (Eq. 14/17): (sa,A) (+) (sb,B) -> (s, L).
+
+    L = max(A,B) +- (PWL(2^-f) >> p) with Mitchell's log2(1 +- x) ~= +-x.
+    Sign: A > B -> sa, else sb (Eq. 14d).  LOG_ZERO short-circuits.
+    """
+    a = a.astype(xp.int32)
+    b = b.astype(xp.int32)
+    a_is_zero = a <= xp.int32(LOG_ZERO // 2)
+    b_is_zero = b <= xp.int32(LOG_ZERO // 2)
+
+    d = xp.abs(a - b)
+    p = d >> FRAC_BITS
+    f = d & FRAC_MASK
+    y_q14 = pwl_pow2_neg_frac_q14(f, xp=xp, tables=tables)
+    shift = xp.minimum(p + (PWL_COEF_BITS - FRAC_BITS), MAX_SHIFT).astype(xp.int32)
+    r_q7 = y_q14 >> shift
+
+    mx = xp.maximum(a, b)
+    same = (sa == sb)
+    l_add = mx + r_q7
+    l_sub = mx - r_q7
+    l = xp.where(same, l_add, l_sub)
+    s = xp.where(a > b, sa, sb).astype(xp.int32)
+
+    # sentinel handling
+    l = xp.where(a_is_zero, b, xp.where(b_is_zero, a, l))
+    s = xp.where(a_is_zero, sb, xp.where(b_is_zero, sa, s))
+    both = a_is_zero & b_is_zero
+    l = xp.where(both, xp.int32(LOG_ZERO), l)
+    s = xp.where(both, 0, s)
+    return s.astype(xp.int32), l.astype(xp.int32)
+
+
+def shift_log(logq, dq, xp=jnp):
+    """logq + dq with LOG_ZERO propagation (multiply by 2^{dq} in LNS)."""
+    out = logq + dq
+    return xp.where(logq <= xp.int32(LOG_ZERO // 2), xp.int32(LOG_ZERO), out).astype(xp.int32)
+
+
+def f32_to_bf16_bits(x, xp=jnp):
+    """Round-to-nearest-even f32 -> bf16 raw bits (uint16-valued int32)."""
+    xi = (
+        x.view(np.uint32).astype(np.int64)
+        if xp is np
+        else jnp.asarray(jnp.float32(x)).view(jnp.uint32).astype(jnp.int64)
+    )
+    rounded = (xi + 0x7FFF + ((xi >> 16) & 1)) >> 16
+    return rounded.astype(np.int32) if xp is np else rounded.astype(jnp.int32)
+
+
+def bf16_bits_to_f32(bits, xp=jnp):
+    """bf16 raw bits -> f32 value."""
+    if xp is np:
+        return (bits.astype(np.uint32) << 16).view(np.float32)
+    return (bits.astype(jnp.uint32) << 16).view(jnp.float32)

@@ -1,0 +1,287 @@
+"""Reference oracles for attention.
+
+Tiers:
+
+* :func:`exact_attention`   — textbook softmax attention in f32/f64 (the
+  ground truth every other implementation is measured against).
+* :func:`fa2_attention`     — FlashAttention-2 streaming recurrence (Alg. 2
+  of the paper) in f32; numerically equal to exact attention up to float
+  associativity.
+* :func:`hfa_attention_int` — the **bit-exact** integer emulation of the
+  H-FA hardware datapath (Q9.7 LNS accumulation, Mitchell, PWL), the same
+  arithmetic the Pallas kernel and the rust ``attention::hfa`` model use.
+* :func:`hfa_attention_emu` — an f64 *functional* emulation with one switch
+  per approximation source (quant / mitchell / pwl), used for the Table III
+  error-attribution study and the Fig. 5 Mitchell-input histogram.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import logmath as lm
+
+
+# --------------------------------------------------------------------------
+# Tier 0: exact attention
+# --------------------------------------------------------------------------
+
+def exact_attention(q: np.ndarray, k: np.ndarray, v: np.ndarray,
+                    scale: float | None = None, dtype=np.float64) -> np.ndarray:
+    """softmax(q k^T * scale) v.  q: (B, d), k/v: (N, d).  Returns (B, d)."""
+    q = q.astype(dtype)
+    k = k.astype(dtype)
+    v = v.astype(dtype)
+    if scale is None:
+        scale = 1.0 / np.sqrt(q.shape[-1])
+    s = (q @ k.T) * dtype(scale)
+    s = s - s.max(axis=-1, keepdims=True)
+    p = np.exp(s)
+    p = p / p.sum(axis=-1, keepdims=True)
+    return p @ v
+
+
+# --------------------------------------------------------------------------
+# Tier 1: FlashAttention-2 recurrence (Alg. 2), f32
+# --------------------------------------------------------------------------
+
+def fa2_attention(q: np.ndarray, k: np.ndarray, v: np.ndarray,
+                  scale: float | None = None) -> np.ndarray:
+    """Streaming FA-2 (delayed softmax division), one key per step, f32."""
+    q = q.astype(np.float32)
+    k = k.astype(np.float32)
+    v = v.astype(np.float32)
+    bq, d = q.shape
+    n = k.shape[0]
+    if scale is None:
+        scale = 1.0 / np.sqrt(d)
+    scale = np.float32(scale)
+
+    m = np.full(bq, -np.inf, dtype=np.float32)
+    ell = np.zeros(bq, dtype=np.float32)
+    o = np.zeros((bq, d), dtype=np.float32)
+    for i in range(n):
+        s = (q @ k[i]) * scale                       # (B,)
+        m_new = np.maximum(m, s)
+        alpha = np.exp(m - m_new)                     # rescale factor
+        alpha[np.isnan(alpha)] = 0.0                  # -inf - -inf warmup
+        beta = np.exp(s - m_new)
+        ell = ell * alpha + beta
+        o = o * alpha[:, None] + beta[:, None] * v[None, i]
+        m = m_new
+    return o / ell[:, None]
+
+
+# --------------------------------------------------------------------------
+# Tier 2: bit-exact H-FA integer emulation
+# --------------------------------------------------------------------------
+
+def _to_bf16_bits(x: np.ndarray) -> np.ndarray:
+    return lm.f32_to_bf16_bits(np.ascontiguousarray(x, dtype=np.float32), xp=np)
+
+
+def _finalize_log_triplet(s_o: np.ndarray, log_o: np.ndarray) -> np.ndarray:
+    """LogDiv (Eq. 15) + log->bf16 conversion (Eq. 22) on an LNS triplet."""
+    s_attn = s_o[:, 1:] ^ s_o[:, :1]
+    log_attn = log_o[:, 1:] - log_o[:, :1]
+    log_attn = np.where(log_o[:, 1:] <= lm.LOG_ZERO // 2,
+                        np.int32(lm.LOG_ZERO), log_attn).astype(np.int32)
+    bits = lm.log_q7_to_bf16_bits(s_attn, log_attn, xp=np)
+    return lm.bf16_bits_to_f32(bits, xp=np)
+
+
+def _hfa_partial_state(q, k, v, scale):
+    """Inner loop of Alg. 2 without the final division — one KV block."""
+    q = q.astype(np.float32)
+    k = k.astype(np.float32)
+    v = v.astype(np.float32)
+    bq, d = q.shape
+    n = k.shape[0]
+    if scale is None:
+        scale = 1.0 / np.sqrt(d)
+    scale = np.float32(scale)
+    ones = np.ones((n, 1), dtype=np.float32)
+    v_ext_bits = _to_bf16_bits(np.concatenate([ones, v], axis=1))   # (N, d+1)
+    sv, logv = lm.bf16_bits_to_log_q7(v_ext_bits, xp=np)
+    m = np.full(bq, -np.inf, dtype=np.float32)
+    s_o = np.zeros((bq, d + 1), dtype=np.int32)
+    log_o = np.full((bq, d + 1), lm.LOG_ZERO, dtype=np.int32)
+    for i in range(n):
+        s = (q @ k[i]) * scale                          # (B,) f32 scores
+        m_new = np.maximum(m, s)
+        dm_q = lm.quant_diff_q7(m - m_new, xp=np)       # (B,)
+        ds_q = lm.quant_diff_q7(s - m_new, xp=np)       # (B,)
+        a = lm.shift_log(log_o, dm_q[:, None], xp=np)   # (B, d+1)
+        b = lm.shift_log(logv[None, i, :], ds_q[:, None], xp=np)
+        s_o, log_o = lm.lns_add(s_o, a,
+                                np.broadcast_to(sv[i], (bq, d + 1)), b, xp=np)
+        m = m_new
+    return m, s_o, log_o
+
+
+def hfa_attention_int(q: np.ndarray, k: np.ndarray, v: np.ndarray,
+                      scale: float | None = None) -> np.ndarray:
+    """Bit-exact Q9.7 LNS emulation of the H-FA FAU (Eqs. 14, 15, 17-19).
+
+    Score path: f32 (q k^T * scale), running max in f32.
+    Accumulation path: integer LNS on d+1 lanes (lane 0 is the ell
+    sum-of-exponentials with V-element 1).  Returns f32 (bf16-valued).
+    """
+    _, s_o, log_o = _hfa_partial_state(q, k, v, scale)
+    return _finalize_log_triplet(s_o, log_o)
+
+
+def hfa_merge_int(state_a, state_b):
+    """ACC-block merge (Eq. 16) of two partial (m, s, log) triplets, LNS."""
+    m_a, s_a, log_a = state_a
+    m_b, s_b, log_b = state_b
+    m_n = np.maximum(m_a, m_b)
+    da = lm.quant_diff_q7(m_a - m_n, xp=np)
+    db = lm.quant_diff_q7(m_b - m_n, xp=np)
+    a = lm.shift_log(log_a, da[:, None], xp=np)
+    b = lm.shift_log(log_b, db[:, None], xp=np)
+    s_n, log_n = lm.lns_add(s_a, a, s_b, b, xp=np)
+    return m_n, s_n, log_n
+
+
+def hfa_attention_int_blocked(q, k, v, num_blocks: int,
+                              scale: float | None = None) -> np.ndarray:
+    """2D parallel H-FA (Fig. 2): split KV into blocks, merge with Eq. 16."""
+    n = k.shape[0]
+    assert n % num_blocks == 0
+    step = n // num_blocks
+    states = [
+        _hfa_partial_state(q, k[b * step:(b + 1) * step],
+                           v[b * step:(b + 1) * step], scale)
+        for b in range(num_blocks)
+    ]
+    acc = states[0]
+    for st in states[1:]:
+        acc = hfa_merge_int(acc, st)
+    return _finalize_log_triplet(acc[1], acc[2])
+
+
+# --------------------------------------------------------------------------
+# Tier 3: functional f64 emulation with per-approximation switches
+# --------------------------------------------------------------------------
+
+@dataclass
+class EmuConfig:
+    """Ablation switches for the three H-FA error sources (Table III)."""
+    quant: bool = True      # (a) Q9.7 fixed-point quantization + [-15,0] clamp
+    mitchell: bool = True   # (b) log2(1 +- x) ~= +-x  (Eqs. 17, 18, 22)
+    pwl: bool = True        # (c) 8-segment PWL for 2^-f  (Eq. 19)
+    collect_mitchell: list | None = field(default=None)
+
+
+def _q(x: np.ndarray, cfg: EmuConfig) -> np.ndarray:
+    """Score-difference quantization (natural-log units -> log2 units)."""
+    if cfg.quant:
+        x = np.where(np.isnan(x), lm.CLAMP_LO, x)
+        x = np.clip(x, lm.CLAMP_LO, 0.0)
+        t = x.astype(np.float32) * lm.LOG2E_F32
+        return np.floor(t.astype(np.float64) * lm.FRAC_ONE) / lm.FRAC_ONE
+    x = np.where(np.isnan(x), -np.inf, x)
+    return x.astype(np.float64) * np.float64(lm.LOG2E_F32)
+
+
+def _log2_value(v_bits: np.ndarray, cfg: EmuConfig):
+    """float -> log domain for the value vector (Eq. 18), f64 functional."""
+    sign = ((v_bits >> 15) & 1).astype(np.int32)
+    e = (v_bits >> 7) & 0xFF
+    mant = (v_bits & 0x7F).astype(np.float64) / lm.FRAC_ONE
+    is_zero = e == 0
+    if cfg.mitchell:
+        if cfg.collect_mitchell is not None:
+            cfg.collect_mitchell.append(mant[~is_zero].ravel().copy())
+        logv = (e - lm.BF16_BIAS).astype(np.float64) + mant
+    else:
+        logv = (e - lm.BF16_BIAS).astype(np.float64) + np.log2(1.0 + mant)
+    logv = np.where(is_zero, -np.inf, logv)
+    return sign, logv
+
+
+def _pow2_neg(dist: np.ndarray, cfg: EmuConfig) -> np.ndarray:
+    """2^-dist for dist >= 0, optionally via the 8-segment PWL (Eq. 19)."""
+    dist = np.where(np.isfinite(dist), dist, 1e9)
+    if not cfg.pwl:
+        return np.power(2.0, -np.minimum(dist, 1000.0))
+    p = np.floor(dist)
+    f = dist - p
+    j = np.minimum((f * 8).astype(np.int64), 7)
+    y0 = np.power(2.0, -(j / 8.0))
+    y1 = np.power(2.0, -((j + 1) / 8.0))
+    y = y0 + (y1 - y0) * (f * 8.0 - j)
+    return y * np.power(2.0, -np.minimum(p, 1000.0))
+
+
+def _lns_add_f(sa, a, sb, b, cfg: EmuConfig):
+    """Functional signed LNS add with switchable Mitchell/PWL."""
+    d = np.abs(a - b)
+    d = np.where(np.isnan(d), np.inf, d)
+    x = _pow2_neg(d, cfg)
+    mx = np.maximum(a, b)
+    same = sa == sb
+    if cfg.mitchell:
+        if cfg.collect_mitchell is not None:
+            finite = np.isfinite(d)
+            cfg.collect_mitchell.append(x[finite].ravel().copy())
+        delta = np.where(same, x, -x)
+    else:
+        delta = np.log2(np.maximum(np.where(same, 1.0 + x, 1.0 - x), 1e-300))
+    l = mx + delta
+    s = np.where(a > b, sa, sb)
+    a_zero = np.isneginf(a)
+    b_zero = np.isneginf(b)
+    l = np.where(a_zero, b, np.where(b_zero, a, l))
+    s = np.where(a_zero, sb, np.where(b_zero, sa, s))
+    l = np.where(a_zero & b_zero, -np.inf, l)
+    return s.astype(np.int32), l
+
+
+def hfa_attention_emu(q, k, v, cfg: EmuConfig | None = None,
+                      scale: float | None = None) -> np.ndarray:
+    """f64 functional H-FA with ablation switches.  Returns (B, d) f64."""
+    if cfg is None:
+        cfg = EmuConfig()
+    q = q.astype(np.float32)
+    k = k.astype(np.float32)
+    v = v.astype(np.float32)
+    bq, d = q.shape
+    n = k.shape[0]
+    if scale is None:
+        scale = 1.0 / np.sqrt(d)
+    scale = np.float32(scale)
+
+    ones = np.ones((n, 1), dtype=np.float32)
+    v_ext_bits = _to_bf16_bits(np.concatenate([ones, v], axis=1))
+    sv, logv = _log2_value(v_ext_bits, cfg)
+
+    m = np.full(bq, -np.inf, dtype=np.float32)
+    s_o = np.zeros((bq, d + 1), dtype=np.int32)
+    log_o = np.full((bq, d + 1), -np.inf, dtype=np.float64)
+
+    for i in range(n):
+        s = (q @ k[i]) * scale
+        m_new = np.maximum(m, s)
+        dm = _q((m - m_new).astype(np.float64), cfg)
+        ds = _q((s - m_new).astype(np.float64), cfg)
+        a = log_o + dm[:, None]
+        b = logv[None, i, :] + ds[:, None]
+        s_o, log_o = _lns_add_f(s_o, a,
+                                np.broadcast_to(sv[i], (bq, d + 1)), b, cfg)
+        m = m_new
+
+    s_attn = s_o[:, 1:] ^ s_o[:, :1]
+    log_attn = log_o[:, 1:] - log_o[:, :1]
+    if cfg.mitchell:
+        # Eq. 22: 2^(I+F) ~= 2^I (1+F) — the hardware back-conversion
+        i_part = np.floor(log_attn)
+        f_part = log_attn - i_part
+        mag = np.power(2.0, i_part) * (1.0 + f_part)
+    else:
+        mag = np.power(2.0, log_attn)
+    mag = np.where(np.isneginf(log_attn) | np.isnan(log_attn), 0.0, mag)
+    return np.where(s_attn == 1, -mag, mag)

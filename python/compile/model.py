@@ -1,0 +1,169 @@
+"""L2: tiny GPT-style transformer whose attention layer calls the L1 kernels.
+
+The model is deliberately small (the paper's accuracy study uses pretrained
+LLMs; here the LM is trained from scratch at artifact-build time — see
+DESIGN.md §Substitutions) but structurally standard: token+position
+embeddings, pre-LN blocks with multi-head causal self-attention and a GELU
+MLP, weight-tied LM head.
+
+``attn_impl`` selects the attention kernel:
+  * ``exact`` — f32 softmax attention (training / oracle path),
+  * ``fa2``   — the all-float FlashAttention-2 Pallas kernel (BF16),
+  * ``hfa``   — the hybrid float/log-domain H-FA Pallas kernel (BF16).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import fa2 as fa2_kernel
+from .kernels import hfa as hfa_kernel
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int = 64
+    d_model: int = 64
+    n_head: int = 2
+    n_layer: int = 2
+    seq_len: int = 128
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_head == 0
+        return self.d_model // self.n_head
+
+    def to_file(self, path: str) -> None:
+        with open(path, "w") as f:
+            for k, v in asdict(self).items():
+                f.write(f"{k}={v}\n")
+
+
+# The three model sizes of the Table-II study (DESIGN.md §6).
+SIZES = {
+    "s0": ModelConfig("s0", d_model=32, n_head=1, n_layer=1),
+    "s1": ModelConfig("s1", d_model=64, n_head=2, n_layer=2),
+    "s2": ModelConfig("s2", d_model=128, n_head=2, n_layer=2),
+}
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 4 + 8 * cfg.n_layer)
+    d, h = cfg.d_model, 4 * cfg.d_model
+    std = 0.02
+    p = {
+        "tok_emb": jax.random.normal(ks[0], (cfg.vocab, d)) * std,
+        "pos_emb": jax.random.normal(ks[1], (cfg.seq_len, d)) * std,
+        "lnf_g": jnp.ones(d), "lnf_b": jnp.zeros(d),
+    }
+    for l in range(cfg.n_layer):
+        b = 4 + 8 * l
+        p[f"l{l}.ln1_g"] = jnp.ones(d)
+        p[f"l{l}.ln1_b"] = jnp.zeros(d)
+        p[f"l{l}.wq"] = jax.random.normal(ks[b + 0], (d, d)) * std
+        p[f"l{l}.wk"] = jax.random.normal(ks[b + 1], (d, d)) * std
+        p[f"l{l}.wv"] = jax.random.normal(ks[b + 2], (d, d)) * std
+        p[f"l{l}.wo"] = jax.random.normal(ks[b + 3], (d, d)) * std / np.sqrt(2 * cfg.n_layer)
+        p[f"l{l}.ln2_g"] = jnp.ones(d)
+        p[f"l{l}.ln2_b"] = jnp.zeros(d)
+        p[f"l{l}.w1"] = jax.random.normal(ks[b + 4], (d, h)) * std
+        p[f"l{l}.b1"] = jnp.zeros(h)
+        p[f"l{l}.w2"] = jax.random.normal(ks[b + 5], (h, d)) * std / np.sqrt(2 * cfg.n_layer)
+        p[f"l{l}.b2"] = jnp.zeros(d)
+    return {k: v.astype(jnp.float32) for k, v in p.items()}
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention(x, p, l, cfg: ModelConfig, attn_impl: str):
+    """Multi-head causal self-attention.  x: (T, D) -> (T, D)."""
+    t, d = x.shape
+    h, dh = cfg.n_head, cfg.d_head
+    q = (x @ p[f"l{l}.wq"]).reshape(t, h, dh).transpose(1, 0, 2)  # (H,T,dh)
+    k = (x @ p[f"l{l}.wk"]).reshape(t, h, dh).transpose(1, 0, 2)
+    v = (x @ p[f"l{l}.wv"]).reshape(t, h, dh).transpose(1, 0, 2)
+    causal = jnp.tril(jnp.ones((t, t), dtype=jnp.bool_))
+
+    if attn_impl == "exact":
+        s = jnp.einsum("hqd,hkd->hqk", q, k) / np.sqrt(dh)
+        s = jnp.where(causal[None], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("hqk,hkd->hqd", w, v)
+    elif attn_impl == "fa2":
+        o = fa2_kernel.fa2_attention_mha(q, k, v, causal).astype(jnp.float32)
+    elif attn_impl == "hfa":
+        o = hfa_kernel.hfa_attention_mha(q, k, v, causal).astype(jnp.float32)
+    else:
+        raise ValueError(f"unknown attn_impl {attn_impl!r}")
+    return o.transpose(1, 0, 2).reshape(t, d) @ p[f"l{l}.wo"]
+
+
+def forward_single(params, cfg: ModelConfig, tokens, attn_impl="exact"):
+    """tokens: (T,) int32 -> logits (T, V) f32."""
+    t = tokens.shape[0]
+    x = params["tok_emb"][tokens] + params["pos_emb"][:t]
+    for l in range(cfg.n_layer):
+        a = _attention(_layer_norm(x, params[f"l{l}.ln1_g"], params[f"l{l}.ln1_b"]),
+                       params, l, cfg, attn_impl)
+        x = x + a
+        hdn = _layer_norm(x, params[f"l{l}.ln2_g"], params[f"l{l}.ln2_b"])
+        hdn = jax.nn.gelu(hdn @ params[f"l{l}.w1"] + params[f"l{l}.b1"])
+        x = x + hdn @ params[f"l{l}.w2"] + params[f"l{l}.b2"]
+    x = _layer_norm(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["tok_emb"].T
+
+
+def forward(params, cfg: ModelConfig, tokens, attn_impl="exact"):
+    """tokens: (B, T) int32 -> logits (B, T, V) f32."""
+    return jax.vmap(lambda tk: forward_single(params, cfg, tk, attn_impl))(tokens)
+
+
+# --------------------------------------------------------------------------
+# Weight (de)serialization — flat f32 .bin + line-based manifest, read by
+# rust/src/model/weights.rs
+# --------------------------------------------------------------------------
+
+def save_params(params: dict, cfg: ModelConfig, out_dir: str) -> None:
+    import os
+    os.makedirs(out_dir, exist_ok=True)
+    names = sorted(params.keys())
+    offset = 0
+    chunks = []
+    with open(f"{out_dir}/manifest.txt", "w") as mf:
+        mf.write("# name|shape(comma-sep)|offset(floats)|count\n")
+        for n in names:
+            a = np.asarray(params[n], dtype="<f4")
+            shape = ",".join(map(str, a.shape))
+            mf.write(f"{n}|{shape}|{offset}|{a.size}\n")
+            chunks.append(a.ravel())
+            offset += a.size
+    np.concatenate(chunks).tofile(f"{out_dir}/weights.bin")
+    cfg.to_file(f"{out_dir}/config.txt")
+
+
+def load_params(out_dir: str) -> tuple[dict, ModelConfig]:
+    cfg_kv = {}
+    with open(f"{out_dir}/config.txt") as f:
+        for line in f:
+            k, v = line.strip().split("=")
+            cfg_kv[k] = v if k == "name" else int(v)
+    cfg = ModelConfig(**cfg_kv)
+    flat = np.fromfile(f"{out_dir}/weights.bin", dtype="<f4")
+    params = {}
+    with open(f"{out_dir}/manifest.txt") as f:
+        for line in f:
+            if line.startswith("#"):
+                continue
+            n, shape, off, cnt = line.strip().split("|")
+            shape = tuple(int(s) for s in shape.split(",") if s)
+            params[n] = jnp.asarray(flat[int(off):int(off) + int(cnt)].reshape(shape))
+    return params, cfg

@@ -1,0 +1,168 @@
+"""Synthetic benchmark task families for the LLM-accuracy study.
+
+Substitute for the paper's MMLU / GPQA / SWAG / GSM8K / XCOPA evaluation
+(Section VI-A): the sandbox has no HuggingFace weights or network, so we
+train a tiny LM from scratch on a mixture of five procedurally generated
+task families and evaluate it exactly the way lm-evaluation-harness scores
+multiple-choice tasks — the correct continuation must out-rank three
+distractor options in the model's logits.
+
+Families (each with 4 difficulty variants -> the 20-task "Table I" grid):
+
+* ``copy_last``  — recall the most recent symbol of a list.
+* ``induction``  — induction-head pattern: ``... a b ... a -> b``.
+* ``assoc``      — key/value recall from an association list.
+* ``maxsym``     — report the largest symbol of a list (symbols ordered).
+* ``modsum``     — sum a list of digits mod 10 (tiny GSM8K stand-in).
+
+Token map (vocab = 64): 0 PAD, 1 SEP, 2 Q, 3 A, 4..53 symbols, 54..63 digits.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+VOCAB = 64
+PAD, SEP, QTOK, ATOK = 0, 1, 2, 3
+SYM_BASE, NUM_SYMS = 4, 50
+DIG_BASE, NUM_DIGS = 54, 10
+
+FAMILIES = ("copy_last", "induction", "assoc", "maxsym", "modsum")
+# 4 difficulty variants per family (the per-variant int is the "length" knob)
+VARIANTS = {
+    "copy_last": (4, 8, 12, 16),
+    "induction": (6, 10, 14, 18),
+    "assoc": (2, 3, 4, 5),
+    "maxsym": (4, 6, 8, 10),
+    "modsum": (2, 3, 4, 5),
+}
+
+
+@dataclass
+class TaskInstance:
+    prompt: list[int]      # token ids, ends right before the answer position
+    options: list[int]     # 4 candidate answer tokens (options[answer] correct)
+    answer: int            # index into options
+
+
+def _symbols(rng: np.random.Generator, n: int, replace=True) -> np.ndarray:
+    return SYM_BASE + rng.choice(NUM_SYMS, size=n, replace=replace)
+
+
+def _distract(rng: np.random.Generator, correct: int, pool_base: int,
+              pool_n: int) -> TaskInstance | tuple[list[int], int]:
+    """Build a 4-way option set around ``correct`` from the given pool."""
+    opts = {correct}
+    while len(opts) < 4:
+        opts.add(int(pool_base + rng.integers(pool_n)))
+    opts = list(opts)
+    rng.shuffle(opts)
+    return opts, opts.index(correct)
+
+
+def gen_copy_last(rng, k: int) -> TaskInstance:
+    xs = _symbols(rng, k)
+    correct = int(xs[-1])
+    opts, ans = _distract(rng, correct, SYM_BASE, NUM_SYMS)
+    return TaskInstance([QTOK, *map(int, xs), ATOK], opts, ans)
+
+
+def gen_induction(rng, g: int) -> TaskInstance:
+    """``.. a b ..filler.. a`` -> b.  g = total pattern length."""
+    a, b = map(int, _symbols(rng, 2, replace=False))
+    filler = [t for t in map(int, _symbols(rng, g)) if t not in (a, b)]
+    pos = int(rng.integers(0, max(len(filler) - 1, 1)))
+    seq = filler[:pos] + [a, b] + filler[pos:] + [a]
+    opts, ans = _distract(rng, b, SYM_BASE, NUM_SYMS)
+    return TaskInstance([QTOK, *seq, ATOK], opts, ans)
+
+
+def gen_assoc(rng, npairs: int) -> TaskInstance:
+    keys = _symbols(rng, npairs, replace=False)
+    vals = _symbols(rng, npairs)
+    i = int(rng.integers(npairs))
+    prompt = [QTOK]
+    for kk, vv in zip(keys, vals):
+        prompt += [int(kk), int(vv)]
+    prompt += [QTOK, int(keys[i]), ATOK]
+    opts, ans = _distract(rng, int(vals[i]), SYM_BASE, NUM_SYMS)
+    return TaskInstance(prompt, opts, ans)
+
+
+def gen_maxsym(rng, k: int) -> TaskInstance:
+    xs = _symbols(rng, k, replace=False)
+    correct = int(xs.max())
+    opts, ans = _distract(rng, correct, SYM_BASE, NUM_SYMS)
+    return TaskInstance([QTOK, *map(int, xs), ATOK], opts, ans)
+
+
+def gen_modsum(rng, k: int) -> TaskInstance:
+    ds = rng.integers(0, 10, size=k)
+    correct = int(DIG_BASE + ds.sum() % 10)
+    prompt = [QTOK, *(int(DIG_BASE + d) for d in ds), ATOK]
+    opts, ans = _distract(rng, correct, DIG_BASE, NUM_DIGS)
+    return TaskInstance(prompt, opts, ans)
+
+
+GENERATORS = {
+    "copy_last": gen_copy_last,
+    "induction": gen_induction,
+    "assoc": gen_assoc,
+    "maxsym": gen_maxsym,
+    "modsum": gen_modsum,
+}
+
+
+def gen_task(rng, family: str, variant: int) -> TaskInstance:
+    return GENERATORS[family](rng, variant)
+
+
+def all_task_ids() -> list[tuple[str, int]]:
+    """The 20 (family, variant) pairs of the Table-I grid."""
+    return [(fam, var) for fam in FAMILIES for var in VARIANTS[fam]]
+
+
+# --------------------------------------------------------------------------
+# Training corpus: packed documents of prompt+answer from all families
+# --------------------------------------------------------------------------
+
+def make_corpus(rng, num_seqs: int, seq_len: int) -> np.ndarray:
+    """(num_seqs, seq_len) int32 of SEP-packed task documents."""
+    out = np.full((num_seqs, seq_len), PAD, dtype=np.int32)
+    ids = all_task_ids()
+    for r in range(num_seqs):
+        buf: list[int] = []
+        while len(buf) < seq_len:
+            fam, var = ids[rng.integers(len(ids))]
+            t = gen_task(rng, fam, var)
+            buf += t.prompt + [t.options[t.answer], SEP]
+        out[r] = buf[:seq_len]
+    return out
+
+
+# --------------------------------------------------------------------------
+# Eval-file serialization (read by rust/src/evalsuite)
+# --------------------------------------------------------------------------
+
+def write_eval_file(path: str, tasks: list[TaskInstance]) -> None:
+    with open(path, "w") as f:
+        f.write("# prompt tokens|4 option tokens|answer index\n")
+        for t in tasks:
+            f.write(" ".join(map(str, t.prompt)) + "|"
+                    + " ".join(map(str, t.options)) + f"|{t.answer}\n")
+
+
+def gen_eval_files(out_dir: str, num_per_task: int = 100,
+                   seed: int = 12345) -> list[str]:
+    import os
+    os.makedirs(out_dir, exist_ok=True)
+    paths = []
+    for fam, var in all_task_ids():
+        rng = np.random.default_rng(seed + hash((fam, var)) % 100000)
+        tasks = [gen_task(rng, fam, var) for _ in range(num_per_task)]
+        p = f"{out_dir}/{fam}_{var}.txt"
+        write_eval_file(p, tasks)
+        paths.append(p)
+    return paths

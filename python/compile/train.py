@@ -1,0 +1,91 @@
+"""Build-time training of the tiny LMs on the synthetic task corpus.
+
+Runs once under ``make artifacts`` (skipped when weights already exist).
+Training uses the exact-softmax attention path in f32 — the paper likewise
+evaluates H-FA on models trained without it ("without applying any
+fine-tuning or re-training", Section VI-A).  A hand-rolled Adam avoids an
+optax dependency.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import tasks
+from .model import ModelConfig, forward, init_params, save_params
+
+TRAIN_STEPS = {"s0": 1000, "s1": 1400, "s2": 1400}
+BATCH = 32
+LR = 3e-3
+WARMUP = 30
+
+
+def loss_fn(params, cfg, batch):
+    """Next-token CE, up-weighted at answer positions.
+
+    Most tokens in a task document are unpredictable random symbols whose
+    loss is irreducible; the learnable signal lives at the position right
+    after the ``A`` marker.  Weighting answer positions 20x concentrates
+    the gradient there (the 1x elsewhere keeps general LM behaviour).
+    """
+    inputs, targets = batch[:, :-1], batch[:, 1:]
+    logits = forward(params, cfg, inputs, attn_impl="exact")
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = (targets != tasks.PAD).astype(jnp.float32)
+    answer_pos = (inputs == tasks.ATOK).astype(jnp.float32)
+    w = mask * (1.0 + 19.0 * answer_pos)
+    return (nll * w).sum() / w.sum()
+
+
+def adam_update(params, grads, mstate, vstate, step, lr):
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    out_p, out_m, out_v = {}, {}, {}
+    for k in params:
+        m = b1 * mstate[k] + (1 - b1) * grads[k]
+        v = b2 * vstate[k] + (1 - b2) * grads[k] ** 2
+        mhat = m / (1 - b1 ** step)
+        vhat = v / (1 - b2 ** step)
+        out_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        out_m[k], out_v[k] = m, v
+    return out_p, out_m, out_v
+
+
+def train_model(cfg: ModelConfig, seed: int = 0, verbose: bool = True) -> dict:
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    params = init_params(cfg, key)
+    mstate = {k: jnp.zeros_like(v) for k, v in params.items()}
+    vstate = {k: jnp.zeros_like(v) for k, v in params.items()}
+    steps = TRAIN_STEPS.get(cfg.name, 800)
+
+    corpus = tasks.make_corpus(rng, num_seqs=steps * BATCH // 4,
+                               seq_len=cfg.seq_len + 1)
+
+    @jax.jit
+    def step_fn(params, mstate, vstate, batch, step, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(params, cfg, batch)
+        params, mstate, vstate = adam_update(params, grads, mstate, vstate, step, lr)
+        return params, mstate, vstate, loss
+
+    t0 = time.time()
+    for step in range(1, steps + 1):
+        idx = rng.integers(0, corpus.shape[0], size=BATCH)
+        batch = jnp.asarray(corpus[idx])
+        lr = LR * min(1.0, step / WARMUP) * (0.5 * (1 + np.cos(np.pi * step / steps)))
+        params, mstate, vstate, loss = step_fn(
+            params, mstate, vstate, batch, jnp.float32(step), jnp.float32(lr))
+        if verbose and (step % 100 == 0 or step == 1):
+            print(f"[train {cfg.name}] step {step:4d}/{steps} "
+                  f"loss {float(loss):.4f} ({time.time()-t0:.1f}s)")
+    return params
+
+
+def train_and_save(cfg: ModelConfig, out_dir: str, seed: int = 0) -> dict:
+    params = train_model(cfg, seed=seed)
+    save_params(params, cfg, out_dir)
+    return params

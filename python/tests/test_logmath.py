@@ -1,0 +1,106 @@
+"""Unit + property tests for the bit-exact LNS primitives (hypothesis
+sweeps per the session guide: shapes/dtypes + invariants)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import logmath as lm
+
+
+def test_pwl_tables_match_baked_constants():
+    c0, c1 = lm.pwl_tables()
+    assert c0.tolist() == [16384, 15024, 13777, 12634, 11585, 10624, 9742, 8933]
+    assert c1.tolist() == [85, 78, 71, 66, 60, 55, 51, 46]
+
+
+@given(st.integers(0, 127))
+def test_pwl_approximates_pow2(f):
+    y = int(lm.pwl_pow2_neg_frac_q14(np.int32(f), xp=np))
+    exact = 2.0 ** (-f / 128.0) * (1 << 14)
+    assert abs(y - exact) < 30  # < 1.5e-3 relative in Q14
+
+
+@given(st.integers(0, 0xFFFF))
+@settings(max_examples=300)
+def test_log_conversion_roundtrip_error_bounded(bits):
+    s, l = lm.bf16_bits_to_log_q7(np.int32(bits), xp=np)
+    val = lm.bf16_bits_to_f32(np.int32(bits), xp=np)
+    if not np.isfinite(val) or val == 0 or (int(bits) & 0x7F80) == 0:
+        return
+    # Mitchell conversion error <= 0.086 in log2
+    err = abs(float(l) / 128.0 - np.log2(abs(float(val))))
+    assert err <= 0.09, (bits, err)
+    assert int(s) == (bits >> 15)
+
+
+@given(st.floats(-40.0, 5.0, allow_nan=False))
+def test_quant_clamps_and_is_monotone_grid(x):
+    q = int(lm.quant_diff_q7(np.float32(x), xp=np))
+    assert -2772 <= q <= 0  # floor(-15 * log2e * 128) = -2771.x
+    # floor property: q <= x*log2e*128 < q+1 within clamp range
+    xc = min(max(x, -15.0), 0.0)
+    t = np.float32(xc) * lm.LOG2E_F32 * 128
+    assert q <= t + 1e-3
+
+
+@given(
+    st.integers(-5000, 5000), st.integers(-5000, 5000),
+    st.integers(0, 1), st.integers(0, 1),
+)
+@settings(max_examples=500)
+def test_lns_add_commutes_for_same_sign(a, b, sa, sb):
+    s1, l1 = lm.lns_add(np.int32(sa), np.int32(a), np.int32(sb), np.int32(b), xp=np)
+    s2, l2 = lm.lns_add(np.int32(sb), np.int32(b), np.int32(sa), np.int32(a), xp=np)
+    assert int(l1) == int(l2)
+    if a != b:  # sign ties break toward the second operand
+        assert int(s1) == int(s2)
+
+
+@given(st.integers(-5000, 5000), st.integers(0, 1))
+def test_lns_add_zero_identity(a, sa):
+    s, l = lm.lns_add(np.int32(sa), np.int32(a), np.int32(0), np.int32(lm.LOG_ZERO), xp=np)
+    assert (int(s), int(l)) == (sa, a)
+    s, l = lm.lns_add(np.int32(0), np.int32(lm.LOG_ZERO), np.int32(sa), np.int32(a), xp=np)
+    assert (int(s), int(l)) == (sa, a)
+
+
+@given(st.integers(-3000, 3000), st.integers(-3000, 3000))
+@settings(max_examples=300)
+def test_lns_add_same_sign_upper_bounds(a, b):
+    # positive + positive: max(A,B) <= result <= max(A,B) + 1.0 (Q7: +128)
+    _, l = lm.lns_add(np.int32(0), np.int32(a), np.int32(0), np.int32(b), xp=np)
+    assert max(a, b) <= int(l) <= max(a, b) + 128
+
+
+@given(st.floats(1e-30, 1e30, allow_nan=False, allow_infinity=False))
+@settings(max_examples=300)
+def test_back_conversion_accuracy(v):
+    q7 = int(np.floor(np.log2(v) * 128))
+    if not -(126 << 7) <= q7 <= (127 << 7):
+        return
+    bits = lm.log_q7_to_bf16_bits(np.int32(0), np.int32(q7), xp=np)
+    out = float(lm.bf16_bits_to_f32(bits.astype(np.int32), xp=np))
+    # Eq. 22 error: within a factor of 2^(0.086 + 1/128)
+    ratio = out / v
+    assert 0.9 < ratio < 1.1 or abs(np.log2(ratio)) < 0.1
+
+
+def test_sentinel_roundtrip():
+    bits = lm.log_q7_to_bf16_bits(np.int32(1), np.int32(lm.LOG_ZERO), xp=np)
+    assert int(bits) == 0x8000  # signed zero
+
+
+def test_f32_bf16_rne():
+    cases = np.array([1.0, 1.0 + 1 / 256, 1.0 + 3 / 512, -2.5, 0.0], np.float32)
+    bits = lm.f32_to_bf16_bits(cases, xp=np)
+    back = lm.bf16_bits_to_f32(bits, xp=np)
+    assert back[0] == 1.0
+    assert back[1] == 1.0          # tie to even
+    assert back[2] == 1.0 + 1 / 128  # round up
+    assert back[3] == -2.5
+    assert back[4] == 0.0
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,108 @@
+"""L2 model tests: shapes, attention-impl consistency, ablations, tasks."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model, tasks
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = model.ModelConfig("tiny", vocab=64, d_model=32, n_head=2, n_layer=1, seq_len=64)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_forward_shapes(tiny):
+    cfg, params = tiny
+    toks = jnp.zeros((3, cfg.seq_len), jnp.int32)
+    logits = model.forward(params, cfg, toks, "exact")
+    assert logits.shape == (3, cfg.seq_len, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_fa2_model_close_to_exact(tiny):
+    cfg, params = tiny
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(4, 60, size=(2, cfg.seq_len)), jnp.int32)
+    le = model.forward(params, cfg, toks, "exact")
+    lf = model.forward(params, cfg, toks, "fa2")
+    # bf16 attention inside an f32 model: logits stay close
+    assert float(jnp.max(jnp.abs(le - lf))) < 0.15
+
+
+def test_hfa_model_runs_and_deviates_boundedly(tiny):
+    cfg, params = tiny
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(4, 60, size=(1, cfg.seq_len)), jnp.int32)
+    le = model.forward(params, cfg, toks, "exact")
+    lh = model.forward(params, cfg, toks, "hfa")
+    diff = float(jnp.max(jnp.abs(le - lh)))
+    assert 0.0 < diff < 5.0, f"H-FA logit deviation {diff}"
+
+
+def test_save_load_roundtrip(tmp_path, tiny):
+    cfg, params = tiny
+    model.save_params(params, cfg, str(tmp_path))
+    loaded, cfg2 = model.load_params(str(tmp_path))
+    assert cfg2 == cfg
+    for k in params:
+        assert np.array_equal(np.asarray(params[k]), np.asarray(loaded[k])), k
+
+
+def test_emu_config_ablation_ordering():
+    # attention-level sanity: Mitchell is the dominant error source
+    rng = np.random.default_rng(2)
+    q = rng.standard_normal((4, 16)).astype(np.float32)
+    k = rng.standard_normal((64, 16)).astype(np.float32)
+    v = rng.standard_normal((64, 16)).astype(np.float32)
+    ex = ref.exact_attention(q, k, v)
+
+    def err(cfg):
+        return float(np.sqrt(((ref.hfa_attention_emu(q, k, v, cfg) - ex) ** 2).mean()))
+
+    e_all = err(ref.EmuConfig())
+    e_nom = err(ref.EmuConfig(mitchell=False))
+    e_noq = err(ref.EmuConfig(quant=False))
+    e_nop = err(ref.EmuConfig(pwl=False))
+    assert e_nom < 0.2 * e_all
+    assert abs(e_noq - e_all) < 0.5 * e_all
+    assert abs(e_nop - e_all) < 0.5 * e_all
+
+
+def test_task_generators_produce_valid_instances():
+    rng = np.random.default_rng(0)
+    for fam, var in tasks.all_task_ids():
+        for _ in range(20):
+            t = tasks.gen_task(rng, fam, var)
+            assert len(t.options) == 4
+            assert len(set(t.options)) == 4
+            assert 0 <= t.answer < 4
+            assert all(0 <= tok < tasks.VOCAB for tok in t.prompt)
+            assert t.prompt[-1] == tasks.ATOK
+
+
+def test_corpus_shape_and_vocab():
+    rng = np.random.default_rng(1)
+    c = tasks.make_corpus(rng, 8, 65)
+    assert c.shape == (8, 65)
+    assert c.min() >= 0 and c.max() < tasks.VOCAB
+
+
+def test_eval_file_roundtrip(tmp_path):
+    rng = np.random.default_rng(2)
+    insts = [tasks.gen_task(rng, "assoc", 2) for _ in range(5)]
+    p = str(tmp_path / "assoc_2.txt")
+    tasks.write_eval_file(p, insts)
+    lines = [l for l in open(p) if not l.startswith("#")]
+    assert len(lines) == 5
+    pr, op, ans = lines[0].strip().split("|")
+    assert [int(x) for x in pr.split()] == insts[0].prompt
+    assert int(ans) == insts[0].answer
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

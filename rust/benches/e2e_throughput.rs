@@ -1,0 +1,129 @@
+//! End-to-end serving throughput/latency through the coordinator:
+//! simulated-accelerator backends (H-FA vs FA-2) and, when artifacts are
+//! present, the PJRT-compiled H-FA kernel backend.  Also reports the raw
+//! accelerator compute-batch wall time (coordinator overhead = difference).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hfa::benchlib::{bench, Table};
+use hfa::config::{AcceleratorConfig, CoordinatorConfig};
+use hfa::coordinator::{KvStore, PjrtBackend, Server, SimBackend};
+use hfa::hw::{Accelerator, Arith};
+use hfa::proptest::Rng;
+use hfa::runtime::AttnKernelSpec;
+use hfa::Mat;
+
+const D: usize = 64;
+const N: usize = 1024;
+
+fn drive(server: &Server, total: usize, rng: &mut Rng) -> (f64, f64, f64) {
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for _ in 0..total {
+        loop {
+            match server.submit("bench", rng.normal_vec(D)) {
+                Ok(rx) => {
+                    pending.push(rx);
+                    break;
+                }
+                Err(_) => std::thread::sleep(Duration::from_micros(50)), // backpressure
+            }
+        }
+    }
+    for rx in pending {
+        let r = rx.recv().expect("response");
+        assert!(r.ok(), "{:?}", r.output);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = server.metrics.snapshot();
+    (total as f64 / wall, snap.p50_us, snap.p99_us)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(2024);
+    let accel_cfg = AcceleratorConfig {
+        head_dim: D,
+        seq_len: N,
+        kv_blocks: 4,
+        parallel_queries: 1,
+        freq_mhz: 500.0,
+    };
+    let coord_cfg = CoordinatorConfig {
+        max_batch: 16,
+        batch_window_us: 150,
+        workers: 2,
+        queue_depth: 256,
+    };
+    let total: usize =
+        std::env::var("HFA_BENCH_REQS").ok().and_then(|s| s.parse().ok()).unwrap_or(256);
+
+    let k = Mat::from_vec(N, D, rng.normal_vec(N * D));
+    let v = Mat::from_vec(N, D, rng.normal_vec(N * D));
+
+    let mut t = Table::new(
+        "E2E serving — coordinator + backend, N=1024, d=64, 4 KV blocks",
+        &["backend", "requests", "QPS", "p50 us", "p99 us", "mean batch"],
+    );
+
+    for (name, arith) in [("sim H-FA", Arith::Hfa), ("sim FA-2", Arith::Fa2)] {
+        let kv = Arc::new(KvStore::new(N, D, 4));
+        kv.put("bench", k.clone(), v.clone())?;
+        let factories = (0..coord_cfg.workers)
+            .map(|_| SimBackend::factory(arith, accel_cfg.clone()))
+            .collect();
+        let server = Server::start(&coord_cfg, kv, factories)?;
+        let (qps, p50, p99) = drive(&server, total, &mut rng);
+        let snap = server.metrics.snapshot();
+        t.row(&[
+            name.into(),
+            total.to_string(),
+            format!("{qps:.0}"),
+            format!("{p50:.0}"),
+            format!("{p99:.0}"),
+            format!("{:.1}", snap.mean_batch),
+        ]);
+        server.shutdown();
+    }
+
+    // PJRT backend (needs artifacts)
+    let spec = AttnKernelSpec { kind: "hfa".into(), head_dim: D, seq_len: N, batch: 16 };
+    let artifacts = hfa::artifacts_dir();
+    if artifacts.join("hlo").join(spec.file_name()).is_file() {
+        let kv = Arc::new(KvStore::new(N, D, 4));
+        kv.put("bench", k.clone(), v.clone())?;
+        let factories = vec![
+            PjrtBackend::factory(artifacts.clone(), spec.clone()),
+            PjrtBackend::factory(artifacts.clone(), spec),
+        ];
+        let server = Server::start(&coord_cfg, kv, factories)?;
+        let (qps, p50, p99) = drive(&server, total, &mut rng);
+        let snap = server.metrics.snapshot();
+        t.row(&[
+            "pjrt H-FA kernel".into(),
+            total.to_string(),
+            format!("{qps:.0}"),
+            format!("{p50:.0}"),
+            format!("{p99:.0}"),
+            format!("{:.1}", snap.mean_batch),
+        ]);
+        server.shutdown();
+    } else {
+        eprintln!("(skipping PJRT backend row: artifacts missing)");
+    }
+    t.emit("e2e_throughput");
+
+    // raw accelerator batch compute (no coordinator) for overhead attribution
+    let mut accel = Accelerator::new(Arith::Hfa, accel_cfg);
+    accel.load_kv(k, v)?;
+    let q = Mat::from_vec(16, D, rng.normal_vec(16 * D));
+    let stats = bench(2, 20, Duration::from_secs(10), || {
+        let _ = accel.compute_batch(&q).unwrap();
+    });
+    println!(
+        "raw sim-accelerator compute_batch(16 queries): mean {:.2} ms (functional model wall time; modelled silicon time: {:.1} us)",
+        stats.mean_ms(),
+        accel.compute_batch(&q)?.1.time_us(500.0)
+    );
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Figs. 6 & 7: area and power of the H-FA vs FA-2 accelerators at 28 nm,
+//! 500 MHz, 4 parallel KV blocks, head dims 32/64/128, datapath + KV SRAM
+//! — plus the Fig. 6-style per-block breakdown at d=32.
+
+use hfa::benchlib::Table;
+use hfa::config::AcceleratorConfig;
+use hfa::hw::cost::{compare, report::breakdown_table, Arith};
+
+fn main() {
+    // ---- Fig. 7 -----------------------------------------------------------
+    let mut t = Table::new(
+        "Fig. 7 analog — area (mm^2) and power (mW) at 28 nm / 500 MHz, 4 KV blocks",
+        &["d", "FA-2 dp", "FA-2 sram", "H-FA dp", "H-FA sram",
+          "area savings %", "FA-2 mW", "H-FA mW", "power savings %"],
+    );
+    let mut a_savings = Vec::new();
+    let mut p_savings = Vec::new();
+    for d in [32usize, 64, 128] {
+        let cfg = AcceleratorConfig {
+            head_dim: d,
+            seq_len: 1024,
+            kv_blocks: 4,
+            parallel_queries: 1,
+            freq_mhz: 500.0,
+        };
+        let (fa2, hfa_r, area_s, power_s) = compare(&cfg, 64);
+        a_savings.push(area_s);
+        p_savings.push(power_s);
+        t.row(&[
+            d.to_string(),
+            format!("{:.3}", fa2.datapath_area_mm2),
+            format!("{:.3}", fa2.sram_area_mm2),
+            format!("{:.3}", hfa_r.datapath_area_mm2),
+            format!("{:.3}", hfa_r.sram_area_mm2),
+            format!("{area_s:.1}"),
+            format!("{:.0}", fa2.total_power_mw()),
+            format!("{:.0}", hfa_r.total_power_mw()),
+            format!("{power_s:.1}"),
+        ]);
+    }
+    t.emit("fig7_area_power");
+    println!(
+        "mean area savings {:.1}% (paper: 26.5%), mean power savings {:.1}% (paper: 23.4%)",
+        a_savings.iter().sum::<f64>() / a_savings.len() as f64,
+        p_savings.iter().sum::<f64>() / p_savings.len() as f64
+    );
+
+    // ---- Fig. 6 breakdown at d=32, p=4 -------------------------------------
+    let mut b = Table::new(
+        "Fig. 6 analog — datapath area breakdown at d=32, 4 KV blocks (mm^2)",
+        &["block", "FA-2", "H-FA"],
+    );
+    let fa2_rows = breakdown_table(Arith::Fa2, 32, 4);
+    let hfa_rows = breakdown_table(Arith::Hfa, 32, 4);
+    for (i, (name, area)) in fa2_rows.iter().enumerate() {
+        let hname = &hfa_rows[i].0;
+        let label = if name == hname { name.clone() } else { format!("{name} / {hname}") };
+        b.row(&[label, format!("{area:.4}"), format!("{:.4}", hfa_rows[i].1)]);
+    }
+    let fa2_total: f64 = fa2_rows.iter().map(|r| r.1).sum();
+    let hfa_total: f64 = hfa_rows.iter().map(|r| r.1).sum();
+    b.row(&[
+        "TOTAL datapath".into(),
+        format!("{fa2_total:.4}"),
+        format!("{hfa_total:.4}"),
+    ]);
+    b.emit("fig6_breakdown");
+    println!(
+        "datapath-only savings at d=32: {:.1}% (paper Fig. 6: 36.1%)",
+        100.0 * (1.0 - hfa_total / fa2_total)
+    );
+}

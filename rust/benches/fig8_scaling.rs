@@ -1,0 +1,50 @@
+//! Fig. 8: normalized execution time (a) and normalized area (b) of the
+//! H-FA accelerator as the number of parallel KV sub-blocks grows
+//! (d=64, N=1024 tokens, datapath + SRAM).
+
+use hfa::benchlib::Table;
+use hfa::config::AcceleratorConfig;
+use hfa::hw::cost::{report, Arith};
+use hfa::hw::pipeline::{simulate, LatencyModel};
+
+fn main() {
+    let lat = LatencyModel::for_head_dim(64);
+    let base_cycles = simulate(64, 1024, 1, 1, 1, lat).cycles as f64;
+    let base_cfg = AcceleratorConfig {
+        head_dim: 64,
+        seq_len: 1024,
+        kv_blocks: 1,
+        parallel_queries: 1,
+        freq_mhz: 500.0,
+    };
+    let base_r = report(Arith::Hfa, &base_cfg, 1);
+    let base_area = base_r.total_area_mm2();
+    let base_dp = base_r.datapath_area_mm2;
+
+    let mut t = Table::new(
+        "Fig. 8 analog — H-FA normalized exec time & area vs parallel KV blocks (d=64, N=1024)",
+        &["p", "cycles", "norm. time", "speedup", "area mm^2", "norm. area", "norm. dp area"],
+    );
+    for p in [1usize, 2, 4, 8] {
+        let s = simulate(64, 1024, p, 1, 1, lat);
+        let cfg = AcceleratorConfig { kv_blocks: p, ..base_cfg.clone() };
+        let r = report(Arith::Hfa, &cfg, 1);
+        t.row(&[
+            p.to_string(),
+            s.cycles.to_string(),
+            format!("{:.3}", s.cycles as f64 / base_cycles),
+            format!("{:.2}x", base_cycles / s.cycles as f64),
+            format!("{:.3}", r.total_area_mm2()),
+            format!("{:.2}", r.total_area_mm2() / base_area),
+            format!("{:.2}", r.datapath_area_mm2 / base_dp),
+        ]);
+    }
+    t.emit("fig8_scaling");
+    let s8 = simulate(64, 1024, 8, 1, 1, lat);
+    let r8 = report(Arith::Hfa, &AcceleratorConfig { kv_blocks: 8, ..base_cfg }, 1);
+    println!(
+        "speedup at p=8: {:.2}x (paper: ~6x); datapath area at p=8: {:.1}x of p=1 (paper Fig. 8b: ~10x)",
+        base_cycles / s8.cycles as f64,
+        r8.datapath_area_mm2 / base_dp
+    );
+}

@@ -1,0 +1,93 @@
+//! Tables I & II: task accuracy of the tiny LMs with FA-2 vs H-FA
+//! attention (substitute for MMLU / multi-benchmark LLM study — see
+//! DESIGN.md §5/§6).
+//!
+//! Table I analog: the 20 (family, variant) tasks on the s1 model.
+//! Table II analog: per-family mean accuracy for all three model sizes.
+
+use std::collections::BTreeMap;
+
+use hfa::benchlib::Table;
+use hfa::evalsuite::score::evaluate_file;
+use hfa::evalsuite::tasks::list_eval_files;
+use hfa::model::{AttnSelect, Transformer};
+
+fn limit() -> usize {
+    std::env::var("HFA_EVAL_LIMIT").ok().and_then(|s| s.parse().ok()).unwrap_or(100)
+}
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = hfa::artifacts_dir();
+    let eval_dir = artifacts.join("eval");
+    let files = list_eval_files(&eval_dir)?;
+    anyhow::ensure!(!files.is_empty(), "no eval task files — run `make artifacts`");
+    let lim = limit();
+
+    // ---- Table I analog: per-task accuracy on s1 ------------------------
+    let s1 = Transformer::load(&artifacts.join("models/s1"))?;
+    let mut t1 = Table::new(
+        &format!("Table I analog — s1 task accuracy (%), H-FA vs FA-2 ({lim} instances/task)"),
+        &["task", "H-FA", "FA-2", "delta"],
+    );
+    let mut diffs = Vec::new();
+    for (fam, var, path) in &files {
+        let fa2 = evaluate_file(&s1, path, AttnSelect::Fa2, lim, &mut None)?;
+        let hfa_acc = evaluate_file(&s1, path, AttnSelect::Hfa, lim, &mut None)?;
+        let d = hfa_acc.pct() - fa2.pct();
+        diffs.push(d);
+        t1.row(&[
+            format!("{fam}_{var}"),
+            format!("{:.0}", hfa_acc.pct()),
+            format!("{:.0}", fa2.pct()),
+            format!("{d:+.0}"),
+        ]);
+    }
+    t1.emit("table1_accuracy");
+    let mean_abs: f64 = diffs.iter().map(|d| d.abs()).sum::<f64>() / diffs.len() as f64;
+    println!("mean |accuracy delta| = {mean_abs:.1} pts (paper: below 5 in the majority of tasks)");
+
+    // ---- Table II analog: per-family means for 3 sizes -------------------
+    let mut t2 = Table::new(
+        "Table II analog — per-family mean accuracy (%), three model sizes",
+        &["model", "impl", "copy_last", "induction", "assoc", "maxsym", "modsum"],
+    );
+    for size in ["s0", "s1", "s2"] {
+        let dir = artifacts.join("models").join(size);
+        if !dir.join("weights.bin").is_file() {
+            eprintln!("skipping {size}: weights missing");
+            continue;
+        }
+        let model = Transformer::load(&dir)?;
+        for (imp_name, imp) in [("FA-2", AttnSelect::Fa2), ("H-FA", AttnSelect::Hfa)] {
+            let mut fam_acc: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+            for (fam, _var, path) in &files {
+                let acc = evaluate_file(&model, path, imp, lim, &mut None)?;
+                fam_acc
+                    .entry(match fam.as_str() {
+                        "copy_last" => "copy_last",
+                        "induction" => "induction",
+                        "assoc" => "assoc",
+                        "maxsym" => "maxsym",
+                        _ => "modsum",
+                    })
+                    .or_default()
+                    .push(acc.pct());
+            }
+            let mean = |f: &str| {
+                let v = &fam_acc[f];
+                format!("{:.0}", v.iter().sum::<f64>() / v.len() as f64)
+            };
+            t2.row(&[
+                size.to_string(),
+                imp_name.to_string(),
+                mean("copy_last"),
+                mean("induction"),
+                mean("assoc"),
+                mean("maxsym"),
+                mean("modsum"),
+            ]);
+        }
+    }
+    t2.emit("table2_accuracy");
+    Ok(())
+}

@@ -1,0 +1,146 @@
+//! Software BFloat16: the floating-point format of both accelerator
+//! variants in the paper's evaluation ("all floating-point computations
+//! refer to the BFloat16 datatype", Section VI-C).
+//!
+//! 1 sign + 8 exponent + 7 mantissa bits.  Conversions use
+//! round-to-nearest-even, matching XLA's `f32 -> bf16` convert and the
+//! `f32_to_bf16_bits` helper in `logmath.py`.
+
+/// A BFloat16 value stored as raw bits.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    pub const ZERO: Bf16 = Bf16(0);
+    pub const ONE: Bf16 = Bf16(0x3F80);
+    pub const NEG_INF: Bf16 = Bf16(0xFF80);
+    pub const MAX_FINITE: Bf16 = Bf16(0x7F7F);
+
+    /// Round-to-nearest-even conversion from f32 (same as XLA / numpy).
+    #[inline]
+    pub fn from_f32(x: f32) -> Bf16 {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // canonical quiet NaN, preserving sign
+            return Bf16(((bits >> 16) as u16 & 0x8000) | 0x7FC0);
+        }
+        let rounded = (bits as u64 + 0x7FFF + ((bits >> 16) & 1) as u64) >> 16;
+        Bf16(rounded as u16)
+    }
+
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    #[inline]
+    pub fn from_bits(bits: u16) -> Bf16 {
+        Bf16(bits)
+    }
+
+    #[inline]
+    pub fn bits(self) -> u16 {
+        self.0
+    }
+
+    #[inline]
+    pub fn sign(self) -> u16 {
+        self.0 >> 15
+    }
+
+    /// Biased exponent field (8 bits).
+    #[inline]
+    pub fn exponent(self) -> u16 {
+        (self.0 >> 7) & 0xFF
+    }
+
+    /// Mantissa field (7 bits, no hidden one).
+    #[inline]
+    pub fn mantissa(self) -> u16 {
+        self.0 & 0x7F
+    }
+
+    /// Zero or subnormal (the H-FA log converter maps both to -inf).
+    #[inline]
+    pub fn is_zero_or_subnormal(self) -> bool {
+        self.exponent() == 0
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        self.exponent() == 0xFF && self.mantissa() != 0
+    }
+
+    /// BF16 multiply: exact in f32 (8+8 mantissa bits fit), rounded once.
+    #[inline]
+    pub fn mul(self, rhs: Bf16) -> Bf16 {
+        Bf16::from_f32(self.to_f32() * rhs.to_f32())
+    }
+
+    /// BF16 add, RNE-rounded result.
+    #[inline]
+    pub fn add(self, rhs: Bf16) -> Bf16 {
+        Bf16::from_f32(self.to_f32() + rhs.to_f32())
+    }
+}
+
+impl From<f32> for Bf16 {
+    fn from(x: f32) -> Self {
+        Bf16::from_f32(x)
+    }
+}
+
+impl From<Bf16> for f32 {
+    fn from(x: Bf16) -> Self {
+        x.to_f32()
+    }
+}
+
+/// Round an f32 slice through bf16 (the "inputs are BF16" convention used
+/// throughout the golden models).
+pub fn round_slice_f32(xs: &[f32]) -> Vec<f32> {
+    xs.iter().map(|&x| Bf16::from_f32(x).to_f32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact_values() {
+        for &x in &[0.0f32, 1.0, -1.0, 0.5, 2.0, -0.375, 65280.0] {
+            assert_eq!(Bf16::from_f32(x).to_f32(), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn rne_rounding_matches_reference() {
+        // 1.0 + 2^-8 rounds down to 1.0 (tie to even), 1.0 + 3*2^-9 rounds up.
+        assert_eq!(Bf16::from_f32(1.0 + 1.0 / 256.0).to_f32(), 1.0);
+        let up = Bf16::from_f32(1.0 + 3.0 / 512.0).to_f32();
+        assert_eq!(up, 1.0 + 1.0 / 128.0);
+    }
+
+    #[test]
+    fn field_decomposition() {
+        let x = Bf16::from_f32(-3.5); // sign 1, exp 128, mant 0x60
+        assert_eq!(x.sign(), 1);
+        assert_eq!(x.exponent(), 128);
+        assert_eq!(x.mantissa(), 0x60);
+    }
+
+    #[test]
+    fn zero_and_subnormal_detection() {
+        assert!(Bf16::from_f32(0.0).is_zero_or_subnormal());
+        assert!(Bf16(0x0001).is_zero_or_subnormal());
+        assert!(!Bf16::ONE.is_zero_or_subnormal());
+    }
+
+    #[test]
+    fn infinity_saturation_behaviour() {
+        let inf = Bf16::from_f32(f32::INFINITY);
+        assert_eq!(inf.exponent(), 0xFF);
+        assert!(!inf.is_nan());
+        assert!(Bf16::from_f32(f32::NAN).is_nan());
+    }
+}

@@ -1,0 +1,117 @@
+//! Q9.7 fixed-point format of the H-FA log domain (paper Section IV-B).
+//!
+//! 16-bit in hardware (9 integer bits incl. sign + 7 fraction bits — the
+//! 7 matches BFloat16's mantissa width so the float->log conversion of
+//! Eq. 18 is a pure bit reinterpretation).  We carry values in `i32` like
+//! the python/jnp emulation; the extra headroom never changes results
+//! because every operation's range is within Q9.7 after the [-15, 0]
+//! clamp.
+
+/// Fraction bits of the Q9.7 format.
+pub const FRAC_BITS: u32 = 7;
+/// 1.0 in Q9.7.
+pub const FRAC_ONE: i32 = 1 << FRAC_BITS;
+/// Fraction mask.
+pub const FRAC_MASK: i32 = FRAC_ONE - 1;
+/// -inf sentinel (logarithm of zero) — far below any reachable value.
+pub const LOG_ZERO: i32 = -(1 << 24);
+/// Score differences are clamped to [-15, 0] before quantization
+/// (e^-15 ~ 3e-7 is below BF16 resolution — paper Section IV-B).
+pub const CLAMP_LO: f32 = -15.0;
+/// log2(e) in f32, the score-difference scale factor (e^x = 2^{x log2 e}).
+pub const LOG2E_F32: f32 = 1.442_695_f32;
+/// BFloat16 exponent bias.
+pub const BF16_BIAS: i32 = 127;
+
+/// Is this log value the -inf sentinel? (mirrors `logq <= LOG_ZERO // 2`)
+#[inline]
+pub fn is_log_zero(l: i32) -> bool {
+    l <= LOG_ZERO / 2
+}
+
+/// `quant[(dz) * log2 e]` of Eqs. 14b/14c/16b/16c: clamp the (non-positive,
+/// natural-log-unit) f32 score difference to [-15, 0], scale by log2(e) in
+/// f32, truncate (floor) to Q9.7.  NaN (the -inf - -inf warmup case) maps
+/// to the clamp floor, matching the python spec.
+#[inline]
+pub fn quant_diff_q7(dz: f32) -> i32 {
+    let dz = if dz.is_nan() { CLAMP_LO } else { dz };
+    let dz = dz.clamp(CLAMP_LO, 0.0);
+    let t = dz * LOG2E_F32;
+    (t * FRAC_ONE as f32).floor() as i32
+}
+
+/// Q9.7 -> f64 (for diagnostics / functional paths; not used in the
+/// bit-exact pipeline).
+#[inline]
+pub fn q7_to_f64(q: i32) -> f64 {
+    if is_log_zero(q) {
+        f64::NEG_INFINITY
+    } else {
+        q as f64 / FRAC_ONE as f64
+    }
+}
+
+/// f64 -> Q9.7 with truncation toward -inf (hardware truncation).
+#[inline]
+pub fn f64_to_q7_trunc(x: f64) -> i32 {
+    if x == f64::NEG_INFINITY {
+        LOG_ZERO
+    } else {
+        (x * FRAC_ONE as f64).floor() as i32
+    }
+}
+
+/// Saturating Q9.7 add with LOG_ZERO propagation: multiplying by `2^dq`
+/// in the log domain (`shift_log` of the python spec).
+#[inline]
+pub fn shift_log(logq: i32, dq: i32) -> i32 {
+    if is_log_zero(logq) {
+        LOG_ZERO
+    } else {
+        logq + dq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quant_clamps_and_floors() {
+        assert_eq!(quant_diff_q7(0.0), 0);
+        assert_eq!(quant_diff_q7(-1e9), quant_diff_q7(-15.0));
+        assert_eq!(quant_diff_q7(f32::NEG_INFINITY), quant_diff_q7(-15.0));
+        assert_eq!(quant_diff_q7(f32::NAN), quant_diff_q7(-15.0));
+        // positive inputs clamp to 0 (differences are non-positive by def)
+        assert_eq!(quant_diff_q7(3.0), 0);
+        // -1 nat -> -log2(e) ~ -1.4427 -> floor(-184.66.) = -185
+        assert_eq!(quant_diff_q7(-1.0), -185);
+    }
+
+    #[test]
+    fn quant_monotone_nonincreasing() {
+        let mut prev = quant_diff_q7(0.0);
+        let mut x = 0.0f32;
+        while x > -16.0 {
+            let q = quant_diff_q7(x);
+            assert!(q <= prev || q == prev, "quant not monotone at {x}");
+            prev = q.min(prev);
+            x -= 0.013;
+        }
+    }
+
+    #[test]
+    fn shift_log_propagates_sentinel() {
+        assert_eq!(shift_log(LOG_ZERO, -100), LOG_ZERO);
+        assert_eq!(shift_log(256, -128), 128);
+    }
+
+    #[test]
+    fn q7_f64_roundtrip_on_grid() {
+        for q in [-2048, -1, 0, 1, 127, 128, 4095] {
+            assert_eq!(f64_to_q7_trunc(q7_to_f64(q)), q);
+        }
+        assert_eq!(f64_to_q7_trunc(q7_to_f64(LOG_ZERO)), LOG_ZERO);
+    }
+}

@@ -1,0 +1,293 @@
+//! Logarithmic number system: sign + Q9.7 `log2|x|` (paper Eq. 3) and the
+//! signed LNS addition of Eqs. 10/14/17.
+//!
+//! Bit-exact mirror of `logmath.bf16_bits_to_log_q7`, `log_q7_to_bf16_bits`
+//! and `lns_add`.
+
+use super::bf16::Bf16;
+use super::fix::{is_log_zero, BF16_BIAS, FRAC_BITS, FRAC_MASK, LOG_ZERO};
+use super::pwl;
+
+/// An LNS value: `(-1)^sign * 2^(log/128)`; `log == LOG_ZERO` encodes 0.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Lns {
+    pub sign: i32,
+    pub log: i32,
+}
+
+impl Lns {
+    pub const ZERO: Lns = Lns { sign: 0, log: LOG_ZERO };
+
+    #[inline]
+    pub fn is_zero(self) -> bool {
+        is_log_zero(self.log)
+    }
+
+    /// Float -> log conversion of the value vector (Eq. 18): reinterpret
+    /// the BF16 exponent.mantissa as Q8.7 and subtract the bias —
+    /// Mitchell's `log2(1+M) ~= M`.  Zero/subnormal -> LNS zero.
+    #[inline]
+    pub fn from_bf16(v: Bf16) -> Lns {
+        let bits = v.bits() as i32;
+        if bits & 0x7F80 == 0 {
+            // zero/subnormal -> sentinel, preserving the sign bit
+            // (matches the python spec; the sign of a zero operand is
+            // never propagated by lns_add)
+            return Lns { sign: bits >> 15 & 1, log: LOG_ZERO };
+        }
+        Lns {
+            sign: bits >> 15 & 1,
+            log: (bits & 0x7FFF) - (BF16_BIAS << FRAC_BITS),
+        }
+    }
+
+    /// Log -> float back-conversion (Eq. 22): `2^(I+F) ~= 2^I * (1+F)`,
+    /// so the Q9.7 integer part (plus bias) becomes the exponent field and
+    /// the fraction bits become the mantissa.  Underflow saturates to
+    /// +-0, overflow to the max finite BF16.
+    #[inline]
+    pub fn to_bf16(self) -> Bf16 {
+        if self.is_zero() {
+            return Bf16(((self.sign as u16) & 1) << 15);
+        }
+        let i_part = self.log >> FRAC_BITS; // arithmetic shift = floor
+        let f_part = self.log & FRAC_MASK;
+        let ebits = i_part + BF16_BIAS;
+        let s = (self.sign as u16 & 1) << 15;
+        if ebits <= 0 {
+            Bf16(s) // exponent underflow -> signed zero
+        } else if ebits >= 255 {
+            Bf16(s | (254 << FRAC_BITS) | FRAC_MASK as u16) // saturate
+        } else {
+            Bf16(s | ((ebits as u16) << FRAC_BITS) | f_part as u16)
+        }
+    }
+
+    /// Multiply by `2^(dq/128)` (Q9.7 add in log domain).
+    #[inline]
+    pub fn scaled(self, dq: i32) -> Lns {
+        Lns { sign: self.sign, log: super::fix::shift_log(self.log, dq) }
+    }
+
+    /// Negate.
+    #[inline]
+    pub fn neg(self) -> Lns {
+        Lns { sign: self.sign ^ 1, log: self.log }
+    }
+
+    /// f64 value (diagnostics only).
+    pub fn to_f64(self) -> f64 {
+        if self.is_zero() {
+            0.0
+        } else {
+            let mag = 2f64.powf(self.log as f64 / 128.0);
+            if self.sign == 1 { -mag } else { mag }
+        }
+    }
+}
+
+/// Signed LNS addition (Eqs. 14a/14d with Mitchell Eq. 17 and PWL Eq. 19):
+///
+/// `L = max(A,B) +- (PWL(2^-f) >> p)`; sign = sign of the larger operand
+/// (ties -> the B operand, matching `B >= A -> s_b` in Eq. 14d).
+#[inline]
+pub fn lns_add(a: Lns, b: Lns) -> Lns {
+    lns_add_traced(a, b, None)
+}
+
+/// `lns_add` with optional Fig.-5 instrumentation: records the Mitchell
+/// input `x = 2^-|A-B|` whenever the approximation `log2(1 +- x) ~= +-x`
+/// is actually applied (both operands non-zero).
+#[inline]
+pub fn lns_add_traced(
+    a: Lns,
+    b: Lns,
+    hist: Option<&mut super::mitchell::MitchellHistogram>,
+) -> Lns {
+    if a.is_zero() {
+        if b.is_zero() {
+            return Lns::ZERO;
+        }
+        return b;
+    }
+    if b.is_zero() {
+        return a;
+    }
+    let d = (a.log - b.log).abs();
+    let r = pwl::pow2_neg_q7(d);
+    if let Some(h) = hist {
+        h.record_q7(r.min(127));
+    }
+    let mx = a.log.max(b.log);
+    let log = if a.sign == b.sign { mx + r } else { mx - r };
+    let sign = if a.log > b.log { a.sign } else { b.sign };
+    Lns { sign, log }
+}
+
+/// `Lns::from_bf16` with optional Fig.-5 instrumentation: records the
+/// Mitchell input `x = M_V` (the mantissa fraction of Eq. 18).
+#[inline]
+pub fn from_bf16_traced(v: Bf16, hist: Option<&mut super::mitchell::MitchellHistogram>) -> Lns {
+    let l = Lns::from_bf16(v);
+    if !l.is_zero() {
+        if let Some(h) = hist {
+            h.record_q7((v.bits() & 0x7F) as i32);
+        }
+    }
+    l
+}
+
+/// A slice-wise LNS lane vector (the `d+1` lanes of the merged
+/// `O = [ell, o]` accumulator of Eq. 12).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LnsVec {
+    pub signs: Vec<i32>,
+    pub logs: Vec<i32>,
+}
+
+impl LnsVec {
+    pub fn zeros(n: usize) -> LnsVec {
+        LnsVec { signs: vec![0; n], logs: vec![LOG_ZERO; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.signs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.signs.is_empty()
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> Lns {
+        Lns { sign: self.signs[i], log: self.logs[i] }
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: Lns) {
+        self.signs[i] = v.sign;
+        self.logs[i] = v.log;
+    }
+
+    /// Lane-wise `self = lns_add(self.scaled(dq_self), rhs.scaled(dq_rhs))`
+    /// — one step of the Eq. 14 recurrence across all d+1 lanes.
+    pub fn fused_update(&mut self, dq_self: i32, rhs: &LnsVec, dq_rhs: i32) {
+        debug_assert_eq!(self.len(), rhs.len());
+        for i in 0..self.len() {
+            let a = self.get(i).scaled(dq_self);
+            let b = rhs.get(i).scaled(dq_rhs);
+            self.set(i, lns_add(a, b));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lns(v: f32) -> Lns {
+        Lns::from_bf16(Bf16::from_f32(v))
+    }
+
+    #[test]
+    fn bf16_log_roundtrip_powers_of_two() {
+        // powers of two have zero mantissa -> Mitchell is exact
+        for &x in &[1.0f32, 2.0, 4.0, 0.5, 0.25, -8.0, -0.125] {
+            let l = lns(x);
+            assert_eq!(l.to_bf16().to_f32(), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn log_of_one_is_zero() {
+        assert_eq!(lns(1.0), Lns { sign: 0, log: 0 });
+        assert_eq!(lns(-1.0), Lns { sign: 1, log: 0 });
+    }
+
+    #[test]
+    fn zero_encodes_sentinel() {
+        assert!(lns(0.0).is_zero());
+        assert_eq!(lns(0.0).to_bf16(), Bf16::ZERO);
+    }
+
+    #[test]
+    fn mitchell_conversion_bias() {
+        // log2|1.5| = 0.585; Mitchell gives M = 0.5 (error 0.085 < 0.086)
+        let l = lns(1.5);
+        assert_eq!(l.log, 64); // 0.5 in Q7
+    }
+
+    #[test]
+    fn add_equal_positive_doubles() {
+        // 1 + 1 = 2 exactly: d=0 -> r=128 (Q7 of 1.0) -> log 0+128
+        let r = lns_add(lns(1.0), lns(1.0));
+        assert_eq!(r.to_bf16().to_f32(), 2.0);
+    }
+
+    #[test]
+    fn add_cancellation_halves_not_zeroes() {
+        // Mitchell artefact (Eq. 17): x + (-x) gives max - 1.0 in log2,
+        // i.e. magnitude x/2, not 0 — documented datapath behaviour.
+        // Sign on a tie follows operand B (Eq. 14d: B >= A -> s_b).
+        let r = lns_add(lns(4.0), lns(-4.0));
+        assert_eq!(r.to_bf16().to_f32(), -2.0);
+        let r = lns_add(lns(-4.0), lns(4.0));
+        assert_eq!(r.to_bf16().to_f32(), 2.0);
+    }
+
+    #[test]
+    fn add_sign_follows_larger() {
+        let r = lns_add(lns(-8.0), lns(1.0));
+        assert_eq!(r.sign, 1);
+        let r = lns_add(lns(8.0), lns(-1.0));
+        assert_eq!(r.sign, 0);
+    }
+
+    #[test]
+    fn add_zero_identity() {
+        let x = lns(3.0);
+        assert_eq!(lns_add(x, Lns::ZERO), x);
+        assert_eq!(lns_add(Lns::ZERO, x), x);
+        assert_eq!(lns_add(Lns::ZERO, Lns::ZERO), Lns::ZERO);
+    }
+
+    #[test]
+    fn add_approx_accuracy_vs_exact() {
+        // across random positive pairs the LNS sum is within *two stacked*
+        // Mitchell errors (from_bf16 conversion ~0.086 + Eq. 17 add ~0.086)
+        // plus PWL/quantization slack
+        let mut worst: f64 = 0.0;
+        let mut x = 0.37f32;
+        for i in 0..500 {
+            let a = x * (1.0 + (i % 17) as f32);
+            let b = 0.11f32 * (1.0 + (i % 29) as f32);
+            let r = lns_add(lns(a), lns(b)).to_f64();
+            let exact = (Bf16::from_f32(a).to_f32() + Bf16::from_f32(b).to_f32()) as f64;
+            worst = worst.max((r.log2() - exact.log2()).abs());
+            x = (x * 1.07).rem_euclid(5.0) + 0.01;
+        }
+        assert!(worst < 0.19, "worst log2 error {worst}");
+    }
+
+    #[test]
+    fn back_conversion_saturates() {
+        let big = Lns { sign: 0, log: 200 << FRAC_BITS };
+        assert_eq!(big.to_bf16(), Bf16(0x7F7F));
+        let tiny = Lns { sign: 1, log: -(200 << FRAC_BITS) };
+        assert_eq!(tiny.to_bf16(), Bf16(0x8000));
+    }
+
+    #[test]
+    fn lnsvec_fused_update_matches_scalar() {
+        let mut v = LnsVec::zeros(3);
+        let rhs = LnsVec {
+            signs: vec![0, 1, 0],
+            logs: vec![0, 64, LOG_ZERO],
+        };
+        v.fused_update(-10, &rhs, -5);
+        for i in 0..3 {
+            let expect = lns_add(Lns::ZERO.scaled(-10), rhs.get(i).scaled(-5));
+            assert_eq!(v.get(i), expect);
+        }
+    }
+}

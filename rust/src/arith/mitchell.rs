@@ -1,0 +1,148 @@
+//! Mitchell's approximation `log2(1 +- x) ~= +-x` — error analysis and the
+//! Fig. 5 instrumentation.
+//!
+//! The paper's Section VI-B studies *where* Mitchell's approximation is
+//! applied (value-vector mantissas in Eq. 18, the `2^-|A-B|` correction in
+//! Eq. 17) and shows the input distribution concentrates below 0.1 where
+//! the absolute error is < 0.02, bounded overall by ~0.086.  This module
+//! provides the exact error function and a histogram recorder that the
+//! H-FA golden model fills while processing real eval traffic.
+
+/// Absolute Mitchell error `E(x) = |log2(1 + x) - x|` for the addition
+/// branch, `x in [0, 1)`.
+pub fn error_add(x: f64) -> f64 {
+    ((1.0 + x).log2() - x).abs()
+}
+
+/// Absolute error of the subtraction branch `|log2(1 - x) - (-x)|`
+/// (unbounded as x -> 1; the paper's Fig. 5 plots the + branch).
+pub fn error_sub(x: f64) -> f64 {
+    if x >= 1.0 {
+        f64::INFINITY
+    } else {
+        ((1.0 - x).log2() + x).abs()
+    }
+}
+
+/// Peak of `E(x)`: x* = 1/ln2 - 1, E(x*) ~= 0.0860.
+pub fn max_error_add() -> (f64, f64) {
+    let x = 1.0 / std::f64::consts::LN_2 - 1.0;
+    (x, error_add(x))
+}
+
+/// Histogram of inputs to Mitchell's approximation over [0, 1).
+#[derive(Clone, Debug)]
+pub struct MitchellHistogram {
+    pub bins: Vec<u64>,
+    pub total: u64,
+}
+
+impl MitchellHistogram {
+    pub fn new(nbins: usize) -> Self {
+        MitchellHistogram { bins: vec![0; nbins], total: 0 }
+    }
+
+    #[inline]
+    pub fn record(&mut self, x: f64) {
+        if !(0.0..1.0).contains(&x) {
+            return;
+        }
+        let idx = ((x * self.bins.len() as f64) as usize).min(self.bins.len() - 1);
+        self.bins[idx] += 1;
+        self.total += 1;
+    }
+
+    /// Record a Q7 fraction input (the `2^-|A-B|` term of Eq. 17).
+    #[inline]
+    pub fn record_q7(&mut self, q7: i32) {
+        self.record(q7 as f64 / 128.0);
+    }
+
+    /// Fraction of recorded inputs in [0, hi).
+    pub fn mass_below(&self, hi: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let cut = ((hi * self.bins.len() as f64) as usize).min(self.bins.len());
+        self.bins[..cut].iter().sum::<u64>() as f64 / self.total as f64
+    }
+
+    pub fn merge(&mut self, other: &MitchellHistogram) {
+        assert_eq!(self.bins.len(), other.bins.len());
+        for (a, b) in self.bins.iter_mut().zip(&other.bins) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+
+    /// (bin_center, density, mitchell_error_at_center) rows — the Fig. 5
+    /// series.
+    pub fn rows(&self) -> Vec<(f64, f64, f64)> {
+        let n = self.bins.len() as f64;
+        self.bins
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                let x = (i as f64 + 0.5) / n;
+                let dens = if self.total == 0 { 0.0 } else { c as f64 / self.total as f64 };
+                (x, dens, error_add(x))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_zero_at_endpoints() {
+        assert!(error_add(0.0) < 1e-12);
+        assert!(error_add(1.0 - 1e-12) < 1e-9);
+    }
+
+    #[test]
+    fn max_error_is_0086() {
+        let (x, e) = max_error_add();
+        assert!((x - 0.4427).abs() < 1e-3);
+        assert!((e - 0.0860).abs() < 1e-3);
+        // paper: "the absolute error can never exceed 0.08[6]"
+        for i in 0..1000 {
+            assert!(error_add(i as f64 / 1000.0) <= e + 1e-12);
+        }
+    }
+
+    #[test]
+    fn error_below_envelope_for_small_inputs() {
+        // paper Fig. 5 text: "inputs below 0.1 -> error less than 0.02".
+        // In base-2 (the E(x) the datapath incurs) E(0.1) = 0.0375, so the
+        // 0.02 figure only holds for x < ~0.045 (E(x) ~ 0.4427x for small
+        // x) — we assert the measured base-2 envelope (0.04 at x<0.1) and
+        // the paper's figure at x<0.045.
+        for i in 0..100 {
+            assert!(error_add(i as f64 / 1000.0) < 0.04);
+        }
+        for i in 0..45 {
+            assert!(error_add(i as f64 / 1000.0) < 0.02);
+        }
+    }
+
+    #[test]
+    fn histogram_mass_and_rows() {
+        let mut h = MitchellHistogram::new(50);
+        for i in 0..1000 {
+            h.record((i % 10) as f64 / 100.0);
+        }
+        assert_eq!(h.total, 1000);
+        assert!((h.mass_below(0.1) - 1.0).abs() < 1e-9);
+        let rows = h.rows();
+        assert_eq!(rows.len(), 50);
+        assert!(rows[0].1 > 0.0);
+    }
+
+    #[test]
+    fn sub_branch_unbounded() {
+        assert!(error_sub(0.999) > 1.0);
+        assert!(error_sub(0.1) < 0.06);
+    }
+}

@@ -1,0 +1,15 @@
+//! Bit-accurate arithmetic substrate of the H-FA datapath.
+//!
+//! Every operation here mirrors `python/compile/kernels/logmath.py`
+//! bit-for-bit; `rust/tests/golden_replay.rs` pins the two together with
+//! golden vectors dumped at artifact-build time.
+
+pub mod bf16;
+pub mod fix;
+pub mod lns;
+pub mod mitchell;
+pub mod pwl;
+
+pub use bf16::Bf16;
+pub use fix::{quant_diff_q7, FRAC_BITS, FRAC_MASK, FRAC_ONE, LOG_ZERO};
+pub use lns::Lns;

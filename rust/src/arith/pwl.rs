@@ -1,0 +1,124 @@
+//! 8-segment piecewise-linear approximation of `2^-f`, `f in [0,1)`
+//! (paper Eq. 19 and Section V-A step 3).
+//!
+//! In hardware the coefficients live in two small LUTs indexed by the top
+//! 3 bits of the Q7 fractional input; the remaining 4 bits multiply the
+//! slope.  Coefficients are endpoint-interpolated in Q14 from a closed
+//! form evaluated in f64 — the *same* expression as
+//! `logmath.pwl_tables()`, so both languages derive identical tables
+//! (verified against `artifacts/golden/pwl_table.txt`).
+
+use super::fix::{FRAC_BITS, FRAC_MASK};
+
+/// Number of PWL segments over [0, 1).
+pub const SEGMENTS: usize = 8;
+/// Bits of the segment index.
+pub const SEG_BITS: u32 = 3;
+/// Low bits indexing within a segment.
+pub const IN_BITS: u32 = FRAC_BITS - SEG_BITS; // 4
+/// Q-format of the coefficients.
+pub const COEF_BITS: u32 = 14;
+/// Shifts beyond this underflow the Q7 result to zero.
+pub const MAX_SHIFT: i32 = 24;
+
+/// floor(x + 0.5): identical rounding in python and rust.
+fn round_half_away(x: f64) -> i64 {
+    (x + 0.5).floor() as i64
+}
+
+/// Compute the (C0, C1) Q14 coefficient tables.
+pub fn tables() -> ([i32; SEGMENTS], [i32; SEGMENTS]) {
+    let mut c0 = [0i32; SEGMENTS];
+    let mut c1 = [0i32; SEGMENTS];
+    for j in 0..SEGMENTS {
+        let y0 = 2f64.powf(-(j as f64 / 8.0));
+        let y1 = 2f64.powf(-((j as f64 + 1.0) / 8.0));
+        c0[j] = round_half_away(y0 * (1 << COEF_BITS) as f64) as i32;
+        c1[j] = round_half_away((y0 - y1) * (1 << COEF_BITS) as f64 / 16.0) as i32;
+    }
+    (c0, c1)
+}
+
+/// The baked tables (computed once; `tables()` is pure).
+pub static PWL_C0: [i32; SEGMENTS] = [16384, 15024, 13777, 12634, 11585, 10624, 9742, 8933];
+pub static PWL_C1: [i32; SEGMENTS] = [85, 78, 71, 66, 60, 55, 51, 46];
+
+/// Q14 approximation of `2^{-f/128}` for a Q7 fraction `f` in [0, 128).
+#[inline]
+pub fn pow2_neg_frac_q14(f: i32) -> i32 {
+    debug_assert!((0..128).contains(&f));
+    let j = (f >> IN_BITS) as usize;
+    let u = f & ((1 << IN_BITS) - 1);
+    PWL_C0[j] - PWL_C1[j] * u
+}
+
+/// Full `2^{-d}` for a non-negative Q9.7 distance `d`, returned in Q7
+/// (the correction term of Eq. 17): `2^{-f} >> p` with truncation.
+#[inline]
+pub fn pow2_neg_q7(d: i32) -> i32 {
+    debug_assert!(d >= 0);
+    let p = d >> FRAC_BITS;
+    let f = d & FRAC_MASK;
+    let shift = (p + (COEF_BITS - FRAC_BITS) as i32).min(MAX_SHIFT);
+    pow2_neg_frac_q14(f) >> shift
+}
+
+/// Continuous (f64) evaluation of the same PWL — used by the functional
+/// ablation path and to bound the approximation error in tests.
+pub fn pow2_neg_pwl_f64(dist: f64) -> f64 {
+    let p = dist.floor();
+    let f = dist - p;
+    let j = ((f * 8.0) as usize).min(7);
+    let y0 = 2f64.powf(-(j as f64 / 8.0));
+    let y1 = 2f64.powf(-((j as f64 + 1.0) / 8.0));
+    let y = y0 + (y1 - y0) * (f * 8.0 - j as f64);
+    y * 2f64.powf(-p.min(1000.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baked_tables_match_closed_form() {
+        let (c0, c1) = tables();
+        assert_eq!(c0, PWL_C0);
+        assert_eq!(c1, PWL_C1);
+    }
+
+    #[test]
+    fn endpoints_are_exact_ish() {
+        // f = 0 -> 2^0 = 1.0 in Q14
+        assert_eq!(pow2_neg_frac_q14(0), 1 << COEF_BITS);
+        // f = 64 -> 2^-0.5 ~ 0.7071 -> 11585 in Q14
+        let v = pow2_neg_frac_q14(64) as f64 / (1 << COEF_BITS) as f64;
+        assert!((v - 0.70710678).abs() < 2e-3, "{v}");
+    }
+
+    #[test]
+    fn pwl_error_bounded() {
+        // max abs error of the 8-segment endpoint fit of 2^-x is < 1.5e-3
+        for f in 0..128 {
+            let approx = pow2_neg_frac_q14(f) as f64 / (1 << COEF_BITS) as f64;
+            let exact = 2f64.powf(-(f as f64) / 128.0);
+            assert!((approx - exact).abs() < 1.5e-3, "f={f}");
+        }
+    }
+
+    #[test]
+    fn shift_truncates_to_zero() {
+        assert_eq!(pow2_neg_q7(0), 128); // 2^0 = 1.0 in Q7
+        assert_eq!(pow2_neg_q7(128), 64); // 2^-1 = 0.5
+        assert_eq!(pow2_neg_q7(30 << FRAC_BITS), 0); // deep underflow
+    }
+
+    #[test]
+    fn monotone_nonincreasing() {
+        let mut prev = i32::MAX;
+        for d in 0..(16 << FRAC_BITS) {
+            let v = pow2_neg_q7(d);
+            assert!(v <= prev);
+            prev = v;
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Exact softmax attention — the f64 oracle every approximation is
+//! measured against (paper Section II-A).
+
+use crate::tensor::{dot_f32, Mat};
+
+/// `softmax(q k^T * scale) v` with safe-softmax max subtraction, f64
+/// accumulation.  `mask`: row-major `(B, N)` bools, true = attend.
+pub fn attention(q: &Mat, k: &Mat, v: &Mat, scale: Option<f32>, mask: Option<&[bool]>) -> Mat {
+    let (b, d) = (q.rows, q.cols);
+    let n = k.rows;
+    assert_eq!(k.cols, d);
+    assert_eq!(v.rows, n);
+    let scale = scale.unwrap_or(1.0 / (d as f32).sqrt()) as f64;
+    let dv = v.cols;
+    let mut out = Mat::zeros(b, dv);
+
+    for bi in 0..b {
+        let qrow = q.row(bi);
+        let valid = |i: usize| mask.map(|m| m[bi * n + i]).unwrap_or(true);
+        // scores + max
+        let mut scores = vec![f64::NEG_INFINITY; n];
+        let mut mx = f64::NEG_INFINITY;
+        for i in 0..n {
+            if valid(i) {
+                scores[i] = dot_f32(qrow, k.row(i)) as f64 * scale;
+                mx = mx.max(scores[i]);
+            }
+        }
+        // weights
+        let mut den = 0.0f64;
+        let mut acc = vec![0.0f64; dv];
+        for i in 0..n {
+            if !valid(i) {
+                continue;
+            }
+            let w = (scores[i] - mx).exp();
+            den += w;
+            for (a, &vv) in acc.iter_mut().zip(v.row(i)) {
+                *a += w * vv as f64;
+            }
+        }
+        for (j, a) in acc.iter().enumerate() {
+            out.set(bi, j, (a / den) as f32);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_scores_average_values() {
+        // q orthogonal to all k -> all scores 0 -> softmax uniform
+        let q = Mat::from_vec(1, 2, vec![0.0, 0.0]);
+        let k = Mat::from_vec(4, 2, vec![1., 0., 0., 1., -1., 0., 0., -1.]);
+        let v = Mat::from_fn(4, 2, |r, c| (r * 2 + c) as f32);
+        let o = attention(&q, &k, &v, None, None);
+        assert!((o.at(0, 0) - 3.0).abs() < 1e-6); // mean of 0,2,4,6
+        assert!((o.at(0, 1) - 4.0).abs() < 1e-6); // mean of 1,3,5,7
+    }
+
+    #[test]
+    fn peaked_scores_select_value() {
+        // one key matches q strongly -> output ~ its value
+        let q = Mat::from_vec(1, 2, vec![10.0, 0.0]);
+        let k = Mat::from_vec(2, 2, vec![10.0, 0.0, -10.0, 0.0]);
+        let v = Mat::from_vec(2, 2, vec![1.0, 2.0, -5.0, -6.0]);
+        let o = attention(&q, &k, &v, Some(1.0), None);
+        assert!((o.at(0, 0) - 1.0).abs() < 1e-6);
+        assert!((o.at(0, 1) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn safe_softmax_handles_huge_scores() {
+        let q = Mat::from_vec(1, 1, vec![1000.0]);
+        let k = Mat::from_vec(2, 1, vec![1.0, 0.9]);
+        let v = Mat::from_vec(2, 1, vec![1.0, 0.0]);
+        let o = attention(&q, &k, &v, Some(1.0), None);
+        assert!(o.at(0, 0).is_finite());
+        assert!(o.at(0, 0) > 0.999);
+    }
+
+    #[test]
+    fn mask_excludes_keys() {
+        let q = Mat::from_vec(1, 1, vec![0.0]);
+        let k = Mat::from_vec(3, 1, vec![1.0, 1.0, 1.0]);
+        let v = Mat::from_vec(3, 1, vec![1.0, 100.0, 3.0]);
+        let mask = vec![true, false, true];
+        let o = attention(&q, &k, &v, None, Some(&mask));
+        assert!((o.at(0, 0) - 2.0).abs() < 1e-6); // mean of 1 and 3
+    }
+}

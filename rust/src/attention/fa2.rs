@@ -1,0 +1,136 @@
+//! FlashAttention-2 streaming recurrence (paper Alg. 2) in f32 — the
+//! all-floating-point baseline design ('FA-2') of the hardware evaluation.
+//!
+//! Single pass: per key, update the running max `m_i`, rescale the
+//! exponential sum `l_i` and output `o_i` by `e^{m_{i-1}-m_i}`, accumulate
+//! `e^{s_i-m_i}` terms, divide once at the end.
+
+use crate::tensor::{dot_f32, Mat};
+
+/// Partial FA-2 state for one query (the `(m, l, o)` triplet a block-FAU
+/// hands to the ACC cascade in Fig. 2 — before the final division).
+#[derive(Clone, Debug)]
+pub struct Fa2State {
+    pub m: f32,
+    pub ell: f32,
+    pub o: Vec<f32>,
+}
+
+impl Fa2State {
+    pub fn new(dv: usize) -> Fa2State {
+        Fa2State { m: f32::NEG_INFINITY, ell: 0.0, o: vec![0.0; dv] }
+    }
+
+    /// One inner-loop step of Alg. 2 (lines 3-6) given score `s` and value
+    /// row `vrow`.
+    #[inline]
+    pub fn step(&mut self, s: f32, vrow: &[f32]) {
+        let m_new = self.m.max(s);
+        let alpha = if self.m == f32::NEG_INFINITY { 0.0 } else { (self.m - m_new).exp() };
+        let beta = (s - m_new).exp();
+        self.ell = self.ell * alpha + beta;
+        for (o, &vv) in self.o.iter_mut().zip(vrow) {
+            *o = *o * alpha + beta * vv;
+        }
+        self.m = m_new;
+    }
+
+    /// Final normalization (line 8).
+    pub fn finalize(&self) -> Vec<f32> {
+        self.o.iter().map(|&o| o / self.ell).collect()
+    }
+}
+
+/// Alg. 2 over all queries.
+pub fn attention(q: &Mat, k: &Mat, v: &Mat, scale: Option<f32>, mask: Option<&[bool]>) -> Mat {
+    let states = partial_states(q, k, v, scale, mask);
+    let mut out = Mat::zeros(q.rows, v.cols);
+    for (bi, st) in states.iter().enumerate() {
+        out.row_mut(bi).copy_from_slice(&st.finalize());
+    }
+    out
+}
+
+/// Run the inner loop only (no division) — one KV block's partial result.
+pub fn partial_states(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    scale: Option<f32>,
+    mask: Option<&[bool]>,
+) -> Vec<Fa2State> {
+    let (b, d) = (q.rows, q.cols);
+    let n = k.rows;
+    assert_eq!(k.cols, d);
+    let scale = scale.unwrap_or(1.0 / (d as f32).sqrt());
+    let mut states: Vec<Fa2State> = (0..b).map(|_| Fa2State::new(v.cols)).collect();
+    for bi in 0..b {
+        let qrow = q.row(bi);
+        for i in 0..n {
+            if mask.map(|m| !m[bi * n + i]).unwrap_or(false) {
+                continue;
+            }
+            let s = dot_f32(qrow, k.row(i)) * scale;
+            states[bi].step(s, v.row(i));
+        }
+    }
+    states
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::exact;
+    use crate::proptest::{check, Rng};
+
+    #[test]
+    fn matches_exact_attention_property() {
+        check(
+            "fa2 == exact",
+            23,
+            25,
+            |rng: &mut Rng| {
+                let (b, n, d) = (1 + rng.below(3) as usize, 4 + rng.below(60) as usize, 16usize);
+                (
+                    Mat::from_vec(b, d, rng.normal_vec(b * d)),
+                    Mat::from_vec(n, d, rng.normal_vec(n * d)),
+                    Mat::from_vec(n, d, rng.normal_vec(n * d)),
+                )
+            },
+            |(q, k, v)| {
+                let diff = exact::attention(q, k, v, None, None)
+                    .max_abs_diff(&attention(q, k, v, None, None));
+                if diff < 1e-4 { Ok(()) } else { Err(format!("diff {diff}")) }
+            },
+        );
+    }
+
+    #[test]
+    fn streaming_state_invariants() {
+        // ell grows monotonically when max doesn't change; o stays finite
+        let mut st = Fa2State::new(2);
+        let mut prev_ell = 0.0;
+        for i in 0..50 {
+            st.step(-(i as f32) * 0.01, &[1.0, -1.0]);
+            assert!(st.ell.is_finite() && st.ell >= prev_ell * 0.999);
+            prev_ell = st.ell;
+        }
+        let o = st.finalize();
+        assert!((o[0] - 1.0).abs() < 1e-6);
+        assert!((o[1] + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn descending_vs_ascending_scores_agree() {
+        // the online rescaling must make result order-independent
+        let v = Mat::from_vec(4, 1, vec![1.0, 2.0, 3.0, 4.0]);
+        let k_asc = Mat::from_vec(4, 1, vec![0.1, 0.2, 0.3, 0.4]);
+        let q = Mat::from_vec(1, 1, vec![5.0]);
+        let o1 = attention(&q, &k_asc, &v, Some(1.0), None);
+        // reversed key/value order
+        let k_desc = Mat::from_vec(4, 1, vec![0.4, 0.3, 0.2, 0.1]);
+        let v_rev = Mat::from_vec(4, 1, vec![4.0, 3.0, 2.0, 1.0]);
+        let o2 = attention(&q, &k_desc, &v_rev, Some(1.0), None);
+        assert!(o1.max_abs_diff(&o2) < 1e-5);
+    }
+}

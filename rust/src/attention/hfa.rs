@@ -1,0 +1,509 @@
+//! H-FA: the paper's hybrid float/log-domain FlashAttention-2 datapath
+//! (Sections IV-V), in two tiers:
+//!
+//! * the **bit-exact integer path** — Q9.7 LNS accumulation with
+//!   Mitchell's approximation and the 8-segment PWL, identical to the
+//!   Pallas kernel and the python `hfa_attention_int` spec (pinned by
+//!   golden vectors);
+//! * the **functional f64 path** with one switch per approximation
+//!   source, backing the Table III error-attribution study.
+
+use crate::arith::bf16::Bf16;
+use crate::arith::fix::{quant_diff_q7, CLAMP_LO, FRAC_ONE, LOG2E_F32};
+use crate::arith::lns::{from_bf16_traced, lns_add_traced, Lns, LnsVec};
+use crate::arith::mitchell::MitchellHistogram;
+use crate::arith::pwl;
+use crate::tensor::{dot_f32, Mat};
+
+/// Partial H-FA state for one query: the `(m, sign, log|O|)` triplet of
+/// Fig. 4, where `O = [ell, o]` has `d+1` LNS lanes (lane 0 = ell).
+#[derive(Clone, Debug)]
+pub struct HfaState {
+    pub m: f32,
+    pub acc: LnsVec,
+}
+
+impl HfaState {
+    pub fn new(dv: usize) -> HfaState {
+        HfaState { m: f32::NEG_INFINITY, acc: LnsVec::zeros(dv + 1) }
+    }
+
+    /// One FAU step (Eq. 14): score `s` (f32, float domain) and the value
+    /// row already converted to LNS (`d+1` lanes, lane 0 = LNS one).
+    #[inline]
+    pub fn step(&mut self, s: f32, v_lns: &LnsVec, hist: &mut Option<&mut MitchellHistogram>) {
+        let m_new = self.m.max(s);
+        let dm_q = quant_diff_q7(self.m - m_new); // (m_{i-1} - m_i) log2 e
+        let ds_q = quant_diff_q7(s - m_new); //      (s_i - m_i) log2 e
+        self.m = m_new;
+        if hist.is_none() {
+            // hot path (see EXPERIMENTS.md §Perf): slice-wise, no Option
+            // checks or struct shuffling per lane — bit-identical results
+            step_lanes_fast(
+                &mut self.acc.signs,
+                &mut self.acc.logs,
+                &v_lns.signs,
+                &v_lns.logs,
+                dm_q,
+                ds_q,
+            );
+            return;
+        }
+        for i in 0..self.acc.len() {
+            let a = self.acc.get(i).scaled(dm_q);
+            let b = v_lns.get(i).scaled(ds_q);
+            let r = lns_add_traced(a, b, hist.as_deref_mut());
+            self.acc.set(i, r);
+        }
+    }
+
+    /// LogDiv + back-conversion (Eqs. 15, 22): divide every `o` lane by
+    /// the `ell` lane with a fixed-point subtraction, convert to BF16.
+    pub fn finalize(&self) -> Vec<f32> {
+        let ell = self.acc.get(0);
+        (1..self.acc.len())
+            .map(|i| {
+                let o = self.acc.get(i);
+                if o.is_zero() {
+                    return 0.0;
+                }
+                let r = Lns { sign: o.sign ^ ell.sign, log: o.log - ell.log };
+                r.to_bf16().to_f32()
+            })
+            .collect()
+    }
+}
+
+/// Slice-wise Eq.-14 lane update — the profiled hot loop of the whole
+/// emulation stack (one call per key per query).  Semantically identical
+/// to `Lns::scaled` + `lns_add` per lane; kept branch-light so LLVM can
+/// keep everything in registers.
+#[inline]
+fn step_lanes_fast(
+    acc_s: &mut [i32],
+    acc_l: &mut [i32],
+    v_s: &[i32],
+    v_l: &[i32],
+    dm_q: i32,
+    ds_q: i32,
+) {
+    use crate::arith::fix::{is_log_zero, LOG_ZERO};
+    let it = acc_s
+        .iter_mut()
+        .zip(acc_l.iter_mut())
+        .zip(v_s.iter().zip(v_l.iter()));
+    for ((sa_m, la_m), (&sb, &lb)) in it {
+        let (sa, la) = (*sa_m, *la_m);
+        let a_zero = is_log_zero(la);
+        let b_zero = is_log_zero(lb);
+        if a_zero | b_zero {
+            if a_zero & b_zero {
+                *la_m = LOG_ZERO;
+                *sa_m = 0;
+            } else if a_zero {
+                *sa_m = sb;
+                *la_m = lb + ds_q;
+            } else {
+                *la_m = la + dm_q;
+            }
+            continue;
+        }
+        let a = la + dm_q;
+        let b = lb + ds_q;
+        let dlt = a - b;
+        let dabs = dlt.abs();
+        let r = pwl::pow2_neg_q7(dabs);
+        let mx = if dlt > 0 { a } else { b };
+        *la_m = if sa == sb { mx + r } else { mx - r };
+        *sa_m = if dlt > 0 { sa } else { sb };
+    }
+}
+
+/// Convert a value row (f32, BF16-valued) to `d+1` LNS lanes with the
+/// prepended constant-one lane (Eq. 12's `V = [1, v]`).
+pub fn value_to_lns(vrow: &[f32], hist: &mut Option<&mut MitchellHistogram>) -> LnsVec {
+    let mut out = LnsVec::zeros(vrow.len() + 1);
+    out.set(0, Lns { sign: 0, log: 0 }); // LNS of 1.0
+    for (i, &x) in vrow.iter().enumerate() {
+        out.set(i + 1, from_bf16_traced(Bf16::from_f32(x), hist.as_deref_mut()));
+    }
+    out
+}
+
+/// Bit-exact H-FA attention.  `q (B,d)`, `k/v (N,d)` (f32 storage, BF16
+/// values), optional mask, optional Fig.-5 histogram recorder.
+pub fn attention(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    scale: Option<f32>,
+    mask: Option<&[bool]>,
+    hist: &mut Option<&mut MitchellHistogram>,
+) -> Mat {
+    let states = partial_states(q, k, v, scale, mask, hist);
+    finalize_states(&states, v.cols)
+}
+
+/// Inner loop only (no division): one KV block's `(m, sign, log)` triplet
+/// per query.
+pub fn partial_states(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    scale: Option<f32>,
+    mask: Option<&[bool]>,
+    hist: &mut Option<&mut MitchellHistogram>,
+) -> Vec<HfaState> {
+    let (b, d) = (q.rows, q.cols);
+    let n = k.rows;
+    assert_eq!(k.cols, d);
+    let scale = scale.unwrap_or(1.0 / (d as f32).sqrt());
+
+    // value rows converted once (the only linear->log conversion needed)
+    let v_lns: Vec<LnsVec> = (0..n).map(|i| value_to_lns(v.row(i), hist)).collect();
+
+    let run_query = |bi: usize, hist: &mut Option<&mut MitchellHistogram>| {
+        let mut st = HfaState::new(v.cols);
+        let qrow = q.row(bi);
+        for i in 0..n {
+            if mask.map(|m| !m[bi * n + i]).unwrap_or(false) {
+                continue;
+            }
+            let s = dot_f32(qrow, k.row(i)) * scale;
+            st.step(s, &v_lns[i], hist);
+        }
+        st
+    };
+
+    // queries are independent (each FAU owns its state) — fan the batch
+    // out across threads on the untraced hot path (EXPERIMENTS.md §Perf)
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if hist.is_none() && b > 1 && threads > 1 {
+        let chunk = b.div_ceil(threads.min(b));
+        let mut states: Vec<Option<HfaState>> = (0..b).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            for (t, out_chunk) in states.chunks_mut(chunk).enumerate() {
+                let run = &run_query;
+                scope.spawn(move || {
+                    for (j, slot) in out_chunk.iter_mut().enumerate() {
+                        *slot = Some(run(t * chunk + j, &mut None));
+                    }
+                });
+            }
+        });
+        return states.into_iter().map(|s| s.unwrap()).collect();
+    }
+
+    (0..b).map(|bi| run_query(bi, hist)).collect()
+}
+
+/// Replay the LNS pipeline from a precomputed score matrix `(B, N)` —
+/// used by golden-vector replay to pin bit-exactness independent of
+/// dot-product association order.
+pub fn attention_from_scores(scores: &Mat, v: &Mat) -> Mat {
+    let (b, n) = (scores.rows, scores.cols);
+    let v_lns: Vec<LnsVec> = (0..n).map(|i| value_to_lns(v.row(i), &mut None)).collect();
+    let mut states: Vec<HfaState> = (0..b).map(|_| HfaState::new(v.cols)).collect();
+    for bi in 0..b {
+        for i in 0..n {
+            states[bi].step(scores.at(bi, i), &v_lns[i], &mut None);
+        }
+    }
+    finalize_states(&states, v.cols)
+}
+
+fn finalize_states(states: &[HfaState], dv: usize) -> Mat {
+    let mut out = Mat::zeros(states.len(), dv);
+    for (bi, st) in states.iter().enumerate() {
+        out.row_mut(bi).copy_from_slice(&st.finalize());
+    }
+    out
+}
+
+/// 2D-parallel H-FA (Fig. 2): split KV into `num_blocks`, run independent
+/// partial FAUs, merge with the log-domain ACC (Eq. 16), then LogDiv.
+pub fn attention_blocked(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    num_blocks: usize,
+    scale: Option<f32>,
+    hist: &mut Option<&mut MitchellHistogram>,
+) -> Mat {
+    assert_eq!(k.rows % num_blocks, 0, "N must divide into KV blocks");
+    let step = k.rows / num_blocks;
+    let mut acc: Option<Vec<HfaState>> = None;
+    for blk in 0..num_blocks {
+        let kb = k.rows_slice(blk * step, (blk + 1) * step);
+        let vb = v.rows_slice(blk * step, (blk + 1) * step);
+        let st = partial_states(q, &kb, &vb, scale, None, hist);
+        acc = Some(match acc {
+            None => st,
+            Some(prev) => prev
+                .into_iter()
+                .zip(st)
+                .map(|(a, b)| super::merge::merge_hfa(&a, &b, hist))
+                .collect(),
+        });
+    }
+    finalize_states(&acc.unwrap(), v.cols)
+}
+
+// ---------------------------------------------------------------------------
+// Functional f64 path with ablation switches (Table III)
+// ---------------------------------------------------------------------------
+
+/// Ablation switches for the three H-FA error sources.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EmuConfig {
+    /// (a) Q9.7 fixed-point quantization + [-15, 0] clamp of score diffs.
+    pub quant: bool,
+    /// (b) Mitchell's `log2(1 +- x) ~= +-x` (Eqs. 17, 18, 22).
+    pub mitchell: bool,
+    /// (c) 8-segment PWL for `2^-f` (Eq. 19).
+    pub pwl: bool,
+}
+
+impl Default for EmuConfig {
+    fn default() -> Self {
+        EmuConfig { quant: true, mitchell: true, pwl: true }
+    }
+}
+
+impl EmuConfig {
+    pub fn all_on() -> Self {
+        Self::default()
+    }
+
+    pub fn all_off() -> Self {
+        EmuConfig { quant: false, mitchell: false, pwl: false }
+    }
+}
+
+fn q_emu(x: f64, cfg: EmuConfig) -> f64 {
+    // score-difference quantization (natural-log -> log2 units)
+    let x = if x.is_nan() { f64::from(CLAMP_LO) } else { x };
+    if cfg.quant {
+        let c = x.clamp(CLAMP_LO as f64, 0.0);
+        let t = (c as f32) * LOG2E_F32;
+        ((t as f64) * FRAC_ONE as f64).floor() / FRAC_ONE as f64
+    } else {
+        x * LOG2E_F32 as f64
+    }
+}
+
+fn log2_value_emu(v: Bf16, cfg: EmuConfig) -> (i32, f64) {
+    if v.is_zero_or_subnormal() {
+        return (v.sign() as i32, f64::NEG_INFINITY);
+    }
+    let e = v.exponent() as f64 - 127.0;
+    let mant = v.mantissa() as f64 / 128.0;
+    let l = if cfg.mitchell { e + mant } else { e + (1.0 + mant).log2() };
+    (v.sign() as i32, l)
+}
+
+fn pow2_neg_emu(d: f64, cfg: EmuConfig) -> f64 {
+    let d = if d.is_finite() { d } else { 1e9 };
+    if cfg.pwl {
+        pwl::pow2_neg_pwl_f64(d)
+    } else {
+        2f64.powf(-d.min(1000.0))
+    }
+}
+
+fn lns_add_emu(sa: i32, a: f64, sb: i32, b: f64, cfg: EmuConfig) -> (i32, f64) {
+    if a == f64::NEG_INFINITY {
+        if b == f64::NEG_INFINITY {
+            return (0, f64::NEG_INFINITY);
+        }
+        return (sb, b);
+    }
+    if b == f64::NEG_INFINITY {
+        return (sa, a);
+    }
+    let dist = (a - b).abs();
+    let x = pow2_neg_emu(dist, cfg);
+    let mx = a.max(b);
+    let delta = if cfg.mitchell {
+        if sa == sb { x } else { -x }
+    } else {
+        let lin: f64 = if sa == sb { 1.0 + x } else { (1.0 - x).max(1e-300) };
+        lin.log2()
+    };
+    let sign = if a > b { sa } else { sb };
+    (sign, mx + delta)
+}
+
+/// Functional f64 H-FA with ablation switches (Table III driver).
+pub fn attention_emu(q: &Mat, k: &Mat, v: &Mat, cfg: EmuConfig, scale: Option<f32>) -> Mat {
+    attention_emu_masked(q, k, v, cfg, scale, None)
+}
+
+/// `attention_emu` with an optional `(B, N)` mask (true = attend).
+pub fn attention_emu_masked(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    cfg: EmuConfig,
+    scale: Option<f32>,
+    mask: Option<&[bool]>,
+) -> Mat {
+    let (b, d) = (q.rows, q.cols);
+    let n = k.rows;
+    let dv = v.cols;
+    let scale = scale.unwrap_or(1.0 / (d as f32).sqrt());
+
+    // value rows (with prepended 1) in the functional log domain
+    let v_log: Vec<Vec<(i32, f64)>> = (0..n)
+        .map(|i| {
+            let mut row = Vec::with_capacity(dv + 1);
+            row.push((0, 0.0));
+            for &x in v.row(i) {
+                row.push(log2_value_emu(Bf16::from_f32(x), cfg));
+            }
+            row
+        })
+        .collect();
+
+    let mut out = Mat::zeros(b, dv);
+    for bi in 0..b {
+        let qrow = q.row(bi);
+        let mut m = f32::NEG_INFINITY;
+        let mut signs = vec![0i32; dv + 1];
+        let mut logs = vec![f64::NEG_INFINITY; dv + 1];
+        for i in 0..n {
+            if mask.map(|m| !m[bi * n + i]).unwrap_or(false) {
+                continue;
+            }
+            let s = dot_f32(qrow, k.row(i)) * scale;
+            let m_new = m.max(s);
+            let dm = q_emu((m - m_new) as f64, cfg);
+            let ds = q_emu((s - m_new) as f64, cfg);
+            for lane in 0..=dv {
+                let a = logs[lane] + dm;
+                let (sv, lv) = v_log[i][lane];
+                let bb = lv + ds;
+                let (sn, ln) = lns_add_emu(signs[lane], a, sv, bb, cfg);
+                signs[lane] = sn;
+                logs[lane] = ln;
+            }
+            m = m_new;
+        }
+        for j in 0..dv {
+            let la = logs[j + 1] - logs[0];
+            let sgn = signs[j + 1] ^ signs[0];
+            let mag = if la == f64::NEG_INFINITY || la.is_nan() {
+                0.0
+            } else if cfg.mitchell {
+                // Eq. 22 back-conversion: 2^(I+F) ~= 2^I (1+F)
+                let ip = la.floor();
+                2f64.powf(ip) * (1.0 + (la - ip))
+            } else {
+                2f64.powf(la)
+            };
+            out.set(bi, j, if sgn == 1 { -mag as f32 } else { mag as f32 });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::exact;
+    use crate::proptest::Rng;
+
+    fn rand_case(rng: &mut Rng, b: usize, n: usize, d: usize) -> (Mat, Mat, Mat) {
+        (
+            Mat::from_vec(b, d, rng.normal_vec(b * d)).round_bf16(),
+            Mat::from_vec(n, d, rng.normal_vec(n * d)).round_bf16(),
+            Mat::from_vec(n, d, rng.normal_vec(n * d)).round_bf16(),
+        )
+    }
+
+    #[test]
+    fn blocked_equals_unblocked_within_merge_error() {
+        // Eq. 16 merging is itself approximate; outputs stay close
+        let mut rng = Rng::new(31);
+        let (q, k, v) = rand_case(&mut rng, 2, 64, 16);
+        let a = attention(&q, &k, &v, None, None, &mut None);
+        let b = attention_blocked(&q, &k, &v, 4, None, &mut None);
+        let rel = b.rel_rms(&a);
+        assert!(rel < 0.7, "blocked deviates too much: {rel}");
+    }
+
+    #[test]
+    fn emu_all_on_tracks_int_path() {
+        let mut rng = Rng::new(37);
+        let (q, k, v) = rand_case(&mut rng, 2, 32, 8);
+        let int_path = attention(&q, &k, &v, None, None, &mut None);
+        let emu = attention_emu(&q, &k, &v, EmuConfig::all_on(), None);
+        // emu carries f64 logs (no per-step requantization) so small
+        // divergence is expected; they must agree to ~15%
+        let rel = emu.rel_rms(&int_path);
+        assert!(rel < 0.15, "emu vs int rel {rel}");
+    }
+
+    #[test]
+    fn emu_all_off_matches_exact() {
+        let mut rng = Rng::new(41);
+        let (q, k, v) = rand_case(&mut rng, 2, 32, 8);
+        let ex = exact::attention(&q, &k, &v, None, None);
+        let emu = attention_emu(&q, &k, &v, EmuConfig::all_off(), None);
+        let rel = emu.rel_rms(&ex);
+        assert!(rel < 0.02, "all-off emu should be ~exact, rel {rel}");
+    }
+
+    #[test]
+    fn mitchell_dominates_error_budget() {
+        // the Table III headline: disabling Mitchell removes >80% of error
+        let mut rng = Rng::new(43);
+        let (q, k, v) = rand_case(&mut rng, 4, 64, 16);
+        let ex = exact::attention(&q, &k, &v, None, None);
+        let err_all = attention_emu(&q, &k, &v, EmuConfig::all_on(), None).rel_rms(&ex);
+        let err_nomit = attention_emu(
+            &q,
+            &k,
+            &v,
+            EmuConfig { mitchell: false, ..EmuConfig::all_on() },
+            None,
+        )
+        .rel_rms(&ex);
+        assert!(err_nomit < 0.2 * err_all, "all {err_all}, no-mitchell {err_nomit}");
+    }
+
+    #[test]
+    fn histogram_gets_filled() {
+        let mut rng = Rng::new(47);
+        let (q, k, v) = rand_case(&mut rng, 2, 16, 8);
+        let mut h = MitchellHistogram::new(64);
+        attention(&q, &k, &v, None, None, &mut Some(&mut h));
+        assert!(h.total > 0);
+        // paper Fig. 5: most inputs concentrate at small x
+        assert!(h.mass_below(0.5) > 0.5);
+    }
+
+    #[test]
+    fn zero_values_give_zero_output() {
+        let q = Mat::from_vec(1, 4, vec![1.0, -0.5, 0.25, 0.0]);
+        let k = Mat::from_vec(8, 4, vec![0.1; 32]);
+        let v = Mat::zeros(8, 4);
+        let o = attention(&q, &k, &v, None, None, &mut None);
+        assert_eq!(o.data, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn ell_lane_positive_and_growing() {
+        // ell accumulates positive terms only -> sign 0 and log grows
+        let mut st = HfaState::new(2);
+        let v_lns = value_to_lns(&[0.5, -0.5], &mut None);
+        let mut prev = i32::MIN;
+        for i in 0..20 {
+            st.step(i as f32 * 0.1, &v_lns, &mut None);
+            let ell = st.acc.get(0);
+            assert_eq!(ell.sign, 0);
+            assert!(ell.log >= prev || ell.log >= 0, "ell shrank unexpectedly");
+            prev = ell.log;
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! Lazy-softmax-division attention (paper Alg. 1): two passes over the
+//! keys — find the global max first, then accumulate `e^{s_i - m_N} v_i`
+//! and the exponential sum, dividing once at the end.  This is the
+//! baseline FlashAttention-2 improves on (no second pass needed).
+
+use crate::tensor::{dot_f32, Mat};
+
+/// Alg. 1 in f32, matching the hardware evaluation order.
+pub fn attention(q: &Mat, k: &Mat, v: &Mat, scale: Option<f32>, mask: Option<&[bool]>) -> Mat {
+    let (b, d) = (q.rows, q.cols);
+    let n = k.rows;
+    let dv = v.cols;
+    let scale = scale.unwrap_or(1.0 / (d as f32).sqrt());
+    let mut out = Mat::zeros(b, dv);
+
+    for bi in 0..b {
+        let qrow = q.row(bi);
+        let valid = |i: usize| mask.map(|m| m[bi * n + i]).unwrap_or(true);
+
+        // pass 1 (lines 2-5): scores and running max
+        let mut scores = vec![f32::NEG_INFINITY; n];
+        let mut m = f32::NEG_INFINITY;
+        for i in 0..n {
+            if valid(i) {
+                scores[i] = dot_f32(qrow, k.row(i)) * scale;
+                m = m.max(scores[i]);
+            }
+        }
+
+        // pass 2 (lines 6-10): fused accumulation with the *final* max
+        let mut ell = 0.0f32;
+        let mut acc = vec![0.0f32; dv];
+        for i in 0..n {
+            if !valid(i) {
+                continue;
+            }
+            let f = (scores[i] - m).exp();
+            ell += f;
+            for (a, &vv) in acc.iter_mut().zip(v.row(i)) {
+                *a += f * vv;
+            }
+        }
+        // line 11: single deferred division
+        for (j, a) in acc.iter().enumerate() {
+            out.set(bi, j, a / ell);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::exact;
+    use crate::proptest::{check, Rng};
+
+    #[test]
+    fn matches_exact_attention() {
+        check(
+            "lazy == exact",
+            17,
+            25,
+            |rng: &mut Rng| {
+                let (b, n, d) = (1 + rng.below(4) as usize, 8 + rng.below(56) as usize, 8usize);
+                (
+                    Mat::from_vec(b, d, rng.normal_vec(b * d)),
+                    Mat::from_vec(n, d, rng.normal_vec(n * d)),
+                    Mat::from_vec(n, d, rng.normal_vec(n * d)),
+                )
+            },
+            |(q, k, v)| {
+                let ex = exact::attention(q, k, v, None, None);
+                let lz = attention(q, k, v, None, None);
+                let diff = ex.max_abs_diff(&lz);
+                if diff < 1e-4 {
+                    Ok(())
+                } else {
+                    Err(format!("diff {diff}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn single_key_is_identity() {
+        let q = Mat::from_vec(1, 2, vec![0.3, -0.7]);
+        let k = Mat::from_vec(1, 2, vec![1.0, 1.0]);
+        let v = Mat::from_vec(1, 2, vec![42.0, -7.0]);
+        let o = attention(&q, &k, &v, None, None);
+        assert_eq!(o.data, vec![42.0, -7.0]);
+    }
+}

@@ -1,0 +1,121 @@
+//! Merging partial attention results from parallel KV sub-blocks: the ACC
+//! unit of Fig. 2/Fig. 4 — Eq. (1) in floating point for FA-2, Eq. (16)
+//! in the log domain for H-FA.
+
+use crate::arith::fix::quant_diff_q7;
+use crate::arith::lns::lns_add_traced;
+use crate::arith::mitchell::MitchellHistogram;
+
+use super::fa2::Fa2State;
+use super::hfa::HfaState;
+
+/// FA-2 ACC (Eq. 1): floating-point rescale-and-add of two partial
+/// `(m, l, o)` triplets.
+pub fn merge_fa2(a: &Fa2State, b: &Fa2State) -> Fa2State {
+    let m_n = a.m.max(b.m);
+    let ea = if a.m == f32::NEG_INFINITY { 0.0 } else { (a.m - m_n).exp() };
+    let eb = if b.m == f32::NEG_INFINITY { 0.0 } else { (b.m - m_n).exp() };
+    Fa2State {
+        m: m_n,
+        ell: a.ell * ea + b.ell * eb,
+        o: a.o.iter().zip(&b.o).map(|(&x, &y)| x * ea + y * eb).collect(),
+    }
+}
+
+/// H-FA log-domain ACC (Eq. 16): quantized max-difference shifts + LNS
+/// lane-wise addition.  Only the max comparison stays in floating point.
+pub fn merge_hfa(
+    a: &HfaState,
+    b: &HfaState,
+    hist: &mut Option<&mut MitchellHistogram>,
+) -> HfaState {
+    debug_assert_eq!(a.acc.len(), b.acc.len());
+    let m_n = a.m.max(b.m);
+    let da = quant_diff_q7(a.m - m_n);
+    let db = quant_diff_q7(b.m - m_n);
+    let mut out = HfaState::new(a.acc.len() - 1);
+    out.m = m_n;
+    for i in 0..a.acc.len() {
+        let la = a.acc.get(i).scaled(da);
+        let lb = b.acc.get(i).scaled(db);
+        out.acc.set(i, lns_add_traced(la, lb, hist.as_deref_mut()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{exact, fa2, hfa};
+    use crate::proptest::Rng;
+    use crate::Mat;
+
+    #[test]
+    fn fa2_merge_equals_sequential() {
+        // merging two half-block partials == streaming the full sequence
+        let mut rng = Rng::new(3);
+        let d = 8;
+        let q = Mat::from_vec(1, d, rng.normal_vec(d));
+        let k = Mat::from_vec(32, d, rng.normal_vec(32 * d));
+        let v = Mat::from_vec(32, d, rng.normal_vec(32 * d));
+        let full = fa2::attention(&q, &k, &v, None, None);
+
+        let (ka, kb) = (k.rows_slice(0, 16), k.rows_slice(16, 32));
+        let (va, vb) = (v.rows_slice(0, 16), v.rows_slice(16, 32));
+        let sa = fa2::partial_states(&q, &ka, &va, None, None);
+        let sb = fa2::partial_states(&q, &kb, &vb, None, None);
+        let merged = merge_fa2(&sa[0], &sb[0]);
+        let out = merged.finalize();
+        for j in 0..d {
+            assert!((out[j] - full.at(0, j)).abs() < 1e-5, "lane {j}");
+        }
+    }
+
+    #[test]
+    fn fa2_merge_commutative() {
+        let mut rng = Rng::new(13);
+        let d = 4;
+        let q = Mat::from_vec(1, d, rng.normal_vec(d));
+        let k = Mat::from_vec(16, d, rng.normal_vec(16 * d));
+        let v = Mat::from_vec(16, d, rng.normal_vec(16 * d));
+        let sa = fa2::partial_states(&q, &k.rows_slice(0, 8), &v.rows_slice(0, 8), None, None);
+        let sb = fa2::partial_states(&q, &k.rows_slice(8, 16), &v.rows_slice(8, 16), None, None);
+        let ab = merge_fa2(&sa[0], &sb[0]);
+        let ba = merge_fa2(&sb[0], &sa[0]);
+        assert!((ab.ell - ba.ell).abs() < 1e-5);
+        for j in 0..d {
+            assert!((ab.o[j] - ba.o[j]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn hfa_merge_close_to_exact_merge() {
+        // log-domain merge approximates the float merge
+        let mut rng = Rng::new(29);
+        let d = 8;
+        let q = Mat::from_vec(2, d, rng.normal_vec(2 * d)).round_bf16();
+        let k = Mat::from_vec(32, d, rng.normal_vec(32 * d)).round_bf16();
+        let v = Mat::from_vec(32, d, rng.normal_vec(32 * d)).round_bf16();
+        let merged = hfa::attention_blocked(&q, &k, &v, 2, None, &mut None);
+        let ex = exact::attention(&q, &k, &v, None, None);
+        // same error regime as unblocked H-FA on mixed-sign values
+        assert!(merged.rel_rms(&ex) < 1.0);
+        assert_eq!(merged.rows, 2);
+    }
+
+    #[test]
+    fn hfa_merge_with_empty_block_is_identity() {
+        // a block that saw no keys (m = -inf, all lanes zero) must not
+        // perturb the other operand
+        let mut rng = Rng::new(57);
+        let d = 4;
+        let q = Mat::from_vec(1, d, rng.normal_vec(d)).round_bf16();
+        let k = Mat::from_vec(8, d, rng.normal_vec(8 * d)).round_bf16();
+        let v = Mat::from_vec(8, d, rng.normal_vec(8 * d)).round_bf16();
+        let st = hfa::partial_states(&q, &k, &v, None, None, &mut None);
+        let empty = hfa::HfaState::new(d);
+        let merged = merge_hfa(&st[0], &empty, &mut None);
+        assert_eq!(merged.acc, st[0].acc);
+        assert_eq!(merged.m, st[0].m);
+    }
+}

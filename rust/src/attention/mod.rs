@@ -1,0 +1,138 @@
+//! Algorithm-level golden models of attention.
+//!
+//! * [`exact`] — textbook softmax attention (f64 oracle).
+//! * [`lazy`]  — lazy-softmax-division attention (paper Alg. 1).
+//! * [`fa2`]   — FlashAttention-2 streaming recurrence (paper Alg. 2), f32.
+//! * [`hfa`]   — the H-FA hybrid float/log datapath (Eqs. 14-19), both the
+//!   bit-exact integer path (mirrors the Pallas kernel) and the functional
+//!   f64 path with per-approximation ablation switches (Table III).
+//! * [`merge`] — multi-KV-block partial-result merging (Eqs. 1 and 16).
+
+pub mod exact;
+pub mod fa2;
+pub mod hfa;
+pub mod lazy;
+pub mod merge;
+
+use crate::Mat;
+
+/// Which attention implementation to run (CLI / eval suite selector).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Impl {
+    Exact,
+    Lazy,
+    Fa2,
+    Hfa,
+}
+
+impl Impl {
+    pub fn from_str(s: &str) -> anyhow::Result<Impl> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "exact" => Impl::Exact,
+            "lazy" => Impl::Lazy,
+            "fa2" => Impl::Fa2,
+            "hfa" => Impl::Hfa,
+            other => anyhow::bail!("unknown attention impl {other:?}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Impl::Exact => "exact",
+            Impl::Lazy => "lazy",
+            Impl::Fa2 => "fa2",
+            Impl::Hfa => "hfa",
+        }
+    }
+}
+
+/// Dispatch: `q (B,d)`, `k/v (N,d)`, optional `(B,N)` boolean mask
+/// (true = attend), default scale `1/sqrt(d)`.
+pub fn compute(imp: Impl, q: &Mat, k: &Mat, v: &Mat, mask: Option<&[bool]>) -> Mat {
+    match imp {
+        Impl::Exact => exact::attention(q, k, v, None, mask),
+        Impl::Lazy => lazy::attention(q, k, v, None, mask),
+        Impl::Fa2 => fa2::attention(q, k, v, None, mask),
+        Impl::Hfa => hfa::attention(q, k, v, None, mask, &mut None),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::Rng;
+
+    fn rand_mats(rng: &mut Rng, b: usize, n: usize, d: usize) -> (Mat, Mat, Mat) {
+        (
+            Mat::from_vec(b, d, rng.normal_vec(b * d)).round_bf16(),
+            Mat::from_vec(n, d, rng.normal_vec(n * d)).round_bf16(),
+            Mat::from_vec(n, d, rng.normal_vec(n * d)).round_bf16(),
+        )
+    }
+
+    #[test]
+    fn all_impls_agree_on_shape() {
+        let mut rng = Rng::new(11);
+        let (q, k, v) = rand_mats(&mut rng, 3, 32, 16);
+        for imp in [Impl::Exact, Impl::Lazy, Impl::Fa2, Impl::Hfa] {
+            let o = compute(imp, &q, &k, &v, None);
+            assert_eq!((o.rows, o.cols), (3, 16), "{imp:?}");
+        }
+    }
+
+    #[test]
+    fn float_impls_numerically_equal() {
+        // exact, lazy and fa2 are the same function up to f32 rounding
+        let mut rng = Rng::new(5);
+        let (q, k, v) = rand_mats(&mut rng, 4, 64, 32);
+        let ex = compute(Impl::Exact, &q, &k, &v, None);
+        let lz = compute(Impl::Lazy, &q, &k, &v, None);
+        let fa = compute(Impl::Fa2, &q, &k, &v, None);
+        assert!(ex.max_abs_diff(&lz) < 1e-4, "lazy {}", ex.max_abs_diff(&lz));
+        assert!(ex.max_abs_diff(&fa) < 1e-4, "fa2 {}", ex.max_abs_diff(&fa));
+    }
+
+    #[test]
+    fn hfa_tracks_exact_for_positive_values() {
+        // all-positive V: no signed cancellation -> H-FA within a few %
+        let mut rng = Rng::new(9);
+        let (q, k, mut v) = rand_mats(&mut rng, 4, 64, 32);
+        for x in &mut v.data {
+            *x = x.abs().max(0.05);
+        }
+        let v = v.round_bf16();
+        let ex = compute(Impl::Exact, &q, &k, &v, None);
+        let hf = compute(Impl::Hfa, &q, &k, &v, None);
+        let rel = hf.rel_rms(&ex);
+        assert!(rel < 0.08, "rel rms {rel}");
+    }
+
+    #[test]
+    fn mask_restricts_attention() {
+        let mut rng = Rng::new(21);
+        let (q, k, v) = rand_mats(&mut rng, 2, 16, 8);
+        // mask out all but first 4 keys for row 0, all keys valid row 1
+        let mut mask = vec![true; 2 * 16];
+        for i in 4..16 {
+            mask[i] = false;
+        }
+        for imp in [Impl::Exact, Impl::Lazy, Impl::Fa2, Impl::Hfa] {
+            let o = compute(imp, &q, &k, &v, Some(&mask));
+            let k4 = k.rows_slice(0, 4);
+            let v4 = v.rows_slice(0, 4);
+            let q0 = q.rows_slice(0, 1);
+            // row 0 must equal attention over only the first 4 keys,
+            // computed with the *same* scale 1/sqrt(d)
+            let o4 = match imp {
+                Impl::Exact => exact::attention(&q0, &k4, &v4, None, None),
+                Impl::Lazy => lazy::attention(&q0, &k4, &v4, None, None),
+                Impl::Fa2 => fa2::attention(&q0, &k4, &v4, None, None),
+                Impl::Hfa => hfa::attention(&q0, &k4, &v4, None, None, &mut None),
+            };
+            let diff = (0..8)
+                .map(|j| (o.at(0, j) - o4.at(0, j)).abs())
+                .fold(0.0f32, f32::max);
+            assert!(diff < 1e-5, "{imp:?} masked row mismatch {diff}");
+        }
+    }
+}

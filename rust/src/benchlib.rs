@@ -1,0 +1,181 @@
+//! Criterion-style benchmark harness (criterion is unavailable offline —
+//! DESIGN.md §9): warmup + timed iterations, robust statistics, and
+//! markdown/CSV emitters used by every `rust/benches/*` table/figure
+//! regenerator.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// Summary statistics over per-iteration wall times.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut ns: Vec<f64>) -> Stats {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = |q: f64| ns[((ns.len() as f64 - 1.0) * q) as usize];
+        Stats {
+            iters: ns.len(),
+            mean_ns: ns.iter().sum::<f64>() / ns.len() as f64,
+            p50_ns: idx(0.50),
+            p99_ns: idx(0.99),
+            min_ns: ns[0],
+            max_ns: *ns.last().unwrap(),
+        }
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Time `f` with warmup; at most `max_iters` iterations or `budget` total.
+pub fn bench<F: FnMut()>(warmup: usize, max_iters: usize, budget: Duration, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(max_iters);
+    let start = Instant::now();
+    for _ in 0..max_iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+        if start.elapsed() > budget {
+            break;
+        }
+    }
+    Stats::from_samples(samples)
+}
+
+/// A results table that renders to markdown and CSV.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.row(&cells.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n## {}\n", self.title);
+        let line = |cells: &[String], out: &mut String| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(s, " {:<w$} |", c, w = widths[i]);
+            }
+            out.push_str(&s);
+            out.push('\n');
+        };
+        line(&self.headers, &mut out);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&sep, &mut out);
+        for row in &self.rows {
+            line(row, &mut out);
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.join(","));
+        }
+        out
+    }
+
+    /// Print markdown to stdout and persist CSV under
+    /// `target/bench_results/<slug>.csv`.
+    pub fn emit(&self, slug: &str) {
+        print!("{}", self.to_markdown());
+        let dir = results_dir();
+        let _ = fs::create_dir_all(&dir);
+        let path = dir.join(format!("{slug}.csv"));
+        if fs::write(&path, self.to_csv()).is_ok() {
+            println!("(csv: {})", path.display());
+        }
+    }
+}
+
+pub fn results_dir() -> PathBuf {
+    PathBuf::from("target/bench_results")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles_ordered() {
+        let s = Stats::from_samples((1..=100).map(|x| x as f64).collect());
+        assert_eq!(s.min_ns, 1.0);
+        assert_eq!(s.max_ns, 100.0);
+        assert!(s.p50_ns <= s.p99_ns);
+        assert!((s.mean_ns - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_runs_and_measures() {
+        let mut n = 0u64;
+        let s = bench(2, 10, Duration::from_secs(5), || {
+            n += 1;
+        });
+        assert!(s.iters > 0 && s.iters <= 10);
+        assert!(n >= s.iters as u64);
+    }
+
+    #[test]
+    fn table_markdown_and_csv() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("## Demo"));
+        assert!(md.contains("| 1 | 2 |"));
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

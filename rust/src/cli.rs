@@ -1,0 +1,128 @@
+//! Hand-rolled CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (first token NOT included).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(x),
+                Err(_) => bail!("--{name} expects an integer, got {v:?}"),
+            },
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(x),
+                Err(_) => bail!("--{name} expects a number, got {v:?}"),
+            },
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').filter(|s| !s.is_empty()).map(String::from).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        // note: a bare `--flag positional` is ambiguous (the token after a
+        // `--name` is consumed as its value); flags go last or use `=`.
+        let a = parse("serve pos1 --model s1 --impl=hfa --verbose");
+        assert_eq!(a.positional, vec!["serve", "pos1"]);
+        assert_eq!(a.get("model"), Some("s1"));
+        assert_eq!(a.get("impl"), Some("hfa"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn trailing_flag_not_eaten() {
+        let a = parse("--fast");
+        assert!(a.flag("fast"));
+        assert!(a.get("fast").is_none());
+    }
+
+    #[test]
+    fn numeric_accessors() {
+        let a = parse("--n 1024 --scale 0.125");
+        assert_eq!(a.get_usize("n", 1).unwrap(), 1024);
+        assert_eq!(a.get_f64("scale", 0.0).unwrap(), 0.125);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(parse("--n abc").get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn list_accessor() {
+        let a = parse("--sizes s0,s1,s2");
+        assert_eq!(a.get_list("sizes", &[]), vec!["s0", "s1", "s2"]);
+        assert_eq!(a.get_list("other", &["x"]), vec!["x"]);
+    }
+}

@@ -1,0 +1,173 @@
+//! Typed configuration for the accelerator, coordinator and launcher.
+//!
+//! Values resolve in order: built-in defaults < config file (`key=value`
+//! lines) < environment (`HFA_*`) < CLI `--key value`.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::cli::Args;
+
+/// Accelerator geometry (paper Section VI-C defaults: N=1024 tokens in
+/// four 256-row KV sub-blocks, BF16, 500 MHz).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AcceleratorConfig {
+    /// Head dimension d (paper sweeps 32/64/128).
+    pub head_dim: usize,
+    /// Max sequence length held in the KV SRAM buffers.
+    pub seq_len: usize,
+    /// Parallel KV sub-blocks p (block-FAUs per query).
+    pub kv_blocks: usize,
+    /// Query vectors processed in parallel (datapath replication).
+    pub parallel_queries: usize,
+    /// Clock frequency in MHz.
+    pub freq_mhz: f64,
+}
+
+impl Default for AcceleratorConfig {
+    fn default() -> Self {
+        AcceleratorConfig {
+            head_dim: 64,
+            seq_len: 1024,
+            kv_blocks: 4,
+            parallel_queries: 1,
+            freq_mhz: 500.0,
+        }
+    }
+}
+
+impl AcceleratorConfig {
+    pub fn rows_per_block(&self) -> usize {
+        self.seq_len / self.kv_blocks
+    }
+}
+
+/// Coordinator / serving configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoordinatorConfig {
+    /// Max queries per formed batch (one FAU datapath pass).
+    pub max_batch: usize,
+    /// Batch-forming window in microseconds.
+    pub batch_window_us: u64,
+    /// Worker threads executing batches.
+    pub workers: usize,
+    /// Bounded queue depth before backpressure rejects.
+    pub queue_depth: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            max_batch: 16,
+            batch_window_us: 200,
+            workers: 2,
+            queue_depth: 256,
+        }
+    }
+}
+
+/// Full resolved configuration.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    pub accel: AcceleratorConfig,
+    pub coord: CoordinatorConfig,
+}
+
+fn parse_kv_file(path: &Path) -> Result<BTreeMap<String, String>> {
+    let text = fs::read_to_string(path)
+        .with_context(|| format!("reading config {}", path.display()))?;
+    let mut map = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some((k, v)) = line.split_once('=') {
+            map.insert(k.trim().to_string(), v.trim().to_string());
+        }
+    }
+    Ok(map)
+}
+
+impl Config {
+    /// Resolve from optional file + env + CLI args.
+    pub fn resolve(file: Option<&Path>, args: &Args) -> Result<Config> {
+        let mut map = BTreeMap::new();
+        if let Some(p) = file {
+            map.extend(parse_kv_file(p)?);
+        }
+        for (k, v) in std::env::vars() {
+            if let Some(stripped) = k.strip_prefix("HFA_CFG_") {
+                map.insert(stripped.to_ascii_lowercase(), v);
+            }
+        }
+        for (k, v) in &args.options {
+            map.insert(k.replace('-', "_"), v.clone());
+        }
+
+        let mut cfg = Config::default();
+        let get_usize = |map: &BTreeMap<String, String>, k: &str, d: usize| -> Result<usize> {
+            match map.get(k) {
+                None => Ok(d),
+                Some(v) => v.parse().with_context(|| format!("config {k}={v:?}")),
+            }
+        };
+        cfg.accel.head_dim = get_usize(&map, "head_dim", cfg.accel.head_dim)?;
+        cfg.accel.seq_len = get_usize(&map, "seq_len", cfg.accel.seq_len)?;
+        cfg.accel.kv_blocks = get_usize(&map, "kv_blocks", cfg.accel.kv_blocks)?;
+        cfg.accel.parallel_queries =
+            get_usize(&map, "parallel_queries", cfg.accel.parallel_queries)?;
+        if let Some(v) = map.get("freq_mhz") {
+            cfg.accel.freq_mhz = v.parse().context("freq_mhz")?;
+        }
+        cfg.coord.max_batch = get_usize(&map, "max_batch", cfg.coord.max_batch)?;
+        cfg.coord.workers = get_usize(&map, "workers", cfg.coord.workers)?;
+        cfg.coord.queue_depth = get_usize(&map, "queue_depth", cfg.coord.queue_depth)?;
+        if let Some(v) = map.get("batch_window_us") {
+            cfg.coord.batch_window_us = v.parse().context("batch_window_us")?;
+        }
+
+        anyhow::ensure!(
+            cfg.accel.seq_len % cfg.accel.kv_blocks == 0,
+            "seq_len must be divisible by kv_blocks"
+        );
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn defaults_match_paper_setup() {
+        let c = AcceleratorConfig::default();
+        assert_eq!(c.seq_len, 1024);
+        assert_eq!(c.kv_blocks, 4);
+        assert_eq!(c.rows_per_block(), 256);
+        assert_eq!(c.freq_mhz, 500.0);
+    }
+
+    #[test]
+    fn cli_overrides_file() {
+        let dir = std::env::temp_dir().join("hfa_cfg_test");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.txt");
+        let mut f = fs::File::create(&p).unwrap();
+        writeln!(f, "head_dim=32\nkv_blocks=8").unwrap();
+        let args = Args::parse(["--head-dim".into(), "128".into()]);
+        let c = Config::resolve(Some(&p), &args).unwrap();
+        assert_eq!(c.accel.head_dim, 128); // CLI wins
+        assert_eq!(c.accel.kv_blocks, 8); // file applies
+    }
+
+    #[test]
+    fn rejects_bad_geometry() {
+        let args = Args::parse(["--seq-len".into(), "100".into(), "--kv-blocks".into(), "3".into()]);
+        assert!(Config::resolve(None, &args).is_err());
+    }
+}

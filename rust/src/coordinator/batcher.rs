@@ -1,0 +1,142 @@
+//! Dynamic batcher: groups queued requests by KV session into batches of
+//! up to `max_batch`, closing a batch when full or when the forming
+//! window expires — the standard continuous-batching front half.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use super::request::AttentionRequest;
+
+/// A formed batch: all requests share one KV session.
+pub struct Batch {
+    pub session: String,
+    pub requests: Vec<AttentionRequest>,
+}
+
+/// Incremental batch former.  Feed it requests; poll `close_ready` for
+/// batches that hit the size cap, and `close_expired` on ticks.
+pub struct Batcher {
+    max_batch: usize,
+    window: Duration,
+    pending: HashMap<String, (Instant, Vec<AttentionRequest>)>,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, window: Duration) -> Batcher {
+        Batcher { max_batch: max_batch.max(1), window, pending: HashMap::new() }
+    }
+
+    /// Add a request; returns a full batch if the session hit the cap.
+    pub fn push(&mut self, req: AttentionRequest) -> Option<Batch> {
+        let entry = self
+            .pending
+            .entry(req.session.clone())
+            .or_insert_with(|| (Instant::now(), Vec::new()));
+        entry.1.push(req);
+        if entry.1.len() >= self.max_batch {
+            let session = self
+                .pending
+                .iter()
+                .find(|(_, (_, v))| v.len() >= self.max_batch)
+                .map(|(k, _)| k.clone())
+                .unwrap();
+            let (_, reqs) = self.pending.remove(&session).unwrap();
+            return Some(Batch { session, requests: reqs });
+        }
+        None
+    }
+
+    /// Collect every batch whose forming window has expired.
+    pub fn close_expired(&mut self, now: Instant) -> Vec<Batch> {
+        let expired: Vec<String> = self
+            .pending
+            .iter()
+            .filter(|(_, (t0, _))| now.duration_since(*t0) >= self.window)
+            .map(|(k, _)| k.clone())
+            .collect();
+        expired
+            .into_iter()
+            .map(|session| {
+                let (_, requests) = self.pending.remove(&session).unwrap();
+                Batch { session, requests }
+            })
+            .collect()
+    }
+
+    /// Flush everything (shutdown path).
+    pub fn drain(&mut self) -> Vec<Batch> {
+        self.pending
+            .drain()
+            .map(|(session, (_, requests))| Batch { session, requests })
+            .collect()
+    }
+
+    pub fn pending_requests(&self) -> usize {
+        self.pending.values().map(|(_, v)| v.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    fn req(id: u64, session: &str) -> AttentionRequest {
+        let (tx, _rx) = channel();
+        AttentionRequest {
+            id,
+            session: session.into(),
+            query: vec![0.0; 4],
+            arrived: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn batch_closes_at_cap() {
+        let mut b = Batcher::new(3, Duration::from_secs(10));
+        assert!(b.push(req(1, "s")).is_none());
+        assert!(b.push(req(2, "s")).is_none());
+        let batch = b.push(req(3, "s")).expect("full batch");
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(b.pending_requests(), 0);
+    }
+
+    #[test]
+    fn sessions_batch_independently() {
+        let mut b = Batcher::new(2, Duration::from_secs(10));
+        assert!(b.push(req(1, "a")).is_none());
+        assert!(b.push(req(2, "b")).is_none());
+        let batch = b.push(req(3, "a")).expect("session a full");
+        assert_eq!(batch.session, "a");
+        assert_eq!(b.pending_requests(), 1);
+    }
+
+    #[test]
+    fn window_expiry_closes_partial_batches() {
+        let mut b = Batcher::new(100, Duration::from_millis(0));
+        b.push(req(1, "s"));
+        let closed = b.close_expired(Instant::now());
+        assert_eq!(closed.len(), 1);
+        assert_eq!(closed[0].requests.len(), 1);
+    }
+
+    #[test]
+    fn unexpired_batches_stay_pending() {
+        let mut b = Batcher::new(100, Duration::from_secs(60));
+        b.push(req(1, "s"));
+        assert!(b.close_expired(Instant::now()).is_empty());
+        assert_eq!(b.pending_requests(), 1);
+    }
+
+    #[test]
+    fn drain_flushes_all() {
+        let mut b = Batcher::new(100, Duration::from_secs(60));
+        b.push(req(1, "a"));
+        b.push(req(2, "b"));
+        let all = b.drain();
+        assert_eq!(all.len(), 2);
+        assert_eq!(b.pending_requests(), 0);
+    }
+}

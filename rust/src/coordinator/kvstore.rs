@@ -1,0 +1,165 @@
+//! Session-keyed KV buffer manager.
+//!
+//! Models the accelerator's on-chip KV SRAM: a bounded number of resident
+//! sessions (each one `seq_len x d` K and V), LRU eviction when capacity
+//! is exceeded — the coordinator-level counterpart of the paper's
+//! "KV sub-blocks preloaded into local buffers" assumption (Section III-B).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::Mat;
+
+/// One resident session's KV data.
+#[derive(Clone)]
+pub struct KvEntry {
+    pub k: Arc<Mat>,
+    pub v: Arc<Mat>,
+}
+
+struct Inner {
+    capacity: usize,
+    entries: HashMap<String, KvEntry>,
+    /// LRU order, most recent last.
+    lru: Vec<String>,
+    evictions: u64,
+}
+
+/// Thread-safe KV session store with LRU eviction.
+pub struct KvStore {
+    seq_len: usize,
+    head_dim: usize,
+    inner: Mutex<Inner>,
+}
+
+impl KvStore {
+    /// `capacity`: max resident sessions (SRAM budget / per-session bytes).
+    pub fn new(seq_len: usize, head_dim: usize, capacity: usize) -> KvStore {
+        KvStore {
+            seq_len,
+            head_dim,
+            inner: Mutex::new(Inner {
+                capacity: capacity.max(1),
+                entries: HashMap::new(),
+                lru: Vec::new(),
+                evictions: 0,
+            }),
+        }
+    }
+
+    /// Bytes one session occupies (BF16 K + V).
+    pub fn session_bytes(&self) -> usize {
+        2 * self.seq_len * self.head_dim * 2
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    /// Insert (or replace) a session's KV matrices.
+    pub fn put(&self, session: &str, k: Mat, v: Mat) -> Result<()> {
+        if k.rows != self.seq_len || k.cols != self.head_dim {
+            bail!(
+                "K shape {}x{} != store geometry {}x{}",
+                k.rows, k.cols, self.seq_len, self.head_dim
+            );
+        }
+        if v.rows != k.rows || v.cols != k.cols {
+            bail!("V shape mismatch");
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.lru.retain(|s| s != session);
+        g.lru.push(session.to_string());
+        g.entries.insert(
+            session.to_string(),
+            KvEntry { k: Arc::new(k.round_bf16()), v: Arc::new(v.round_bf16()) },
+        );
+        while g.entries.len() > g.capacity {
+            let victim = g.lru.remove(0);
+            g.entries.remove(&victim);
+            g.evictions += 1;
+        }
+        Ok(())
+    }
+
+    /// Fetch a session, refreshing its LRU position.
+    pub fn get(&self, session: &str) -> Option<KvEntry> {
+        let mut g = self.inner.lock().unwrap();
+        if g.entries.contains_key(session) {
+            g.lru.retain(|s| s != session);
+            g.lru.push(session.to_string());
+        }
+        g.entries.get(session).cloned()
+    }
+
+    pub fn resident(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.inner.lock().unwrap().evictions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kv(n: usize, d: usize, fill: f32) -> (Mat, Mat) {
+        (Mat::from_fn(n, d, |_, _| fill), Mat::from_fn(n, d, |_, _| -fill))
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let store = KvStore::new(16, 8, 2);
+        let (k, v) = kv(16, 8, 1.0);
+        store.put("a", k, v).unwrap();
+        let e = store.get("a").unwrap();
+        assert_eq!(e.k.at(0, 0), 1.0);
+        assert_eq!(e.v.at(0, 0), -1.0);
+    }
+
+    #[test]
+    fn rejects_wrong_geometry() {
+        let store = KvStore::new(16, 8, 2);
+        let (k, v) = kv(8, 8, 1.0);
+        assert!(store.put("a", k, v).is_err());
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let store = KvStore::new(4, 4, 2);
+        for (i, name) in ["a", "b", "c"].iter().enumerate() {
+            let (k, v) = kv(4, 4, i as f32);
+            store.put(name, k, v).unwrap();
+        }
+        assert_eq!(store.resident(), 2);
+        assert!(store.get("a").is_none(), "oldest should be evicted");
+        assert!(store.get("b").is_some());
+        assert_eq!(store.evictions(), 1);
+    }
+
+    #[test]
+    fn get_refreshes_lru() {
+        let store = KvStore::new(4, 4, 2);
+        let (k, v) = kv(4, 4, 0.0);
+        store.put("a", k.clone(), v.clone()).unwrap();
+        store.put("b", k.clone(), v.clone()).unwrap();
+        store.get("a"); // refresh a
+        store.put("c", k, v).unwrap(); // evicts b, not a
+        assert!(store.get("a").is_some());
+        assert!(store.get("b").is_none());
+    }
+
+    #[test]
+    fn session_bytes_matches_bf16_kv() {
+        let store = KvStore::new(1024, 64, 1);
+        assert_eq!(store.session_bytes(), 2 * 1024 * 64 * 2);
+    }
+}

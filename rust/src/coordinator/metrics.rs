@@ -1,0 +1,86 @@
+//! Serving metrics: counters + latency reservoir with percentiles.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub accepted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    latencies_us: Mutex<Vec<f64>>,
+}
+
+/// A point-in-time metrics summary.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub accepted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn observe_latency(&self, us: f64) {
+        self.latencies_us.lock().unwrap().push(us);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let mut lat = self.latencies_us.lock().unwrap().clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pick = |q: f64| {
+            if lat.is_empty() {
+                0.0
+            } else {
+                lat[((lat.len() as f64 - 1.0) * q) as usize]
+            }
+        };
+        let batches = self.batches.load(Ordering::Relaxed);
+        Snapshot {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            batches,
+            mean_batch: if batches == 0 {
+                0.0
+            } else {
+                self.batched_requests.load(Ordering::Relaxed) as f64 / batches as f64
+            },
+            p50_us: pick(0.5),
+            p99_us: pick(0.99),
+            mean_us: if lat.is_empty() { 0.0 } else { lat.iter().sum::<f64>() / lat.len() as f64 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_percentiles() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.observe_latency(i as f64);
+        }
+        m.batches.store(10, Ordering::Relaxed);
+        m.batched_requests.store(100, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert!(s.p50_us >= 49.0 && s.p50_us <= 52.0);
+        assert!(s.p99_us >= 98.0);
+        assert_eq!(s.mean_batch, 10.0);
+    }
+}

@@ -1,0 +1,22 @@
+//! The serving coordinator — the L3 system a deployment would run around
+//! the accelerator: bounded ingress with backpressure, a dynamic batcher
+//! (vLLM-router-style), session-keyed KV buffer management, worker threads
+//! owning execution backends (simulated accelerator or PJRT executable),
+//! and metrics.
+//!
+//! Built on std threads + channels (tokio is unavailable offline —
+//! DESIGN.md §9); the architecture is the same: one ingress queue, a
+//! batch-forming stage, N workers, per-request completion channels.
+
+pub mod batcher;
+pub mod backend;
+pub mod kvstore;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use backend::{Backend, BackendFactory, PjrtBackend, SimBackend};
+pub use kvstore::KvStore;
+pub use metrics::Metrics;
+pub use request::{AttentionRequest, AttentionResponse};
+pub use server::Server;

@@ -1,0 +1,35 @@
+//! Request/response types flowing through the coordinator.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// One attention query against a named KV session.
+#[derive(Debug)]
+pub struct AttentionRequest {
+    pub id: u64,
+    /// Session whose KV buffers to attend over.
+    pub session: String,
+    /// The query vector (length = head_dim).
+    pub query: Vec<f32>,
+    pub arrived: Instant,
+    /// Completion channel.
+    pub reply: Sender<AttentionResponse>,
+}
+
+/// The served result.
+#[derive(Debug, Clone)]
+pub struct AttentionResponse {
+    pub id: u64,
+    /// Attention output vector, or an error message.
+    pub output: Result<Vec<f32>, String>,
+    /// Wall time from ingress to completion.
+    pub latency_us: f64,
+    /// Size of the batch this request was served in.
+    pub batch_size: usize,
+}
+
+impl AttentionResponse {
+    pub fn ok(&self) -> bool {
+        self.output.is_ok()
+    }
+}

@@ -1,0 +1,338 @@
+//! The serving loop: bounded ingress -> batcher thread -> worker threads
+//! owning backends -> per-request reply channels.
+//!
+//! Shutdown is cooperative: dropping the `Server` closes the ingress,
+//! drains in-flight batches and joins all threads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::backend::{Backend, BackendFactory};
+use super::batcher::{Batch, Batcher};
+use super::kvstore::KvStore;
+use super::metrics::Metrics;
+use super::request::{AttentionRequest, AttentionResponse};
+use crate::config::CoordinatorConfig;
+use crate::Mat;
+
+enum Msg {
+    Req(AttentionRequest),
+    Shutdown,
+}
+
+/// A running coordinator instance.
+pub struct Server {
+    ingress: SyncSender<Msg>,
+    threads: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Metrics>,
+    pub kv: Arc<KvStore>,
+    head_dim: usize,
+}
+
+impl Server {
+    /// Start the coordinator with one worker thread per backend factory
+    /// (each backend is constructed on its own worker thread — PJRT
+    /// executables are thread-local).
+    pub fn start(
+        cfg: &CoordinatorConfig,
+        kv: Arc<KvStore>,
+        factories: Vec<BackendFactory>,
+    ) -> Result<Server> {
+        anyhow::ensure!(!factories.is_empty(), "need at least one backend");
+        let head_dim = kv.head_dim();
+        let metrics = Arc::new(Metrics::new());
+        let (in_tx, in_rx) = sync_channel::<Msg>(cfg.queue_depth);
+        let (batch_tx, batch_rx) = sync_channel::<Batch>(cfg.queue_depth);
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+
+        // batcher thread
+        let window = Duration::from_micros(cfg.batch_window_us);
+        let max_batch = cfg.max_batch;
+        let m = metrics.clone();
+        let batcher_handle = std::thread::Builder::new()
+            .name("hfa-batcher".into())
+            .spawn(move || batcher_loop(in_rx, batch_tx, max_batch, window, m))?;
+
+        // worker threads
+        let mut threads = vec![batcher_handle];
+        for (i, factory) in factories.into_iter().enumerate() {
+            let rx = batch_rx.clone();
+            let kv = kv.clone();
+            let m = metrics.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("hfa-worker-{i}"))
+                .spawn(move || match factory() {
+                    Ok(mut be) => worker_loop(&mut *be, rx, kv, m),
+                    Err(e) => eprintln!("hfa-worker-{i}: backend init failed: {e}"),
+                })?;
+            threads.push(h);
+        }
+
+        Ok(Server {
+            ingress: in_tx,
+            threads,
+            next_id: AtomicU64::new(1),
+            metrics,
+            kv,
+            head_dim,
+        })
+    }
+
+    /// Submit one query; returns the reply receiver, or an error when the
+    /// ingress queue is full (backpressure).
+    pub fn submit(
+        &self,
+        session: &str,
+        query: Vec<f32>,
+    ) -> Result<std::sync::mpsc::Receiver<AttentionResponse>> {
+        anyhow::ensure!(
+            query.len() == self.head_dim,
+            "query dim {} != head dim {}",
+            query.len(),
+            self.head_dim
+        );
+        let (tx, rx) = std::sync::mpsc::channel();
+        let req = AttentionRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            session: session.to_string(),
+            query,
+            arrived: Instant::now(),
+            reply: tx,
+        };
+        match self.ingress.try_send(Msg::Req(req)) {
+            Ok(()) => {
+                self.metrics.accepted.fetch_add(1, Ordering::Relaxed);
+                Ok(rx)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!("ingress queue full (backpressure)")
+            }
+            Err(TrySendError::Disconnected(_)) => anyhow::bail!("server stopped"),
+        }
+    }
+
+    /// Submit and wait.
+    pub fn call(&self, session: &str, query: Vec<f32>) -> Result<AttentionResponse> {
+        let rx = self.submit(session, query)?;
+        Ok(rx.recv()?)
+    }
+
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        let _ = self.ingress.send(Msg::Shutdown);
+        for h in self.threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if !self.threads.is_empty() {
+            self.shutdown_inner();
+        }
+    }
+}
+
+fn batcher_loop(
+    in_rx: Receiver<Msg>,
+    batch_tx: SyncSender<Batch>,
+    max_batch: usize,
+    window: Duration,
+    metrics: Arc<Metrics>,
+) {
+    let mut batcher = Batcher::new(max_batch, window);
+    let tick = window.max(Duration::from_micros(50));
+    loop {
+        match in_rx.recv_timeout(tick) {
+            Ok(Msg::Req(req)) => {
+                if let Some(b) = batcher.push(req) {
+                    emit(&batch_tx, b, &metrics);
+                }
+            }
+            Ok(Msg::Shutdown) => break,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        for b in batcher.close_expired(Instant::now()) {
+            emit(&batch_tx, b, &metrics);
+        }
+    }
+    for b in batcher.drain() {
+        emit(&batch_tx, b, &metrics);
+    }
+    // dropping batch_tx disconnects the workers
+}
+
+fn emit(tx: &SyncSender<Batch>, b: Batch, metrics: &Metrics) {
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics.batched_requests.fetch_add(b.requests.len() as u64, Ordering::Relaxed);
+    let _ = tx.send(b);
+}
+
+fn worker_loop(
+    be: &mut dyn Backend,
+    rx: Arc<Mutex<Receiver<Batch>>>,
+    kv: Arc<KvStore>,
+    metrics: Arc<Metrics>,
+) {
+    loop {
+        let batch = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(b) => b,
+                Err(_) => break, // batcher gone
+            }
+        };
+        serve_batch(be, batch, &kv, &metrics);
+    }
+}
+
+fn serve_batch(be: &mut dyn Backend, batch: Batch, kv: &KvStore, metrics: &Metrics) {
+    let n = batch.requests.len();
+    let d = be.head_dim();
+    let result: Result<Mat, String> = match kv.get(&batch.session) {
+        None => Err(format!("unknown session {:?}", batch.session)),
+        Some(entry) => {
+            let mut q = Mat::zeros(n, d);
+            for (i, r) in batch.requests.iter().enumerate() {
+                q.row_mut(i).copy_from_slice(&r.query);
+            }
+            be.compute(&entry.k, &entry.v, &q).map_err(|e| e.to_string())
+        }
+    };
+    for (i, req) in batch.requests.into_iter().enumerate() {
+        let latency_us = req.arrived.elapsed().as_secs_f64() * 1e6;
+        let output = match &result {
+            Ok(mat) => Ok(mat.row(i).to_vec()),
+            Err(e) => Err(e.clone()),
+        };
+        if output.is_ok() {
+            metrics.completed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            metrics.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        metrics.observe_latency(latency_us);
+        let _ = req.reply.send(AttentionResponse {
+            id: req.id,
+            output,
+            latency_us,
+            batch_size: n,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AcceleratorConfig;
+    use crate::coordinator::backend::SimBackend;
+    use crate::hw::{Accelerator, Arith};
+    use crate::proptest::Rng;
+
+    fn test_server(workers: usize) -> (Server, Mat, Mat) {
+        let accel_cfg = AcceleratorConfig {
+            head_dim: 8,
+            seq_len: 32,
+            kv_blocks: 4,
+            parallel_queries: 1,
+            freq_mhz: 500.0,
+        };
+        let coord_cfg = CoordinatorConfig {
+            max_batch: 4,
+            batch_window_us: 200,
+            workers,
+            queue_depth: 64,
+        };
+        let kv = Arc::new(KvStore::new(32, 8, 4));
+        let mut rng = Rng::new(1);
+        let k = Mat::from_vec(32, 8, rng.normal_vec(256));
+        let v = Mat::from_vec(32, 8, rng.normal_vec(256));
+        kv.put("sess", k.clone(), v.clone()).unwrap();
+        let factories: Vec<_> = (0..workers)
+            .map(|_| SimBackend::factory(Arith::Hfa, accel_cfg.clone()))
+            .collect();
+        let srv = Server::start(&coord_cfg, kv, factories).unwrap();
+        (srv, k.round_bf16(), v.round_bf16())
+    }
+
+    #[test]
+    fn serves_single_request_correctly() {
+        let (srv, k, v) = test_server(1);
+        let mut rng = Rng::new(2);
+        let qv = rng.normal_vec(8);
+        let resp = srv.call("sess", qv.clone()).unwrap();
+        assert!(resp.ok(), "{:?}", resp.output);
+        // must equal the golden model directly (the accelerator rounds
+        // incoming queries to BF16, so the golden call gets rounded q)
+        let q = Mat::from_vec(1, 8, qv).round_bf16();
+        let golden =
+            crate::attention::hfa::attention_blocked(&q, &k, &v, 4, None, &mut None);
+        assert_eq!(resp.output.unwrap(), golden.row(0).to_vec());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn unknown_session_fails_cleanly() {
+        let (srv, _, _) = test_server(1);
+        let resp = srv.call("nope", vec![0.0; 8]).unwrap();
+        assert!(!resp.ok());
+        assert_eq!(srv.metrics.snapshot().failed, 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn wrong_dim_rejected_at_submit() {
+        let (srv, _, _) = test_server(1);
+        assert!(srv.submit("sess", vec![0.0; 5]).is_err());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn batches_form_under_load() {
+        let (srv, _, _) = test_server(2);
+        let mut rng = Rng::new(3);
+        let rxs: Vec<_> =
+            (0..32).map(|_| srv.submit("sess", rng.normal_vec(8)).unwrap()).collect();
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert!(r.ok());
+        }
+        let snap = srv.metrics.snapshot();
+        assert_eq!(snap.completed, 32);
+        assert!(snap.mean_batch > 1.0, "batching never kicked in: {snap:?}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn responses_match_request_order_independence() {
+        // interleave two sessions; every response must use its session's KV
+        let (srv, k, v) = test_server(2);
+        let mut rng = Rng::new(5);
+        let k2 = Mat::from_vec(32, 8, rng.normal_vec(256));
+        let v2 = Mat::from_vec(32, 8, rng.normal_vec(256));
+        srv.kv.put("sess2", k2.clone(), v2.clone()).unwrap();
+        let q1 = rng.normal_vec(8);
+        let q2 = rng.normal_vec(8);
+        let r1 = srv.call("sess", q1.clone()).unwrap().output.unwrap();
+        let r2 = srv.call("sess2", q2.clone()).unwrap().output.unwrap();
+        let g1 = crate::attention::hfa::attention_blocked(
+            &Mat::from_vec(1, 8, q1).round_bf16(), &k, &v, 4, None, &mut None);
+        let g2 = crate::attention::hfa::attention_blocked(
+            &Mat::from_vec(1, 8, q2).round_bf16(), &k2.round_bf16(), &v2.round_bf16(), 4,
+            None, &mut None);
+        assert_eq!(r1, g1.row(0).to_vec());
+        assert_eq!(r2, g2.row(0).to_vec());
+        srv.shutdown();
+    }
+}

@@ -1,0 +1,14 @@
+//! Synthetic LLM benchmark suite — the Table I/II/III accuracy study
+//! (substitute for MMLU/GPQA/SWAG/GSM8K/XCOPA; DESIGN.md §5).
+//!
+//! Task files are generated at artifact-build time by
+//! `python/compile/tasks.py`; scoring follows lm-evaluation-harness
+//! multiple-choice convention: the correct continuation token must
+//! out-rank the three distractors in the model's next-token logits at the
+//! answer position.
+
+pub mod score;
+pub mod tasks;
+
+pub use score::{evaluate_file, Accuracy};
+pub use tasks::{load_eval_file, EvalTask, FAMILIES};

@@ -1,0 +1,91 @@
+//! Multiple-choice scoring (lm-evaluation-harness convention) and logit
+//! error measurement for the Table I/II/III studies.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::arith::mitchell::MitchellHistogram;
+use crate::model::{AttnSelect, Transformer};
+
+/// Accuracy over one task set.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Accuracy {
+    pub correct: usize,
+    pub total: usize,
+}
+
+impl Accuracy {
+    pub fn pct(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            100.0 * self.correct as f64 / self.total as f64
+        }
+    }
+}
+
+/// Score a task file with the given attention implementation.
+/// `limit` caps the number of tasks (speed knob for benches).
+pub fn evaluate_file(
+    model: &Transformer,
+    path: &Path,
+    attn: AttnSelect,
+    limit: usize,
+    hist: &mut Option<&mut MitchellHistogram>,
+) -> Result<Accuracy> {
+    let tasks = super::tasks::load_eval_file(path)?;
+    let mut correct = 0;
+    let mut total = 0;
+    for task in tasks.iter().take(limit) {
+        let logits = model.forward(&task.prompt, attn, hist)?;
+        let last = logits.row(logits.rows - 1);
+        let pred = task
+            .options
+            .iter()
+            .enumerate()
+            .max_by(|(_, &a), (_, &b)| {
+                last[a as usize].partial_cmp(&last[b as usize]).unwrap()
+            })
+            .map(|(i, _)| i)
+            .unwrap();
+        correct += usize::from(pred == task.answer);
+        total += 1;
+    }
+    Ok(Accuracy { correct, total })
+}
+
+/// Mean |Δlogit| between an attention variant and the exact path over a
+/// task sample — the Table III error measure ("total induced error" in
+/// the output logits).
+pub fn mean_logit_error(
+    model: &Transformer,
+    path: &Path,
+    attn: AttnSelect,
+    limit: usize,
+) -> Result<f64> {
+    let tasks = super::tasks::load_eval_file(path)?;
+    let mut err_sum = 0.0f64;
+    let mut count = 0usize;
+    for task in tasks.iter().take(limit) {
+        let base = model.forward(&task.prompt, AttnSelect::Exact, &mut None)?;
+        let got = model.forward(&task.prompt, attn, &mut None)?;
+        for (a, b) in got.data.iter().zip(&base.data) {
+            err_sum += (a - b).abs() as f64;
+            count += 1;
+        }
+    }
+    Ok(err_sum / count.max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_pct() {
+        let a = Accuracy { correct: 3, total: 4 };
+        assert_eq!(a.pct(), 75.0);
+        assert_eq!(Accuracy { correct: 0, total: 0 }.pct(), 0.0);
+    }
+}

@@ -1,0 +1,113 @@
+//! Eval task files: `prompt tokens|4 option tokens|answer index` lines.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// The five task families (fixed by `python/compile/tasks.py`).
+pub const FAMILIES: [&str; 5] = ["copy_last", "induction", "assoc", "maxsym", "modsum"];
+
+/// One multiple-choice task instance.
+#[derive(Clone, Debug)]
+pub struct EvalTask {
+    pub prompt: Vec<i32>,
+    pub options: [i32; 4],
+    pub answer: usize,
+}
+
+/// Parse one eval file.
+pub fn load_eval_file(path: &Path) -> Result<Vec<EvalTask>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading eval file {}", path.display()))?;
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.split('|').collect();
+        if parts.len() != 3 {
+            bail!("{}:{}: expected 3 |-fields", path.display(), ln + 1);
+        }
+        let prompt: Vec<i32> = parts[0]
+            .split_whitespace()
+            .map(|t| t.parse().context("prompt token"))
+            .collect::<Result<_>>()?;
+        let opts: Vec<i32> = parts[1]
+            .split_whitespace()
+            .map(|t| t.parse().context("option token"))
+            .collect::<Result<_>>()?;
+        if opts.len() != 4 {
+            bail!("{}:{}: expected 4 options", path.display(), ln + 1);
+        }
+        let answer: usize = parts[2].trim().parse()?;
+        if answer >= 4 {
+            bail!("{}:{}: answer index out of range", path.display(), ln + 1);
+        }
+        out.push(EvalTask {
+            prompt,
+            options: [opts[0], opts[1], opts[2], opts[3]],
+            answer,
+        });
+    }
+    Ok(out)
+}
+
+/// Enumerate available eval files as (family, variant, path).
+pub fn list_eval_files(eval_dir: &Path) -> Result<Vec<(String, u32, std::path::PathBuf)>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(eval_dir)
+        .with_context(|| format!("eval dir {} — run `make artifacts`", eval_dir.display()))?
+    {
+        let path = entry?.path();
+        let Some(stem) = path.file_stem().and_then(|s| s.to_str()) else { continue };
+        // <family>_<variant>; family itself contains underscores
+        let Some(idx) = stem.rfind('_') else { continue };
+        let (fam, var) = stem.split_at(idx);
+        if let Ok(v) = var[1..].parse::<u32>() {
+            out.push((fam.to_string(), v, path));
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn parses_task_lines() {
+        let dir = std::env::temp_dir().join("hfa_eval_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("copy_last_4.txt");
+        let mut f = std::fs::File::create(&p).unwrap();
+        writeln!(f, "# header\n2 10 11 3|10 11 12 13|1").unwrap();
+        let tasks = load_eval_file(&p).unwrap();
+        assert_eq!(tasks.len(), 1);
+        assert_eq!(tasks[0].prompt, vec![2, 10, 11, 3]);
+        assert_eq!(tasks[0].options, [10, 11, 12, 13]);
+        assert_eq!(tasks[0].answer, 1);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        let dir = std::env::temp_dir().join("hfa_eval_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad_1.txt");
+        std::fs::write(&p, "1 2 3|4 5|0\n").unwrap();
+        assert!(load_eval_file(&p).is_err());
+    }
+
+    #[test]
+    fn lists_files_with_variants() {
+        let dir = std::env::temp_dir().join("hfa_eval_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("copy_last_8.txt"), "").unwrap();
+        std::fs::write(dir.join("modsum_2.txt"), "").unwrap();
+        let files = list_eval_files(&dir).unwrap();
+        assert!(files.iter().any(|(f, v, _)| f == "copy_last" && *v == 8));
+        assert!(files.iter().any(|(f, v, _)| f == "modsum" && *v == 2));
+    }
+}

@@ -1,0 +1,108 @@
+//! Golden-vector file parsing: replays `artifacts/golden/*.txt` dumped by
+//! `python/compile/goldens.py` to pin the rust arithmetic to the python
+//! spec bit-for-bit (DESIGN.md §3).
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Parse a whitespace-separated table of i64, skipping `#` comments.
+pub fn parse_rows(path: &Path) -> Result<Vec<Vec<i64>>> {
+    let text = fs::read_to_string(path)
+        .with_context(|| format!("reading golden file {}", path.display()))?;
+    let mut rows = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let row: Result<Vec<i64>, _> = line.split_whitespace().map(str::parse).collect();
+        rows.push(row.with_context(|| format!("parsing line {line:?}"))?);
+    }
+    Ok(rows)
+}
+
+/// A whole-attention golden case (`attn_case_*.txt`).
+#[derive(Debug, Clone)]
+pub struct AttnCase {
+    pub b: usize,
+    pub n: usize,
+    pub d: usize,
+    pub num_blocks: usize,
+    /// (B, d) f32
+    pub q: Vec<f32>,
+    /// (N, d) f32
+    pub k: Vec<f32>,
+    /// (N, d) f32
+    pub v: Vec<f32>,
+    /// (B, N) f32 — scores as computed by numpy (pins association order)
+    pub scores: Vec<f32>,
+    /// (B, d) expected H-FA output, raw bf16 bits
+    pub out_bf16: Vec<u16>,
+    /// (B, d) FA-2 reference output, f32
+    pub fa2_f32: Vec<f32>,
+}
+
+fn f32_from_bits_list(vals: &[i64]) -> Vec<f32> {
+    vals.iter().map(|&b| f32::from_bits(b as u32)).collect()
+}
+
+pub fn parse_attn_case(path: &Path) -> Result<AttnCase> {
+    let text = fs::read_to_string(path)
+        .with_context(|| format!("reading attention case {}", path.display()))?;
+    let mut lines = text.lines();
+    let header: Vec<usize> = lines
+        .next()
+        .context("empty golden attention case")?
+        .split_whitespace()
+        .map(|t| t.parse().unwrap())
+        .collect();
+    let (b, n, d, num_blocks) = (header[0], header[1], header[2], header[3]);
+    let mut case = AttnCase {
+        b,
+        n,
+        d,
+        num_blocks,
+        q: vec![],
+        k: vec![],
+        v: vec![],
+        scores: vec![],
+        out_bf16: vec![],
+        fa2_f32: vec![],
+    };
+    for line in lines {
+        let Some((name, rest)) = line.split_once(':') else { continue };
+        let vals: Vec<i64> = rest.split_whitespace().map(|t| t.parse().unwrap()).collect();
+        match name.trim() {
+            "q" => case.q = f32_from_bits_list(&vals),
+            "k" => case.k = f32_from_bits_list(&vals),
+            "v" => case.v = f32_from_bits_list(&vals),
+            "scores" => case.scores = f32_from_bits_list(&vals),
+            "out_bf16" => case.out_bf16 = vals.iter().map(|&x| x as u16).collect(),
+            "fa2_f32" => case.fa2_f32 = f32_from_bits_list(&vals),
+            other => bail!("unknown section {other:?} in {}", path.display()),
+        }
+    }
+    if case.q.len() != b * d || case.k.len() != n * d || case.scores.len() != b * n {
+        bail!("golden case {} has inconsistent shapes", path.display());
+    }
+    Ok(case)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn parse_rows_skips_comments() {
+        let dir = std::env::temp_dir().join("hfa_golden_test");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("rows.txt");
+        let mut f = fs::File::create(&p).unwrap();
+        writeln!(f, "# comment\n1 2 3\n\n4 5 6").unwrap();
+        let rows = parse_rows(&p).unwrap();
+        assert_eq!(rows, vec![vec![1, 2, 3], vec![4, 5, 6]]);
+    }
+}

@@ -1,0 +1,205 @@
+//! The RTL-equivalent accelerator model: functional behaviour (bit-exact
+//! golden-model arithmetic) + cycle timing + cost/energy accounting, all
+//! per the Fig. 2 organization.
+//!
+//! Functionally a batch is computed exactly as the silicon would: each of
+//! the `p` block-FAUs independently accumulates its partial `(m, ell, o)`
+//! triplet over its KV sub-block, the ACC cascade merges them (Eq. 1 in
+//! float for FA-2, Eq. 16 in the log domain for H-FA), and the final
+//! DIV/LogDiv normalizes.
+
+use crate::attention::{fa2, hfa, merge};
+use crate::config::AcceleratorConfig;
+use crate::hw::cost::datapath::{accelerator as datapath_inventory, Arith};
+use crate::hw::cost::sram::SramConfig;
+use crate::hw::cost::scaling::Node;
+use crate::hw::pipeline::{simulate, CycleStats, LatencyModel};
+use crate::Mat;
+
+/// A configured accelerator instance holding preloaded KV buffers.
+pub struct Accelerator {
+    pub arith: Arith,
+    pub cfg: AcceleratorConfig,
+    pub lat: LatencyModel,
+    k: Option<Mat>,
+    v: Option<Mat>,
+}
+
+impl Accelerator {
+    pub fn new(arith: Arith, cfg: AcceleratorConfig) -> Accelerator {
+        let lat = LatencyModel::for_head_dim(cfg.head_dim);
+        Accelerator { arith, cfg, lat, k: None, v: None }
+    }
+
+    /// Load the K/V matrices into the (modelled) SRAM buffers.
+    pub fn load_kv(&mut self, k: Mat, v: Mat) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            k.rows == self.cfg.seq_len && k.cols == self.cfg.head_dim,
+            "K shape {}x{} != configured {}x{}",
+            k.rows,
+            k.cols,
+            self.cfg.seq_len,
+            self.cfg.head_dim
+        );
+        anyhow::ensure!(v.rows == k.rows && v.cols == k.cols, "V shape mismatch");
+        self.k = Some(k.round_bf16());
+        self.v = Some(v.round_bf16());
+        Ok(())
+    }
+
+    pub fn kv_loaded(&self) -> bool {
+        self.k.is_some()
+    }
+
+    /// Compute attention for a batch of queries, returning outputs and the
+    /// cycle-level timing of the run.
+    pub fn compute_batch(&self, q: &Mat) -> anyhow::Result<(Mat, CycleStats)> {
+        let k = self.k.as_ref().ok_or_else(|| anyhow::anyhow!("KV not loaded"))?;
+        let v = self.v.as_ref().unwrap();
+        anyhow::ensure!(q.cols == self.cfg.head_dim, "query dim mismatch");
+        let q = q.round_bf16();
+
+        let p = self.cfg.kv_blocks;
+        let rows = self.cfg.rows_per_block();
+        let out = match self.arith {
+            Arith::Fa2 => {
+                // p block-FAUs -> ACC cascade (Eq. 1) -> DIV
+                let mut acc: Option<Vec<fa2::Fa2State>> = None;
+                for blk in 0..p {
+                    let kb = k.rows_slice(blk * rows, (blk + 1) * rows);
+                    let vb = v.rows_slice(blk * rows, (blk + 1) * rows);
+                    let st = fa2::partial_states(&q, &kb, &vb, None, None);
+                    acc = Some(match acc {
+                        None => st,
+                        Some(prev) => prev
+                            .iter()
+                            .zip(&st)
+                            .map(|(a, b)| merge::merge_fa2(a, b))
+                            .collect(),
+                    });
+                }
+                let states = acc.unwrap();
+                let mut out = Mat::zeros(q.rows, self.cfg.head_dim);
+                for (i, st) in states.iter().enumerate() {
+                    // DIV output rounds to BF16 on the way out
+                    for (j, x) in st.finalize().iter().enumerate() {
+                        out.set(i, j, crate::Bf16::from_f32(*x).to_f32());
+                    }
+                }
+                out
+            }
+            Arith::Hfa => hfa::attention_blocked(&q, k, v, p, None, &mut None),
+        };
+
+        let stats = simulate(
+            self.cfg.head_dim,
+            self.cfg.seq_len,
+            p,
+            self.cfg.parallel_queries,
+            q.rows,
+            self.lat,
+        );
+        Ok((out, stats))
+    }
+
+    /// Datapath inventory of this instance.
+    pub fn inventory(&self) -> crate::hw::cost::components::Inventory {
+        datapath_inventory(
+            self.arith,
+            self.cfg.head_dim,
+            self.cfg.kv_blocks,
+            self.cfg.parallel_queries,
+        )
+    }
+
+    /// KV SRAM subsystem of this instance (28 nm).
+    pub fn sram(&self) -> SramConfig {
+        SramConfig::kv_buffers(self.cfg.seq_len, self.cfg.head_dim, self.cfg.kv_blocks, Node::N28)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{exact, Impl};
+    use crate::proptest::Rng;
+
+    fn accel(arith: Arith, d: usize, n: usize, p: usize) -> (Accelerator, Mat, Mat) {
+        let mut rng = Rng::new(77);
+        let cfg = AcceleratorConfig {
+            head_dim: d,
+            seq_len: n,
+            kv_blocks: p,
+            parallel_queries: 1,
+            freq_mhz: 500.0,
+        };
+        let k = Mat::from_vec(n, d, rng.normal_vec(n * d));
+        let v = Mat::from_vec(n, d, rng.normal_vec(n * d));
+        let mut a = Accelerator::new(arith, cfg);
+        a.load_kv(k.clone(), v.clone()).unwrap();
+        (a, k.round_bf16(), v.round_bf16())
+    }
+
+    #[test]
+    fn fa2_accelerator_matches_reference_attention() {
+        let (a, k, v) = accel(Arith::Fa2, 32, 256, 4);
+        let mut rng = Rng::new(5);
+        let q = Mat::from_vec(4, 32, rng.normal_vec(4 * 32)).round_bf16();
+        let (out, stats) = a.compute_batch(&q).unwrap();
+        let reference = exact::attention(&q, &k, &v, None, None);
+        let rel = out.rel_rms(&reference);
+        assert!(rel < 0.02, "fa2 accel rel {rel}");
+        assert!(stats.cycles > 0);
+    }
+
+    #[test]
+    fn hfa_accelerator_matches_blocked_golden_model() {
+        let (a, k, v) = accel(Arith::Hfa, 16, 128, 4);
+        let mut rng = Rng::new(6);
+        let q = Mat::from_vec(3, 16, rng.normal_vec(3 * 16)).round_bf16();
+        let (out, _) = a.compute_batch(&q).unwrap();
+        let golden = hfa::attention_blocked(&q, &k, &v, 4, None, &mut None);
+        assert_eq!(out.data, golden.data, "accelerator must be bit-exact vs golden");
+    }
+
+    #[test]
+    fn both_designs_report_identical_latency() {
+        // Section VI-C: same computation order, same pipelined latency
+        let (fa2a, _, _) = accel(Arith::Fa2, 64, 512, 4);
+        let (hfaa, _, _) = accel(Arith::Hfa, 64, 512, 4);
+        let mut rng = Rng::new(9);
+        let q = Mat::from_vec(2, 64, rng.normal_vec(2 * 64));
+        let (_, s1) = fa2a.compute_batch(&q).unwrap();
+        let (_, s2) = hfaa.compute_batch(&q).unwrap();
+        assert_eq!(s1.cycles, s2.cycles);
+    }
+
+    #[test]
+    fn rejects_mismatched_shapes() {
+        let (mut a, _, _) = accel(Arith::Hfa, 32, 256, 4);
+        assert!(a.load_kv(Mat::zeros(100, 32), Mat::zeros(100, 32)).is_err());
+        let q = Mat::zeros(1, 16);
+        assert!(a.compute_batch(&q).is_err());
+    }
+
+    #[test]
+    fn compute_is_deterministic() {
+        let (a, _, _) = accel(Arith::Hfa, 16, 64, 2);
+        let mut rng = Rng::new(12);
+        let q = Mat::from_vec(2, 16, rng.normal_vec(32));
+        let (o1, _) = a.compute_batch(&q).unwrap();
+        let (o2, _) = a.compute_batch(&q).unwrap();
+        assert_eq!(o1.data, o2.data);
+    }
+
+    #[test]
+    fn attention_impl_dispatch_consistency() {
+        // Impl::Hfa golden vs the accelerator with p=1 must agree exactly
+        let (a, k, v) = accel(Arith::Hfa, 16, 64, 1);
+        let mut rng = Rng::new(14);
+        let q = Mat::from_vec(2, 16, rng.normal_vec(32)).round_bf16();
+        let (out, _) = a.compute_batch(&q).unwrap();
+        let golden = crate::attention::compute(Impl::Hfa, &q, &k, &v, None);
+        assert_eq!(out.data, golden.data);
+    }
+}

@@ -1,0 +1,185 @@
+//! 28 nm standard-cell component library: per-operator area and energy.
+//!
+//! Substitute for the paper's Catapult-HLS + Cadence + PowerPro flow
+//! (DESIGN.md §5).  Values are gate-level estimates at 28 nm / 0.9 V /
+//! 500 MHz, calibrated so that (a) absolute magnitudes land near the
+//! paper's reported design sizes (Table IV: H-FA-1-4 ~1.1 mm² with SRAM)
+//! and (b) the *structural* FA-2 vs H-FA substitution — FP mul/div/exp
+//! replaced by fixed-point add/sub/shift/LUT — reproduces the reported
+//! savings shape (Fig. 6: ~36 % datapath at d=32; Fig. 7: >26 % with
+//! SRAM included).  Both designs are composed from this same library, so
+//! the comparison is apples-to-apples by construction.
+
+/// One hardware operator class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Op {
+    /// BF16 multiplier (8x8 mantissa array + exponent add + normalize).
+    Bf16Mul,
+    /// BF16 adder (align barrel shifter + mantissa add + LZA + normalize).
+    Bf16Add,
+    /// BF16 comparator / max.
+    Bf16Max,
+    /// e^x evaluator in BF16 (shift-and-add power-of-two method, [31]).
+    ExpUnit,
+    /// BF16 divider (reciprocal LUT + Newton step + multiply).
+    Bf16Div,
+    /// 16-bit fixed-point adder/subtractor.
+    FixAdd,
+    /// 16-bit fixed-point comparator / max / abs-diff support.
+    FixCmp,
+    /// 16-bit barrel shifter (the `>> p` of Eq. 19).
+    Shifter,
+    /// PWL segment LUT (8 x 21 bit coefficients + decode mux).
+    PwlLut,
+    /// PWL slope multiplier (4 x 14 bit).
+    PwlMul,
+    /// Score-difference quantizer (clamp + constant multiply by log2 e).
+    QuantUnit,
+    /// 16-bit pipeline register.
+    Reg16,
+    /// 32-bit pipeline register (f32/score path).
+    Reg32,
+    /// Per-lane control / muxing overhead (ready-valid, enables).
+    CtrlLane,
+    /// Per-unit control FSM + flow control (fixed per FAU/ACC/DIV block).
+    CtrlBlock,
+}
+
+/// Area in um^2 and switching energy in pJ per operation at 28 nm.
+#[derive(Clone, Copy, Debug)]
+pub struct CostEntry {
+    pub area_um2: f64,
+    pub energy_pj: f64,
+}
+
+/// The calibrated 28 nm library.
+pub fn lib(op: Op) -> CostEntry {
+    use Op::*;
+    let (area_um2, energy_pj) = match op {
+        Bf16Mul => (640.0, 1.20),
+        Bf16Add => (590.0, 0.95),
+        Bf16Max => (95.0, 0.10),
+        ExpUnit => (980.0, 2.30),
+        Bf16Div => (2150.0, 5.20),
+        FixAdd => (76.0, 0.13),
+        FixCmp => (66.0, 0.09),
+        Shifter => (140.0, 0.18),
+        PwlLut => (205.0, 0.22),
+        PwlMul => (185.0, 0.31),
+        QuantUnit => (150.0, 0.22),
+        Reg16 => (50.0, 0.06),
+        Reg32 => (92.0, 0.11),
+        CtrlLane => (110.0, 0.09),
+        CtrlBlock => (2600.0, 1.20),
+    };
+    CostEntry { area_um2, energy_pj }
+}
+
+/// Leakage power as a fraction of dynamic at full activity — used to add
+/// an area-proportional static term (28 nm HVT-dominated mix).
+pub const LEAKAGE_UW_PER_MM2: f64 = 6_000.0; // 6 mW per mm^2
+
+/// An inventory of operator counts (a composed datapath block).
+#[derive(Clone, Debug, Default)]
+pub struct Inventory {
+    counts: std::collections::BTreeMap<Op, u64>,
+}
+
+impl Inventory {
+    pub fn new() -> Inventory {
+        Inventory::default()
+    }
+
+    pub fn add(&mut self, op: Op, n: u64) -> &mut Self {
+        *self.counts.entry(op).or_insert(0) += n;
+        self
+    }
+
+    pub fn count(&self, op: Op) -> u64 {
+        self.counts.get(&op).copied().unwrap_or(0)
+    }
+
+    pub fn merge(&mut self, other: &Inventory) {
+        for (&op, &n) in &other.counts {
+            self.add(op, n);
+        }
+    }
+
+    pub fn scaled(&self, factor: u64) -> Inventory {
+        let mut out = Inventory::new();
+        for (&op, &n) in &self.counts {
+            out.add(op, n * factor);
+        }
+        out
+    }
+
+    /// Total silicon area in mm^2.
+    pub fn area_mm2(&self) -> f64 {
+        self.counts
+            .iter()
+            .map(|(&op, &n)| lib(op).area_um2 * n as f64)
+            .sum::<f64>()
+            / 1e6
+    }
+
+    /// Dynamic power in mW given per-op activity (average toggles per
+    /// cycle per instance, 0..=1) and clock frequency.
+    pub fn dynamic_power_mw(&self, activity: f64, freq_mhz: f64) -> f64 {
+        let pj_per_cycle: f64 = self
+            .counts
+            .iter()
+            .map(|(&op, &n)| lib(op).energy_pj * n as f64 * activity)
+            .sum();
+        // pJ/cycle * cycles/s = pJ/s; 1e6 Hz per MHz; 1e-9 mW per pJ/s
+        pj_per_cycle * freq_mhz * 1e6 * 1e-9
+    }
+
+    /// Leakage power in mW (area-proportional).
+    pub fn leakage_mw(&self) -> f64 {
+        self.area_mm2() * LEAKAGE_UW_PER_MM2 / 1000.0
+    }
+
+    /// Total power at the given activity.
+    pub fn power_mw(&self, activity: f64, freq_mhz: f64) -> f64 {
+        self.dynamic_power_mw(activity, freq_mhz) + self.leakage_mw()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (Op, u64)> + '_ {
+        self.counts.iter().map(|(&op, &n)| (op, n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp_ops_cost_more_than_fixed() {
+        assert!(lib(Op::Bf16Mul).area_um2 > 5.0 * lib(Op::FixAdd).area_um2);
+        assert!(lib(Op::Bf16Div).area_um2 > 10.0 * lib(Op::FixAdd).area_um2);
+        assert!(lib(Op::ExpUnit).energy_pj > 5.0 * lib(Op::FixAdd).energy_pj);
+    }
+
+    #[test]
+    fn inventory_accumulates_and_scales() {
+        let mut inv = Inventory::new();
+        inv.add(Op::Bf16Mul, 32).add(Op::Bf16Add, 31).add(Op::Bf16Mul, 32);
+        assert_eq!(inv.count(Op::Bf16Mul), 64);
+        let x4 = inv.scaled(4);
+        assert_eq!(x4.count(Op::Bf16Add), 124);
+        assert!((x4.area_mm2() - 4.0 * inv.area_mm2()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn power_scales_with_activity_and_freq() {
+        let mut inv = Inventory::new();
+        inv.add(Op::Bf16Mul, 100);
+        let p1 = inv.dynamic_power_mw(1.0, 500.0);
+        let p2 = inv.dynamic_power_mw(0.5, 500.0);
+        let p3 = inv.dynamic_power_mw(1.0, 1000.0);
+        assert!((p1 - 2.0 * p2).abs() < 1e-9);
+        assert!((p3 - 2.0 * p1).abs() < 1e-9);
+        // 100 bf16 muls at full tilt, 500 MHz: 1.2pJ*100*500e6 = 60 mW
+        assert!((p1 - 60.0).abs() < 1.0);
+    }
+}

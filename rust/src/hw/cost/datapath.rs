@@ -1,0 +1,236 @@
+//! Structural composition of the two accelerator datapaths (Figs. 1-4):
+//! operator inventories for the FA-2 (all-float) and H-FA (hybrid
+//! float/log) FAU, ACC and final-division blocks.
+//!
+//! Fidelity notes (mapping figure -> inventory):
+//! * Both designs share the identical BF16 **dot-product unit** (d mults +
+//!   an adder tree + the 1/sqrt(d) scale; multi-operand addition per [51]).
+//! * FA-2 'sum acc' (Fig. 1): two exponential units (`e^{m-m'}`,
+//!   `e^{s-m'}`), FP multiply + add for `l`, FP max.
+//! * FA-2 'output acc': per output lane two FP multiplies (`o*alpha`,
+//!   `beta*v`) and one FP add.
+//! * FA-2 DIV: one BF16 divider per output lane.
+//! * H-FA FAU (Fig. 3): dot product unchanged; **two quantizers + two
+//!   constant shifters per FAU** (west side of Fig. 3); per *lane* (d+1
+//!   lanes: ell + d outputs): two fixed adds (A, B), abs-diff compare,
+//!   PWL LUT + slope mult + barrel shift, one fixed add (max +- r), sign
+//!   mux — all fixed point.  Value conversion is a bias-subtract per lane.
+//! * H-FA ACC (Fig. 4): FP max + two quantizers, then the same per-lane
+//!   LNS adder; **no conversions** to/from linear.
+//! * H-FA LogDiv: per lane one fixed subtract + the log->float conversion
+//!   (bias add + saturation mux).
+//! * Pipeline registers and per-block control are charged to BOTH designs
+//!   (identical streaming pattern, identical latency — Section VI-C).
+
+use super::components::{Inventory, Op};
+
+/// Which arithmetic the datapath uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arith {
+    Fa2,
+    Hfa,
+}
+
+impl Arith {
+    pub fn name(self) -> &'static str {
+        match self {
+            Arith::Fa2 => "FA-2",
+            Arith::Hfa => "H-FA",
+        }
+    }
+}
+
+/// Shared BF16 dot-product unit (d multipliers + (d-1)-adder tree + scale).
+pub fn dot_unit(d: usize) -> Inventory {
+    let mut inv = Inventory::new();
+    inv.add(Op::Bf16Mul, d as u64 + 1) // +1 for the 1/sqrt(d) scale
+        .add(Op::Bf16Add, d as u64 - 1)
+        // operand + pipeline registers across the adder tree stages
+        .add(Op::Reg16, 2 * d as u64)
+        .add(Op::Reg32, (d.ilog2() as u64 + 1) * 2);
+    inv
+}
+
+/// One FAU (serves one query against one KV sub-block stream).
+pub fn fau(arith: Arith, d: usize) -> Inventory {
+    let lanes = d as u64 + 1; // ell + d output lanes
+    let mut inv = dot_unit(d);
+    inv.add(Op::Bf16Max, 1); // running max m_i
+    inv.add(Op::CtrlBlock, 1);
+    match arith {
+        Arith::Fa2 => {
+            // sum acc: 2 exp + l*alpha + (+ beta)
+            inv.add(Op::ExpUnit, 2).add(Op::Bf16Mul, 1).add(Op::Bf16Add, 1);
+            // output acc: per lane o*alpha + beta*v + add
+            inv.add(Op::Bf16Mul, 2 * d as u64).add(Op::Bf16Add, d as u64);
+            // state registers: m, l, o[d] in bf16
+            inv.add(Op::Reg16, d as u64 + 2);
+            inv.add(Op::CtrlLane, d as u64);
+        }
+        Arith::Hfa => {
+            // two quantizers + constant shifters (west side, Fig. 3)
+            inv.add(Op::QuantUnit, 2).add(Op::Shifter, 2);
+            // value conversion: bias subtract per lane
+            inv.add(Op::FixAdd, lanes);
+            // per-lane LNS adder: A/B adds, |A-B|, PWL, shift, +-r, sign
+            inv.add(Op::FixAdd, 3 * lanes) // A, B, max +- r
+                .add(Op::FixCmp, 2 * lanes) // max select + abs-diff sign
+                .add(Op::PwlLut, lanes)
+                .add(Op::PwlMul, lanes)
+                .add(Op::Shifter, lanes);
+            // state + inter-stage pipeline registers: m (bf16), sign +
+            // log per lane carried across the 4-stage LNS adder
+            inv.add(Op::Reg16, 3 * lanes + 1);
+            inv.add(Op::CtrlLane, lanes);
+        }
+    }
+    inv
+}
+
+/// One ACC merge block (combines two partial triplets; Fig. 2 cascade).
+pub fn acc_block(arith: Arith, d: usize) -> Inventory {
+    let lanes = d as u64 + 1;
+    let mut inv = Inventory::new();
+    inv.add(Op::Bf16Max, 1).add(Op::CtrlBlock, 1);
+    match arith {
+        Arith::Fa2 => {
+            inv.add(Op::ExpUnit, 2);
+            // per lane: o_A*e_A + o_B*e_B
+            inv.add(Op::Bf16Mul, 2 * lanes).add(Op::Bf16Add, lanes);
+            inv.add(Op::Reg16, lanes + 1);
+            inv.add(Op::CtrlLane, lanes);
+        }
+        Arith::Hfa => {
+            inv.add(Op::QuantUnit, 2).add(Op::Shifter, 2);
+            inv.add(Op::FixAdd, 3 * lanes)
+                .add(Op::FixCmp, 2 * lanes)
+                .add(Op::PwlLut, lanes)
+                .add(Op::PwlMul, lanes)
+                .add(Op::Shifter, lanes);
+            inv.add(Op::Reg16, 3 * lanes + 1);
+            inv.add(Op::CtrlLane, lanes);
+        }
+    }
+    inv
+}
+
+/// The final division block (one per query datapath).
+pub fn div_block(arith: Arith, d: usize) -> Inventory {
+    let mut inv = Inventory::new();
+    inv.add(Op::CtrlBlock, 1);
+    match arith {
+        Arith::Fa2 => {
+            inv.add(Op::Bf16Div, d as u64);
+            inv.add(Op::Reg16, d as u64);
+        }
+        Arith::Hfa => {
+            // LogDiv: fixed subtract per lane + log->float conversion
+            // (bias add + saturation mux, Section V-B)
+            inv.add(Op::FixAdd, 2 * d as u64) // subtract + bias add
+                .add(Op::FixCmp, d as u64) // saturation detect
+                .add(Op::Reg16, d as u64);
+        }
+    }
+    inv
+}
+
+/// Whole accelerator datapath: `p` block-FAUs + `p` ACC units (the paper's
+/// Fig. 6 layout instantiates one ACC per block row) + final division,
+/// replicated for `nq` parallel query datapaths.
+pub fn accelerator(arith: Arith, d: usize, p: usize, nq: usize) -> Inventory {
+    let mut inv = Inventory::new();
+    let mut per_query = Inventory::new();
+    per_query.merge(&fau(arith, d).scaled(p as u64));
+    per_query.merge(&acc_block(arith, d).scaled(p as u64));
+    per_query.merge(&div_block(arith, d));
+    inv.merge(&per_query.scaled(nq as u64));
+    inv
+}
+
+/// Per-block area breakdown rows for the Fig. 6 substitute.
+pub fn breakdown(arith: Arith, d: usize, p: usize) -> Vec<(String, f64)> {
+    vec![
+        (format!("dot-product x{p}"), dot_unit(d).scaled(p as u64).area_mm2()),
+        (
+            format!("{} accum x{p}", arith.name()),
+            {
+                let mut f = fau(arith, d);
+                // subtract the shared dot unit to isolate the accumulator
+                let dot = dot_unit(d);
+                let mut acc_area = f.area_mm2() - dot.area_mm2();
+                if acc_area < 0.0 {
+                    acc_area = 0.0;
+                }
+                f = Inventory::new();
+                let _ = f;
+                acc_area * p as f64
+            },
+        ),
+        (format!("ACC x{p}"), acc_block(arith, d).scaled(p as u64).area_mm2()),
+        (
+            if arith == Arith::Hfa { "LogDiv".into() } else { "DIV".into() },
+            div_block(arith, d).area_mm2(),
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hfa_fau_smaller_than_fa2() {
+        for d in [32, 64, 128] {
+            let a_fa2 = fau(Arith::Fa2, d).area_mm2();
+            let a_hfa = fau(Arith::Hfa, d).area_mm2();
+            assert!(a_hfa < a_fa2, "d={d}: {a_hfa} vs {a_fa2}");
+        }
+    }
+
+    #[test]
+    fn logdiv_much_smaller_than_div() {
+        let div = div_block(Arith::Fa2, 32).area_mm2();
+        let logdiv = div_block(Arith::Hfa, 32).area_mm2();
+        assert!(logdiv < 0.25 * div, "{logdiv} vs {div}");
+    }
+
+    #[test]
+    fn dot_unit_identical_across_designs() {
+        // the score path stays in floating point in both designs
+        let fa2 = fau(Arith::Fa2, 64);
+        let hfa = fau(Arith::Hfa, 64);
+        assert_eq!(fa2.count(Op::Bf16Mul) >= 65, true);
+        assert_eq!(hfa.count(Op::Bf16Mul), 65); // only the dot unit's
+    }
+
+    #[test]
+    fn datapath_savings_in_paper_range() {
+        // Fig. 6: 36.1% datapath savings at d=32, p=4; Fig. 7 reports
+        // >26% once SRAM is included.  The structural model must land in
+        // the right regime (30-45% datapath-only).
+        for d in [32, 64, 128] {
+            let fa2 = accelerator(Arith::Fa2, d, 4, 1).area_mm2();
+            let hfa = accelerator(Arith::Hfa, d, 4, 1).area_mm2();
+            let savings = 1.0 - hfa / fa2;
+            assert!(
+                (0.28..0.50).contains(&savings),
+                "d={d}: datapath savings {savings:.3} out of expected range"
+            );
+        }
+    }
+
+    #[test]
+    fn accelerator_scales_with_replication() {
+        let one = accelerator(Arith::Hfa, 64, 4, 1).area_mm2();
+        let four = accelerator(Arith::Hfa, 64, 4, 4).area_mm2();
+        assert!((four - 4.0 * one).abs() < 1e-9);
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let rows = breakdown(Arith::Hfa, 32, 4);
+        let sum: f64 = rows.iter().map(|(_, a)| a).sum();
+        let total = accelerator(Arith::Hfa, 32, 4, 1).area_mm2();
+        assert!((sum - total).abs() / total < 0.02, "{sum} vs {total}");
+    }
+}

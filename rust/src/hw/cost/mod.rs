@@ -1,0 +1,12 @@
+//! 28 nm area/power cost model (the paper's Section VI-C evaluation flow
+//! rebuilt as an analytical model — see DESIGN.md §5 for the substitution
+//! argument).
+
+pub mod components;
+pub mod datapath;
+pub mod report;
+pub mod scaling;
+pub mod sram;
+
+pub use datapath::Arith;
+pub use report::{compare, report, CostReport};

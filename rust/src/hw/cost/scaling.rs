@@ -1,0 +1,97 @@
+//! Technology-node scaling — the DeepScaleTool role in the paper's flow
+//! (SRAM modelled at 22 nm, scaled to the 28 nm design node).
+//!
+//! Factors follow the published DeepScale/Stillmaker-Baas style dense
+//! scaling tables: area scales with the square of the feature-size-like
+//! dimension per node step; energy scales a bit slower in the deep
+//! submicron era.
+
+/// Supported nodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Node {
+    N45,
+    N32,
+    N28,
+    N22,
+    N16,
+    N7,
+}
+
+impl Node {
+    pub fn from_str(s: &str) -> anyhow::Result<Node> {
+        Ok(match s {
+            "45" | "45nm" => Node::N45,
+            "32" | "32nm" => Node::N32,
+            "28" | "28nm" => Node::N28,
+            "22" | "22nm" => Node::N22,
+            "16" | "16nm" => Node::N16,
+            "7" | "7nm" => Node::N7,
+            other => anyhow::bail!("unknown node {other:?}"),
+        })
+    }
+
+    /// Relative dense-logic area per gate, normalized to 28 nm = 1.0.
+    fn area_factor(self) -> f64 {
+        match self {
+            Node::N45 => 2.58,
+            Node::N32 => 1.31,
+            Node::N28 => 1.00,
+            Node::N22 => 0.62,
+            Node::N16 => 0.34,
+            Node::N7 => 0.092,
+        }
+    }
+
+    /// Relative switching energy per op, normalized to 28 nm = 1.0.
+    fn energy_factor(self) -> f64 {
+        match self {
+            Node::N45 => 2.10,
+            Node::N32 => 1.25,
+            Node::N28 => 1.00,
+            Node::N22 => 0.75,
+            Node::N16 => 0.48,
+            Node::N7 => 0.21,
+        }
+    }
+}
+
+/// Multiply an area measured at `from` to express it at `to`.
+pub fn area_scale(from: Node, to: Node) -> f64 {
+    to.area_factor() / from.area_factor()
+}
+
+/// Multiply an energy measured at `from` to express it at `to`.
+pub fn energy_scale(from: Node, to: Node) -> f64 {
+    to.energy_factor() / from.energy_factor()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_scaling() {
+        assert_eq!(area_scale(Node::N28, Node::N28), 1.0);
+        assert_eq!(energy_scale(Node::N22, Node::N22), 1.0);
+    }
+
+    #[test]
+    fn upscaling_22_to_28_grows() {
+        // the paper's direction: Cacti @22nm -> 28nm design node
+        assert!(area_scale(Node::N22, Node::N28) > 1.3);
+        assert!(energy_scale(Node::N22, Node::N28) > 1.2);
+    }
+
+    #[test]
+    fn scaling_is_multiplicative() {
+        let via22 = area_scale(Node::N45, Node::N22) * area_scale(Node::N22, Node::N7);
+        let direct = area_scale(Node::N45, Node::N7);
+        assert!((via22 - direct).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        assert_eq!(Node::from_str("28nm").unwrap(), Node::N28);
+        assert!(Node::from_str("13nm").is_err());
+    }
+}

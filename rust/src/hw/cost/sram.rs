@@ -1,0 +1,124 @@
+//! Analytical SRAM model for the KV buffers — the Cacti-6.0 +
+//! Accelergy-hwcomponents role in the paper's Section VI-C, with a
+//! DeepScale-style node conversion (the paper models at 22 nm and scales
+//! up to 28 nm; see `scaling.rs`).
+//!
+//! The model is the standard bank-structured fit: area = bank overhead +
+//! bit-cell array / array-efficiency; read energy grows with sqrt(capacity)
+//! (wordline/bitline length).  Constants are calibrated to public Cacti
+//! numbers for small (64 kB - 1 MB) 22 nm SRAM macros.
+
+use super::scaling::{area_scale, energy_scale, Node};
+
+/// 22 nm SRAM bit-cell area (um^2) — 6T high-density cell.
+const BITCELL_UM2_22: f64 = 0.065;
+/// Array efficiency (cell area / macro area) for small macros.
+const ARRAY_EFF: f64 = 0.55;
+/// Fixed per-bank periphery area (um^2, 22 nm): decoders, sense amps, IO.
+const BANK_OVERHEAD_UM2_22: f64 = 9_000.0;
+/// Read energy fit at 22 nm: E(pJ/access) = A + B * sqrt(kB)  (64-bit word)
+const READ_E_A_PJ: f64 = 1.8;
+const READ_E_B_PJ: f64 = 0.55;
+/// Static leakage per MB at 22 nm (mW).
+const LEAK_MW_PER_MB_22: f64 = 18.0;
+
+/// A KV SRAM buffer subsystem.
+#[derive(Clone, Copy, Debug)]
+pub struct SramConfig {
+    /// Total capacity in bytes (K + V for all sub-blocks).
+    pub capacity_bytes: u64,
+    /// Number of independently addressed banks (one per KV sub-block per
+    /// K/V matrix keeps all block-FAUs streaming concurrently).
+    pub banks: u32,
+    /// Word width in bits (one value element per access lane).
+    pub word_bits: u32,
+    /// Target technology node.
+    pub node: Node,
+}
+
+impl SramConfig {
+    /// KV buffers for the paper's accelerator: K and V matrices of
+    /// `seq_len x d` BF16, split into `p` sub-blocks each, at `node`.
+    pub fn kv_buffers(seq_len: usize, d: usize, p: usize, node: Node) -> SramConfig {
+        SramConfig {
+            capacity_bytes: (2 * seq_len * d * 2) as u64, // K+V, 2B/elem
+            banks: (2 * p) as u32,
+            word_bits: 16,
+            node,
+        }
+    }
+
+    /// Macro area in mm^2 at the configured node.
+    pub fn area_mm2(&self) -> f64 {
+        let bits = self.capacity_bytes as f64 * 8.0;
+        let cell = bits * BITCELL_UM2_22 / ARRAY_EFF;
+        let periph = self.banks as f64 * BANK_OVERHEAD_UM2_22;
+        (cell + periph) / 1e6 * area_scale(Node::N22, self.node)
+    }
+
+    /// Energy per word read, pJ, at the configured node.
+    pub fn read_energy_pj(&self) -> f64 {
+        let kb_per_bank = self.capacity_bytes as f64 / 1024.0 / self.banks as f64;
+        let e22 = (READ_E_A_PJ + READ_E_B_PJ * kb_per_bank.sqrt())
+            * (self.word_bits as f64 / 64.0);
+        e22 * energy_scale(Node::N22, self.node)
+    }
+
+    /// Leakage power in mW.
+    pub fn leakage_mw(&self) -> f64 {
+        let mb = self.capacity_bytes as f64 / (1024.0 * 1024.0);
+        mb * LEAK_MW_PER_MB_22 * energy_scale(Node::N22, self.node)
+    }
+
+    /// Average power in mW given an access rate (words/cycle across all
+    /// banks) at `freq_mhz`.
+    pub fn power_mw(&self, words_per_cycle: f64, freq_mhz: f64) -> f64 {
+        let dyn_mw = self.read_energy_pj() * words_per_cycle * freq_mhz * 1e6 * 1e-9;
+        dyn_mw + self.leakage_mw()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_kv_buffer_magnitude() {
+        // d=64, N=1024: 256 kB at 28 nm should land in the 0.2-0.6 mm^2
+        // range (Cacti-class small macro)
+        let s = SramConfig::kv_buffers(1024, 64, 4, Node::N28);
+        assert_eq!(s.capacity_bytes, 256 * 1024);
+        let a = s.area_mm2();
+        assert!((0.15..0.8).contains(&a), "area {a}");
+    }
+
+    #[test]
+    fn area_monotone_in_capacity() {
+        let small = SramConfig::kv_buffers(256, 32, 4, Node::N28).area_mm2();
+        let big = SramConfig::kv_buffers(1024, 128, 4, Node::N28).area_mm2();
+        assert!(big > 4.0 * small, "{big} vs {small}");
+    }
+
+    #[test]
+    fn node_scaling_shrinks_at_smaller_node() {
+        let at28 = SramConfig::kv_buffers(1024, 64, 4, Node::N28).area_mm2();
+        let at22 = SramConfig::kv_buffers(1024, 64, 4, Node::N22).area_mm2();
+        assert!(at22 < at28);
+    }
+
+    #[test]
+    fn read_energy_reasonable() {
+        let s = SramConfig::kv_buffers(1024, 64, 4, Node::N28);
+        let e = s.read_energy_pj();
+        assert!((0.2..5.0).contains(&e), "read energy {e} pJ");
+    }
+
+    #[test]
+    fn power_scales_with_access_rate() {
+        let s = SramConfig::kv_buffers(1024, 64, 4, Node::N28);
+        let p1 = s.power_mw(8.0, 500.0);
+        let p2 = s.power_mw(16.0, 500.0);
+        assert!(p2 > p1);
+        assert!(p1 > s.leakage_mw());
+    }
+}

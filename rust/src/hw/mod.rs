@@ -1,0 +1,18 @@
+//! Hardware model of the parallel FlashAttention accelerator (paper
+//! Sections III & V, Figs. 1-4):
+//!
+//! * [`pipeline`] — cycle-level timing: FAU streaming at II=1, the
+//!   ready/valid ACC cascade, DIV/LogDiv, query-round pipelining.  The
+//!   paper's 19/20/21-cycle latency points are asserted in tests.
+//! * [`accelerator`] — RTL-equivalent functional model (bit-exact golden
+//!   arithmetic) joined with the timing model and cost accounting.
+//! * [`cost`] — the 28 nm area/power component library, KV-SRAM model and
+//!   node-scaling helpers that regenerate Figs. 6/7/8(b) and Table IV.
+
+pub mod accelerator;
+pub mod cost;
+pub mod pipeline;
+
+pub use accelerator::Accelerator;
+pub use cost::Arith;
+pub use pipeline::{simulate, CycleStats, LatencyModel};

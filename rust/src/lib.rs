@@ -1,0 +1,69 @@
+//! # H-FA: hybrid floating-point / logarithmic FlashAttention accelerator
+//!
+//! Full-system reproduction of *"H-FA: A Hybrid Floating-Point and
+//! Logarithmic Approach to Hardware Accelerated FlashAttention"*
+//! (Alexandridis & Dimitrakopoulos, CS.AR 2025).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer rust+JAX+Pallas
+//! stack (see `DESIGN.md`):
+//!
+//! * [`arith`] — bit-accurate software models of the hardware number
+//!   formats: BFloat16, Q9.7 fixed point, the logarithmic number system
+//!   (LNS) with Mitchell's approximation and the 8-segment PWL `2^-f`.
+//! * [`attention`] — algorithm-level golden models: exact softmax, lazy
+//!   softmax (Alg. 1), FlashAttention-2 (Alg. 2), the H-FA log-domain
+//!   datapath (Eqs. 14-19, bit-exact vs. the python spec), and the
+//!   multi-block merge (Eqs. 1/16).
+//! * [`hw`] — RTL-equivalent cycle simulator of the parallel accelerator
+//!   (FAUs, ACC cascade, DIV/LogDiv, ready/valid pipeline; Figs. 1-4) and
+//!   the 28 nm area/power cost model that regenerates Figs. 6-8, Table IV.
+//! * [`runtime`] — PJRT bridge: loads the AOT-compiled HLO artifacts
+//!   produced by `python/compile/aot.py` and executes them on CPU.
+//! * [`coordinator`] — the serving stack: request router, dynamic batcher,
+//!   KV-buffer manager, FAU scheduler, metrics.
+//! * [`model`] / [`evalsuite`] — native tiny-LM inference engine and the
+//!   synthetic benchmark suite backing the Table I/II/III accuracy study.
+//!
+//! Support substrates built in-repo (offline environment, see DESIGN.md §9):
+//! [`proptest`] (property testing), [`benchlib`] (criterion-style bench
+//! harness), [`cli`] (argument parsing), [`golden`] (golden-vector replay).
+
+pub mod arith;
+pub mod attention;
+pub mod benchlib;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod evalsuite;
+pub mod golden;
+pub mod hw;
+pub mod logging;
+pub mod model;
+pub mod proptest;
+pub mod runtime;
+pub mod tensor;
+
+pub use arith::bf16::Bf16;
+pub use arith::lns::Lns;
+pub use tensor::Mat;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Locate the artifacts directory: `$HFA_ARTIFACTS` or `./artifacts`
+/// relative to the workspace root (walking up from the current dir).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("HFA_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

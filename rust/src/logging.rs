@@ -1,0 +1,93 @@
+//! Tiny leveled logger (the `log` facade alone has no emitter offline).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn from_str(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("HFA_LOG") {
+        set_level(Level::from_str(&v));
+    }
+}
+
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+fn t0() -> Instant {
+    use std::sync::OnceLock;
+    static START: OnceLock<Instant> = OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+pub fn log(l: Level, target: &str, msg: std::fmt::Arguments) {
+    if enabled(l) {
+        let dt = t0().elapsed().as_secs_f64();
+        eprintln!("[{dt:9.3}s {l:?} {target}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Info, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warnlog {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Warn, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debuglog {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Debug, $target, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing_and_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert_eq!(Level::from_str("TRACE"), Level::Trace);
+        assert_eq!(Level::from_str("bogus"), Level::Info);
+    }
+}

@@ -1,0 +1,232 @@
+//! `hfa` — launcher CLI for the H-FA accelerator system.
+//!
+//! Subcommands:
+//!   info                         list artifacts, models and kernels
+//!   simulate [--head-dim D] [--kv-blocks P] [--seq-len N] [--arith hfa|fa2]
+//!                                cycle simulation + cost report
+//!   eval --size s1 --impl hfa [--limit K] [--task FILE]
+//!                                task-accuracy evaluation (native engine)
+//!   serve [--impl hfa|fa2] [--requests N] [--workers W] [--pjrt]
+//!                                run the serving coordinator on a workload
+//!   reproduce --exp table1|table3|fig5|fig6|fig7|fig8|table4|e2e
+//!                                how to regenerate each paper table/figure
+
+use anyhow::Result;
+use hfa::cli::Args;
+use hfa::config::{AcceleratorConfig, Config, CoordinatorConfig};
+use hfa::hw::cost::{compare, report, Arith};
+use hfa::hw::pipeline::{simulate, LatencyModel};
+
+fn main() {
+    hfa::logging::init_from_env();
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match run(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "info" => info(),
+        "simulate" => cmd_simulate(args),
+        "eval" => cmd_eval(args),
+        "serve" => cmd_serve(args),
+        "reproduce" => cmd_reproduce(args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "hfa — hybrid float/log FlashAttention accelerator (paper reproduction)\n\n\
+         usage: hfa <info|simulate|eval|serve|reproduce> [options]\n\n\
+         see the module docs in rust/src/main.rs and README.md"
+    );
+}
+
+fn info() -> Result<()> {
+    let dir = hfa::artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    match hfa::runtime::ArtifactRegistry::open(&dir) {
+        Err(e) => println!("  (no artifacts: {e})"),
+        Ok(reg) => {
+            println!("attention kernels:");
+            for s in reg.list_attention_kernels()? {
+                println!("  {:4} d={:3} N={:4} B={}", s.kind, s.head_dim, s.seq_len, s.batch);
+            }
+            println!("models:");
+            for (size, imp) in reg.list_models()? {
+                println!("  model_{size}_{imp}");
+            }
+        }
+    }
+    for size in ["s0", "s1", "s2"] {
+        let mdir = dir.join("models").join(size);
+        if mdir.join("weights.bin").is_file() {
+            let cfg = hfa::model::ModelConfig::load(&mdir.join("config.txt"))?;
+            println!(
+                "native weights {size}: d_model={} heads={} layers={} seq={}",
+                cfg.d_model, cfg.n_head, cfg.n_layer, cfg.seq_len
+            );
+        }
+    }
+    Ok(())
+}
+
+fn accel_cfg(args: &Args) -> Result<AcceleratorConfig> {
+    Ok(Config::resolve(None, args)?.accel)
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = accel_cfg(args)?;
+    let arith = match args.get_or("arith", "hfa") {
+        "fa2" => Arith::Fa2,
+        _ => Arith::Hfa,
+    };
+    let queries = args.get_usize("queries", 16)?;
+    let lat = LatencyModel::for_head_dim(cfg.head_dim);
+    let stats = simulate(cfg.head_dim, cfg.seq_len, cfg.kv_blocks, cfg.parallel_queries,
+                         queries, lat);
+    println!(
+        "{} d={} N={} p={} nq={} | {} queries: {} cycles = {:.2} us @ {} MHz",
+        arith.name(), cfg.head_dim, cfg.seq_len, cfg.kv_blocks, cfg.parallel_queries,
+        queries, stats.cycles, stats.time_us(cfg.freq_mhz), cfg.freq_mhz
+    );
+    println!(
+        "  pipeline fill latency: {} cycles (paper: 19/20/21 for d=32/64/128)",
+        lat.total()
+    );
+    println!(
+        "  utilization: FAU {:.0}%  ACC {:.0}%  DIV {:.0}%  | SRAM {:.1} words/cycle",
+        100.0 * stats.fau_utilization(),
+        100.0 * stats.acc_utilization(),
+        100.0 * stats.div_utilization(),
+        stats.sram_words_per_cycle()
+    );
+    let r = report(arith, &cfg, queries);
+    println!(
+        "  cost: datapath {:.3} mm^2 + SRAM {:.3} mm^2, power {:.0} mW",
+        r.datapath_area_mm2, r.sram_area_mm2, r.total_power_mw()
+    );
+    let (fa2, hfa_r, area_s, power_s) = compare(&cfg, queries);
+    println!(
+        "  H-FA vs FA-2: area {:.3} vs {:.3} mm^2 ({area_s:.1}% less), power {:.0} vs {:.0} mW ({power_s:.1}% less)",
+        hfa_r.total_area_mm2(), fa2.total_area_mm2(),
+        hfa_r.total_power_mw(), fa2.total_power_mw()
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let size = args.get_or("size", "s1");
+    let imp = hfa::model::AttnSelect::from_str(args.get_or("impl", "hfa"))?;
+    let limit = args.get_usize("limit", 50)?;
+    let model = hfa::model::Transformer::load(&hfa::artifacts_dir().join("models").join(size))?;
+    let eval_dir = hfa::artifacts_dir().join("eval");
+    let files: Vec<_> = match args.get("task") {
+        Some(f) => vec![("task".to_string(), 0u32, eval_dir.join(f))],
+        None => hfa::evalsuite::tasks::list_eval_files(&eval_dir)?,
+    };
+    let mut total_c = 0;
+    let mut total_n = 0;
+    for (fam, var, path) in files {
+        let acc = hfa::evalsuite::score::evaluate_file(&model, &path, imp, limit, &mut None)?;
+        println!("{fam}_{var}: {:.0}%  ({}/{})", acc.pct(), acc.correct, acc.total);
+        total_c += acc.correct;
+        total_n += acc.total;
+    }
+    println!(
+        "overall {} {}: {:.1}%",
+        size,
+        imp.name(),
+        100.0 * total_c as f64 / total_n.max(1) as f64
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use hfa::coordinator::{KvStore, PjrtBackend, Server, SimBackend};
+    use hfa::proptest::Rng;
+    use std::sync::Arc;
+
+    let cfg = Config::resolve(None, args)?;
+    let requests = args.get_usize("requests", 256)?;
+    let arith = match args.get_or("impl", "hfa") {
+        "fa2" => Arith::Fa2,
+        _ => Arith::Hfa,
+    };
+    let d = cfg.accel.head_dim;
+    let n = cfg.accel.seq_len;
+    let mut rng = Rng::new(7);
+    let kv = Arc::new(KvStore::new(n, d, 4));
+    kv.put("demo", hfa::Mat::from_vec(n, d, rng.normal_vec(n * d)),
+           hfa::Mat::from_vec(n, d, rng.normal_vec(n * d)))?;
+
+    let coord = CoordinatorConfig { workers: cfg.coord.workers, ..cfg.coord.clone() };
+    let factories: Vec<hfa::coordinator::BackendFactory> = if args.flag("pjrt") {
+        let spec = hfa::runtime::AttnKernelSpec {
+            kind: if arith == Arith::Hfa { "hfa".into() } else { "fa2".into() },
+            head_dim: d,
+            seq_len: n,
+            batch: 16,
+        };
+        (0..coord.workers)
+            .map(|_| PjrtBackend::factory(hfa::artifacts_dir(), spec.clone()))
+            .collect()
+    } else {
+        (0..coord.workers).map(|_| SimBackend::factory(arith, cfg.accel.clone())).collect()
+    };
+    let server = Server::start(&coord, kv, factories)?;
+
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|_| loop {
+            match server.submit("demo", rng.normal_vec(d)) {
+                Ok(rx) => break rx,
+                Err(_) => std::thread::sleep(std::time::Duration::from_micros(50)),
+            }
+        })
+        .collect();
+    for rx in rxs {
+        let r = rx.recv()?;
+        anyhow::ensure!(r.ok(), "request failed: {:?}", r.output);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = server.metrics.snapshot();
+    println!(
+        "served {requests} requests in {wall:.3}s = {:.0} QPS | p50 {:.0} us p99 {:.0} us | mean batch {:.1} | rejected {}",
+        requests as f64 / wall, snap.p50_us, snap.p99_us, snap.mean_batch, snap.rejected
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_reproduce(args: &Args) -> Result<()> {
+    let exp = args.get_or("exp", "all");
+    let mapping = [
+        ("table1", "cargo bench --bench table1_accuracy   # Tables I and II"),
+        ("table2", "cargo bench --bench table1_accuracy   # emits Table II too"),
+        ("table3", "cargo bench --bench table3_error_sources"),
+        ("table4", "cargo bench --bench table4_sota"),
+        ("fig5", "cargo bench --bench fig5_mitchell_hist"),
+        ("fig6", "cargo bench --bench fig7_area_power    # includes Fig. 6 breakdown"),
+        ("fig7", "cargo bench --bench fig7_area_power"),
+        ("fig8", "cargo bench --bench fig8_scaling"),
+        ("e2e", "cargo bench --bench e2e_throughput"),
+    ];
+    for (k, v) in mapping {
+        if exp == "all" || exp == k {
+            println!("{k:7} -> {v}");
+        }
+    }
+    Ok(())
+}

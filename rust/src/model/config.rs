@@ -1,0 +1,70 @@
+//! Model configuration file (`config.txt` written by `model.py`).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub n_layer: usize,
+    pub seq_len: usize,
+}
+
+impl ModelConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_head
+    }
+
+    pub fn load(path: &Path) -> Result<ModelConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading model config {}", path.display()))?;
+        let mut name = String::new();
+        let (mut vocab, mut d_model, mut n_head, mut n_layer, mut seq_len) = (0, 0, 0, 0, 0);
+        for line in text.lines() {
+            let Some((k, v)) = line.split_once('=') else { continue };
+            match k.trim() {
+                "name" => name = v.trim().to_string(),
+                "vocab" => vocab = v.trim().parse()?,
+                "d_model" => d_model = v.trim().parse()?,
+                "n_head" => n_head = v.trim().parse()?,
+                "n_layer" => n_layer = v.trim().parse()?,
+                "seq_len" => seq_len = v.trim().parse()?,
+                _ => {}
+            }
+        }
+        anyhow::ensure!(d_model > 0 && n_head > 0 && n_layer > 0, "incomplete config");
+        anyhow::ensure!(d_model % n_head == 0, "d_model must divide n_head");
+        Ok(ModelConfig { name, vocab, d_model, n_head, n_layer, seq_len })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn parses_config_file() {
+        let dir = std::env::temp_dir().join("hfa_model_cfg");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("config.txt");
+        let mut f = std::fs::File::create(&p).unwrap();
+        writeln!(f, "name=s1\nvocab=64\nd_model=64\nn_head=2\nn_layer=2\nseq_len=128").unwrap();
+        let c = ModelConfig::load(&p).unwrap();
+        assert_eq!(c.name, "s1");
+        assert_eq!(c.d_head(), 32);
+    }
+
+    #[test]
+    fn rejects_incomplete() {
+        let dir = std::env::temp_dir().join("hfa_model_cfg2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("config.txt");
+        std::fs::write(&p, "name=x\n").unwrap();
+        assert!(ModelConfig::load(&p).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Native tiny-LM inference engine: loads the weights trained at artifact
+//! build time (`artifacts/models/<size>/`) and runs the transformer
+//! forward in f32 with a pluggable attention implementation — the
+//! instrumentable path behind the Table I/II/III accuracy study and the
+//! Fig. 5 histogram (the PJRT full-model artifacts cross-check it).
+
+pub mod config;
+pub mod transformer;
+pub mod weights;
+
+pub use config::ModelConfig;
+pub use transformer::{AttnSelect, Transformer};
+pub use weights::Weights;

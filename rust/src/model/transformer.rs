@@ -1,0 +1,237 @@
+//! The native transformer forward: pre-LN GPT blocks with pluggable
+//! attention — `exact` (training parity), `fa2` (BF16 FlashAttention-2),
+//! `hfa` (the bit-exact log-domain datapath), or the functional H-FA
+//! emulation with per-approximation ablation switches (Table III) and an
+//! optional Mitchell-input histogram (Fig. 5).
+//!
+//! Mirrors `python/compile/model.py` (same LN epsilon, tanh-approximated
+//! GELU, weight-tied head); the PJRT full-model artifacts cross-check the
+//! numerics in `rust/tests/model_eval.rs`.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::arith::mitchell::MitchellHistogram;
+use crate::attention::{exact, fa2, hfa};
+use crate::tensor::Mat;
+
+use super::config::ModelConfig;
+use super::weights::Weights;
+
+/// Attention implementation selector (including ablations).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AttnSelect {
+    Exact,
+    Fa2,
+    Hfa,
+    /// Functional H-FA with ablation switches (Table III).
+    HfaEmu(hfa::EmuConfig),
+}
+
+impl AttnSelect {
+    pub fn from_str(s: &str) -> Result<AttnSelect> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "exact" => AttnSelect::Exact,
+            "fa2" => AttnSelect::Fa2,
+            "hfa" => AttnSelect::Hfa,
+            "hfa-emu" => AttnSelect::HfaEmu(hfa::EmuConfig::all_on()),
+            "hfa-noquant" => {
+                AttnSelect::HfaEmu(hfa::EmuConfig { quant: false, ..hfa::EmuConfig::all_on() })
+            }
+            "hfa-nomitchell" => {
+                AttnSelect::HfaEmu(hfa::EmuConfig { mitchell: false, ..hfa::EmuConfig::all_on() })
+            }
+            "hfa-nopwl" => {
+                AttnSelect::HfaEmu(hfa::EmuConfig { pwl: false, ..hfa::EmuConfig::all_on() })
+            }
+            other => anyhow::bail!("unknown attention selector {other:?}"),
+        })
+    }
+
+    pub fn name(self) -> String {
+        match self {
+            AttnSelect::Exact => "exact".into(),
+            AttnSelect::Fa2 => "fa2".into(),
+            AttnSelect::Hfa => "hfa".into(),
+            AttnSelect::HfaEmu(c) => format!(
+                "hfa-emu(q={},m={},p={})",
+                c.quant as u8, c.mitchell as u8, c.pwl as u8
+            ),
+        }
+    }
+}
+
+/// A loaded model ready for inference.
+pub struct Transformer {
+    pub cfg: ModelConfig,
+    w: Weights,
+}
+
+impl Transformer {
+    pub fn load(dir: &Path) -> Result<Transformer> {
+        let cfg = ModelConfig::load(&dir.join("config.txt"))?;
+        let w = Weights::load(dir)?;
+        Ok(Transformer { cfg, w })
+    }
+
+    /// Forward one sequence: `tokens` -> logits `(T, V)`.
+    /// `hist` collects Mitchell inputs when attention is an H-FA variant.
+    pub fn forward(
+        &self,
+        tokens: &[i32],
+        attn: AttnSelect,
+        hist: &mut Option<&mut MitchellHistogram>,
+    ) -> Result<Mat> {
+        let t = tokens.len();
+        anyhow::ensure!(t <= self.cfg.seq_len, "sequence too long");
+        let d = self.cfg.d_model;
+
+        let tok_emb = self.w.mat("tok_emb")?;
+        let pos_emb = self.w.mat("pos_emb")?;
+        let mut x = Mat::zeros(t, d);
+        for (i, &tok) in tokens.iter().enumerate() {
+            anyhow::ensure!((tok as usize) < self.cfg.vocab, "token {tok} out of vocab");
+            for j in 0..d {
+                x.set(i, j, tok_emb.at(tok as usize, j) + pos_emb.at(i, j));
+            }
+        }
+
+        for l in 0..self.cfg.n_layer {
+            let pfx = format!("l{l}");
+            let ln1 = layer_norm(&x, &self.w.vec(&format!("{pfx}.ln1_g"))?,
+                                 &self.w.vec(&format!("{pfx}.ln1_b"))?);
+            let a = self.attention(&ln1, l, attn, hist)?;
+            add_inplace(&mut x, &a);
+
+            let ln2 = layer_norm(&x, &self.w.vec(&format!("{pfx}.ln2_g"))?,
+                                 &self.w.vec(&format!("{pfx}.ln2_b"))?);
+            let mut h = ln2.matmul(&self.w.mat(&format!("{pfx}.w1"))?);
+            let b1 = self.w.vec(&format!("{pfx}.b1"))?;
+            for r in 0..h.rows {
+                for c in 0..h.cols {
+                    h.set(r, c, gelu(h.at(r, c) + b1[c]));
+                }
+            }
+            let mut m = h.matmul(&self.w.mat(&format!("{pfx}.w2"))?);
+            let b2 = self.w.vec(&format!("{pfx}.b2"))?;
+            for r in 0..m.rows {
+                for c in 0..m.cols {
+                    let v = m.at(r, c) + b2[c];
+                    m.set(r, c, v);
+                }
+            }
+            add_inplace(&mut x, &m);
+        }
+
+        let xf = layer_norm(&x, &self.w.vec("lnf_g")?, &self.w.vec("lnf_b")?);
+        Ok(xf.matmul(&tok_emb.t())) // weight-tied head
+    }
+
+    fn attention(
+        &self,
+        x: &Mat,
+        layer: usize,
+        attn: AttnSelect,
+        hist: &mut Option<&mut MitchellHistogram>,
+    ) -> Result<Mat> {
+        let t = x.rows;
+        let (h, dh) = (self.cfg.n_head, self.cfg.d_head());
+        let pfx = format!("l{layer}");
+        let q_all = x.matmul(&self.w.mat(&format!("{pfx}.wq"))?);
+        let k_all = x.matmul(&self.w.mat(&format!("{pfx}.wk"))?);
+        let v_all = x.matmul(&self.w.mat(&format!("{pfx}.wv"))?);
+
+        // causal mask rows (shared across heads)
+        let mut mask = vec![false; t * t];
+        for i in 0..t {
+            for j in 0..=i {
+                mask[i * t + j] = true;
+            }
+        }
+
+        let mut merged = Mat::zeros(t, self.cfg.d_model);
+        for head in 0..h {
+            let slice = |m: &Mat| {
+                Mat::from_fn(t, dh, |r, c| m.at(r, head * dh + c))
+            };
+            let (q, k, v) = (slice(&q_all), slice(&k_all), slice(&v_all));
+            let o = match attn {
+                AttnSelect::Exact => exact::attention(&q, &k, &v, None, Some(&mask)),
+                AttnSelect::Fa2 => {
+                    // the BF16 hardware path rounds operands on ingress
+                    fa2::attention(&q.round_bf16(), &k.round_bf16(), &v.round_bf16(),
+                                   None, Some(&mask)).round_bf16()
+                }
+                AttnSelect::Hfa => hfa::attention(
+                    &q.round_bf16(), &k.round_bf16(), &v.round_bf16(),
+                    None, Some(&mask), hist),
+                AttnSelect::HfaEmu(cfg) => hfa::attention_emu_masked(
+                    &q.round_bf16(), &k.round_bf16(), &v.round_bf16(), cfg, None, Some(&mask)),
+            };
+            for r in 0..t {
+                for c in 0..dh {
+                    merged.set(r, head * dh + c, o.at(r, c));
+                }
+            }
+        }
+        Ok(merged.matmul(&self.w.mat(&format!("{pfx}.wo"))?))
+    }
+}
+
+fn layer_norm(x: &Mat, g: &[f32], b: &[f32]) -> Mat {
+    let mut out = Mat::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let mu: f32 = row.iter().sum::<f32>() / row.len() as f32;
+        let var: f32 = row.iter().map(|v| (v - mu).powi(2)).sum::<f32>() / row.len() as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for c in 0..x.cols {
+            out.set(r, c, (row[c] - mu) * inv * g[c] + b[c]);
+        }
+    }
+    out
+}
+
+/// tanh-approximated GELU (jax.nn.gelu default).
+fn gelu(x: f32) -> f32 {
+    let c = (2.0f32 / std::f32::consts::PI).sqrt();
+    0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn add_inplace(x: &mut Mat, y: &Mat) {
+    for (a, b) in x.data.iter_mut().zip(&y.data) {
+        *a += b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gelu_reference_points() {
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158808).abs() < 1e-4);
+        assert!(gelu(10.0) > 9.99);
+    }
+
+    #[test]
+    fn layer_norm_normalizes() {
+        let x = Mat::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let out = layer_norm(&x, &[1.0; 4], &[0.0; 4]);
+        let mean: f32 = out.row(0).iter().sum::<f32>() / 4.0;
+        let var: f32 = out.row(0).iter().map(|v| (v - mean).powi(2)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn attn_select_parses_all_variants() {
+        for s in ["exact", "fa2", "hfa", "hfa-emu", "hfa-noquant", "hfa-nomitchell", "hfa-nopwl"] {
+            assert!(AttnSelect::from_str(s).is_ok(), "{s}");
+        }
+        assert!(AttnSelect::from_str("bogus").is_err());
+    }
+}

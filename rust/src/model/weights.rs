@@ -1,0 +1,102 @@
+//! Weight loading: flat little-endian f32 `weights.bin` + line-based
+//! `manifest.txt` (`name|shape|offset|count`) written by `model.py`.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::Mat;
+
+/// All named parameters of one model.
+pub struct Weights {
+    tensors: HashMap<String, (Vec<usize>, Vec<f32>)>,
+}
+
+impl Weights {
+    pub fn load(dir: &Path) -> Result<Weights> {
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let raw = std::fs::read(dir.join("weights.bin"))
+            .with_context(|| format!("reading weights.bin in {}", dir.display()))?;
+        anyhow::ensure!(raw.len() % 4 == 0, "weights.bin not a multiple of 4 bytes");
+        let flat: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+
+        let mut tensors = HashMap::new();
+        for line in manifest.lines() {
+            if line.starts_with('#') || line.trim().is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('|').collect();
+            if parts.len() != 4 {
+                bail!("bad manifest line {line:?}");
+            }
+            let name = parts[0].to_string();
+            let shape: Vec<usize> = parts[1]
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.parse().unwrap())
+                .collect();
+            let offset: usize = parts[2].parse()?;
+            let count: usize = parts[3].parse()?;
+            anyhow::ensure!(offset + count <= flat.len(), "manifest overruns weights.bin");
+            anyhow::ensure!(
+                shape.iter().product::<usize>() == count,
+                "shape/count mismatch for {name}"
+            );
+            tensors.insert(name, (shape, flat[offset..offset + count].to_vec()));
+        }
+        Ok(Weights { tensors })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.tensors.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Fetch a 2-D tensor as a Mat.
+    pub fn mat(&self, name: &str) -> Result<Mat> {
+        let (shape, data) = self
+            .tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing weight {name}"))?;
+        anyhow::ensure!(shape.len() == 2, "{name} is not 2-D (shape {shape:?})");
+        Ok(Mat::from_vec(shape[0], shape[1], data.clone()))
+    }
+
+    /// Fetch a 1-D tensor.
+    pub fn vec(&self, name: &str) -> Result<Vec<f32>> {
+        let (shape, data) = self
+            .tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing weight {name}"))?;
+        anyhow::ensure!(shape.len() == 1, "{name} is not 1-D (shape {shape:?})");
+        Ok(data.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn loads_manifest_and_bin() {
+        let dir = std::env::temp_dir().join("hfa_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let data: Vec<f32> = (0..10).map(|x| x as f32).collect();
+        let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(dir.join("weights.bin"), bytes).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.txt")).unwrap();
+        writeln!(f, "# header\na|2,3|0|6\nb|4|6|4").unwrap();
+        let w = Weights::load(&dir).unwrap();
+        assert_eq!(w.mat("a").unwrap().at(1, 2), 5.0);
+        assert_eq!(w.vec("b").unwrap(), vec![6.0, 7.0, 8.0, 9.0]);
+        assert!(w.mat("missing").is_err());
+        assert!(w.vec("a").is_err());
+    }
+}

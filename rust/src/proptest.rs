@@ -1,0 +1,142 @@
+//! In-repo property-testing micro-framework (crates.io `proptest` is not
+//! available offline — DESIGN.md §9).
+//!
+//! Deterministic xorshift PRNG + a `check` runner that reports the first
+//! failing case with its seed and iteration so failures are reproducible.
+
+/// Deterministic xorshift64* generator.
+#[derive(Clone, Debug)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Rng(seed.max(1))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n.max(1)
+    }
+
+    /// Uniform i32 in [lo, hi).
+    #[inline]
+    pub fn int_in(&mut self, lo: i32, hi: i32) -> i32 {
+        lo + (self.below((hi - lo) as u64) as i32)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn unit_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 / (1u32 << 24) as f32
+    }
+
+    /// Uniform f32 in [lo, hi).
+    #[inline]
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.unit_f32() * (hi - lo)
+    }
+
+    /// Approximately standard normal (sum of 12 uniforms - 6).
+    pub fn normal_f32(&mut self) -> f32 {
+        let mut s = 0.0f32;
+        for _ in 0..12 {
+            s += self.unit_f32();
+        }
+        s - 6.0
+    }
+
+    /// Vec of approx-normal f32.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal_f32()).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+}
+
+/// Run `f` on `iters` generated cases; panic with seed/iteration context on
+/// the first failure (returning `Err(msg)` from the property).
+pub fn check<G, T, F>(name: &str, seed: u64, iters: usize, mut gen: G, mut f: F)
+where
+    G: FnMut(&mut Rng) -> T,
+    F: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    let mut rng = Rng::new(seed);
+    for i in 0..iters {
+        let case = gen(&mut rng);
+        if let Err(msg) = f(&case) {
+            panic!(
+                "property '{name}' failed at iteration {i} (seed {seed}): {msg}\ncase: {case:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn unit_f32_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.unit_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_has_reasonable_moments() {
+        let mut r = Rng::new(1);
+        let xs: Vec<f32> = (0..20_000).map(|_| r.normal_f32()).collect();
+        let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / xs.len() as f32;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn check_runs_all_iters() {
+        let mut count = 0;
+        check("counter", 3, 50, |r| r.int_in(0, 10), |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn check_panics_on_failure() {
+        check("fails", 3, 50, |r| r.int_in(0, 10), |&x| {
+            if x < 9 { Ok(()) } else { Err("too big".into()) }
+        });
+    }
+}

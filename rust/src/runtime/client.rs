@@ -1,0 +1,108 @@
+//! PJRT CPU client wrapper: HLO text -> compile -> execute.
+//!
+//! Interchange is HLO **text**, not serialized `HloModuleProto`: jax >= 0.5
+//! emits protos with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids (see
+//! /opt/xla-example/README.md).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::Mat;
+
+/// The PJRT engine: one CPU client shared by all loaded executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+/// A compiled executable plus its expected input/output geometry.
+pub struct LoadedExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// Element type of an executable argument.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArgType {
+    F32,
+    Bf16,
+    I32,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO text module.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedExecutable {
+            exe,
+            name: path.file_stem().unwrap_or_default().to_string_lossy().into_owned(),
+        })
+    }
+}
+
+/// Build an input literal from f32 data with the given logical shape,
+/// converted to the executable's expected element type.
+pub fn literal_f32(data: &[f32], shape: &[i64], ty: ArgType) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data).reshape(shape)?;
+    Ok(match ty {
+        ArgType::F32 => lit,
+        ArgType::Bf16 => lit.convert(xla::ElementType::Bf16.primitive_type())?,
+        ArgType::I32 => lit.convert(xla::ElementType::S32.primitive_type())?,
+    })
+}
+
+/// Build an i32 input literal.
+pub fn literal_i32(data: &[i32], shape: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(shape)?)
+}
+
+impl LoadedExecutable {
+    /// Execute with the given literals; returns the elements of the output
+    /// tuple as f32 vectors (jax lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let elems = result.to_tuple()?;
+        let mut out = Vec::with_capacity(elems.len());
+        for e in elems {
+            let f = e.convert(xla::ElementType::F32.primitive_type())?;
+            out.push(f.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+
+    /// Convenience: run an attention kernel `(q, k, v) -> o` where all
+    /// tensors are BF16 on the wire and `Mat`-shaped on the rust side.
+    pub fn run_attention(&self, q: &Mat, k: &Mat, v: &Mat) -> Result<Mat> {
+        let ql = literal_f32(&q.data, &[q.rows as i64, q.cols as i64], ArgType::Bf16)?;
+        let kl = literal_f32(&k.data, &[k.rows as i64, k.cols as i64], ArgType::Bf16)?;
+        let vl = literal_f32(&v.data, &[v.rows as i64, v.cols as i64], ArgType::Bf16)?;
+        let outs = self.run(&[ql, kl, vl])?;
+        anyhow::ensure!(outs.len() == 1, "expected a 1-tuple result");
+        Ok(Mat::from_vec(q.rows, q.cols, outs.into_iter().next().unwrap()))
+    }
+
+    /// Convenience: run a full-model forward `tokens (1,T) -> logits
+    /// (1,T,V)`; returns the flat logits vector.
+    pub fn run_model(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let tl = literal_i32(tokens, &[1, tokens.len() as i64])?;
+        let outs = self.run(&[tl])?;
+        anyhow::ensure!(outs.len() == 1, "expected a 1-tuple result");
+        Ok(outs.into_iter().next().unwrap())
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: loads the AOT-compiled HLO **text** artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! Python never runs on this path — the rust binary is self-contained once
+//! `make artifacts` has produced `artifacts/hlo/*.hlo.txt`.
+
+pub mod client;
+pub mod registry;
+
+pub use client::{Engine, LoadedExecutable};
+pub use registry::{ArtifactRegistry, AttnKernelSpec};

@@ -1,0 +1,146 @@
+//! Artifact registry: discovers and lazily compiles the HLO modules under
+//! `artifacts/hlo/`, keyed by the naming convention of `aot.py`
+//! (`attn_<kind>_d<d>_n<n>_b<b>.hlo.txt`, `model_<size>_<impl>.hlo.txt`).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::client::{Engine, LoadedExecutable};
+
+/// Parsed name of an attention-kernel artifact.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct AttnKernelSpec {
+    /// "fa2" or "hfa".
+    pub kind: String,
+    pub head_dim: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+}
+
+impl AttnKernelSpec {
+    pub fn file_name(&self) -> String {
+        format!(
+            "attn_{}_d{}_n{}_b{}.hlo.txt",
+            self.kind, self.head_dim, self.seq_len, self.batch
+        )
+    }
+
+    pub fn parse(stem: &str) -> Option<AttnKernelSpec> {
+        // attn_<kind>_d<d>_n<n>_b<b>
+        let rest = stem.strip_prefix("attn_")?;
+        let mut parts = rest.split('_');
+        let kind = parts.next()?.to_string();
+        let d = parts.next()?.strip_prefix('d')?.parse().ok()?;
+        let n = parts.next()?.strip_prefix('n')?.parse().ok()?;
+        let b = parts.next()?.strip_prefix('b')?.parse().ok()?;
+        Some(AttnKernelSpec { kind, head_dim: d, seq_len: n, batch: b })
+    }
+}
+
+/// Lazily-compiling artifact registry (compilation cached per path).
+pub struct ArtifactRegistry {
+    engine: Engine,
+    hlo_dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<LoadedExecutable>>>,
+}
+
+impl ArtifactRegistry {
+    pub fn open(artifacts_dir: &std::path::Path) -> Result<ArtifactRegistry> {
+        let hlo_dir = artifacts_dir.join("hlo");
+        anyhow::ensure!(
+            hlo_dir.is_dir(),
+            "HLO artifact dir {} missing — run `make artifacts`",
+            hlo_dir.display()
+        );
+        Ok(ArtifactRegistry {
+            engine: Engine::cpu()?,
+            hlo_dir,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// All attention-kernel specs present on disk.
+    pub fn list_attention_kernels(&self) -> Result<Vec<AttnKernelSpec>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.hlo_dir)? {
+            let name = entry?.file_name().to_string_lossy().into_owned();
+            if let Some(stem) = name.strip_suffix(".hlo.txt") {
+                if let Some(spec) = AttnKernelSpec::parse(stem) {
+                    out.push(spec);
+                }
+            }
+        }
+        out.sort_by_key(|s| (s.kind.clone(), s.head_dim, s.seq_len));
+        Ok(out)
+    }
+
+    /// Model sizes with a given attention impl present on disk.
+    pub fn list_models(&self) -> Result<Vec<(String, String)>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.hlo_dir)? {
+            let name = entry?.file_name().to_string_lossy().into_owned();
+            if let Some(stem) = name.strip_suffix(".hlo.txt") {
+                if let Some(rest) = stem.strip_prefix("model_") {
+                    if let Some((size, imp)) = rest.split_once('_') {
+                        out.push((size.to_string(), imp.to_string()));
+                    }
+                }
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    fn load_cached(&self, file: &str) -> Result<std::sync::Arc<LoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(file) {
+            return Ok(e.clone());
+        }
+        let path = self.hlo_dir.join(file);
+        if !path.is_file() {
+            bail!("artifact {} not found — run `make artifacts`", path.display());
+        }
+        let exe = std::sync::Arc::new(
+            self.engine
+                .load_hlo_text(&path)
+                .with_context(|| format!("loading {file}"))?,
+        );
+        self.cache.lock().unwrap().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Load (and cache) an attention kernel.
+    pub fn attention_kernel(&self, spec: &AttnKernelSpec) -> Result<std::sync::Arc<LoadedExecutable>> {
+        self.load_cached(&spec.file_name())
+    }
+
+    /// Load (and cache) a full-model forward.
+    pub fn model(&self, size: &str, imp: &str) -> Result<std::sync::Arc<LoadedExecutable>> {
+        self.load_cached(&format!("model_{size}_{imp}.hlo.txt"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_name_roundtrip() {
+        let s = AttnKernelSpec { kind: "hfa".into(), head_dim: 64, seq_len: 1024, batch: 16 };
+        let parsed = AttnKernelSpec::parse("attn_hfa_d64_n1024_b16").unwrap();
+        assert_eq!(parsed, s);
+        assert_eq!(s.file_name(), "attn_hfa_d64_n1024_b16.hlo.txt");
+    }
+
+    #[test]
+    fn spec_rejects_malformed() {
+        assert!(AttnKernelSpec::parse("model_s1_hfa").is_none());
+        assert!(AttnKernelSpec::parse("attn_hfa_dxx_n1024_b16").is_none());
+    }
+}

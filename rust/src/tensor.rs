@@ -1,0 +1,164 @@
+//! Minimal row-major f32 matrix used by the golden models, the native
+//! transformer and the hardware simulator.  (No external linear-algebra
+//! crates are available offline; attention working sets are small.)
+
+/// Row-major `rows x cols` f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// `self (r x k) * rhs (k x c)` -> `(r x c)`, f32 accumulate.
+    pub fn matmul(&self, rhs: &Mat) -> Mat {
+        assert_eq!(self.cols, rhs.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, rhs.cols);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let orow = out.row_mut(i);
+            for (kk, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = rhs.row(kk);
+                for (j, &b) in brow.iter().enumerate() {
+                    orow[j] += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Transpose.
+    pub fn t(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |r, c| self.at(c, r))
+    }
+
+    /// Slice of rows [lo, hi).
+    pub fn rows_slice(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.rows);
+        Mat::from_vec(hi - lo, self.cols, self.data[lo * self.cols..hi * self.cols].to_vec())
+    }
+
+    /// Round every element through BF16 (hardware input convention).
+    pub fn round_bf16(&self) -> Mat {
+        let data = self.data.iter().map(|&x| crate::Bf16::from_f32(x).to_f32()).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Max |a - b| over all elements.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative RMS error vs. a reference.
+    pub fn rel_rms(&self, reference: &Mat) -> f64 {
+        let num: f64 = self
+            .data
+            .iter()
+            .zip(&reference.data)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum();
+        let den: f64 = reference.data.iter().map(|&b| (b as f64).powi(2)).sum();
+        (num / den.max(1e-300)).sqrt()
+    }
+}
+
+/// Sequential dot product (definition order matters for cross-checking
+/// against hardware which accumulates in stream order).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let i = Mat::from_fn(2, 2, |r, c| if r == c { 1.0 } else { 0.0 });
+        assert_eq!(a.matmul(&i), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Mat::from_fn(3, 5, |r, c| (r * 5 + c) as f32);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn rows_slice_picks_rows() {
+        let a = Mat::from_fn(4, 2, |r, _| r as f32);
+        let s = a.rows_slice(1, 3);
+        assert_eq!(s.data, vec![1., 1., 2., 2.]);
+    }
+
+    #[test]
+    fn rel_rms_zero_for_identical() {
+        let a = Mat::from_fn(2, 2, |r, c| (r + c) as f32 + 1.0);
+        assert!(a.rel_rms(&a) < 1e-12);
+    }
+}

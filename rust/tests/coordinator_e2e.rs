@@ -1,0 +1,102 @@
+//! Coordinator end-to-end under concurrency, failure injection and
+//! backpressure.
+
+use std::sync::Arc;
+
+use hfa::config::{AcceleratorConfig, CoordinatorConfig};
+use hfa::coordinator::{KvStore, Server, SimBackend};
+use hfa::hw::Arith;
+use hfa::proptest::Rng;
+use hfa::Mat;
+
+fn boot(workers: usize, queue_depth: usize, window_us: u64) -> Server {
+    let accel = AcceleratorConfig {
+        head_dim: 8, seq_len: 32, kv_blocks: 2, parallel_queries: 1, freq_mhz: 500.0,
+    };
+    let coord = CoordinatorConfig { max_batch: 8, batch_window_us: window_us, workers, queue_depth };
+    let kv = Arc::new(KvStore::new(32, 8, 8));
+    let mut rng = Rng::new(77);
+    kv.put("a", Mat::from_vec(32, 8, rng.normal_vec(256)),
+           Mat::from_vec(32, 8, rng.normal_vec(256))).unwrap();
+    kv.put("b", Mat::from_vec(32, 8, rng.normal_vec(256)),
+           Mat::from_vec(32, 8, rng.normal_vec(256))).unwrap();
+    let factories = (0..workers).map(|_| SimBackend::factory(Arith::Hfa, accel.clone())).collect();
+    Server::start(&coord, kv, factories).unwrap()
+}
+
+#[test]
+fn concurrent_clients_all_complete() {
+    let srv = Arc::new(boot(3, 512, 100));
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let srv = srv.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(1000 + t);
+            let mut ok = 0;
+            for _ in 0..50 {
+                let session = if rng.bool() { "a" } else { "b" };
+                match srv.call(session, rng.normal_vec(8)) {
+                    Ok(r) if r.ok() => ok += 1,
+                    _ => {}
+                }
+            }
+            ok
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 200, "all concurrent requests must succeed");
+    let snap = srv.metrics.snapshot();
+    assert_eq!(snap.completed, 200);
+    assert_eq!(snap.failed, 0);
+}
+
+#[test]
+fn mixed_good_and_bad_sessions() {
+    let srv = boot(2, 128, 50);
+    let mut rng = Rng::new(9);
+    let mut good = 0;
+    let mut bad = 0;
+    for i in 0..40 {
+        let session = if i % 3 == 0 { "missing" } else { "a" };
+        let r = srv.call(session, rng.normal_vec(8)).unwrap();
+        if r.ok() { good += 1 } else { bad += 1 }
+    }
+    assert_eq!(good + bad, 40);
+    assert!(bad >= 13, "missing-session requests must fail cleanly");
+    srv.shutdown();
+}
+
+#[test]
+fn tiny_queue_exerts_backpressure() {
+    let srv = boot(1, 2, 5_000); // long window, tiny queue
+    let mut rng = Rng::new(5);
+    let mut rejected = 0;
+    let mut receivers = Vec::new();
+    for _ in 0..64 {
+        match srv.submit("a", rng.normal_vec(8)) {
+            Ok(rx) => receivers.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "expected ingress rejections with queue depth 2");
+    for rx in receivers {
+        let _ = rx.recv(); // drain accepted ones
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_completes_inflight() {
+    let srv = boot(2, 256, 2_000);
+    let mut rng = Rng::new(3);
+    let rxs: Vec<_> = (0..16).map(|_| srv.submit("a", rng.normal_vec(8)).unwrap()).collect();
+    srv.shutdown(); // must drain the batcher, not drop requests
+    let mut done = 0;
+    for rx in rxs {
+        if let Ok(r) = rx.recv() {
+            assert!(r.ok());
+            done += 1;
+        }
+    }
+    assert_eq!(done, 16, "in-flight requests must complete on shutdown");
+}

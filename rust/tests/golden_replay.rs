@@ -1,0 +1,137 @@
+//! Cross-language bit-exactness: replay the golden vectors dumped by
+//! `python/compile/goldens.py` and assert the rust arithmetic matches the
+//! python spec bit-for-bit (DESIGN.md §3).
+//!
+//! Requires `make artifacts` (skips, loudly, if artifacts are missing).
+
+use hfa::arith::bf16::Bf16;
+use hfa::arith::fix::quant_diff_q7;
+use hfa::arith::lns::{lns_add, Lns};
+use hfa::arith::pwl;
+use hfa::golden::{parse_attn_case, parse_rows};
+use hfa::Mat;
+
+fn golden_dir() -> Option<std::path::PathBuf> {
+    let dir = hfa::artifacts_dir().join("golden");
+    if dir.is_dir() {
+        Some(dir)
+    } else {
+        eprintln!("WARNING: {} missing — run `make artifacts` first", dir.display());
+        None
+    }
+}
+
+#[test]
+fn pwl_tables_bit_identical() {
+    let Some(dir) = golden_dir() else { return };
+    let rows = parse_rows(&dir.join("pwl_table.txt")).unwrap();
+    assert_eq!(rows.len(), pwl::SEGMENTS);
+    for (j, row) in rows.iter().enumerate() {
+        assert_eq!(row[0] as i32, pwl::PWL_C0[j], "C0[{j}]");
+        assert_eq!(row[1] as i32, pwl::PWL_C1[j], "C1[{j}]");
+    }
+}
+
+#[test]
+fn bf16_to_log_conversion_bit_identical() {
+    let Some(dir) = golden_dir() else { return };
+    let rows = parse_rows(&dir.join("log_conv.txt")).unwrap();
+    assert!(rows.len() > 1000);
+    for row in rows {
+        let (bits, sign, logq) = (row[0] as u16, row[1] as i32, row[2] as i32);
+        let l = Lns::from_bf16(Bf16::from_bits(bits));
+        assert_eq!((l.sign, l.log), (sign, logq), "bits {bits:#06x}");
+    }
+}
+
+#[test]
+fn log_to_bf16_conversion_bit_identical() {
+    let Some(dir) = golden_dir() else { return };
+    let rows = parse_rows(&dir.join("back_conv.txt")).unwrap();
+    for row in rows {
+        let (sign, logq, bits) = (row[0] as i32, row[1] as i32, row[2] as u16);
+        let got = Lns { sign, log: logq }.to_bf16().bits();
+        assert_eq!(got, bits, "sign {sign} log {logq}");
+    }
+}
+
+#[test]
+fn quantizer_bit_identical() {
+    let Some(dir) = golden_dir() else { return };
+    let rows = parse_rows(&dir.join("quant.txt")).unwrap();
+    for row in rows {
+        let x = f32::from_bits(row[0] as u32);
+        assert_eq!(quant_diff_q7(x), row[1] as i32, "x={x}");
+    }
+}
+
+#[test]
+fn lns_add_bit_identical() {
+    let Some(dir) = golden_dir() else { return };
+    let rows = parse_rows(&dir.join("lns_add.txt")).unwrap();
+    assert!(rows.len() > 3000);
+    for row in rows {
+        let a = Lns { sign: row[0] as i32, log: row[1] as i32 };
+        let b = Lns { sign: row[2] as i32, log: row[3] as i32 };
+        let r = lns_add(a, b);
+        assert_eq!(
+            (r.sign, r.log),
+            (row[4] as i32, row[5] as i32),
+            "lns_add({a:?}, {b:?})"
+        );
+    }
+}
+
+fn run_attn_case(name: &str) {
+    let Some(dir) = golden_dir() else { return };
+    let case = parse_attn_case(&dir.join(name)).unwrap();
+    let v = Mat::from_vec(case.n, case.d, case.v.clone());
+
+    // 1) LNS pipeline from python's own scores: must be bit-exact
+    let scores = Mat::from_vec(case.b, case.n, case.scores.clone());
+    if case.num_blocks == 1 {
+        let out = hfa::attention::hfa::attention_from_scores(&scores, &v);
+        for (i, &expect_bits) in case.out_bf16.iter().enumerate() {
+            let got = Bf16::from_f32(out.data[i]).bits();
+            assert_eq!(got, expect_bits, "{name}: lane {i} from-scores mismatch");
+        }
+    }
+
+    // 2) full pipeline recomputing scores in rust: tolerance-level match
+    //    (f32 dot association order differs from numpy BLAS)
+    let q = Mat::from_vec(case.b, case.d, case.q.clone());
+    let k = Mat::from_vec(case.n, case.d, case.k.clone());
+    let out = if case.num_blocks == 1 {
+        hfa::attention::hfa::attention(&q, &k, &v, None, None, &mut None)
+    } else {
+        hfa::attention::hfa::attention_blocked(&q, &k, &v, case.num_blocks, None, &mut None)
+    };
+    let expect: Vec<f32> = case
+        .out_bf16
+        .iter()
+        .map(|&b| Bf16::from_bits(b).to_f32())
+        .collect();
+    let expect = Mat::from_vec(case.b, case.d, expect);
+    let rel = out.rel_rms(&expect);
+    assert!(rel < 0.06, "{name}: full-pipeline rel rms {rel}");
+
+    // 3) rust FA-2 vs python FA-2 reference
+    let fa2 = hfa::attention::fa2::attention(&q, &k, &v, None, None);
+    let fa2_ref = Mat::from_vec(case.b, case.d, case.fa2_f32.clone());
+    assert!(fa2.max_abs_diff(&fa2_ref) < 1e-3, "{name}: fa2 mismatch");
+}
+
+#[test]
+fn attention_case_small_replays() {
+    run_attn_case("attn_case_small.txt");
+}
+
+#[test]
+fn attention_case_mid_replays() {
+    run_attn_case("attn_case_mid.txt");
+}
+
+#[test]
+fn attention_case_blocked_replays() {
+    run_attn_case("attn_case_blocked.txt");
+}

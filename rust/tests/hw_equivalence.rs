@@ -1,0 +1,90 @@
+//! RTL-equivalence of the hardware model: the cycle-simulated accelerator
+//! must compute exactly what the golden algorithm models compute, and its
+//! timing must satisfy the paper's published latency points.
+
+use hfa::attention::exact;
+use hfa::attention::hfa as hfa_golden;
+use hfa::config::AcceleratorConfig;
+use hfa::hw::pipeline::LatencyModel;
+use hfa::hw::{Accelerator, Arith};
+use hfa::proptest::{check, Rng};
+use hfa::Mat;
+
+fn cfg(d: usize, n: usize, p: usize) -> AcceleratorConfig {
+    AcceleratorConfig { head_dim: d, seq_len: n, kv_blocks: p, parallel_queries: 1, freq_mhz: 500.0 }
+}
+
+#[test]
+fn paper_latency_points() {
+    assert_eq!(LatencyModel::for_head_dim(32).total(), 19);
+    assert_eq!(LatencyModel::for_head_dim(64).total(), 20);
+    assert_eq!(LatencyModel::for_head_dim(128).total(), 21);
+}
+
+#[test]
+fn property_hfa_accelerator_bit_equals_golden_blocked() {
+    check(
+        "accelerator == golden",
+        2027,
+        10,
+        |rng: &mut Rng| {
+            let d = [8usize, 16, 32][rng.below(3) as usize];
+            let p = [1usize, 2, 4][rng.below(3) as usize];
+            let n = 32 * p;
+            let k = Mat::from_vec(n, d, rng.normal_vec(n * d));
+            let v = Mat::from_vec(n, d, rng.normal_vec(n * d));
+            let q = Mat::from_vec(2, d, rng.normal_vec(2 * d));
+            (d, n, p, k, v, q)
+        },
+        |(d, n, p, k, v, q)| {
+            let mut acc = Accelerator::new(Arith::Hfa, cfg(*d, *n, *p));
+            acc.load_kv(k.clone(), v.clone()).map_err(|e| e.to_string())?;
+            let (out, _) = acc.compute_batch(q).map_err(|e| e.to_string())?;
+            let golden = hfa_golden::attention_blocked(
+                &q.round_bf16(), &k.round_bf16(), &v.round_bf16(), *p, None, &mut None);
+            if out.data == golden.data {
+                Ok(())
+            } else {
+                Err(format!("bit mismatch, max|d|={}", out.max_abs_diff(&golden)))
+            }
+        },
+    );
+}
+
+#[test]
+fn property_fa2_accelerator_tracks_exact() {
+    check(
+        "fa2 accelerator ~= exact",
+        31,
+        10,
+        |rng: &mut Rng| {
+            let d = 16usize;
+            let n = 64;
+            (
+                Mat::from_vec(n, d, rng.normal_vec(n * d)),
+                Mat::from_vec(n, d, rng.normal_vec(n * d)),
+                Mat::from_vec(3, d, rng.normal_vec(3 * d)),
+            )
+        },
+        |(k, v, q)| {
+            let mut acc = Accelerator::new(Arith::Fa2, cfg(16, 64, 4));
+            acc.load_kv(k.clone(), v.clone()).map_err(|e| e.to_string())?;
+            let (out, _) = acc.compute_batch(q).map_err(|e| e.to_string())?;
+            let reference = exact::attention(
+                &q.round_bf16(), &k.round_bf16(), &v.round_bf16(), None, None);
+            let rel = out.rel_rms(&reference);
+            if rel < 0.03 { Ok(()) } else { Err(format!("rel {rel}")) }
+        },
+    );
+}
+
+#[test]
+fn more_blocks_never_slower() {
+    let lat = LatencyModel::for_head_dim(64);
+    let mut prev = u64::MAX;
+    for p in [1usize, 2, 4, 8, 16] {
+        let c = hfa::hw::pipeline::simulate(64, 1024, p, 1, 1, lat).cycles;
+        assert!(c <= prev, "p={p} got slower: {c} > {prev}");
+        prev = c;
+    }
+}
