@@ -115,7 +115,7 @@ fn main() -> anyhow::Result<()> {
 
     // raw accelerator batch compute (no coordinator) for overhead attribution
     let mut accel = Accelerator::new(Arith::Hfa, accel_cfg);
-    accel.load_kv(k, v)?;
+    accel.load_kv(k.clone(), v.clone())?;
     let q = Mat::from_vec(16, D, rng.normal_vec(16 * D));
     let stats = bench(2, 20, Duration::from_secs(10), || {
         let _ = accel.compute_batch(&q).unwrap();
@@ -124,6 +124,24 @@ fn main() -> anyhow::Result<()> {
         "raw sim-accelerator compute_batch(16 queries): mean {:.2} ms (functional model wall time; modelled silicon time: {:.1} us)",
         stats.mean_ms(),
         accel.compute_batch(&q)?.1.time_us(500.0)
+    );
+
+    // KV-preparation amortization (EXPERIMENTS.md §Perf): per-call
+    // conversion (the seed serving behaviour) vs prepared-KV reuse
+    let kb = k.round_bf16();
+    let vb = v.round_bf16();
+    let per_call = bench(2, 20, Duration::from_secs(10), || {
+        let _ = hfa::attention::hfa::attention(&q, &kb, &vb, None, None, &mut None);
+    });
+    let prepared = hfa::attention::PreparedKv::new(kb.clone(), vb.clone());
+    let reused = bench(2, 20, Duration::from_secs(10), || {
+        let _ = prepared.attention(&q, None, None);
+    });
+    println!(
+        "attention(16 queries, N={N}, d={D}): per-call V->LNS {:.2} ms, prepared-KV reuse {:.2} ms ({:.2}x)",
+        per_call.mean_ms(),
+        reused.mean_ms(),
+        per_call.mean_ns / reused.mean_ns.max(1.0)
     );
     Ok(())
 }

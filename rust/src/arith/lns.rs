@@ -181,6 +181,64 @@ impl LnsVec {
     }
 }
 
+/// A dense SoA matrix of LNS values: `rows x lanes`, signs and logs in
+/// flat row-major storage so each row is one contiguous slice per plane.
+/// This is the resident layout of a prepared value matrix (`d+1` lanes
+/// per row, lane 0 = the prepended ell constant of Eq. 12): the serving
+/// hot loop reads `row_signs`/`row_logs` straight into the Eq.-14 lane
+/// update with no per-row allocation or copy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LnsMat {
+    rows: usize,
+    lanes: usize,
+    signs: Vec<i32>,
+    logs: Vec<i32>,
+}
+
+impl LnsMat {
+    pub fn zeros(rows: usize, lanes: usize) -> LnsMat {
+        LnsMat {
+            rows,
+            lanes,
+            signs: vec![0; rows * lanes],
+            logs: vec![LOG_ZERO; rows * lanes],
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    #[inline]
+    pub fn row_signs(&self, r: usize) -> &[i32] {
+        &self.signs[r * self.lanes..(r + 1) * self.lanes]
+    }
+
+    #[inline]
+    pub fn row_logs(&self, r: usize) -> &[i32] {
+        &self.logs[r * self.lanes..(r + 1) * self.lanes]
+    }
+
+    /// Overwrite row `r` from an [`LnsVec`] (must have `lanes` entries).
+    pub fn set_row(&mut self, r: usize, v: &LnsVec) {
+        assert_eq!(v.len(), self.lanes, "lane count mismatch");
+        self.signs[r * self.lanes..(r + 1) * self.lanes].copy_from_slice(&v.signs);
+        self.logs[r * self.lanes..(r + 1) * self.lanes].copy_from_slice(&v.logs);
+    }
+
+    /// Copy row `r` out as an [`LnsVec`] (interop with the merge path).
+    pub fn row_vec(&self, r: usize) -> LnsVec {
+        LnsVec {
+            signs: self.row_signs(r).to_vec(),
+            logs: self.row_logs(r).to_vec(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -275,6 +333,24 @@ mod tests {
         assert_eq!(big.to_bf16(), Bf16(0x7F7F));
         let tiny = Lns { sign: 1, log: -(200 << FRAC_BITS) };
         assert_eq!(tiny.to_bf16(), Bf16(0x8000));
+    }
+
+    #[test]
+    fn lnsmat_rows_roundtrip() {
+        let mut m = LnsMat::zeros(3, 4);
+        let row = LnsVec {
+            signs: vec![0, 1, 0, 1],
+            logs: vec![0, 64, LOG_ZERO, -32],
+        };
+        m.set_row(1, &row);
+        assert_eq!(m.row_vec(1), row);
+        assert_eq!(m.row_signs(1), &row.signs[..]);
+        assert_eq!(m.row_logs(1), &row.logs[..]);
+        // untouched rows stay LNS-zero
+        for i in 0..4 {
+            assert!(m.row_vec(0).get(i).is_zero());
+            assert!(m.row_vec(2).get(i).is_zero());
+        }
     }
 
     #[test]

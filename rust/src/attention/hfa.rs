@@ -8,12 +8,16 @@
 //! * the **functional f64 path** with one switch per approximation
 //!   source, backing the Table III error-attribution study.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::arith::bf16::Bf16;
 use crate::arith::fix::{quant_diff_q7, CLAMP_LO, FRAC_ONE, LOG2E_F32};
 use crate::arith::lns::{from_bf16_traced, lns_add_traced, Lns, LnsVec};
 use crate::arith::mitchell::MitchellHistogram;
 use crate::arith::pwl;
 use crate::tensor::{dot_f32, Mat};
+
+use super::prepared;
 
 /// Partial H-FA state for one query: the `(m, sign, log|O|)` triplet of
 /// Fig. 4, where `O = [ell, o]` has `d+1` LNS lanes (lane 0 = ell).
@@ -55,6 +59,18 @@ impl HfaState {
             let r = lns_add_traced(a, b, hist.as_deref_mut());
             self.acc.set(i, r);
         }
+    }
+
+    /// [`HfaState::step`] on raw sign/log lane slices — the prepared-KV
+    /// hot path.  Bit-identical to `step` with `hist = None`: same
+    /// quantizer, same `step_lanes_fast` kernel.
+    #[inline]
+    pub fn step_slices(&mut self, s: f32, v_signs: &[i32], v_logs: &[i32]) {
+        let m_new = self.m.max(s);
+        let dm_q = quant_diff_q7(self.m - m_new);
+        let ds_q = quant_diff_q7(s - m_new);
+        self.m = m_new;
+        step_lanes_fast(&mut self.acc.signs, &mut self.acc.logs, v_signs, v_logs, dm_q, ds_q);
     }
 
     /// LogDiv + back-conversion (Eqs. 15, 22): divide every `o` lane by
@@ -119,9 +135,21 @@ fn step_lanes_fast(
     }
 }
 
+/// Process-wide count of value rows pushed through [`value_to_lns`].
+/// The prepared-KV serving path pays this once per session load; the
+/// regression test `rust/tests/kv_prepare_once.rs` pins that property.
+static VALUE_ROWS_CONVERTED: AtomicU64 = AtomicU64::new(0);
+
+/// How many value rows have been linear->log converted so far (across
+/// every path: prepared builds, traced runs, golden replays).
+pub fn value_conversion_count() -> u64 {
+    VALUE_ROWS_CONVERTED.load(Ordering::Relaxed)
+}
+
 /// Convert a value row (f32, BF16-valued) to `d+1` LNS lanes with the
 /// prepended constant-one lane (Eq. 12's `V = [1, v]`).
 pub fn value_to_lns(vrow: &[f32], hist: &mut Option<&mut MitchellHistogram>) -> LnsVec {
+    VALUE_ROWS_CONVERTED.fetch_add(1, Ordering::Relaxed);
     let mut out = LnsVec::zeros(vrow.len() + 1);
     out.set(0, Lns { sign: 0, log: 0 }); // LNS of 1.0
     for (i, &x) in vrow.iter().enumerate() {
@@ -146,6 +174,12 @@ pub fn attention(
 
 /// Inner loop only (no division): one KV block's `(m, sign, log)` triplet
 /// per query.
+///
+/// The untraced path prepares V once into SoA LNS lanes and fans queries
+/// out over the persistent worker pool (`runtime::pool`) — no per-call
+/// thread spawns.  With a histogram attached it runs the serial traced
+/// datapath so every Mitchell input is recorded (Fig. 5).  Both paths are
+/// bit-identical.
 pub fn partial_states(
     q: &Mat,
     k: &Mat,
@@ -157,12 +191,18 @@ pub fn partial_states(
     let (b, d) = (q.rows, q.cols);
     let n = k.rows;
     assert_eq!(k.cols, d);
-    let scale = scale.unwrap_or(1.0 / (d as f32).sqrt());
 
-    // value rows converted once (the only linear->log conversion needed)
+    if hist.is_none() {
+        let v_lns = prepared::convert_values(v);
+        let scale = prepared::resolve_scale(scale, d);
+        return prepared::partial_states_borrowed(q, k, &v_lns, 0, n, scale, mask);
+    }
+
+    // traced path (Fig. 5 instrumentation): serial, per-lane Option checks
+    let scale = prepared::resolve_scale(scale, d);
     let v_lns: Vec<LnsVec> = (0..n).map(|i| value_to_lns(v.row(i), hist)).collect();
-
-    let run_query = |bi: usize, hist: &mut Option<&mut MitchellHistogram>| {
+    let mut states = Vec::with_capacity(b);
+    for bi in 0..b {
         let mut st = HfaState::new(v.cols);
         let qrow = q.row(bi);
         for i in 0..n {
@@ -172,29 +212,9 @@ pub fn partial_states(
             let s = dot_f32(qrow, k.row(i)) * scale;
             st.step(s, &v_lns[i], hist);
         }
-        st
-    };
-
-    // queries are independent (each FAU owns its state) — fan the batch
-    // out across threads on the untraced hot path (EXPERIMENTS.md §Perf)
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    if hist.is_none() && b > 1 && threads > 1 {
-        let chunk = b.div_ceil(threads.min(b));
-        let mut states: Vec<Option<HfaState>> = (0..b).map(|_| None).collect();
-        std::thread::scope(|scope| {
-            for (t, out_chunk) in states.chunks_mut(chunk).enumerate() {
-                let run = &run_query;
-                scope.spawn(move || {
-                    for (j, slot) in out_chunk.iter_mut().enumerate() {
-                        *slot = Some(run(t * chunk + j, &mut None));
-                    }
-                });
-            }
-        });
-        return states.into_iter().map(|s| s.unwrap()).collect();
+        states.push(st);
     }
-
-    (0..b).map(|bi| run_query(bi, hist)).collect()
+    states
 }
 
 /// Replay the LNS pipeline from a precomputed score matrix `(B, N)` —
@@ -202,17 +222,17 @@ pub fn partial_states(
 /// dot-product association order.
 pub fn attention_from_scores(scores: &Mat, v: &Mat) -> Mat {
     let (b, n) = (scores.rows, scores.cols);
-    let v_lns: Vec<LnsVec> = (0..n).map(|i| value_to_lns(v.row(i), &mut None)).collect();
+    let v_lns = prepared::convert_values(v);
     let mut states: Vec<HfaState> = (0..b).map(|_| HfaState::new(v.cols)).collect();
-    for bi in 0..b {
+    for (bi, st) in states.iter_mut().enumerate() {
         for i in 0..n {
-            states[bi].step(scores.at(bi, i), &v_lns[i], &mut None);
+            st.step_slices(scores.at(bi, i), v_lns.row_signs(i), v_lns.row_logs(i));
         }
     }
     finalize_states(&states, v.cols)
 }
 
-fn finalize_states(states: &[HfaState], dv: usize) -> Mat {
+pub(crate) fn finalize_states(states: &[HfaState], dv: usize) -> Mat {
     let mut out = Mat::zeros(states.len(), dv);
     for (bi, st) in states.iter().enumerate() {
         out.row_mut(bi).copy_from_slice(&st.finalize());
@@ -222,6 +242,11 @@ fn finalize_states(states: &[HfaState], dv: usize) -> Mat {
 
 /// 2D-parallel H-FA (Fig. 2): split KV into `num_blocks`, run independent
 /// partial FAUs, merge with the log-domain ACC (Eq. 16), then LogDiv.
+///
+/// `num_blocks` need not divide `k.rows`: the tail block is simply
+/// shorter (`prepared::kv_block_ranges`), matching the seed partition
+/// exactly in the divisible case.  Values are converted once for the
+/// whole call, not once per block.
 pub fn attention_blocked(
     q: &Mat,
     k: &Mat,
@@ -230,12 +255,16 @@ pub fn attention_blocked(
     scale: Option<f32>,
     hist: &mut Option<&mut MitchellHistogram>,
 ) -> Mat {
-    assert_eq!(k.rows % num_blocks, 0, "N must divide into KV blocks");
-    let step = k.rows / num_blocks;
+    if hist.is_none() {
+        // convert once for the whole call, then merge over block ranges
+        let v_lns = prepared::convert_values(v);
+        let states = prepared::blocked_states(q, k, &v_lns, num_blocks, scale);
+        return finalize_states(&states, v.cols);
+    }
     let mut acc: Option<Vec<HfaState>> = None;
-    for blk in 0..num_blocks {
-        let kb = k.rows_slice(blk * step, (blk + 1) * step);
-        let vb = v.rows_slice(blk * step, (blk + 1) * step);
+    for (lo, hi) in prepared::kv_block_ranges(k.rows, num_blocks) {
+        let kb = k.rows_slice(lo, hi);
+        let vb = v.rows_slice(lo, hi);
         let st = partial_states(q, &kb, &vb, scale, None, hist);
         acc = Some(match acc {
             None => st,
@@ -246,7 +275,8 @@ pub fn attention_blocked(
                 .collect(),
         });
     }
-    finalize_states(&acc.unwrap(), v.cols)
+    let states = acc.unwrap_or_else(|| (0..q.rows).map(|_| HfaState::new(v.cols)).collect());
+    finalize_states(&states, v.cols)
 }
 
 // ---------------------------------------------------------------------------

@@ -7,12 +7,18 @@
 //!   bit-exact integer path (mirrors the Pallas kernel) and the functional
 //!   f64 path with per-approximation ablation switches (Table III).
 //! * [`merge`] — multi-KV-block partial-result merging (Eqs. 1 and 16).
+//! * [`prepared`] — the prepared-KV execution engine: V resident in SoA
+//!   LNS lanes, zero-copy block views, persistent-pool query fan-out
+//!   (the serving hot path).
 
 pub mod exact;
 pub mod fa2;
 pub mod hfa;
 pub mod lazy;
 pub mod merge;
+pub mod prepared;
+
+pub use prepared::PreparedKv;
 
 use crate::Mat;
 

@@ -1,0 +1,342 @@
+//! Prepared-KV execution engine: the serving-path realization of the
+//! paper's "KV sub-blocks preloaded into local buffers" assumption
+//! (Section III-B).
+//!
+//! [`PreparedKv`] holds a session's K row-major plus V pre-converted
+//! *once* into SoA LNS lanes ([`LnsMat`], `d+1` lanes per row including
+//! the prepended ell lane of Eq. 12).  Every attention call against the
+//! session then runs pure fixed-point adds over resident slices: no
+//! per-call linear->log conversion, no per-row `LnsVec` allocation, and
+//! no `rows_slice` copies for KV sub-blocks — block boundaries are plain
+//! `(lo, hi)` row ranges ([`KvBlockView`]).
+//!
+//! Query fan-out goes through the persistent [`crate::runtime::pool`]
+//! worker pool instead of a per-call `std::thread::scope` spawn.
+//!
+//! Everything here is bit-identical to the serial seed path: the lane
+//! update is the same `step_lanes_fast` kernel, conversions go through
+//! `value_to_lns`, and per-query results are independent of the thread
+//! that computed them (pinned by `rust/tests/prepared_exec.rs` and the
+//! golden vectors in `rust/tests/golden_replay.rs`).
+
+use std::sync::Arc;
+
+use crate::arith::lns::LnsMat;
+use crate::tensor::{dot_f32, Mat};
+
+use super::hfa::{finalize_states, value_to_lns, HfaState};
+use super::merge::merge_hfa;
+
+/// Convert a value matrix to its resident LNS lane form (`rows x (d+1)`,
+/// lane 0 = LNS one).  One `value_to_lns` call per row — the only
+/// linear->log conversion a session ever pays.
+pub fn convert_values(v: &Mat) -> LnsMat {
+    let lanes = v.cols + 1;
+    let mut out = LnsMat::zeros(v.rows, lanes);
+    for i in 0..v.rows {
+        let row = value_to_lns(v.row(i), &mut None);
+        out.set_row(i, &row);
+    }
+    out
+}
+
+/// Partition `n` key rows into at most `num_blocks` contiguous ranges.
+/// Matches the seed's even split exactly when `num_blocks` divides `n`;
+/// otherwise the last block carries the ragged tail (and blocks that
+/// would start past `n` are dropped rather than panicking).
+pub fn kv_block_ranges(n: usize, num_blocks: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let nb = num_blocks.max(1);
+    let step = n.div_ceil(nb);
+    (0..nb)
+        .map(|b| (b * step, ((b + 1) * step).min(n)))
+        .filter(|&(lo, hi)| lo < hi)
+        .collect()
+}
+
+/// A session's KV prepared for repeated attention calls: K as given
+/// (row-major f32 holding BF16 values) and V resident in the log domain.
+pub struct PreparedKv {
+    k: Arc<Mat>,
+    v: Arc<Mat>,
+    v_lns: LnsMat,
+}
+
+/// A zero-copy view of a contiguous KV sub-block (`[lo, hi)` rows) — the
+/// software analogue of one block-FAU's local buffer.
+#[derive(Clone, Copy)]
+pub struct KvBlockView<'a> {
+    kv: &'a PreparedKv,
+    lo: usize,
+    hi: usize,
+}
+
+impl PreparedKv {
+    /// Prepare owned K/V.  No rounding is applied here — callers decide
+    /// the BF16 ingress convention (the KV store and accelerator round on
+    /// load, mirroring the seed paths they replace).
+    pub fn new(k: Mat, v: Mat) -> PreparedKv {
+        PreparedKv::from_arcs(Arc::new(k), Arc::new(v))
+    }
+
+    /// Prepare shared K/V without copying the float matrices.
+    pub fn from_arcs(k: Arc<Mat>, v: Arc<Mat>) -> PreparedKv {
+        assert_eq!(k.rows, v.rows, "K/V row count mismatch");
+        let v_lns = convert_values(v.as_ref());
+        PreparedKv { k, v, v_lns }
+    }
+
+    /// Key/value rows resident.
+    pub fn n(&self) -> usize {
+        self.k.rows
+    }
+
+    /// Key (= query) dimension.
+    pub fn d(&self) -> usize {
+        self.k.cols
+    }
+
+    /// Value dimension.
+    pub fn dv(&self) -> usize {
+        self.v.cols
+    }
+
+    pub fn k(&self) -> &Mat {
+        &self.k
+    }
+
+    pub fn v(&self) -> &Mat {
+        &self.v
+    }
+
+    pub fn k_arc(&self) -> Arc<Mat> {
+        self.k.clone()
+    }
+
+    pub fn v_arc(&self) -> Arc<Mat> {
+        self.v.clone()
+    }
+
+    pub fn v_lns(&self) -> &LnsMat {
+        &self.v_lns
+    }
+
+    /// Zero-copy sub-block view of rows `[lo, hi)`.
+    pub fn view(&self, lo: usize, hi: usize) -> KvBlockView<'_> {
+        assert!(lo <= hi && hi <= self.n(), "view out of range");
+        KvBlockView { kv: self, lo, hi }
+    }
+
+    /// Full-range view.
+    pub fn full(&self) -> KvBlockView<'_> {
+        self.view(0, self.n())
+    }
+
+    /// Bit-exact H-FA attention over the full resident KV.
+    pub fn attention(&self, q: &Mat, scale: Option<f32>, mask: Option<&[bool]>) -> Mat {
+        let states = self.full().partial_states(q, scale, mask);
+        finalize_states(&states, self.dv())
+    }
+
+    /// 2D-parallel H-FA (Fig. 2) over the resident KV: independent
+    /// partial FAUs per sub-block, log-domain ACC merge (Eq. 16), LogDiv.
+    pub fn attention_blocked(&self, q: &Mat, num_blocks: usize, scale: Option<f32>) -> Mat {
+        let states = blocked_states(q, &self.k, &self.v_lns, num_blocks, scale);
+        finalize_states(&states, self.dv())
+    }
+}
+
+impl<'a> KvBlockView<'a> {
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lo == self.hi
+    }
+
+    pub fn range(&self) -> (usize, usize) {
+        (self.lo, self.hi)
+    }
+
+    /// Key row `i` (view-relative).
+    #[inline]
+    pub fn k_row(&self, i: usize) -> &'a [f32] {
+        self.kv.k.row(self.lo + i)
+    }
+
+    /// LNS value-row planes `i` (view-relative).
+    #[inline]
+    pub fn v_row_lns(&self, i: usize) -> (&'a [i32], &'a [i32]) {
+        (
+            self.kv.v_lns.row_signs(self.lo + i),
+            self.kv.v_lns.row_logs(self.lo + i),
+        )
+    }
+
+    /// One KV block's partial `(m, sign, log)` triplet per query.  `mask`
+    /// (when given) is `(B, len)` relative to this view, true = attend.
+    pub fn partial_states(
+        &self,
+        q: &Mat,
+        scale: Option<f32>,
+        mask: Option<&[bool]>,
+    ) -> Vec<HfaState> {
+        partial_states_borrowed(
+            q,
+            self.kv.k(),
+            self.kv.v_lns(),
+            self.lo,
+            self.hi,
+            resolve_scale(scale, q.cols),
+            mask,
+        )
+    }
+}
+
+pub(crate) fn resolve_scale(scale: Option<f32>, d: usize) -> f32 {
+    scale.unwrap_or(1.0 / (d as f32).sqrt())
+}
+
+/// The prepared-path inner engine over borrowed parts: K rows `[lo, hi)`
+/// against resident LNS lanes, fanned out over the persistent pool.
+/// `mask` (when given) is `(B, hi - lo)` relative to the range.
+///
+/// Every query is an independent FAU, so results are identical to serial
+/// execution regardless of thread assignment — and bit-identical to the
+/// seed per-row path (`HfaState::step` with no histogram).
+pub(crate) fn partial_states_borrowed(
+    q: &Mat,
+    k: &Mat,
+    v_lns: &LnsMat,
+    lo: usize,
+    hi: usize,
+    scale: f32,
+    mask: Option<&[bool]>,
+) -> Vec<HfaState> {
+    assert_eq!(k.cols, q.cols, "query dim mismatch");
+    assert!(lo <= hi && hi <= k.rows && hi <= v_lns.rows(), "range out of bounds");
+    let b = q.rows;
+    let span = hi - lo;
+    let dv = v_lns.lanes() - 1;
+    if let Some(m) = mask {
+        assert_eq!(m.len(), b * span, "mask shape mismatch");
+    }
+
+    let run_query = |bi: usize| -> HfaState {
+        let mut st = HfaState::new(dv);
+        let qrow = q.row(bi);
+        for i in 0..span {
+            if mask.map(|m| !m[bi * span + i]).unwrap_or(false) {
+                continue;
+            }
+            let s = dot_f32(qrow, k.row(lo + i)) * scale;
+            st.step_slices(s, v_lns.row_signs(lo + i), v_lns.row_logs(lo + i));
+        }
+        st
+    };
+    crate::runtime::pool::fan_out(b, run_query)
+}
+
+/// Blocked partial-state computation + log-domain ACC merge over already
+/// converted lanes — shared by [`PreparedKv::attention_blocked`] and the
+/// `hfa::attention_blocked` wrapper.
+pub(crate) fn blocked_states(
+    q: &Mat,
+    k: &Mat,
+    v_lns: &LnsMat,
+    num_blocks: usize,
+    scale: Option<f32>,
+) -> Vec<HfaState> {
+    let scale = resolve_scale(scale, q.cols);
+    let dv = v_lns.lanes() - 1;
+    let mut acc: Option<Vec<HfaState>> = None;
+    for (lo, hi) in kv_block_ranges(k.rows, num_blocks) {
+        let st = partial_states_borrowed(q, k, v_lns, lo, hi, scale, None);
+        acc = Some(match acc {
+            None => st,
+            Some(prev) => prev
+                .into_iter()
+                .zip(st)
+                .map(|(a, b)| merge_hfa(&a, &b, &mut None))
+                .collect(),
+        });
+    }
+    acc.unwrap_or_else(|| (0..q.rows).map(|_| HfaState::new(dv)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::lns::LnsVec;
+    use crate::proptest::Rng;
+
+    fn rand_kv(rng: &mut Rng, n: usize, d: usize) -> (Mat, Mat) {
+        (
+            Mat::from_vec(n, d, rng.normal_vec(n * d)).round_bf16(),
+            Mat::from_vec(n, d, rng.normal_vec(n * d)).round_bf16(),
+        )
+    }
+
+    #[test]
+    fn convert_values_matches_row_conversion() {
+        let mut rng = Rng::new(3);
+        let (_, v) = rand_kv(&mut rng, 9, 5);
+        let m = convert_values(&v);
+        assert_eq!((m.rows(), m.lanes()), (9, 6));
+        for i in 0..9 {
+            let expect: LnsVec = value_to_lns(v.row(i), &mut None);
+            assert_eq!(m.row_vec(i), expect, "row {i}");
+        }
+    }
+
+    #[test]
+    fn block_ranges_even_split_matches_seed() {
+        assert_eq!(kv_block_ranges(64, 4), vec![(0, 16), (16, 32), (32, 48), (48, 64)]);
+        assert_eq!(kv_block_ranges(8, 1), vec![(0, 8)]);
+    }
+
+    #[test]
+    fn block_ranges_ragged_and_degenerate() {
+        assert_eq!(kv_block_ranges(10, 4), vec![(0, 3), (3, 6), (6, 9), (9, 10)]);
+        // more blocks than rows: every row still covered exactly once
+        let r = kv_block_ranges(3, 8);
+        assert_eq!(r.iter().map(|(lo, hi)| hi - lo).sum::<usize>(), 3);
+        assert_eq!(r.first().unwrap().0, 0);
+        assert_eq!(r.last().unwrap().1, 3);
+        assert!(kv_block_ranges(0, 4).is_empty());
+        assert_eq!(kv_block_ranges(5, 0), vec![(0, 5)]);
+    }
+
+    #[test]
+    fn view_rows_alias_prepared_storage() {
+        let mut rng = Rng::new(7);
+        let (k, v) = rand_kv(&mut rng, 16, 4);
+        let kv = PreparedKv::new(k.clone(), v.clone());
+        let view = kv.view(4, 12);
+        assert_eq!(view.len(), 8);
+        for i in 0..view.len() {
+            assert_eq!(view.k_row(i), k.row(4 + i));
+            let (vs, vl) = view.v_row_lns(i);
+            let expect = value_to_lns(v.row(4 + i), &mut None);
+            assert_eq!(vs, &expect.signs[..]);
+            assert_eq!(vl, &expect.logs[..]);
+        }
+    }
+
+    #[test]
+    fn prepared_attention_matches_module_entrypoint() {
+        let mut rng = Rng::new(11);
+        let (k, v) = rand_kv(&mut rng, 32, 8);
+        let q = Mat::from_vec(3, 8, rng.normal_vec(24)).round_bf16();
+        let kv = PreparedKv::new(k.clone(), v.clone());
+        let a = kv.attention(&q, None, None);
+        let b = super::super::hfa::attention(&q, &k, &v, None, None, &mut None);
+        assert_eq!(a.data, b.data);
+        let ab = kv.attention_blocked(&q, 4, None);
+        let bb = super::super::hfa::attention_blocked(&q, &k, &v, 4, None, &mut None);
+        assert_eq!(ab.data, bb.data);
+    }
+}

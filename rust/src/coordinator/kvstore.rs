@@ -4,30 +4,90 @@
 //! sessions (each one `seq_len x d` K and V), LRU eviction when capacity
 //! is exceeded — the coordinator-level counterpart of the paper's
 //! "KV sub-blocks preloaded into local buffers" assumption (Section III-B).
+//!
+//! Each resident entry carries an [`Arc<PreparedKv>`] built **once** at
+//! `put()`: V's linear->log conversion is paid at session load, never per
+//! batch (pinned by `rust/tests/kv_prepare_once.rs`).  The LRU is a
+//! generation counter — `get()` is one HashMap probe and a u64 bump under
+//! the lock, with no list walks or key clones on the request path.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
+use crate::attention::prepared::PreparedKv;
 use crate::Mat;
 
-/// One resident session's KV data.
+/// One resident session's KV data.  A single `Arc<PreparedKv>` is the
+/// whole state: it owns the raw BF16-rounded matrices (PJRT backends
+/// ship those to the kernel) *and* the prepared log-domain lanes the
+/// simulated accelerator executes against — so the raw and prepared
+/// views can never disagree.
 #[derive(Clone)]
 pub struct KvEntry {
-    pub k: Arc<Mat>,
-    pub v: Arc<Mat>,
+    prepared: Arc<PreparedKv>,
+}
+
+impl KvEntry {
+    /// Build an entry (and its prepared form) from owned matrices.
+    /// No rounding is applied — callers own the ingress convention.
+    pub fn new(k: Mat, v: Mat) -> KvEntry {
+        KvEntry { prepared: Arc::new(PreparedKv::new(k, v)) }
+    }
+
+    pub fn prepared(&self) -> &Arc<PreparedKv> {
+        &self.prepared
+    }
+
+    pub fn k(&self) -> &Mat {
+        self.prepared.k()
+    }
+
+    pub fn v(&self) -> &Mat {
+        self.prepared.v()
+    }
+}
+
+struct Slot {
+    entry: KvEntry,
+    /// Generation stamp of the last touch; smallest = LRU victim.
+    last_used: u64,
 }
 
 struct Inner {
     capacity: usize,
-    entries: HashMap<String, KvEntry>,
-    /// LRU order, most recent last.
-    lru: Vec<String>,
+    entries: HashMap<String, Slot>,
+    /// Monotonic access generation counter.
+    tick: u64,
     evictions: u64,
 }
 
-/// Thread-safe KV session store with LRU eviction.
+impl Inner {
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    fn evict_to_capacity(&mut self) {
+        while self.entries.len() > self.capacity {
+            let victim = self
+                .entries
+                .iter()
+                .min_by_key(|(_, slot)| slot.last_used)
+                .map(|(name, _)| name.clone());
+            match victim {
+                Some(name) => {
+                    self.entries.remove(&name);
+                    self.evictions += 1;
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+/// Thread-safe KV session store with generation-counter LRU eviction.
 pub struct KvStore {
     seq_len: usize,
     head_dim: usize,
@@ -43,7 +103,7 @@ impl KvStore {
             inner: Mutex::new(Inner {
                 capacity: capacity.max(1),
                 entries: HashMap::new(),
-                lru: Vec::new(),
+                tick: 0,
                 evictions: 0,
             }),
         }
@@ -62,7 +122,8 @@ impl KvStore {
         self.seq_len
     }
 
-    /// Insert (or replace) a session's KV matrices.
+    /// Insert (or replace) a session's KV matrices.  The BF16 rounding and
+    /// the one-time V->LNS preparation happen *outside* the lock.
     pub fn put(&self, session: &str, k: Mat, v: Mat) -> Result<()> {
         if k.rows != self.seq_len || k.cols != self.head_dim {
             bail!(
@@ -73,29 +134,21 @@ impl KvStore {
         if v.rows != k.rows || v.cols != k.cols {
             bail!("V shape mismatch");
         }
+        let entry = KvEntry::new(k.round_bf16(), v.round_bf16());
         let mut g = self.inner.lock().unwrap();
-        g.lru.retain(|s| s != session);
-        g.lru.push(session.to_string());
-        g.entries.insert(
-            session.to_string(),
-            KvEntry { k: Arc::new(k.round_bf16()), v: Arc::new(v.round_bf16()) },
-        );
-        while g.entries.len() > g.capacity {
-            let victim = g.lru.remove(0);
-            g.entries.remove(&victim);
-            g.evictions += 1;
-        }
+        let stamp = g.next_tick();
+        g.entries.insert(session.to_string(), Slot { entry, last_used: stamp });
+        g.evict_to_capacity();
         Ok(())
     }
 
-    /// Fetch a session, refreshing its LRU position.
+    /// Fetch a session, refreshing its LRU stamp (O(1) under the lock).
     pub fn get(&self, session: &str) -> Option<KvEntry> {
         let mut g = self.inner.lock().unwrap();
-        if g.entries.contains_key(session) {
-            g.lru.retain(|s| s != session);
-            g.lru.push(session.to_string());
-        }
-        g.entries.get(session).cloned()
+        let stamp = g.next_tick();
+        let slot = g.entries.get_mut(session)?;
+        slot.last_used = stamp;
+        Some(slot.entry.clone())
     }
 
     pub fn resident(&self) -> usize {
@@ -121,8 +174,12 @@ mod tests {
         let (k, v) = kv(16, 8, 1.0);
         store.put("a", k, v).unwrap();
         let e = store.get("a").unwrap();
-        assert_eq!(e.k.at(0, 0), 1.0);
-        assert_eq!(e.v.at(0, 0), -1.0);
+        assert_eq!(e.k().at(0, 0), 1.0);
+        assert_eq!(e.v().at(0, 0), -1.0);
+        // the raw accessors alias the prepared form's own matrices
+        assert!(std::ptr::eq(e.k(), e.prepared().k()));
+        assert!(std::ptr::eq(e.v(), e.prepared().v()));
+        assert_eq!(e.prepared().n(), 16);
     }
 
     #[test]
@@ -158,8 +215,56 @@ mod tests {
     }
 
     #[test]
+    fn replacing_a_session_refreshes_it() {
+        let store = KvStore::new(4, 4, 2);
+        let (k, v) = kv(4, 4, 0.0);
+        store.put("a", k.clone(), v.clone()).unwrap();
+        store.put("b", k.clone(), v.clone()).unwrap();
+        store.put("a", k.clone(), v.clone()).unwrap(); // re-put refreshes a
+        store.put("c", k, v).unwrap(); // evicts b
+        assert!(store.get("a").is_some());
+        assert!(store.get("b").is_none());
+        assert!(store.get("c").is_some());
+    }
+
+    #[test]
     fn session_bytes_matches_bf16_kv() {
         let store = KvStore::new(1024, 64, 1);
         assert_eq!(store.session_bytes(), 2 * 1024 * 64 * 2);
+    }
+
+    #[test]
+    fn concurrent_gets_and_puts_stay_consistent() {
+        // request-path contention: many readers refreshing LRU stamps
+        // while writers insert/evict.  The store must never exceed
+        // capacity and never hand out a torn entry — every session name
+        // encodes its fill value, so any `Some` result is verifiable.
+        let store = Arc::new(KvStore::new(8, 4, 3));
+        let fill = |s: usize| s as f32 + 1.0;
+        let mut handles = Vec::new();
+        for t in 0..6usize {
+            let store = store.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut hits = 0u64;
+                for i in 0..500usize {
+                    let s = (t + i) % 5;
+                    if t < 2 {
+                        let (k, v) = kv(8, 4, fill(s));
+                        store.put(&format!("sess-{s}"), k, v).unwrap();
+                    }
+                    if let Some(e) = store.get(&format!("sess-{s}")) {
+                        assert_eq!(e.k().at(0, 0), fill(s), "torn entry for sess-{s}");
+                        assert_eq!(e.v().at(0, 0), -fill(s));
+                        assert_eq!(e.prepared().n(), 8);
+                        hits += 1;
+                    }
+                    assert!(store.resident() <= 3);
+                }
+                hits
+            }));
+        }
+        let hits: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert!(hits > 0, "at least some gets must land on resident sessions");
+        assert!(store.resident() <= 3, "resident {} > capacity", store.resident());
     }
 }

@@ -15,8 +15,8 @@ pub mod metrics;
 pub mod request;
 pub mod server;
 
-pub use backend::{Backend, BackendFactory, PjrtBackend, SimBackend};
-pub use kvstore::KvStore;
+pub use backend::{prepare_entry, Backend, BackendFactory, PjrtBackend, SimBackend};
+pub use kvstore::{KvEntry, KvStore};
 pub use metrics::Metrics;
 pub use request::{AttentionRequest, AttentionResponse};
 pub use server::Server;

@@ -208,7 +208,7 @@ fn serve_batch(be: &mut dyn Backend, batch: Batch, kv: &KvStore, metrics: &Metri
             for (i, r) in batch.requests.iter().enumerate() {
                 q.row_mut(i).copy_from_slice(&r.query);
             }
-            be.compute(&entry.k, &entry.v, &q).map_err(|e| e.to_string())
+            be.compute(&entry, &q).map_err(|e| e.to_string())
         }
     };
     for (i, req) in batch.requests.into_iter().enumerate() {
@@ -237,7 +237,7 @@ mod tests {
     use super::*;
     use crate::config::AcceleratorConfig;
     use crate::coordinator::backend::SimBackend;
-    use crate::hw::{Accelerator, Arith};
+    use crate::hw::Arith;
     use crate::proptest::Rng;
 
     fn test_server(workers: usize) -> (Server, Mat, Mat) {

@@ -8,7 +8,10 @@
 //! float for FA-2, Eq. 16 in the log domain for H-FA), and the final
 //! DIV/LogDiv normalizes.
 
-use crate::attention::{fa2, hfa, merge};
+use std::sync::Arc;
+
+use crate::attention::prepared::{kv_block_ranges, PreparedKv};
+use crate::attention::{fa2, merge};
 use crate::config::AcceleratorConfig;
 use crate::hw::cost::datapath::{accelerator as datapath_inventory, Arith};
 use crate::hw::cost::sram::SramConfig;
@@ -16,58 +19,71 @@ use crate::hw::cost::scaling::Node;
 use crate::hw::pipeline::{simulate, CycleStats, LatencyModel};
 use crate::Mat;
 
-/// A configured accelerator instance holding preloaded KV buffers.
+/// A configured accelerator instance holding preloaded KV buffers (the
+/// prepared form: K row-major, V resident in log-domain lanes).
 pub struct Accelerator {
     pub arith: Arith,
     pub cfg: AcceleratorConfig,
     pub lat: LatencyModel,
-    k: Option<Mat>,
-    v: Option<Mat>,
+    kv: Option<Arc<PreparedKv>>,
 }
 
 impl Accelerator {
     pub fn new(arith: Arith, cfg: AcceleratorConfig) -> Accelerator {
         let lat = LatencyModel::for_head_dim(cfg.head_dim);
-        Accelerator { arith, cfg, lat, k: None, v: None }
+        Accelerator { arith, cfg, lat, kv: None }
     }
 
-    /// Load the K/V matrices into the (modelled) SRAM buffers.
+    /// Load the K/V matrices into the (modelled) SRAM buffers, paying the
+    /// BF16 rounding and the one-time V->LNS preparation here.
     pub fn load_kv(&mut self, k: Mat, v: Mat) -> anyhow::Result<()> {
+        self.check_shape(k.rows, k.cols, v.rows, v.cols)?;
+        self.kv = Some(Arc::new(PreparedKv::new(k.round_bf16(), v.round_bf16())));
+        Ok(())
+    }
+
+    /// Adopt an already-prepared KV set (e.g. from the coordinator's
+    /// session store) without copying or reconverting anything.  The
+    /// caller owns the BF16 ingress convention.
+    pub fn load_prepared(&mut self, kv: Arc<PreparedKv>) -> anyhow::Result<()> {
+        self.check_shape(kv.n(), kv.d(), kv.n(), kv.dv())?;
+        self.kv = Some(kv);
+        Ok(())
+    }
+
+    fn check_shape(&self, kr: usize, kc: usize, vr: usize, vc: usize) -> anyhow::Result<()> {
         anyhow::ensure!(
-            k.rows == self.cfg.seq_len && k.cols == self.cfg.head_dim,
+            kr == self.cfg.seq_len && kc == self.cfg.head_dim,
             "K shape {}x{} != configured {}x{}",
-            k.rows,
-            k.cols,
+            kr,
+            kc,
             self.cfg.seq_len,
             self.cfg.head_dim
         );
-        anyhow::ensure!(v.rows == k.rows && v.cols == k.cols, "V shape mismatch");
-        self.k = Some(k.round_bf16());
-        self.v = Some(v.round_bf16());
+        anyhow::ensure!(vr == kr && vc == kc, "V shape mismatch");
         Ok(())
     }
 
     pub fn kv_loaded(&self) -> bool {
-        self.k.is_some()
+        self.kv.is_some()
     }
 
     /// Compute attention for a batch of queries, returning outputs and the
     /// cycle-level timing of the run.
     pub fn compute_batch(&self, q: &Mat) -> anyhow::Result<(Mat, CycleStats)> {
-        let k = self.k.as_ref().ok_or_else(|| anyhow::anyhow!("KV not loaded"))?;
-        let v = self.v.as_ref().unwrap();
+        let kv = self.kv.as_ref().ok_or_else(|| anyhow::anyhow!("KV not loaded"))?;
         anyhow::ensure!(q.cols == self.cfg.head_dim, "query dim mismatch");
         let q = q.round_bf16();
 
         let p = self.cfg.kv_blocks;
-        let rows = self.cfg.rows_per_block();
         let out = match self.arith {
             Arith::Fa2 => {
                 // p block-FAUs -> ACC cascade (Eq. 1) -> DIV
+                let (k, v) = (kv.k(), kv.v());
                 let mut acc: Option<Vec<fa2::Fa2State>> = None;
-                for blk in 0..p {
-                    let kb = k.rows_slice(blk * rows, (blk + 1) * rows);
-                    let vb = v.rows_slice(blk * rows, (blk + 1) * rows);
+                for (lo, hi) in kv_block_ranges(k.rows, p) {
+                    let kb = k.rows_slice(lo, hi);
+                    let vb = v.rows_slice(lo, hi);
                     let st = fa2::partial_states(&q, &kb, &vb, None, None);
                     acc = Some(match acc {
                         None => st,
@@ -88,7 +104,9 @@ impl Accelerator {
                 }
                 out
             }
-            Arith::Hfa => hfa::attention_blocked(&q, k, v, p, None, &mut None),
+            // prepared path: resident LNS lanes, zero-copy block views,
+            // pool fan-out — bit-identical to the golden blocked model
+            Arith::Hfa => kv.attention_blocked(&q, p, None),
         };
 
         let stats = simulate(
@@ -121,7 +139,7 @@ impl Accelerator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::attention::{exact, Impl};
+    use crate::attention::{exact, hfa, Impl};
     use crate::proptest::Rng;
 
     fn accel(arith: Arith, d: usize, n: usize, p: usize) -> (Accelerator, Mat, Mat) {

@@ -13,7 +13,7 @@ use std::path::Path;
 use anyhow::Result;
 
 use crate::arith::mitchell::MitchellHistogram;
-use crate::attention::{exact, fa2, hfa};
+use crate::attention::{exact, fa2, hfa, PreparedKv};
 use crate::tensor::Mat;
 
 use super::config::ModelConfig;
@@ -97,11 +97,14 @@ impl Transformer {
             }
         }
 
+        // causal mask rows, built once and shared by every layer and head
+        let mask = causal_mask(t);
+
         for l in 0..self.cfg.n_layer {
             let pfx = format!("l{l}");
             let ln1 = layer_norm(&x, &self.w.vec(&format!("{pfx}.ln1_g"))?,
                                  &self.w.vec(&format!("{pfx}.ln1_b"))?);
-            let a = self.attention(&ln1, l, attn, hist)?;
+            let a = self.attention(&ln1, l, attn, &mask, hist)?;
             add_inplace(&mut x, &a);
 
             let ln2 = layer_norm(&x, &self.w.vec(&format!("{pfx}.ln2_g"))?,
@@ -133,6 +136,7 @@ impl Transformer {
         x: &Mat,
         layer: usize,
         attn: AttnSelect,
+        mask: &[bool],
         hist: &mut Option<&mut MitchellHistogram>,
     ) -> Result<Mat> {
         let t = x.rows;
@@ -142,41 +146,50 @@ impl Transformer {
         let k_all = x.matmul(&self.w.mat(&format!("{pfx}.wk"))?);
         let v_all = x.matmul(&self.w.mat(&format!("{pfx}.wv"))?);
 
-        // causal mask rows (shared across heads)
-        let mut mask = vec![false; t * t];
-        for i in 0..t {
-            for j in 0..=i {
-                mask[i * t + j] = true;
-            }
-        }
-
         let mut merged = Mat::zeros(t, self.cfg.d_model);
         for head in 0..h {
-            let slice = |m: &Mat| {
-                Mat::from_fn(t, dh, |r, c| m.at(r, head * dh + c))
-            };
-            let (q, k, v) = (slice(&q_all), slice(&k_all), slice(&v_all));
+            // contiguous row-wise head slices (memcpy, not per-element)
+            let q = q_all.cols_slice(head * dh, (head + 1) * dh);
+            let k = k_all.cols_slice(head * dh, (head + 1) * dh);
+            let v = v_all.cols_slice(head * dh, (head + 1) * dh);
             let o = match attn {
-                AttnSelect::Exact => exact::attention(&q, &k, &v, None, Some(&mask)),
+                AttnSelect::Exact => exact::attention(&q, &k, &v, None, Some(mask)),
                 AttnSelect::Fa2 => {
                     // the BF16 hardware path rounds operands on ingress
                     fa2::attention(&q.round_bf16(), &k.round_bf16(), &v.round_bf16(),
-                                   None, Some(&mask)).round_bf16()
+                                   None, Some(mask)).round_bf16()
                 }
-                AttnSelect::Hfa => hfa::attention(
-                    &q.round_bf16(), &k.round_bf16(), &v.round_bf16(),
-                    None, Some(&mask), hist),
+                AttnSelect::Hfa => {
+                    if hist.is_some() {
+                        hfa::attention(&q.round_bf16(), &k.round_bf16(), &v.round_bf16(),
+                                       None, Some(mask), hist)
+                    } else {
+                        // prepared per-head KV: convert V once, reuse the
+                        // resident lanes for every query row of this pass
+                        let kv = PreparedKv::new(k.round_bf16(), v.round_bf16());
+                        kv.attention(&q.round_bf16(), None, Some(mask))
+                    }
+                }
                 AttnSelect::HfaEmu(cfg) => hfa::attention_emu_masked(
-                    &q.round_bf16(), &k.round_bf16(), &v.round_bf16(), cfg, None, Some(&mask)),
+                    &q.round_bf16(), &k.round_bf16(), &v.round_bf16(), cfg, None, Some(mask)),
             };
             for r in 0..t {
-                for c in 0..dh {
-                    merged.set(r, head * dh + c, o.at(r, c));
-                }
+                merged.row_mut(r)[head * dh..(head + 1) * dh].copy_from_slice(o.row(r));
             }
         }
         Ok(merged.matmul(&self.w.mat(&format!("{pfx}.wo"))?))
     }
+}
+
+/// Causal mask rows for a `t`-token sequence (true = attend).
+fn causal_mask(t: usize) -> Vec<bool> {
+    let mut mask = vec![false; t * t];
+    for i in 0..t {
+        for j in 0..=i {
+            mask[i * t + j] = true;
+        }
+    }
+    mask
 }
 
 fn layer_norm(x: &Mat, g: &[f32], b: &[f32]) -> Mat {

@@ -3,9 +3,14 @@
 //!
 //! Python never runs on this path — the rust binary is self-contained once
 //! `make artifacts` has produced `artifacts/hlo/*.hlo.txt`.
+//!
+//! Also home to [`pool`], the persistent scoped worker pool the attention
+//! hot path fans query batches out on (no per-call thread spawns).
 
 pub mod client;
+pub mod pool;
 pub mod registry;
 
 pub use client::{Engine, LoadedExecutable};
+pub use pool::WorkerPool;
 pub use registry::{ArtifactRegistry, AttnKernelSpec};

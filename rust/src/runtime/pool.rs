@@ -1,0 +1,338 @@
+//! Persistent scoped worker pool for the serving hot path.
+//!
+//! The seed implementation fanned every `partial_states` call out with
+//! `std::thread::scope`, paying an OS thread spawn + join per attention
+//! call — measurable at coordinator batch rates (EXPERIMENTS.md §Perf).
+//! This pool spawns its workers once and hands them borrowed jobs through
+//! a shared queue; `run_scoped` blocks until every submitted job has
+//! completed, which is what makes lifetime erasure of the borrows sound.
+//!
+//! Design notes:
+//! * The caller *helps*: after enqueueing it drains the queue itself until
+//!   empty, then waits on a completion latch.  A pool whose worker spawns
+//!   all failed therefore still makes progress (serial execution), and
+//!   nested `run_scoped` calls from inside a pool job cannot deadlock.
+//! * Panics inside a job are caught so the latch always resolves; the
+//!   panic is re-raised on the submitting thread.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Payload of a panicked job, kept so the submitter can re-raise it.
+type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
+
+/// A lifetime-erased job. Only constructed inside `run_scoped`, which
+/// guarantees the borrows outlive execution by blocking until completion.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct QueueInner {
+    tasks: VecDeque<Task>,
+    open: bool,
+}
+
+struct Queue {
+    inner: Mutex<QueueInner>,
+    available: Condvar,
+}
+
+/// Completion latch for one `run_scoped` call.
+struct Latch {
+    /// (jobs remaining, first panic payload if any)
+    state: Mutex<(usize, Option<PanicPayload>)>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { state: Mutex::new((n, None)), done: Condvar::new() }
+    }
+
+    fn complete(&self, panicked: Option<PanicPayload>) {
+        let mut g = self.state.lock().unwrap();
+        g.0 -= 1;
+        if g.1.is_none() {
+            g.1 = panicked;
+        }
+        if g.0 == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// All jobs of this latch completed (drained or executed elsewhere)?
+    fn finished(&self) -> bool {
+        self.state.lock().unwrap().0 == 0
+    }
+
+    /// Block until all jobs completed; returns the first panic payload.
+    fn wait(&self) -> Option<PanicPayload> {
+        let mut g = self.state.lock().unwrap();
+        while g.0 > 0 {
+            g = self.done.wait(g).unwrap();
+        }
+        g.1.take()
+    }
+}
+
+/// A persistent pool of worker threads executing borrowed, scoped jobs.
+pub struct WorkerPool {
+    queue: Arc<Queue>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `threads` workers (clamped to >= 0 spawned; the
+    /// submitting thread always participates, so even 0 workers executes).
+    pub fn new(threads: usize) -> WorkerPool {
+        let queue = Arc::new(Queue {
+            inner: Mutex::new(QueueInner { tasks: VecDeque::new(), open: true }),
+            available: Condvar::new(),
+        });
+        let mut workers = 0;
+        for i in 0..threads {
+            let q = queue.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("hfa-pool-{i}"))
+                .spawn(move || worker_loop(q));
+            if spawned.is_ok() {
+                workers += 1;
+            }
+        }
+        WorkerPool { queue, workers }
+    }
+
+    /// Parallel capacity: worker threads plus the submitting thread.
+    pub fn parallelism(&self) -> usize {
+        self.workers + 1
+    }
+
+    /// Execute all `jobs` (which may borrow from the caller's stack) and
+    /// return once every one has finished.  Panics if any job panicked.
+    pub fn run_scoped<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let latch = Arc::new(Latch::new(jobs.len()));
+        {
+            let mut g = self.queue.inner.lock().unwrap();
+            for job in jobs {
+                let l = latch.clone();
+                let wrapped: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+                    let r = catch_unwind(AssertUnwindSafe(job));
+                    l.complete(r.err());
+                });
+                // SAFETY: `run_scoped` does not return until the latch
+                // reports every job complete, so the 'scope borrows inside
+                // `wrapped` strictly outlive its execution.  The panic
+                // guard above guarantees the latch always resolves.
+                let task: Task = unsafe {
+                    let raw: *mut (dyn FnOnce() + Send + 'scope) = Box::into_raw(wrapped);
+                    let raw: *mut (dyn FnOnce() + Send + 'static) = std::mem::transmute(raw);
+                    Box::from_raw(raw)
+                };
+                g.tasks.push_back(task);
+            }
+            self.queue.available.notify_all();
+        }
+        // Help drain the queue while waiting — keeps the submitting core
+        // busy and makes the pool safe to re-enter from inside a job.
+        // Stop helping as soon as *this call's* jobs are all done, so a
+        // finished batch is never held hostage by another caller's queue
+        // traffic (no priority inversion on the serving tail).
+        while !latch.finished() {
+            let task = self.queue.inner.lock().unwrap().tasks.pop_front();
+            match task {
+                Some(t) => t(),
+                None => break,
+            }
+        }
+        // Re-raise the original panic payload (message, file, line intact)
+        // on the submitting thread, matching std::thread::scope semantics.
+        if let Some(payload) = latch.wait() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        let mut g = self.queue.inner.lock().unwrap();
+        g.open = false;
+        self.queue.available.notify_all();
+    }
+}
+
+fn worker_loop(queue: Arc<Queue>) {
+    loop {
+        let task = {
+            let mut g = queue.inner.lock().unwrap();
+            loop {
+                if let Some(t) = g.tasks.pop_front() {
+                    break Some(t);
+                }
+                if !g.open {
+                    break None;
+                }
+                g = queue.available.wait(g).unwrap();
+            }
+        };
+        match task {
+            Some(t) => t(),
+            None => return,
+        }
+    }
+}
+
+/// Fan `run(0..n)` out over the global pool in contiguous chunks and
+/// collect the results in index order.  Falls back to a plain serial
+/// loop when `n <= 1` or no parallelism is available; results are
+/// identical either way (each index is computed independently).
+pub fn fan_out<T, F>(n: usize, run: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let pool = global();
+    let width = pool.parallelism();
+    if n > 1 && width > 1 {
+        let chunk = n.div_ceil(width.min(n));
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = slots
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(t, out)| {
+                let run = &run;
+                Box::new(move || {
+                    for (j, slot) in out.iter_mut().enumerate() {
+                        *slot = Some(run(t * chunk + j));
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        return slots
+            .into_iter()
+            .map(|s| s.expect("fan_out filled every slot"))
+            .collect();
+    }
+    (0..n).map(|i| run(i)).collect()
+}
+
+/// The process-wide pool used by the attention hot path.  Sized to the
+/// machine minus one (the submitting thread helps), spawned on first use,
+/// never torn down.
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        WorkerPool::new(cores.saturating_sub(1))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs_with_borrows() {
+        let pool = WorkerPool::new(3);
+        let mut out = vec![0usize; 64];
+        {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+                .chunks_mut(8)
+                .enumerate()
+                .map(|(c, chunk)| {
+                    Box::new(move || {
+                        for (j, slot) in chunk.iter_mut().enumerate() {
+                            *slot = c * 8 + j + 1;
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_scoped(jobs);
+        }
+        assert!(out.iter().enumerate().all(|(i, &x)| x == i + 1));
+    }
+
+    #[test]
+    fn zero_worker_pool_degrades_to_serial() {
+        let pool = WorkerPool::new(0);
+        let hits = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..10)
+            .map(|_| {
+                Box::new(|| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn reentrant_from_inside_a_job_same_pool() {
+        let pool = WorkerPool::new(2);
+        let hits = AtomicUsize::new(0);
+        let outer: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                let (hits, pool) = (&hits, &pool);
+                Box::new(move || {
+                    let inner: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                        .map(|_| {
+                            Box::new(move || {
+                                hits.fetch_add(1, Ordering::Relaxed);
+                            })
+                                as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                    pool.run_scoped(inner);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(outer);
+        assert_eq!(hits.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn job_panic_propagates_with_original_payload() {
+        let pool = WorkerPool::new(2);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..3)
+            .map(|i| {
+                Box::new(move || {
+                    if i == 1 {
+                        panic!("boom");
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(jobs);
+    }
+
+    #[test]
+    fn global_pool_usable_from_many_threads() {
+        let done: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let mut acc = vec![0u64; 32];
+                    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = acc
+                        .chunks_mut(8)
+                        .map(|chunk| {
+                            Box::new(move || {
+                                for slot in chunk.iter_mut() {
+                                    *slot = t as u64 + 1;
+                                }
+                            }) as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                    global().run_scoped(jobs);
+                    acc.iter().sum::<u64>()
+                })
+            })
+            .collect();
+        for (t, h) in done.into_iter().enumerate() {
+            assert_eq!(h.join().unwrap(), 32 * (t as u64 + 1));
+        }
+    }
+}

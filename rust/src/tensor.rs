@@ -53,34 +53,56 @@ impl Mat {
     }
 
     /// `self (r x k) * rhs (k x c)` -> `(r x c)`, f32 accumulate.
+    ///
+    /// Blocked transposed-RHS kernel: the RHS is transposed once so every
+    /// output element is a unit-stride [`dot_f32`] over two contiguous
+    /// rows (the same sequential accumulation order as the definition,
+    /// so results match the element-wise `dot_f32` oracle exactly).
     pub fn matmul(&self, rhs: &Mat) -> Mat {
         assert_eq!(self.cols, rhs.rows, "matmul shape mismatch");
+        let rt = rhs.t();
         let mut out = Mat::zeros(self.rows, rhs.cols);
         for i in 0..self.rows {
             let arow = self.row(i);
             let orow = out.row_mut(i);
-            for (kk, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = rhs.row(kk);
-                for (j, &b) in brow.iter().enumerate() {
-                    orow[j] += a * b;
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o = dot_f32(arow, rt.row(j));
+            }
+        }
+        out
+    }
+
+    /// Transpose (cache-blocked copy).
+    pub fn t(&self) -> Mat {
+        const TILE: usize = 32;
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r0 in (0..self.rows).step_by(TILE) {
+            for c0 in (0..self.cols).step_by(TILE) {
+                for r in r0..(r0 + TILE).min(self.rows) {
+                    for c in c0..(c0 + TILE).min(self.cols) {
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
                 }
             }
         }
         out
     }
 
-    /// Transpose.
-    pub fn t(&self) -> Mat {
-        Mat::from_fn(self.cols, self.rows, |r, c| self.at(c, r))
-    }
-
     /// Slice of rows [lo, hi).
     pub fn rows_slice(&self, lo: usize, hi: usize) -> Mat {
         assert!(lo <= hi && hi <= self.rows);
         Mat::from_vec(hi - lo, self.cols, self.data[lo * self.cols..hi * self.cols].to_vec())
+    }
+
+    /// Copy of columns [lo, hi) (row-wise memcpy) — per-head Q/K/V slicing.
+    pub fn cols_slice(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.cols);
+        let w = hi - lo;
+        let mut out = Mat::zeros(self.rows, w);
+        for r in 0..self.rows {
+            out.row_mut(r).copy_from_slice(&self.row(r)[lo..hi]);
+        }
+        out
     }
 
     /// Round every element through BF16 (hardware input convention).
@@ -147,6 +169,93 @@ mod tests {
     fn transpose_involution() {
         let a = Mat::from_fn(3, 5, |r, c| (r * 5 + c) as f32);
         assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn transpose_blocked_matches_definition() {
+        // shapes straddling the tile size in both dimensions
+        for (r, c) in [(1, 1), (7, 3), (32, 32), (33, 31), (70, 5), (2, 65)] {
+            let a = Mat::from_fn(r, c, |i, j| (i * 131 + j * 17) as f32 * 0.25 - 3.0);
+            let t = a.t();
+            assert_eq!((t.rows, t.cols), (c, r));
+            for i in 0..r {
+                for j in 0..c {
+                    assert_eq!(t.at(j, i), a.at(i, j), "({i},{j}) of {r}x{c}");
+                }
+            }
+        }
+    }
+
+    /// Definition-order reference: the seed's naive triple loop.
+    fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
+        assert_eq!(a.cols, b.rows);
+        let mut out = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for kk in 0..a.cols {
+                for j in 0..b.cols {
+                    let x = out.at(i, j) + a.at(i, kk) * b.at(kk, j);
+                    out.set(i, j, x);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_kernel_matches_naive_reference_bitwise() {
+        // same accumulation order -> bit-identical f32 sums
+        let mut seed = 0x9e3779b9u32;
+        let mut next = move || {
+            seed = seed.wrapping_mul(1664525).wrapping_add(1013904223);
+            ((seed >> 8) as f32 / (1 << 24) as f32) * 4.0 - 2.0
+        };
+        for (r, k, c) in [(1, 1, 1), (3, 5, 2), (8, 8, 8), (13, 33, 7), (31, 4, 17)] {
+            let a = Mat::from_fn(r, k, |_, _| next());
+            let b = Mat::from_fn(k, c, |_, _| next());
+            let fast = a.matmul(&b);
+            let slow = matmul_naive(&a, &b);
+            assert_eq!(fast.data, slow.data, "{r}x{k}x{c}");
+        }
+    }
+
+    #[test]
+    fn matmul_consistent_with_dot_f32() {
+        let a = Mat::from_fn(6, 19, |r, c| ((r * 19 + c) as f32).sin());
+        let b = Mat::from_fn(19, 9, |r, c| ((r * 9 + c) as f32).cos());
+        let o = a.matmul(&b);
+        let bt = b.t();
+        for i in 0..6 {
+            for j in 0..9 {
+                assert_eq!(o.at(i, j), dot_f32(a.row(i), bt.row(j)), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_with_zero_rows_matches_reference() {
+        // zeros exercised the seed kernel's skip path; the new kernel must
+        // produce the same sums
+        let mut a = Mat::from_fn(4, 6, |r, c| (r + c) as f32 - 3.0);
+        for c in 0..6 {
+            a.set(2, c, 0.0);
+        }
+        let b = Mat::from_fn(6, 5, |r, c| (r * 5 + c) as f32 * 0.5 - 7.0);
+        assert_eq!(a.matmul(&b).data, matmul_naive(&a, &b).data);
+        assert_eq!(a.matmul(&b).row(2).to_vec(), vec![0.0f32; 5]);
+    }
+
+    #[test]
+    fn cols_slice_picks_columns() {
+        let a = Mat::from_fn(3, 6, |r, c| (r * 10 + c) as f32);
+        let s = a.cols_slice(2, 5);
+        assert_eq!((s.rows, s.cols), (3, 3));
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(s.at(r, c), a.at(r, 2 + c));
+            }
+        }
+        let full = a.cols_slice(0, 6);
+        assert_eq!(full, a);
     }
 
     #[test]

@@ -1,0 +1,80 @@
+//! Regression: through the coordinator, the value matrix is linear->log
+//! converted exactly once per session (at `KvStore::put`), never per
+//! batch.  This pins the paper's "KV preloaded in local buffers"
+//! assumption end-to-end: `SimBackend` adopts the store's prepared KV by
+//! Arc identity, and `Accelerator::compute_batch` runs entirely on the
+//! resident lanes.
+//!
+//! Kept as the sole test in this binary so the process-wide conversion
+//! counter sees no concurrent traffic from unrelated tests.
+
+use std::sync::Arc;
+
+use hfa::attention::hfa::value_conversion_count;
+use hfa::config::{AcceleratorConfig, CoordinatorConfig};
+use hfa::coordinator::{KvStore, Server, SimBackend};
+use hfa::hw::Arith;
+use hfa::proptest::Rng;
+use hfa::Mat;
+
+#[test]
+fn value_to_lns_runs_once_per_session_not_per_batch() {
+    const N: usize = 64;
+    const D: usize = 8;
+    let accel_cfg = AcceleratorConfig {
+        head_dim: D,
+        seq_len: N,
+        kv_blocks: 4,
+        parallel_queries: 1,
+        freq_mhz: 500.0,
+    };
+    let coord_cfg = CoordinatorConfig {
+        max_batch: 4,
+        batch_window_us: 100,
+        workers: 2,
+        queue_depth: 128,
+    };
+
+    let kv = Arc::new(KvStore::new(N, D, 4));
+    let mut rng = Rng::new(42);
+
+    let before_put = value_conversion_count();
+    kv.put("sess", Mat::from_vec(N, D, rng.normal_vec(N * D)),
+           Mat::from_vec(N, D, rng.normal_vec(N * D))).unwrap();
+    let after_put = value_conversion_count();
+    assert_eq!(
+        after_put - before_put,
+        N as u64,
+        "put() must convert each of the {N} value rows exactly once"
+    );
+
+    let factories = (0..coord_cfg.workers)
+        .map(|_| SimBackend::factory(Arith::Hfa, accel_cfg.clone()))
+        .collect();
+    let server = Server::start(&coord_cfg, kv.clone(), factories).unwrap();
+
+    // several waves of batches against the resident session — with both
+    // workers serving, every one must run on the prepared lanes
+    for wave in 0..5 {
+        let rxs: Vec<_> =
+            (0..16).map(|_| server.submit("sess", rng.normal_vec(D)).unwrap()).collect();
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert!(r.ok(), "wave {wave}: {:?}", r.output);
+        }
+    }
+    let after_serving = value_conversion_count();
+    assert_eq!(
+        after_serving, after_put,
+        "serving must not reconvert V: {} extra row conversions after {} batches",
+        after_serving - after_put,
+        server.metrics.snapshot().batches
+    );
+
+    // replacing the session pays the conversion again — once
+    kv.put("sess", Mat::from_vec(N, D, rng.normal_vec(N * D)),
+           Mat::from_vec(N, D, rng.normal_vec(N * D))).unwrap();
+    assert_eq!(value_conversion_count() - after_serving, N as u64);
+
+    server.shutdown();
+}
