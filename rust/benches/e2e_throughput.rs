@@ -1,7 +1,9 @@
 //! End-to-end serving throughput/latency through the coordinator:
 //! simulated-accelerator backends (H-FA vs FA-2) and, when artifacts are
 //! present, the PJRT-compiled H-FA kernel backend.  Also reports the raw
-//! accelerator compute-batch wall time (coordinator overhead = difference).
+//! accelerator compute-batch wall time (coordinator overhead = difference)
+//! and a decode-loop scenario (prefill once, then N append+attend steps)
+//! comparing the append-only path against rebuilding the session per step.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -114,7 +116,7 @@ fn main() -> anyhow::Result<()> {
     t.emit("e2e_throughput");
 
     // raw accelerator batch compute (no coordinator) for overhead attribution
-    let mut accel = Accelerator::new(Arith::Hfa, accel_cfg);
+    let mut accel = Accelerator::new(Arith::Hfa, accel_cfg.clone());
     accel.load_kv(k.clone(), v.clone())?;
     let q = Mat::from_vec(16, D, rng.normal_vec(16 * D));
     let stats = bench(2, 20, Duration::from_secs(10), || {
@@ -143,5 +145,61 @@ fn main() -> anyhow::Result<()> {
         reused.mean_ms(),
         per_call.mean_ns / reused.mean_ns.max(1.0)
     );
+
+    // decode loop (EXPERIMENTS.md §Decode): prefill once, then STEPS x
+    // (one-row KV write + one attend).  "append" uses Server::append
+    // (convert only the new row); "re-put" rebuilds the whole session per
+    // step — the only option before the append path existed.
+    let steps: usize = std::env::var("HFA_BENCH_DECODE_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+        .min(N / 2);
+    let prefill = N - steps;
+    // NOTE on fairness: both arms time the full step (KV write + attend)
+    // via wall clock, which is symmetric; per-request latency percentiles
+    // are NOT comparable across arms (the re-put arm's write bypasses the
+    // server and its metrics), so the table reports steps/s only.
+    let mut dt = Table::new(
+        "Decode loop — prefill once, then append+attend per token, N=1024, d=64",
+        &["KV write path", "prefill", "steps", "steps/s", "step mean us", "V rows converted"],
+    );
+    for (name, use_append) in [("append (this PR)", true), ("full re-put (seed)", false)] {
+        let kv = Arc::new(KvStore::new(N, D, 4));
+        kv.put("dec", k.rows_slice(0, prefill), v.rows_slice(0, prefill))?;
+        let factories = (0..coord_cfg.workers)
+            .map(|_| SimBackend::factory(Arith::Hfa, accel_cfg.clone()))
+            .collect();
+        let server = Server::start(&coord_cfg, kv.clone(), factories)?;
+        let conv0 = hfa::attention::hfa::value_conversion_count();
+        let t0 = Instant::now();
+        for s in 0..steps {
+            let at = prefill + s;
+            if use_append {
+                let ack = server.append(
+                    "dec",
+                    k.rows_slice(at, at + 1),
+                    v.rows_slice(at, at + 1),
+                )?;
+                assert!(ack.ok(), "{:?}", ack.output);
+            } else {
+                kv.put("dec", k.rows_slice(0, at + 1), v.rows_slice(0, at + 1))?;
+            }
+            let r = server.call("dec", rng.normal_vec(D))?;
+            assert!(r.ok(), "{:?}", r.output);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let converted = hfa::attention::hfa::value_conversion_count() - conv0;
+        dt.row(&[
+            name.into(),
+            prefill.to_string(),
+            steps.to_string(),
+            format!("{:.0}", steps as f64 / wall),
+            format!("{:.0}", wall / steps as f64 * 1e6),
+            converted.to_string(),
+        ]);
+        server.shutdown();
+    }
+    dt.emit("decode_loop");
     Ok(())
 }

@@ -230,6 +230,17 @@ impl LnsMat {
         self.logs[r * self.lanes..(r + 1) * self.lanes].copy_from_slice(&v.logs);
     }
 
+    /// Append one row (must have `lanes` entries) below the existing rows
+    /// — the decode-time growth primitive for a resident value matrix.
+    /// Only the new row's planes are written; resident rows are untouched
+    /// (at most one realloc memcpy of the flat storage).
+    pub fn push_row(&mut self, v: &LnsVec) {
+        assert_eq!(v.len(), self.lanes, "lane count mismatch");
+        self.signs.extend_from_slice(&v.signs);
+        self.logs.extend_from_slice(&v.logs);
+        self.rows += 1;
+    }
+
     /// Copy row `r` out as an [`LnsVec`] (interop with the merge path).
     pub fn row_vec(&self, r: usize) -> LnsVec {
         LnsVec {
@@ -351,6 +362,27 @@ mod tests {
             assert!(m.row_vec(0).get(i).is_zero());
             assert!(m.row_vec(2).get(i).is_zero());
         }
+    }
+
+    #[test]
+    fn lnsmat_push_row_matches_set_row_build() {
+        // growing row-by-row must equal building the full matrix up front
+        let rows: Vec<LnsVec> = (0..5)
+            .map(|r| LnsVec {
+                signs: vec![r as i32 % 2, 0, 1],
+                logs: vec![r as i32 * 7 - 3, LOG_ZERO, 64 - r as i32],
+            })
+            .collect();
+        let mut grown = LnsMat::zeros(0, 3);
+        let mut full = LnsMat::zeros(5, 3);
+        for (r, v) in rows.iter().enumerate() {
+            grown.push_row(v);
+            full.set_row(r, v);
+        }
+        assert_eq!(grown, full);
+        assert_eq!(grown.rows(), 5);
+        assert_eq!(grown.row_signs(2), full.row_signs(2));
+        assert_eq!(grown.row_logs(4), full.row_logs(4));
     }
 
     #[test]

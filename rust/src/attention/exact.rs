@@ -39,6 +39,11 @@ pub fn attention(q: &Mat, k: &Mat, v: &Mat, scale: Option<f32>, mask: Option<&[b
                 *a += w * vv as f64;
             }
         }
+        // fully-masked row: den == 0 would give 0/0 = NaN; the defined
+        // output is the zero row (out is pre-zeroed)
+        if den == 0.0 {
+            continue;
+        }
         for (j, a) in acc.iter().enumerate() {
             out.set(bi, j, (a / den) as f32);
         }

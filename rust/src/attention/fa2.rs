@@ -35,8 +35,14 @@ impl Fa2State {
         self.m = m_new;
     }
 
-    /// Final normalization (line 8).
+    /// Final normalization (line 8).  A state that never stepped (every
+    /// key masked) has `ell == 0` and a zero accumulator; 0/0 would be
+    /// NaN, so the defined output is the zero row — matching the H-FA
+    /// LogDiv, whose all-zero LNS lanes already finalize to zero.
     pub fn finalize(&self) -> Vec<f32> {
+        if self.ell == 0.0 {
+            return vec![0.0; self.o.len()];
+        }
         self.o.iter().map(|&o| o / self.ell).collect()
     }
 }

@@ -40,7 +40,12 @@ pub fn attention(q: &Mat, k: &Mat, v: &Mat, scale: Option<f32>, mask: Option<&[b
                 *a += f * vv;
             }
         }
-        // line 11: single deferred division
+        // line 11: single deferred division.  A fully-masked row has
+        // `ell == 0` and an all-zero accumulator; 0/0 would be NaN, so
+        // define the output as the zero row (out is pre-zeroed).
+        if ell == 0.0 {
+            continue;
+        }
         for (j, a) in acc.iter().enumerate() {
             out.set(bi, j, a / ell);
         }

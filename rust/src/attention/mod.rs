@@ -32,6 +32,8 @@ pub enum Impl {
 }
 
 impl Impl {
+    // not the FromStr trait: this is a CLI selector with anyhow errors
+    #[allow(clippy::should_implement_trait)]
     pub fn from_str(s: &str) -> anyhow::Result<Impl> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "exact" => Impl::Exact,
@@ -111,6 +113,40 @@ mod tests {
         let hf = compute(Impl::Hfa, &q, &k, &v, None);
         let rel = hf.rel_rms(&ex);
         assert!(rel < 0.08, "rel rms {rel}");
+    }
+
+    #[test]
+    fn fully_masked_rows_return_zero_not_nan() {
+        // regression: a row whose every key is masked used to divide 0/0
+        // (NaN) in exact/lazy/fa2; H-FA's LogDiv already defined it as
+        // zero.  All four variants (and the prepared serving path) must
+        // return a zero row while leaving other rows untouched.
+        let mut rng = Rng::new(33);
+        let (q, k, v) = rand_mats(&mut rng, 2, 8, 4);
+        let mut mask = vec![true; 2 * 8];
+        for slot in mask.iter_mut().take(8) {
+            *slot = false; // row 0: nothing to attend to
+        }
+        for imp in [Impl::Exact, Impl::Lazy, Impl::Fa2, Impl::Hfa] {
+            let o = compute(imp, &q, &k, &v, Some(&mask));
+            assert_eq!(o.row(0), &[0.0f32; 4][..], "{imp:?}: fully-masked row must be zero");
+            assert!(
+                o.row(1).iter().all(|x| x.is_finite()),
+                "{imp:?}: unmasked row went non-finite"
+            );
+            // the unmasked row must be unaffected by the masked one
+            let solo = compute(imp, &q.rows_slice(1, 2), &k, &v, Some(&mask[8..]));
+            assert_eq!(o.row(1), solo.row(0), "{imp:?}");
+        }
+        let kv = PreparedKv::new(k.clone(), v.clone());
+        let o = kv.attention(&q, None, Some(&mask));
+        assert_eq!(o.row(0), &[0.0f32; 4][..], "prepared path fully-masked row");
+        // zero keys at all (empty mask domain) is the same edge for the
+        // fa2/hfa state finalizers
+        let st = fa2::Fa2State::new(4);
+        assert_eq!(st.finalize(), vec![0.0; 4]);
+        let hst = hfa::HfaState::new(4);
+        assert_eq!(hst.finalize(), vec![0.0; 4]);
     }
 
     #[test]

@@ -13,6 +13,13 @@
 //! Query fan-out goes through the persistent [`crate::runtime::pool`]
 //! worker pool instead of a per-call `std::thread::scope` spawn.
 //!
+//! Autoregressive decode grows a prepared set row-by-row with
+//! [`PreparedKv::append`]: only the new V rows are converted, and the
+//! stored capacity-driven block partition ([`fixed_block_ranges`]) keeps
+//! earlier block boundaries fixed while its tail block fills — so
+//! prefill+append is bit-identical to building from the full matrices
+//! (pinned by `rust/tests/append_equivalence.rs`).
+//!
 //! Everything here is bit-identical to the serial seed path: the lane
 //! update is the same `step_lanes_fast` kernel, conversions go through
 //! `value_to_lns`, and per-query results are independent of the thread
@@ -56,12 +63,43 @@ pub fn kv_block_ranges(n: usize, num_blocks: usize) -> Vec<(usize, usize)> {
         .collect()
 }
 
+/// Sub-block capacity of the stored decode partition when none is given:
+/// the paper's Section VI-C geometry (N=1024 over four 256-row blocks).
+pub const DEFAULT_BLOCK_ROWS: usize = 256;
+
+/// Partition `n` rows into fixed-capacity blocks of `block_rows` with a
+/// ragged tail.  Unlike [`kv_block_ranges`] (count-driven, boundaries
+/// move as `n` changes), this capacity-driven partition is append-stable:
+/// growing `n` only widens the tail block until it fills, then opens new
+/// blocks — earlier boundaries never move.  A pure function of
+/// `(n, block_rows)`, which is what makes prefill+append bit-identical
+/// to a from-scratch build.
+pub fn fixed_block_ranges(n: usize, block_rows: usize) -> Vec<(usize, usize)> {
+    let br = block_rows.max(1);
+    let mut out = Vec::with_capacity(n.div_ceil(br));
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + br).min(n);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
 /// A session's KV prepared for repeated attention calls: K as given
-/// (row-major f32 holding BF16 values) and V resident in the log domain.
+/// (row-major f32 holding BF16 values) and V resident in the log domain,
+/// plus the append-stable ragged block partition the decode path merges
+/// over.  Grows in place via [`PreparedKv::append`].
+#[derive(Clone)]
 pub struct PreparedKv {
     k: Arc<Mat>,
     v: Arc<Mat>,
     v_lns: LnsMat,
+    /// Capacity of each stored sub-block (the block-FAU buffer size).
+    block_rows: usize,
+    /// Ragged `[lo, hi)` block ranges; always equals
+    /// `fixed_block_ranges(n, block_rows)`.
+    blocks: Vec<(usize, usize)>,
 }
 
 /// A zero-copy view of a contiguous KV sub-block (`[lo, hi)` rows) — the
@@ -76,16 +114,76 @@ pub struct KvBlockView<'a> {
 impl PreparedKv {
     /// Prepare owned K/V.  No rounding is applied here — callers decide
     /// the BF16 ingress convention (the KV store and accelerator round on
-    /// load, mirroring the seed paths they replace).
+    /// load, mirroring the seed paths they replace).  The stored decode
+    /// partition uses [`DEFAULT_BLOCK_ROWS`].
     pub fn new(k: Mat, v: Mat) -> PreparedKv {
         PreparedKv::from_arcs(Arc::new(k), Arc::new(v))
     }
 
+    /// [`PreparedKv::new`] with an explicit stored sub-block capacity.
+    pub fn with_block_rows(k: Mat, v: Mat, block_rows: usize) -> PreparedKv {
+        PreparedKv::from_arcs_with_block_rows(Arc::new(k), Arc::new(v), block_rows)
+    }
+
     /// Prepare shared K/V without copying the float matrices.
     pub fn from_arcs(k: Arc<Mat>, v: Arc<Mat>) -> PreparedKv {
+        PreparedKv::from_arcs_with_block_rows(k, v, DEFAULT_BLOCK_ROWS)
+    }
+
+    /// [`PreparedKv::from_arcs`] with an explicit sub-block capacity.
+    pub fn from_arcs_with_block_rows(
+        k: Arc<Mat>,
+        v: Arc<Mat>,
+        block_rows: usize,
+    ) -> PreparedKv {
         assert_eq!(k.rows, v.rows, "K/V row count mismatch");
         let v_lns = convert_values(v.as_ref());
-        PreparedKv { k, v, v_lns }
+        let block_rows = block_rows.max(1);
+        let blocks = fixed_block_ranges(k.rows, block_rows);
+        PreparedKv { k, v, v_lns, block_rows, blocks }
+    }
+
+    /// Append decode-step K/V rows, converting **only** the new V rows
+    /// into the resident LNS lanes — resident rows are never re-rounded
+    /// or re-converted, so per-step cost tracks the appended rows, not
+    /// the sequence length.  The stored ragged partition grows its tail
+    /// block until it reaches `block_rows`, then opens new blocks —
+    /// exactly the partition [`fixed_block_ranges`] computes from
+    /// scratch, so prefill+append stays bit-identical to
+    /// [`PreparedKv::new`] over the full matrices (pinned by
+    /// `rust/tests/append_equivalence.rs`).
+    ///
+    /// No rounding is applied (same ingress convention as `new`).  When
+    /// the float matrices are `Arc`-shared they are copied on first
+    /// write (`Arc::make_mut`); a uniquely-owned cache grows truly in
+    /// place.
+    pub fn append(&mut self, k_rows: &Mat, v_rows: &Mat) {
+        assert_eq!(k_rows.cols, self.k.cols, "K append dim mismatch");
+        assert_eq!(v_rows.cols, self.v.cols, "V append dim mismatch");
+        assert_eq!(k_rows.rows, v_rows.rows, "K/V append row count mismatch");
+        if k_rows.rows == 0 {
+            return;
+        }
+        Arc::make_mut(&mut self.k).append_rows(k_rows);
+        Arc::make_mut(&mut self.v).append_rows(v_rows);
+        for i in 0..v_rows.rows {
+            let row = value_to_lns(v_rows.row(i), &mut None);
+            self.v_lns.push_row(&row);
+        }
+        // the capacity-driven partition is a pure function of (n, block
+        // rows) — recomputing it *is* the tail-widen/open-new-blocks
+        // update (earlier boundaries never move), at O(n/block_rows)
+        // tuple writes, negligible next to the row copies above
+        self.blocks = fixed_block_ranges(self.k.rows, self.block_rows);
+    }
+
+    /// Copy-on-write [`PreparedKv::append`] for `Arc`-shared prepared KV
+    /// (the KV store's swap-in path): resident float/LNS planes are
+    /// memcpy'd, only the new V rows pay a linear->log conversion.
+    pub fn appended(&self, k_rows: &Mat, v_rows: &Mat) -> PreparedKv {
+        let mut next = self.clone();
+        next.append(k_rows, v_rows);
+        next
     }
 
     /// Key/value rows resident.
@@ -121,6 +219,44 @@ impl PreparedKv {
 
     pub fn v_lns(&self) -> &LnsMat {
         &self.v_lns
+    }
+
+    /// Capacity of each stored sub-block.
+    pub fn block_rows(&self) -> usize {
+        self.block_rows
+    }
+
+    /// The stored append-stable ragged block partition.
+    pub fn blocks(&self) -> &[(usize, usize)] {
+        &self.blocks
+    }
+
+    /// 2D-parallel H-FA over the **stored** partition: one partial FAU
+    /// per resident sub-block, log-domain ACC merge (Eq. 16), LogDiv.
+    /// Unlike [`PreparedKv::attention_blocked`] (count-driven boundaries
+    /// that move as `n` grows), the stored boundaries are append-stable,
+    /// so a step's merge tree does not shift under decode.  The serving
+    /// stack currently drives the count-driven variant (the simulated
+    /// accelerator has a fixed block-FAU count); this entry point is the
+    /// building block for a stable-merge-tree decode schedule and is
+    /// pinned by `rust/tests/append_equivalence.rs`.
+    pub fn attention_resident_blocks(&self, q: &Mat, scale: Option<f32>) -> Mat {
+        let scale = resolve_scale(scale, q.cols);
+        let dv = self.dv();
+        let mut acc: Option<Vec<HfaState>> = None;
+        for &(lo, hi) in &self.blocks {
+            let st = partial_states_borrowed(q, &self.k, &self.v_lns, lo, hi, scale, None);
+            acc = Some(match acc {
+                None => st,
+                Some(prev) => prev
+                    .into_iter()
+                    .zip(st)
+                    .map(|(a, b)| merge_hfa(&a, &b, &mut None))
+                    .collect(),
+            });
+        }
+        let states = acc.unwrap_or_else(|| (0..q.rows).map(|_| HfaState::new(dv)).collect());
+        finalize_states(&states, dv)
     }
 
     /// Zero-copy sub-block view of rows `[lo, hi)`.
@@ -324,6 +460,78 @@ mod tests {
             assert_eq!(vs, &expect.signs[..]);
             assert_eq!(vl, &expect.logs[..]);
         }
+    }
+
+    #[test]
+    fn fixed_block_ranges_capacity_partition() {
+        assert_eq!(fixed_block_ranges(0, 4), Vec::<(usize, usize)>::new());
+        assert_eq!(fixed_block_ranges(3, 4), vec![(0, 3)]);
+        assert_eq!(fixed_block_ranges(8, 4), vec![(0, 4), (4, 8)]);
+        assert_eq!(fixed_block_ranges(10, 4), vec![(0, 4), (4, 8), (8, 10)]);
+        // degenerate capacity clamps to 1
+        assert_eq!(fixed_block_ranges(3, 0), vec![(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn append_grows_tail_block_until_full() {
+        let mut rng = Rng::new(19);
+        let (k, v) = rand_kv(&mut rng, 3, 4);
+        let mut kv = PreparedKv::with_block_rows(k, v, 4);
+        assert_eq!(kv.blocks(), &[(0, 3)]);
+        let (k2, v2) = rand_kv(&mut rng, 2, 4);
+        kv.append(&k2, &v2); // 5 rows: tail fills to 4, new block opens
+        assert_eq!(kv.blocks(), &[(0, 4), (4, 5)]);
+        let (k3, v3) = rand_kv(&mut rng, 3, 4);
+        kv.append(&k3, &v3); // 8 rows
+        assert_eq!(kv.blocks(), &[(0, 4), (4, 8)]);
+        let (k4, v4) = rand_kv(&mut rng, 1, 4);
+        kv.append(&k4, &v4); // 9 rows
+        assert_eq!(kv.blocks(), &[(0, 4), (4, 8), (8, 9)]);
+        assert_eq!(kv.n(), 9);
+    }
+
+    #[test]
+    fn append_bit_identical_to_full_build() {
+        let mut rng = Rng::new(23);
+        let (k, v) = rand_kv(&mut rng, 21, 6);
+        let full = PreparedKv::with_block_rows(k.clone(), v.clone(), 8);
+        // prefill 4 rows, then ragged appends of 1/3/8/5 rows
+        let mut grown = PreparedKv::with_block_rows(k.rows_slice(0, 4), v.rows_slice(0, 4), 8);
+        let mut at = 4;
+        for step in [1usize, 3, 8, 5] {
+            grown.append(&k.rows_slice(at, at + step), &v.rows_slice(at, at + step));
+            at += step;
+        }
+        assert_eq!(at, 21);
+        assert_eq!(grown.n(), full.n());
+        assert_eq!(grown.k().data, full.k().data);
+        assert_eq!(grown.v().data, full.v().data);
+        assert_eq!(grown.v_lns(), full.v_lns());
+        assert_eq!(grown.blocks(), full.blocks());
+        let q = Mat::from_vec(2, 6, rng.normal_vec(12)).round_bf16();
+        assert_eq!(grown.attention(&q, None, None).data, full.attention(&q, None, None).data);
+        assert_eq!(
+            grown.attention_resident_blocks(&q, None).data,
+            full.attention_resident_blocks(&q, None).data
+        );
+        assert_eq!(
+            grown.attention_blocked(&q, 3, None).data,
+            full.attention_blocked(&q, 3, None).data
+        );
+    }
+
+    #[test]
+    fn appended_leaves_the_shared_original_untouched() {
+        let mut rng = Rng::new(29);
+        let (k, v) = rand_kv(&mut rng, 6, 4);
+        let base = Arc::new(PreparedKv::new(k.clone(), v.clone()));
+        let (k2, v2) = rand_kv(&mut rng, 2, 4);
+        let grown = base.appended(&k2, &v2);
+        assert_eq!(base.n(), 6, "copy-on-write must not mutate the shared base");
+        assert_eq!(grown.n(), 8);
+        assert_eq!(&grown.k().data[..k.data.len()], &k.data[..]);
+        assert_eq!(&grown.k().data[k.data.len()..], &k2.data[..]);
+        assert_eq!(grown.v_lns().row_vec(7), value_to_lns(v2.row(1), &mut None));
     }
 
     #[test]

@@ -39,12 +39,6 @@ impl Default for AcceleratorConfig {
     }
 }
 
-impl AcceleratorConfig {
-    pub fn rows_per_block(&self) -> usize {
-        self.seq_len / self.kv_blocks
-    }
-}
-
 /// Coordinator / serving configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CoordinatorConfig {
@@ -148,7 +142,6 @@ mod tests {
         let c = AcceleratorConfig::default();
         assert_eq!(c.seq_len, 1024);
         assert_eq!(c.kv_blocks, 4);
-        assert_eq!(c.rows_per_block(), 256);
         assert_eq!(c.freq_mhz, 500.0);
     }
 

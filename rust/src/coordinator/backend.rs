@@ -134,6 +134,18 @@ impl Backend for PjrtBackend {
 
     fn compute(&mut self, kv: &KvEntry, q: &Mat) -> Result<Mat> {
         anyhow::ensure!(q.rows <= self.batch, "batch {} exceeds kernel {}", q.rows, self.batch);
+        // the AOT kernel has a *static* (seq_len, head_dim) K/V shape: a
+        // short-prefill or mid-decode session (KvStore now allows any
+        // residency up to capacity) cannot be shipped to it
+        anyhow::ensure!(
+            kv.k().rows == self.seq_len && kv.k().cols == self.head_dim,
+            "session KV {}x{} does not match the compiled kernel's static {}x{} \
+             (partial/decode sessions need a sim backend or a matching kernel)",
+            kv.k().rows,
+            kv.k().cols,
+            self.seq_len,
+            self.head_dim
+        );
         // pad to the kernel's static batch
         let mut padded = Mat::zeros(self.batch, self.head_dim);
         padded.data[..q.data.len()].copy_from_slice(&q.data);

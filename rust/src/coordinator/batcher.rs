@@ -1,20 +1,29 @@
 //! Dynamic batcher: groups queued requests by KV session into batches of
 //! up to `max_batch`, closing a batch when full or when the forming
 //! window expires — the standard continuous-batching front half.
+//!
+//! Decode-step KV appends ([`Payload::Append`]) are sequencing barriers:
+//! an append closes the session's pending queries immediately and ships
+//! them in one batch with the append last, so the worker serves the
+//! queries against the pre-append KV and then applies the write.  The
+//! forming window of a session always counts from its *first* pending
+//! request — later sub-cap pushes and append traffic must not reset it.
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use super::request::AttentionRequest;
 
-/// A formed batch: all requests share one KV session.
+/// A formed batch: all requests share one KV session, in arrival order
+/// (any append is last).
 pub struct Batch {
     pub session: String,
     pub requests: Vec<AttentionRequest>,
 }
 
-/// Incremental batch former.  Feed it requests; poll `close_ready` for
-/// batches that hit the size cap, and `close_expired` on ticks.
+/// Incremental batch former.  Feed it requests; `push` returns batches
+/// that hit the size cap (or were closed by an append barrier), and
+/// `close_expired` collects the window-expired remainder on ticks.
 pub struct Batcher {
     max_batch: usize,
     window: Duration,
@@ -26,41 +35,57 @@ impl Batcher {
         Batcher { max_batch: max_batch.max(1), window, pending: HashMap::new() }
     }
 
-    /// Add a request; returns a full batch if the session hit the cap.
+    /// Add a request; returns a closed batch when the session hit the
+    /// cap or the request is an append barrier.  O(1) either way: the
+    /// just-filled session's entry is removed directly — no scan over
+    /// other sessions' pending state — and the hot sub-cap path clones
+    /// no session key at all (a clone is paid only on a session's first
+    /// pending request and on batch close).
     pub fn push(&mut self, req: AttentionRequest) -> Option<Batch> {
-        let entry = self
-            .pending
-            .entry(req.session.clone())
-            .or_insert_with(|| (Instant::now(), Vec::new()));
-        entry.1.push(req);
-        if entry.1.len() >= self.max_batch {
-            let session = self
-                .pending
-                .iter()
-                .find(|(_, (_, v))| v.len() >= self.max_batch)
-                .map(|(k, _)| k.clone())
-                .unwrap();
-            let (_, reqs) = self.pending.remove(&session).unwrap();
-            return Some(Batch { session, requests: reqs });
+        if req.is_append() {
+            // barrier: flush this session's pending queries together
+            // with the append (queries first — they predate the write)
+            let session = req.session.clone();
+            let mut requests =
+                self.pending.remove(&session).map(|(_, reqs)| reqs).unwrap_or_default();
+            requests.push(req);
+            return Some(Batch { session, requests });
+        }
+        let mut close_key: Option<String> = None;
+        if let Some((_, reqs)) = self.pending.get_mut(&req.session) {
+            if reqs.len() + 1 >= self.max_batch {
+                close_key = Some(req.session.clone());
+            }
+            reqs.push(req);
+        } else if self.max_batch == 1 {
+            let session = req.session.clone();
+            return Some(Batch { session, requests: vec![req] });
+        } else {
+            self.pending.insert(req.session.clone(), (Instant::now(), vec![req]));
+        }
+        if let Some(session) = close_key {
+            let (_, requests) = self.pending.remove(&session)?;
+            return Some(Batch { session, requests });
         }
         None
     }
 
     /// Collect every batch whose forming window has expired.
     pub fn close_expired(&mut self, now: Instant) -> Vec<Batch> {
-        let expired: Vec<String> = self
-            .pending
-            .iter()
-            .filter(|(_, (t0, _))| now.duration_since(*t0) >= self.window)
-            .map(|(k, _)| k.clone())
-            .collect();
-        expired
-            .into_iter()
-            .map(|session| {
-                let (_, requests) = self.pending.remove(&session).unwrap();
-                Batch { session, requests }
-            })
-            .collect()
+        let window = self.window;
+        let mut closed = Vec::new();
+        self.pending.retain(|session, (t0, requests)| {
+            if now.duration_since(*t0) >= window {
+                closed.push(Batch {
+                    session: session.clone(),
+                    requests: std::mem::take(requests),
+                });
+                false
+            } else {
+                true
+            }
+        });
+        closed
     }
 
     /// Flush everything (shutdown path).
@@ -79,6 +104,8 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::Payload;
+    use crate::Mat;
     use std::sync::mpsc::channel;
     use std::time::Instant;
 
@@ -87,7 +114,18 @@ mod tests {
         AttentionRequest {
             id,
             session: session.into(),
-            query: vec![0.0; 4],
+            payload: Payload::Query(vec![0.0; 4]),
+            arrived: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    fn append_req(id: u64, session: &str) -> AttentionRequest {
+        let (tx, _rx) = channel();
+        AttentionRequest {
+            id,
+            session: session.into(),
+            payload: Payload::Append { k_rows: Mat::zeros(1, 4), v_rows: Mat::zeros(1, 4) },
             arrived: Instant::now(),
             reply: tx,
         }
@@ -138,5 +176,77 @@ mod tests {
         let all = b.drain();
         assert_eq!(all.len(), 2);
         assert_eq!(b.pending_requests(), 0);
+    }
+
+    #[test]
+    fn append_closes_pending_queries_in_arrival_order() {
+        let mut b = Batcher::new(100, Duration::from_secs(60));
+        assert!(b.push(req(1, "s")).is_none());
+        assert!(b.push(req(2, "s")).is_none());
+        let batch = b.push(append_req(3, "s")).expect("append must close immediately");
+        assert_eq!(batch.session, "s");
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(
+            batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![1, 2, 3],
+            "queries first, append last"
+        );
+        assert!(batch.requests[2].is_append());
+        assert_eq!(b.pending_requests(), 0);
+    }
+
+    #[test]
+    fn append_with_no_pending_ships_alone_and_leaves_others() {
+        let mut b = Batcher::new(100, Duration::from_secs(60));
+        assert!(b.push(req(1, "other")).is_none());
+        let batch = b.push(append_req(2, "s")).expect("lone append closes");
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(b.pending_requests(), 1, "other session's pending untouched");
+    }
+
+    // Guards the `or_insert_with(Instant::now)` stamp: a session under
+    // continuous sub-cap traffic must still close `window` after its
+    // *first* pending request — later pushes and append traffic on other
+    // sessions must not push the deadline out.
+    #[test]
+    fn window_counts_from_first_pending_request_under_continuous_traffic() {
+        let window = Duration::from_millis(200);
+        let mut b = Batcher::new(100, window);
+        b.push(req(0, "s"));
+        let t0 = Instant::now(); // >= the batch's forming stamp
+        for i in 1..5u64 {
+            // sub-cap traffic keeps arriving; probing before the window
+            // must not close, and the new pushes must not reset the clock
+            assert!(b.close_expired(t0 + window / 4).is_empty(), "closed early at push {i}");
+            b.push(req(i, "s"));
+            // append traffic on an unrelated session touches the batcher
+            // without disturbing "s"
+            let other = b.push(append_req(100 + i, "other"));
+            assert!(other.is_some());
+        }
+        let closed = b.close_expired(t0 + window);
+        assert_eq!(closed.len(), 1, "batch must close at window from the first request");
+        assert_eq!(closed[0].requests.len(), 5);
+        assert_eq!(b.pending_requests(), 0);
+    }
+
+    #[test]
+    fn window_restarts_after_append_barrier_flush() {
+        let window = Duration::from_millis(200);
+        let mut b = Batcher::new(100, window);
+        b.push(req(1, "s"));
+        let t0 = Instant::now();
+        b.push(append_req(2, "s")).expect("barrier flush");
+        // new traffic after the flush starts a fresh window: the old
+        // deadline must not apply to it
+        b.push(req(3, "s"));
+        let t1 = Instant::now();
+        assert!(
+            b.close_expired(t0 + window / 2).is_empty(),
+            "fresh batch must not inherit the flushed batch's deadline"
+        );
+        let closed = b.close_expired(t1 + window);
+        assert_eq!(closed.len(), 1);
+        assert_eq!(closed[0].requests[0].id, 3);
     }
 }

@@ -10,6 +10,14 @@
 //! batch (pinned by `rust/tests/kv_prepare_once.rs`).  The LRU is a
 //! generation counter — `get()` is one HashMap probe and a u64 bump under
 //! the lock, with no list walks or key clones on the request path.
+//!
+//! Autoregressive decode grows a session one (or a few) rows per step via
+//! [`KvStore::append`]: the new rows are BF16-rounded and linear->log
+//! converted, then a fresh `Arc<PreparedKv>` built from the old one is
+//! swapped in — resident rows are never re-rounded or re-converted, so
+//! per-step cost tracks the appended rows, not the sequence length
+//! (pinned by `rust/tests/decode_append.rs`).  `seq_len` is the maximum a
+//! session may grow to; `put()` accepts any prefill length up to it.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -122,12 +130,14 @@ impl KvStore {
         self.seq_len
     }
 
-    /// Insert (or replace) a session's KV matrices.  The BF16 rounding and
-    /// the one-time V->LNS preparation happen *outside* the lock.
+    /// Insert (or replace) a session's KV matrices.  The prefill may be
+    /// any length `1..=seq_len` (a decode session grows the rest via
+    /// [`KvStore::append`]).  The BF16 rounding and the one-time V->LNS
+    /// preparation happen *outside* the lock.
     pub fn put(&self, session: &str, k: Mat, v: Mat) -> Result<()> {
-        if k.rows != self.seq_len || k.cols != self.head_dim {
+        if !(1..=self.seq_len).contains(&k.rows) || k.cols != self.head_dim {
             bail!(
-                "K shape {}x{} != store geometry {}x{}",
+                "K shape {}x{} incompatible with store geometry (up to {})x{}",
                 k.rows, k.cols, self.seq_len, self.head_dim
             );
         }
@@ -140,6 +150,70 @@ impl KvStore {
         g.entries.insert(session.to_string(), Slot { entry, last_used: stamp });
         g.evict_to_capacity();
         Ok(())
+    }
+
+    /// Append decode-step rows to a resident session: BF16-round the new
+    /// rows, convert **only them** to the log domain, and swap in a new
+    /// [`Arc<PreparedKv>`] built from the old one (copy-on-write — the
+    /// resident rows are memcpy'd, never re-rounded or re-converted).
+    /// In-flight batches holding the old `Arc` keep computing against the
+    /// pre-append snapshot; requests arriving after this returns see the
+    /// grown KV.  Refreshes the session's LRU stamp.
+    ///
+    /// The O(resident) plane copy and the per-row conversion run
+    /// **outside** the store lock (other sessions' `get`/`put` are never
+    /// stalled behind a long decode session); the swap-in re-checks by
+    /// `Arc` identity that the session was not concurrently replaced and
+    /// retries against the new base if it was.
+    pub fn append(&self, session: &str, k_rows: Mat, v_rows: Mat) -> Result<()> {
+        if k_rows.cols != self.head_dim || v_rows.cols != self.head_dim {
+            bail!(
+                "append dims {}x{} / {}x{} != head dim {}",
+                k_rows.rows, k_rows.cols, v_rows.rows, v_rows.cols, self.head_dim
+            );
+        }
+        if k_rows.rows != v_rows.rows {
+            bail!("K/V append row count mismatch");
+        }
+        if k_rows.rows == 0 {
+            bail!("empty append");
+        }
+        let kb = k_rows.round_bf16();
+        let vb = v_rows.round_bf16();
+        loop {
+            // snapshot the base under the lock (an Arc clone); the LRU
+            // stamp is refreshed only on the successful swap-in, so a
+            // rejected (e.g. over-capacity) append does not count as use
+            let base = {
+                let g = self.inner.lock().unwrap();
+                match g.entries.get(session) {
+                    Some(slot) => slot.entry.prepared.clone(),
+                    None => bail!("unknown session {session:?}"),
+                }
+            };
+            if base.n() + kb.rows > self.seq_len {
+                bail!(
+                    "append overflows session capacity: {} + {} > {}",
+                    base.n(), kb.rows, self.seq_len
+                );
+            }
+            // rebuild outside the lock
+            let next = Arc::new(base.appended(&kb, &vb));
+            // swap in, unless the session was replaced meanwhile (a
+            // concurrent put/append won the race) — then retry on the
+            // new base so no write is ever silently dropped
+            let mut g = self.inner.lock().unwrap();
+            let stamp = g.next_tick();
+            let slot = match g.entries.get_mut(session) {
+                Some(slot) => slot,
+                None => bail!("unknown session {session:?}"),
+            };
+            if Arc::ptr_eq(&slot.entry.prepared, &base) {
+                slot.entry = KvEntry { prepared: next };
+                slot.last_used = stamp;
+                return Ok(());
+            }
+        }
     }
 
     /// Fetch a session, refreshing its LRU stamp (O(1) under the lock).
@@ -185,8 +259,79 @@ mod tests {
     #[test]
     fn rejects_wrong_geometry() {
         let store = KvStore::new(16, 8, 2);
-        let (k, v) = kv(8, 8, 1.0);
+        let (k, v) = kv(16, 4, 1.0); // wrong head dim
         assert!(store.put("a", k, v).is_err());
+        let (k, v) = kv(32, 8, 1.0); // over capacity
+        assert!(store.put("a", k, v).is_err());
+        let (k, v) = kv(0, 8, 1.0); // empty prefill
+        assert!(store.put("a", k, v).is_err());
+        let (k, v) = kv(8, 8, 1.0); // short prefill is fine (decode grows it)
+        assert!(store.put("a", k, v).is_ok());
+        assert_eq!(store.get("a").unwrap().prepared().n(), 8);
+    }
+
+    #[test]
+    fn append_grows_resident_session_matching_full_put() {
+        let store = KvStore::new(16, 4, 2);
+        let full_k = Mat::from_fn(10, 4, |r, c| (r * 4 + c) as f32 * 0.25 - 1.0);
+        let full_v = Mat::from_fn(10, 4, |r, c| 1.0 - (r * 4 + c) as f32 * 0.125);
+        store.put("s", full_k.rows_slice(0, 6), full_v.rows_slice(0, 6)).unwrap();
+        store.append("s", full_k.rows_slice(6, 7), full_v.rows_slice(6, 7)).unwrap();
+        store.append("s", full_k.rows_slice(7, 10), full_v.rows_slice(7, 10)).unwrap();
+        let grown = store.get("s").unwrap();
+        let reference = KvStore::new(16, 4, 2);
+        reference.put("s", full_k, full_v).unwrap();
+        let full = reference.get("s").unwrap();
+        assert_eq!(grown.prepared().n(), 10);
+        assert_eq!(grown.k().data, full.k().data);
+        assert_eq!(grown.v().data, full.v().data);
+        assert_eq!(grown.prepared().v_lns(), full.prepared().v_lns());
+        assert_eq!(grown.prepared().blocks(), full.prepared().blocks());
+    }
+
+    #[test]
+    fn append_error_paths() {
+        let store = KvStore::new(8, 4, 2);
+        let (k, v) = kv(6, 4, 1.0);
+        store.put("s", k, v).unwrap();
+        let (k1, v1) = kv(1, 4, 2.0);
+        assert!(store.append("missing", k1.clone(), v1.clone()).is_err(), "unknown session");
+        let (kw, vw) = kv(1, 3, 2.0);
+        assert!(store.append("s", kw, vw).is_err(), "wrong head dim");
+        let (k0, v0) = kv(0, 4, 2.0);
+        assert!(store.append("s", k0, v0).is_err(), "empty append");
+        let (k3, v3) = kv(3, 4, 2.0);
+        assert!(store.append("s", k3, v3).is_err(), "overflows capacity 8");
+        // failed appends must leave the session untouched
+        assert_eq!(store.get("s").unwrap().prepared().n(), 6);
+        assert!(store.append("s", k1, v1).is_ok());
+        assert_eq!(store.get("s").unwrap().prepared().n(), 7);
+    }
+
+    #[test]
+    fn append_refreshes_lru() {
+        let store = KvStore::new(4, 4, 2);
+        let (k, v) = kv(2, 4, 0.0);
+        store.put("a", k.clone(), v.clone()).unwrap();
+        store.put("b", k.clone(), v.clone()).unwrap();
+        let (k1, v1) = kv(1, 4, 1.0);
+        store.append("a", k1, v1).unwrap(); // refresh a
+        store.put("c", k, v).unwrap(); // evicts b, not a
+        assert!(store.get("a").is_some());
+        assert!(store.get("b").is_none());
+    }
+
+    #[test]
+    fn inflight_snapshot_survives_append() {
+        // a batch holding the old Arc keeps the pre-append view
+        let store = KvStore::new(8, 4, 1);
+        let (k, v) = kv(4, 4, 1.0);
+        store.put("s", k, v).unwrap();
+        let snapshot = store.get("s").unwrap();
+        let (k1, v1) = kv(2, 4, 3.0);
+        store.append("s", k1, v1).unwrap();
+        assert_eq!(snapshot.prepared().n(), 4, "in-flight entry must be immutable");
+        assert_eq!(store.get("s").unwrap().prepared().n(), 6);
     }
 
     #[test]

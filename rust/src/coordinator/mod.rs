@@ -7,6 +7,22 @@
 //! Built on std threads + channels (tokio is unavailable offline —
 //! DESIGN.md §9); the architecture is the same: one ingress queue, a
 //! batch-forming stage, N workers, per-request completion channels.
+//!
+//! ## Decode/append protocol
+//!
+//! Autoregressive serving interleaves two request kinds per session
+//! ([`request::Payload`]): `Query` (attend over the resident KV) and
+//! `Append` (make the decode step's new K/V rows resident).  An append
+//! is a per-session barrier: the batcher closes the session's pending
+//! queries and ships them with the append *last*, so a worker serves
+//! queries against the pre-append KV and then applies the write —
+//! arrival order is execution order within a batch.  Across batches,
+//! ordering is what the client enforces by waiting for the append
+//! acknowledgement before submitting the next query (the natural shape
+//! of a decode loop: `append(k_t, v_t)` -> `call(q_t)`).  The write
+//! itself is [`KvStore::append`]: only the new rows are BF16-rounded
+//! and log-converted; resident rows are never touched, so per-step cost
+//! tracks the new tokens, not the sequence length.
 
 pub mod batcher;
 pub mod backend;
@@ -18,5 +34,5 @@ pub mod server;
 pub use backend::{prepare_entry, Backend, BackendFactory, PjrtBackend, SimBackend};
 pub use kvstore::{KvEntry, KvStore};
 pub use metrics::Metrics;
-pub use request::{AttentionRequest, AttentionResponse};
+pub use request::{AttentionRequest, AttentionResponse, Payload};
 pub use server::Server;

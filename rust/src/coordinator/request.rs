@@ -3,24 +3,44 @@
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
-/// One attention query against a named KV session.
+use crate::Mat;
+
+/// What a request asks the serving loop to do.
+#[derive(Debug)]
+pub enum Payload {
+    /// Attend over the session's resident KV with this query
+    /// (length = head_dim).
+    Query(Vec<f32>),
+    /// Append decode-step K/V rows to the session before any later
+    /// request of the same session is served (the autoregressive
+    /// write half of a decode step).
+    Append { k_rows: Mat, v_rows: Mat },
+}
+
+/// One request against a named KV session.
 #[derive(Debug)]
 pub struct AttentionRequest {
     pub id: u64,
-    /// Session whose KV buffers to attend over.
+    /// Session whose KV buffers to attend over / append to.
     pub session: String,
-    /// The query vector (length = head_dim).
-    pub query: Vec<f32>,
+    pub payload: Payload,
     pub arrived: Instant,
     /// Completion channel.
     pub reply: Sender<AttentionResponse>,
+}
+
+impl AttentionRequest {
+    pub fn is_append(&self) -> bool {
+        matches!(self.payload, Payload::Append { .. })
+    }
 }
 
 /// The served result.
 #[derive(Debug, Clone)]
 pub struct AttentionResponse {
     pub id: u64,
-    /// Attention output vector, or an error message.
+    /// Attention output vector, or an error message.  Append
+    /// acknowledgements carry an empty vector.
     pub output: Result<Vec<f32>, String>,
     /// Wall time from ingress to completion.
     pub latency_us: f64,

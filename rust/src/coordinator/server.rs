@@ -1,11 +1,24 @@
 //! The serving loop: bounded ingress -> batcher thread -> worker threads
 //! owning backends -> per-request reply channels.
 //!
+//! Requests are either attention queries or decode-step KV appends
+//! ([`Payload`]); an append acts as a per-session barrier in the batcher,
+//! so a batch is served in arrival order — queries first (against the
+//! pre-append KV), then the append.  Clients interleave
+//! `append`/`call` to run an autoregressive decode loop whose KV
+//! conversion cost tracks the new tokens only.
+//!
+//! `start` fails fast: if any backend factory errors on its worker
+//! thread, the failure is propagated out instead of silently serving
+//! with fewer (possibly zero) workers.
+//!
 //! Shutdown is cooperative: dropping the `Server` closes the ingress,
 //! drains in-flight batches and joins all threads.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError,
+};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -16,7 +29,7 @@ use super::backend::{Backend, BackendFactory};
 use super::batcher::{Batch, Batcher};
 use super::kvstore::KvStore;
 use super::metrics::Metrics;
-use super::request::{AttentionRequest, AttentionResponse};
+use super::request::{AttentionRequest, AttentionResponse, Payload};
 use crate::config::CoordinatorConfig;
 use crate::Mat;
 
@@ -38,7 +51,10 @@ pub struct Server {
 impl Server {
     /// Start the coordinator with one worker thread per backend factory
     /// (each backend is constructed on its own worker thread — PJRT
-    /// executables are thread-local).
+    /// executables are thread-local).  Returns an error if **any**
+    /// factory fails, after tearing the partially-started instance back
+    /// down: a server that silently came up with fewer workers than
+    /// configured (or none, hanging every request) was a debugging trap.
     pub fn start(
         cfg: &CoordinatorConfig,
         kv: Arc<KvStore>,
@@ -59,19 +75,52 @@ impl Server {
             .name("hfa-batcher".into())
             .spawn(move || batcher_loop(in_rx, batch_tx, max_batch, window, m))?;
 
-        // worker threads
+        // worker threads; each reports its backend-init outcome before
+        // entering the serve loop
+        let worker_count = factories.len();
+        let (init_tx, init_rx) = channel::<std::result::Result<(), String>>();
         let mut threads = vec![batcher_handle];
         for (i, factory) in factories.into_iter().enumerate() {
             let rx = batch_rx.clone();
             let kv = kv.clone();
             let m = metrics.clone();
+            let init_tx = init_tx.clone();
             let h = std::thread::Builder::new()
                 .name(format!("hfa-worker-{i}"))
                 .spawn(move || match factory() {
-                    Ok(mut be) => worker_loop(&mut *be, rx, kv, m),
-                    Err(e) => eprintln!("hfa-worker-{i}: backend init failed: {e}"),
+                    Ok(mut be) => {
+                        let _ = init_tx.send(Ok(()));
+                        // release the handshake sender before serving, so
+                        // start()'s recv() can observe a disconnect (not
+                        // hang) if some *other* worker dies without
+                        // reporting (e.g. a panicking factory)
+                        drop(init_tx);
+                        worker_loop(&mut *be, rx, kv, m)
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(format!("hfa-worker-{i}: {e}")));
+                    }
                 })?;
             threads.push(h);
+        }
+        drop(init_tx);
+
+        let mut failures = Vec::new();
+        for _ in 0..worker_count {
+            match init_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => failures.push(e),
+                Err(_) => failures.push("worker exited before reporting init".into()),
+            }
+        }
+        if !failures.is_empty() {
+            // tear down: stop the batcher (its exit drops batch_tx, which
+            // disconnects any workers that did come up), then join all
+            let _ = in_tx.send(Msg::Shutdown);
+            for h in threads {
+                let _ = h.join();
+            }
+            anyhow::bail!("backend init failed: {}", failures.join("; "));
         }
 
         Ok(Server {
@@ -97,11 +146,48 @@ impl Server {
             query.len(),
             self.head_dim
         );
-        let (tx, rx) = std::sync::mpsc::channel();
+        self.enqueue(session, Payload::Query(query))
+    }
+
+    /// Submit a decode-step KV append; the acknowledgement (empty output
+    /// vector) arrives once the rows are resident.  Within the batch the
+    /// barrier closes, pending queries are served against the pre-append
+    /// KV; queries submitted after the acknowledgement see the grown KV.
+    /// Across *separate* batches no inter-worker ordering is imposed —
+    /// a decode client serializes by waiting for each response before
+    /// the next submit (see the module docs' decode protocol).
+    pub fn submit_append(
+        &self,
+        session: &str,
+        k_rows: Mat,
+        v_rows: Mat,
+    ) -> Result<std::sync::mpsc::Receiver<AttentionResponse>> {
+        anyhow::ensure!(
+            k_rows.cols == self.head_dim && v_rows.cols == self.head_dim,
+            "append dims {}x{} / {}x{} != head dim {}",
+            k_rows.rows,
+            k_rows.cols,
+            v_rows.rows,
+            v_rows.cols,
+            self.head_dim
+        );
+        anyhow::ensure!(
+            k_rows.rows == v_rows.rows && k_rows.rows > 0,
+            "K/V append row counts must match and be non-zero"
+        );
+        self.enqueue(session, Payload::Append { k_rows, v_rows })
+    }
+
+    fn enqueue(
+        &self,
+        session: &str,
+        payload: Payload,
+    ) -> Result<std::sync::mpsc::Receiver<AttentionResponse>> {
+        let (tx, rx) = channel();
         let req = AttentionRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             session: session.to_string(),
-            query,
+            payload,
             arrived: Instant::now(),
             reply: tx,
         };
@@ -121,6 +207,12 @@ impl Server {
     /// Submit and wait.
     pub fn call(&self, session: &str, query: Vec<f32>) -> Result<AttentionResponse> {
         let rx = self.submit(session, query)?;
+        Ok(rx.recv()?)
+    }
+
+    /// Submit a KV append and wait for the acknowledgement.
+    pub fn append(&self, session: &str, k_rows: Mat, v_rows: Mat) -> Result<AttentionResponse> {
+        let rx = self.submit_append(session, k_rows, v_rows)?;
         Ok(rx.recv()?)
     }
 
@@ -198,38 +290,118 @@ fn worker_loop(
     }
 }
 
+/// A query waiting to be flushed: `(id, query, arrived, reply)`.
+type PendingQuery = (u64, Vec<f32>, Instant, Sender<AttentionResponse>);
+
+/// Serve one batch in arrival order: contiguous runs of queries are
+/// computed together against the session's current KV; an append flushes
+/// the run ahead of it, then applies the write.  Configuration errors
+/// (backend/store geometry disagreements) become error responses, never
+/// worker panics.
 fn serve_batch(be: &mut dyn Backend, batch: Batch, kv: &KvStore, metrics: &Metrics) {
     let n = batch.requests.len();
+    if be.head_dim() != kv.head_dim() {
+        let msg = format!(
+            "backend head_dim {} != KV store head_dim {}",
+            be.head_dim(),
+            kv.head_dim()
+        );
+        for req in batch.requests {
+            let AttentionRequest { id, arrived, reply, .. } = req;
+            deliver(id, arrived, reply, Err(msg.clone()), n, metrics);
+        }
+        return;
+    }
+    let mut run: Vec<PendingQuery> = Vec::new();
+    for req in batch.requests {
+        let AttentionRequest { id, payload, arrived, reply, .. } = req;
+        match payload {
+            Payload::Query(q) => run.push((id, q, arrived, reply)),
+            Payload::Append { k_rows, v_rows } => {
+                flush_queries(be, &batch.session, std::mem::take(&mut run), kv, metrics, n);
+                let output = kv
+                    .append(&batch.session, k_rows, v_rows)
+                    .map(|()| Vec::new())
+                    .map_err(|e| e.to_string());
+                deliver_append(id, arrived, reply, output, n, metrics);
+            }
+        }
+    }
+    flush_queries(be, &batch.session, run, kv, metrics, n);
+}
+
+fn flush_queries(
+    be: &mut dyn Backend,
+    session: &str,
+    run: Vec<PendingQuery>,
+    kv: &KvStore,
+    metrics: &Metrics,
+    batch_size: usize,
+) {
+    if run.is_empty() {
+        return;
+    }
     let d = be.head_dim();
-    let result: Result<Mat, String> = match kv.get(&batch.session) {
-        None => Err(format!("unknown session {:?}", batch.session)),
-        Some(entry) => {
-            let mut q = Mat::zeros(n, d);
-            for (i, r) in batch.requests.iter().enumerate() {
-                q.row_mut(i).copy_from_slice(&r.query);
+    let result: std::result::Result<Mat, String> = if let Some(entry) = kv.get(session) {
+        if run.iter().any(|(_, q, _, _)| q.len() != d) {
+            Err(format!("query dim mismatch (expected {d})"))
+        } else {
+            let mut q = Mat::zeros(run.len(), d);
+            for (i, (_, qv, _, _)) in run.iter().enumerate() {
+                q.row_mut(i).copy_from_slice(qv);
             }
             be.compute(&entry, &q).map_err(|e| e.to_string())
         }
+    } else {
+        Err(format!("unknown session {session:?}"))
     };
-    for (i, req) in batch.requests.into_iter().enumerate() {
-        let latency_us = req.arrived.elapsed().as_secs_f64() * 1e6;
+    for (i, (id, _, arrived, reply)) in run.into_iter().enumerate() {
         let output = match &result {
             Ok(mat) => Ok(mat.row(i).to_vec()),
             Err(e) => Err(e.clone()),
         };
-        if output.is_ok() {
-            metrics.completed.fetch_add(1, Ordering::Relaxed);
-        } else {
-            metrics.failed.fetch_add(1, Ordering::Relaxed);
-        }
-        metrics.observe_latency(latency_us);
-        let _ = req.reply.send(AttentionResponse {
-            id: req.id,
-            output,
-            latency_us,
-            batch_size: n,
-        });
+        deliver(id, arrived, reply, output, batch_size, metrics);
     }
+}
+
+fn deliver(
+    id: u64,
+    arrived: Instant,
+    reply: Sender<AttentionResponse>,
+    output: std::result::Result<Vec<f32>, String>,
+    batch_size: usize,
+    metrics: &Metrics,
+) {
+    let latency_us = arrived.elapsed().as_secs_f64() * 1e6;
+    if output.is_ok() {
+        metrics.completed.fetch_add(1, Ordering::Relaxed);
+    } else {
+        metrics.failed.fetch_add(1, Ordering::Relaxed);
+    }
+    metrics.observe_latency(latency_us);
+    let _ = reply.send(AttentionResponse { id, output, latency_us, batch_size });
+}
+
+/// Acknowledge a KV append.  Counted under `Metrics::appends`, not
+/// `completed`, and excluded from the latency reservoir: the percentiles
+/// measure attention serving, and near-zero-compute write acks would
+/// dilute them (a decode loop would otherwise also double-count its
+/// completion rate).
+fn deliver_append(
+    id: u64,
+    arrived: Instant,
+    reply: Sender<AttentionResponse>,
+    output: std::result::Result<Vec<f32>, String>,
+    batch_size: usize,
+    metrics: &Metrics,
+) {
+    let latency_us = arrived.elapsed().as_secs_f64() * 1e6;
+    if output.is_ok() {
+        metrics.appends.fetch_add(1, Ordering::Relaxed);
+    } else {
+        metrics.failed.fetch_add(1, Ordering::Relaxed);
+    }
+    let _ = reply.send(AttentionResponse { id, output, latency_us, batch_size });
 }
 
 #[cfg(test)]
@@ -240,14 +412,17 @@ mod tests {
     use crate::hw::Arith;
     use crate::proptest::Rng;
 
-    fn test_server(workers: usize) -> (Server, Mat, Mat) {
-        let accel_cfg = AcceleratorConfig {
-            head_dim: 8,
+    fn accel_cfg(head_dim: usize) -> AcceleratorConfig {
+        AcceleratorConfig {
+            head_dim,
             seq_len: 32,
             kv_blocks: 4,
             parallel_queries: 1,
             freq_mhz: 500.0,
-        };
+        }
+    }
+
+    fn test_server(workers: usize) -> (Server, Mat, Mat) {
         let coord_cfg = CoordinatorConfig {
             max_batch: 4,
             batch_window_us: 200,
@@ -260,7 +435,7 @@ mod tests {
         let v = Mat::from_vec(32, 8, rng.normal_vec(256));
         kv.put("sess", k.clone(), v.clone()).unwrap();
         let factories: Vec<_> = (0..workers)
-            .map(|_| SimBackend::factory(Arith::Hfa, accel_cfg.clone()))
+            .map(|_| SimBackend::factory(Arith::Hfa, accel_cfg(8)))
             .collect();
         let srv = Server::start(&coord_cfg, kv, factories).unwrap();
         (srv, k.round_bf16(), v.round_bf16())
@@ -295,6 +470,9 @@ mod tests {
     fn wrong_dim_rejected_at_submit() {
         let (srv, _, _) = test_server(1);
         assert!(srv.submit("sess", vec![0.0; 5]).is_err());
+        assert!(srv.submit_append("sess", Mat::zeros(1, 5), Mat::zeros(1, 5)).is_err());
+        assert!(srv.submit_append("sess", Mat::zeros(0, 8), Mat::zeros(0, 8)).is_err());
+        assert!(srv.submit_append("sess", Mat::zeros(2, 8), Mat::zeros(1, 8)).is_err());
         srv.shutdown();
     }
 
@@ -333,6 +511,102 @@ mod tests {
             None, &mut None);
         assert_eq!(r1, g1.row(0).to_vec());
         assert_eq!(r2, g2.row(0).to_vec());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn start_fails_when_any_backend_init_fails() {
+        let coord_cfg = CoordinatorConfig {
+            max_batch: 4,
+            batch_window_us: 100,
+            workers: 2,
+            queue_depth: 16,
+        };
+        let kv = Arc::new(KvStore::new(32, 8, 4));
+        // all factories failing
+        let factories: Vec<BackendFactory> =
+            (0..2).map(|_| Box::new(|| anyhow::bail!("no device")) as BackendFactory).collect();
+        let err = Server::start(&coord_cfg, kv.clone(), factories)
+            .err()
+            .expect("start must propagate backend init failure");
+        assert!(err.to_string().contains("backend init failed"), "{err}");
+        // one good + one bad is still a failed start (no silent degraded mode)
+        let factories: Vec<BackendFactory> = vec![
+            SimBackend::factory(Arith::Hfa, accel_cfg(8)),
+            Box::new(|| anyhow::bail!("no device")),
+        ];
+        assert!(Server::start(&coord_cfg, kv, factories).is_err());
+    }
+
+    #[test]
+    fn head_dim_mismatch_fails_requests_without_killing_worker() {
+        // store says d=8, backend says d=16: every request must get an
+        // error response (the seed panicked the worker, hanging clients)
+        let coord_cfg = CoordinatorConfig {
+            max_batch: 4,
+            batch_window_us: 100,
+            workers: 1,
+            queue_depth: 16,
+        };
+        let kv = Arc::new(KvStore::new(32, 8, 4));
+        let mut rng = Rng::new(7);
+        kv.put("sess", Mat::from_vec(32, 8, rng.normal_vec(256)),
+               Mat::from_vec(32, 8, rng.normal_vec(256))).unwrap();
+        let factories = vec![SimBackend::factory(Arith::Hfa, accel_cfg(16))];
+        let srv = Server::start(&coord_cfg, kv, factories).unwrap();
+        for _ in 0..2 {
+            // two rounds: the worker must survive the first mismatch
+            let resp = srv.call("sess", rng.normal_vec(8)).unwrap();
+            assert!(!resp.ok());
+            assert!(resp.output.unwrap_err().contains("head_dim"));
+        }
+        srv.shutdown();
+    }
+
+    #[test]
+    fn append_then_attend_sees_grown_kv() {
+        let coord_cfg = CoordinatorConfig {
+            max_batch: 4,
+            batch_window_us: 100,
+            workers: 1,
+            queue_depth: 64,
+        };
+        let kv = Arc::new(KvStore::new(32, 8, 4));
+        let mut rng = Rng::new(11);
+        let k = Mat::from_vec(25, 8, rng.normal_vec(200));
+        let v = Mat::from_vec(25, 8, rng.normal_vec(200));
+        kv.put("dec", k.rows_slice(0, 24), v.rows_slice(0, 24)).unwrap();
+        let factories = vec![SimBackend::factory(Arith::Hfa, accel_cfg(8))];
+        let srv = Server::start(&coord_cfg, kv, factories).unwrap();
+
+        let q1 = rng.normal_vec(8);
+        let r1 = srv.call("dec", q1.clone()).unwrap().output.unwrap();
+        let ack = srv.append("dec", k.rows_slice(24, 25), v.rows_slice(24, 25)).unwrap();
+        assert!(ack.ok(), "{:?}", ack.output);
+        assert!(ack.output.unwrap().is_empty());
+        let q2 = rng.normal_vec(8);
+        let r2 = srv.call("dec", q2.clone()).unwrap().output.unwrap();
+
+        let (kb, vb) = (k.round_bf16(), v.round_bf16());
+        let g1 = crate::attention::hfa::attention_blocked(
+            &Mat::from_vec(1, 8, q1).round_bf16(),
+            &kb.rows_slice(0, 24), &vb.rows_slice(0, 24), 4, None, &mut None);
+        let g2 = crate::attention::hfa::attention_blocked(
+            &Mat::from_vec(1, 8, q2).round_bf16(), &kb, &vb, 4, None, &mut None);
+        assert_eq!(r1, g1.row(0).to_vec(), "pre-append attend uses the prefill KV");
+        assert_eq!(r2, g2.row(0).to_vec(), "post-append attend must see the new row");
+
+        // append acks are counted separately from query completions and
+        // stay out of the latency reservoir
+        let snap = srv.metrics.snapshot();
+        assert_eq!(snap.appends, 1);
+        assert_eq!(snap.completed, 2, "only the two attends count as completed");
+        assert_eq!(srv.metrics.latency_samples(), 2, "append ack must not enter the reservoir");
+
+        // append errors surface as responses, not hangs
+        let bad = srv.append("missing", Mat::zeros(1, 8), Mat::zeros(1, 8)).unwrap();
+        assert!(!bad.ok());
+        assert_eq!(srv.metrics.snapshot().failed, 1);
         srv.shutdown();
     }
 }

@@ -51,10 +51,36 @@ impl Accelerator {
         Ok(())
     }
 
+    /// Append decode-step rows to the loaded KV (models the DMA of the
+    /// new tokens into the resident SRAM tail): the new rows are
+    /// BF16-rounded and linear->log converted; resident rows are
+    /// untouched.  If the prepared set is shared (e.g. adopted from the
+    /// coordinator store) it is copied on write; a uniquely-held set
+    /// grows in place.
+    pub fn append_kv(&mut self, k_rows: &Mat, v_rows: &Mat) -> anyhow::Result<()> {
+        let kv = self.kv.as_mut().ok_or_else(|| anyhow::anyhow!("KV not loaded"))?;
+        anyhow::ensure!(
+            k_rows.cols == self.cfg.head_dim && v_rows.cols == self.cfg.head_dim,
+            "append dim mismatch"
+        );
+        anyhow::ensure!(k_rows.rows == v_rows.rows, "K/V append row count mismatch");
+        anyhow::ensure!(
+            kv.n() + k_rows.rows <= self.cfg.seq_len,
+            "append overflows KV SRAM capacity: {} + {} > {}",
+            kv.n(),
+            k_rows.rows,
+            self.cfg.seq_len
+        );
+        Arc::make_mut(kv).append(&k_rows.round_bf16(), &v_rows.round_bf16());
+        Ok(())
+    }
+
+    /// `seq_len` is the SRAM *capacity*: any resident length `1..=seq_len`
+    /// is valid (decode sessions grow toward it via [`Accelerator::append_kv`]).
     fn check_shape(&self, kr: usize, kc: usize, vr: usize, vc: usize) -> anyhow::Result<()> {
         anyhow::ensure!(
-            kr == self.cfg.seq_len && kc == self.cfg.head_dim,
-            "K shape {}x{} != configured {}x{}",
+            (1..=self.cfg.seq_len).contains(&kr) && kc == self.cfg.head_dim,
+            "K shape {}x{} incompatible with SRAM capacity {}x{}",
             kr,
             kc,
             self.cfg.seq_len,
@@ -109,9 +135,11 @@ impl Accelerator {
             Arith::Hfa => kv.attention_blocked(&q, p, None),
         };
 
+        // timing follows the *resident* length (== seq_len when full;
+        // shorter mid-decode), not the SRAM capacity
         let stats = simulate(
             self.cfg.head_dim,
-            self.cfg.seq_len,
+            kv.n(),
             p,
             self.cfg.parallel_queries,
             q.rows,
@@ -195,9 +223,44 @@ mod tests {
     #[test]
     fn rejects_mismatched_shapes() {
         let (mut a, _, _) = accel(Arith::Hfa, 32, 256, 4);
-        assert!(a.load_kv(Mat::zeros(100, 32), Mat::zeros(100, 32)).is_err());
+        assert!(a.load_kv(Mat::zeros(300, 32), Mat::zeros(300, 32)).is_err(), "over capacity");
+        assert!(a.load_kv(Mat::zeros(100, 16), Mat::zeros(100, 16)).is_err(), "wrong head dim");
+        assert!(a.load_kv(Mat::zeros(0, 32), Mat::zeros(0, 32)).is_err(), "empty KV");
         let q = Mat::zeros(1, 16);
         assert!(a.compute_batch(&q).is_err());
+        // partial residency (decode prefill) is valid
+        assert!(a.load_kv(Mat::zeros(100, 32), Mat::zeros(100, 32)).is_ok());
+    }
+
+    #[test]
+    fn append_kv_matches_full_load_bitwise() {
+        // prefill 96 rows + three ragged appends == loading all 128 at once
+        let mut rng = Rng::new(81);
+        let cfg = AcceleratorConfig {
+            head_dim: 16,
+            seq_len: 128,
+            kv_blocks: 4,
+            parallel_queries: 1,
+            freq_mhz: 500.0,
+        };
+        let k = Mat::from_vec(128, 16, rng.normal_vec(128 * 16));
+        let v = Mat::from_vec(128, 16, rng.normal_vec(128 * 16));
+        let mut grown = Accelerator::new(Arith::Hfa, cfg.clone());
+        grown.load_kv(k.rows_slice(0, 96), v.rows_slice(0, 96)).unwrap();
+        let mut at = 96;
+        for step in [1usize, 24, 7] {
+            grown.append_kv(&k.rows_slice(at, at + step), &v.rows_slice(at, at + step)).unwrap();
+            at += step;
+        }
+        let mut full = Accelerator::new(Arith::Hfa, cfg);
+        full.load_kv(k.clone(), v.clone()).unwrap();
+        let q = Mat::from_vec(2, 16, rng.normal_vec(32)).round_bf16();
+        let (og, sg) = grown.compute_batch(&q).unwrap();
+        let (of, sf) = full.compute_batch(&q).unwrap();
+        assert_eq!(og.data, of.data, "append path must be bit-exact vs full load");
+        assert_eq!(sg.cycles, sf.cycles);
+        // capacity guard
+        assert!(grown.append_kv(&Mat::zeros(1, 16), &Mat::zeros(1, 16)).is_err());
     }
 
     #[test]

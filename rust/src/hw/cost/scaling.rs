@@ -18,6 +18,8 @@ pub enum Node {
 }
 
 impl Node {
+    // not the FromStr trait: this is a CLI selector with anyhow errors
+    #[allow(clippy::should_implement_trait)]
     pub fn from_str(s: &str) -> anyhow::Result<Node> {
         Ok(match s {
             "45" | "45nm" => Node::N45,

@@ -46,7 +46,8 @@ pub struct CycleStats {
     pub cycles: u64,
     /// Query rounds executed (ceil(queries / parallel datapaths)).
     pub rounds: u64,
-    /// Keys streamed per FAU per round (N / p).
+    /// Keys streamed by the longest FAU per round (ceil(N / p); the tail
+    /// block of a ragged split streams fewer).
     pub keys_per_fau: u64,
     /// Busy unit-cycles per block type (for utilization / activity).
     pub fau_busy: u64,
@@ -95,6 +96,13 @@ impl CycleStats {
 /// triplet and ACC_{i-1}'s result are valid; rounds pipeline back-to-back
 /// (FAU state is double-buffered), so the steady-state round interval is
 /// `max(keys_per_fau, acc_depth, div_depth)`.
+///
+/// `n` need not divide evenly into `p`: the split mirrors the functional
+/// `kv_block_ranges(n, p)` partition — blocks of `ceil(n/p)` keys with a
+/// shorter ragged tail (and fewer active FAUs than `p` when `n < p`),
+/// which is what a mid-decode resident length looks like.  The critical
+/// path follows the longest stream; identical to the seed formulas when
+/// `p` divides `n`.
 pub fn simulate(
     d: usize,
     n: usize,
@@ -103,10 +111,14 @@ pub fn simulate(
     num_queries: usize,
     lat: LatencyModel,
 ) -> CycleStats {
-    assert!(n % p == 0, "sequence must split evenly into KV blocks");
-    let keys = (n / p) as u64;
+    assert!(n > 0, "cannot simulate an empty KV stream");
+    let p = p.max(1);
+    // longest FAU stream and the number of FAUs that actually receive
+    // keys under the ragged split (== kv_block_ranges(n, p).len())
+    let keys = n.div_ceil(p) as u64;
+    let active_blocks = (n as u64).div_ceil(keys);
     let rounds = num_queries.div_ceil(nq) as u64;
-    let merges = p.saturating_sub(1) as u64;
+    let merges = active_blocks.saturating_sub(1);
 
     // per-round phase timings relative to round start
     let fau_valid = lat.dot_depth + lat.accum_depth + keys - 1;
@@ -125,7 +137,9 @@ pub fn simulate(
         cycles,
         rounds,
         keys_per_fau: keys,
-        fau_busy: rounds * keys * fau_units,
+        // every resident key is streamed once per round per query
+        // datapath; equals rounds * keys * fau_units for an even split
+        fau_busy: rounds * (n as u64) * nq as u64,
         acc_busy: rounds * merges * lat.acc_depth * nq as u64,
         div_busy: rounds * lat.div_depth * div_units,
         fau_units,
@@ -134,7 +148,7 @@ pub fn simulate(
         // each FAU reads one k row + one v row (d words each) per key;
         // the KV stream is shared across the nq query datapaths (Fig. 1:
         // same blocks of key and value vectors are reused)
-        sram_word_reads: rounds * keys * (p as u64) * (2 * d as u64),
+        sram_word_reads: rounds * (n as u64) * (2 * d as u64),
     }
 }
 
@@ -210,6 +224,27 @@ mod tests {
         }
         // FAUs are the workhorse: near-full utilization in steady state
         assert!(s.fau_utilization() > 0.8, "{}", s.fau_utilization());
+    }
+
+    #[test]
+    fn ragged_lengths_simulate_without_panicking() {
+        // mid-decode residency: n not divisible by p, and n < p
+        let lat = LatencyModel::for_head_dim(8);
+        let s = simulate(8, 25, 4, 1, 2, lat);
+        assert_eq!(s.keys_per_fau, 7); // ceil(25/4), the longest stream
+        assert_eq!(s.sram_word_reads, 2 * 2 * 25 * 8); // 2 rounds x 25 rows
+        assert!(s.cycles > 0);
+        let tiny = simulate(8, 3, 8, 1, 1, lat);
+        assert_eq!(tiny.keys_per_fau, 1); // 3 active FAUs of 1 key each
+        assert!(tiny.acc_utilization() <= 1.0 && tiny.fau_utilization() <= 1.0);
+        // growing the resident length must not shorten the modelled time
+        let shorter = simulate(8, 24, 4, 1, 1, lat).cycles;
+        let longer = simulate(8, 25, 4, 1, 1, lat).cycles;
+        assert!(longer >= shorter, "{longer} < {shorter}");
+        // divisible case unchanged vs the seed formula: keys = n/p
+        let even = simulate(8, 24, 4, 1, 1, lat);
+        assert_eq!(even.keys_per_fau, 6);
+        assert_eq!(even.fau_busy, 24);
     }
 
     #[test]

@@ -16,6 +16,8 @@ pub enum Level {
 }
 
 impl Level {
+    // not the FromStr trait: infallible, defaults to Info
+    #[allow(clippy::should_implement_trait)]
     pub fn from_str(s: &str) -> Level {
         match s.to_ascii_lowercase().as_str() {
             "error" => Level::Error,

@@ -9,5 +9,5 @@ pub mod transformer;
 pub mod weights;
 
 pub use config::ModelConfig;
-pub use transformer::{AttnSelect, Transformer};
+pub use transformer::{AttnSelect, Decoder, Transformer};
 pub use weights::Weights;

@@ -30,6 +30,8 @@ pub enum AttnSelect {
 }
 
 impl AttnSelect {
+    // not the FromStr trait: this is a CLI selector with anyhow errors
+    #[allow(clippy::should_implement_trait)]
     pub fn from_str(s: &str) -> Result<AttnSelect> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "exact" => AttnSelect::Exact,
@@ -128,7 +130,62 @@ impl Transformer {
         }
 
         let xf = layer_norm(&x, &self.w.vec("lnf_g")?, &self.w.vec("lnf_b")?);
-        Ok(xf.matmul(&tok_emb.t())) // weight-tied head
+        // weight-tied head: tok_emb is W_head^T already, no transpose copy
+        Ok(xf.matmul_t(&tok_emb))
+    }
+
+    /// Start an autoregressive decode session: per-layer, per-head KV
+    /// caches that grow by one row per [`Decoder::step`]
+    /// (`PreparedKv::append`), so the V linear->log conversion cost
+    /// tracks new tokens only — never the resident prefix.  Supports
+    /// `exact`, `fa2` and `hfa` attention; step-`t` logits are
+    /// bit-identical to row `t` of a full [`Transformer::forward`] over
+    /// the same token prefix (causal row `t` attends keys `0..=t`, which
+    /// is exactly the grown cache, and every per-row op — LayerNorm,
+    /// matmul, GELU — is row-independent).  Pinned by
+    /// `rust/tests/decode_parity.rs`.
+    pub fn decoder(&self, attn: AttnSelect) -> Result<Decoder<'_>> {
+        anyhow::ensure!(
+            !matches!(attn, AttnSelect::HfaEmu(_)),
+            "decode mode does not support the hfa-emu ablation variants"
+        );
+        let dh = self.cfg.d_head();
+        // fetch every weight tensor once: Weights::mat/vec return owned
+        // copies, and a decode loop must not re-copy unchanged weights on
+        // every token
+        let layers: Vec<LayerWeights> = (0..self.cfg.n_layer)
+            .map(|l| {
+                let p = format!("l{l}");
+                Ok(LayerWeights {
+                    ln1_g: self.w.vec(&format!("{p}.ln1_g"))?,
+                    ln1_b: self.w.vec(&format!("{p}.ln1_b"))?,
+                    wq: self.w.mat(&format!("{p}.wq"))?,
+                    wk: self.w.mat(&format!("{p}.wk"))?,
+                    wv: self.w.mat(&format!("{p}.wv"))?,
+                    wo: self.w.mat(&format!("{p}.wo"))?,
+                    ln2_g: self.w.vec(&format!("{p}.ln2_g"))?,
+                    ln2_b: self.w.vec(&format!("{p}.ln2_b"))?,
+                    w1: self.w.mat(&format!("{p}.w1"))?,
+                    b1: self.w.vec(&format!("{p}.b1"))?,
+                    w2: self.w.mat(&format!("{p}.w2"))?,
+                    b2: self.w.vec(&format!("{p}.b2"))?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        let caches: Vec<Vec<HeadCache>> = (0..self.cfg.n_layer)
+            .map(|_| (0..self.cfg.n_head).map(|_| HeadCache::new(attn, dh)).collect())
+            .collect();
+        Ok(Decoder {
+            model: self,
+            attn,
+            tok_emb: self.w.mat("tok_emb")?,
+            pos_emb: self.w.mat("pos_emb")?,
+            lnf_g: self.w.vec("lnf_g")?,
+            lnf_b: self.w.vec("lnf_b")?,
+            layers,
+            caches,
+            pos: 0,
+        })
     }
 
     fn attention(
@@ -178,6 +235,152 @@ impl Transformer {
             }
         }
         Ok(merged.matmul(&self.w.mat(&format!("{pfx}.wo"))?))
+    }
+}
+
+/// One layer's weight tensors, fetched once per decode session (the
+/// `Weights` accessors return owned copies — too expensive per token).
+struct LayerWeights {
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    wq: Mat,
+    wk: Mat,
+    wv: Mat,
+    wo: Mat,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+    w1: Mat,
+    b1: Vec<f32>,
+    w2: Mat,
+    b2: Vec<f32>,
+}
+
+/// One attention head's growing KV cache.  Only the H-FA variant keeps
+/// the log-domain prepared form; exact/fa2 decode attends over raw
+/// matrices and must not pay (or count) V->LNS conversions.
+enum HeadCache {
+    Raw { k: Mat, v: Mat },
+    Prepared(PreparedKv),
+}
+
+impl HeadCache {
+    fn new(attn: AttnSelect, dh: usize) -> HeadCache {
+        match attn {
+            AttnSelect::Hfa => {
+                HeadCache::Prepared(PreparedKv::new(Mat::zeros(0, dh), Mat::zeros(0, dh)))
+            }
+            _ => HeadCache::Raw { k: Mat::zeros(0, dh), v: Mat::zeros(0, dh) },
+        }
+    }
+}
+
+/// An autoregressive decode session over a loaded model: feed one token
+/// at a time, get that position's logits back.  KV state lives in
+/// `caches[layer][head]` and grows append-only — the serving-side analogue
+/// of the coordinator's `KvStore::append` path.
+pub struct Decoder<'a> {
+    model: &'a Transformer,
+    attn: AttnSelect,
+    tok_emb: Mat,
+    pos_emb: Mat,
+    lnf_g: Vec<f32>,
+    lnf_b: Vec<f32>,
+    layers: Vec<LayerWeights>,
+    /// `caches[layer][head]`: grown one row per step.
+    caches: Vec<Vec<HeadCache>>,
+    pos: usize,
+}
+
+impl Decoder<'_> {
+    /// Sequence position the next token will occupy.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Feed one token; returns its logits row `(1, V)`.
+    pub fn step(&mut self, token: i32) -> Result<Mat> {
+        let cfg = &self.model.cfg;
+        let t = self.pos;
+        anyhow::ensure!(t < cfg.seq_len, "sequence too long");
+        anyhow::ensure!(
+            token >= 0 && (token as usize) < cfg.vocab,
+            "token {token} out of vocab"
+        );
+        let d = cfg.d_model;
+        let n_layer = cfg.n_layer;
+        let mut x = Mat::zeros(1, d);
+        for j in 0..d {
+            x.set(0, j, self.tok_emb.at(token as usize, j) + self.pos_emb.at(t, j));
+        }
+
+        for l in 0..n_layer {
+            let ln1 = layer_norm(&x, &self.layers[l].ln1_g, &self.layers[l].ln1_b);
+            let a = self.attention_step(&ln1, l);
+            add_inplace(&mut x, &a);
+
+            let lw = &self.layers[l];
+            let ln2 = layer_norm(&x, &lw.ln2_g, &lw.ln2_b);
+            let mut h = ln2.matmul(&lw.w1);
+            for c in 0..h.cols {
+                h.set(0, c, gelu(h.at(0, c) + lw.b1[c]));
+            }
+            let mut mm = h.matmul(&lw.w2);
+            for c in 0..mm.cols {
+                let v = mm.at(0, c) + lw.b2[c];
+                mm.set(0, c, v);
+            }
+            add_inplace(&mut x, &mm);
+        }
+
+        let xf = layer_norm(&x, &self.lnf_g, &self.lnf_b);
+        self.pos += 1;
+        // weight-tied head: tok_emb is W_head^T already, no transpose copy
+        Ok(xf.matmul_t(&self.tok_emb))
+    }
+
+    /// One decode step's attention for one layer: project q/k/v for the
+    /// new row, grow each head's cache, attend over it.  No mask is
+    /// needed — the causal row `t` attends exactly the `t+1` resident
+    /// rows, in the same key order as the full forward pass.
+    fn attention_step(&mut self, x: &Mat, layer: usize) -> Mat {
+        let cfg = &self.model.cfg;
+        let (heads, dh) = (cfg.n_head, cfg.d_head());
+        let d_model = cfg.d_model;
+        let lw = &self.layers[layer];
+        let q_all = x.matmul(&lw.wq);
+        let k_all = x.matmul(&lw.wk);
+        let v_all = x.matmul(&lw.wv);
+
+        let mut merged = Mat::zeros(1, d_model);
+        for head in 0..heads {
+            let q = q_all.cols_slice(head * dh, (head + 1) * dh);
+            let k = k_all.cols_slice(head * dh, (head + 1) * dh);
+            let v = v_all.cols_slice(head * dh, (head + 1) * dh);
+            let o = match (self.attn, &mut self.caches[layer][head]) {
+                (AttnSelect::Exact, HeadCache::Raw { k: ck, v: cv }) => {
+                    ck.append_rows(&k);
+                    cv.append_rows(&v);
+                    exact::attention(&q, ck, cv, None, None)
+                }
+                (AttnSelect::Fa2, HeadCache::Raw { k: ck, v: cv }) => {
+                    // the BF16 hardware path rounds operands on ingress
+                    ck.append_rows(&k.round_bf16());
+                    cv.append_rows(&v.round_bf16());
+                    fa2::attention(&q.round_bf16(), ck, cv, None, None).round_bf16()
+                }
+                (AttnSelect::Hfa, HeadCache::Prepared(kv)) => {
+                    // resident log-domain lanes: only this step's row is
+                    // converted, the prefix is reused as-is
+                    kv.append(&k.round_bf16(), &v.round_bf16());
+                    kv.attention(&q.round_bf16(), None, None)
+                }
+                // HfaEmu is rejected in decoder(); cache kind always
+                // matches the variant it was built for
+                _ => unreachable!("decoder cache/attention variant mismatch"),
+            };
+            merged.row_mut(0)[head * dh..(head + 1) * dh].copy_from_slice(o.row(0));
+        }
+        merged.matmul(&self.layers[layer].wo)
     }
 }
 

@@ -136,9 +136,11 @@ impl WorkerPool {
         }
         // Help drain the queue while waiting — keeps the submitting core
         // busy and makes the pool safe to re-enter from inside a job.
-        // Stop helping as soon as *this call's* jobs are all done, so a
-        // finished batch is never held hostage by another caller's queue
-        // traffic (no priority inversion on the serving tail).
+        // The finished-check runs before each pop, so helping stops at
+        // the first opportunity after this call's jobs complete; a task
+        // already started (possibly another caller's) still runs to
+        // completion first, so the return can be delayed by at most one
+        // foreign task's duration.
         while !latch.finished() {
             let task = self.queue.inner.lock().unwrap().tasks.pop_front();
             match task {

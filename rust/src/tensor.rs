@@ -60,13 +60,23 @@ impl Mat {
     /// so results match the element-wise `dot_f32` oracle exactly).
     pub fn matmul(&self, rhs: &Mat) -> Mat {
         assert_eq!(self.cols, rhs.rows, "matmul shape mismatch");
-        let rt = rhs.t();
-        let mut out = Mat::zeros(self.rows, rhs.cols);
+        self.matmul_t(&rhs.t())
+    }
+
+    /// `self (r x k) * rhs_t^T` where `rhs_t (c x k)` is the RHS **already
+    /// transposed** — the kernel behind [`Mat::matmul`], exposed so
+    /// callers that hold a transposed operand (e.g. the weight-tied LM
+    /// head, where `tok_emb` *is* `W_head^T`) skip the per-call transpose
+    /// copy.  Bit-identical to `matmul(&rhs_t.t())`: same `dot_f32` over
+    /// the same contiguous rows in the same order.
+    pub fn matmul_t(&self, rhs_t: &Mat) -> Mat {
+        assert_eq!(self.cols, rhs_t.cols, "matmul_t shape mismatch");
+        let mut out = Mat::zeros(self.rows, rhs_t.rows);
         for i in 0..self.rows {
             let arow = self.row(i);
             let orow = out.row_mut(i);
             for (j, o) in orow.iter_mut().enumerate() {
-                *o = dot_f32(arow, rt.row(j));
+                *o = dot_f32(arow, rhs_t.row(j));
             }
         }
         out
@@ -103,6 +113,16 @@ impl Mat {
             out.row_mut(r).copy_from_slice(&self.row(r)[lo..hi]);
         }
         out
+    }
+
+    /// Append the rows of `rows` (same column count) below the existing
+    /// rows — the decode-time KV growth primitive.  Amortized O(new rows);
+    /// resident rows are never moved element-wise (at most one realloc
+    /// memcpy of the flat storage).
+    pub fn append_rows(&mut self, rows: &Mat) {
+        assert_eq!(rows.cols, self.cols, "append_rows column mismatch");
+        self.data.extend_from_slice(&rows.data);
+        self.rows += rows.rows;
     }
 
     /// Round every element through BF16 (hardware input convention).
@@ -219,6 +239,13 @@ mod tests {
     }
 
     #[test]
+    fn matmul_t_bitwise_equals_matmul() {
+        let a = Mat::from_fn(5, 11, |r, c| ((r * 11 + c) as f32).sin());
+        let b = Mat::from_fn(11, 7, |r, c| ((r * 7 + c) as f32).cos());
+        assert_eq!(a.matmul(&b).data, a.matmul_t(&b.t()).data);
+    }
+
+    #[test]
     fn matmul_consistent_with_dot_f32() {
         let a = Mat::from_fn(6, 19, |r, c| ((r * 19 + c) as f32).sin());
         let b = Mat::from_fn(19, 9, |r, c| ((r * 9 + c) as f32).cos());
@@ -263,6 +290,25 @@ mod tests {
         let a = Mat::from_fn(4, 2, |r, _| r as f32);
         let s = a.rows_slice(1, 3);
         assert_eq!(s.data, vec![1., 1., 2., 2.]);
+    }
+
+    #[test]
+    fn append_rows_extends_in_place() {
+        let mut a = Mat::from_fn(2, 3, |r, c| (r * 3 + c) as f32);
+        let b = Mat::from_fn(2, 3, |r, c| 100.0 + (r * 3 + c) as f32);
+        a.append_rows(&b);
+        assert_eq!((a.rows, a.cols), (4, 3));
+        assert_eq!(a.row(1), &[3.0, 4.0, 5.0][..]);
+        assert_eq!(a.row(2), &[100.0, 101.0, 102.0][..]);
+        assert_eq!(a.row(3), &[103.0, 104.0, 105.0][..]);
+        // appending zero rows is a no-op
+        a.append_rows(&Mat::zeros(0, 3));
+        assert_eq!(a.rows, 4);
+        // prefix + appended suffix == the full matrix built at once
+        let full = Mat::from_fn(5, 2, |r, c| (r * 2 + c) as f32 * 0.5);
+        let mut grown = full.rows_slice(0, 2);
+        grown.append_rows(&full.rows_slice(2, 5));
+        assert_eq!(grown, full);
     }
 
     #[test]

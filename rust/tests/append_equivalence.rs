@@ -1,0 +1,150 @@
+//! Tier-1 pin of the append-only decode path: a `PreparedKv` grown by
+//! prefill + appends must be **bitwise identical** to `PreparedKv::new`
+//! over the full matrices — raw BF16 planes, resident LNS lanes, stored
+//! block partition, and every attention entry point — across ragged
+//! tails and varied append sizes.  Same property through the `KvStore`
+//! swap-in path.
+
+use std::sync::Arc;
+
+use hfa::attention::prepared::{fixed_block_ranges, PreparedKv};
+use hfa::coordinator::KvStore;
+use hfa::proptest::Rng;
+use hfa::Mat;
+
+fn bits(data: &[f32]) -> Vec<u32> {
+    data.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_prepared_identical(grown: &PreparedKv, full: &PreparedKv, ctx: &str) {
+    assert_eq!(grown.n(), full.n(), "{ctx}: row count");
+    assert_eq!(grown.d(), full.d(), "{ctx}: key dim");
+    assert_eq!(grown.dv(), full.dv(), "{ctx}: value dim");
+    assert_eq!(bits(&grown.k().data), bits(&full.k().data), "{ctx}: K plane");
+    assert_eq!(bits(&grown.v().data), bits(&full.v().data), "{ctx}: V plane");
+    assert_eq!(grown.v_lns(), full.v_lns(), "{ctx}: LNS lanes");
+    assert_eq!(grown.block_rows(), full.block_rows(), "{ctx}: block capacity");
+    assert_eq!(grown.blocks(), full.blocks(), "{ctx}: block partition");
+    assert_eq!(
+        grown.blocks(),
+        fixed_block_ranges(grown.n(), grown.block_rows()),
+        "{ctx}: partition must match the from-scratch formula"
+    );
+}
+
+#[test]
+fn prefill_plus_appends_bit_identical_to_full_build() {
+    let mut rng = Rng::new(20_260_701);
+    // (total rows, prefill, append chunk sizes, stored block capacity):
+    // covers single-row decode steps, multi-row chunks, tails that stay
+    // ragged, tails that exactly fill, and a zero-row prefill
+    let cases: &[(usize, usize, &[usize], usize)] = &[
+        (9, 4, &[1, 1, 1, 1, 1], 4),
+        (21, 4, &[1, 3, 8, 5], 8),
+        (16, 8, &[8], 8),
+        (13, 1, &[2, 2, 2, 2, 2, 2], 256),
+        (7, 0, &[3, 4], 2),
+        (33, 32, &[1], 16),
+    ];
+    for &(total, prefill, chunks, br) in cases {
+        assert_eq!(prefill + chunks.iter().sum::<usize>(), total, "bad case spec");
+        let d = 8;
+        let k = Mat::from_vec(total, d, rng.normal_vec(total * d)).round_bf16();
+        let v = Mat::from_vec(total, d, rng.normal_vec(total * d)).round_bf16();
+        let ctx = format!("total={total} prefill={prefill} chunks={chunks:?} br={br}");
+
+        let full = PreparedKv::with_block_rows(k.clone(), v.clone(), br);
+        let mut grown = PreparedKv::with_block_rows(
+            k.rows_slice(0, prefill),
+            v.rows_slice(0, prefill),
+            br,
+        );
+        let mut at = prefill;
+        for &step in chunks {
+            grown.append(&k.rows_slice(at, at + step), &v.rows_slice(at, at + step));
+            at += step;
+            // the partition must stay canonical after *every* append
+            assert_eq!(grown.blocks(), fixed_block_ranges(at, br), "{ctx} at={at}");
+        }
+        assert_prepared_identical(&grown, &full, &ctx);
+
+        // every attention entry point agrees bit-for-bit
+        let q = Mat::from_vec(3, d, rng.normal_vec(3 * d)).round_bf16();
+        assert_eq!(
+            bits(&grown.attention(&q, None, None).data),
+            bits(&full.attention(&q, None, None).data),
+            "{ctx}: full attention"
+        );
+        assert_eq!(
+            bits(&grown.attention_blocked(&q, 3, None).data),
+            bits(&full.attention_blocked(&q, 3, None).data),
+            "{ctx}: count-blocked attention"
+        );
+        assert_eq!(
+            bits(&grown.attention_resident_blocks(&q, None).data),
+            bits(&full.attention_resident_blocks(&q, None).data),
+            "{ctx}: resident-block attention"
+        );
+    }
+}
+
+#[test]
+fn kvstore_append_path_bit_identical_to_full_put() {
+    let mut rng = Rng::new(77_001);
+    let (n, d) = (40usize, 8usize);
+    let k = Mat::from_vec(n, d, rng.normal_vec(n * d));
+    let v = Mat::from_vec(n, d, rng.normal_vec(n * d));
+
+    let grown_store = KvStore::new(64, d, 2);
+    grown_store.put("s", k.rows_slice(0, 25), v.rows_slice(0, 25)).unwrap();
+    let mut at = 25;
+    for step in [1usize, 1, 6, 7] {
+        grown_store
+            .append("s", k.rows_slice(at, at + step), v.rows_slice(at, at + step))
+            .unwrap();
+        at += step;
+    }
+    assert_eq!(at, n);
+
+    let full_store = KvStore::new(64, d, 2);
+    full_store.put("s", k.clone(), v.clone()).unwrap();
+
+    let grown = grown_store.get("s").unwrap();
+    let full = full_store.get("s").unwrap();
+    assert_prepared_identical(grown.prepared().as_ref(), full.prepared().as_ref(), "kvstore");
+
+    // and the prepared sets drive attention identically
+    let q = Mat::from_vec(2, d, rng.normal_vec(2 * d)).round_bf16();
+    assert_eq!(
+        bits(&grown.prepared().attention_blocked(&q, 4, None).data),
+        bits(&full.prepared().attention_blocked(&q, 4, None).data),
+    );
+}
+
+#[test]
+fn appended_snapshot_isolation_under_sharing() {
+    // the store-style copy-on-write: growing a shared Arc'd PreparedKv
+    // must not disturb readers of the old snapshot
+    let mut rng = Rng::new(4_242);
+    let d = 4;
+    let k = Mat::from_vec(6, d, rng.normal_vec(6 * d)).round_bf16();
+    let v = Mat::from_vec(6, d, rng.normal_vec(6 * d)).round_bf16();
+    let base = Arc::new(PreparedKv::new(k.clone(), v.clone()));
+    let q = Mat::from_vec(1, d, rng.normal_vec(d)).round_bf16();
+    let before = base.attention(&q, None, None);
+
+    let k2 = Mat::from_vec(2, d, rng.normal_vec(2 * d)).round_bf16();
+    let v2 = Mat::from_vec(2, d, rng.normal_vec(2 * d)).round_bf16();
+    let grown = base.appended(&k2, &v2);
+
+    assert_eq!(base.n(), 6);
+    assert_eq!(grown.n(), 8);
+    assert_eq!(bits(&base.attention(&q, None, None).data), bits(&before.data));
+
+    let mut full_k = k.clone();
+    full_k.append_rows(&k2);
+    let mut full_v = v.clone();
+    full_v.append_rows(&v2);
+    let full = PreparedKv::new(full_k, full_v);
+    assert_prepared_identical(&grown, &full, "shared-append");
+}

@@ -86,6 +86,67 @@ fn tiny_queue_exerts_backpressure() {
 }
 
 #[test]
+fn decode_loop_under_concurrent_traffic_stays_exact() {
+    // one client runs an autoregressive decode loop (append one row,
+    // then attend) on session "dec" while another hammers session "a";
+    // every decode-step output must be bit-exact vs the golden blocked
+    // model over the exact KV prefix the step saw.
+    let srv = Arc::new(boot(3, 512, 100));
+    let mut rng = Rng::new(2_026);
+    let n_total = 32usize;
+    let prefill = 20usize;
+    let k = Mat::from_vec(n_total, 8, rng.normal_vec(n_total * 8));
+    let v = Mat::from_vec(n_total, 8, rng.normal_vec(n_total * 8));
+    srv.kv.put("dec", k.rows_slice(0, prefill), v.rows_slice(0, prefill)).unwrap();
+
+    let background = {
+        let srv = srv.clone();
+        std::thread::spawn(move || {
+            let mut rng = Rng::new(5_050);
+            let mut ok = 0;
+            for _ in 0..60 {
+                if let Ok(r) = srv.call("a", rng.normal_vec(8)) {
+                    if r.ok() {
+                        ok += 1;
+                    }
+                }
+            }
+            ok
+        })
+    };
+
+    let (kb, vb) = (k.round_bf16(), v.round_bf16());
+    for step in 0..(n_total - prefill) {
+        let at = prefill + step;
+        let ack = srv.append("dec", k.rows_slice(at, at + 1), v.rows_slice(at, at + 1)).unwrap();
+        assert!(ack.ok(), "step {step}: {:?}", ack.output);
+        let q = rng.normal_vec(8);
+        let resp = srv.call("dec", q.clone()).unwrap();
+        assert!(resp.ok(), "step {step}: {:?}", resp.output);
+        let golden = hfa::attention::hfa::attention_blocked(
+            &Mat::from_vec(1, 8, q).round_bf16(),
+            &kb.rows_slice(0, at + 1),
+            &vb.rows_slice(0, at + 1),
+            2, // boot() configures 2 KV blocks
+            None,
+            &mut None,
+        );
+        assert_eq!(
+            resp.output.unwrap(),
+            golden.row(0).to_vec(),
+            "step {step}: decode attend diverged from golden over {} rows",
+            at + 1
+        );
+    }
+    // capacity guard: the session is now full (32 rows)
+    let overflow = srv.append("dec", Mat::zeros(1, 8), Mat::zeros(1, 8)).unwrap();
+    assert!(!overflow.ok(), "append past capacity must fail cleanly");
+
+    let ok = background.join().unwrap();
+    assert_eq!(ok, 60, "background session must be unaffected by decode traffic");
+}
+
+#[test]
 fn graceful_shutdown_completes_inflight() {
     let srv = boot(2, 256, 2_000);
     let mut rng = Rng::new(3);

@@ -1,0 +1,107 @@
+//! Regression: the append-only decode path pays V linear->log conversion
+//! **proportional to the appended rows only** — never the resident
+//! prefix, never per batch.  Counted end-to-end with the process-wide
+//! `value_conversion_count` through `PreparedKv::append`,
+//! `KvStore::append` and a full server decode loop (prefill once, then
+//! append+attend steps).
+//!
+//! Kept as the sole test in this binary so the process-wide conversion
+//! counter sees no concurrent traffic from unrelated tests.
+
+use std::sync::Arc;
+
+use hfa::attention::hfa::value_conversion_count;
+use hfa::attention::prepared::PreparedKv;
+use hfa::config::{AcceleratorConfig, CoordinatorConfig};
+use hfa::coordinator::{KvStore, Server, SimBackend};
+use hfa::hw::Arith;
+use hfa::proptest::Rng;
+use hfa::Mat;
+
+#[test]
+fn append_conversion_work_tracks_new_rows_only() {
+    const N: usize = 64; // session capacity
+    const D: usize = 8;
+    const PREFILL: usize = 48;
+    const STEPS: usize = 12;
+    let mut rng = Rng::new(7_777);
+    let k = Mat::from_vec(N, D, rng.normal_vec(N * D));
+    let v = Mat::from_vec(N, D, rng.normal_vec(N * D));
+
+    // --- PreparedKv level -------------------------------------------------
+    let before = value_conversion_count();
+    let mut kv = PreparedKv::new(
+        k.rows_slice(0, 8).round_bf16(),
+        v.rows_slice(0, 8).round_bf16(),
+    );
+    assert_eq!(value_conversion_count() - before, 8, "prefill converts its own rows once");
+    let before = value_conversion_count();
+    kv.append(&k.rows_slice(8, 9).round_bf16(), &v.rows_slice(8, 9).round_bf16());
+    assert_eq!(value_conversion_count() - before, 1, "1-row append converts 1 row");
+    let before = value_conversion_count();
+    kv.append(&k.rows_slice(9, 14).round_bf16(), &v.rows_slice(9, 14).round_bf16());
+    assert_eq!(value_conversion_count() - before, 5, "5-row append converts 5 rows");
+
+    // --- KvStore level (copy-on-write Arc swap) ---------------------------
+    let store = KvStore::new(N, D, 2);
+    let before = value_conversion_count();
+    store.put("s", k.rows_slice(0, PREFILL), v.rows_slice(0, PREFILL)).unwrap();
+    assert_eq!(value_conversion_count() - before, PREFILL as u64);
+    let snapshot = store.get("s").unwrap(); // hold the old Arc across appends
+    let before = value_conversion_count();
+    store.append("s", k.rows_slice(PREFILL, PREFILL + 1), v.rows_slice(PREFILL, PREFILL + 1))
+        .unwrap();
+    store.append("s", k.rows_slice(PREFILL + 1, PREFILL + 4), v.rows_slice(PREFILL + 1, PREFILL + 4))
+        .unwrap();
+    assert_eq!(
+        value_conversion_count() - before,
+        4,
+        "store appends must convert only the appended rows (resident: {})",
+        snapshot.prepared().n()
+    );
+    drop(snapshot);
+
+    // --- full serving decode loop -----------------------------------------
+    let accel_cfg = AcceleratorConfig {
+        head_dim: D,
+        seq_len: N,
+        kv_blocks: 4,
+        parallel_queries: 1,
+        freq_mhz: 500.0,
+    };
+    let coord_cfg = CoordinatorConfig {
+        max_batch: 4,
+        batch_window_us: 100,
+        workers: 2,
+        queue_depth: 64,
+    };
+    let kv_store = Arc::new(KvStore::new(N, D, 2));
+    let before_prefill = value_conversion_count();
+    kv_store.put("dec", k.rows_slice(0, PREFILL), v.rows_slice(0, PREFILL)).unwrap();
+    assert_eq!(value_conversion_count() - before_prefill, PREFILL as u64);
+
+    let factories = (0..coord_cfg.workers)
+        .map(|_| SimBackend::factory(Arith::Hfa, accel_cfg.clone()))
+        .collect();
+    let server = Server::start(&coord_cfg, kv_store.clone(), factories).unwrap();
+
+    let before_decode = value_conversion_count();
+    for step in 0..STEPS {
+        let at = PREFILL + step;
+        let ack = server
+            .append("dec", k.rows_slice(at, at + 1), v.rows_slice(at, at + 1))
+            .unwrap();
+        assert!(ack.ok(), "step {step}: {:?}", ack.output);
+        let resp = server.call("dec", rng.normal_vec(D)).unwrap();
+        assert!(resp.ok(), "step {step}: {:?}", resp.output);
+    }
+    assert_eq!(
+        value_conversion_count() - before_decode,
+        STEPS as u64,
+        "a {STEPS}-step decode loop over a {PREFILL}-row prefill must convert \
+         exactly {STEPS} rows — attends must not reconvert, appends must not \
+         touch resident rows"
+    );
+    assert_eq!(kv_store.get("dec").unwrap().prepared().n(), PREFILL + STEPS);
+    server.shutdown();
+}

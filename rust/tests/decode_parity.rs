@@ -1,0 +1,127 @@
+//! Incremental decode vs full forward: feeding tokens one at a time
+//! through `Transformer::decoder` (append-only per-head KV caches) must
+//! reproduce the full-sequence `forward` logits **bit-exactly** at every
+//! position, for every supported attention implementation.  This is the
+//! model-level pin of the append-only decode path: causal row `t` attends
+//! exactly the `t+1` cached rows, and every per-row op is row-independent.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use hfa::model::{AttnSelect, Transformer};
+use hfa::proptest::Rng;
+
+const VOCAB: usize = 24;
+const D: usize = 16;
+const HEADS: usize = 2;
+const LAYERS: usize = 2;
+const SEQ: usize = 16;
+const DFF: usize = 32;
+
+/// Write a random-but-deterministic tiny model in the `weights.bin` +
+/// `manifest.txt` + `config.txt` format `Weights::load` expects.
+fn write_tiny_model(dir: &Path, rng: &mut Rng) {
+    std::fs::create_dir_all(dir).unwrap();
+    let mut flat: Vec<f32> = Vec::new();
+    let mut manifest = String::from("# tiny decode-parity model\n");
+    let mut tensor = |name: &str, shape: &[usize], data: Vec<f32>| {
+        let count: usize = shape.iter().product();
+        assert_eq!(data.len(), count, "{name}");
+        let dims: Vec<String> = shape.iter().map(|s| s.to_string()).collect();
+        manifest.push_str(&format!(
+            "{name}|{}|{}|{count}\n",
+            dims.join(","),
+            flat.len()
+        ));
+        flat.extend_from_slice(&data);
+    };
+
+    let small = |rng: &mut Rng, n: usize| -> Vec<f32> {
+        rng.normal_vec(n).into_iter().map(|x| 0.3 * x).collect()
+    };
+    let near_one = |rng: &mut Rng, n: usize| -> Vec<f32> {
+        rng.normal_vec(n).into_iter().map(|x| 1.0 + 0.1 * x).collect()
+    };
+    let tiny = |rng: &mut Rng, n: usize| -> Vec<f32> {
+        rng.normal_vec(n).into_iter().map(|x| 0.02 * x).collect()
+    };
+
+    tensor("tok_emb", &[VOCAB, D], small(rng, VOCAB * D));
+    tensor("pos_emb", &[SEQ, D], small(rng, SEQ * D));
+    for l in 0..LAYERS {
+        tensor(&format!("l{l}.ln1_g"), &[D], near_one(rng, D));
+        tensor(&format!("l{l}.ln1_b"), &[D], tiny(rng, D));
+        tensor(&format!("l{l}.wq"), &[D, D], small(rng, D * D));
+        tensor(&format!("l{l}.wk"), &[D, D], small(rng, D * D));
+        tensor(&format!("l{l}.wv"), &[D, D], small(rng, D * D));
+        tensor(&format!("l{l}.wo"), &[D, D], small(rng, D * D));
+        tensor(&format!("l{l}.ln2_g"), &[D], near_one(rng, D));
+        tensor(&format!("l{l}.ln2_b"), &[D], tiny(rng, D));
+        tensor(&format!("l{l}.w1"), &[D, DFF], small(rng, D * DFF));
+        tensor(&format!("l{l}.b1"), &[DFF], tiny(rng, DFF));
+        tensor(&format!("l{l}.w2"), &[DFF, D], small(rng, DFF * D));
+        tensor(&format!("l{l}.b2"), &[D], tiny(rng, D));
+    }
+    tensor("lnf_g", &[D], near_one(rng, D));
+    tensor("lnf_b", &[D], tiny(rng, D));
+
+    let bytes: Vec<u8> = flat.iter().flat_map(|f| f.to_le_bytes()).collect();
+    std::fs::write(dir.join("weights.bin"), bytes).unwrap();
+    std::fs::write(dir.join("manifest.txt"), manifest).unwrap();
+    let mut cfg = std::fs::File::create(dir.join("config.txt")).unwrap();
+    writeln!(
+        cfg,
+        "name=tiny\nvocab={VOCAB}\nd_model={D}\nn_head={HEADS}\nn_layer={LAYERS}\nseq_len={SEQ}"
+    )
+    .unwrap();
+}
+
+/// Per-test model directory (tests run concurrently in one process, so
+/// each gets its own files even though the contents are identical).
+fn tiny_model_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("hfa_decode_parity_{}_{tag}", std::process::id()));
+    let mut rng = Rng::new(20_260_728);
+    write_tiny_model(&dir, &mut rng);
+    dir
+}
+
+#[test]
+fn decode_steps_bit_identical_to_full_forward() {
+    let dir = tiny_model_dir("parity");
+    let model = Transformer::load(&dir).expect("load tiny model");
+    let tokens: Vec<i32> = (0..12).map(|i| ((i * 5 + 3) % VOCAB) as i32).collect();
+
+    for attn in [AttnSelect::Exact, AttnSelect::Fa2, AttnSelect::Hfa] {
+        let full = model.forward(&tokens, attn, &mut None).unwrap();
+        assert_eq!((full.rows, full.cols), (tokens.len(), VOCAB));
+        let mut dec = model.decoder(attn).unwrap();
+        for (t, &tok) in tokens.iter().enumerate() {
+            assert_eq!(dec.pos(), t);
+            let step = dec.step(tok).unwrap();
+            assert_eq!((step.rows, step.cols), (1, VOCAB));
+            assert_eq!(
+                step.row(0),
+                full.row(t),
+                "{attn:?}: decode step {t} diverged from full forward"
+            );
+        }
+    }
+}
+
+#[test]
+fn decoder_rejects_bad_inputs() {
+    let dir = tiny_model_dir("rejects");
+    let model = Transformer::load(&dir).expect("load tiny model");
+    assert!(
+        model.decoder(AttnSelect::HfaEmu(hfa::attention::hfa::EmuConfig::all_on())).is_err(),
+        "emu ablations have no decode path"
+    );
+    let mut dec = model.decoder(AttnSelect::Exact).unwrap();
+    assert!(dec.step(-1).is_err(), "negative token");
+    assert!(dec.step(VOCAB as i32).is_err(), "token out of vocab");
+    for i in 0..SEQ {
+        dec.step((i % VOCAB) as i32).unwrap();
+    }
+    assert!(dec.step(0).is_err(), "decode past seq_len must fail");
+}
