@@ -51,9 +51,11 @@ fn main() -> anyhow::Result<()> {
         names.push(name);
     }
     println!(
-        "KV store: {} sessions x {} kB BF16 (SRAM-modelled)",
+        "KV store: {} sessions x {} kB BF16 (SRAM-modelled); byte budget {} kB, {} kB resident",
         sessions,
-        kv.session_bytes() / 1024
+        kv.session_bytes() / 1024,
+        kv.budget_bytes() / 1024,
+        kv.used_bytes() / 1024
     );
 
     let use_pjrt = args.flag("pjrt");

@@ -162,9 +162,17 @@ fn main() -> anyhow::Result<()> {
     // server and its metrics), so the table reports steps/s only.
     let mut dt = Table::new(
         "Decode loop — prefill once, then append+attend per token, N=1024, d=64",
-        &["KV write path", "prefill", "steps", "steps/s", "step mean us", "V rows converted"],
+        &[
+            "KV write path",
+            "prefill",
+            "steps",
+            "steps/s",
+            "step mean us",
+            "V rows converted",
+            "KV MiB copied",
+        ],
     );
-    for (name, use_append) in [("append (this PR)", true), ("full re-put (seed)", false)] {
+    for (name, use_append) in [("chunked append", true), ("full re-put (seed)", false)] {
         let kv = Arc::new(KvStore::new(N, D, 4));
         kv.put("dec", k.rows_slice(0, prefill), v.rows_slice(0, prefill))?;
         let factories = (0..coord_cfg.workers)
@@ -172,6 +180,7 @@ fn main() -> anyhow::Result<()> {
             .collect();
         let server = Server::start(&coord_cfg, kv.clone(), factories)?;
         let conv0 = hfa::attention::hfa::value_conversion_count();
+        let copy0 = hfa::attention::prepared::kv_copy_bytes();
         let t0 = Instant::now();
         for s in 0..steps {
             let at = prefill + s;
@@ -190,6 +199,7 @@ fn main() -> anyhow::Result<()> {
         }
         let wall = t0.elapsed().as_secs_f64();
         let converted = hfa::attention::hfa::value_conversion_count() - conv0;
+        let copied = hfa::attention::prepared::kv_copy_bytes() - copy0;
         dt.row(&[
             name.into(),
             prefill.to_string(),
@@ -197,6 +207,7 @@ fn main() -> anyhow::Result<()> {
             format!("{:.0}", steps as f64 / wall),
             format!("{:.0}", wall / steps as f64 * 1e6),
             converted.to_string(),
+            format!("{:.2}", copied as f64 / (1024.0 * 1024.0)),
         ]);
         server.shutdown();
     }

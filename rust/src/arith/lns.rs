@@ -2,7 +2,10 @@
 //! signed LNS addition of Eqs. 10/14/17.
 //!
 //! Bit-exact mirror of `logmath.bf16_bits_to_log_q7`, `log_q7_to_bf16_bits`
-//! and `lns_add`.
+//! and `lns_add` on finite inputs; exponent-0xFF BF16 bits (Inf/NaN),
+//! which the python spec leaves undefined, are handled explicitly in
+//! [`Lns::from_bf16`] (saturate / drop) instead of flowing through as
+//! out-of-range logs.
 
 use super::bf16::Bf16;
 use super::fix::{is_log_zero, BF16_BIAS, FRAC_BITS, FRAC_MASK, LOG_ZERO};
@@ -23,22 +26,37 @@ impl Lns {
         is_log_zero(self.log)
     }
 
+    /// The Q9.7 log of the largest finite BF16 (`0x7F7F`): where
+    /// non-finite inputs saturate on conversion.
+    pub const MAX_FINITE_LOG: i32 = 0x7F7F - (BF16_BIAS << FRAC_BITS);
+
     /// Float -> log conversion of the value vector (Eq. 18): reinterpret
     /// the BF16 exponent.mantissa as Q8.7 and subtract the bias —
     /// Mitchell's `log2(1+M) ~= M`.  Zero/subnormal -> LNS zero.
+    ///
+    /// Non-finite BF16 bits (exponent `0xFF`) have no log-domain
+    /// representation; reinterpreting them as Q8.7 used to yield a
+    /// "log" *above* every finite value that then flowed through the
+    /// datapath as if valid.  They are handled explicitly instead:
+    /// +-Inf saturates to the log of the largest finite BF16
+    /// ([`Lns::MAX_FINITE_LOG`], mirroring the `to_bf16` overflow
+    /// convention), and NaN converts to LNS zero (a poisoned lane is
+    /// dropped rather than injected as a huge magnitude).
     #[inline]
     pub fn from_bf16(v: Bf16) -> Lns {
         let bits = v.bits() as i32;
+        let sign = bits >> 15 & 1;
         if bits & 0x7F80 == 0 {
             // zero/subnormal -> sentinel, preserving the sign bit
             // (matches the python spec; the sign of a zero operand is
             // never propagated by lns_add)
-            return Lns { sign: bits >> 15 & 1, log: LOG_ZERO };
+            return Lns { sign, log: LOG_ZERO };
         }
-        Lns {
-            sign: bits >> 15 & 1,
-            log: (bits & 0x7FFF) - (BF16_BIAS << FRAC_BITS),
+        if bits & 0x7F80 == 0x7F80 {
+            let log = if bits & 0x7F == 0 { Lns::MAX_FINITE_LOG } else { LOG_ZERO };
+            return Lns { sign, log };
         }
+        Lns { sign, log: (bits & 0x7FFF) - (BF16_BIAS << FRAC_BITS) }
     }
 
     /// Log -> float back-conversion (Eq. 22): `2^(I+F) ~= 2^I * (1+F)`,
@@ -205,6 +223,31 @@ impl LnsMat {
         }
     }
 
+    /// An empty (0-row) lane matrix preallocated for `row_capacity`
+    /// rows, so growing it row-by-row up to that capacity never
+    /// reallocates — the backing store of a fixed-capacity KV chunk.
+    pub fn with_row_capacity(row_capacity: usize, lanes: usize) -> LnsMat {
+        LnsMat {
+            rows: 0,
+            lanes,
+            signs: Vec::with_capacity(row_capacity * lanes),
+            logs: Vec::with_capacity(row_capacity * lanes),
+        }
+    }
+
+    /// Grow both planes geometrically (at least doubling) when one more
+    /// row would not fit.  A cloned `Vec` starts at exact capacity, so
+    /// without this a per-token push loop over a copy-on-write clone
+    /// pays one realloc + full memcpy per token (O(T^2) over a decode).
+    fn reserve_amortized_row(&mut self) {
+        let need = self.signs.len() + self.lanes;
+        if need > self.signs.capacity() {
+            let target = need.max(self.signs.capacity() * 2);
+            self.signs.reserve_exact(target - self.signs.len());
+            self.logs.reserve_exact(target - self.logs.len());
+        }
+    }
+
     pub fn rows(&self) -> usize {
         self.rows
     }
@@ -233,11 +276,20 @@ impl LnsMat {
     /// Append one row (must have `lanes` entries) below the existing rows
     /// — the decode-time growth primitive for a resident value matrix.
     /// Only the new row's planes are written; resident rows are untouched
-    /// (at most one realloc memcpy of the flat storage).
+    /// (at most one realloc memcpy of the flat storage, geometrically
+    /// amortized).
     pub fn push_row(&mut self, v: &LnsVec) {
-        assert_eq!(v.len(), self.lanes, "lane count mismatch");
-        self.signs.extend_from_slice(&v.signs);
-        self.logs.extend_from_slice(&v.logs);
+        self.push_row_slices(&v.signs, &v.logs);
+    }
+
+    /// [`LnsMat::push_row`] from raw plane slices (zero-copy interop
+    /// with resident rows of another `LnsMat`).
+    pub fn push_row_slices(&mut self, signs: &[i32], logs: &[i32]) {
+        assert_eq!(signs.len(), self.lanes, "lane count mismatch");
+        assert_eq!(logs.len(), self.lanes, "lane count mismatch");
+        self.reserve_amortized_row();
+        self.signs.extend_from_slice(signs);
+        self.logs.extend_from_slice(logs);
         self.rows += 1;
     }
 
@@ -336,6 +388,63 @@ mod tests {
             x = (x * 1.07).rem_euclid(5.0) + 0.01;
         }
         assert!(worst < 0.19, "worst log2 error {worst}");
+    }
+
+    #[test]
+    fn non_finite_bf16_saturates_or_drops_at_conversion() {
+        // regression: exponent-0xFF bits used to reinterpret as a "log"
+        // above every finite value and flow through the datapath as
+        // valid.  Pinned behaviour: +-Inf saturates to the largest
+        // finite log, NaN converts to LNS zero.
+        let pos_inf = Lns::from_bf16(Bf16(0x7F80));
+        assert_eq!(pos_inf, Lns { sign: 0, log: Lns::MAX_FINITE_LOG });
+        assert_eq!(pos_inf.to_bf16(), Bf16::MAX_FINITE, "Inf round-trips to max finite");
+        let neg_inf = Lns::from_bf16(Bf16(0xFF80));
+        assert_eq!(neg_inf, Lns { sign: 1, log: Lns::MAX_FINITE_LOG });
+        for nan_bits in [0x7FC0u16, 0x7F81, 0xFFC0, 0xFFFF] {
+            let l = Lns::from_bf16(Bf16(nan_bits));
+            assert!(l.is_zero(), "NaN bits {nan_bits:#06x} must convert to LNS zero");
+        }
+        // f32 overflow path: values that round up to BF16 Inf saturate too
+        let l = Lns::from_bf16(Bf16::from_f32(f32::MAX));
+        assert_eq!(l.log, Lns::MAX_FINITE_LOG);
+        assert!(Lns::from_bf16(Bf16::from_f32(f32::NAN)).is_zero());
+        // the largest finite BF16 itself is unchanged by the guard
+        let max_fin = Lns::from_bf16(Bf16::MAX_FINITE);
+        assert_eq!(max_fin, Lns { sign: 0, log: Lns::MAX_FINITE_LOG });
+        // a non-finite operand no longer dominates an lns_add unboundedly
+        let sum = lns_add(pos_inf, lns(1.0));
+        assert!(sum.log <= Lns::MAX_FINITE_LOG + 128, "saturated add stays bounded");
+    }
+
+    #[test]
+    fn lnsmat_growth_is_geometric_even_after_exact_capacity_clone() {
+        let row = LnsVec { signs: vec![0, 1, 0], logs: vec![5, -7, LOG_ZERO] };
+        let mut base = LnsMat::zeros(50, 3);
+        for r in 0..50 {
+            base.set_row(r, &row);
+        }
+        let mut m = base.clone(); // exact-capacity clone
+        let mut caps = std::collections::BTreeSet::new();
+        for _ in 0..1000 {
+            m.push_row(&row);
+            caps.insert(m.signs.capacity());
+        }
+        assert_eq!(m.rows(), 1050);
+        assert!(
+            caps.len() <= 8,
+            "capacity changed {} times over 1000 pushes — growth is not geometric",
+            caps.len()
+        );
+        // preallocated chunk storage never reallocates up to capacity
+        let mut pre = LnsMat::with_row_capacity(64, 3);
+        let cap0 = pre.signs.capacity();
+        for _ in 0..64 {
+            pre.push_row_slices(&row.signs, &row.logs);
+        }
+        assert_eq!(pre.signs.capacity(), cap0);
+        assert_eq!(pre.rows(), 64);
+        assert_eq!(pre.row_vec(63), row);
     }
 
     #[test]

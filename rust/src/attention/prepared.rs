@@ -2,30 +2,45 @@
 //! paper's "KV sub-blocks preloaded into local buffers" assumption
 //! (Section III-B).
 //!
-//! [`PreparedKv`] holds a session's K row-major plus V pre-converted
-//! *once* into SoA LNS lanes ([`LnsMat`], `d+1` lanes per row including
-//! the prepended ell lane of Eq. 12).  Every attention call against the
-//! session then runs pure fixed-point adds over resident slices: no
-//! per-call linear->log conversion, no per-row `LnsVec` allocation, and
-//! no `rows_slice` copies for KV sub-blocks — block boundaries are plain
-//! `(lo, hi)` row ranges ([`KvBlockView`]).
+//! [`PreparedKv`] holds a session's KV as a table of fixed-capacity
+//! **chunks** ([`KvChunk`]) — one chunk per [`fixed_block_ranges`] block:
+//! K row-major plus V pre-converted *once* into SoA LNS lanes
+//! ([`LnsMat`], `d+1` lanes per row including the prepended ell lane of
+//! Eq. 12).  Every attention call against the session then runs pure
+//! fixed-point adds over resident slices: no per-call linear->log
+//! conversion, no per-row `LnsVec` allocation, and no copies for KV
+//! sub-blocks — block boundaries are plain `(lo, hi)` row ranges
+//! ([`KvBlockView`]).
+//!
+//! Chunks are shared via `Arc` across generations: cloning a
+//! `PreparedKv` (the KV store's copy-on-write swap-in) clones only the
+//! chunk *table* (one `Arc` pointer per resident chunk), and
+//! [`PreparedKv::append`] copies at most the partially-filled tail chunk
+//! before writing the new rows.  A T-token decode therefore performs
+//! O(appended rows) bytes of copying per token — not O(resident rows),
+//! which the previous monolithic-buffer layout paid on every
+//! copy-on-write append (O(T^2) memcpy over a decode).  The traffic is
+//! counted by the process-wide [`kv_copy_bytes`] counter and pinned by
+//! `rust/tests/append_traffic.rs`.
 //!
 //! Query fan-out goes through the persistent [`crate::runtime::pool`]
 //! worker pool instead of a per-call `std::thread::scope` spawn.
 //!
 //! Autoregressive decode grows a prepared set row-by-row with
 //! [`PreparedKv::append`]: only the new V rows are converted, and the
-//! stored capacity-driven block partition ([`fixed_block_ranges`]) keeps
-//! earlier block boundaries fixed while its tail block fills — so
+//! capacity-driven chunk partition ([`fixed_block_ranges`]) keeps
+//! earlier chunk boundaries fixed while the tail chunk fills — so
 //! prefill+append is bit-identical to building from the full matrices
 //! (pinned by `rust/tests/append_equivalence.rs`).
 //!
 //! Everything here is bit-identical to the serial seed path: the lane
 //! update is the same `step_lanes_fast` kernel, conversions go through
-//! `value_to_lns`, and per-query results are independent of the thread
-//! that computed them (pinned by `rust/tests/prepared_exec.rs` and the
-//! golden vectors in `rust/tests/golden_replay.rs`).
+//! `value_to_lns`, row values and iteration order are independent of the
+//! chunk a row lands in, and per-query results are independent of the
+//! thread that computed them (pinned by `rust/tests/prepared_exec.rs`
+//! and the golden vectors in `rust/tests/golden_replay.rs`).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::arith::lns::LnsMat;
@@ -33,6 +48,31 @@ use crate::tensor::{dot_f32, Mat};
 
 use super::hfa::{finalize_states, value_to_lns, HfaState};
 use super::merge::merge_hfa;
+
+/// Process-wide count of bytes memcpy'd by prepared-KV builds, appends
+/// and copy-on-write chunk clones (K + V float planes and LNS lane
+/// planes; reads are free).  The companion of
+/// `hfa::value_conversion_count`: the conversion counter pins *compute*
+/// proportional to appended rows, this one pins *memory traffic*.
+/// Pinned by `rust/tests/append_traffic.rs`.
+static KV_COPIED_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Total prepared-KV bytes copied so far (process-wide, all sessions).
+pub fn kv_copy_bytes() -> u64 {
+    KV_COPIED_BYTES.load(Ordering::Relaxed)
+}
+
+#[inline]
+fn record_copy(bytes: usize) {
+    KV_COPIED_BYTES.fetch_add(bytes as u64, Ordering::Relaxed);
+}
+
+/// Bytes one resident KV row occupies in prepared form: K floats, V
+/// floats, and the `dv+1` LNS lanes (sign + log planes, i32 each).
+/// This is the unit of the store's byte-budget accounting.
+pub fn row_bytes(d: usize, dv: usize) -> usize {
+    4 * d + 4 * dv + 2 * 4 * (dv + 1)
+}
 
 /// Convert a value matrix to its resident LNS lane form (`rows x (d+1)`,
 /// lane 0 = LNS one).  One `value_to_lns` call per row — the only
@@ -73,7 +113,8 @@ pub const DEFAULT_BLOCK_ROWS: usize = 256;
 /// growing `n` only widens the tail block until it fills, then opens new
 /// blocks — earlier boundaries never move.  A pure function of
 /// `(n, block_rows)`, which is what makes prefill+append bit-identical
-/// to a from-scratch build.
+/// to a from-scratch build.  The chunk table of a [`PreparedKv`] always
+/// mirrors this partition exactly.
 pub fn fixed_block_ranges(n: usize, block_rows: usize) -> Vec<(usize, usize)> {
     let br = block_rows.max(1);
     let mut out = Vec::with_capacity(n.div_ceil(br));
@@ -86,119 +127,37 @@ pub fn fixed_block_ranges(n: usize, block_rows: usize) -> Vec<(usize, usize)> {
     out
 }
 
-/// A session's KV prepared for repeated attention calls: K as given
-/// (row-major f32 holding BF16 values) and V resident in the log domain,
-/// plus the append-stable ragged block partition the decode path merges
-/// over.  Grows in place via [`PreparedKv::append`].
-#[derive(Clone)]
-pub struct PreparedKv {
-    k: Arc<Mat>,
-    v: Arc<Mat>,
+/// One fixed-capacity chunk of a prepared KV set — the software analogue
+/// of one block-FAU's local SRAM buffer.  Holds up to `block_rows` rows
+/// of K (row-major f32 holding BF16 values), V (same), and the
+/// pre-converted LNS lanes.  Filled chunks are immutable and shared via
+/// `Arc` across `PreparedKv` generations.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KvChunk {
+    k: Mat,
+    v: Mat,
     v_lns: LnsMat,
-    /// Capacity of each stored sub-block (the block-FAU buffer size).
-    block_rows: usize,
-    /// Ragged `[lo, hi)` block ranges; always equals
-    /// `fixed_block_ranges(n, block_rows)`.
-    blocks: Vec<(usize, usize)>,
 }
 
-/// A zero-copy view of a contiguous KV sub-block (`[lo, hi)` rows) — the
-/// software analogue of one block-FAU's local buffer.
-#[derive(Clone, Copy)]
-pub struct KvBlockView<'a> {
-    kv: &'a PreparedKv,
-    lo: usize,
-    hi: usize,
-}
-
-impl PreparedKv {
-    /// Prepare owned K/V.  No rounding is applied here — callers decide
-    /// the BF16 ingress convention (the KV store and accelerator round on
-    /// load, mirroring the seed paths they replace).  The stored decode
-    /// partition uses [`DEFAULT_BLOCK_ROWS`].
-    pub fn new(k: Mat, v: Mat) -> PreparedKv {
-        PreparedKv::from_arcs(Arc::new(k), Arc::new(v))
-    }
-
-    /// [`PreparedKv::new`] with an explicit stored sub-block capacity.
-    pub fn with_block_rows(k: Mat, v: Mat, block_rows: usize) -> PreparedKv {
-        PreparedKv::from_arcs_with_block_rows(Arc::new(k), Arc::new(v), block_rows)
-    }
-
-    /// Prepare shared K/V without copying the float matrices.
-    pub fn from_arcs(k: Arc<Mat>, v: Arc<Mat>) -> PreparedKv {
-        PreparedKv::from_arcs_with_block_rows(k, v, DEFAULT_BLOCK_ROWS)
-    }
-
-    /// [`PreparedKv::from_arcs`] with an explicit sub-block capacity.
-    pub fn from_arcs_with_block_rows(
-        k: Arc<Mat>,
-        v: Arc<Mat>,
-        block_rows: usize,
-    ) -> PreparedKv {
-        assert_eq!(k.rows, v.rows, "K/V row count mismatch");
-        let v_lns = convert_values(v.as_ref());
-        let block_rows = block_rows.max(1);
-        let blocks = fixed_block_ranges(k.rows, block_rows);
-        PreparedKv { k, v, v_lns, block_rows, blocks }
-    }
-
-    /// Append decode-step K/V rows, converting **only** the new V rows
-    /// into the resident LNS lanes — resident rows are never re-rounded
-    /// or re-converted, so per-step cost tracks the appended rows, not
-    /// the sequence length.  The stored ragged partition grows its tail
-    /// block until it reaches `block_rows`, then opens new blocks —
-    /// exactly the partition [`fixed_block_ranges`] computes from
-    /// scratch, so prefill+append stays bit-identical to
-    /// [`PreparedKv::new`] over the full matrices (pinned by
-    /// `rust/tests/append_equivalence.rs`).
-    ///
-    /// No rounding is applied (same ingress convention as `new`).  When
-    /// the float matrices are `Arc`-shared they are copied on first
-    /// write (`Arc::make_mut`); a uniquely-owned cache grows truly in
-    /// place.
-    pub fn append(&mut self, k_rows: &Mat, v_rows: &Mat) {
-        assert_eq!(k_rows.cols, self.k.cols, "K append dim mismatch");
-        assert_eq!(v_rows.cols, self.v.cols, "V append dim mismatch");
-        assert_eq!(k_rows.rows, v_rows.rows, "K/V append row count mismatch");
-        if k_rows.rows == 0 {
-            return;
+impl KvChunk {
+    /// An empty chunk preallocated for `rows_now` rows — the rows about
+    /// to be written, **not** the full block capacity: a decode-opened
+    /// chunk holds one row, a bulk-build chunk a whole block, so real
+    /// allocation tracks residency and the store's byte accounting
+    /// (which charges resident rows) stays honest.  Later tail growth
+    /// is geometric (`Mat::append_row` / `LnsMat::push_row`), bounding
+    /// uncharged allocator slack below 2x.
+    fn with_capacity(rows_now: usize, d: usize, dv: usize) -> KvChunk {
+        KvChunk {
+            k: Mat::with_row_capacity(rows_now, d),
+            v: Mat::with_row_capacity(rows_now, dv),
+            v_lns: LnsMat::with_row_capacity(rows_now, dv + 1),
         }
-        Arc::make_mut(&mut self.k).append_rows(k_rows);
-        Arc::make_mut(&mut self.v).append_rows(v_rows);
-        for i in 0..v_rows.rows {
-            let row = value_to_lns(v_rows.row(i), &mut None);
-            self.v_lns.push_row(&row);
-        }
-        // the capacity-driven partition is a pure function of (n, block
-        // rows) — recomputing it *is* the tail-widen/open-new-blocks
-        // update (earlier boundaries never move), at O(n/block_rows)
-        // tuple writes, negligible next to the row copies above
-        self.blocks = fixed_block_ranges(self.k.rows, self.block_rows);
     }
 
-    /// Copy-on-write [`PreparedKv::append`] for `Arc`-shared prepared KV
-    /// (the KV store's swap-in path): resident float/LNS planes are
-    /// memcpy'd, only the new V rows pay a linear->log conversion.
-    pub fn appended(&self, k_rows: &Mat, v_rows: &Mat) -> PreparedKv {
-        let mut next = self.clone();
-        next.append(k_rows, v_rows);
-        next
-    }
-
-    /// Key/value rows resident.
-    pub fn n(&self) -> usize {
+    /// Rows resident in this chunk.
+    pub fn rows(&self) -> usize {
         self.k.rows
-    }
-
-    /// Key (= query) dimension.
-    pub fn d(&self) -> usize {
-        self.k.cols
-    }
-
-    /// Value dimension.
-    pub fn dv(&self) -> usize {
-        self.v.cols
     }
 
     pub fn k(&self) -> &Mat {
@@ -209,16 +168,248 @@ impl PreparedKv {
         &self.v
     }
 
-    pub fn k_arc(&self) -> Arc<Mat> {
-        self.k.clone()
-    }
-
-    pub fn v_arc(&self) -> Arc<Mat> {
-        self.v.clone()
-    }
-
     pub fn v_lns(&self) -> &LnsMat {
         &self.v_lns
+    }
+
+    /// Resident plane bytes of this chunk (K + V floats + LNS lanes).
+    pub fn bytes(&self) -> usize {
+        self.rows() * row_bytes(self.k.cols, self.v.cols)
+    }
+
+    /// Append rows `[lo, hi)` of the source matrices, converting the V
+    /// rows to LNS.  Counts the written bytes against [`kv_copy_bytes`].
+    fn push_rows(&mut self, k_src: &Mat, v_src: &Mat, lo: usize, hi: usize) {
+        for r in lo..hi {
+            self.k.append_row(k_src.row(r));
+            self.v.append_row(v_src.row(r));
+            let lrow = value_to_lns(v_src.row(r), &mut None);
+            self.v_lns.push_row(&lrow);
+        }
+        record_copy((hi - lo) * row_bytes(self.k.cols, self.v.cols));
+    }
+}
+
+/// A session's KV prepared for repeated attention calls, stored as a
+/// table of `Arc`-shared fixed-capacity chunks (chunk `i` covers rows
+/// `[i*block_rows, ...)`; every chunk except the tail is full).  Grows
+/// in place via [`PreparedKv::append`]; `Clone` copies only the chunk
+/// table, never row data.
+#[derive(Clone)]
+pub struct PreparedKv {
+    d: usize,
+    dv: usize,
+    /// Capacity of each stored sub-block (the block-FAU buffer size).
+    block_rows: usize,
+    /// Rows resident across all chunks.
+    n: usize,
+    chunks: Vec<Arc<KvChunk>>,
+    /// Ragged `[lo, hi)` chunk ranges; always equals
+    /// `fixed_block_ranges(n, block_rows)`.
+    blocks: Vec<(usize, usize)>,
+}
+
+/// A zero-copy view of a contiguous KV sub-block (`[lo, hi)` rows) — the
+/// software analogue of one block-FAU's local buffer.  Ranges may cross
+/// chunk boundaries; row accessors resolve through the chunk table.
+#[derive(Clone, Copy)]
+pub struct KvBlockView<'a> {
+    kv: &'a PreparedKv,
+    lo: usize,
+    hi: usize,
+}
+
+impl PreparedKv {
+    /// Prepare owned K/V.  No rounding is applied here — callers decide
+    /// the BF16 ingress convention (the KV store and accelerator round on
+    /// load, mirroring the seed paths they replace).  The stored chunk
+    /// partition uses [`DEFAULT_BLOCK_ROWS`].
+    pub fn new(k: Mat, v: Mat) -> PreparedKv {
+        PreparedKv::with_block_rows(k, v, DEFAULT_BLOCK_ROWS)
+    }
+
+    /// [`PreparedKv::new`] with an explicit chunk capacity.
+    pub fn with_block_rows(k: Mat, v: Mat, block_rows: usize) -> PreparedKv {
+        assert_eq!(k.rows, v.rows, "K/V row count mismatch");
+        let block_rows = block_rows.max(1);
+        let mut kv = PreparedKv {
+            d: k.cols,
+            dv: v.cols,
+            block_rows,
+            n: 0,
+            chunks: Vec::new(),
+            blocks: Vec::new(),
+        };
+        kv.append(&k, &v);
+        kv
+    }
+
+    /// Append decode-step K/V rows, converting **only** the new V rows
+    /// into the resident LNS lanes — resident rows are never re-rounded
+    /// or re-converted, and only the partially-filled tail chunk is ever
+    /// copied (when shared), so per-step cost tracks the appended rows,
+    /// not the sequence length.  The chunk table grows its tail chunk
+    /// until it reaches `block_rows`, then opens new chunks — exactly
+    /// the partition [`fixed_block_ranges`] computes from scratch, so
+    /// prefill+append stays bit-identical to [`PreparedKv::new`] over
+    /// the full matrices (pinned by `rust/tests/append_equivalence.rs`).
+    ///
+    /// No rounding is applied (same ingress convention as `new`).  When
+    /// the tail chunk is `Arc`-shared it is copied on first write
+    /// (`Arc::make_mut`, at most `block_rows` rows); filled chunks stay
+    /// shared across generations and are never touched.
+    pub fn append(&mut self, k_rows: &Mat, v_rows: &Mat) {
+        assert_eq!(k_rows.cols, self.d, "K append dim mismatch");
+        assert_eq!(v_rows.cols, self.dv, "V append dim mismatch");
+        assert_eq!(k_rows.rows, v_rows.rows, "K/V append row count mismatch");
+        if k_rows.rows == 0 {
+            return;
+        }
+        let mut at = 0;
+        while at < k_rows.rows {
+            let tail_rows = self.chunks.last().map(|c| c.rows()).unwrap_or(self.block_rows);
+            let open_new = tail_rows == self.block_rows;
+            let cur_rows = if open_new { 0 } else { tail_rows };
+            let take = (self.block_rows - cur_rows).min(k_rows.rows - at);
+            if open_new {
+                self.chunks.push(Arc::new(KvChunk::with_capacity(take, self.d, self.dv)));
+            }
+            let tail = self.chunks.last_mut().expect("tail chunk exists");
+            if Arc::strong_count(tail) != 1 {
+                // copy-on-write: the resident tail rows are about to be
+                // cloned by make_mut — that memcpy is real traffic
+                record_copy(tail.bytes());
+            }
+            Arc::make_mut(tail).push_rows(k_rows, v_rows, at, at + take);
+            at += take;
+            self.n += take;
+        }
+        // the capacity-driven partition is a pure function of (n, block
+        // rows) — recomputing it *is* the tail-widen/open-new-chunks
+        // update (earlier boundaries never move), at O(n/block_rows)
+        // tuple writes, negligible next to the row writes above
+        self.blocks = fixed_block_ranges(self.n, self.block_rows);
+    }
+
+    /// Copy-on-write [`PreparedKv::append`] for `Arc`-shared prepared KV
+    /// (the KV store's swap-in path): the chunk table is cloned (one
+    /// pointer per chunk), the tail chunk is copied, and only the new V
+    /// rows pay a linear->log conversion.  Filled chunks are shared with
+    /// `self`, so the copy cost is O(appended rows + block_rows), not
+    /// O(resident rows).
+    pub fn appended(&self, k_rows: &Mat, v_rows: &Mat) -> PreparedKv {
+        let mut next = self.clone();
+        next.append(k_rows, v_rows);
+        next
+    }
+
+    /// Key/value rows resident.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Key (= query) dimension.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Value dimension.
+    pub fn dv(&self) -> usize {
+        self.dv
+    }
+
+    /// Resident plane bytes across all chunks (chunk-granular sum; the
+    /// unit the KV store's byte budget accounts in).  Charges resident
+    /// rows; transient allocator slack from the tail chunk's geometric
+    /// growth (< 2x of the tail, reset to exact on every copy-on-write
+    /// clone) is not charged.
+    pub fn resident_bytes(&self) -> usize {
+        self.chunks.iter().map(|c| c.bytes()).sum()
+    }
+
+    /// The resident chunk table (chunk `i` covers stored block `i`).
+    pub fn chunks(&self) -> &[Arc<KvChunk>] {
+        &self.chunks
+    }
+
+    /// Chunk index and chunk-relative row of global row `r`.  Valid
+    /// because every chunk except the tail holds exactly `block_rows`
+    /// rows.
+    #[inline]
+    fn loc(&self, r: usize) -> (usize, usize) {
+        debug_assert!(r < self.n);
+        (r / self.block_rows, r % self.block_rows)
+    }
+
+    /// Key row `r` (zero-copy borrow from the owning chunk).
+    #[inline]
+    pub fn k_row(&self, r: usize) -> &[f32] {
+        let (c, o) = self.loc(r);
+        self.chunks[c].k.row(o)
+    }
+
+    /// Raw value row `r`.
+    #[inline]
+    pub fn v_row(&self, r: usize) -> &[f32] {
+        let (c, o) = self.loc(r);
+        self.chunks[c].v.row(o)
+    }
+
+    /// LNS sign lane plane of value row `r`.
+    #[inline]
+    pub fn v_row_signs(&self, r: usize) -> &[i32] {
+        let (c, o) = self.loc(r);
+        self.chunks[c].v_lns.row_signs(o)
+    }
+
+    /// LNS log lane plane of value row `r`.
+    #[inline]
+    pub fn v_row_logs(&self, r: usize) -> &[i32] {
+        let (c, o) = self.loc(r);
+        self.chunks[c].v_lns.row_logs(o)
+    }
+
+    /// Materialize key rows `[lo, hi)` into one contiguous matrix
+    /// (O(hi-lo) copy — interop for dense-matrix consumers like the FA-2
+    /// block path and static-shape PJRT kernels).
+    pub fn k_rows(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.n, "k_rows range out of bounds");
+        let mut out = Mat::with_row_capacity(hi - lo, self.d);
+        for r in lo..hi {
+            out.append_row(self.k_row(r));
+        }
+        out
+    }
+
+    /// Materialize value rows `[lo, hi)` (see [`PreparedKv::k_rows`]).
+    pub fn v_rows(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.n, "v_rows range out of bounds");
+        let mut out = Mat::with_row_capacity(hi - lo, self.dv);
+        for r in lo..hi {
+            out.append_row(self.v_row(r));
+        }
+        out
+    }
+
+    /// Materialize the whole K plane (O(n) copy).
+    pub fn k_mat(&self) -> Mat {
+        self.k_rows(0, self.n)
+    }
+
+    /// Materialize the whole V plane (O(n) copy).
+    pub fn v_mat(&self) -> Mat {
+        self.v_rows(0, self.n)
+    }
+
+    /// Materialize the resident LNS lanes as one contiguous [`LnsMat`]
+    /// (O(n) copy of the *already converted* planes — no `value_to_lns`
+    /// calls, so the conversion counter is untouched; test interop).
+    pub fn v_lns_mat(&self) -> LnsMat {
+        let mut out = LnsMat::with_row_capacity(self.n, self.dv + 1);
+        for r in 0..self.n {
+            out.push_row_slices(self.v_row_signs(r), self.v_row_logs(r));
+        }
+        out
     }
 
     /// Capacity of each stored sub-block.
@@ -226,13 +417,14 @@ impl PreparedKv {
         self.block_rows
     }
 
-    /// The stored append-stable ragged block partition.
+    /// The stored append-stable ragged block partition (== the chunk
+    /// table's row ranges).
     pub fn blocks(&self) -> &[(usize, usize)] {
         &self.blocks
     }
 
     /// 2D-parallel H-FA over the **stored** partition: one partial FAU
-    /// per resident sub-block, log-domain ACC merge (Eq. 16), LogDiv.
+    /// per resident chunk, log-domain ACC merge (Eq. 16), LogDiv.
     /// Unlike [`PreparedKv::attention_blocked`] (count-driven boundaries
     /// that move as `n` grows), the stored boundaries are append-stable,
     /// so a step's merge tree does not shift under decode.  The serving
@@ -245,7 +437,7 @@ impl PreparedKv {
         let dv = self.dv();
         let mut acc: Option<Vec<HfaState>> = None;
         for &(lo, hi) in &self.blocks {
-            let st = partial_states_borrowed(q, &self.k, &self.v_lns, lo, hi, scale, None);
+            let st = partial_states_prepared(self, q, lo, hi, scale, None);
             acc = Some(match acc {
                 None => st,
                 Some(prev) => prev
@@ -278,9 +470,26 @@ impl PreparedKv {
 
     /// 2D-parallel H-FA (Fig. 2) over the resident KV: independent
     /// partial FAUs per sub-block, log-domain ACC merge (Eq. 16), LogDiv.
+    /// The count-driven ranges need not align with chunk boundaries —
+    /// rows resolve through the chunk table, in the same order and with
+    /// the same values as the dense path, so results stay bit-identical.
     pub fn attention_blocked(&self, q: &Mat, num_blocks: usize, scale: Option<f32>) -> Mat {
-        let states = blocked_states(q, &self.k, &self.v_lns, num_blocks, scale);
-        finalize_states(&states, self.dv())
+        let scale = resolve_scale(scale, q.cols);
+        let dv = self.dv();
+        let mut acc: Option<Vec<HfaState>> = None;
+        for (lo, hi) in kv_block_ranges(self.n, num_blocks) {
+            let st = partial_states_prepared(self, q, lo, hi, scale, None);
+            acc = Some(match acc {
+                None => st,
+                Some(prev) => prev
+                    .into_iter()
+                    .zip(st)
+                    .map(|(a, b)| merge_hfa(&a, &b, &mut None))
+                    .collect(),
+            });
+        }
+        let states = acc.unwrap_or_else(|| (0..q.rows).map(|_| HfaState::new(dv)).collect());
+        finalize_states(&states, dv)
     }
 }
 
@@ -300,16 +509,13 @@ impl<'a> KvBlockView<'a> {
     /// Key row `i` (view-relative).
     #[inline]
     pub fn k_row(&self, i: usize) -> &'a [f32] {
-        self.kv.k.row(self.lo + i)
+        self.kv.k_row(self.lo + i)
     }
 
     /// LNS value-row planes `i` (view-relative).
     #[inline]
     pub fn v_row_lns(&self, i: usize) -> (&'a [i32], &'a [i32]) {
-        (
-            self.kv.v_lns.row_signs(self.lo + i),
-            self.kv.v_lns.row_logs(self.lo + i),
-        )
+        (self.kv.v_row_signs(self.lo + i), self.kv.v_row_logs(self.lo + i))
     }
 
     /// One KV block's partial `(m, sign, log)` triplet per query.  `mask`
@@ -320,10 +526,9 @@ impl<'a> KvBlockView<'a> {
         scale: Option<f32>,
         mask: Option<&[bool]>,
     ) -> Vec<HfaState> {
-        partial_states_borrowed(
+        partial_states_prepared(
+            self.kv,
             q,
-            self.kv.k(),
-            self.kv.v_lns(),
             self.lo,
             self.hi,
             resolve_scale(scale, q.cols),
@@ -336,13 +541,62 @@ pub(crate) fn resolve_scale(scale: Option<f32>, d: usize) -> f32 {
     scale.unwrap_or(1.0 / (d as f32).sqrt())
 }
 
-/// The prepared-path inner engine over borrowed parts: K rows `[lo, hi)`
+/// The prepared-path inner engine over a chunked KV set: rows `[lo, hi)`
 /// against resident LNS lanes, fanned out over the persistent pool.
 /// `mask` (when given) is `(B, hi - lo)` relative to the range.
 ///
-/// Every query is an independent FAU, so results are identical to serial
-/// execution regardless of thread assignment — and bit-identical to the
+/// The chunk walk is hoisted out of the inner loop (one chunk lookup per
+/// crossed boundary, not per row); row values and accumulation order are
+/// exactly the dense path's, so results are bit-identical to
+/// [`partial_states_borrowed`] over the materialized planes — and to the
 /// seed per-row path (`HfaState::step` with no histogram).
+pub(crate) fn partial_states_prepared(
+    kv: &PreparedKv,
+    q: &Mat,
+    lo: usize,
+    hi: usize,
+    scale: f32,
+    mask: Option<&[bool]>,
+) -> Vec<HfaState> {
+    assert_eq!(kv.d(), q.cols, "query dim mismatch");
+    assert!(lo <= hi && hi <= kv.n(), "range out of bounds");
+    let b = q.rows;
+    let span = hi - lo;
+    let dv = kv.dv();
+    if let Some(m) = mask {
+        assert_eq!(m.len(), b * span, "mask shape mismatch");
+    }
+
+    let br = kv.block_rows;
+    let run_query = |bi: usize| -> HfaState {
+        let mut st = HfaState::new(dv);
+        let qrow = q.row(bi);
+        let mut r = lo;
+        while r < hi {
+            let ci = r / br;
+            let chunk = kv.chunks[ci].as_ref();
+            let base = ci * br;
+            let stop = hi.min(base + chunk.rows());
+            for rr in r..stop {
+                let i = rr - lo;
+                if mask.map(|m| !m[bi * span + i]).unwrap_or(false) {
+                    continue;
+                }
+                let o = rr - base;
+                let s = dot_f32(qrow, chunk.k.row(o)) * scale;
+                st.step_slices(s, chunk.v_lns.row_signs(o), chunk.v_lns.row_logs(o));
+            }
+            r = stop;
+        }
+        st
+    };
+    crate::runtime::pool::fan_out(b, run_query)
+}
+
+/// The dense-matrix inner engine (golden-model paths that hold plain
+/// `Mat`/`LnsMat` operands): K rows `[lo, hi)` against converted lanes,
+/// fanned out over the persistent pool.  Same arithmetic as
+/// [`partial_states_prepared`].
 pub(crate) fn partial_states_borrowed(
     q: &Mat,
     k: &Mat,
@@ -377,8 +631,8 @@ pub(crate) fn partial_states_borrowed(
 }
 
 /// Blocked partial-state computation + log-domain ACC merge over already
-/// converted lanes — shared by [`PreparedKv::attention_blocked`] and the
-/// `hfa::attention_blocked` wrapper.
+/// converted dense lanes — shared by the `hfa::attention_blocked`
+/// golden-model wrapper.
 pub(crate) fn blocked_states(
     q: &Mat,
     k: &Mat,
@@ -450,7 +704,8 @@ mod tests {
     fn view_rows_alias_prepared_storage() {
         let mut rng = Rng::new(7);
         let (k, v) = rand_kv(&mut rng, 16, 4);
-        let kv = PreparedKv::new(k.clone(), v.clone());
+        // block capacity 8: the view [4, 12) crosses a chunk boundary
+        let kv = PreparedKv::with_block_rows(k.clone(), v.clone(), 8);
         let view = kv.view(4, 12);
         assert_eq!(view.len(), 8);
         for i in 0..view.len() {
@@ -473,6 +728,28 @@ mod tests {
     }
 
     #[test]
+    fn chunk_table_mirrors_fixed_partition() {
+        let mut rng = Rng::new(51);
+        let (k, v) = rand_kv(&mut rng, 21, 4);
+        let kv = PreparedKv::with_block_rows(k.clone(), v.clone(), 8);
+        assert_eq!(kv.chunks().len(), 3);
+        assert_eq!(
+            kv.chunks().iter().map(|c| c.rows()).collect::<Vec<_>>(),
+            vec![8, 8, 5]
+        );
+        assert_eq!(kv.blocks(), fixed_block_ranges(21, 8));
+        // row accessors agree with the source matrices across chunks
+        for r in 0..21 {
+            assert_eq!(kv.k_row(r), k.row(r), "k row {r}");
+            assert_eq!(kv.v_row(r), v.row(r), "v row {r}");
+        }
+        assert_eq!(kv.k_mat().data, k.data);
+        assert_eq!(kv.v_mat().data, v.data);
+        assert_eq!(kv.v_lns_mat(), convert_values(&v));
+        assert_eq!(kv.resident_bytes(), 21 * row_bytes(4, 4));
+    }
+
+    #[test]
     fn append_grows_tail_block_until_full() {
         let mut rng = Rng::new(19);
         let (k, v) = rand_kv(&mut rng, 3, 4);
@@ -488,6 +765,7 @@ mod tests {
         kv.append(&k4, &v4); // 9 rows
         assert_eq!(kv.blocks(), &[(0, 4), (4, 8), (8, 9)]);
         assert_eq!(kv.n(), 9);
+        assert_eq!(kv.chunks().iter().map(|c| c.rows()).collect::<Vec<_>>(), vec![4, 4, 1]);
     }
 
     #[test]
@@ -504,9 +782,9 @@ mod tests {
         }
         assert_eq!(at, 21);
         assert_eq!(grown.n(), full.n());
-        assert_eq!(grown.k().data, full.k().data);
-        assert_eq!(grown.v().data, full.v().data);
-        assert_eq!(grown.v_lns(), full.v_lns());
+        assert_eq!(grown.k_mat().data, full.k_mat().data);
+        assert_eq!(grown.v_mat().data, full.v_mat().data);
+        assert_eq!(grown.v_lns_mat(), full.v_lns_mat());
         assert_eq!(grown.blocks(), full.blocks());
         let q = Mat::from_vec(2, 6, rng.normal_vec(12)).round_bf16();
         assert_eq!(grown.attention(&q, None, None).data, full.attention(&q, None, None).data);
@@ -529,9 +807,29 @@ mod tests {
         let grown = base.appended(&k2, &v2);
         assert_eq!(base.n(), 6, "copy-on-write must not mutate the shared base");
         assert_eq!(grown.n(), 8);
-        assert_eq!(&grown.k().data[..k.data.len()], &k.data[..]);
-        assert_eq!(&grown.k().data[k.data.len()..], &k2.data[..]);
-        assert_eq!(grown.v_lns().row_vec(7), value_to_lns(v2.row(1), &mut None));
+        let gk = grown.k_mat();
+        assert_eq!(&gk.data[..k.data.len()], &k.data[..]);
+        assert_eq!(&gk.data[k.data.len()..], &k2.data[..]);
+        assert_eq!(grown.v_lns_mat().row_vec(7), value_to_lns(v2.row(1), &mut None));
+    }
+
+    #[test]
+    fn filled_chunks_are_shared_across_generations() {
+        // the whole point of the chunk table: an append clones only the
+        // tail chunk — every filled chunk is pointer-shared with the base
+        let mut rng = Rng::new(37);
+        let (k, v) = rand_kv(&mut rng, 10, 4);
+        let base = PreparedKv::with_block_rows(k, v, 4); // chunks 4/4/2
+        let (k1, v1) = rand_kv(&mut rng, 1, 4);
+        let grown = base.appended(&k1, &v1); // chunks 4/4/3
+        assert!(Arc::ptr_eq(&base.chunks()[0], &grown.chunks()[0]));
+        assert!(Arc::ptr_eq(&base.chunks()[1], &grown.chunks()[1]));
+        assert!(
+            !Arc::ptr_eq(&base.chunks()[2], &grown.chunks()[2]),
+            "the written tail chunk must have been copied, not mutated"
+        );
+        assert_eq!(base.chunks()[2].rows(), 2, "shared base tail untouched");
+        assert_eq!(grown.chunks()[2].rows(), 3);
     }
 
     #[test]
@@ -547,4 +845,26 @@ mod tests {
         let bb = super::super::hfa::attention_blocked(&q, &k, &v, 4, None, &mut None);
         assert_eq!(ab.data, bb.data);
     }
+
+    #[test]
+    fn chunked_attention_bit_identical_across_chunkings() {
+        // chunk capacity is a storage choice, not a numeric one: every
+        // entry point must produce identical bits whatever the chunking,
+        // including count-driven blocks that straddle chunk boundaries
+        let mut rng = Rng::new(41);
+        let (k, v) = rand_kv(&mut rng, 37, 8);
+        let q = Mat::from_vec(4, 8, rng.normal_vec(32)).round_bf16();
+        let reference = PreparedKv::with_block_rows(k.clone(), v.clone(), 37);
+        let rf = reference.attention(&q, None, None).data;
+        let rb = reference.attention_blocked(&q, 4, None).data;
+        for br in [1usize, 3, 8, 16, 64] {
+            let kv = PreparedKv::with_block_rows(k.clone(), v.clone(), br);
+            assert_eq!(kv.attention(&q, None, None).data, rf, "full, br={br}");
+            assert_eq!(kv.attention_blocked(&q, 4, None).data, rb, "blocked, br={br}");
+        }
+    }
+
+    // NOTE: kv_copy_bytes assertions live in `rust/tests/append_traffic.rs`
+    // (sole test in its binary) — the process-wide counter cannot be
+    // asserted here, where unit tests run concurrently.
 }

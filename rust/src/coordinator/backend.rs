@@ -5,6 +5,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::attention::PreparedKv;
 use crate::coordinator::kvstore::KvEntry;
 use crate::hw::Accelerator;
 use crate::runtime::LoadedExecutable;
@@ -76,12 +77,20 @@ impl Backend for SimBackend {
 }
 
 /// Backend running an AOT-compiled PJRT attention kernel.  The kernel has
-/// a fixed batch dimension; smaller batches are padded and sliced.
+/// a fixed batch dimension; smaller batches are padded and sliced.  The
+/// kernel wants dense contiguous K/V operands, so the session's chunked
+/// prepared form is materialized once per session swap and cached by
+/// `Arc` identity (same policy as `SimBackend`'s loaded-session cache).
 pub struct PjrtBackend {
     exe: Arc<LoadedExecutable>,
     head_dim: usize,
     seq_len: usize,
     batch: usize,
+    /// The loaded session's prepared set and its dense K/V planes.  The
+    /// `Arc` is retained so pointer-identity comparison is ABA-safe (a
+    /// freed session's address can never be reused while we hold it) —
+    /// same policy as `SimBackend`/`Accelerator::load_prepared`.
+    loaded: Option<(Arc<PreparedKv>, Mat, Mat)>,
 }
 
 impl PjrtBackend {
@@ -91,7 +100,7 @@ impl PjrtBackend {
         seq_len: usize,
         batch: usize,
     ) -> PjrtBackend {
-        PjrtBackend { exe, head_dim, seq_len, batch }
+        PjrtBackend { exe, head_dim, seq_len, batch, loaded: None }
     }
 
     /// Factory that loads the kernel on the worker thread (its own PJRT
@@ -134,22 +143,34 @@ impl Backend for PjrtBackend {
 
     fn compute(&mut self, kv: &KvEntry, q: &Mat) -> Result<Mat> {
         anyhow::ensure!(q.rows <= self.batch, "batch {} exceeds kernel {}", q.rows, self.batch);
+        let prepared = kv.prepared();
         // the AOT kernel has a *static* (seq_len, head_dim) K/V shape: a
-        // short-prefill or mid-decode session (KvStore now allows any
+        // short-prefill or mid-decode session (KvStore allows any
         // residency up to capacity) cannot be shipped to it
         anyhow::ensure!(
-            kv.k().rows == self.seq_len && kv.k().cols == self.head_dim,
+            prepared.n() == self.seq_len && prepared.d() == self.head_dim,
             "session KV {}x{} does not match the compiled kernel's static {}x{} \
              (partial/decode sessions need a sim backend or a matching kernel)",
-            kv.k().rows,
-            kv.k().cols,
+            prepared.n(),
+            prepared.d(),
             self.seq_len,
             self.head_dim
         );
+        // materialize the chunked session into the kernel's dense layout
+        // once per swap (retained-Arc identity — same caching as
+        // SimBackend, which keeps the loaded Arc inside the accelerator)
+        let stale = match &self.loaded {
+            Some((p, _, _)) => !Arc::ptr_eq(p, prepared),
+            None => true,
+        };
+        if stale {
+            self.loaded = Some((prepared.clone(), prepared.k_mat(), prepared.v_mat()));
+        }
+        let (_, dense_k, dense_v) = self.loaded.as_ref().expect("just loaded");
         // pad to the kernel's static batch
         let mut padded = Mat::zeros(self.batch, self.head_dim);
         padded.data[..q.data.len()].copy_from_slice(&q.data);
-        let out = self.exe.run_attention(&padded, kv.k(), kv.v())?;
+        let out = self.exe.run_attention(&padded, dense_k, dense_v)?;
         Ok(out.rows_slice(0, q.rows))
     }
 

@@ -116,6 +116,7 @@ mod tests {
             session: session.into(),
             payload: Payload::Query(vec![0.0; 4]),
             arrived: Instant::now(),
+            pinned: false,
             reply: tx,
         }
     }
@@ -127,6 +128,7 @@ mod tests {
             session: session.into(),
             payload: Payload::Append { k_rows: Mat::zeros(1, 4), v_rows: Mat::zeros(1, 4) },
             arrived: Instant::now(),
+            pinned: false,
             reply: tx,
         }
     }

@@ -1,9 +1,25 @@
 //! Session-keyed KV buffer manager.
 //!
-//! Models the accelerator's on-chip KV SRAM: a bounded number of resident
-//! sessions (each one `seq_len x d` K and V), LRU eviction when capacity
-//! is exceeded — the coordinator-level counterpart of the paper's
-//! "KV sub-blocks preloaded into local buffers" assumption (Section III-B).
+//! Models the accelerator's on-chip KV SRAM: resident sessions are
+//! bounded by a **byte budget** (not a session count), LRU-evicted when
+//! the budget is exceeded — the coordinator-level counterpart of the
+//! paper's "KV sub-blocks preloaded into local buffers" assumption
+//! (Section III-B).  A session's charge is its prepared form's
+//! chunk-granular plane bytes ([`PreparedKv::resident_bytes`]), so many
+//! short-prefill decode sessions fit where one full session would; the
+//! charge grows as appends land.
+//!
+//! Admission is explicit: a `put`/`append` that cannot fit inside the
+//! budget even after evicting every unpinned session **fails** instead
+//! of silently dropping someone else's resident state; the error
+//! surfaces through `Server::submit_append` acknowledgements and
+//! `KvStore::put` results.
+//!
+//! Sessions with in-flight work are **pinned** ([`KvStore::pin`] at
+//! enqueue, [`KvStore::unpin`] at delivery): a pinned session is never
+//! an eviction victim, so a query queued in the batcher can no longer
+//! race an eviction into a spurious "unknown session" failure (pinned by
+//! `rust/tests/byte_budget.rs`).
 //!
 //! Each resident entry carries an [`Arc<PreparedKv>`] built **once** at
 //! `put()`: V's linear->log conversion is paid at session load, never per
@@ -14,23 +30,26 @@
 //! Autoregressive decode grows a session one (or a few) rows per step via
 //! [`KvStore::append`]: the new rows are BF16-rounded and linear->log
 //! converted, then a fresh `Arc<PreparedKv>` built from the old one is
-//! swapped in — resident rows are never re-rounded or re-converted, so
-//! per-step cost tracks the appended rows, not the sequence length
-//! (pinned by `rust/tests/decode_append.rs`).  `seq_len` is the maximum a
-//! session may grow to; `put()` accepts any prefill length up to it.
+//! swapped in.  The prepared form is a table of `Arc`-shared fixed-size
+//! chunks, so the swap-in copies only the chunk table and the
+//! partially-filled tail chunk — per-step memory traffic tracks the
+//! appended rows, not the sequence length (pinned by
+//! `rust/tests/decode_append.rs` and `rust/tests/append_traffic.rs`).
+//! `seq_len` is the maximum a session may grow to; `put()` accepts any
+//! prefill length up to it.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
-use crate::attention::prepared::PreparedKv;
+use crate::attention::prepared::{row_bytes, PreparedKv};
 use crate::Mat;
 
 /// One resident session's KV data.  A single `Arc<PreparedKv>` is the
 /// whole state: it owns the raw BF16-rounded matrices (PJRT backends
-/// ship those to the kernel) *and* the prepared log-domain lanes the
-/// simulated accelerator executes against — so the raw and prepared
+/// materialize those for the kernel) *and* the prepared log-domain lanes
+/// the simulated accelerator executes against — so the raw and prepared
 /// views can never disagree.
 #[derive(Clone)]
 pub struct KvEntry {
@@ -47,24 +66,21 @@ impl KvEntry {
     pub fn prepared(&self) -> &Arc<PreparedKv> {
         &self.prepared
     }
-
-    pub fn k(&self) -> &Mat {
-        self.prepared.k()
-    }
-
-    pub fn v(&self) -> &Mat {
-        self.prepared.v()
-    }
 }
 
 struct Slot {
     entry: KvEntry,
     /// Generation stamp of the last touch; smallest = LRU victim.
     last_used: u64,
+    /// Byte charge of this session against the store budget.
+    bytes: usize,
+    /// Outstanding in-flight references; a pinned slot is never evicted.
+    pins: u32,
 }
 
 struct Inner {
-    capacity: usize,
+    budget_bytes: usize,
+    used_bytes: usize,
     entries: HashMap<String, Slot>,
     /// Monotonic access generation counter.
     tick: u64,
@@ -77,25 +93,71 @@ impl Inner {
         self.tick
     }
 
-    fn evict_to_capacity(&mut self) {
-        while self.entries.len() > self.capacity {
+    /// Make room for `new_bytes` to be charged to `session` (whose
+    /// current charge, if resident, is about to be released): evict
+    /// unpinned LRU victims — never `session` itself — until the budget
+    /// holds, or fail if only pinned sessions remain.  Call *before*
+    /// applying the insert/replace so a rejected write leaves the store
+    /// untouched.
+    fn admit(&mut self, session: &str, new_bytes: usize) -> Result<()> {
+        if new_bytes > self.budget_bytes {
+            bail!(
+                "session {session:?} needs {new_bytes} B, exceeding the whole KV byte budget \
+                 ({} B)",
+                self.budget_bytes
+            );
+        }
+        loop {
+            let replaced = self.entries.get(session).map(|s| s.bytes).unwrap_or(0);
+            if self.used_bytes - replaced + new_bytes <= self.budget_bytes {
+                return Ok(());
+            }
             let victim = self
                 .entries
                 .iter()
+                .filter(|(name, slot)| slot.pins == 0 && name.as_str() != session)
                 .min_by_key(|(_, slot)| slot.last_used)
                 .map(|(name, _)| name.clone());
             match victim {
                 Some(name) => {
-                    self.entries.remove(&name);
+                    let gone = self.entries.remove(&name).expect("victim resident");
+                    self.used_bytes -= gone.bytes;
                     self.evictions += 1;
                 }
-                None => break,
+                None => bail!(
+                    "KV byte budget exhausted admitting {session:?} ({new_bytes} B): \
+                     {} of {} B used and every other resident session is pinned",
+                    self.used_bytes - replaced,
+                    self.budget_bytes
+                ),
+            }
+        }
+    }
+
+    /// Charge `bytes` to `session`, replacing its entry (pins and any
+    /// prior charge carry over correctly).
+    fn install(&mut self, session: &str, entry: KvEntry, bytes: usize) {
+        let stamp = self.next_tick();
+        match self.entries.get_mut(session) {
+            Some(slot) => {
+                self.used_bytes = self.used_bytes - slot.bytes + bytes;
+                slot.entry = entry;
+                slot.bytes = bytes;
+                slot.last_used = stamp;
+            }
+            None => {
+                self.used_bytes += bytes;
+                self.entries.insert(
+                    session.to_string(),
+                    Slot { entry, last_used: stamp, bytes, pins: 0 },
+                );
             }
         }
     }
 }
 
-/// Thread-safe KV session store with generation-counter LRU eviction.
+/// Thread-safe KV session store with byte-budget LRU eviction and
+/// in-flight pinning.
 pub struct KvStore {
     seq_len: usize,
     head_dim: usize,
@@ -103,13 +165,23 @@ pub struct KvStore {
 }
 
 impl KvStore {
-    /// `capacity`: max resident sessions (SRAM budget / per-session bytes).
+    /// Budget expressed in sessions: room for `capacity` *full*
+    /// (`seq_len`-row) sessions' prepared bytes.  Shorter sessions
+    /// charge less, so more of them fit — eviction is by bytes, not
+    /// count.
     pub fn new(seq_len: usize, head_dim: usize, capacity: usize) -> KvStore {
+        let full = seq_len.max(1) * row_bytes(head_dim, head_dim);
+        KvStore::with_byte_budget(seq_len, head_dim, capacity.max(1) * full)
+    }
+
+    /// Budget expressed directly in bytes of prepared KV planes.
+    pub fn with_byte_budget(seq_len: usize, head_dim: usize, budget_bytes: usize) -> KvStore {
         KvStore {
             seq_len,
             head_dim,
             inner: Mutex::new(Inner {
-                capacity: capacity.max(1),
+                budget_bytes: budget_bytes.max(1),
+                used_bytes: 0,
                 entries: HashMap::new(),
                 tick: 0,
                 evictions: 0,
@@ -117,7 +189,9 @@ impl KvStore {
         }
     }
 
-    /// Bytes one session occupies (BF16 K + V).
+    /// Modelled SRAM bytes of one full session (BF16 K + V) — the
+    /// hardware-facing figure; the eviction budget accounts the host
+    /// prepared-plane bytes instead (see [`KvStore::budget_bytes`]).
     pub fn session_bytes(&self) -> usize {
         2 * self.seq_len * self.head_dim * 2
     }
@@ -133,7 +207,9 @@ impl KvStore {
     /// Insert (or replace) a session's KV matrices.  The prefill may be
     /// any length `1..=seq_len` (a decode session grows the rest via
     /// [`KvStore::append`]).  The BF16 rounding and the one-time V->LNS
-    /// preparation happen *outside* the lock.
+    /// preparation happen *outside* the lock.  Fails (without touching
+    /// the store) when the session cannot fit inside the byte budget
+    /// after evicting every unpinned resident session.
     pub fn put(&self, session: &str, k: Mat, v: Mat) -> Result<()> {
         if !(1..=self.seq_len).contains(&k.rows) || k.cols != self.head_dim {
             bail!(
@@ -145,26 +221,29 @@ impl KvStore {
             bail!("V shape mismatch");
         }
         let entry = KvEntry::new(k.round_bf16(), v.round_bf16());
+        let bytes = entry.prepared.resident_bytes();
         let mut g = self.inner.lock().unwrap();
-        let stamp = g.next_tick();
-        g.entries.insert(session.to_string(), Slot { entry, last_used: stamp });
-        g.evict_to_capacity();
+        g.admit(session, bytes)?;
+        g.install(session, entry, bytes);
         Ok(())
     }
 
     /// Append decode-step rows to a resident session: BF16-round the new
     /// rows, convert **only them** to the log domain, and swap in a new
-    /// [`Arc<PreparedKv>`] built from the old one (copy-on-write — the
-    /// resident rows are memcpy'd, never re-rounded or re-converted).
-    /// In-flight batches holding the old `Arc` keep computing against the
-    /// pre-append snapshot; requests arriving after this returns see the
-    /// grown KV.  Refreshes the session's LRU stamp.
+    /// [`Arc<PreparedKv>`] built from the old one (copy-on-write at chunk
+    /// granularity — filled chunks stay shared, only the tail chunk and
+    /// the chunk table are copied).  In-flight batches holding the old
+    /// `Arc` keep computing against the pre-append snapshot; requests
+    /// arriving after this returns see the grown KV.  Refreshes the
+    /// session's LRU stamp, and fails — leaving the session untouched —
+    /// when the grown charge cannot fit inside the byte budget after
+    /// evicting every unpinned *other* session.
     ///
-    /// The O(resident) plane copy and the per-row conversion run
-    /// **outside** the store lock (other sessions' `get`/`put` are never
-    /// stalled behind a long decode session); the swap-in re-checks by
-    /// `Arc` identity that the session was not concurrently replaced and
-    /// retries against the new base if it was.
+    /// The tail-chunk copy and the per-row conversion run **outside**
+    /// the store lock (other sessions' `get`/`put` are never stalled
+    /// behind a decode session); the swap-in re-checks by `Arc` identity
+    /// that the session was not concurrently replaced and retries
+    /// against the new base if it was.
     pub fn append(&self, session: &str, k_rows: Mat, v_rows: Mat) -> Result<()> {
         if k_rows.cols != self.head_dim || v_rows.cols != self.head_dim {
             bail!(
@@ -199,20 +278,19 @@ impl KvStore {
             }
             // rebuild outside the lock
             let next = Arc::new(base.appended(&kb, &vb));
+            let bytes = next.resident_bytes();
             // swap in, unless the session was replaced meanwhile (a
             // concurrent put/append won the race) — then retry on the
             // new base so no write is ever silently dropped
             let mut g = self.inner.lock().unwrap();
-            let stamp = g.next_tick();
-            let slot = match g.entries.get_mut(session) {
-                Some(slot) => slot,
+            match g.entries.get(session) {
+                Some(slot) if Arc::ptr_eq(&slot.entry.prepared, &base) => {}
+                Some(_) => continue,
                 None => bail!("unknown session {session:?}"),
-            };
-            if Arc::ptr_eq(&slot.entry.prepared, &base) {
-                slot.entry = KvEntry { prepared: next };
-                slot.last_used = stamp;
-                return Ok(());
             }
+            g.admit(session, bytes)?;
+            g.install(session, KvEntry { prepared: next }, bytes);
+            return Ok(());
         }
     }
 
@@ -225,8 +303,53 @@ impl KvStore {
         Some(slot.entry.clone())
     }
 
+    /// Mark a session as having in-flight work: refreshes its LRU stamp
+    /// and excludes it from eviction until the matching [`KvStore::unpin`].
+    /// Returns `false` (no pin taken) when the session is not resident.
+    pub fn pin(&self, session: &str) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        let stamp = g.next_tick();
+        match g.entries.get_mut(session) {
+            Some(slot) => {
+                slot.pins += 1;
+                slot.last_used = stamp;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Release one in-flight pin (the session becomes evictable again
+    /// once its pin count reaches zero).  A no-op for unknown sessions.
+    pub fn unpin(&self, session: &str) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(slot) = g.entries.get_mut(session) {
+            slot.pins = slot.pins.saturating_sub(1);
+        }
+    }
+
+    /// Is the session resident?  (No LRU refresh — diagnostics only.)
+    pub fn contains(&self, session: &str) -> bool {
+        self.inner.lock().unwrap().entries.contains_key(session)
+    }
+
+    /// Byte charge of one resident session (diagnostics only).
+    pub fn session_resident_bytes(&self, session: &str) -> Option<usize> {
+        self.inner.lock().unwrap().entries.get(session).map(|s| s.bytes)
+    }
+
     pub fn resident(&self) -> usize {
         self.inner.lock().unwrap().entries.len()
+    }
+
+    /// Total byte charge of all resident sessions.
+    pub fn used_bytes(&self) -> usize {
+        self.inner.lock().unwrap().used_bytes
+    }
+
+    /// The eviction budget, in prepared-plane bytes.
+    pub fn budget_bytes(&self) -> usize {
+        self.inner.lock().unwrap().budget_bytes
     }
 
     pub fn evictions(&self) -> u64 {
@@ -248,12 +371,11 @@ mod tests {
         let (k, v) = kv(16, 8, 1.0);
         store.put("a", k, v).unwrap();
         let e = store.get("a").unwrap();
-        assert_eq!(e.k().at(0, 0), 1.0);
-        assert_eq!(e.v().at(0, 0), -1.0);
-        // the raw accessors alias the prepared form's own matrices
-        assert!(std::ptr::eq(e.k(), e.prepared().k()));
-        assert!(std::ptr::eq(e.v(), e.prepared().v()));
+        assert_eq!(e.prepared().k_row(0)[0], 1.0);
+        assert_eq!(e.prepared().v_row(0)[0], -1.0);
         assert_eq!(e.prepared().n(), 16);
+        assert_eq!(store.used_bytes(), 16 * row_bytes(8, 8));
+        assert_eq!(store.session_resident_bytes("a"), Some(16 * row_bytes(8, 8)));
     }
 
     #[test]
@@ -283,10 +405,12 @@ mod tests {
         reference.put("s", full_k, full_v).unwrap();
         let full = reference.get("s").unwrap();
         assert_eq!(grown.prepared().n(), 10);
-        assert_eq!(grown.k().data, full.k().data);
-        assert_eq!(grown.v().data, full.v().data);
-        assert_eq!(grown.prepared().v_lns(), full.prepared().v_lns());
+        assert_eq!(grown.prepared().k_mat().data, full.prepared().k_mat().data);
+        assert_eq!(grown.prepared().v_mat().data, full.prepared().v_mat().data);
+        assert_eq!(grown.prepared().v_lns_mat(), full.prepared().v_lns_mat());
         assert_eq!(grown.prepared().blocks(), full.prepared().blocks());
+        // the byte charge followed the growth
+        assert_eq!(store.session_resident_bytes("s"), Some(10 * row_bytes(4, 4)));
     }
 
     #[test]
@@ -310,15 +434,16 @@ mod tests {
 
     #[test]
     fn append_refreshes_lru() {
-        let store = KvStore::new(4, 4, 2);
-        let (k, v) = kv(2, 4, 0.0);
+        let store = KvStore::new(8, 4, 2); // budget: two full 8-row sessions
+        let (k, v) = kv(6, 4, 0.0);
         store.put("a", k.clone(), v.clone()).unwrap();
-        store.put("b", k.clone(), v.clone()).unwrap();
+        let (kf, vf) = kv(8, 4, 0.0);
+        store.put("b", kf.clone(), vf.clone()).unwrap();
         let (k1, v1) = kv(1, 4, 1.0);
-        store.append("a", k1, v1).unwrap(); // refresh a
-        store.put("c", k, v).unwrap(); // evicts b, not a
-        assert!(store.get("a").is_some());
-        assert!(store.get("b").is_none());
+        store.append("a", k1, v1).unwrap(); // refresh a (now 7 rows)
+        store.put("c", kf, vf).unwrap(); // 7+8+8 > 16 rows: evicts b, not a
+        assert!(store.contains("a"));
+        assert!(!store.contains("b"));
     }
 
     #[test]
@@ -348,6 +473,85 @@ mod tests {
     }
 
     #[test]
+    fn byte_budget_packs_short_sessions_where_count_lru_would_evict() {
+        // the budget holds two *full* 16-row sessions; four 8-row decode
+        // prefills fit simultaneously (the old count-based store would
+        // have started evicting at the third)
+        let store = KvStore::new(16, 4, 2);
+        for name in ["a", "b", "c", "d"] {
+            let (k, v) = kv(8, 4, 1.0);
+            store.put(name, k, v).unwrap();
+        }
+        assert_eq!(store.resident(), 4, "byte budget must pack partial sessions");
+        assert_eq!(store.evictions(), 0);
+        assert_eq!(store.used_bytes(), 4 * 8 * row_bytes(4, 4));
+        // a fifth spills the budget: exactly one eviction (the LRU)
+        let (k, v) = kv(8, 4, 1.0);
+        store.put("e", k, v).unwrap();
+        assert_eq!(store.evictions(), 1);
+        assert!(!store.contains("a"));
+        assert!(store.contains("e"));
+    }
+
+    #[test]
+    fn oversized_session_is_rejected_not_silently_evicting_everyone() {
+        let store = KvStore::with_byte_budget(32, 4, 10 * row_bytes(4, 4));
+        let (k, v) = kv(8, 4, 1.0);
+        store.put("resident", k, v).unwrap();
+        let (k, v) = kv(16, 4, 2.0); // 16 rows > 10-row budget
+        let err = store.put("huge", k, v).unwrap_err();
+        assert!(err.to_string().contains("byte budget"), "{err}");
+        assert!(store.contains("resident"), "rejected put must not evict anyone");
+        assert_eq!(store.evictions(), 0);
+    }
+
+    #[test]
+    fn pinned_sessions_are_never_evicted() {
+        let store = KvStore::new(4, 4, 2); // budget: two full sessions
+        let (k, v) = kv(4, 4, 1.0);
+        store.put("pinned", k.clone(), v.clone()).unwrap();
+        assert!(store.pin("pinned"));
+        store.put("other", k.clone(), v.clone()).unwrap();
+        // a third full session must evict "other" (LRU among unpinned),
+        // even though "pinned" is older by stamp without the pin refresh
+        store.get("other"); // make "other" the most recently used
+        store.put("third", k.clone(), v.clone()).unwrap();
+        assert!(store.contains("pinned"), "pinned session evicted");
+        assert!(!store.contains("other"), "unpinned LRU should have been the victim");
+        // once every other session is pinned, admission fails loudly
+        assert!(store.pin("third"));
+        let err = store.put("fourth", k.clone(), v.clone()).unwrap_err();
+        assert!(err.to_string().contains("pinned"), "{err}");
+        // unpinning makes room again
+        store.unpin("third");
+        store.put("fourth", k, v).unwrap();
+        assert!(!store.contains("third"));
+        assert!(store.contains("pinned"));
+        // balanced unpin on the survivor
+        store.unpin("pinned");
+        assert!(!store.pin("missing"), "pin of a non-resident session takes no pin");
+    }
+
+    #[test]
+    fn append_budget_overflow_fails_cleanly_when_others_pinned() {
+        // budget: 8 rows total; "grow" at 4 rows, "pinned" at 4 rows
+        let store = KvStore::with_byte_budget(8, 4, 8 * row_bytes(4, 4));
+        let (k, v) = kv(4, 4, 1.0);
+        store.put("grow", k.clone(), v.clone()).unwrap();
+        store.put("pinned", k, v).unwrap();
+        assert!(store.pin("pinned"));
+        let (k1, v1) = kv(1, 4, 2.0);
+        let err = store.append("grow", k1.clone(), v1.clone()).unwrap_err();
+        assert!(err.to_string().contains("pinned"), "{err}");
+        assert_eq!(store.get("grow").unwrap().prepared().n(), 4, "failed append must not apply");
+        // releasing the pin lets the same append evict and land
+        store.unpin("pinned");
+        store.append("grow", k1, v1).unwrap();
+        assert_eq!(store.get("grow").unwrap().prepared().n(), 5);
+        assert!(!store.contains("pinned"));
+    }
+
+    #[test]
     fn get_refreshes_lru() {
         let store = KvStore::new(4, 4, 2);
         let (k, v) = kv(4, 4, 0.0);
@@ -373,6 +577,18 @@ mod tests {
     }
 
     #[test]
+    fn replacing_a_session_releases_its_old_charge() {
+        let store = KvStore::new(16, 4, 2);
+        let (k, v) = kv(16, 4, 1.0);
+        store.put("a", k, v).unwrap();
+        assert_eq!(store.used_bytes(), 16 * row_bytes(4, 4));
+        let (k, v) = kv(2, 4, 1.0);
+        store.put("a", k, v).unwrap(); // shrinks
+        assert_eq!(store.used_bytes(), 2 * row_bytes(4, 4));
+        assert_eq!(store.resident(), 1);
+    }
+
+    #[test]
     fn session_bytes_matches_bf16_kv() {
         let store = KvStore::new(1024, 64, 1);
         assert_eq!(store.session_bytes(), 2 * 1024 * 64 * 2);
@@ -382,9 +598,10 @@ mod tests {
     fn concurrent_gets_and_puts_stay_consistent() {
         // request-path contention: many readers refreshing LRU stamps
         // while writers insert/evict.  The store must never exceed
-        // capacity and never hand out a torn entry — every session name
-        // encodes its fill value, so any `Some` result is verifiable.
+        // its byte budget and never hand out a torn entry — every session
+        // name encodes its fill value, so any `Some` result is verifiable.
         let store = Arc::new(KvStore::new(8, 4, 3));
+        let budget = store.budget_bytes();
         let fill = |s: usize| s as f32 + 1.0;
         let mut handles = Vec::new();
         for t in 0..6usize {
@@ -398,18 +615,18 @@ mod tests {
                         store.put(&format!("sess-{s}"), k, v).unwrap();
                     }
                     if let Some(e) = store.get(&format!("sess-{s}")) {
-                        assert_eq!(e.k().at(0, 0), fill(s), "torn entry for sess-{s}");
-                        assert_eq!(e.v().at(0, 0), -fill(s));
+                        assert_eq!(e.prepared().k_row(0)[0], fill(s), "torn entry for sess-{s}");
+                        assert_eq!(e.prepared().v_row(0)[0], -fill(s));
                         assert_eq!(e.prepared().n(), 8);
                         hits += 1;
                     }
-                    assert!(store.resident() <= 3);
+                    assert!(store.used_bytes() <= budget);
                 }
                 hits
             }));
         }
         let hits: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
         assert!(hits > 0, "at least some gets must land on resident sessions");
-        assert!(store.resident() <= 3, "resident {} > capacity", store.resident());
+        assert!(store.resident() <= 3, "resident {} sessions exceed budget", store.resident());
     }
 }

@@ -25,6 +25,11 @@ pub struct AttentionRequest {
     pub session: String,
     pub payload: Payload,
     pub arrived: Instant,
+    /// Whether ingress took a [`crate::coordinator::KvStore::pin`] on the
+    /// session for this request (it was resident at submit time).  The
+    /// pin keeps the session from being evicted while the request is
+    /// queued; whoever delivers the response releases it.
+    pub pinned: bool,
     /// Completion channel.
     pub reply: Sender<AttentionResponse>,
 }

@@ -8,12 +8,23 @@
 //! `append`/`call` to run an autoregressive decode loop whose KV
 //! conversion cost tracks the new tokens only.
 //!
+//! Ingress **pins** the request's session in the KV store
+//! (`KvStore::pin`), and the pin is released when the response is
+//! delivered — so a session with queries queued in the batcher can no
+//! longer be LRU-evicted out from under them into spurious "unknown
+//! session" failures.  KV admission-control failures (byte budget
+//! exceeded, capacity overflow) surface as error responses on the
+//! submitting channel.
+//!
 //! `start` fails fast: if any backend factory errors on its worker
 //! thread, the failure is propagated out instead of silently serving
 //! with fewer (possibly zero) workers.
 //!
 //! Shutdown is cooperative: dropping the `Server` closes the ingress,
-//! drains in-flight batches and joins all threads.
+//! drains in-flight batches and joins all threads.  Requests that can no
+//! longer be served — queued behind the shutdown message, or formed into
+//! a batch when every worker is gone — receive an **explicit error
+//! response** instead of a silently dropped reply channel.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{
@@ -46,6 +57,10 @@ pub struct Server {
     pub metrics: Arc<Metrics>,
     pub kv: Arc<KvStore>,
     head_dim: usize,
+    /// The batcher hands the ingress receiver back here on exit, so
+    /// shutdown can drain requests that raced into the queue after the
+    /// batcher's final sweep (see [`Server::shutdown`]).
+    ingress_rx: Arc<Mutex<Option<Receiver<Msg>>>>,
 }
 
 impl Server {
@@ -71,9 +86,12 @@ impl Server {
         let window = Duration::from_micros(cfg.batch_window_us);
         let max_batch = cfg.max_batch;
         let m = metrics.clone();
+        let kv_batcher = kv.clone();
+        let ingress_rx: Arc<Mutex<Option<Receiver<Msg>>>> = Arc::new(Mutex::new(None));
+        let rx_back = ingress_rx.clone();
         let batcher_handle = std::thread::Builder::new()
             .name("hfa-batcher".into())
-            .spawn(move || batcher_loop(in_rx, batch_tx, max_batch, window, m))?;
+            .spawn(move || batcher_loop(in_rx, batch_tx, max_batch, window, m, kv_batcher, rx_back))?;
 
         // worker threads; each reports its backend-init outcome before
         // entering the serve loop
@@ -130,6 +148,7 @@ impl Server {
             metrics,
             kv,
             head_dim,
+            ingress_rx,
         })
     }
 
@@ -184,11 +203,16 @@ impl Server {
         payload: Payload,
     ) -> Result<std::sync::mpsc::Receiver<AttentionResponse>> {
         let (tx, rx) = channel();
+        // pin the session so the LRU cannot evict it while this request
+        // sits in the batcher (released at delivery); a not-yet-resident
+        // session takes no pin and fails at serve time as before
+        let pinned = self.kv.pin(session);
         let req = AttentionRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             session: session.to_string(),
             payload,
             arrived: Instant::now(),
+            pinned,
             reply: tx,
         };
         match self.ingress.try_send(Msg::Req(req)) {
@@ -197,10 +221,18 @@ impl Server {
                 Ok(rx)
             }
             Err(TrySendError::Full(_)) => {
+                if pinned {
+                    self.kv.unpin(session);
+                }
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 anyhow::bail!("ingress queue full (backpressure)")
             }
-            Err(TrySendError::Disconnected(_)) => anyhow::bail!("server stopped"),
+            Err(TrySendError::Disconnected(_)) => {
+                if pinned {
+                    self.kv.unpin(session);
+                }
+                anyhow::bail!("server stopped")
+            }
         }
     }
 
@@ -225,6 +257,23 @@ impl Server {
         for h in self.threads.drain(..) {
             let _ = h.join();
         }
+        // authoritative residue drain: after the join no submit can race
+        // (shutdown/drop hold the Server exclusively and the threads are
+        // gone), so any request still sitting in the ingress queue gets
+        // an explicit error — and its session pin released — instead of
+        // a silently dropped reply channel
+        let rx = self.ingress_rx.lock().unwrap().take();
+        if let Some(rx) = rx {
+            loop {
+                match rx.try_recv() {
+                    Ok(Msg::Req(req)) => {
+                        fail_request(req, SHUTDOWN_ERROR, &self.kv, &self.metrics)
+                    }
+                    Ok(Msg::Shutdown) => {}
+                    Err(_) => break,
+                }
+            }
+        }
     }
 }
 
@@ -236,12 +285,18 @@ impl Drop for Server {
     }
 }
 
+/// Error delivered to requests the serving loop can no longer execute.
+const SHUTDOWN_ERROR: &str = "server shutting down: request dropped before serving";
+const WORKERS_GONE_ERROR: &str = "no workers available (server shutting down?)";
+
 fn batcher_loop(
     in_rx: Receiver<Msg>,
     batch_tx: SyncSender<Batch>,
     max_batch: usize,
     window: Duration,
     metrics: Arc<Metrics>,
+    kv: Arc<KvStore>,
+    rx_back: Arc<Mutex<Option<Receiver<Msg>>>>,
 ) {
     let mut batcher = Batcher::new(max_batch, window);
     let tick = window.max(Duration::from_micros(50));
@@ -249,27 +304,73 @@ fn batcher_loop(
         match in_rx.recv_timeout(tick) {
             Ok(Msg::Req(req)) => {
                 if let Some(b) = batcher.push(req) {
-                    emit(&batch_tx, b, &metrics);
+                    emit(&batch_tx, b, &metrics, &kv);
                 }
             }
-            Ok(Msg::Shutdown) => break,
+            Ok(Msg::Shutdown) => {
+                // requests that raced into the queue behind the shutdown
+                // message would otherwise be dropped with a dead reply
+                // channel — deliver an explicit error instead
+                loop {
+                    match in_rx.try_recv() {
+                        Ok(Msg::Req(req)) => fail_request(req, SHUTDOWN_ERROR, &kv, &metrics),
+                        Ok(Msg::Shutdown) => {}
+                        Err(_) => break,
+                    }
+                }
+                break;
+            }
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => break,
         }
         for b in batcher.close_expired(Instant::now()) {
-            emit(&batch_tx, b, &metrics);
+            emit(&batch_tx, b, &metrics, &kv);
         }
     }
     for b in batcher.drain() {
-        emit(&batch_tx, b, &metrics);
+        emit(&batch_tx, b, &metrics, &kv);
     }
+    // hand the ingress receiver back to the Server: a submit can race
+    // its request into the queue between our final sweep above and this
+    // thread's exit, and shutdown drains those authoritatively after
+    // joining us (the window where a message is truly unreachable is
+    // thereby closed)
+    *rx_back.lock().unwrap() = Some(in_rx);
     // dropping batch_tx disconnects the workers
 }
 
-fn emit(tx: &SyncSender<Batch>, b: Batch, metrics: &Metrics) {
-    metrics.batches.fetch_add(1, Ordering::Relaxed);
-    metrics.batched_requests.fetch_add(b.requests.len() as u64, Ordering::Relaxed);
-    let _ = tx.send(b);
+fn emit(tx: &SyncSender<Batch>, b: Batch, metrics: &Metrics, kv: &KvStore) {
+    let n = b.requests.len() as u64;
+    match tx.send(b) {
+        Ok(()) => {
+            metrics.batches.fetch_add(1, Ordering::Relaxed);
+            metrics.batched_requests.fetch_add(n, Ordering::Relaxed);
+        }
+        // every worker is gone (all exited/panicked): the batch would
+        // hang its callers forever — deliver explicit errors instead
+        Err(std::sync::mpsc::SendError(b)) => {
+            for req in b.requests {
+                fail_request(req, WORKERS_GONE_ERROR, kv, metrics);
+            }
+        }
+    }
+}
+
+/// Deliver an explicit error response for a request that will never be
+/// served, releasing its session pin.
+fn fail_request(req: AttentionRequest, msg: &str, kv: &KvStore, metrics: &Metrics) {
+    let AttentionRequest { id, session, arrived, pinned, reply, .. } = req;
+    if pinned {
+        kv.unpin(&session);
+    }
+    metrics.failed.fetch_add(1, Ordering::Relaxed);
+    let latency_us = arrived.elapsed().as_secs_f64() * 1e6;
+    let _ = reply.send(AttentionResponse {
+        id,
+        output: Err(msg.to_string()),
+        latency_us,
+        batch_size: 0,
+    });
 }
 
 fn worker_loop(
@@ -290,16 +391,51 @@ fn worker_loop(
     }
 }
 
-/// A query waiting to be flushed: `(id, query, arrived, reply)`.
-type PendingQuery = (u64, Vec<f32>, Instant, Sender<AttentionResponse>);
+/// A query waiting to be flushed: `(id, query, arrived, pinned, reply)`.
+type PendingQuery = (u64, Vec<f32>, Instant, bool, Sender<AttentionResponse>);
+
+/// Releases a batch's not-yet-released session pins on drop, so a panic
+/// anywhere in the serve path (e.g. a crashing backend) cannot leak
+/// pins — a leaked pin would make the session permanently unevictable
+/// under the byte budget.  The happy path releases each pin explicitly
+/// ([`PinGuard::release_one`]) *before* the response is sent, so by the
+/// time a caller observes its response the session is evictable again.
+struct PinGuard<'a> {
+    kv: &'a KvStore,
+    session: &'a str,
+    remaining: usize,
+}
+
+impl PinGuard<'_> {
+    fn release_one(&mut self) {
+        if self.remaining > 0 {
+            self.remaining -= 1;
+            self.kv.unpin(self.session);
+        }
+    }
+}
+
+impl Drop for PinGuard<'_> {
+    fn drop(&mut self) {
+        for _ in 0..self.remaining {
+            self.kv.unpin(self.session);
+        }
+    }
+}
 
 /// Serve one batch in arrival order: contiguous runs of queries are
 /// computed together against the session's current KV; an append flushes
 /// the run ahead of it, then applies the write.  Configuration errors
 /// (backend/store geometry disagreements) become error responses, never
-/// worker panics.
+/// worker panics.  Every response releases its ingress pin (before the
+/// reply is sent; panic-safe via [`PinGuard`]).
 fn serve_batch(be: &mut dyn Backend, batch: Batch, kv: &KvStore, metrics: &Metrics) {
     let n = batch.requests.len();
+    let mut pins = PinGuard {
+        kv,
+        session: &batch.session,
+        remaining: batch.requests.iter().filter(|r| r.pinned).count(),
+    };
     if be.head_dim() != kv.head_dim() {
         let msg = format!(
             "backend head_dim {} != KV store head_dim {}",
@@ -307,27 +443,33 @@ fn serve_batch(be: &mut dyn Backend, batch: Batch, kv: &KvStore, metrics: &Metri
             kv.head_dim()
         );
         for req in batch.requests {
-            let AttentionRequest { id, arrived, reply, .. } = req;
+            let AttentionRequest { id, arrived, pinned, reply, .. } = req;
+            if pinned {
+                pins.release_one();
+            }
             deliver(id, arrived, reply, Err(msg.clone()), n, metrics);
         }
         return;
     }
     let mut run: Vec<PendingQuery> = Vec::new();
     for req in batch.requests {
-        let AttentionRequest { id, payload, arrived, reply, .. } = req;
+        let AttentionRequest { id, payload, arrived, pinned, reply, .. } = req;
         match payload {
-            Payload::Query(q) => run.push((id, q, arrived, reply)),
+            Payload::Query(q) => run.push((id, q, arrived, pinned, reply)),
             Payload::Append { k_rows, v_rows } => {
-                flush_queries(be, &batch.session, std::mem::take(&mut run), kv, metrics, n);
+                flush_queries(be, &batch.session, std::mem::take(&mut run), kv, &mut pins, metrics, n);
                 let output = kv
                     .append(&batch.session, k_rows, v_rows)
                     .map(|()| Vec::new())
                     .map_err(|e| e.to_string());
+                if pinned {
+                    pins.release_one();
+                }
                 deliver_append(id, arrived, reply, output, n, metrics);
             }
         }
     }
-    flush_queries(be, &batch.session, run, kv, metrics, n);
+    flush_queries(be, &batch.session, run, kv, &mut pins, metrics, n);
 }
 
 fn flush_queries(
@@ -335,6 +477,7 @@ fn flush_queries(
     session: &str,
     run: Vec<PendingQuery>,
     kv: &KvStore,
+    pins: &mut PinGuard<'_>,
     metrics: &Metrics,
     batch_size: usize,
 ) {
@@ -343,11 +486,11 @@ fn flush_queries(
     }
     let d = be.head_dim();
     let result: std::result::Result<Mat, String> = if let Some(entry) = kv.get(session) {
-        if run.iter().any(|(_, q, _, _)| q.len() != d) {
+        if run.iter().any(|(_, q, _, _, _)| q.len() != d) {
             Err(format!("query dim mismatch (expected {d})"))
         } else {
             let mut q = Mat::zeros(run.len(), d);
-            for (i, (_, qv, _, _)) in run.iter().enumerate() {
+            for (i, (_, qv, _, _, _)) in run.iter().enumerate() {
                 q.row_mut(i).copy_from_slice(qv);
             }
             be.compute(&entry, &q).map_err(|e| e.to_string())
@@ -355,11 +498,14 @@ fn flush_queries(
     } else {
         Err(format!("unknown session {session:?}"))
     };
-    for (i, (id, _, arrived, reply)) in run.into_iter().enumerate() {
+    for (i, (id, _, arrived, pinned, reply)) in run.into_iter().enumerate() {
         let output = match &result {
             Ok(mat) => Ok(mat.row(i).to_vec()),
             Err(e) => Err(e.clone()),
         };
+        if pinned {
+            pins.release_one();
+        }
         deliver(id, arrived, reply, output, batch_size, metrics);
     }
 }
@@ -560,6 +706,67 @@ mod tests {
             assert!(!resp.ok());
             assert!(resp.output.unwrap_err().contains("head_dim"));
         }
+        srv.shutdown();
+    }
+
+    /// Backend whose first compute panics its worker — models a crashed
+    /// device thread.
+    struct PanicBackend;
+
+    impl crate::coordinator::backend::Backend for PanicBackend {
+        fn head_dim(&self) -> usize {
+            8
+        }
+        fn seq_len(&self) -> usize {
+            32
+        }
+        fn max_batch(&self) -> usize {
+            4
+        }
+        fn compute(
+            &mut self,
+            _kv: &crate::coordinator::kvstore::KvEntry,
+            _q: &Mat,
+        ) -> Result<Mat> {
+            panic!("injected backend crash")
+        }
+        fn name(&self) -> String {
+            "panic".into()
+        }
+    }
+
+    #[test]
+    fn dead_workers_yield_explicit_errors_not_hangs() {
+        // regression: once every worker is gone, formed batches used to
+        // be dropped on the floor — callers blocked on a reply channel
+        // that would only error when the whole server was torn down
+        let coord_cfg = CoordinatorConfig {
+            max_batch: 1,
+            batch_window_us: 100,
+            workers: 1,
+            queue_depth: 16,
+        };
+        let kv = Arc::new(KvStore::new(32, 8, 4));
+        let mut rng = Rng::new(13);
+        kv.put(
+            "sess",
+            Mat::from_vec(32, 8, rng.normal_vec(256)),
+            Mat::from_vec(32, 8, rng.normal_vec(256)),
+        )
+        .unwrap();
+        let factories: Vec<BackendFactory> =
+            vec![Box::new(|| Ok(Box::new(PanicBackend) as Box<dyn crate::coordinator::backend::Backend>))];
+        let srv = Server::start(&coord_cfg, kv, factories).unwrap();
+        // the first request crashes the only worker; its own reply
+        // channel dies with the panic (recv error — still not a hang)
+        assert!(srv.call("sess", rng.normal_vec(8)).is_err());
+        // let the worker thread finish unwinding and drop its receiver
+        std::thread::sleep(Duration::from_millis(200));
+        // later requests must receive an explicit error response
+        let resp = srv.call("sess", rng.normal_vec(8)).unwrap();
+        assert!(!resp.ok());
+        let msg = resp.output.unwrap_err();
+        assert!(msg.contains("no workers"), "unexpected error text: {msg}");
         srv.shutdown();
     }
 

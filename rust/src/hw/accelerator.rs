@@ -20,7 +20,8 @@ use crate::hw::pipeline::{simulate, CycleStats, LatencyModel};
 use crate::Mat;
 
 /// A configured accelerator instance holding preloaded KV buffers (the
-/// prepared form: K row-major, V resident in log-domain lanes).
+/// prepared form: fixed-size chunks of K row-major plus V resident in
+/// log-domain lanes — one chunk per block-FAU-sized SRAM buffer).
 pub struct Accelerator {
     pub arith: Arith,
     pub cfg: AcceleratorConfig,
@@ -104,12 +105,15 @@ impl Accelerator {
         let p = self.cfg.kv_blocks;
         let out = match self.arith {
             Arith::Fa2 => {
-                // p block-FAUs -> ACC cascade (Eq. 1) -> DIV
-                let (k, v) = (kv.k(), kv.v());
+                // p block-FAUs -> ACC cascade (Eq. 1) -> DIV; each
+                // block's K/V is materialized from the chunk table (the
+                // same per-block copy the dense layout paid via
+                // `rows_slice`) — block boundaries are count-driven and
+                // unchanged, so the merge cascade is identical
                 let mut acc: Option<Vec<fa2::Fa2State>> = None;
-                for (lo, hi) in kv_block_ranges(k.rows, p) {
-                    let kb = k.rows_slice(lo, hi);
-                    let vb = v.rows_slice(lo, hi);
+                for (lo, hi) in kv_block_ranges(kv.n(), p) {
+                    let kb = kv.k_rows(lo, hi);
+                    let vb = kv.v_rows(lo, hi);
                     let st = fa2::partial_states(&q, &kb, &vb, None, None);
                     acc = Some(match acc {
                         None => st,

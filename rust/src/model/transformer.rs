@@ -257,7 +257,12 @@ struct LayerWeights {
 
 /// One attention head's growing KV cache.  Only the H-FA variant keeps
 /// the log-domain prepared form; exact/fa2 decode attends over raw
-/// matrices and must not pay (or count) V->LNS conversions.
+/// matrices and must not pay (or count) V->LNS conversions.  The
+/// prepared cache is uniquely owned by the decoder, so its chunked
+/// `PreparedKv::append` writes the tail chunk in place — one row's
+/// conversion and one row's memcpy per step, never the resident prefix
+/// (raw caches get the same amortization from `Mat::append_rows`'s
+/// geometric growth).
 enum HeadCache {
     Raw { k: Mat, v: Mat },
     Prepared(PreparedKv),

@@ -20,6 +20,13 @@ impl Mat {
         Mat { rows, cols, data }
     }
 
+    /// An empty (0-row) matrix whose storage is preallocated for
+    /// `row_capacity` rows, so growing it row-by-row up to that capacity
+    /// never reallocates — the backing store of a fixed-capacity KV chunk.
+    pub fn with_row_capacity(row_capacity: usize, cols: usize) -> Mat {
+        Mat { rows: 0, cols, data: Vec::with_capacity(row_capacity * cols) }
+    }
+
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Mat {
         let mut data = Vec::with_capacity(rows * cols);
         for r in 0..rows {
@@ -115,12 +122,37 @@ impl Mat {
         out
     }
 
+    /// Grow capacity geometrically (at least doubling) when `extra` more
+    /// elements would not fit.  `Vec` already doubles on its own growth
+    /// path, but a cloned `Vec` (e.g. a copy-on-write KV cache) starts at
+    /// exact capacity — without this, a per-token append loop over a
+    /// clone degenerates to one realloc + full memcpy per token (O(T^2)
+    /// bytes over a decode).  Explicit here so the invariant is pinned
+    /// by tests rather than inherited from `Vec` internals.
+    fn reserve_amortized(&mut self, extra: usize) {
+        let need = self.data.len() + extra;
+        if need > self.data.capacity() {
+            let target = need.max(self.data.capacity() * 2);
+            self.data.reserve_exact(target - self.data.len());
+        }
+    }
+
+    /// Append one row (`row.len() == cols`) below the existing rows.
+    /// Amortized O(cols): capacity grows geometrically.
+    pub fn append_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.cols, "append_row width mismatch");
+        self.reserve_amortized(row.len());
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
     /// Append the rows of `rows` (same column count) below the existing
     /// rows — the decode-time KV growth primitive.  Amortized O(new rows);
     /// resident rows are never moved element-wise (at most one realloc
-    /// memcpy of the flat storage).
+    /// memcpy of the flat storage, geometrically amortized).
     pub fn append_rows(&mut self, rows: &Mat) {
         assert_eq!(rows.cols, self.cols, "append_rows column mismatch");
+        self.reserve_amortized(rows.data.len());
         self.data.extend_from_slice(&rows.data);
         self.rows += rows.rows;
     }
@@ -309,6 +341,50 @@ mod tests {
         let mut grown = full.rows_slice(0, 2);
         grown.append_rows(&full.rows_slice(2, 5));
         assert_eq!(grown, full);
+    }
+
+    #[test]
+    fn append_row_matches_append_rows() {
+        let mut by_row = Mat::with_row_capacity(4, 3);
+        let mut by_mat = Mat::zeros(0, 3);
+        let src = Mat::from_fn(5, 3, |r, c| (r * 3 + c) as f32);
+        for r in 0..5 {
+            by_row.append_row(src.row(r));
+        }
+        by_mat.append_rows(&src);
+        assert_eq!(by_row, by_mat);
+        assert_eq!(by_row, src);
+    }
+
+    #[test]
+    fn append_growth_is_geometric_even_after_exact_capacity_clone() {
+        // a cloned Vec starts at exact capacity; T single-row appends
+        // must still trigger only O(log T) reallocations, not T
+        let src = Mat::from_fn(1, 8, |_, c| c as f32);
+        let mut m = Mat::from_fn(100, 8, |r, c| (r * 8 + c) as f32).clone();
+        let mut caps = std::collections::BTreeSet::new();
+        for _ in 0..1000 {
+            m.append_rows(&src);
+            caps.insert(m.data.capacity());
+        }
+        assert_eq!(m.rows, 1100);
+        assert!(
+            caps.len() <= 8,
+            "capacity changed {} times over 1000 single-row appends — growth is not geometric",
+            caps.len()
+        );
+    }
+
+    #[test]
+    fn with_row_capacity_appends_without_realloc() {
+        let mut m = Mat::with_row_capacity(64, 4);
+        let cap0 = m.data.capacity();
+        let row = [1.0f32, 2.0, 3.0, 4.0];
+        for _ in 0..64 {
+            m.append_row(&row);
+        }
+        assert_eq!(m.rows, 64);
+        assert_eq!(m.data.capacity(), cap0, "preallocated chunk must not realloc");
     }
 
     #[test]

@@ -20,9 +20,9 @@ fn assert_prepared_identical(grown: &PreparedKv, full: &PreparedKv, ctx: &str) {
     assert_eq!(grown.n(), full.n(), "{ctx}: row count");
     assert_eq!(grown.d(), full.d(), "{ctx}: key dim");
     assert_eq!(grown.dv(), full.dv(), "{ctx}: value dim");
-    assert_eq!(bits(&grown.k().data), bits(&full.k().data), "{ctx}: K plane");
-    assert_eq!(bits(&grown.v().data), bits(&full.v().data), "{ctx}: V plane");
-    assert_eq!(grown.v_lns(), full.v_lns(), "{ctx}: LNS lanes");
+    assert_eq!(bits(&grown.k_mat().data), bits(&full.k_mat().data), "{ctx}: K plane");
+    assert_eq!(bits(&grown.v_mat().data), bits(&full.v_mat().data), "{ctx}: V plane");
+    assert_eq!(grown.v_lns_mat(), full.v_lns_mat(), "{ctx}: LNS lanes");
     assert_eq!(grown.block_rows(), full.block_rows(), "{ctx}: block capacity");
     assert_eq!(grown.blocks(), full.blocks(), "{ctx}: block partition");
     assert_eq!(
@@ -30,6 +30,14 @@ fn assert_prepared_identical(grown: &PreparedKv, full: &PreparedKv, ctx: &str) {
         fixed_block_ranges(grown.n(), grown.block_rows()),
         "{ctx}: partition must match the from-scratch formula"
     );
+    // the chunk table is the partition: per-chunk planes must agree too
+    assert_eq!(grown.chunks().len(), full.chunks().len(), "{ctx}: chunk count");
+    for (ci, (g, f)) in grown.chunks().iter().zip(full.chunks()).enumerate() {
+        assert_eq!(g.rows(), f.rows(), "{ctx}: chunk {ci} rows");
+        assert_eq!(bits(&g.k().data), bits(&f.k().data), "{ctx}: chunk {ci} K");
+        assert_eq!(bits(&g.v().data), bits(&f.v().data), "{ctx}: chunk {ci} V");
+        assert_eq!(g.v_lns(), f.v_lns(), "{ctx}: chunk {ci} lanes");
+    }
 }
 
 #[test]

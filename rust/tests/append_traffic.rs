@@ -1,0 +1,119 @@
+//! Regression: the chunked prepared-KV layout performs O(appended rows)
+//! bytes of copying per decode step — never O(resident rows).  Counted
+//! end-to-end with the process-wide `kv_copy_bytes` counter (the memory
+//! -traffic companion of `value_conversion_count`): from-scratch builds
+//! copy each row exactly once, clones move no row data, and a
+//! copy-on-write append touches only the partially-filled tail chunk
+//! plus the new rows, independent of how many filled chunks precede it.
+//!
+//! Kept as the sole test in this binary so the process-wide byte counter
+//! sees no concurrent traffic from unrelated tests.
+
+use std::sync::Arc;
+
+use hfa::attention::prepared::{kv_copy_bytes, row_bytes, PreparedKv};
+use hfa::coordinator::KvStore;
+use hfa::proptest::Rng;
+use hfa::Mat;
+
+fn rand_kv(rng: &mut Rng, n: usize, d: usize) -> (Mat, Mat) {
+    (
+        Mat::from_vec(n, d, rng.normal_vec(n * d)).round_bf16(),
+        Mat::from_vec(n, d, rng.normal_vec(n * d)).round_bf16(),
+    )
+}
+
+#[test]
+fn append_copy_traffic_tracks_appended_rows_not_resident() {
+    const D: usize = 8;
+    let rb = row_bytes(D, D) as u64;
+    let mut rng = Rng::new(20_260_728);
+
+    // --- from-scratch build: each row copied exactly once ------------------
+    let (k, v) = rand_kv(&mut rng, 96, D);
+    let before = kv_copy_bytes();
+    let kv = PreparedKv::with_block_rows(k.clone(), v.clone(), 16);
+    assert_eq!(kv_copy_bytes() - before, 96 * rb, "build copies each row once");
+
+    // --- clones move no row data ------------------------------------------
+    let before = kv_copy_bytes();
+    let shared = Arc::new(kv);
+    let _arc_clone = shared.clone();
+    let _table_clone = PreparedKv::clone(&shared);
+    assert_eq!(kv_copy_bytes() - before, 0, "Arc/chunk-table clones copy no rows");
+
+    // --- copy-on-write append at a chunk boundary: new rows only ----------
+    // 96 rows = 6 full chunks of 16; the tail is full, so the append
+    // opens a fresh (unshared) chunk and copies nothing resident
+    let (k1, v1) = rand_kv(&mut rng, 1, D);
+    let before = kv_copy_bytes();
+    let grown = shared.appended(&k1, &v1);
+    assert_eq!(kv_copy_bytes() - before, rb, "boundary append copies only the new row");
+
+    // --- mid-chunk CoW append: tail rows + new rows, nothing else ---------
+    // `grown` shares its 1-row tail with nobody yet; share it and append
+    let grown = Arc::new(grown);
+    let held = grown.clone(); // simulates an in-flight reader generation
+    let (k2, v2) = rand_kv(&mut rng, 2, D);
+    let before = kv_copy_bytes();
+    let grown2 = grown.appended(&k2, &v2);
+    assert_eq!(
+        kv_copy_bytes() - before,
+        3 * rb,
+        "mid-chunk append copies the 1-row shared tail plus the 2 new rows"
+    );
+    assert_eq!(held.n(), 97, "snapshot generation untouched");
+    assert_eq!(grown2.n(), 99);
+
+    // --- per-token cost is independent of resident length -----------------
+    // same tail phase (5 rows into a 16-row chunk), 10x the resident rows
+    let (kb, vb) = rand_kv(&mut rng, 165, D); // 10 full chunks + 5
+    let (ks, vs) = rand_kv(&mut rng, 21, D); //   1 full chunk + 5
+    let big = Arc::new(PreparedKv::with_block_rows(kb, vb, 16));
+    let small = Arc::new(PreparedKv::with_block_rows(ks, vs, 16));
+    let (ka, va) = rand_kv(&mut rng, 1, D);
+    let before = kv_copy_bytes();
+    let _gb = big.appended(&ka, &va);
+    let cost_big = kv_copy_bytes() - before;
+    let before = kv_copy_bytes();
+    let _gs = small.appended(&ka, &va);
+    let cost_small = kv_copy_bytes() - before;
+    assert_eq!(cost_big, cost_small, "append cost must not scale with resident rows");
+    assert_eq!(cost_big, 5 * rb + rb, "5-row shared tail + 1 new row");
+
+    // --- full serving path: KvStore decode loop ---------------------------
+    // DEFAULT_BLOCK_ROWS chunks: a 520-row session (2 full chunks + 8-row
+    // tail) and an 8-row session (tail only) pay the *same* per-token
+    // copy cost — the monolithic layout this replaces paid 520 rows vs 8
+    let (kl, vl) = rand_kv(&mut rng, 520, D);
+    let long_store = KvStore::new(600, D, 1);
+    long_store.put("s", kl, vl).unwrap();
+    let (ksh, vsh) = rand_kv(&mut rng, 8, D);
+    let short_store = KvStore::new(600, D, 1);
+    short_store.put("s", ksh, vsh).unwrap();
+    let (ka, va) = rand_kv(&mut rng, 1, D);
+    let before = kv_copy_bytes();
+    long_store.append("s", ka.clone(), va.clone()).unwrap();
+    let cost_long = kv_copy_bytes() - before;
+    let before = kv_copy_bytes();
+    short_store.append("s", ka, va).unwrap();
+    let cost_short = kv_copy_bytes() - before;
+    assert_eq!(
+        cost_long, cost_short,
+        "store-level append traffic must be independent of the resident prefix"
+    );
+    assert_eq!(cost_long, 8 * rb + rb, "8-row shared tail + 1 new row");
+
+    // --- decode-loop total: sum of tails, bounded by the chunk capacity ---
+    let before = kv_copy_bytes();
+    let steps = 12u64;
+    for _ in 0..steps {
+        let (k1, v1) = rand_kv(&mut rng, 1, D);
+        long_store.append("s", k1, v1).unwrap();
+    }
+    let total = kv_copy_bytes() - before;
+    // tail sizes 9..=20 rows; each step copies (tail + 1) rows
+    let expect: u64 = (9..9 + steps).map(|t| (t + 1) * rb).sum();
+    assert_eq!(total, expect, "decode-loop traffic = sum of (tail + appended) rows");
+    assert_eq!(long_store.get("s").unwrap().prepared().n(), 533);
+}

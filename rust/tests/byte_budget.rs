@@ -1,0 +1,153 @@
+//! Byte-budget eviction and in-flight pinning through the serving stack.
+//!
+//! * A query queued in the batcher pins its session: LRU pressure from
+//!   other sessions can no longer evict it into a spurious "unknown
+//!   session" failure (the pre-pinning race).
+//! * Admission-control failures (byte budget exhausted by pinned
+//!   sessions, capacity overflow) surface as explicit error responses
+//!   through `Server::submit_append`, not as silent drops.
+
+use std::sync::Arc;
+
+use hfa::attention::prepared::row_bytes;
+use hfa::config::{AcceleratorConfig, CoordinatorConfig};
+use hfa::coordinator::{KvStore, Server, SimBackend};
+use hfa::hw::Arith;
+use hfa::proptest::Rng;
+use hfa::Mat;
+
+const D: usize = 8;
+
+fn accel_cfg(seq_len: usize) -> AcceleratorConfig {
+    AcceleratorConfig {
+        head_dim: D,
+        seq_len,
+        kv_blocks: 2,
+        parallel_queries: 1,
+        freq_mhz: 500.0,
+    }
+}
+
+fn full_session(rng: &mut Rng, n: usize) -> (Mat, Mat) {
+    (
+        Mat::from_vec(n, D, rng.normal_vec(n * D)),
+        Mat::from_vec(n, D, rng.normal_vec(n * D)),
+    )
+}
+
+#[test]
+fn queued_queries_pin_their_session_against_eviction() {
+    // regression for the eviction-vs-in-flight race: the query sits in
+    // the batcher for the whole forming window while enough puts arrive
+    // to evict its session twice over
+    let coord = CoordinatorConfig {
+        max_batch: 8,
+        batch_window_us: 300_000, // long window: the query stays queued
+        workers: 1,
+        queue_depth: 64,
+    };
+    let kv = Arc::new(KvStore::new(32, D, 2)); // budget: two full sessions
+    let mut rng = Rng::new(404);
+    let (k, v) = full_session(&mut rng, 32);
+    kv.put("victim", k, v).unwrap();
+    let factories = vec![SimBackend::factory(Arith::Hfa, accel_cfg(32))];
+    let srv = Server::start(&coord, kv.clone(), factories).unwrap();
+
+    let rx = srv.submit("victim", rng.normal_vec(D)).unwrap();
+    // two more full sessions: without the pin, LRU would evict "victim"
+    let (k2, v2) = full_session(&mut rng, 32);
+    kv.put("b", k2, v2).unwrap();
+    let (k3, v3) = full_session(&mut rng, 32);
+    kv.put("c", k3, v3).unwrap();
+    assert!(kv.contains("victim"), "pinned session was evicted under pressure");
+    assert!(kv.evictions() >= 1, "the pressure must have evicted an unpinned session");
+
+    let resp = rx.recv().unwrap();
+    assert!(resp.ok(), "queued query hit the race: {:?}", resp.output);
+
+    // delivery released the pin: enough new pressure now evicts it
+    for name in ["d", "e"] {
+        let (kx, vx) = full_session(&mut rng, 32);
+        kv.put(name, kx, vx).unwrap();
+    }
+    assert!(!kv.contains("victim"), "delivered session must be evictable again");
+    srv.shutdown();
+}
+
+#[test]
+fn append_admission_errors_surface_through_server() {
+    let coord = CoordinatorConfig {
+        max_batch: 4,
+        batch_window_us: 100,
+        workers: 1,
+        queue_depth: 64,
+    };
+    // budget: exactly 16 rows of prepared KV
+    let kv = Arc::new(KvStore::with_byte_budget(16, D, 16 * row_bytes(D, D)));
+    let mut rng = Rng::new(505);
+    let (k, v) = full_session(&mut rng, 8);
+    kv.put("dec", k, v).unwrap();
+    let (k2, v2) = full_session(&mut rng, 8);
+    kv.put("other", k2, v2).unwrap();
+    // "other" has in-flight work elsewhere: it cannot be the victim
+    assert!(kv.pin("other"));
+
+    let factories = vec![SimBackend::factory(Arith::Hfa, accel_cfg(16))];
+    let srv = Server::start(&coord, kv.clone(), factories).unwrap();
+
+    // growing "dec" needs a victim, but the only candidate is pinned:
+    // the admission error must come back as an error acknowledgement
+    let (k1, v1) = full_session(&mut rng, 1);
+    let ack = srv.append("dec", k1.clone(), v1.clone()).unwrap();
+    assert!(!ack.ok(), "over-budget append must fail, not silently evict a pinned session");
+    let msg = ack.output.unwrap_err();
+    assert!(msg.contains("pinned") || msg.contains("budget"), "unexpected error: {msg}");
+    assert!(kv.contains("other"), "pinned session must survive");
+    assert_eq!(kv.get("dec").unwrap().prepared().n(), 8, "failed append must not apply");
+
+    // releasing the pin lets the same append evict and land
+    kv.unpin("other");
+    let ack = srv.append("dec", k1, v1).unwrap();
+    assert!(ack.ok(), "{:?}", ack.output);
+    assert_eq!(kv.get("dec").unwrap().prepared().n(), 9);
+    assert!(!kv.contains("other"), "unpinned LRU session becomes the victim");
+
+    // a query for the evicted session still fails cleanly (explicit
+    // error, not a hang) — admission control never strands a caller
+    let resp = srv.call("other", rng.normal_vec(D)).unwrap();
+    assert!(!resp.ok());
+    assert!(resp.output.unwrap_err().contains("unknown session"));
+    srv.shutdown();
+}
+
+#[test]
+fn byte_budget_serves_many_short_sessions_concurrently() {
+    // the count-based store held `capacity` sessions regardless of size;
+    // the byte budget packs four half-length decode prefills into the
+    // space of two full sessions and serves them all
+    let coord = CoordinatorConfig {
+        max_batch: 4,
+        batch_window_us: 100,
+        workers: 2,
+        queue_depth: 64,
+    };
+    let kv = Arc::new(KvStore::new(32, D, 2));
+    let mut rng = Rng::new(606);
+    for s in 0..4 {
+        let (k, v) = full_session(&mut rng, 16);
+        kv.put(&format!("s{s}"), k, v).unwrap();
+    }
+    assert_eq!(kv.resident(), 4, "four half sessions fit in two full sessions' bytes");
+    assert_eq!(kv.evictions(), 0);
+
+    let factories = (0..coord.workers)
+        .map(|_| SimBackend::factory(Arith::Hfa, accel_cfg(32)))
+        .collect();
+    let srv = Server::start(&coord, kv.clone(), factories).unwrap();
+    for s in 0..4 {
+        let resp = srv.call(&format!("s{s}"), rng.normal_vec(D)).unwrap();
+        assert!(resp.ok(), "session s{s}: {:?}", resp.output);
+    }
+    assert_eq!(srv.metrics.snapshot().completed, 4);
+    srv.shutdown();
+}
