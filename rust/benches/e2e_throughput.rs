@@ -1,14 +1,26 @@
 //! End-to-end serving throughput/latency through the coordinator:
 //! simulated-accelerator backends (H-FA vs FA-2) and, when artifacts are
 //! present, the PJRT-compiled H-FA kernel backend.  Also reports the raw
-//! accelerator compute-batch wall time (coordinator overhead = difference)
-//! and a decode-loop scenario (prefill once, then N append+attend steps)
-//! comparing the append-only path against rebuilding the session per step.
+//! accelerator compute-batch wall time (coordinator overhead = difference),
+//! a decode-loop scenario (prefill once, then N append+attend steps)
+//! comparing the append-only path against rebuilding the session per step,
+//! and the query-tiled kernel microbench (EXPERIMENTS.md §Tiling): exact
+//! K/V stream traffic per tile height plus the batch-1 two-axis decode
+//! grid.
+//!
+//! Every scenario also lands as a row in `BENCH_attention.json`
+//! (`target/bench_results/`, schema `{bench, shape, ns_per_step,
+//! kv_bytes_copied}`) so the perf trajectory is machine-readable; the
+//! bench validates its own output so CI's tiny-shape smoke run fails if
+//! the writer regresses.  Shapes honour `HFA_BENCH_N` / `HFA_BENCH_D`
+//! (defaults 1024 / 64) so that smoke run stays cheap.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use hfa::benchlib::{bench, Table};
+use hfa::attention::kernel;
+use hfa::attention::PreparedKv;
+use hfa::benchlib::{bench, validate_json, write_bench_json, BenchRow, Table};
 use hfa::config::{AcceleratorConfig, CoordinatorConfig};
 use hfa::coordinator::{KvStore, PjrtBackend, Server, SimBackend};
 use hfa::hw::{Accelerator, Arith};
@@ -16,15 +28,16 @@ use hfa::proptest::Rng;
 use hfa::runtime::AttnKernelSpec;
 use hfa::Mat;
 
-const D: usize = 64;
-const N: usize = 1024;
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
 
-fn drive(server: &Server, total: usize, rng: &mut Rng) -> (f64, f64, f64) {
+fn drive(server: &Server, total: usize, d: usize, rng: &mut Rng) -> (f64, f64, f64) {
     let t0 = Instant::now();
     let mut pending = Vec::new();
     for _ in 0..total {
         loop {
-            match server.submit("bench", rng.normal_vec(D)) {
+            match server.submit("bench", rng.normal_vec(d)) {
                 Ok(rx) => {
                     pending.push(rx);
                     break;
@@ -44,9 +57,11 @@ fn drive(server: &Server, total: usize, rng: &mut Rng) -> (f64, f64, f64) {
 
 fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(2024);
+    let d = env_usize("HFA_BENCH_D", 64);
+    let n = env_usize("HFA_BENCH_N", 1024);
     let accel_cfg = AcceleratorConfig {
-        head_dim: D,
-        seq_len: N,
+        head_dim: d,
+        seq_len: n,
         kv_blocks: 4,
         parallel_queries: 1,
         freq_mhz: 500.0,
@@ -57,25 +72,27 @@ fn main() -> anyhow::Result<()> {
         workers: 2,
         queue_depth: 256,
     };
-    let total: usize =
-        std::env::var("HFA_BENCH_REQS").ok().and_then(|s| s.parse().ok()).unwrap_or(256);
+    let total: usize = env_usize("HFA_BENCH_REQS", 256);
+    let mut json_rows: Vec<BenchRow> = Vec::new();
 
-    let k = Mat::from_vec(N, D, rng.normal_vec(N * D));
-    let v = Mat::from_vec(N, D, rng.normal_vec(N * D));
+    let k = Mat::from_vec(n, d, rng.normal_vec(n * d));
+    let v = Mat::from_vec(n, d, rng.normal_vec(n * d));
 
     let mut t = Table::new(
-        "E2E serving — coordinator + backend, N=1024, d=64, 4 KV blocks",
+        &format!("E2E serving — coordinator + backend, N={n}, d={d}, 4 KV blocks"),
         &["backend", "requests", "QPS", "p50 us", "p99 us", "mean batch"],
     );
 
-    for (name, arith) in [("sim H-FA", Arith::Hfa), ("sim FA-2", Arith::Fa2)] {
-        let kv = Arc::new(KvStore::new(N, D, 4));
+    for (name, slug, arith) in
+        [("sim H-FA", "e2e_sim_hfa", Arith::Hfa), ("sim FA-2", "e2e_sim_fa2", Arith::Fa2)]
+    {
+        let kv = Arc::new(KvStore::new(n, d, 4));
         kv.put("bench", k.clone(), v.clone())?;
         let factories = (0..coord_cfg.workers)
             .map(|_| SimBackend::factory(arith, accel_cfg.clone()))
             .collect();
         let server = Server::start(&coord_cfg, kv, factories)?;
-        let (qps, p50, p99) = drive(&server, total, &mut rng);
+        let (qps, p50, p99) = drive(&server, total, d, &mut rng);
         let snap = server.metrics.snapshot();
         t.row(&[
             name.into(),
@@ -85,21 +102,27 @@ fn main() -> anyhow::Result<()> {
             format!("{p99:.0}"),
             format!("{:.1}", snap.mean_batch),
         ]);
+        json_rows.push(BenchRow {
+            bench: slug.into(),
+            shape: format!("N{n}_d{d}_p4"),
+            ns_per_step: 1e9 / qps.max(1e-9),
+            kv_bytes_copied: 0,
+        });
         server.shutdown();
     }
 
     // PJRT backend (needs artifacts)
-    let spec = AttnKernelSpec { kind: "hfa".into(), head_dim: D, seq_len: N, batch: 16 };
+    let spec = AttnKernelSpec { kind: "hfa".into(), head_dim: d, seq_len: n, batch: 16 };
     let artifacts = hfa::artifacts_dir();
     if artifacts.join("hlo").join(spec.file_name()).is_file() {
-        let kv = Arc::new(KvStore::new(N, D, 4));
+        let kv = Arc::new(KvStore::new(n, d, 4));
         kv.put("bench", k.clone(), v.clone())?;
         let factories = vec![
             PjrtBackend::factory(artifacts.clone(), spec.clone()),
             PjrtBackend::factory(artifacts.clone(), spec),
         ];
         let server = Server::start(&coord_cfg, kv, factories)?;
-        let (qps, p50, p99) = drive(&server, total, &mut rng);
+        let (qps, p50, p99) = drive(&server, total, d, &mut rng);
         let snap = server.metrics.snapshot();
         t.row(&[
             "pjrt H-FA kernel".into(),
@@ -109,6 +132,12 @@ fn main() -> anyhow::Result<()> {
             format!("{p99:.0}"),
             format!("{:.1}", snap.mean_batch),
         ]);
+        json_rows.push(BenchRow {
+            bench: "e2e_pjrt_hfa".into(),
+            shape: format!("N{n}_d{d}"),
+            ns_per_step: 1e9 / qps.max(1e-9),
+            kv_bytes_copied: 0,
+        });
         server.shutdown();
     } else {
         eprintln!("(skipping PJRT backend row: artifacts missing)");
@@ -118,7 +147,7 @@ fn main() -> anyhow::Result<()> {
     // raw accelerator batch compute (no coordinator) for overhead attribution
     let mut accel = Accelerator::new(Arith::Hfa, accel_cfg.clone());
     accel.load_kv(k.clone(), v.clone())?;
-    let q = Mat::from_vec(16, D, rng.normal_vec(16 * D));
+    let q = Mat::from_vec(16, d, rng.normal_vec(16 * d));
     let stats = bench(2, 20, Duration::from_secs(10), || {
         let _ = accel.compute_batch(&q).unwrap();
     });
@@ -135,33 +164,81 @@ fn main() -> anyhow::Result<()> {
     let per_call = bench(2, 20, Duration::from_secs(10), || {
         let _ = hfa::attention::hfa::attention(&q, &kb, &vb, None, None, &mut None);
     });
-    let prepared = hfa::attention::PreparedKv::new(kb.clone(), vb.clone());
+    let prepared = PreparedKv::new(kb.clone(), vb.clone());
     let reused = bench(2, 20, Duration::from_secs(10), || {
         let _ = prepared.attention(&q, None, None);
     });
     println!(
-        "attention(16 queries, N={N}, d={D}): per-call V->LNS {:.2} ms, prepared-KV reuse {:.2} ms ({:.2}x)",
+        "attention(16 queries, N={n}, d={d}): per-call V->LNS {:.2} ms, prepared-KV reuse {:.2} ms ({:.2}x)",
         per_call.mean_ms(),
         reused.mean_ms(),
         per_call.mean_ns / reused.mean_ns.max(1.0)
     );
 
+    // Query-tiled kernel microbench (EXPERIMENTS.md §Tiling): exact K/V
+    // stream traffic per call at qt=1 (the seed's per-query streaming)
+    // vs the default tile — the ~QT-fold reduction — plus the batch-1
+    // two-axis grid across resident-block counts (decode-step
+    // parallelism ∝ blocks even with a single query).
+    let qt_default = kernel::DEFAULT_QUERY_TILE;
+    let bq = 16usize;
+    let qm = Mat::from_vec(bq, d, rng.normal_vec(bq * d)).round_bf16();
+    let mut kt = Table::new(
+        &format!("Tiled kernel — N={n}, d={d} (stream traffic exact, from kv_stream_bytes)"),
+        &["config", "ns/call", "KV rows streamed/call", "stream KiB/call"],
+    );
+    for qt in [1usize, qt_default] {
+        let s0 = kernel::kv_stream_bytes();
+        let _ = prepared.attention_tiled(&qm, 1, None, qt);
+        let per_call_bytes = kernel::kv_stream_bytes() - s0;
+        let st = bench(2, 20, Duration::from_secs(5), || {
+            let _ = prepared.attention_tiled(&qm, 1, None, qt);
+        });
+        kt.row(&[
+            format!("B={bq} qt={qt}"),
+            format!("{:.0}", st.mean_ns),
+            (per_call_bytes / kernel::row_stream_bytes(d, d)).to_string(),
+            format!("{:.1}", per_call_bytes as f64 / 1024.0),
+        ]);
+        json_rows.push(BenchRow {
+            bench: format!("kernel_stream_qt{qt}"),
+            shape: format!("B{bq}_N{n}_d{d}_p1"),
+            ns_per_step: st.mean_ns,
+            kv_bytes_copied: per_call_bytes,
+        });
+    }
+    let q1 = Mat::from_vec(1, d, rng.normal_vec(d)).round_bf16();
+    for p in [1usize, 8] {
+        let st = bench(2, 50, Duration::from_secs(5), || {
+            let _ = prepared.attention_tiled(&q1, p, None, qt_default);
+        });
+        kt.row(&[
+            format!("B=1 grid p={p}"),
+            format!("{:.0}", st.mean_ns),
+            "-".into(),
+            "-".into(),
+        ]);
+        json_rows.push(BenchRow {
+            bench: format!("decode_b1_grid_p{p}"),
+            shape: format!("B1_N{n}_d{d}_p{p}"),
+            ns_per_step: st.mean_ns,
+            kv_bytes_copied: 0,
+        });
+    }
+    kt.emit("tiled_kernel");
+
     // decode loop (EXPERIMENTS.md §Decode): prefill once, then STEPS x
     // (one-row KV write + one attend).  "append" uses Server::append
     // (convert only the new row); "re-put" rebuilds the whole session per
     // step — the only option before the append path existed.
-    let steps: usize = std::env::var("HFA_BENCH_DECODE_STEPS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(64)
-        .min(N / 2);
-    let prefill = N - steps;
+    let steps: usize = env_usize("HFA_BENCH_DECODE_STEPS", 64).min(n / 2);
+    let prefill = n - steps;
     // NOTE on fairness: both arms time the full step (KV write + attend)
     // via wall clock, which is symmetric; per-request latency percentiles
     // are NOT comparable across arms (the re-put arm's write bypasses the
     // server and its metrics), so the table reports steps/s only.
     let mut dt = Table::new(
-        "Decode loop — prefill once, then append+attend per token, N=1024, d=64",
+        &format!("Decode loop — prefill once, then append+attend per token, N={n}, d={d}"),
         &[
             "KV write path",
             "prefill",
@@ -172,8 +249,11 @@ fn main() -> anyhow::Result<()> {
             "KV MiB copied",
         ],
     );
-    for (name, use_append) in [("chunked append", true), ("full re-put (seed)", false)] {
-        let kv = Arc::new(KvStore::new(N, D, 4));
+    for (name, slug, use_append) in [
+        ("chunked append", "decode_append", true),
+        ("full re-put (seed)", "decode_reput", false),
+    ] {
+        let kv = Arc::new(KvStore::new(n, d, 4));
         kv.put("dec", k.rows_slice(0, prefill), v.rows_slice(0, prefill))?;
         let factories = (0..coord_cfg.workers)
             .map(|_| SimBackend::factory(Arith::Hfa, accel_cfg.clone()))
@@ -194,7 +274,7 @@ fn main() -> anyhow::Result<()> {
             } else {
                 kv.put("dec", k.rows_slice(0, at + 1), v.rows_slice(0, at + 1))?;
             }
-            let r = server.call("dec", rng.normal_vec(D))?;
+            let r = server.call("dec", rng.normal_vec(d))?;
             assert!(r.ok(), "{:?}", r.output);
         }
         let wall = t0.elapsed().as_secs_f64();
@@ -209,8 +289,21 @@ fn main() -> anyhow::Result<()> {
             converted.to_string(),
             format!("{:.2}", copied as f64 / (1024.0 * 1024.0)),
         ]);
+        json_rows.push(BenchRow {
+            bench: slug.into(),
+            shape: format!("B1_N{n}_d{d}_prefill{prefill}_steps{steps}"),
+            ns_per_step: wall / steps as f64 * 1e9,
+            kv_bytes_copied: copied,
+        });
         server.shutdown();
     }
     dt.emit("decode_loop");
+
+    // machine-readable trajectory file, self-validated so CI's smoke run
+    // catches a writer regression
+    let path = write_bench_json("BENCH_attention.json", &json_rows)?;
+    let written = std::fs::read_to_string(&path)?;
+    validate_json(&written).map_err(|e| anyhow::anyhow!("BENCH_attention.json invalid: {e}"))?;
+    println!("(perf json: {} — {} rows, validated)", path.display(), json_rows.len());
     Ok(())
 }

@@ -76,17 +76,44 @@ impl HfaState {
     /// LogDiv + back-conversion (Eqs. 15, 22): divide every `o` lane by
     /// the `ell` lane with a fixed-point subtraction, convert to BF16.
     pub fn finalize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.acc.len() - 1];
+        self.finalize_into(&mut out);
+        out
+    }
+
+    /// [`HfaState::finalize`] writing straight into a caller-provided
+    /// `dv`-wide slice (e.g. the output `Mat`'s row) — no per-query
+    /// `Vec` allocation on the serving path.
+    pub fn finalize_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len() + 1, self.acc.len(), "finalize_into width mismatch");
         let ell = self.acc.get(0);
-        (1..self.acc.len())
-            .map(|i| {
-                let o = self.acc.get(i);
-                if o.is_zero() {
-                    return 0.0;
-                }
-                let r = Lns { sign: o.sign ^ ell.sign, log: o.log - ell.log };
-                r.to_bf16().to_f32()
-            })
-            .collect()
+        for (j, slot) in out.iter_mut().enumerate() {
+            let o = self.acc.get(j + 1);
+            *slot = if o.is_zero() {
+                0.0
+            } else {
+                Lns { sign: o.sign ^ ell.sign, log: o.log - ell.log }.to_bf16().to_f32()
+            };
+        }
+    }
+}
+
+/// Tile variant of [`HfaState::step_slices`]: advance a tile of
+/// per-query accumulators past **one** streamed key — `scores[t]` is
+/// query `t`'s score against that key, and the value row's lane planes
+/// are loaded once for the whole tile instead of once per query (the
+/// K/V-stream amortization of `attention::kernel`).  Bit-identical to
+/// the same `step_slices` calls issued per query: each state's
+/// quantizer sees only its own score and its own running max.
+pub fn step_tile_slices(
+    states: &mut [HfaState],
+    scores: &[f32],
+    v_signs: &[i32],
+    v_logs: &[i32],
+) {
+    debug_assert_eq!(states.len(), scores.len());
+    for (st, &s) in states.iter_mut().zip(scores) {
+        st.step_slices(s, v_signs, v_logs);
     }
 }
 
@@ -235,7 +262,8 @@ pub fn attention_from_scores(scores: &Mat, v: &Mat) -> Mat {
 pub(crate) fn finalize_states(states: &[HfaState], dv: usize) -> Mat {
     let mut out = Mat::zeros(states.len(), dv);
     for (bi, st) in states.iter().enumerate() {
-        out.row_mut(bi).copy_from_slice(&st.finalize());
+        // LogDiv straight into the output row — no per-query Vec
+        st.finalize_into(out.row_mut(bi));
     }
     out
 }
@@ -520,6 +548,55 @@ mod tests {
         let v = Mat::zeros(8, 4);
         let o = attention(&q, &k, &v, None, None, &mut None);
         assert_eq!(o.data, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn finalize_into_matches_finalize() {
+        let mut rng = Rng::new(53);
+        let (q, k, v) = rand_case(&mut rng, 1, 12, 6);
+        let states = partial_states(&q, &k, &v, None, None, &mut None);
+        let by_vec = states[0].finalize();
+        let mut by_slice = vec![7.0f32; 6]; // poisoned: every slot must be overwritten
+        states[0].finalize_into(&mut by_slice);
+        assert_eq!(
+            by_vec.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            by_slice.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        // empty-state rows finalize to zeros either way
+        let empty = HfaState::new(6);
+        let mut row = vec![1.0f32; 6];
+        empty.finalize_into(&mut row);
+        assert_eq!(row, vec![0.0; 6]);
+    }
+
+    #[test]
+    #[should_panic(expected = "finalize_into width mismatch")]
+    fn finalize_into_rejects_wrong_width() {
+        let st = HfaState::new(4);
+        let mut row = vec![0.0f32; 3];
+        st.finalize_into(&mut row);
+    }
+
+    #[test]
+    fn step_tile_slices_matches_per_query_steps() {
+        // the tile variant IS the per-query loop: same states, same bits
+        let mut rng = Rng::new(59);
+        let (_, k, v) = rand_case(&mut rng, 1, 10, 4);
+        let v_lns = prepared::convert_values(&v);
+        let qt = 3;
+        let mut tiled: Vec<HfaState> = (0..qt).map(|_| HfaState::new(4)).collect();
+        let mut solo: Vec<HfaState> = (0..qt).map(|_| HfaState::new(4)).collect();
+        for i in 0..k.rows {
+            let scores: Vec<f32> = (0..qt).map(|t| (i as f32 - t as f32) * 0.37).collect();
+            step_tile_slices(&mut tiled, &scores, v_lns.row_signs(i), v_lns.row_logs(i));
+            for (t, st) in solo.iter_mut().enumerate() {
+                st.step_slices(scores[t], v_lns.row_signs(i), v_lns.row_logs(i));
+            }
+        }
+        for (a, b) in tiled.iter().zip(&solo) {
+            assert_eq!(a.m.to_bits(), b.m.to_bits());
+            assert_eq!(a.acc, b.acc);
+        }
     }
 
     #[test]

@@ -1,0 +1,424 @@
+//! Query-tiled, two-axis-parallel H-FA micro-kernel — the software
+//! realization of the paper's Fig. 2 work partitioning, which exploits
+//! **both** parallel axes of the accelerator: parallel queries (the
+//! query-FAU rows) and parallel KV-block FAUs merged in the log domain
+//! (Eq. 16).
+//!
+//! Two ideas, composed:
+//!
+//! * **Query tiling** ([`tile_states_prepared`] /
+//!   [`tile_states_borrowed`]): instead of walking the whole KV plane
+//!   once *per query* (the seed inner loop), a tile of up to
+//!   [`MAX_QUERY_TILE`] query rows walks it together — each resident K
+//!   row and V LNS lane pair is streamed **once per tile**, with the
+//!   scores computed as a register-blocked `QT x 1` pass
+//!   ([`super::hfa::step_tile_slices`]) before the shared lane planes
+//!   are pushed through every accumulator.  Per-query accumulation
+//!   order is untouched: every query still sees its keys in ascending
+//!   row order through the same `dot_f32` / `step_slices` calls, so
+//!   outputs are **bit-identical** to the seed per-row path (pinned by
+//!   `rust/tests/tiled_kernel.rs`).  The memory-traffic win is counted
+//!   exactly by [`kv_stream_bytes`] and pinned ~`QT`-fold by
+//!   `rust/tests/kernel_traffic.rs`.
+//!
+//! * **Two-axis grid scheduling** ([`grid_states_prepared`] /
+//!   [`grid_states_borrowed`]): the `(query-tile x KV-block)` grid fans
+//!   out over the persistent worker pool as independent cells — the
+//!   software analogue of Fig. 2's `p` block-FAUs times its parallel
+//!   query rows.  A decode step (batch = 1) therefore parallelizes
+//!   across its *resident KV blocks* instead of serializing on the
+//!   single query.  Each query's per-block partials are then merged in
+//!   block index order — the exact deterministic Eq. 16 chain the
+//!   sequential block walk performed — so blocked outputs are also
+//!   bit-identical whatever the grid shape.
+//!
+//! Masked calls hoist each query's mask row out of the inner loop (one
+//! slice per tile row, not one closure evaluation per `(query, key)`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::arith::lns::LnsMat;
+use crate::runtime::pool::{fan_out, fan_out_chunked};
+use crate::tensor::{dot_f32, Mat};
+
+use super::hfa::{step_tile_slices, HfaState};
+use super::merge::merge_hfa;
+use super::prepared::{fixed_block_ranges, PreparedKv};
+
+/// Default query-tile height `QT`: how many query rows share one stream
+/// of the KV planes.  Eight keeps the score tile and the `QT` `(m, acc)`
+/// states register/L1-resident at the paper's head dims (64-128) while
+/// already amortizing the K/V stream 8x.
+pub const DEFAULT_QUERY_TILE: usize = 8;
+
+/// Hard cap on the tile height (the score tile is a fixed stack array).
+pub const MAX_QUERY_TILE: usize = 16;
+
+/// Minimum queries per pool job for the cheap post-grid merge pass —
+/// one merge chain is `blocks x (d+1)` LNS adds, far too small to pay a
+/// per-query job dispatch.
+const MERGE_MIN_PER_JOB: usize = 32;
+
+/// Process-wide count of KV plane bytes *streamed* by the micro-kernel:
+/// each resident row a tile actually reads (any query attends to it)
+/// charges its K floats plus both LNS lane planes exactly once for the
+/// whole tile; rows masked out for every query in the tile charge
+/// nothing.  The companion of `prepared::kv_copy_bytes` (write
+/// traffic) — this one measures the read traffic the query-tiling
+/// exists to amortize: unmasked per-query streaming (`qt = 1`) charges
+/// `B x N` rows per call, a `QT`-tile charges `ceil(B/QT) x N`.
+/// Pinned by `rust/tests/kernel_traffic.rs`.
+static KV_STREAMED_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Total KV bytes streamed through the tiled kernel so far
+/// (process-wide, all calls).
+pub fn kv_stream_bytes() -> u64 {
+    KV_STREAMED_BYTES.load(Ordering::Relaxed)
+}
+
+/// Bytes one resident KV row costs to stream through the kernel: the K
+/// floats plus the sign and log lane planes (`dv + 1` i32 each).  The V
+/// float plane is not read by the H-FA inner loop (values are resident
+/// in LNS form), so it is not charged.
+pub fn row_stream_bytes(d: usize, dv: usize) -> u64 {
+    (4 * d + 2 * 4 * (dv + 1)) as u64
+}
+
+#[inline]
+fn record_stream(bytes: u64) {
+    KV_STREAMED_BYTES.fetch_add(bytes, Ordering::Relaxed);
+}
+
+#[inline]
+fn clamp_tile(qt: usize) -> usize {
+    qt.clamp(1, MAX_QUERY_TILE)
+}
+
+/// Hoisted per-query mask rows for one tile: `mask` is the full
+/// `(B, span)` plane relative to the KV range; the returned slices are
+/// one bounds-checked subslice per tile query instead of a closure
+/// evaluation per `(query, key)`.
+fn tile_mask_rows<'m>(
+    mask: Option<&'m [bool]>,
+    q_tile: (usize, usize),
+    span: usize,
+) -> Vec<&'m [bool]> {
+    match mask {
+        Some(m) => (q_tile.0..q_tile.1).map(|bi| &m[bi * span..(bi + 1) * span]).collect(),
+        None => Vec::new(),
+    }
+}
+
+/// One streamed KV row applied to a whole query tile: the
+/// register-blocked score pass (all `QT` dots against the K row just
+/// loaded), then one shared lane pass through every accumulator.  The
+/// masked variant skips exactly the `(query, key)` pairs the seed path
+/// skipped — masked queries pay neither the dot nor the lane update.
+/// Returns whether the row was read at all (any query attended), so
+/// the caller's [`kv_stream_bytes`] accounting stays exact under masks.
+#[inline]
+#[allow(clippy::too_many_arguments)] // flat hot-loop signature: every operand is a register-passed slice/scalar
+fn tile_row_update(
+    states: &mut [HfaState],
+    qrows: &[&[f32]],
+    tile_masks: &[&[bool]],
+    i: usize,
+    krow: &[f32],
+    v_signs: &[i32],
+    v_logs: &[i32],
+    scale: f32,
+    scores: &mut [f32; MAX_QUERY_TILE],
+) -> bool {
+    let qt = states.len();
+    if tile_masks.is_empty() {
+        for (sc, qrow) in scores[..qt].iter_mut().zip(qrows) {
+            *sc = dot_f32(qrow, krow) * scale;
+        }
+        step_tile_slices(states, &scores[..qt], v_signs, v_logs);
+        return true;
+    }
+    let mut touched = false;
+    for (t, st) in states.iter_mut().enumerate() {
+        if !tile_masks[t][i] {
+            continue;
+        }
+        touched = true;
+        st.step_slices(dot_f32(qrows[t], krow) * scale, v_signs, v_logs);
+    }
+    touched
+}
+
+/// The query-tiled micro-kernel over a **chunked** KV range: queries
+/// `[q_tile.0, q_tile.1)` advance together past rows
+/// `[range.0, range.1)`, resolving rows through the chunk table with the
+/// chunk walk hoisted out of the inner loop (one lookup per crossed
+/// boundary).  `mask`, when given, is the full `(B, span)` plane
+/// relative to the range.  Bit-identical to running each query alone.
+pub fn tile_states_prepared(
+    kv: &PreparedKv,
+    q: &Mat,
+    q_tile: (usize, usize),
+    range: (usize, usize),
+    scale: f32,
+    mask: Option<&[bool]>,
+) -> Vec<HfaState> {
+    let (q_lo, q_hi) = q_tile;
+    let (lo, hi) = range;
+    let qt = q_hi - q_lo;
+    debug_assert!(qt <= MAX_QUERY_TILE, "tile height {qt} over MAX_QUERY_TILE");
+    debug_assert!(lo <= hi && hi <= kv.n(), "KV range out of bounds");
+    let dv = kv.dv();
+    let mut states: Vec<HfaState> = (0..qt).map(|_| HfaState::new(dv)).collect();
+    if lo == hi || qt == 0 {
+        return states;
+    }
+    let span = hi - lo;
+    let qrows: Vec<&[f32]> = (q_lo..q_hi).map(|bi| q.row(bi)).collect();
+    let tile_masks = tile_mask_rows(mask, q_tile, span);
+    let mut scores = [0f32; MAX_QUERY_TILE];
+
+    let br = kv.block_rows();
+    let chunks = kv.chunks();
+    let mut streamed_rows = 0u64;
+    let mut r = lo;
+    while r < hi {
+        let ci = r / br;
+        let chunk = chunks[ci].as_ref();
+        let base = ci * br;
+        let stop = hi.min(base + chunk.rows());
+        for rr in r..stop {
+            let o = rr - base;
+            streamed_rows += tile_row_update(
+                &mut states,
+                &qrows,
+                &tile_masks,
+                rr - lo,
+                chunk.k().row(o),
+                chunk.v_lns().row_signs(o),
+                chunk.v_lns().row_logs(o),
+                scale,
+                &mut scores,
+            ) as u64;
+        }
+        r = stop;
+    }
+    record_stream(streamed_rows * row_stream_bytes(kv.d(), dv));
+    states
+}
+
+/// [`tile_states_prepared`] over **dense** borrowed planes (the
+/// golden-model paths that hold plain `Mat`/`LnsMat` operands).  Same
+/// arithmetic, same streaming accounting.
+pub fn tile_states_borrowed(
+    q: &Mat,
+    k: &Mat,
+    v_lns: &LnsMat,
+    q_tile: (usize, usize),
+    range: (usize, usize),
+    scale: f32,
+    mask: Option<&[bool]>,
+) -> Vec<HfaState> {
+    let (q_lo, q_hi) = q_tile;
+    let (lo, hi) = range;
+    let qt = q_hi - q_lo;
+    debug_assert!(qt <= MAX_QUERY_TILE, "tile height {qt} over MAX_QUERY_TILE");
+    debug_assert!(lo <= hi && hi <= k.rows && hi <= v_lns.rows(), "KV range out of bounds");
+    let dv = v_lns.lanes() - 1;
+    let mut states: Vec<HfaState> = (0..qt).map(|_| HfaState::new(dv)).collect();
+    if lo == hi || qt == 0 {
+        return states;
+    }
+    let span = hi - lo;
+    let qrows: Vec<&[f32]> = (q_lo..q_hi).map(|bi| q.row(bi)).collect();
+    let tile_masks = tile_mask_rows(mask, q_tile, span);
+    let mut scores = [0f32; MAX_QUERY_TILE];
+    let mut streamed_rows = 0u64;
+    for i in 0..span {
+        let r = lo + i;
+        streamed_rows += tile_row_update(
+            &mut states,
+            &qrows,
+            &tile_masks,
+            i,
+            k.row(r),
+            v_lns.row_signs(r),
+            v_lns.row_logs(r),
+            scale,
+            &mut scores,
+        ) as u64;
+    }
+    record_stream(streamed_rows * row_stream_bytes(k.cols, dv));
+    states
+}
+
+/// All of `q`'s rows over one KV range, tiled by `qt` and fanned out
+/// over the persistent pool (one job per tile).  Tiles are contiguous
+/// query ranges in index order, so the flattened result is in query
+/// order — the drop-in pooled replacement for the seed's per-query
+/// fan-out, with the K/V stream amortized `qt`-fold.
+pub fn tiled_states_prepared(
+    kv: &PreparedKv,
+    q: &Mat,
+    range: (usize, usize),
+    scale: f32,
+    mask: Option<&[bool]>,
+    qt: usize,
+) -> Vec<HfaState> {
+    let tiles = fixed_block_ranges(q.rows, clamp_tile(qt));
+    let per_tile = fan_out(tiles.len(), |ti| {
+        tile_states_prepared(kv, q, tiles[ti], range, scale, mask)
+    });
+    per_tile.into_iter().flatten().collect()
+}
+
+/// Dense-plane counterpart of [`tiled_states_prepared`].
+pub fn tiled_states_borrowed(
+    q: &Mat,
+    k: &Mat,
+    v_lns: &LnsMat,
+    range: (usize, usize),
+    scale: f32,
+    mask: Option<&[bool]>,
+    qt: usize,
+) -> Vec<HfaState> {
+    let tiles = fixed_block_ranges(q.rows, clamp_tile(qt));
+    let per_tile = fan_out(tiles.len(), |ti| {
+        tile_states_borrowed(q, k, v_lns, tiles[ti], range, scale, mask)
+    });
+    per_tile.into_iter().flatten().collect()
+}
+
+/// Merge each query's per-block partial states in block index order —
+/// the exact Eq. 16 chain `merge(merge(s_0, s_1), s_2)...` the
+/// sequential block walk performed.  Fanned out in chunks because one
+/// chain is far too little work for a per-query job (small batches run
+/// inline on the submitting thread).  Cells are indexed as
+/// `tile * nb + block` with uniform `qt`-high tiles (the
+/// [`fixed_block_ranges`] partition the grids build).
+fn merge_grid_cells(cells: &[Vec<HfaState>], nb: usize, b: usize, qt: usize) -> Vec<HfaState> {
+    fan_out_chunked(b, MERGE_MIN_PER_JOB, |qi| {
+        let (ti, t) = (qi / qt, qi % qt);
+        let mut acc = cells[ti * nb][t].clone();
+        for bj in 1..nb {
+            acc = merge_hfa(&acc, &cells[ti * nb + bj][t], &mut None);
+        }
+        acc
+    })
+}
+
+/// Two-axis `(query-tile x KV-block)` grid over a chunked KV set: every
+/// cell is one independent pool job, so a batch-1 decode step still
+/// exposes `blocks.len()`-way parallelism (Fig. 2's two parallel axes),
+/// then each query's partials merge in deterministic block order.
+/// Bit-identical to the sequential block walk for every `qt` and block
+/// partition (pinned by `rust/tests/tiled_kernel.rs`).
+pub fn grid_states_prepared(
+    kv: &PreparedKv,
+    q: &Mat,
+    blocks: &[(usize, usize)],
+    scale: f32,
+    qt: usize,
+) -> Vec<HfaState> {
+    let b = q.rows;
+    if blocks.is_empty() || b == 0 {
+        return (0..b).map(|_| HfaState::new(kv.dv())).collect();
+    }
+    let qt = clamp_tile(qt);
+    let tiles = fixed_block_ranges(b, qt);
+    let nb = blocks.len();
+    let cells: Vec<Vec<HfaState>> = fan_out(tiles.len() * nb, |c| {
+        tile_states_prepared(kv, q, tiles[c / nb], blocks[c % nb], scale, None)
+    });
+    if nb == 1 {
+        return cells.into_iter().flatten().collect();
+    }
+    merge_grid_cells(&cells, nb, b, qt)
+}
+
+/// Dense-plane counterpart of [`grid_states_prepared`] — backs the
+/// `hfa::attention_blocked` golden-model wrapper.
+pub fn grid_states_borrowed(
+    q: &Mat,
+    k: &Mat,
+    v_lns: &LnsMat,
+    blocks: &[(usize, usize)],
+    scale: f32,
+    qt: usize,
+) -> Vec<HfaState> {
+    let b = q.rows;
+    if blocks.is_empty() || b == 0 {
+        return (0..b).map(|_| HfaState::new(v_lns.lanes() - 1)).collect();
+    }
+    let qt = clamp_tile(qt);
+    let tiles = fixed_block_ranges(b, qt);
+    let nb = blocks.len();
+    let cells: Vec<Vec<HfaState>> = fan_out(tiles.len() * nb, |c| {
+        tile_states_borrowed(q, k, v_lns, tiles[c / nb], blocks[c % nb], scale, None)
+    });
+    if nb == 1 {
+        return cells.into_iter().flatten().collect();
+    }
+    merge_grid_cells(&cells, nb, b, qt)
+}
+
+#[cfg(test)]
+mod tests {
+    // NOTE: absolute kv_stream_bytes assertions live in
+    // `rust/tests/kernel_traffic.rs` (sole test in its binary) — the
+    // process-wide counter cannot be pinned here, where unit tests run
+    // concurrently.  Bit-exactness sweeps live in
+    // `rust/tests/tiled_kernel.rs`; these unit tests cover only the
+    // kernel-local scaffolding.
+    use super::*;
+    use crate::proptest::Rng;
+
+    #[test]
+    fn clamp_tile_bounds() {
+        assert_eq!(clamp_tile(0), 1);
+        assert_eq!(clamp_tile(1), 1);
+        assert_eq!(clamp_tile(MAX_QUERY_TILE), MAX_QUERY_TILE);
+        assert_eq!(clamp_tile(MAX_QUERY_TILE + 100), MAX_QUERY_TILE);
+        assert!(DEFAULT_QUERY_TILE <= MAX_QUERY_TILE);
+    }
+
+    #[test]
+    fn row_stream_bytes_counts_k_and_lane_planes() {
+        // d=64, dv=64: 64 K floats + 2 x 65 i32 lane entries
+        assert_eq!(row_stream_bytes(64, 64), 4 * 64 + 2 * 4 * 65);
+    }
+
+    #[test]
+    fn empty_grid_yields_default_states() {
+        let mut rng = Rng::new(3);
+        let k = Mat::from_vec(4, 4, rng.normal_vec(16)).round_bf16();
+        let v = Mat::from_vec(4, 4, rng.normal_vec(16)).round_bf16();
+        let kv = PreparedKv::new(k, v);
+        let q = Mat::from_vec(2, 4, rng.normal_vec(8)).round_bf16();
+        let st = grid_states_prepared(&kv, &q, &[], 0.5, 4);
+        assert_eq!(st.len(), 2);
+        for s in &st {
+            assert_eq!(s.m, f32::NEG_INFINITY);
+            assert_eq!(s.finalize(), vec![0.0; 4]);
+        }
+        // zero queries: empty state vector whatever the blocks
+        let q0 = Mat::zeros(0, 4);
+        assert!(grid_states_prepared(&kv, &q0, &[(0, 4)], 0.5, 4).is_empty());
+    }
+
+    #[test]
+    fn tile_and_grid_agree_with_each_other() {
+        // one-range grid == tiled walk of that range (no merge involved)
+        let mut rng = Rng::new(9);
+        let k = Mat::from_vec(10, 4, rng.normal_vec(40)).round_bf16();
+        let v = Mat::from_vec(10, 4, rng.normal_vec(40)).round_bf16();
+        let kv = PreparedKv::with_block_rows(k, v, 4);
+        let q = Mat::from_vec(5, 4, rng.normal_vec(20)).round_bf16();
+        let a = tiled_states_prepared(&kv, &q, (0, 10), 0.5, None, 2);
+        let b = grid_states_prepared(&kv, &q, &[(0, 10)], 0.5, 2);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.m.to_bits(), y.m.to_bits());
+            assert_eq!(x.acc, y.acc);
+        }
+    }
+}

@@ -10,10 +10,15 @@
 //! * [`prepared`] — the prepared-KV execution engine: V resident in SoA
 //!   LNS lanes, zero-copy block views, persistent-pool query fan-out
 //!   (the serving hot path).
+//! * [`kernel`] — the query-tiled, two-axis-parallel micro-kernel the
+//!   prepared engine runs on: K/V streamed once per query tile, the
+//!   `(query-tile x KV-block)` grid fanned out over the pool (Fig. 2's
+//!   two parallel axes), deterministic in-block-order Eq. 16 merge.
 
 pub mod exact;
 pub mod fa2;
 pub mod hfa;
+pub mod kernel;
 pub mod lazy;
 pub mod merge;
 pub mod prepared;

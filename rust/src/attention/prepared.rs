@@ -44,10 +44,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::arith::lns::LnsMat;
-use crate::tensor::{dot_f32, Mat};
+use crate::tensor::Mat;
 
 use super::hfa::{finalize_states, value_to_lns, HfaState};
-use super::merge::merge_hfa;
+use super::kernel;
 
 /// Process-wide count of bytes memcpy'd by prepared-KV builds, appends
 /// and copy-on-write chunk clones (K + V float planes and LNS lane
@@ -423,32 +423,21 @@ impl PreparedKv {
         &self.blocks
     }
 
-    /// 2D-parallel H-FA over the **stored** partition: one partial FAU
-    /// per resident chunk, log-domain ACC merge (Eq. 16), LogDiv.
-    /// Unlike [`PreparedKv::attention_blocked`] (count-driven boundaries
-    /// that move as `n` grows), the stored boundaries are append-stable,
-    /// so a step's merge tree does not shift under decode.  The serving
+    /// 2D-parallel H-FA over the **stored** partition: one grid cell
+    /// per `(query tile x resident chunk)`, log-domain ACC merge
+    /// (Eq. 16) in block order, LogDiv.  Unlike
+    /// [`PreparedKv::attention_blocked`] (count-driven boundaries that
+    /// move as `n` grows), the stored boundaries are append-stable, so
+    /// a step's merge tree does not shift under decode.  The serving
     /// stack currently drives the count-driven variant (the simulated
     /// accelerator has a fixed block-FAU count); this entry point is the
     /// building block for a stable-merge-tree decode schedule and is
     /// pinned by `rust/tests/append_equivalence.rs`.
     pub fn attention_resident_blocks(&self, q: &Mat, scale: Option<f32>) -> Mat {
         let scale = resolve_scale(scale, q.cols);
-        let dv = self.dv();
-        let mut acc: Option<Vec<HfaState>> = None;
-        for &(lo, hi) in &self.blocks {
-            let st = partial_states_prepared(self, q, lo, hi, scale, None);
-            acc = Some(match acc {
-                None => st,
-                Some(prev) => prev
-                    .into_iter()
-                    .zip(st)
-                    .map(|(a, b)| merge_hfa(&a, &b, &mut None))
-                    .collect(),
-            });
-        }
-        let states = acc.unwrap_or_else(|| (0..q.rows).map(|_| HfaState::new(dv)).collect());
-        finalize_states(&states, dv)
+        let states =
+            kernel::grid_states_prepared(self, q, &self.blocks, scale, kernel::DEFAULT_QUERY_TILE);
+        finalize_states(&states, self.dv())
     }
 
     /// Zero-copy sub-block view of rows `[lo, hi)`.
@@ -468,28 +457,32 @@ impl PreparedKv {
         finalize_states(&states, self.dv())
     }
 
-    /// 2D-parallel H-FA (Fig. 2) over the resident KV: independent
-    /// partial FAUs per sub-block, log-domain ACC merge (Eq. 16), LogDiv.
-    /// The count-driven ranges need not align with chunk boundaries —
-    /// rows resolve through the chunk table, in the same order and with
-    /// the same values as the dense path, so results stay bit-identical.
+    /// 2D-parallel H-FA (Fig. 2) over the resident KV: the
+    /// `(query tile x sub-block)` grid runs as independent pool jobs,
+    /// log-domain ACC merge (Eq. 16) in block order, LogDiv.  The
+    /// count-driven ranges need not align with chunk boundaries — rows
+    /// resolve through the chunk table, in the same order and with the
+    /// same values as the dense path, so results stay bit-identical.
     pub fn attention_blocked(&self, q: &Mat, num_blocks: usize, scale: Option<f32>) -> Mat {
+        self.attention_tiled(q, num_blocks, scale, kernel::DEFAULT_QUERY_TILE)
+    }
+
+    /// [`PreparedKv::attention_blocked`] with an explicit query-tile
+    /// height `qt` (clamped to `1..=`[`kernel::MAX_QUERY_TILE`]) — the
+    /// benchable knob behind the kernel microbench and the tile sweep
+    /// tests.  Outputs are bit-identical for every `qt`; only the K/V
+    /// stream traffic and the grid's parallel shape change.
+    pub fn attention_tiled(
+        &self,
+        q: &Mat,
+        num_blocks: usize,
+        scale: Option<f32>,
+        qt: usize,
+    ) -> Mat {
         let scale = resolve_scale(scale, q.cols);
-        let dv = self.dv();
-        let mut acc: Option<Vec<HfaState>> = None;
-        for (lo, hi) in kv_block_ranges(self.n, num_blocks) {
-            let st = partial_states_prepared(self, q, lo, hi, scale, None);
-            acc = Some(match acc {
-                None => st,
-                Some(prev) => prev
-                    .into_iter()
-                    .zip(st)
-                    .map(|(a, b)| merge_hfa(&a, &b, &mut None))
-                    .collect(),
-            });
-        }
-        let states = acc.unwrap_or_else(|| (0..q.rows).map(|_| HfaState::new(dv)).collect());
-        finalize_states(&states, dv)
+        let ranges = kv_block_ranges(self.n, num_blocks);
+        let states = kernel::grid_states_prepared(self, q, &ranges, scale, qt);
+        finalize_states(&states, self.dv())
     }
 }
 
@@ -542,12 +535,14 @@ pub(crate) fn resolve_scale(scale: Option<f32>, d: usize) -> f32 {
 }
 
 /// The prepared-path inner engine over a chunked KV set: rows `[lo, hi)`
-/// against resident LNS lanes, fanned out over the persistent pool.
-/// `mask` (when given) is `(B, hi - lo)` relative to the range.
+/// against resident LNS lanes, query-tiled and fanned out over the
+/// persistent pool ([`kernel::tiled_states_prepared`] at the default
+/// tile).  `mask` (when given) is `(B, hi - lo)` relative to the range.
 ///
 /// The chunk walk is hoisted out of the inner loop (one chunk lookup per
-/// crossed boundary, not per row); row values and accumulation order are
-/// exactly the dense path's, so results are bit-identical to
+/// crossed boundary, not per row) and each K row / V lane pair is
+/// streamed once per query *tile*; row values and per-query accumulation
+/// order are exactly the dense path's, so results are bit-identical to
 /// [`partial_states_borrowed`] over the materialized planes — and to the
 /// seed per-row path (`HfaState::step` with no histogram).
 pub(crate) fn partial_states_prepared(
@@ -560,42 +555,15 @@ pub(crate) fn partial_states_prepared(
 ) -> Vec<HfaState> {
     assert_eq!(kv.d(), q.cols, "query dim mismatch");
     assert!(lo <= hi && hi <= kv.n(), "range out of bounds");
-    let b = q.rows;
-    let span = hi - lo;
-    let dv = kv.dv();
     if let Some(m) = mask {
-        assert_eq!(m.len(), b * span, "mask shape mismatch");
+        assert_eq!(m.len(), q.rows * (hi - lo), "mask shape mismatch");
     }
-
-    let br = kv.block_rows;
-    let run_query = |bi: usize| -> HfaState {
-        let mut st = HfaState::new(dv);
-        let qrow = q.row(bi);
-        let mut r = lo;
-        while r < hi {
-            let ci = r / br;
-            let chunk = kv.chunks[ci].as_ref();
-            let base = ci * br;
-            let stop = hi.min(base + chunk.rows());
-            for rr in r..stop {
-                let i = rr - lo;
-                if mask.map(|m| !m[bi * span + i]).unwrap_or(false) {
-                    continue;
-                }
-                let o = rr - base;
-                let s = dot_f32(qrow, chunk.k.row(o)) * scale;
-                st.step_slices(s, chunk.v_lns.row_signs(o), chunk.v_lns.row_logs(o));
-            }
-            r = stop;
-        }
-        st
-    };
-    crate::runtime::pool::fan_out(b, run_query)
+    kernel::tiled_states_prepared(kv, q, (lo, hi), scale, mask, kernel::DEFAULT_QUERY_TILE)
 }
 
 /// The dense-matrix inner engine (golden-model paths that hold plain
 /// `Mat`/`LnsMat` operands): K rows `[lo, hi)` against converted lanes,
-/// fanned out over the persistent pool.  Same arithmetic as
+/// query-tiled over the persistent pool.  Same arithmetic as
 /// [`partial_states_prepared`].
 pub(crate) fn partial_states_borrowed(
     q: &Mat,
@@ -608,31 +576,17 @@ pub(crate) fn partial_states_borrowed(
 ) -> Vec<HfaState> {
     assert_eq!(k.cols, q.cols, "query dim mismatch");
     assert!(lo <= hi && hi <= k.rows && hi <= v_lns.rows(), "range out of bounds");
-    let b = q.rows;
-    let span = hi - lo;
-    let dv = v_lns.lanes() - 1;
     if let Some(m) = mask {
-        assert_eq!(m.len(), b * span, "mask shape mismatch");
+        assert_eq!(m.len(), q.rows * (hi - lo), "mask shape mismatch");
     }
-
-    let run_query = |bi: usize| -> HfaState {
-        let mut st = HfaState::new(dv);
-        let qrow = q.row(bi);
-        for i in 0..span {
-            if mask.map(|m| !m[bi * span + i]).unwrap_or(false) {
-                continue;
-            }
-            let s = dot_f32(qrow, k.row(lo + i)) * scale;
-            st.step_slices(s, v_lns.row_signs(lo + i), v_lns.row_logs(lo + i));
-        }
-        st
-    };
-    crate::runtime::pool::fan_out(b, run_query)
+    kernel::tiled_states_borrowed(q, k, v_lns, (lo, hi), scale, mask, kernel::DEFAULT_QUERY_TILE)
 }
 
 /// Blocked partial-state computation + log-domain ACC merge over already
 /// converted dense lanes — shared by the `hfa::attention_blocked`
-/// golden-model wrapper.
+/// golden-model wrapper.  Runs the same two-axis grid as the prepared
+/// path ([`kernel::grid_states_borrowed`]), with the identical
+/// in-block-order merge chain.
 pub(crate) fn blocked_states(
     q: &Mat,
     k: &Mat,
@@ -641,20 +595,8 @@ pub(crate) fn blocked_states(
     scale: Option<f32>,
 ) -> Vec<HfaState> {
     let scale = resolve_scale(scale, q.cols);
-    let dv = v_lns.lanes() - 1;
-    let mut acc: Option<Vec<HfaState>> = None;
-    for (lo, hi) in kv_block_ranges(k.rows, num_blocks) {
-        let st = partial_states_borrowed(q, k, v_lns, lo, hi, scale, None);
-        acc = Some(match acc {
-            None => st,
-            Some(prev) => prev
-                .into_iter()
-                .zip(st)
-                .map(|(a, b)| merge_hfa(&a, &b, &mut None))
-                .collect(),
-        });
-    }
-    acc.unwrap_or_else(|| (0..q.rows).map(|_| HfaState::new(dv)).collect())
+    let ranges = kv_block_ranges(k.rows, num_blocks);
+    kernel::grid_states_borrowed(q, k, v_lns, &ranges, scale, kernel::DEFAULT_QUERY_TILE)
 }
 
 #[cfg(test)]
@@ -861,6 +803,19 @@ mod tests {
             let kv = PreparedKv::with_block_rows(k.clone(), v.clone(), br);
             assert_eq!(kv.attention(&q, None, None).data, rf, "full, br={br}");
             assert_eq!(kv.attention_blocked(&q, 4, None).data, rb, "blocked, br={br}");
+        }
+    }
+
+    #[test]
+    fn attention_tiled_bit_identical_for_every_tile_height() {
+        // the tile height is a scheduling knob, not a numeric one
+        let mut rng = Rng::new(61);
+        let (k, v) = rand_kv(&mut rng, 29, 8);
+        let q = Mat::from_vec(7, 8, rng.normal_vec(56)).round_bf16();
+        let kv = PreparedKv::with_block_rows(k, v, 8);
+        let want = kv.attention_blocked(&q, 4, None).data;
+        for qt in [1usize, 2, 3, 7, 16, 500] {
+            assert_eq!(kv.attention_tiled(&q, 4, None, qt).data, want, "qt={qt}");
         }
     }
 

@@ -139,6 +139,208 @@ pub fn results_dir() -> PathBuf {
     PathBuf::from("target/bench_results")
 }
 
+// ---------------------------------------------------------------------------
+// Machine-readable perf rows (BENCH_attention.json)
+// ---------------------------------------------------------------------------
+
+/// One machine-readable perf measurement: the row schema of
+/// `BENCH_attention.json` (`{bench, shape, ns_per_step, kv_bytes_copied}`),
+/// emitted by `benches/e2e_throughput.rs` so the perf trajectory is
+/// diffable by tooling instead of living only in markdown tables.
+/// `kv_bytes_copied` carries whichever exact byte counter the row is
+/// about (prepared-KV write traffic or kernel stream traffic); rows
+/// with no byte dimension set it to 0.
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    pub bench: String,
+    pub shape: String,
+    pub ns_per_step: f64,
+    pub kv_bytes_copied: u64,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render perf rows as a JSON array (one object per row, fixed schema).
+/// Non-finite timings are clamped to 0 so the output always parses.
+pub fn bench_rows_to_json(rows: &[BenchRow]) -> String {
+    let mut out = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        let ns = if r.ns_per_step.is_finite() { r.ns_per_step } else { 0.0 };
+        let _ = write!(
+            out,
+            "  {{\"bench\": \"{}\", \"shape\": \"{}\", \"ns_per_step\": {}, \"kv_bytes_copied\": {}}}",
+            json_escape(&r.bench),
+            json_escape(&r.shape),
+            ns,
+            r.kv_bytes_copied
+        );
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("]\n");
+    out
+}
+
+/// Write perf rows as `file` under [`results_dir`] and return the path.
+pub fn write_bench_json(file: &str, rows: &[BenchRow]) -> std::io::Result<PathBuf> {
+    let dir = results_dir();
+    fs::create_dir_all(&dir)?;
+    let path = dir.join(file);
+    fs::write(&path, bench_rows_to_json(rows))?;
+    Ok(path)
+}
+
+/// Minimal JSON well-formedness validator (no serde in this offline
+/// environment — DESIGN.md §9): objects, arrays, strings with escapes,
+/// numbers, `true`/`false`/`null`.  Returns the byte offset of the
+/// first violation.  The bench calls it on its own output so a broken
+/// writer fails the CI perf-gate smoke instead of silently emitting an
+/// unparseable trajectory file.
+pub fn validate_json(s: &str) -> Result<(), String> {
+    struct P<'a> {
+        b: &'a [u8],
+        i: usize,
+    }
+    impl P<'_> {
+        fn ws(&mut self) {
+            while matches!(self.b.get(self.i).copied(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+                self.i += 1;
+            }
+        }
+
+        fn err<T>(&self, m: &str) -> Result<T, String> {
+            Err(format!("{m} at byte {}", self.i))
+        }
+
+        fn lit(&mut self, w: &str) -> Result<(), String> {
+            if self.b[self.i..].starts_with(w.as_bytes()) {
+                self.i += w.len();
+                Ok(())
+            } else {
+                self.err("bad literal")
+            }
+        }
+
+        fn string(&mut self) -> Result<(), String> {
+            self.i += 1; // opening quote, checked by the caller
+            while let Some(&c) = self.b.get(self.i) {
+                match c {
+                    b'"' => {
+                        self.i += 1;
+                        return Ok(());
+                    }
+                    b'\\' => self.i += 2,
+                    _ => self.i += 1,
+                }
+            }
+            self.err("unterminated string")
+        }
+
+        fn digits(&mut self) -> bool {
+            let start = self.i;
+            while self.b.get(self.i).is_some_and(|c| c.is_ascii_digit()) {
+                self.i += 1;
+            }
+            self.i > start
+        }
+
+        fn number(&mut self) -> Result<(), String> {
+            if self.b.get(self.i) == Some(&b'-') {
+                self.i += 1;
+            }
+            if !self.digits() {
+                return self.err("expected digits");
+            }
+            if self.b.get(self.i) == Some(&b'.') {
+                self.i += 1;
+                if !self.digits() {
+                    return self.err("expected fraction digits");
+                }
+            }
+            if matches!(self.b.get(self.i).copied(), Some(b'e' | b'E')) {
+                self.i += 1;
+                if matches!(self.b.get(self.i).copied(), Some(b'+' | b'-')) {
+                    self.i += 1;
+                }
+                if !self.digits() {
+                    return self.err("expected exponent digits");
+                }
+            }
+            Ok(())
+        }
+
+        fn seq(&mut self, close: u8, item: fn(&mut Self) -> Result<(), String>) -> Result<(), String> {
+            self.i += 1; // opening bracket, checked by the caller
+            self.ws();
+            if self.b.get(self.i) == Some(&close) {
+                self.i += 1;
+                return Ok(());
+            }
+            loop {
+                item(self)?;
+                self.ws();
+                match self.b.get(self.i).copied() {
+                    Some(b',') => {
+                        self.i += 1;
+                        self.ws();
+                    }
+                    Some(c) if c == close => {
+                        self.i += 1;
+                        return Ok(());
+                    }
+                    _ => return self.err("expected ',' or closer"),
+                }
+            }
+        }
+
+        fn member(&mut self) -> Result<(), String> {
+            if self.b.get(self.i) != Some(&b'"') {
+                return self.err("expected member key");
+            }
+            self.string()?;
+            self.ws();
+            if self.b.get(self.i) != Some(&b':') {
+                return self.err("expected ':'");
+            }
+            self.i += 1;
+            self.value()
+        }
+
+        fn value(&mut self) -> Result<(), String> {
+            self.ws();
+            match self.b.get(self.i).copied() {
+                Some(b'{') => self.seq(b'}', Self::member),
+                Some(b'[') => self.seq(b']', Self::value),
+                Some(b'"') => self.string(),
+                Some(b't') => self.lit("true"),
+                Some(b'f') => self.lit("false"),
+                Some(b'n') => self.lit("null"),
+                Some(c) if c.is_ascii_digit() || c == b'-' => self.number(),
+                _ => self.err("expected value"),
+            }
+        }
+    }
+    let mut p = P { b: s.as_bytes(), i: 0 };
+    p.value()?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(format!("trailing data at byte {}", p.i));
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,5 +379,57 @@ mod tests {
     fn table_rejects_bad_arity() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn bench_rows_roundtrip_through_the_validator() {
+        let rows = vec![
+            BenchRow {
+                bench: "kernel_stream_qt8".into(),
+                shape: "B16_N1024_d64_p1".into(),
+                ns_per_step: 12345.678,
+                kv_bytes_copied: 8_650_752,
+            },
+            BenchRow {
+                bench: "decode \"quoted\\name\"".into(), // escapes survive
+                shape: "B1_N1024_d64_p8".into(),
+                ns_per_step: f64::NAN, // clamped, must still parse
+                kv_bytes_copied: 0,
+            },
+        ];
+        let json = bench_rows_to_json(&rows);
+        validate_json(&json).expect("emitted rows must be valid JSON");
+        assert!(json.contains("\"ns_per_step\": 12345.678"));
+        assert!(json.contains("\"kv_bytes_copied\": 8650752"));
+        assert!(json.contains("\\\"quoted\\\\name\\\""));
+        // empty row set is a valid (empty) array
+        validate_json(&bench_rows_to_json(&[])).expect("empty array");
+    }
+
+    #[test]
+    fn validator_accepts_json_and_rejects_garbage() {
+        for ok in [
+            "[]",
+            "{}",
+            "  [ {\"a\": 1, \"b\": [true, false, null]}, -2.5e-3 ]  ",
+            "\"str with \\\" escape\"",
+            "-0.5",
+        ] {
+            validate_json(ok).unwrap_or_else(|e| panic!("{ok:?} rejected: {e}"));
+        }
+        for bad in [
+            "",
+            "[1,]",
+            "{\"a\" 1}",
+            "{\"a\": }",
+            "[1} ",
+            "\"unterminated",
+            "01x",
+            "[1] trailing",
+            "1.",
+            "nul",
+        ] {
+            assert!(validate_json(bad).is_err(), "{bad:?} accepted");
+        }
     }
 }

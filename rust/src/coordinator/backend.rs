@@ -60,7 +60,11 @@ impl Backend for SimBackend {
         // (models the preloaded-SRAM assumption; Arc pointer identity is
         // the cache key — ABA-safe because the accelerator retains the
         // loaded Arc).  No copy, no rounding, no V->LNS reconversion —
-        // the store prepared everything once at `put()`.
+        // the store prepared everything once at `put()`.  The batch
+        // itself runs on the query-tiled two-axis grid inside
+        // `Accelerator::compute_batch` (attention::kernel), so even a
+        // single-query decode batch parallelizes across the session's
+        // resident KV blocks; the cycle model is unaffected.
         let key = Arc::as_ptr(kv.prepared()) as usize;
         if self.loaded_session != Some(key) {
             self.accel.load_prepared(kv.prepared().clone())?;

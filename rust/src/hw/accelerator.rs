@@ -134,13 +134,27 @@ impl Accelerator {
                 }
                 out
             }
-            // prepared path: resident LNS lanes, zero-copy block views,
-            // pool fan-out — bit-identical to the golden blocked model
-            Arith::Hfa => kv.attention_blocked(&q, p, None),
+            // prepared path: resident LNS lanes resolved through the
+            // chunk table, batch compute grid-scheduled by the
+            // query-tiled kernel — the (query-tile x block-FAU) cells
+            // run as independent pool jobs and merge in block order
+            // (Eq. 16), mirroring Fig. 2's two parallel axes.
+            // Bit-identical to the sequential golden blocked model
+            // (tests below and rust/tests/hw_equivalence.rs).
+            Arith::Hfa => kv.attention_tiled(
+                &q,
+                p,
+                None,
+                crate::attention::kernel::DEFAULT_QUERY_TILE,
+            ),
         };
 
         // timing follows the *resident* length (== seq_len when full;
-        // shorter mid-decode), not the SRAM capacity
+        // shorter mid-decode), not the SRAM capacity.  The host-side
+        // grid schedule above does not enter the model: `simulate`
+        // prices the silicon's fixed p block-FAUs x parallel_queries
+        // datapath, which is unchanged by how the emulation spreads the
+        // same arithmetic over worker threads.
         let stats = simulate(
             self.cfg.head_dim,
             kv.n(),

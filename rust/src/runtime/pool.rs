@@ -194,10 +194,27 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    fan_out_chunked(n, 1, run)
+}
+
+/// [`fan_out`] with a floor on items per job: when per-item work is
+/// tiny (single queries, per-query merge chains), dispatching one boxed
+/// job per item spends more on the queue round-trip than on the work —
+/// this variant groups at least `min_per_job` consecutive indices into
+/// each job.  Results are always returned in index order, and the
+/// serial fallback computes identical values, so the chunking is
+/// invisible to callers (pinned by `fan_out_chunked_preserves_index_order`).
+pub fn fan_out_chunked<T, F>(n: usize, min_per_job: usize, run: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
     let pool = global();
     let width = pool.parallelism();
-    if n > 1 && width > 1 {
-        let chunk = n.div_ceil(width.min(n));
+    // even split across the pool, then floored so no job is dispatched
+    // for less than min_per_job items' worth of work
+    let chunk = n.div_ceil(width.min(n.max(1))).max(min_per_job.max(1));
+    if n > chunk && width > 1 {
         let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
         let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = slots
             .chunks_mut(chunk)
@@ -222,12 +239,20 @@ where
 
 /// The process-wide pool used by the attention hot path.  Sized to the
 /// machine minus one (the submitting thread helps), spawned on first use,
-/// never torn down.
+/// never torn down.  `HFA_POOL_THREADS` overrides the worker count
+/// (0 = no workers, every fan-out runs serially on the submitting
+/// thread) — the knob behind EXPERIMENTS.md §Tiling's single-thread
+/// tile-reuse measurement.
 pub fn global() -> &'static WorkerPool {
     static POOL: OnceLock<WorkerPool> = OnceLock::new();
     POOL.get_or_init(|| {
-        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        WorkerPool::new(cores.saturating_sub(1))
+        let workers = std::env::var("HFA_POOL_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).saturating_sub(1)
+            });
+        WorkerPool::new(workers)
     })
 }
 
@@ -310,6 +335,21 @@ mod tests {
             })
             .collect();
         pool.run_scoped(jobs);
+    }
+
+    #[test]
+    fn fan_out_chunked_preserves_index_order() {
+        // whatever the chunking (parallel split, floored jobs, serial
+        // fallback), result i must be run(i)
+        for (n, min) in [(0usize, 4usize), (1, 4), (7, 1), (64, 8), (100, 3), (5, 100)] {
+            let out = fan_out_chunked(n, min, |i| i * 3 + 1);
+            let want: Vec<usize> = (0..n).map(|i| i * 3 + 1).collect();
+            assert_eq!(out, want, "n={n} min_per_job={min}");
+        }
+        // and it computes exactly what plain fan_out computes
+        let a = fan_out(33, |i| i as u64 * 7 + 2);
+        let b = fan_out_chunked(33, 5, |i| i as u64 * 7 + 2);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -1,0 +1,72 @@
+//! Exact K/V stream-traffic pin for the query-tiled kernel: per-query
+//! streaming (`qt = 1`, the seed behaviour) reads every resident row
+//! once **per query**; a `QT`-tile reads it once **per tile** — a
+//! `QT`-fold reduction, measured by the process-wide
+//! `kernel::kv_stream_bytes` counter.
+//!
+//! Sole test in this binary: the counter is process-wide, so it can
+//! only be pinned where no other test runs concurrently (same
+//! convention as `append_traffic.rs` for the write-traffic counter).
+
+use hfa::attention::kernel;
+use hfa::attention::prepared::PreparedKv;
+use hfa::proptest::Rng;
+use hfa::Mat;
+
+#[test]
+fn tile_streams_each_kv_row_once_per_tile_not_per_query() {
+    let (b, n, d) = (16usize, 64usize, 8usize);
+    let qt = kernel::DEFAULT_QUERY_TILE; // 8: b/qt = 2 tiles exactly
+    let mut rng = Rng::new(20_260_728);
+    let k = Mat::from_vec(n, d, rng.normal_vec(n * d)).round_bf16();
+    let v = Mat::from_vec(n, d, rng.normal_vec(n * d)).round_bf16();
+    // chunk capacity 16: the count-driven blocks below cross chunk
+    // boundaries or align with them — traffic must not depend on that
+    let kv = PreparedKv::with_block_rows(k, v, 16);
+    let q = Mat::from_vec(b, d, rng.normal_vec(b * d)).round_bf16();
+    let rsb = kernel::row_stream_bytes(d, d);
+
+    // qt = 1: per-query streaming — B x N rows per call
+    let s0 = kernel::kv_stream_bytes();
+    let _ = kv.attention_tiled(&q, 1, None, 1);
+    let per_query = kernel::kv_stream_bytes() - s0;
+    assert_eq!(per_query, (b * n) as u64 * rsb, "qt=1 must stream B x N rows");
+
+    // qt = QT: once per tile — ceil(B/QT) x N rows per call
+    let s1 = kernel::kv_stream_bytes();
+    let _ = kv.attention_tiled(&q, 1, None, qt);
+    let tiled = kernel::kv_stream_bytes() - s1;
+    assert_eq!(tiled, (b.div_ceil(qt) * n) as u64 * rsb, "qt={qt} must stream per tile");
+    assert_eq!(per_query, qt as u64 * tiled, "traffic must drop exactly QT-fold");
+
+    // the two-axis grid partitions the same plane: splitting the KV
+    // axis into blocks moves no extra bytes
+    let s2 = kernel::kv_stream_bytes();
+    let _ = kv.attention_tiled(&q, 4, None, qt);
+    assert_eq!(kernel::kv_stream_bytes() - s2, tiled, "blocked grid total traffic");
+
+    // ragged everything: 5 queries (one short tile) x 3 ragged blocks
+    // still covers each (tile, row) pair exactly once
+    let q5 = Mat::from_vec(5, d, rng.normal_vec(5 * d)).round_bf16();
+    let s3 = kernel::kv_stream_bytes();
+    let _ = kv.attention_tiled(&q5, 3, None, 4);
+    let ragged = kernel::kv_stream_bytes() - s3;
+    assert_eq!(ragged, (5usize.div_ceil(4) * n) as u64 * rsb, "ragged tile/block traffic");
+
+    // masked calls stay exact: rows [0, 10) are masked for every query
+    // in the (single) tile, so they are never streamed at all
+    let q4 = Mat::from_vec(4, d, rng.normal_vec(4 * d)).round_bf16();
+    let mut mask = vec![true; 4 * n];
+    for bi in 0..4 {
+        for i in 0..10 {
+            mask[bi * n + i] = false;
+        }
+    }
+    let s4 = kernel::kv_stream_bytes();
+    let _ = kv.full().partial_states(&q4, None, Some(&mask));
+    assert_eq!(
+        kernel::kv_stream_bytes() - s4,
+        (n - 10) as u64 * rsb,
+        "fully-masked rows must not be charged"
+    );
+}

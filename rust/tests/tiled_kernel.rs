@@ -1,0 +1,193 @@
+//! Bit-exactness of the query-tiled, two-axis-parallel kernel: for
+//! every query-tile height, KV-block count and chunk capacity — ragged
+//! or not, batch 1 or batch >> tile — the grid-scheduled path must
+//! produce byte-identical outputs to the seed per-row datapath
+//! (`HfaState::step` one query at a time, sequential block walk,
+//! in-order Eq. 16 merges).  The references below are written straight
+//! from the public primitives, independent of the kernel under test.
+
+use hfa::attention::hfa::{value_to_lns, HfaState};
+use hfa::attention::merge::merge_hfa;
+use hfa::attention::prepared::{kv_block_ranges, PreparedKv};
+use hfa::proptest::Rng;
+use hfa::tensor::dot_f32;
+use hfa::Mat;
+
+fn bits(m: &Mat) -> Vec<u32> {
+    m.data.iter().map(|x| x.to_bits()).collect()
+}
+
+fn rand_case(rng: &mut Rng, b: usize, n: usize, d: usize) -> (Mat, Mat, Mat) {
+    (
+        Mat::from_vec(b, d, rng.normal_vec(b * d)).round_bf16(),
+        Mat::from_vec(n, d, rng.normal_vec(n * d)).round_bf16(),
+        Mat::from_vec(n, d, rng.normal_vec(n * d)).round_bf16(),
+    )
+}
+
+/// Seed blocked reference: per query, walk each count-driven block
+/// serially (per-row `step`), then merge the per-block partials in
+/// block order — exactly the pre-kernel algorithm.
+fn seed_blocked_attention(q: &Mat, k: &Mat, v: &Mat, num_blocks: usize) -> Mat {
+    let n = k.rows;
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let v_lns: Vec<_> = (0..n).map(|i| value_to_lns(v.row(i), &mut None)).collect();
+    let mut out = Mat::zeros(q.rows, v.cols);
+    for bi in 0..q.rows {
+        let mut acc: Option<HfaState> = None;
+        for (lo, hi) in kv_block_ranges(n, num_blocks) {
+            let mut st = HfaState::new(v.cols);
+            for i in lo..hi {
+                let s = dot_f32(q.row(bi), k.row(i)) * scale;
+                st.step(s, &v_lns[i], &mut None);
+            }
+            acc = Some(match acc {
+                None => st,
+                Some(prev) => merge_hfa(&prev, &st, &mut None),
+            });
+        }
+        let st = acc.unwrap_or_else(|| HfaState::new(v.cols));
+        out.row_mut(bi).copy_from_slice(&st.finalize());
+    }
+    out
+}
+
+/// Seed masked reference over one KV range: per query, per row, skip
+/// masked pairs (mask is `(B, hi-lo)` relative to the range).
+fn seed_masked_states(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    lo: usize,
+    hi: usize,
+    mask: Option<&[bool]>,
+) -> Vec<HfaState> {
+    let span = hi - lo;
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let v_lns: Vec<_> = (lo..hi).map(|i| value_to_lns(v.row(i), &mut None)).collect();
+    (0..q.rows)
+        .map(|bi| {
+            let mut st = HfaState::new(v.cols);
+            for i in 0..span {
+                if mask.map(|m| !m[bi * span + i]).unwrap_or(false) {
+                    continue;
+                }
+                let s = dot_f32(q.row(bi), k.row(lo + i)) * scale;
+                st.step(s, &v_lns[i], &mut None);
+            }
+            st
+        })
+        .collect()
+}
+
+fn assert_states_eq(got: &[HfaState], want: &[HfaState], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: state count");
+    for (qi, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.m.to_bits(), w.m.to_bits(), "{ctx}: query {qi} running max");
+        assert_eq!(g.acc, w.acc, "{ctx}: query {qi} accumulator lanes");
+    }
+}
+
+#[test]
+fn tiled_grid_bit_identical_to_seed_per_row_path() {
+    // sweep (B, N, d) x chunk capacity x block count x tile height,
+    // covering B=1 (decode), B < tile, B/N not divisible by anything,
+    // N < block count, and tiles above the clamp
+    let mut rng = Rng::new(20_260_728);
+    let cases: &[(usize, usize, usize)] = &[
+        (1, 8, 4),   // decode step, tiny KV
+        (1, 37, 8),  // decode step, ragged N
+        (2, 16, 8),
+        (5, 33, 8),  // nothing divides anything
+        (8, 64, 16), // even geometry
+        (3, 1, 4),   // single KV row
+        (17, 40, 8), // B not divisible by any tile below
+    ];
+    for &(b, n, d) in cases {
+        let (q, k, v) = rand_case(&mut rng, b, n, d);
+        for &br in &[5usize, 16, 256] {
+            let kv = PreparedKv::with_block_rows(k.clone(), v.clone(), br);
+            for &p in &[1usize, 2, 4, 7] {
+                let seed = seed_blocked_attention(&q, &k, &v, p);
+                for &qt in &[1usize, 2, 3, 8, 64] {
+                    let got = kv.attention_tiled(&q, p, None, qt);
+                    assert_eq!(
+                        bits(&got),
+                        bits(&seed),
+                        "b={b} n={n} d={d} br={br} p={p} qt={qt}"
+                    );
+                }
+                // the default-tile entry point is the same grid
+                assert_eq!(
+                    bits(&kv.attention_blocked(&q, p, None)),
+                    bits(&seed),
+                    "b={b} n={n} d={d} br={br} p={p} default tile"
+                );
+            }
+            // unblocked full path == p=1 reference
+            let seed1 = seed_blocked_attention(&q, &k, &v, 1);
+            assert_eq!(
+                bits(&kv.attention(&q, None, None)),
+                bits(&seed1),
+                "b={b} n={n} d={d} br={br} full"
+            );
+        }
+    }
+}
+
+#[test]
+fn dense_golden_path_rides_the_same_grid_bit_identically() {
+    // hfa::attention_blocked (dense borrowed planes) now grid-schedules
+    // too; it must still match the seed merge chain exactly
+    let mut rng = Rng::new(31_337);
+    for &(b, n, d, p) in &[(1usize, 24usize, 8usize, 4usize), (9, 33, 8, 3), (4, 7, 4, 8)] {
+        let (q, k, v) = rand_case(&mut rng, b, n, d);
+        let seed = seed_blocked_attention(&q, &k, &v, p);
+        let got = hfa::attention::hfa::attention_blocked(&q, &k, &v, p, None, &mut None);
+        assert_eq!(bits(&got), bits(&seed), "dense b={b} n={n} d={d} p={p}");
+    }
+}
+
+#[test]
+fn masked_tiled_kernel_bit_exact_across_chunk_crossing_ranges() {
+    // chunk capacity 8 on n=37: the ranges below start/end mid-chunk and
+    // cross one or more chunk boundaries.  Random masks must match the
+    // seed skip-semantics bitwise, and an all-true mask must be
+    // indistinguishable from no mask at all (the hoisted mask rows must
+    // not perturb the unmasked fast path).
+    let mut rng = Rng::new(77_003);
+    let (b, n, d) = (5usize, 37usize, 8usize);
+    let (q, k, v) = rand_case(&mut rng, b, n, d);
+    let kv = PreparedKv::with_block_rows(k.clone(), v.clone(), 8);
+    for &(lo, hi) in &[(0usize, 37usize), (4, 12), (7, 25), (30, 37)] {
+        let span = hi - lo;
+        let ctx = format!("range [{lo}, {hi})");
+        let view = kv.view(lo, hi);
+
+        let mask: Vec<bool> = (0..b * span).map(|_| rng.below(3) != 0).collect();
+        let got = view.partial_states(&q, None, Some(&mask));
+        let want = seed_masked_states(&q, &k, &v, lo, hi, Some(&mask));
+        assert_states_eq(&got, &want, &format!("{ctx} random mask"));
+
+        let all_true = vec![true; b * span];
+        let with_mask = view.partial_states(&q, None, Some(&all_true));
+        let without = view.partial_states(&q, None, None);
+        assert_states_eq(&with_mask, &without, &format!("{ctx} all-true vs none"));
+        let unmasked_seed = seed_masked_states(&q, &k, &v, lo, hi, None);
+        assert_states_eq(&without, &unmasked_seed, &format!("{ctx} unmasked"));
+    }
+}
+
+#[test]
+fn batch_one_grid_equals_batch_one_sequential() {
+    // the decode configuration the grid exists for: one query, many
+    // resident blocks — the parallel schedule must not change a bit
+    let mut rng = Rng::new(8_086);
+    let (q, k, v) = rand_case(&mut rng, 1, 256, 16);
+    let kv = PreparedKv::with_block_rows(k.clone(), v.clone(), 32); // 8 resident chunks
+    let seed8 = seed_blocked_attention(&q, &k, &v, 8);
+    assert_eq!(bits(&kv.attention_blocked(&q, 8, None)), bits(&seed8));
+    // the stored (append-stable) partition has 8 chunks of 32 rows: the
+    // count-driven 8-way split lands on the same boundaries here
+    assert_eq!(bits(&kv.attention_resident_blocks(&q, None)), bits(&seed8));
+}
