@@ -35,6 +35,7 @@ fn main() -> anyhow::Result<()> {
     };
     let coord_cfg = CoordinatorConfig {
         max_batch: 16,
+        max_total_batch: 256,
         batch_window_us: 200,
         workers,
         queue_depth: 256,

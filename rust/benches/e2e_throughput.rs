@@ -68,6 +68,7 @@ fn main() -> anyhow::Result<()> {
     };
     let coord_cfg = CoordinatorConfig {
         max_batch: 16,
+        max_total_batch: 256,
         batch_window_us: 150,
         workers: 2,
         queue_depth: 256,
@@ -143,6 +144,79 @@ fn main() -> anyhow::Result<()> {
         eprintln!("(skipping PJRT backend row: artifacts missing)");
     }
     t.emit("e2e_throughput");
+
+    // Session fan-out (EXPERIMENTS.md §Fused-batching): S sessions with
+    // ONE in-flight query each — the worst-case regime for the old
+    // single-session batcher, which shipped S batch-size-1 dispatches
+    // per round.  The two-level batcher fuses each round into
+    // ~ceil(S / max_total_batch) super-batch dispatches; the
+    // "dispatches" and "sessions/dispatch" columns are exact structural
+    // counts from the metrics, machine-independent.
+    let fan_sessions = env_usize("HFA_BENCH_SESSIONS", 64);
+    let fan_rounds = env_usize("HFA_BENCH_FANOUT_ROUNDS", 8);
+    let prefill = (n / 4).max(1);
+    let mut ft = Table::new(
+        &format!(
+            "Session fan-out — {fan_sessions} sessions x 1 query/round, \
+             prefill {prefill} of N={n}, d={d}"
+        ),
+        &["sessions", "rounds", "QPS", "dispatches", "sessions/dispatch", "p99 us"],
+    );
+    {
+        let fan_coord = CoordinatorConfig {
+            max_batch: 16,
+            max_total_batch: 1024,
+            batch_window_us: 500,
+            workers: 2,
+            queue_depth: fan_sessions.max(256),
+        };
+        let kv = Arc::new(KvStore::new(n, d, fan_sessions));
+        for s in 0..fan_sessions {
+            kv.put(&format!("fan-{s}"), k.rows_slice(0, prefill), v.rows_slice(0, prefill))?;
+        }
+        let factories = (0..fan_coord.workers)
+            .map(|_| SimBackend::factory(Arith::Hfa, accel_cfg.clone()))
+            .collect();
+        let server = Server::start(&fan_coord, kv, factories)?;
+        let t0 = Instant::now();
+        for _ in 0..fan_rounds {
+            let rxs: Vec<_> = (0..fan_sessions)
+                .map(|s| loop {
+                    match server.submit(&format!("fan-{s}"), rng.normal_vec(d)) {
+                        Ok(rx) => break rx,
+                        Err(_) => std::thread::sleep(Duration::from_micros(50)),
+                    }
+                })
+                .collect();
+            for rx in rxs {
+                let r = rx.recv().expect("response");
+                assert!(r.ok(), "{:?}", r.output);
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let total_q = (fan_sessions * fan_rounds) as f64;
+        let qps = total_q / wall;
+        let snap = server.metrics.snapshot();
+        ft.row(&[
+            fan_sessions.to_string(),
+            fan_rounds.to_string(),
+            format!("{qps:.0}"),
+            snap.batches.to_string(),
+            format!("{:.1}", snap.mean_sessions),
+            format!("{:.0}", snap.p99_us),
+        ]);
+        // the structural dispatch count lives in the markdown/CSV table
+        // above; the JSON row keeps the schema honest (kv_bytes_copied
+        // is a byte counter — this scenario copies nothing)
+        json_rows.push(BenchRow {
+            bench: format!("fanout_s{fan_sessions}"),
+            shape: format!("S{fan_sessions}_N{n}_d{d}_prefill{prefill}"),
+            ns_per_step: 1e9 / qps.max(1e-9),
+            kv_bytes_copied: 0,
+        });
+        server.shutdown();
+    }
+    ft.emit("session_fanout");
 
     // raw accelerator batch compute (no coordinator) for overhead attribution
     let mut accel = Accelerator::new(Arith::Hfa, accel_cfg.clone());

@@ -306,12 +306,129 @@ fn merge_grid_cells(cells: &[Vec<HfaState>], nb: usize, b: usize, qt: usize) -> 
     })
 }
 
+/// One session's slice of a fused cross-session dispatch: the prepared
+/// KV set to attend over, its packed query rows, the KV-block partition
+/// to grid over, and (optionally) a full `(q.rows, kv.n())` mask plane.
+/// The scale is per-job because sessions in one dispatch may differ in
+/// resident geometry.
+pub struct GridJob<'a> {
+    pub kv: &'a PreparedKv,
+    pub q: &'a Mat,
+    pub blocks: &'a [(usize, usize)],
+    pub scale: f32,
+    /// Optional `(q.rows, kv.n())` boolean plane (true = attend); each
+    /// grid cell slices out its own block's mask rows.
+    pub mask: Option<&'a [bool]>,
+}
+
+/// Ragged cross-session grid scheduler: every `(job x query-tile x
+/// KV-block)` cell across **all** sessions is one independent pool job
+/// fanned out in a single [`fan_out`] pass — the batch-level extension
+/// of the two-axis grid (a worker dispatch spanning N one-query sessions
+/// exposes `sum_j blocks_j` cells instead of serializing per session).
+/// Each cell resolves rows through its own job's chunk table, so jobs
+/// may differ in resident length, block partition and mask.  Per-query
+/// merges then run in block index order within each job — the exact
+/// Eq. 16 chain of the sequential walk — so every job's output is
+/// bit-identical to scheduling that session alone (pinned by
+/// `rust/tests/tiled_kernel.rs` and `rust/tests/fused_serving.rs`).
+pub fn grid_states_multi(jobs: &[GridJob<'_>], qt: usize) -> Vec<Vec<HfaState>> {
+    let qt = clamp_tile(qt);
+    // flat cell descriptors `(job, tile range, block index)`, job-major /
+    // tile-major / block-minor — the single-job layout is exactly the
+    // pre-fusion grid's
+    let mut cell_desc: Vec<(usize, (usize, usize), usize)> = Vec::new();
+    let mut bases: Vec<usize> = Vec::with_capacity(jobs.len());
+    for (ji, job) in jobs.iter().enumerate() {
+        bases.push(cell_desc.len());
+        if job.blocks.is_empty() || job.q.rows == 0 {
+            continue;
+        }
+        for tile in fixed_block_ranges(job.q.rows, qt) {
+            for bi in 0..job.blocks.len() {
+                cell_desc.push((ji, tile, bi));
+            }
+        }
+    }
+    // hoisted per-(job, block) mask planes: the tile kernel wants each
+    // block's columns as a range-relative (B, span) plane, and every
+    // tile of a block reads the same plane — slice it once per block
+    // here, not once per (tile x block) cell inside the fan-out
+    let sub_masks: Vec<Vec<Vec<bool>>> = jobs
+        .iter()
+        .map(|job| {
+            let Some(m) = job.mask else { return Vec::new() };
+            let n = job.kv.n();
+            job.blocks
+                .iter()
+                .map(|&(lo, hi)| {
+                    let span = hi - lo;
+                    let mut sub = Vec::with_capacity(job.q.rows * span);
+                    for bi in 0..job.q.rows {
+                        sub.extend_from_slice(&m[bi * n + lo..bi * n + hi]);
+                    }
+                    sub
+                })
+                .collect()
+        })
+        .collect();
+    let cells: Vec<Vec<HfaState>> = fan_out(cell_desc.len(), |c| {
+        let (ji, tile, bi) = cell_desc[c];
+        let job = &jobs[ji];
+        let mask = if job.mask.is_some() { Some(sub_masks[ji][bi].as_slice()) } else { None };
+        tile_states_prepared(job.kv, job.q, tile, job.blocks[bi], job.scale, mask)
+    });
+
+    // per-query Eq. 16 merge chains for every multi-block job, fanned
+    // out together (chunked — one chain is far too small for a job)
+    let merge_list: Vec<(usize, usize)> = jobs
+        .iter()
+        .enumerate()
+        .filter(|(_, j)| j.blocks.len() > 1 && j.q.rows > 0)
+        .flat_map(|(ji, j)| (0..j.q.rows).map(move |qi| (ji, qi)))
+        .collect();
+    let merged: Vec<HfaState> = fan_out_chunked(merge_list.len(), MERGE_MIN_PER_JOB, |i| {
+        let (ji, qi) = merge_list[i];
+        let nb = jobs[ji].blocks.len();
+        let (ti, t) = (qi / qt, qi % qt);
+        let base = bases[ji] + ti * nb;
+        let mut acc = cells[base][t].clone();
+        for bj in 1..nb {
+            acc = merge_hfa(&acc, &cells[base + bj][t], &mut None);
+        }
+        acc
+    });
+
+    // assemble per-job outputs: merged chains for multi-block jobs,
+    // flattened tile cells for single-block jobs, default (zero) states
+    // for empty grids
+    let mut cells = cells;
+    let mut merged = merged.into_iter();
+    let mut out: Vec<Vec<HfaState>> = Vec::with_capacity(jobs.len());
+    for (ji, job) in jobs.iter().enumerate() {
+        let b = job.q.rows;
+        let nb = job.blocks.len();
+        if nb == 0 || b == 0 {
+            out.push((0..b).map(|_| HfaState::new(job.kv.dv())).collect());
+        } else if nb == 1 {
+            let tiles = b.div_ceil(qt);
+            out.push(
+                (0..tiles).flat_map(|ti| std::mem::take(&mut cells[bases[ji] + ti])).collect(),
+            );
+        } else {
+            out.push(merged.by_ref().take(b).collect());
+        }
+    }
+    out
+}
+
 /// Two-axis `(query-tile x KV-block)` grid over a chunked KV set: every
 /// cell is one independent pool job, so a batch-1 decode step still
 /// exposes `blocks.len()`-way parallelism (Fig. 2's two parallel axes),
 /// then each query's partials merge in deterministic block order.
 /// Bit-identical to the sequential block walk for every `qt` and block
-/// partition (pinned by `rust/tests/tiled_kernel.rs`).
+/// partition (pinned by `rust/tests/tiled_kernel.rs`).  The single-job
+/// case of [`grid_states_multi`].
 pub fn grid_states_prepared(
     kv: &PreparedKv,
     q: &Mat,
@@ -319,20 +436,9 @@ pub fn grid_states_prepared(
     scale: f32,
     qt: usize,
 ) -> Vec<HfaState> {
-    let b = q.rows;
-    if blocks.is_empty() || b == 0 {
-        return (0..b).map(|_| HfaState::new(kv.dv())).collect();
-    }
-    let qt = clamp_tile(qt);
-    let tiles = fixed_block_ranges(b, qt);
-    let nb = blocks.len();
-    let cells: Vec<Vec<HfaState>> = fan_out(tiles.len() * nb, |c| {
-        tile_states_prepared(kv, q, tiles[c / nb], blocks[c % nb], scale, None)
-    });
-    if nb == 1 {
-        return cells.into_iter().flatten().collect();
-    }
-    merge_grid_cells(&cells, nb, b, qt)
+    grid_states_multi(&[GridJob { kv, q, blocks, scale, mask: None }], qt)
+        .pop()
+        .expect("one job in, one state set out")
 }
 
 /// Dense-plane counterpart of [`grid_states_prepared`] — backs the
@@ -403,6 +509,95 @@ mod tests {
         // zero queries: empty state vector whatever the blocks
         let q0 = Mat::zeros(0, 4);
         assert!(grid_states_prepared(&kv, &q0, &[(0, 4)], 0.5, 4).is_empty());
+    }
+
+    #[test]
+    fn multi_session_grid_bit_identical_to_solo_grids() {
+        // a fused dispatch over sessions of different resident lengths,
+        // block partitions and batch sizes must reproduce each session's
+        // solo schedule bitwise — per-job merges never mix state
+        let mut rng = Rng::new(17);
+        let mk = |rng: &mut Rng, n: usize, d: usize, br: usize| {
+            PreparedKv::with_block_rows(
+                Mat::from_vec(n, d, rng.normal_vec(n * d)).round_bf16(),
+                Mat::from_vec(n, d, rng.normal_vec(n * d)).round_bf16(),
+                br,
+            )
+        };
+        let kv_a = mk(&mut rng, 23, 4, 8);
+        let kv_b = mk(&mut rng, 7, 4, 4);
+        let kv_c = mk(&mut rng, 40, 4, 16);
+        let q_a = Mat::from_vec(5, 4, rng.normal_vec(20)).round_bf16();
+        let q_b = Mat::from_vec(1, 4, rng.normal_vec(4)).round_bf16();
+        let q_c = Mat::from_vec(3, 4, rng.normal_vec(12)).round_bf16();
+        let blocks_a = crate::attention::prepared::kv_block_ranges(23, 3);
+        let blocks_b = crate::attention::prepared::kv_block_ranges(7, 1);
+        let blocks_c = crate::attention::prepared::kv_block_ranges(40, 4);
+        let jobs = [
+            GridJob { kv: &kv_a, q: &q_a, blocks: &blocks_a, scale: 0.5, mask: None },
+            GridJob { kv: &kv_b, q: &q_b, blocks: &blocks_b, scale: 0.25, mask: None },
+            GridJob { kv: &kv_c, q: &q_c, blocks: &blocks_c, scale: 0.5, mask: None },
+        ];
+        for qt in [1usize, 2, 8] {
+            let fused = grid_states_multi(&jobs, qt);
+            assert_eq!(fused.len(), 3);
+            for (ji, (job, got)) in jobs.iter().zip(&fused).enumerate() {
+                let solo = grid_states_prepared(job.kv, job.q, job.blocks, job.scale, qt);
+                assert_eq!(got.len(), solo.len(), "job {ji} qt={qt}");
+                for (g, s) in got.iter().zip(&solo) {
+                    assert_eq!(g.m.to_bits(), s.m.to_bits(), "job {ji} qt={qt}");
+                    assert_eq!(g.acc, s.acc, "job {ji} qt={qt}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_grid_masked_job_matches_masked_tile_walk() {
+        // a fused job carrying a (B, n) mask must slice per-block mask
+        // columns exactly like the single-range masked tile path
+        let mut rng = Rng::new(23);
+        let n = 19;
+        let k = Mat::from_vec(n, 4, rng.normal_vec(n * 4)).round_bf16();
+        let v = Mat::from_vec(n, 4, rng.normal_vec(n * 4)).round_bf16();
+        let kv = PreparedKv::with_block_rows(k, v, 8);
+        let b = 3;
+        let q = Mat::from_vec(b, 4, rng.normal_vec(b * 4)).round_bf16();
+        let mask: Vec<bool> = (0..b * n).map(|i| i % 3 != 1).collect();
+        let blocks = [(0usize, n)];
+        let jobs =
+            [GridJob { kv: &kv, q: &q, blocks: &blocks, scale: 0.5, mask: Some(&mask) }];
+        let fused = grid_states_multi(&jobs, 2).pop().unwrap();
+        let direct = tiled_states_prepared(&kv, &q, (0, n), 0.5, Some(&mask), 2);
+        for (g, s) in fused.iter().zip(&direct) {
+            assert_eq!(g.m.to_bits(), s.m.to_bits());
+            assert_eq!(g.acc, s.acc);
+        }
+        // multi-block masked job: per-cell column slicing + block-order
+        // merge must equal the hand-built per-block walk
+        let two_blocks = [(0usize, 11usize), (11, n)];
+        let jobs2 =
+            [GridJob { kv: &kv, q: &q, blocks: &two_blocks, scale: 0.5, mask: Some(&mask) }];
+        let fused2 = grid_states_multi(&jobs2, 8).pop().unwrap();
+        for (bi, got) in fused2.iter().enumerate() {
+            let mut want: Option<HfaState> = None;
+            for &(lo, hi) in &two_blocks {
+                let span = hi - lo;
+                let mut sub = Vec::new();
+                for row in 0..b {
+                    sub.extend_from_slice(&mask[row * n + lo..row * n + hi]);
+                }
+                debug_assert_eq!(sub.len(), b * span);
+                let st = tile_states_prepared(&kv, &q, (0, b), (lo, hi), 0.5, Some(&sub));
+                want = Some(match want {
+                    None => st[bi].clone(),
+                    Some(prev) => merge_hfa(&prev, &st[bi], &mut None),
+                });
+            }
+            let want = want.unwrap();
+            assert_eq!(got.m.to_bits(), want.m.to_bits(), "query {bi}");
+            assert_eq!(got.acc, want.acc, "query {bi}");
+        }
     }
 
     #[test]

@@ -104,6 +104,25 @@ mod tests {
     }
 
     #[test]
+    fn hfa_merge_of_two_empty_blocks_stays_empty() {
+        // both operands never stepped (every key masked for this query,
+        // in every block): m is -inf on both sides, so the quantizer sees
+        // -inf - -inf = NaN — `quant_diff_q7` maps it to the clamp floor
+        // and the zero lanes absorb the shift, so the merge chain of any
+        // length stays the empty state and finalizes to a zero row
+        // instead of NaN (the fully-masked grid edge, also pinned end to
+        // end in `attention::tests::fully_masked_rows_return_zero_not_nan`)
+        let empty = HfaState::new(4);
+        let mut acc = HfaState::new(4);
+        for _ in 0..3 {
+            acc = merge_hfa(&acc, &empty, &mut None);
+        }
+        assert_eq!(acc.m, f32::NEG_INFINITY);
+        assert_eq!(acc.acc, empty.acc, "zero lanes must survive the merge chain");
+        assert_eq!(acc.finalize(), vec![0.0; 4]);
+    }
+
+    #[test]
     fn hfa_merge_with_empty_block_is_identity() {
         // a block that saw no keys (m = -inf, all lanes zero) must not
         // perturb the other operand

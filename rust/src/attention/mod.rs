@@ -146,6 +146,35 @@ mod tests {
         let kv = PreparedKv::new(k.clone(), v.clone());
         let o = kv.attention(&q, None, Some(&mask));
         assert_eq!(o.row(0), &[0.0f32; 4][..], "prepared path fully-masked row");
+
+        // the PR 4 kernel variants were never pinned on this edge: a
+        // query whose every resident row is masked must come out of the
+        // tile micro-kernel as the empty state (m = -inf, zero lanes),
+        // finalizing to a zero row — and the grid merge of *several*
+        // such empty per-block states (the -inf-minus--inf quantizer
+        // warmup case) must stay zero, not NaN
+        let tiled = kernel::tile_states_prepared(&kv, &q, (0, 2), (0, 8), 0.5, Some(&mask));
+        assert_eq!(tiled[0].m, f32::NEG_INFINITY, "tile: fully-masked query never stepped");
+        assert_eq!(tiled[0].finalize(), vec![0.0; 4], "tile_states_prepared fully-masked row");
+        assert!(tiled[1].finalize().iter().all(|x| x.is_finite()));
+        let v_lns = prepared::convert_values(&v);
+        let borrowed =
+            kernel::tile_states_borrowed(&q, &k, &v_lns, (0, 2), (0, 8), 0.5, Some(&mask));
+        assert_eq!(borrowed[0].finalize(), vec![0.0; 4], "tile_states_borrowed");
+        let blocks = [(0usize, 3usize), (3, 6), (6, 8)];
+        let grid = kernel::grid_states_multi(
+            &[kernel::GridJob { kv: &kv, q: &q, blocks: &blocks, scale: 0.5, mask: Some(&mask) }],
+            kernel::DEFAULT_QUERY_TILE,
+        )
+        .pop()
+        .unwrap();
+        assert_eq!(
+            grid[0].finalize(),
+            vec![0.0; 4],
+            "grid merge of all-masked per-block states must be zero, not NaN"
+        );
+        assert!(grid[1].finalize().iter().all(|x| x.is_finite()));
+
         // zero keys at all (empty mask domain) is the same edge for the
         // fa2/hfa state finalizers
         let st = fa2::Fa2State::new(4);

@@ -486,6 +486,41 @@ impl PreparedKv {
     }
 }
 
+/// Fused cross-session H-FA: one `(prepared KV, queries)` pair per
+/// session, every session gridded over its own count-driven
+/// `kv_block_ranges(n_i, num_blocks)` partition, **all** cells fanned
+/// out through a single pool pass ([`kernel::grid_states_multi`]).
+/// Per-query merges stay in block order within each session, so every
+/// output matrix is bit-identical to calling
+/// [`PreparedKv::attention_tiled`] on that session alone — fusion is a
+/// scheduling choice, never a numeric one (pinned by
+/// `rust/tests/fused_serving.rs`).
+pub fn attention_multi(
+    plan: &[(&PreparedKv, &Mat)],
+    num_blocks: usize,
+    scale: Option<f32>,
+    qt: usize,
+) -> Vec<Mat> {
+    let ranges: Vec<Vec<(usize, usize)>> =
+        plan.iter().map(|(kv, _)| kv_block_ranges(kv.n(), num_blocks)).collect();
+    let jobs: Vec<kernel::GridJob<'_>> = plan
+        .iter()
+        .zip(&ranges)
+        .map(|(&(kv, q), blocks)| kernel::GridJob {
+            kv,
+            q,
+            blocks: blocks.as_slice(),
+            scale: resolve_scale(scale, q.cols),
+            mask: None,
+        })
+        .collect();
+    kernel::grid_states_multi(&jobs, qt)
+        .into_iter()
+        .zip(plan)
+        .map(|(states, (kv, _))| finalize_states(&states, kv.dv()))
+        .collect()
+}
+
 impl<'a> KvBlockView<'a> {
     pub fn len(&self) -> usize {
         self.hi - self.lo

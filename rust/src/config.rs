@@ -44,6 +44,10 @@ impl Default for AcceleratorConfig {
 pub struct CoordinatorConfig {
     /// Max queries per formed batch (one FAU datapath pass).
     pub max_batch: usize,
+    /// Max total requests one cross-session super-batch dispatch may
+    /// carry (window-expired per-session groups are fused up to this
+    /// cap; clamped to at least `max_batch`).
+    pub max_total_batch: usize,
     /// Batch-forming window in microseconds.
     pub batch_window_us: u64,
     /// Worker threads executing batches.
@@ -56,6 +60,7 @@ impl Default for CoordinatorConfig {
     fn default() -> Self {
         CoordinatorConfig {
             max_batch: 16,
+            max_total_batch: 256,
             batch_window_us: 200,
             workers: 2,
             queue_depth: 256,
@@ -118,6 +123,8 @@ impl Config {
             cfg.accel.freq_mhz = v.parse().context("freq_mhz")?;
         }
         cfg.coord.max_batch = get_usize(&map, "max_batch", cfg.coord.max_batch)?;
+        cfg.coord.max_total_batch =
+            get_usize(&map, "max_total_batch", cfg.coord.max_total_batch)?;
         cfg.coord.workers = get_usize(&map, "workers", cfg.coord.workers)?;
         cfg.coord.queue_depth = get_usize(&map, "queue_depth", cfg.coord.queue_depth)?;
         if let Some(v) = map.get("batch_window_us") {

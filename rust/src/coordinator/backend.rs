@@ -1,5 +1,11 @@
 //! Execution backends the workers drive: the simulated accelerator
 //! (golden-model arithmetic + cycle timing) or a PJRT-compiled HLO kernel.
+//!
+//! The worker-facing entry point is **plan-based**
+//! ([`Backend::compute_plan`]): one `(session KV, packed queries)` pair
+//! per session of a fused cross-session super-batch, answered in one
+//! dispatch.  [`Backend::compute`] is the single-session convenience
+//! wrapper over it.
 
 use std::sync::Arc;
 
@@ -16,29 +22,84 @@ use crate::Mat;
 /// `Rc`); each worker owns a thread-local client + executable.
 pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send>;
 
-/// Something that can compute a batch of attention queries against a KV
-/// set.  `compute` receives the session's resident [`KvEntry`] (raw BF16
-/// matrices plus the prepared log-domain form) and the query batch;
-/// backends may cache per-session state internally.
+/// Something that can compute batches of attention queries against
+/// session KV sets.  `compute_plan` receives one entry per session of a
+/// fused dispatch — each the session's resident [`KvEntry`] (raw BF16
+/// matrices plus the prepared log-domain form) and its packed query
+/// batch — and returns one output matrix per entry, in plan order.
+/// Backends may cache per-session state internally; outputs must be
+/// independent of what else shares the plan (bit-identical to serving
+/// each session alone).
 pub trait Backend {
     fn head_dim(&self) -> usize;
     fn seq_len(&self) -> usize;
-    /// Preferred maximum batch (the batcher's cap).
+    /// Preferred maximum per-session batch (the batcher's per-session cap).
     fn max_batch(&self) -> usize;
-    fn compute(&mut self, kv: &KvEntry, q: &Mat) -> Result<Mat>;
+    /// Fused multi-session dispatch: one output `Mat` per plan entry.
+    fn compute_plan(&mut self, plan: &[(&KvEntry, &Mat)]) -> Result<Vec<Mat>>;
+    /// Single-session convenience wrapper over [`Backend::compute_plan`].
+    fn compute(&mut self, kv: &KvEntry, q: &Mat) -> Result<Mat> {
+        let mut outs = self.compute_plan(&[(kv, q)])?;
+        anyhow::ensure!(outs.len() == 1, "backend returned {} outputs for 1 entry", outs.len());
+        Ok(outs.pop().expect("checked length"))
+    }
     fn name(&self) -> String;
+}
+
+/// How many sessions' prepared buffers a backend keeps loaded at once —
+/// a small set of preloaded SRAM banks ([`SimBackend`]) or materialized
+/// dense planes ([`PjrtBackend`]) instead of the old single slot, which
+/// thrashed on every cross-session alternation.
+const LOADED_SESSIONS: usize = 8;
+
+/// Refresh the slot matching `hit` in a most-recently-used-first vector,
+/// returning whether it was resident.  On a miss the caller inserts its
+/// fresh entry at the front and truncates to [`LOADED_SESSIONS`].
+fn lru_promote<T>(slots: &mut Vec<T>, hit: impl Fn(&T) -> bool) -> bool {
+    match slots.iter().position(hit) {
+        Some(pos) => {
+            let entry = slots.remove(pos);
+            slots.insert(0, entry);
+            true
+        }
+        None => false,
+    }
 }
 
 /// Backend running the RTL-equivalent simulated accelerator.
 pub struct SimBackend {
     accel: Accelerator,
-    loaded_session: Option<usize>, // ptr identity of the prepared KV
+    /// Small LRU of loaded prepared sets, most recently used first.
+    /// Retaining the `Arc`s keeps pointer identity ABA-safe (a freed
+    /// session's address can never be reused while held here).
+    loaded: Vec<Arc<PreparedKv>>,
     pub total_cycles: u64,
+    /// Sessions swapped into the modelled SRAM (LRU misses) — the
+    /// figure the multi-slot cache exists to shrink.
+    pub session_loads: u64,
 }
 
 impl SimBackend {
     pub fn new(accel: Accelerator) -> SimBackend {
-        SimBackend { accel, loaded_session: None, total_cycles: 0 }
+        SimBackend { accel, loaded: Vec::new(), total_cycles: 0, session_loads: 0 }
+    }
+
+    /// Mark a session's prepared set loaded (no copy, no rounding, no
+    /// V->LNS reconversion — the store prepared everything once at
+    /// `put()`): an LRU hit refreshes its slot, a miss evicts the
+    /// least-recently-used Arc and counts a load.
+    fn touch_loaded(&mut self, kv: &Arc<PreparedKv>) {
+        if lru_promote(&mut self.loaded, |p| Arc::ptr_eq(p, kv)) {
+            return;
+        }
+        self.session_loads += 1;
+        self.loaded.insert(0, kv.clone());
+        self.loaded.truncate(LOADED_SESSIONS);
+    }
+
+    /// Prepared sets currently resident in the loaded-session cache.
+    pub fn loaded_sessions(&self) -> usize {
+        self.loaded.len()
     }
 }
 
@@ -55,24 +116,21 @@ impl Backend for SimBackend {
         64
     }
 
-    fn compute(&mut self, kv: &KvEntry, q: &Mat) -> Result<Mat> {
-        // swap in the session's prepared buffers only when they changed
-        // (models the preloaded-SRAM assumption; Arc pointer identity is
-        // the cache key — ABA-safe because the accelerator retains the
-        // loaded Arc).  No copy, no rounding, no V->LNS reconversion —
-        // the store prepared everything once at `put()`.  The batch
-        // itself runs on the query-tiled two-axis grid inside
-        // `Accelerator::compute_batch` (attention::kernel), so even a
-        // single-query decode batch parallelizes across the session's
-        // resident KV blocks; the cycle model is unaffected.
-        let key = Arc::as_ptr(kv.prepared()) as usize;
-        if self.loaded_session != Some(key) {
-            self.accel.load_prepared(kv.prepared().clone())?;
-            self.loaded_session = Some(key);
+    fn compute_plan(&mut self, plan: &[(&KvEntry, &Mat)]) -> Result<Vec<Mat>> {
+        // swap in whichever sessions are not already resident (Arc
+        // pointer identity is the cache key), then run the whole
+        // super-batch as one ragged cross-session grid dispatch: every
+        // (session x query-tile x KV-block) cell fans out through one
+        // pool pass inside `Accelerator::compute_plan`, while the cycle
+        // model prices the sessions as sequential sub-launches.
+        for (kv, _) in plan {
+            self.touch_loaded(kv.prepared());
         }
-        let (out, stats) = self.accel.compute_batch(q)?;
+        let accel_plan: Vec<(&Arc<PreparedKv>, &Mat)> =
+            plan.iter().map(|&(kv, q)| (kv.prepared(), q)).collect();
+        let (outs, stats) = self.accel.compute_plan(&accel_plan)?;
         self.total_cycles += stats.cycles;
-        Ok(out)
+        Ok(outs)
     }
 
     fn name(&self) -> String {
@@ -82,19 +140,20 @@ impl Backend for SimBackend {
 
 /// Backend running an AOT-compiled PJRT attention kernel.  The kernel has
 /// a fixed batch dimension; smaller batches are padded and sliced.  The
-/// kernel wants dense contiguous K/V operands, so the session's chunked
-/// prepared form is materialized once per session swap and cached by
-/// `Arc` identity (same policy as `SimBackend`'s loaded-session cache).
+/// kernel wants dense contiguous K/V operands, so each session's chunked
+/// prepared form is materialized once and cached by `Arc` identity in a
+/// small LRU (the static kernel cannot fuse sessions, so a plan runs as
+/// per-session kernel launches).
 pub struct PjrtBackend {
     exe: Arc<LoadedExecutable>,
     head_dim: usize,
     seq_len: usize,
     batch: usize,
-    /// The loaded session's prepared set and its dense K/V planes.  The
-    /// `Arc` is retained so pointer-identity comparison is ABA-safe (a
-    /// freed session's address can never be reused while we hold it) —
-    /// same policy as `SimBackend`/`Accelerator::load_prepared`.
-    loaded: Option<(Arc<PreparedKv>, Mat, Mat)>,
+    /// Loaded sessions' prepared sets and their dense K/V planes, most
+    /// recently used first.  The `Arc` is retained so pointer-identity
+    /// comparison is ABA-safe (a freed session's address can never be
+    /// reused while we hold it) — same policy as [`SimBackend`].
+    loaded: Vec<(Arc<PreparedKv>, Mat, Mat)>,
 }
 
 impl PjrtBackend {
@@ -104,7 +163,7 @@ impl PjrtBackend {
         seq_len: usize,
         batch: usize,
     ) -> PjrtBackend {
-        PjrtBackend { exe, head_dim, seq_len, batch, loaded: None }
+        PjrtBackend { exe, head_dim, seq_len, batch, loaded: Vec::new() }
     }
 
     /// Factory that loads the kernel on the worker thread (its own PJRT
@@ -119,6 +178,36 @@ impl PjrtBackend {
             Ok(Box::new(PjrtBackend::new(exe, spec.head_dim, spec.seq_len, spec.batch))
                 as Box<dyn Backend>)
         })
+    }
+
+    /// One session's kernel launch (pad to the static batch, slice back).
+    fn compute_one(&mut self, kv: &KvEntry, q: &Mat) -> Result<Mat> {
+        anyhow::ensure!(q.rows <= self.batch, "batch {} exceeds kernel {}", q.rows, self.batch);
+        let prepared = kv.prepared();
+        // the AOT kernel has a *static* (seq_len, head_dim) K/V shape: a
+        // short-prefill or mid-decode session (KvStore allows any
+        // residency up to capacity) cannot be shipped to it
+        anyhow::ensure!(
+            prepared.n() == self.seq_len && prepared.d() == self.head_dim,
+            "session KV {}x{} does not match the compiled kernel's static {}x{} \
+             (partial/decode sessions need a sim backend or a matching kernel)",
+            prepared.n(),
+            prepared.d(),
+            self.seq_len,
+            self.head_dim
+        );
+        // materialize the chunked session into the kernel's dense layout
+        // on first use (retained-Arc identity), refreshing its LRU slot
+        if !lru_promote(&mut self.loaded, |(p, _, _)| Arc::ptr_eq(p, prepared)) {
+            self.loaded.insert(0, (prepared.clone(), prepared.k_mat(), prepared.v_mat()));
+            self.loaded.truncate(LOADED_SESSIONS);
+        }
+        let (_, dense_k, dense_v) = &self.loaded[0];
+        // pad to the kernel's static batch
+        let mut padded = Mat::zeros(self.batch, self.head_dim);
+        padded.data[..q.data.len()].copy_from_slice(&q.data);
+        let out = self.exe.run_attention(&padded, dense_k, dense_v)?;
+        Ok(out.rows_slice(0, q.rows))
     }
 }
 
@@ -145,37 +234,8 @@ impl Backend for PjrtBackend {
         self.batch
     }
 
-    fn compute(&mut self, kv: &KvEntry, q: &Mat) -> Result<Mat> {
-        anyhow::ensure!(q.rows <= self.batch, "batch {} exceeds kernel {}", q.rows, self.batch);
-        let prepared = kv.prepared();
-        // the AOT kernel has a *static* (seq_len, head_dim) K/V shape: a
-        // short-prefill or mid-decode session (KvStore allows any
-        // residency up to capacity) cannot be shipped to it
-        anyhow::ensure!(
-            prepared.n() == self.seq_len && prepared.d() == self.head_dim,
-            "session KV {}x{} does not match the compiled kernel's static {}x{} \
-             (partial/decode sessions need a sim backend or a matching kernel)",
-            prepared.n(),
-            prepared.d(),
-            self.seq_len,
-            self.head_dim
-        );
-        // materialize the chunked session into the kernel's dense layout
-        // once per swap (retained-Arc identity — same caching as
-        // SimBackend, which keeps the loaded Arc inside the accelerator)
-        let stale = match &self.loaded {
-            Some((p, _, _)) => !Arc::ptr_eq(p, prepared),
-            None => true,
-        };
-        if stale {
-            self.loaded = Some((prepared.clone(), prepared.k_mat(), prepared.v_mat()));
-        }
-        let (_, dense_k, dense_v) = self.loaded.as_ref().expect("just loaded");
-        // pad to the kernel's static batch
-        let mut padded = Mat::zeros(self.batch, self.head_dim);
-        padded.data[..q.data.len()].copy_from_slice(&q.data);
-        let out = self.exe.run_attention(&padded, dense_k, dense_v)?;
-        Ok(out.rows_slice(0, q.rows))
+    fn compute_plan(&mut self, plan: &[(&KvEntry, &Mat)]) -> Result<Vec<Mat>> {
+        plan.iter().map(|&(kv, q)| self.compute_one(kv, q)).collect()
     }
 
     fn name(&self) -> String {
@@ -207,38 +267,77 @@ mod tests {
         SimBackend::new(Accelerator::new(Arith::Hfa, cfg))
     }
 
+    fn rand_entry(rng: &mut Rng, n: usize) -> KvEntry {
+        prepare_entry(
+            Mat::from_vec(n, 8, rng.normal_vec(n * 8)),
+            Mat::from_vec(n, 8, rng.normal_vec(n * 8)),
+        )
+    }
+
     #[test]
     fn sim_backend_caches_kv_by_identity() {
         let mut be = hfa_backend();
         let mut rng = Rng::new(3);
-        let entry = prepare_entry(
-            Mat::from_vec(32, 8, rng.normal_vec(256)),
-            Mat::from_vec(32, 8, rng.normal_vec(256)),
-        );
+        let entry = rand_entry(&mut rng, 32);
         let q = Mat::from_vec(2, 8, rng.normal_vec(16));
         let o1 = be.compute(&entry, &q).unwrap();
         let o2 = be.compute(&entry, &q).unwrap();
         assert_eq!(o1.data, o2.data);
         assert!(be.total_cycles > 0);
+        assert_eq!(be.session_loads, 1, "second compute must hit the loaded cache");
     }
 
     #[test]
-    fn sim_backend_swaps_sessions_correctly() {
+    fn sim_backend_lru_keeps_alternating_sessions_resident() {
+        // the single-slot seed reloaded on every cross-session
+        // alternation; the LRU must absorb a working set up to its cap
         let mut be = hfa_backend();
         let mut rng = Rng::new(5);
-        let e1 = prepare_entry(
-            Mat::from_vec(32, 8, rng.normal_vec(256)),
-            Mat::from_vec(32, 8, rng.normal_vec(256)),
-        );
-        let e2 = prepare_entry(
-            Mat::from_vec(32, 8, rng.normal_vec(256)),
-            Mat::from_vec(32, 8, rng.normal_vec(256)),
-        );
+        let e1 = rand_entry(&mut rng, 32);
+        let e2 = rand_entry(&mut rng, 32);
         let q = Mat::from_vec(1, 8, rng.normal_vec(8));
         let o1 = be.compute(&e1, &q).unwrap();
         let o2 = be.compute(&e2, &q).unwrap();
         let o1_again = be.compute(&e1, &q).unwrap();
         assert_ne!(o1.data, o2.data, "different sessions must differ");
         assert_eq!(o1.data, o1_again.data, "session swap must be lossless");
+        assert_eq!(be.session_loads, 2, "alternation within the LRU must not reload");
+        assert_eq!(be.loaded_sessions(), 2);
+        // blow past the cap: the oldest falls out and reloads on return
+        let extras: Vec<KvEntry> =
+            (0..LOADED_SESSIONS).map(|_| rand_entry(&mut rng, 32)).collect();
+        for e in &extras {
+            be.compute(e, &q).unwrap();
+        }
+        assert_eq!(be.loaded_sessions(), LOADED_SESSIONS);
+        let loads_before = be.session_loads;
+        be.compute(&e1, &q).unwrap();
+        assert_eq!(be.session_loads, loads_before + 1, "evicted session must reload");
+    }
+
+    #[test]
+    fn sim_backend_plan_bit_identical_to_solo_serving() {
+        // the acceptance property at the backend layer: a fused plan
+        // spanning sessions must equal serving each session alone,
+        // bitwise, whatever the plan composition
+        let mut rng = Rng::new(11);
+        let entries: Vec<KvEntry> =
+            [32usize, 9, 17].iter().map(|&n| rand_entry(&mut rng, n)).collect();
+        let queries: Vec<Mat> = [1usize, 3, 2]
+            .iter()
+            .map(|&b| Mat::from_vec(b, 8, rng.normal_vec(b * 8)))
+            .collect();
+        let mut fused_be = hfa_backend();
+        let plan: Vec<(&KvEntry, &Mat)> = entries.iter().zip(&queries).collect();
+        let fused = fused_be.compute_plan(&plan).unwrap();
+        assert_eq!(fused.len(), 3);
+        for ((entry, q), fused_out) in plan.iter().zip(&fused) {
+            let mut solo_be = hfa_backend();
+            let want = solo_be.compute(entry, q).unwrap();
+            assert_eq!(fused_out.data, want.data, "fused plan entry diverged from solo");
+        }
+        // one dispatch loaded all three sessions
+        assert_eq!(fused_be.session_loads, 3);
+        assert_eq!(fused_be.loaded_sessions(), 3);
     }
 }

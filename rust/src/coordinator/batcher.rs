@@ -1,46 +1,105 @@
-//! Dynamic batcher: groups queued requests by KV session into batches of
-//! up to `max_batch`, closing a batch when full or when the forming
-//! window expires — the standard continuous-batching front half.
+//! Dynamic batcher: groups queued requests by KV session into per-session
+//! groups of up to `max_batch`, then packs closed groups into
+//! **cross-session super-batches** — the batch former of a deployment
+//! whose traffic is millions of sessions with one in-flight query each,
+//! where single-session batching degenerates to batch-size-1 dispatches.
 //!
-//! Decode-step KV appends ([`Payload::Append`]) are sequencing barriers:
-//! an append closes the session's pending queries immediately and ships
-//! them in one batch with the append last, so the worker serves the
-//! queries against the pre-append KV and then applies the write.  The
-//! forming window of a session always counts from its *first* pending
-//! request — later sub-cap pushes and append traffic must not reset it.
+//! Two levels:
+//!
+//! * **Per-session groups** keep the original semantics exactly: the
+//!   forming window counts from the session's *first* pending request
+//!   (later sub-cap pushes and other sessions' traffic never reset it),
+//!   a group closes when it hits the per-session cap, and a decode-step
+//!   KV append ([`Payload::Append`]) is a sequencing barrier that closes
+//!   the session's pending queries immediately (queries first, append
+//!   last) — appends barrier **only their own session**.
+//! * **Super-batches** ([`Batch`]): a cap- or barrier-closed group ships
+//!   immediately (latency priority — it never waits for other sessions),
+//!   while window-expired groups are packed together, oldest deadline
+//!   first, into super-batches capped by `max_total` total requests.
+//!   One super-batch is one worker dispatch: N idle sessions' expired
+//!   singleton groups become one fused launch instead of N.
+//!
+//! [`Batcher::next_deadline`] exposes the earliest pending group's expiry
+//! so the serving loop can sleep exactly until it instead of polling on a
+//! fixed tick (which closed idle partial batches up to ~2x late).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
 
 use super::request::AttentionRequest;
 
-/// A formed batch: all requests share one KV session, in arrival order
-/// (any append is last).
-pub struct Batch {
+/// One session's slice of a super-batch: requests in arrival order (any
+/// append is last), all against the same KV session.
+pub struct SessionBatch {
     pub session: String,
     pub requests: Vec<AttentionRequest>,
 }
 
-/// Incremental batch former.  Feed it requests; `push` returns batches
-/// that hit the size cap (or were closed by an append barrier), and
-/// `close_expired` collects the window-expired remainder on ticks.
+/// A formed dispatch: one or more per-session groups served in a single
+/// worker pass.  Sessions within a super-batch are distinct (the batcher
+/// keys pending groups by session), ordered oldest deadline first.
+pub struct Batch {
+    pub groups: Vec<SessionBatch>,
+}
+
+impl Batch {
+    fn single(session: String, requests: Vec<AttentionRequest>) -> Batch {
+        Batch { groups: vec![SessionBatch { session, requests }] }
+    }
+
+    /// Total requests across every session group.
+    pub fn total_requests(&self) -> usize {
+        self.groups.iter().map(|g| g.requests.len()).sum()
+    }
+
+    /// Session groups fused into this dispatch.
+    pub fn sessions(&self) -> usize {
+        self.groups.len()
+    }
+}
+
+/// Incremental batch former.  Feed it requests; `push` returns dispatches
+/// that hit the per-session cap (or were closed by an append barrier),
+/// and `close_expired` packs the window-expired remainder into
+/// cross-session super-batches.
 pub struct Batcher {
     max_batch: usize,
+    /// Total-request cap of one packed super-batch.
+    max_total: usize,
     window: Duration,
     pending: HashMap<String, (Instant, Vec<AttentionRequest>)>,
+    /// FIFO of `(forming stamp, session)` — stamps come from a monotonic
+    /// clock at group creation, so the deque is sorted by construction
+    /// and the front is always the earliest candidate deadline in O(1)
+    /// (no per-message scan over every pending session).  Entries whose
+    /// group has since closed (or re-formed under a newer stamp) are
+    /// stale and popped lazily; each group creation adds exactly one
+    /// entry, so the lazy pops amortize to O(1) per group.
+    forming: VecDeque<(Instant, String)>,
 }
 
 impl Batcher {
-    pub fn new(max_batch: usize, window: Duration) -> Batcher {
-        Batcher { max_batch: max_batch.max(1), window, pending: HashMap::new() }
+    pub fn new(max_batch: usize, max_total: usize, window: Duration) -> Batcher {
+        let max_batch = max_batch.max(1);
+        Batcher {
+            max_batch,
+            max_total: max_total.max(max_batch),
+            window,
+            pending: HashMap::new(),
+            forming: VecDeque::new(),
+        }
     }
 
-    /// Add a request; returns a closed batch when the session hit the
+    /// Add a request; returns a closed dispatch when the session hit the
     /// cap or the request is an append barrier.  O(1) either way: the
     /// just-filled session's entry is removed directly — no scan over
     /// other sessions' pending state — and the hot sub-cap path clones
     /// no session key at all (a clone is paid only on a session's first
-    /// pending request and on batch close).
+    /// pending request and on batch close).  Cap/barrier closes ship
+    /// alone (they never wait on other sessions); cross-session packing
+    /// happens on the expiry path, where groups are already past their
+    /// latency deadline.
     pub fn push(&mut self, req: AttentionRequest) -> Option<Batch> {
         if req.is_append() {
             // barrier: flush this session's pending queries together
@@ -49,7 +108,7 @@ impl Batcher {
             let mut requests =
                 self.pending.remove(&session).map(|(_, reqs)| reqs).unwrap_or_default();
             requests.push(req);
-            return Some(Batch { session, requests });
+            return Some(Batch::single(session, requests));
         }
         let mut close_key: Option<String> = None;
         if let Some((_, reqs)) = self.pending.get_mut(&req.session) {
@@ -59,41 +118,95 @@ impl Batcher {
             reqs.push(req);
         } else if self.max_batch == 1 {
             let session = req.session.clone();
-            return Some(Batch { session, requests: vec![req] });
+            return Some(Batch::single(session, vec![req]));
         } else {
-            self.pending.insert(req.session.clone(), (Instant::now(), vec![req]));
+            let t0 = Instant::now();
+            self.forming.push_back((t0, req.session.clone()));
+            self.pending.insert(req.session.clone(), (t0, vec![req]));
         }
         if let Some(session) = close_key {
             let (_, requests) = self.pending.remove(&session)?;
-            return Some(Batch { session, requests });
+            return Some(Batch::single(session, requests));
         }
         None
     }
 
-    /// Collect every batch whose forming window has expired.
+    /// The earliest pending group's window expiry, if any group is
+    /// forming — the exact instant the serving loop should wake to sweep
+    /// (no fixed-tick polling, no late closes).  Amortized O(1): reads
+    /// the front of the sorted `forming` deque, lazily discarding stale
+    /// entries for groups that have since closed.
+    pub fn next_deadline(&mut self) -> Option<Instant> {
+        loop {
+            let front = match self.forming.front() {
+                None => return None,
+                Some((t0, session)) => match self.pending.get(session) {
+                    // live entry: its stamp still matches the group's
+                    Some((cur, _)) if cur == t0 => Some(*t0 + self.window),
+                    _ => None,
+                },
+            };
+            match front {
+                Some(deadline) => return Some(deadline),
+                None => {
+                    self.forming.pop_front();
+                }
+            }
+        }
+    }
+
+    /// Collect every group whose forming window has expired, packed into
+    /// cross-session super-batches: oldest deadline first, each dispatch
+    /// capped at `max_total` total requests.
     pub fn close_expired(&mut self, now: Instant) -> Vec<Batch> {
         let window = self.window;
-        let mut closed = Vec::new();
+        let mut expired: Vec<(Instant, SessionBatch)> = Vec::new();
         self.pending.retain(|session, (t0, requests)| {
             if now.duration_since(*t0) >= window {
-                closed.push(Batch {
-                    session: session.clone(),
-                    requests: std::mem::take(requests),
-                });
+                expired.push((
+                    *t0,
+                    SessionBatch { session: session.clone(), requests: std::mem::take(requests) },
+                ));
                 false
             } else {
                 true
             }
         });
-        closed
+        expired.sort_by_key(|(t0, _)| *t0);
+        self.pack(expired.into_iter().map(|(_, g)| g))
     }
 
-    /// Flush everything (shutdown path).
+    /// Flush everything (shutdown path), packed like the expiry sweep.
     pub fn drain(&mut self) -> Vec<Batch> {
-        self.pending
+        self.forming.clear();
+        let mut groups: Vec<(Instant, SessionBatch)> = self
+            .pending
             .drain()
-            .map(|(session, (_, requests))| Batch { session, requests })
-            .collect()
+            .map(|(session, (t0, requests))| (t0, SessionBatch { session, requests }))
+            .collect();
+        groups.sort_by_key(|(t0, _)| *t0);
+        self.pack(groups.into_iter().map(|(_, g)| g))
+    }
+
+    /// Greedily pack ordered groups into super-batches of at most
+    /// `max_total` total requests (a group is never split; an oversized
+    /// group ships as its own dispatch).
+    fn pack(&self, groups: impl Iterator<Item = SessionBatch>) -> Vec<Batch> {
+        let mut out: Vec<Batch> = Vec::new();
+        let mut cur: Vec<SessionBatch> = Vec::new();
+        let mut cur_total = 0usize;
+        for g in groups {
+            if !cur.is_empty() && cur_total + g.requests.len() > self.max_total {
+                out.push(Batch { groups: std::mem::take(&mut cur) });
+                cur_total = 0;
+            }
+            cur_total += g.requests.len();
+            cur.push(g);
+        }
+        if !cur.is_empty() {
+            out.push(Batch { groups: cur });
+        }
+        out
     }
 
     pub fn pending_requests(&self) -> usize {
@@ -133,87 +246,98 @@ mod tests {
         }
     }
 
+    /// The lone group of a dispatch expected to be single-session.
+    fn only(batch: &Batch) -> &SessionBatch {
+        assert_eq!(batch.groups.len(), 1, "expected a single-session dispatch");
+        &batch.groups[0]
+    }
+
     #[test]
     fn batch_closes_at_cap() {
-        let mut b = Batcher::new(3, Duration::from_secs(10));
+        let mut b = Batcher::new(3, 64, Duration::from_secs(10));
         assert!(b.push(req(1, "s")).is_none());
         assert!(b.push(req(2, "s")).is_none());
         let batch = b.push(req(3, "s")).expect("full batch");
-        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(batch.total_requests(), 3);
+        assert_eq!(only(&batch).requests.len(), 3);
         assert_eq!(b.pending_requests(), 0);
     }
 
     #[test]
     fn sessions_batch_independently() {
-        let mut b = Batcher::new(2, Duration::from_secs(10));
+        let mut b = Batcher::new(2, 64, Duration::from_secs(10));
         assert!(b.push(req(1, "a")).is_none());
         assert!(b.push(req(2, "b")).is_none());
         let batch = b.push(req(3, "a")).expect("session a full");
-        assert_eq!(batch.session, "a");
+        assert_eq!(only(&batch).session, "a");
         assert_eq!(b.pending_requests(), 1);
     }
 
     #[test]
     fn window_expiry_closes_partial_batches() {
-        let mut b = Batcher::new(100, Duration::from_millis(0));
+        let mut b = Batcher::new(100, 64, Duration::from_millis(0));
         b.push(req(1, "s"));
         let closed = b.close_expired(Instant::now());
         assert_eq!(closed.len(), 1);
-        assert_eq!(closed[0].requests.len(), 1);
+        assert_eq!(closed[0].total_requests(), 1);
     }
 
     #[test]
     fn unexpired_batches_stay_pending() {
-        let mut b = Batcher::new(100, Duration::from_secs(60));
+        let mut b = Batcher::new(100, 64, Duration::from_secs(60));
         b.push(req(1, "s"));
         assert!(b.close_expired(Instant::now()).is_empty());
         assert_eq!(b.pending_requests(), 1);
     }
 
     #[test]
-    fn drain_flushes_all() {
-        let mut b = Batcher::new(100, Duration::from_secs(60));
+    fn drain_flushes_all_into_one_super_batch() {
+        let mut b = Batcher::new(100, 64, Duration::from_secs(60));
         b.push(req(1, "a"));
         b.push(req(2, "b"));
         let all = b.drain();
-        assert_eq!(all.len(), 2);
+        assert_eq!(all.len(), 1, "two sub-cap groups pack into one dispatch");
+        assert_eq!(all[0].sessions(), 2);
+        assert_eq!(all[0].total_requests(), 2);
         assert_eq!(b.pending_requests(), 0);
     }
 
     #[test]
     fn append_closes_pending_queries_in_arrival_order() {
-        let mut b = Batcher::new(100, Duration::from_secs(60));
+        let mut b = Batcher::new(100, 64, Duration::from_secs(60));
         assert!(b.push(req(1, "s")).is_none());
         assert!(b.push(req(2, "s")).is_none());
         let batch = b.push(append_req(3, "s")).expect("append must close immediately");
-        assert_eq!(batch.session, "s");
-        assert_eq!(batch.requests.len(), 3);
+        let g = only(&batch);
+        assert_eq!(g.session, "s");
+        assert_eq!(g.requests.len(), 3);
         assert_eq!(
-            batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
+            g.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
             vec![1, 2, 3],
             "queries first, append last"
         );
-        assert!(batch.requests[2].is_append());
+        assert!(g.requests[2].is_append());
         assert_eq!(b.pending_requests(), 0);
     }
 
     #[test]
     fn append_with_no_pending_ships_alone_and_leaves_others() {
-        let mut b = Batcher::new(100, Duration::from_secs(60));
+        let mut b = Batcher::new(100, 64, Duration::from_secs(60));
         assert!(b.push(req(1, "other")).is_none());
         let batch = b.push(append_req(2, "s")).expect("lone append closes");
-        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.total_requests(), 1);
+        assert_eq!(only(&batch).session, "s");
         assert_eq!(b.pending_requests(), 1, "other session's pending untouched");
     }
 
-    // Guards the `or_insert_with(Instant::now)` stamp: a session under
-    // continuous sub-cap traffic must still close `window` after its
-    // *first* pending request — later pushes and append traffic on other
-    // sessions must not push the deadline out.
+    // Guards the forming stamp: a session under continuous sub-cap
+    // traffic must still close `window` after its *first* pending
+    // request — later pushes and append traffic on other sessions must
+    // not push the deadline out.
     #[test]
     fn window_counts_from_first_pending_request_under_continuous_traffic() {
         let window = Duration::from_millis(200);
-        let mut b = Batcher::new(100, window);
+        let mut b = Batcher::new(100, 64, window);
         b.push(req(0, "s"));
         let t0 = Instant::now(); // >= the batch's forming stamp
         for i in 1..5u64 {
@@ -228,14 +352,14 @@ mod tests {
         }
         let closed = b.close_expired(t0 + window);
         assert_eq!(closed.len(), 1, "batch must close at window from the first request");
-        assert_eq!(closed[0].requests.len(), 5);
+        assert_eq!(closed[0].total_requests(), 5);
         assert_eq!(b.pending_requests(), 0);
     }
 
     #[test]
     fn window_restarts_after_append_barrier_flush() {
         let window = Duration::from_millis(200);
-        let mut b = Batcher::new(100, window);
+        let mut b = Batcher::new(100, 64, window);
         b.push(req(1, "s"));
         let t0 = Instant::now();
         b.push(append_req(2, "s")).expect("barrier flush");
@@ -249,6 +373,73 @@ mod tests {
         );
         let closed = b.close_expired(t1 + window);
         assert_eq!(closed.len(), 1);
-        assert_eq!(closed[0].requests[0].id, 3);
+        assert_eq!(only(&closed[0]).requests[0].id, 3);
+    }
+
+    #[test]
+    fn expired_groups_fuse_into_super_batches_oldest_first() {
+        // 64 sessions x 1 pending query each (the high-fan-out serving
+        // regime): one sweep packs them into ceil(64/max_total)
+        // dispatches, ordered by forming deadline
+        let mut b = Batcher::new(16, 24, Duration::from_millis(0));
+        for s in 0..64u64 {
+            assert!(b.push(req(s, &format!("sess-{s}"))).is_none());
+            // distinct forming stamps: Instant::now() is monotonic but
+            // may tick coarsely; ordering assertions below only need
+            // non-decreasing ids per dispatch, which holds either way
+        }
+        let batches = b.close_expired(Instant::now() + Duration::from_millis(1));
+        assert_eq!(batches.len(), 3, "64 singleton groups at cap 24 -> 3 dispatches");
+        assert_eq!(batches.iter().map(Batch::total_requests).sum::<usize>(), 64);
+        assert_eq!(batches[0].sessions(), 24);
+        assert_eq!(batches[1].sessions(), 24);
+        assert_eq!(batches[2].sessions(), 16);
+        // every session appears exactly once across the dispatches
+        let mut seen: Vec<&str> =
+            batches.iter().flat_map(|b| b.groups.iter().map(|g| g.session.as_str())).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 64);
+        assert_eq!(b.pending_requests(), 0);
+    }
+
+    #[test]
+    fn super_batch_never_splits_a_group() {
+        // groups of 3 at total cap 4: each dispatch carries exactly one
+        // group (3 + 3 > 4), never a fragment
+        let mut b = Batcher::new(8, 4, Duration::from_millis(0));
+        for s in 0..3 {
+            for i in 0..3u64 {
+                assert!(b.push(req(s * 10 + i, &format!("g{s}"))).is_none());
+            }
+        }
+        let batches = b.close_expired(Instant::now() + Duration::from_millis(1));
+        assert_eq!(batches.len(), 3);
+        for batch in &batches {
+            assert_eq!(batch.sessions(), 1);
+            assert_eq!(batch.total_requests(), 3);
+        }
+    }
+
+    #[test]
+    fn next_deadline_tracks_earliest_group() {
+        let window = Duration::from_millis(500);
+        let mut b = Batcher::new(100, 64, window);
+        assert!(b.next_deadline().is_none(), "idle batcher has no deadline");
+        b.push(req(1, "a"));
+        let first = b.next_deadline().expect("deadline after first push");
+        // a later session must not move the earliest deadline forward
+        std::thread::sleep(Duration::from_millis(5));
+        b.push(req(2, "b"));
+        let still = b.next_deadline().expect("deadline with two groups");
+        assert_eq!(still, first, "earliest deadline must stay the oldest group's");
+        // closing the oldest group advances the deadline to the next one
+        let closed = b.push(append_req(3, "a")).expect("barrier closes group a");
+        assert_eq!(only(&closed).session, "a");
+        let next = b.next_deadline().expect("b still pending");
+        assert!(next > first, "deadline must advance to session b's window");
+        assert!(b.close_expired(Instant::now()).is_empty());
+        b.drain();
+        assert!(b.next_deadline().is_none());
     }
 }

@@ -342,6 +342,13 @@ impl KvStore {
         self.inner.lock().unwrap().entries.len()
     }
 
+    /// Sessions currently holding at least one in-flight pin
+    /// (diagnostics: a steady-state serving loop must return this to 0 —
+    /// a leak here makes sessions permanently unevictable).
+    pub fn pinned_sessions(&self) -> usize {
+        self.inner.lock().unwrap().entries.values().filter(|s| s.pins > 0).count()
+    }
+
     /// Total byte charge of all resident sessions.
     pub fn used_bytes(&self) -> usize {
         self.inner.lock().unwrap().used_bytes

@@ -79,6 +79,10 @@ pub struct Metrics {
     pub appends: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
+    /// Session groups carried by dispatched batches (a cross-session
+    /// super-batch counts each of its sessions); `/ batches` is the
+    /// fan-out fusion factor the two-level batcher exists to raise.
+    pub batched_sessions: AtomicU64,
     latencies_us: Mutex<Reservoir>,
 }
 
@@ -92,6 +96,9 @@ pub struct Snapshot {
     pub appends: u64,
     pub batches: u64,
     pub mean_batch: f64,
+    /// Mean sessions fused per dispatched batch (1.0 when every dispatch
+    /// is single-session).
+    pub mean_sessions: f64,
     pub p50_us: f64,
     pub p99_us: f64,
     pub mean_us: f64,
@@ -118,11 +125,19 @@ impl Metrics {
             (g.samples.clone(), g.seen, g.sum)
         };
         lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // nearest-rank (ceil) percentile: the q-quantile is the smallest
+        // sample with at least ceil(q * n) samples <= it.  The previous
+        // `((n - 1) * q) as usize` truncated the rank, biasing tail
+        // percentiles low at small sample counts — at n = 2 it returned
+        // the *minimum* as p99, and at n = 4 the 3rd-smallest instead of
+        // the max, collapsing p99 toward p50 exactly where the reservoir
+        // is sparsest.
         let pick = |q: f64| {
             if lat.is_empty() {
                 0.0
             } else {
-                lat[((lat.len() as f64 - 1.0) * q) as usize]
+                let rank = (lat.len() as f64 * q).ceil() as usize;
+                lat[rank.clamp(1, lat.len()) - 1]
             }
         };
         let batches = self.batches.load(Ordering::Relaxed);
@@ -137,6 +152,11 @@ impl Metrics {
                 0.0
             } else {
                 self.batched_requests.load(Ordering::Relaxed) as f64 / batches as f64
+            },
+            mean_sessions: if batches == 0 {
+                0.0
+            } else {
+                self.batched_sessions.load(Ordering::Relaxed) as f64 / batches as f64
             },
             p50_us: pick(0.5),
             p99_us: pick(0.99),
@@ -157,11 +177,60 @@ mod tests {
         }
         m.batches.store(10, Ordering::Relaxed);
         m.batched_requests.store(100, Ordering::Relaxed);
+        m.batched_sessions.store(30, Ordering::Relaxed);
         let s = m.snapshot();
         assert!(s.p50_us >= 49.0 && s.p50_us <= 52.0);
         assert!(s.p99_us >= 98.0);
         assert_eq!(s.mean_batch, 10.0);
+        assert_eq!(s.mean_sessions, 3.0);
         assert!((s.mean_us - 50.5).abs() < 1e-9);
+    }
+
+    // Nearest-rank (ceil) selection at small and exact sample counts —
+    // the truncating `((n-1) * q) as usize` rank biased p99 low and
+    // collapsed it onto p50 below ~100 samples.
+    #[test]
+    fn percentiles_use_nearest_rank_ceil_selection() {
+        // n = 1: every percentile is the lone sample
+        let m = Metrics::new();
+        m.observe_latency(42.0);
+        let s = m.snapshot();
+        assert_eq!(s.p50_us, 42.0);
+        assert_eq!(s.p99_us, 42.0);
+
+        // n = 2: p50 is the lower sample (rank ceil(1.0) = 1), p99 the
+        // upper (rank ceil(1.98) = 2) — the truncating rank returned the
+        // lower sample for *both*
+        let m = Metrics::new();
+        m.observe_latency(10.0);
+        m.observe_latency(20.0);
+        let s = m.snapshot();
+        assert_eq!(s.p50_us, 10.0);
+        assert_eq!(s.p99_us, 20.0);
+
+        // n = 4: p50 = 2nd-smallest, p99 = max (truncation gave the 3rd)
+        let m = Metrics::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            m.observe_latency(x);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.p50_us, 2.0);
+        assert_eq!(s.p99_us, 4.0);
+
+        // n = 100 over 1..=100: exact nearest-rank values — p50 = 50
+        // (rank 50), p99 = 99 (rank 99)
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.observe_latency(i as f64);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.p50_us, 50.0);
+        assert_eq!(s.p99_us, 99.0);
+
+        // empty reservoir still reports zeros
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.p50_us, 0.0);
+        assert_eq!(s.p99_us, 0.0);
     }
 
     #[test]

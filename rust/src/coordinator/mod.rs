@@ -1,12 +1,16 @@
 //! The serving coordinator — the L3 system a deployment would run around
-//! the accelerator: bounded ingress with backpressure, a dynamic batcher
-//! (vLLM-router-style), session-keyed KV buffer management, worker threads
-//! owning execution backends (simulated accelerator or PJRT executable),
-//! and metrics.
+//! the accelerator: bounded ingress with backpressure, a **two-level**
+//! dynamic batcher (vLLM-router-style per-session groups fused into
+//! cross-session super-batches), session-keyed KV buffer management,
+//! worker threads owning plan-based execution backends (simulated
+//! accelerator or PJRT executable), and metrics.
 //!
 //! Built on std threads + channels (tokio is unavailable offline —
 //! DESIGN.md §9); the architecture is the same: one ingress queue, a
 //! batch-forming stage, N workers, per-request completion channels.
+//! A dispatch may span many sessions ([`batcher::Batch`]); the worker
+//! answers all of them through one [`backend::Backend::compute_plan`]
+//! call whose outputs are bit-identical to serving each session alone.
 //!
 //! ## Decode/append protocol
 //!

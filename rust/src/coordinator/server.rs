@@ -3,10 +3,19 @@
 //!
 //! Requests are either attention queries or decode-step KV appends
 //! ([`Payload`]); an append acts as a per-session barrier in the batcher,
-//! so a batch is served in arrival order — queries first (against the
-//! pre-append KV), then the append.  Clients interleave
-//! `append`/`call` to run an autoregressive decode loop whose KV
-//! conversion cost tracks the new tokens only.
+//! so a session's slice of a batch is served in arrival order — queries
+//! first (against the pre-append KV), then the append.  Clients
+//! interleave `append`/`call` to run an autoregressive decode loop whose
+//! KV conversion cost tracks the new tokens only.
+//!
+//! Batches are **cross-session super-batches** ([`Batch`]): the batcher
+//! fuses window-expired per-session groups into one dispatch, and the
+//! worker answers every session's queries through a single plan-based
+//! backend call ([`Backend::compute_plan`]) — the high-fan-out serving
+//! regime (N sessions x 1 query) runs as one fused grid launch instead
+//! of N single-query dispatches.  Fusion is a scheduling choice only:
+//! outputs are bit-identical to serving each session alone, appends
+//! barrier only their own session, and pins release per session.
 //!
 //! Ingress **pins** the request's session in the KV store
 //! (`KvStore::pin`), and the pin is released when the response is
@@ -15,6 +24,14 @@
 //! session" failures.  KV admission-control failures (byte budget
 //! exceeded, capacity overflow) surface as error responses on the
 //! submitting channel.
+//!
+//! The batcher sleeps exactly until the earliest pending group's window
+//! expiry ([`Batcher::next_deadline`]) instead of polling a fixed tick —
+//! an idle partial batch closes on time, not up to ~2x its window late.
+//! Workers take batches from a condvar-guarded queue ([`BatchQueue`])
+//! rather than a mutex-wrapped channel receiver, so an idle worker never
+//! blocks another behind a held lock (and shutdown wakes all of them at
+//! once).
 //!
 //! `start` fails fast: if any backend factory errors on its worker
 //! thread, the failure is propagated out instead of silently serving
@@ -26,11 +43,11 @@
 //! a batch when every worker is gone — receive an **explicit error
 //! response** instead of a silently dropped reply channel.
 
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{
-    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError,
-};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -38,7 +55,7 @@ use anyhow::Result;
 
 use super::backend::{Backend, BackendFactory};
 use super::batcher::{Batch, Batcher};
-use super::kvstore::KvStore;
+use super::kvstore::{KvEntry, KvStore};
 use super::metrics::Metrics;
 use super::request::{AttentionRequest, AttentionResponse, Payload};
 use crate::config::CoordinatorConfig;
@@ -79,19 +96,20 @@ impl Server {
         let head_dim = kv.head_dim();
         let metrics = Arc::new(Metrics::new());
         let (in_tx, in_rx) = sync_channel::<Msg>(cfg.queue_depth);
-        let (batch_tx, batch_rx) = sync_channel::<Batch>(cfg.queue_depth);
-        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let queue = Arc::new(BatchQueue::new(cfg.queue_depth, factories.len()));
 
         // batcher thread
         let window = Duration::from_micros(cfg.batch_window_us);
         let max_batch = cfg.max_batch;
+        let max_total = cfg.max_total_batch;
         let m = metrics.clone();
         let kv_batcher = kv.clone();
+        let bq = queue.clone();
         let ingress_rx: Arc<Mutex<Option<Receiver<Msg>>>> = Arc::new(Mutex::new(None));
         let rx_back = ingress_rx.clone();
-        let batcher_handle = std::thread::Builder::new()
-            .name("hfa-batcher".into())
-            .spawn(move || batcher_loop(in_rx, batch_tx, max_batch, window, m, kv_batcher, rx_back))?;
+        let batcher_handle = std::thread::Builder::new().name("hfa-batcher".into()).spawn(
+            move || batcher_loop(in_rx, bq, max_batch, max_total, window, m, kv_batcher, rx_back),
+        )?;
 
         // worker threads; each reports its backend-init outcome before
         // entering the serve loop
@@ -99,26 +117,34 @@ impl Server {
         let (init_tx, init_rx) = channel::<std::result::Result<(), String>>();
         let mut threads = vec![batcher_handle];
         for (i, factory) in factories.into_iter().enumerate() {
-            let rx = batch_rx.clone();
+            let queue = queue.clone();
             let kv = kv.clone();
             let m = metrics.clone();
             let init_tx = init_tx.clone();
-            let h = std::thread::Builder::new()
-                .name(format!("hfa-worker-{i}"))
-                .spawn(move || match factory() {
-                    Ok(mut be) => {
-                        let _ = init_tx.send(Ok(()));
-                        // release the handshake sender before serving, so
-                        // start()'s recv() can observe a disconnect (not
-                        // hang) if some *other* worker dies without
-                        // reporting (e.g. a panicking factory)
-                        drop(init_tx);
-                        worker_loop(&mut *be, rx, kv, m)
+            let h = std::thread::Builder::new().name(format!("hfa-worker-{i}")).spawn(
+                move || {
+                    // releases this worker's queue slot on any exit —
+                    // return, failed init, or panic mid-batch — and the
+                    // last worker out fails whatever batches remain
+                    // queued instead of leaving their callers hanging
+                    let _exit = WorkerExit { queue: &*queue, kv: &*kv, metrics: &*m };
+                    match factory() {
+                        Ok(mut be) => {
+                            let _ = init_tx.send(Ok(()));
+                            // release the handshake sender before
+                            // serving, so start()'s recv() can observe a
+                            // disconnect (not hang) if some *other*
+                            // worker dies without reporting (e.g. a
+                            // panicking factory)
+                            drop(init_tx);
+                            worker_loop(&mut *be, &queue, &kv, &m)
+                        }
+                        Err(e) => {
+                            let _ = init_tx.send(Err(format!("hfa-worker-{i}: {e}")));
+                        }
                     }
-                    Err(e) => {
-                        let _ = init_tx.send(Err(format!("hfa-worker-{i}: {e}")));
-                    }
-                })?;
+                },
+            )?;
             threads.push(h);
         }
         drop(init_tx);
@@ -132,8 +158,9 @@ impl Server {
             }
         }
         if !failures.is_empty() {
-            // tear down: stop the batcher (its exit drops batch_tx, which
-            // disconnects any workers that did come up), then join all
+            // tear down: stop the batcher (its exit closes the batch
+            // queue, which releases any workers that did come up), then
+            // join all
             let _ = in_tx.send(Msg::Shutdown);
             for h in threads {
                 let _ = h.join();
@@ -288,23 +315,185 @@ impl Drop for Server {
 /// Error delivered to requests the serving loop can no longer execute.
 const SHUTDOWN_ERROR: &str = "server shutting down: request dropped before serving";
 const WORKERS_GONE_ERROR: &str = "no workers available (server shutting down?)";
+const BACKEND_PANIC_ERROR: &str = "backend panicked while serving this dispatch";
 
+/// Bounded dispatch queue between the batcher and the workers.
+///
+/// Replaces the former `Arc<Mutex<Receiver<Batch>>>`, whose lock was
+/// held **across the blocking `recv()`**: idle workers serialized on the
+/// mutex (one waiting inside `recv`, the rest queued on the lock) and
+/// shutdown could only wake them strictly one at a time.  Here the lock
+/// guards only the deque — waiting happens on the condvar with the lock
+/// released, so any number of workers park and wake independently.
+struct BatchQueue {
+    cap: usize,
+    inner: Mutex<BatchQueueInner>,
+    /// Wakes workers: work available or queue closed.
+    available: Condvar,
+    /// Wakes the batcher: space freed or a worker died.
+    space: Condvar,
+}
+
+struct BatchQueueInner {
+    queue: VecDeque<Batch>,
+    /// The batcher is still feeding the queue.
+    open: bool,
+    /// Live worker threads (kept honest by [`WorkerExit`], panic-safe).
+    workers: usize,
+}
+
+impl BatchQueue {
+    fn new(cap: usize, workers: usize) -> BatchQueue {
+        BatchQueue {
+            cap: cap.max(1),
+            inner: Mutex::new(BatchQueueInner {
+                queue: VecDeque::new(),
+                open: true,
+                workers,
+            }),
+            available: Condvar::new(),
+            space: Condvar::new(),
+        }
+    }
+
+    /// Block until there is room, then enqueue.  `Err(batch)` when every
+    /// worker is gone — the dispatch would hang its callers forever.
+    fn push(&self, b: Batch) -> std::result::Result<(), Batch> {
+        let mut g = self.inner.lock().unwrap();
+        while g.queue.len() >= self.cap && g.workers > 0 {
+            g = self.space.wait(g).unwrap();
+        }
+        if g.workers == 0 {
+            return Err(b);
+        }
+        g.queue.push_back(b);
+        drop(g);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    /// Worker side: block for the next batch; `None` once the queue is
+    /// closed and drained.
+    fn pop(&self) -> Option<Batch> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(b) = g.queue.pop_front() {
+                drop(g);
+                self.space.notify_one();
+                return Some(b);
+            }
+            if !g.open {
+                return None;
+            }
+            g = self.available.wait(g).unwrap();
+        }
+    }
+
+    /// Batcher exit: no more batches will arrive; wake every idle worker.
+    fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.open = false;
+        drop(g);
+        self.available.notify_all();
+    }
+
+    /// One worker is gone (normal exit, failed init, or panic).  The
+    /// last worker out hands back whatever is still queued so the caller
+    /// can fail those requests explicitly.
+    fn worker_exited(&self) -> Vec<Batch> {
+        let mut g = self.inner.lock().unwrap();
+        g.workers = g.workers.saturating_sub(1);
+        let residue: Vec<Batch> =
+            if g.workers == 0 { g.queue.drain(..).collect() } else { Vec::new() };
+        drop(g);
+        self.space.notify_all();
+        residue
+    }
+}
+
+/// Panic-safe worker accounting: decrements the live-worker count on any
+/// exit path and fails batches stranded behind the last worker.
+struct WorkerExit<'a> {
+    queue: &'a BatchQueue,
+    kv: &'a KvStore,
+    metrics: &'a Metrics,
+}
+
+impl Drop for WorkerExit<'_> {
+    fn drop(&mut self) {
+        for batch in self.queue.worker_exited() {
+            // emit() counted this dispatch when it was handed over; it
+            // never served, so roll the structural counters back before
+            // failing it (same invariant as emit()'s push-failure path —
+            // `batches`/`mean_sessions` must count served dispatches)
+            self.metrics.batches.fetch_sub(1, Ordering::Relaxed);
+            self.metrics
+                .batched_requests
+                .fetch_sub(batch.total_requests() as u64, Ordering::Relaxed);
+            self.metrics.batched_sessions.fetch_sub(batch.sessions() as u64, Ordering::Relaxed);
+            fail_batch(batch, WORKERS_GONE_ERROR, self.kv, self.metrics);
+        }
+    }
+}
+
+/// Closes the batch queue when the batcher thread exits — **including by
+/// panic**, where leaving it open would park every idle worker on the
+/// `available` condvar forever and hang shutdown's join.  (The replaced
+/// channel design was implicitly panic-safe: unwinding dropped the
+/// sender, disconnecting the workers' `recv()`.)
+struct CloseOnExit<'a>(&'a BatchQueue);
+
+impl Drop for CloseOnExit<'_> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+#[allow(clippy::too_many_arguments)] // thread entry point: every collaborator is passed once
 fn batcher_loop(
     in_rx: Receiver<Msg>,
-    batch_tx: SyncSender<Batch>,
+    queue: Arc<BatchQueue>,
     max_batch: usize,
+    max_total: usize,
     window: Duration,
     metrics: Arc<Metrics>,
     kv: Arc<KvStore>,
     rx_back: Arc<Mutex<Option<Receiver<Msg>>>>,
 ) {
-    let mut batcher = Batcher::new(max_batch, window);
-    let tick = window.max(Duration::from_micros(50));
+    // dropped last (declared first): the queue closes after the final
+    // drain below on a normal exit, and on any panic path too
+    let _close = CloseOnExit(&queue);
+    let mut batcher = Batcher::new(max_batch, max_total, window);
+    // Fusion slack: expiry sweeps run at `earliest deadline + window/4`
+    // instead of per-group deadlines, so every group whose window lapses
+    // inside one slack interval closes in the *same* sweep and packs
+    // into one cross-session super-batch.  Worst-case close latency is
+    // 1.25x the window (pinned < 1.5x by the close-latency regression
+    // test) — the bounded price of fusing N idle sessions' singleton
+    // groups into one dispatch instead of N deadline-ordered ones.  The
+    // seed's fixed `max(window, 50us)` tick could be ~2x late *and*
+    // still dispatched per session.
+    let slack = window / 4;
     loop {
-        match in_rx.recv_timeout(tick) {
+        // sleep exactly until the earliest pending group's sweep point;
+        // an idle batcher (nothing forming) blocks on the channel with
+        // no timeout at all — no fixed-tick polling, no late closes
+        let wake = batcher.next_deadline().map(|d| d + slack);
+        let msg = match wake {
+            None => in_rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
+            Some(at) => {
+                let now = Instant::now();
+                if at <= now {
+                    Err(RecvTimeoutError::Timeout) // sweep immediately
+                } else {
+                    in_rx.recv_timeout(at - now)
+                }
+            }
+        };
+        match msg {
             Ok(Msg::Req(req)) => {
                 if let Some(b) = batcher.push(req) {
-                    emit(&batch_tx, b, &metrics, &kv);
+                    emit(&queue, b, &metrics, &kv);
                 }
             }
             Ok(Msg::Shutdown) => {
@@ -323,12 +512,17 @@ fn batcher_loop(
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => break,
         }
-        for b in batcher.close_expired(Instant::now()) {
-            emit(&batch_tx, b, &metrics, &kv);
+        // sweep only at the slack-quantized boundary — not after every
+        // message, which would close groups one by one as traffic
+        // trickles past their deadlines and defeat the fusion
+        if wake.is_some_and(|at| Instant::now() >= at) {
+            for b in batcher.close_expired(Instant::now()) {
+                emit(&queue, b, &metrics, &kv);
+            }
         }
     }
     for b in batcher.drain() {
-        emit(&batch_tx, b, &metrics, &kv);
+        emit(&queue, b, &metrics, &kv);
     }
     // hand the ingress receiver back to the Server: a submit can race
     // its request into the queue between our final sweep above and this
@@ -336,22 +530,35 @@ fn batcher_loop(
     // joining us (the window where a message is truly unreachable is
     // thereby closed)
     *rx_back.lock().unwrap() = Some(in_rx);
-    // dropping batch_tx disconnects the workers
+    // `_close` drops here, closing the queue — workers exit once it drains
 }
 
-fn emit(tx: &SyncSender<Batch>, b: Batch, metrics: &Metrics, kv: &KvStore) {
-    let n = b.requests.len() as u64;
-    match tx.send(b) {
-        Ok(()) => {
-            metrics.batches.fetch_add(1, Ordering::Relaxed);
-            metrics.batched_requests.fetch_add(n, Ordering::Relaxed);
-        }
+fn emit(queue: &BatchQueue, b: Batch, metrics: &Metrics, kv: &KvStore) {
+    let requests = b.total_requests() as u64;
+    let sessions = b.sessions() as u64;
+    // count the dispatch *before* handing it over: a worker can pop,
+    // serve and answer the batch before this thread runs again, and a
+    // caller reading the metrics right after its response must already
+    // see the dispatch
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics.batched_requests.fetch_add(requests, Ordering::Relaxed);
+    metrics.batched_sessions.fetch_add(sessions, Ordering::Relaxed);
+    if let Err(b) = queue.push(b) {
         // every worker is gone (all exited/panicked): the batch would
         // hang its callers forever — deliver explicit errors instead
-        Err(std::sync::mpsc::SendError(b)) => {
-            for req in b.requests {
-                fail_request(req, WORKERS_GONE_ERROR, kv, metrics);
-            }
+        metrics.batches.fetch_sub(1, Ordering::Relaxed);
+        metrics.batched_requests.fetch_sub(requests, Ordering::Relaxed);
+        metrics.batched_sessions.fetch_sub(sessions, Ordering::Relaxed);
+        fail_batch(b, WORKERS_GONE_ERROR, kv, metrics);
+    }
+}
+
+/// Deliver an explicit error response to every request of a batch that
+/// will never be served.
+fn fail_batch(b: Batch, msg: &str, kv: &KvStore, metrics: &Metrics) {
+    for group in b.groups {
+        for req in group.requests {
+            fail_request(req, msg, kv, metrics);
         }
     }
 }
@@ -373,36 +580,32 @@ fn fail_request(req: AttentionRequest, msg: &str, kv: &KvStore, metrics: &Metric
     });
 }
 
-fn worker_loop(
-    be: &mut dyn Backend,
-    rx: Arc<Mutex<Receiver<Batch>>>,
-    kv: Arc<KvStore>,
-    metrics: Arc<Metrics>,
-) {
-    loop {
-        let batch = {
-            let guard = rx.lock().unwrap();
-            match guard.recv() {
-                Ok(b) => b,
-                Err(_) => break, // batcher gone
-            }
-        };
-        serve_batch(be, batch, &kv, &metrics);
+fn worker_loop(be: &mut dyn Backend, queue: &BatchQueue, kv: &KvStore, metrics: &Metrics) {
+    while let Some(batch) = queue.pop() {
+        serve_batch(be, batch, kv, metrics);
     }
 }
 
 /// A query waiting to be flushed: `(id, query, arrived, pinned, reply)`.
 type PendingQuery = (u64, Vec<f32>, Instant, bool, Sender<AttentionResponse>);
 
-/// Releases a batch's not-yet-released session pins on drop, so a panic
-/// anywhere in the serve path (e.g. a crashing backend) cannot leak
-/// pins — a leaked pin would make the session permanently unevictable
-/// under the byte budget.  The happy path releases each pin explicitly
+/// One session group's request stream while a super-batch is served.
+type GroupStream = (String, std::vec::IntoIter<AttentionRequest>);
+
+/// One group's slice of a fused plan: `(group index, pending queries,
+/// resolved KV entry, packed query rows)`.
+type FusedRun = (usize, Vec<PendingQuery>, KvEntry, Mat);
+
+/// Releases one session group's not-yet-released pins on drop, so a
+/// panic anywhere in the serve path (e.g. a crashing backend) cannot
+/// leak pins — a leaked pin would make the session permanently
+/// unevictable under the byte budget.  One guard per session group of a
+/// super-batch; the happy path releases each pin explicitly
 /// ([`PinGuard::release_one`]) *before* the response is sent, so by the
 /// time a caller observes its response the session is evictable again.
 struct PinGuard<'a> {
     kv: &'a KvStore,
-    session: &'a str,
+    session: String,
     remaining: usize,
 }
 
@@ -410,7 +613,7 @@ impl PinGuard<'_> {
     fn release_one(&mut self) {
         if self.remaining > 0 {
             self.remaining -= 1;
-            self.kv.unpin(self.session);
+            self.kv.unpin(&self.session);
         }
     }
 }
@@ -418,95 +621,278 @@ impl PinGuard<'_> {
 impl Drop for PinGuard<'_> {
     fn drop(&mut self) {
         for _ in 0..self.remaining {
-            self.kv.unpin(self.session);
+            self.kv.unpin(&self.session);
         }
     }
 }
 
-/// Serve one batch in arrival order: contiguous runs of queries are
-/// computed together against the session's current KV; an append flushes
-/// the run ahead of it, then applies the write.  Configuration errors
-/// (backend/store geometry disagreements) become error responses, never
-/// worker panics.  Every response releases its ingress pin (before the
-/// reply is sent; panic-safe via [`PinGuard`]).
+/// Serve one super-batch.  Each session group runs in arrival order —
+/// contiguous query runs, then the append that barriered them — while
+/// *across* groups the leading query runs of every session are answered
+/// by a **single fused** [`Backend::compute_plan`] dispatch (outputs are
+/// bit-identical to serving each session alone, so the fusion is
+/// invisible to callers).  Configuration errors (backend/store geometry
+/// disagreements, unknown sessions) become error responses for the
+/// affected group only, never worker panics.  Every response releases
+/// its ingress pin (before the reply is sent; panic-safe via the
+/// per-session [`PinGuard`]s).
 fn serve_batch(be: &mut dyn Backend, batch: Batch, kv: &KvStore, metrics: &Metrics) {
-    let n = batch.requests.len();
-    let mut pins = PinGuard {
-        kv,
-        session: &batch.session,
-        remaining: batch.requests.iter().filter(|r| r.pinned).count(),
-    };
+    let n = batch.total_requests();
+    let mut guards: Vec<PinGuard> = batch
+        .groups
+        .iter()
+        .map(|g| PinGuard {
+            kv,
+            session: g.session.clone(),
+            remaining: g.requests.iter().filter(|r| r.pinned).count(),
+        })
+        .collect();
     if be.head_dim() != kv.head_dim() {
         let msg = format!(
             "backend head_dim {} != KV store head_dim {}",
             be.head_dim(),
             kv.head_dim()
         );
-        for req in batch.requests {
-            let AttentionRequest { id, arrived, pinned, reply, .. } = req;
-            if pinned {
-                pins.release_one();
+        for (guard, group) in guards.iter_mut().zip(batch.groups) {
+            for req in group.requests {
+                let AttentionRequest { id, arrived, pinned, reply, .. } = req;
+                if pinned {
+                    guard.release_one();
+                }
+                deliver(id, arrived, reply, Err(msg.clone()), n, metrics);
             }
-            deliver(id, arrived, reply, Err(msg.clone()), n, metrics);
         }
         return;
     }
-    let mut run: Vec<PendingQuery> = Vec::new();
-    for req in batch.requests {
-        let AttentionRequest { id, payload, arrived, pinned, reply, .. } = req;
-        match payload {
-            Payload::Query(q) => run.push((id, q, arrived, pinned, reply)),
-            Payload::Append { k_rows, v_rows } => {
-                flush_queries(be, &batch.session, std::mem::take(&mut run), kv, &mut pins, metrics, n);
-                let output = kv
-                    .append(&batch.session, k_rows, v_rows)
-                    .map(|()| Vec::new())
-                    .map_err(|e| e.to_string());
+    // per-group request streams; the batcher ships appends last within a
+    // group, but the loop below handles any interleaving: it alternates
+    // fused cross-session query phases with per-session append barriers
+    // until every stream is exhausted
+    let mut streams: Vec<GroupStream> = batch
+        .groups
+        .into_iter()
+        .map(|g| (g.session, g.requests.into_iter()))
+        .collect();
+    let mut parked_append: Vec<Option<AttentionRequest>> =
+        streams.iter().map(|_| None).collect();
+    // a backend panic inside a phase still kills this worker, but every
+    // request of the dispatch must first receive an explicit error:
+    // flush_runs fails its in-flight fused runs itself, and the residue
+    // pass below covers requests not yet drained from their streams
+    // (parked appends included) before the panic is re-raised
+    let caught = catch_unwind(AssertUnwindSafe(|| {
+        serve_groups(be, &mut streams, &mut parked_append, kv, &mut guards, metrics, n)
+    }));
+    if let Err(payload) = caught {
+        for (gi, (_, stream)) in streams.iter_mut().enumerate() {
+            let parked = parked_append[gi].take();
+            for req in parked.into_iter().chain(stream.by_ref()) {
+                let is_append = req.is_append();
+                let AttentionRequest { id, arrived, pinned, reply, .. } = req;
                 if pinned {
-                    pins.release_one();
+                    guards[gi].release_one();
                 }
-                deliver_append(id, arrived, reply, output, n, metrics);
+                let output = Err(BACKEND_PANIC_ERROR.to_string());
+                if is_append {
+                    deliver_append(id, arrived, reply, output, n, metrics);
+                } else {
+                    deliver(id, arrived, reply, output, n, metrics);
+                }
             }
         }
+        resume_unwind(payload);
     }
-    flush_queries(be, &batch.session, run, kv, &mut pins, metrics, n);
 }
 
-fn flush_queries(
+/// The phase loop of [`serve_batch`]: alternate fused cross-session
+/// query dispatches with per-session append barriers until every
+/// group's stream is exhausted.
+fn serve_groups(
     be: &mut dyn Backend,
-    session: &str,
-    run: Vec<PendingQuery>,
+    streams: &mut [GroupStream],
+    parked_append: &mut [Option<AttentionRequest>],
     kv: &KvStore,
-    pins: &mut PinGuard<'_>,
+    guards: &mut [PinGuard<'_>],
+    metrics: &Metrics,
+    n: usize,
+) {
+    loop {
+        // phase 1: every group's next contiguous query run, fused into
+        // one plan dispatch
+        let mut runs: Vec<(usize, Vec<PendingQuery>)> = Vec::new();
+        for (gi, (_, stream)) in streams.iter_mut().enumerate() {
+            if parked_append[gi].is_some() {
+                continue;
+            }
+            let mut run: Vec<PendingQuery> = Vec::new();
+            for req in stream.by_ref() {
+                if req.is_append() {
+                    parked_append[gi] = Some(req);
+                    break;
+                }
+                let AttentionRequest { id, payload, arrived, pinned, reply, .. } = req;
+                if let Payload::Query(q) = payload {
+                    run.push((id, q, arrived, pinned, reply));
+                }
+            }
+            if !run.is_empty() {
+                runs.push((gi, run));
+            }
+        }
+        let had_queries = !runs.is_empty();
+        if had_queries {
+            flush_runs(be, streams, runs, kv, guards, metrics, n);
+        }
+        // phase 2: apply each group's parked append barrier
+        let mut had_appends = false;
+        for (gi, slot) in parked_append.iter_mut().enumerate() {
+            let Some(req) = slot.take() else { continue };
+            had_appends = true;
+            let AttentionRequest { id, payload, arrived, pinned, reply, .. } = req;
+            let output = match payload {
+                Payload::Append { k_rows, v_rows } => kv
+                    .append(&streams[gi].0, k_rows, v_rows)
+                    .map(|()| Vec::new())
+                    .map_err(|e| e.to_string()),
+                Payload::Query(_) => unreachable!("parked request is an append"),
+            };
+            if pinned {
+                guards[gi].release_one();
+            }
+            deliver_append(id, arrived, reply, output, n, metrics);
+        }
+        if !had_queries && !had_appends {
+            break;
+        }
+    }
+}
+
+/// Answer one fused phase: every group's pending query run in a single
+/// plan-based backend dispatch.  Groups whose session is missing or
+/// whose queries are malformed fail individually; the rest fuse.
+fn flush_runs(
+    be: &mut dyn Backend,
+    streams: &[GroupStream],
+    runs: Vec<(usize, Vec<PendingQuery>)>,
+    kv: &KvStore,
+    guards: &mut [PinGuard<'_>],
     metrics: &Metrics,
     batch_size: usize,
 ) {
-    if run.is_empty() {
+    let d = be.head_dim();
+    let mut fused: Vec<FusedRun> = Vec::new();
+    for (gi, run) in runs {
+        let session = streams[gi].0.as_str();
+        let Some(entry) = kv.get(session) else {
+            fail_run(run, &format!("unknown session {session:?}"), gi, guards, metrics, batch_size);
+            continue;
+        };
+        if run.iter().any(|(_, q, _, _, _)| q.len() != d) {
+            fail_run(run, &format!("query dim mismatch (expected {d})"), gi, guards, metrics, batch_size);
+            continue;
+        }
+        let mut q = Mat::zeros(run.len(), d);
+        for (i, (_, qv, _, _, _)) in run.iter().enumerate() {
+            q.row_mut(i).copy_from_slice(qv);
+        }
+        fused.push((gi, run, entry, q));
+    }
+    if fused.is_empty() {
         return;
     }
-    let d = be.head_dim();
-    let result: std::result::Result<Mat, String> = if let Some(entry) = kv.get(session) {
-        if run.iter().any(|(_, q, _, _, _)| q.len() != d) {
-            Err(format!("query dim mismatch (expected {d})"))
-        } else {
-            let mut q = Mat::zeros(run.len(), d);
-            for (i, (_, qv, _, _, _)) in run.iter().enumerate() {
-                q.row_mut(i).copy_from_slice(qv);
+    let plan: Vec<(&KvEntry, &Mat)> = fused.iter().map(|(_, _, e, q)| (e, q)).collect();
+    // a panicking backend (crashed device thread) still kills this
+    // worker — but the fused callers get an explicit error response
+    // first instead of dead reply channels for every innocent session
+    // that happened to share the dispatch
+    let result = catch_unwind(AssertUnwindSafe(|| be.compute_plan(&plan)));
+    let plan_len = plan.len();
+    drop(plan);
+    match result {
+        Err(payload) => {
+            for (gi, run, _, _) in fused {
+                fail_run(run, BACKEND_PANIC_ERROR, gi, guards, metrics, batch_size);
             }
-            be.compute(&entry, &q).map_err(|e| e.to_string())
+            resume_unwind(payload);
         }
-    } else {
-        Err(format!("unknown session {session:?}"))
-    };
+        Ok(Ok(outs)) if outs.len() == plan_len => {
+            for ((gi, run, _, _), out) in fused.into_iter().zip(outs) {
+                deliver_run(run, &out, gi, guards, metrics, batch_size);
+            }
+        }
+        Ok(Ok(outs)) => {
+            let msg = format!(
+                "backend returned {} outputs for a {plan_len}-session plan",
+                outs.len()
+            );
+            for (gi, run, _, _) in fused {
+                fail_run(run, &msg, gi, guards, metrics, batch_size);
+            }
+        }
+        Ok(Err(e)) if fused.len() == 1 => {
+            let (gi, run, _, _) = fused.into_iter().next().expect("one fused run");
+            fail_run(run, &e.to_string(), gi, guards, metrics, batch_size);
+        }
+        // error isolation: one bad session (e.g. a static-shape PJRT
+        // kernel rejecting a mid-decode session) must not fail its
+        // dispatch neighbours — retry each group as its own plan and
+        // deliver per-group results, matching pre-fusion behavior where
+        // every session was its own dispatch.  The retry's total work
+        // equals those pre-fusion dispatches; the aborted fused attempt
+        // costs at most the entries before the first failure (both
+        // in-tree backends validate eagerly / short-circuit at the
+        // first failing entry), so the error path stays ~one pass
+        Ok(Err(_)) => {
+            for (gi, run, entry, q) in fused {
+                match be.compute_plan(&[(&entry, &q)]) {
+                    Ok(outs) if outs.len() == 1 => {
+                        deliver_run(run, &outs[0], gi, guards, metrics, batch_size);
+                    }
+                    Ok(outs) => {
+                        let msg = format!(
+                            "backend returned {} outputs for a 1-session plan",
+                            outs.len()
+                        );
+                        fail_run(run, &msg, gi, guards, metrics, batch_size);
+                    }
+                    Err(e) => fail_run(run, &e.to_string(), gi, guards, metrics, batch_size),
+                }
+            }
+        }
+    }
+}
+
+/// Deliver one group's fused-plan outputs row by row.
+fn deliver_run(
+    run: Vec<PendingQuery>,
+    out: &Mat,
+    gi: usize,
+    guards: &mut [PinGuard<'_>],
+    metrics: &Metrics,
+    batch_size: usize,
+) {
     for (i, (id, _, arrived, pinned, reply)) in run.into_iter().enumerate() {
-        let output = match &result {
-            Ok(mat) => Ok(mat.row(i).to_vec()),
-            Err(e) => Err(e.clone()),
-        };
         if pinned {
-            pins.release_one();
+            guards[gi].release_one();
         }
-        deliver(id, arrived, reply, output, batch_size, metrics);
+        deliver(id, arrived, reply, Ok(out.row(i).to_vec()), batch_size, metrics);
+    }
+}
+
+/// Deliver the same error to every query of one group's run.
+fn fail_run(
+    run: Vec<PendingQuery>,
+    msg: &str,
+    gi: usize,
+    guards: &mut [PinGuard<'_>],
+    metrics: &Metrics,
+    batch_size: usize,
+) {
+    for (id, _, arrived, pinned, reply) in run {
+        if pinned {
+            guards[gi].release_one();
+        }
+        deliver(id, arrived, reply, Err(msg.to_string()), batch_size, metrics);
     }
 }
 
@@ -571,6 +957,7 @@ mod tests {
     fn test_server(workers: usize) -> (Server, Mat, Mat) {
         let coord_cfg = CoordinatorConfig {
             max_batch: 4,
+            max_total_batch: 64,
             batch_window_us: 200,
             workers,
             queue_depth: 64,
@@ -660,10 +1047,52 @@ mod tests {
         srv.shutdown();
     }
 
+    // The batcher must close an idle partial batch at its window, not at
+    // the next fixed-tick sweep (the seed slept `max(window, 50us)`
+    // between sweeps, so traffic landing just before a deadline pushed
+    // the close up to ~2x the window out).
+    #[test]
+    fn partial_batch_closes_within_its_window_under_background_traffic() {
+        let window_us = 200_000u64; // 200 ms: generous against CI jitter
+        let coord_cfg = CoordinatorConfig {
+            max_batch: 100,
+            max_total_batch: 256,
+            batch_window_us: window_us,
+            workers: 1,
+            queue_depth: 64,
+        };
+        let kv = Arc::new(KvStore::new(32, 8, 4));
+        let mut rng = Rng::new(71);
+        kv.put("slow", Mat::from_vec(32, 8, rng.normal_vec(256)),
+               Mat::from_vec(32, 8, rng.normal_vec(256))).unwrap();
+        kv.put("other", Mat::from_vec(32, 8, rng.normal_vec(256)),
+               Mat::from_vec(32, 8, rng.normal_vec(256))).unwrap();
+        let factories = vec![SimBackend::factory(Arith::Hfa, accel_cfg(8))];
+        let srv = Server::start(&coord_cfg, kv, factories).unwrap();
+
+        let t0 = Instant::now();
+        let rx = srv.submit("slow", rng.normal_vec(8)).unwrap();
+        // background traffic on another session lands *just before* the
+        // "slow" deadline — under fixed-tick sweeping this rescheduled
+        // the next sweep a whole window later
+        std::thread::sleep(Duration::from_micros(window_us * 3 / 5));
+        let _rx2 = srv.submit("other", rng.normal_vec(8)).unwrap();
+        let resp = rx.recv().unwrap();
+        assert!(resp.ok(), "{:?}", resp.output);
+        let elapsed = t0.elapsed();
+        let window = Duration::from_micros(window_us);
+        assert!(
+            elapsed < window * 3 / 2,
+            "partial batch closed {elapsed:?} after submit; want < 1.5x the {window:?} window"
+        );
+        srv.shutdown();
+    }
+
     #[test]
     fn start_fails_when_any_backend_init_fails() {
         let coord_cfg = CoordinatorConfig {
             max_batch: 4,
+            max_total_batch: 64,
             batch_window_us: 100,
             workers: 2,
             queue_depth: 16,
@@ -690,6 +1119,7 @@ mod tests {
         // error response (the seed panicked the worker, hanging clients)
         let coord_cfg = CoordinatorConfig {
             max_batch: 4,
+            max_total_batch: 64,
             batch_window_us: 100,
             workers: 1,
             queue_depth: 16,
@@ -723,11 +1153,10 @@ mod tests {
         fn max_batch(&self) -> usize {
             4
         }
-        fn compute(
+        fn compute_plan(
             &mut self,
-            _kv: &crate::coordinator::kvstore::KvEntry,
-            _q: &Mat,
-        ) -> Result<Mat> {
+            _plan: &[(&crate::coordinator::kvstore::KvEntry, &Mat)],
+        ) -> Result<Vec<Mat>> {
             panic!("injected backend crash")
         }
         fn name(&self) -> String {
@@ -742,6 +1171,7 @@ mod tests {
         // that would only error when the whole server was torn down
         let coord_cfg = CoordinatorConfig {
             max_batch: 1,
+            max_total_batch: 64,
             batch_window_us: 100,
             workers: 1,
             queue_depth: 16,
@@ -757,10 +1187,17 @@ mod tests {
         let factories: Vec<BackendFactory> =
             vec![Box::new(|| Ok(Box::new(PanicBackend) as Box<dyn crate::coordinator::backend::Backend>))];
         let srv = Server::start(&coord_cfg, kv, factories).unwrap();
-        // the first request crashes the only worker; its own reply
-        // channel dies with the panic (recv error — still not a hang)
-        assert!(srv.call("sess", rng.normal_vec(8)).is_err());
-        // let the worker thread finish unwinding and drop its receiver
+        // the first request crashes the only worker, but its caller
+        // still receives an explicit error response before the unwind
+        // (fused neighbours of a crashing dispatch must not be left on
+        // dead reply channels)
+        let resp = srv.call("sess", rng.normal_vec(8)).unwrap();
+        assert!(!resp.ok());
+        assert!(
+            resp.output.unwrap_err().contains("panicked"),
+            "caller must learn the backend crashed"
+        );
+        // let the worker thread finish unwinding
         std::thread::sleep(Duration::from_millis(200));
         // later requests must receive an explicit error response
         let resp = srv.call("sess", rng.normal_vec(8)).unwrap();
@@ -770,10 +1207,80 @@ mod tests {
         srv.shutdown();
     }
 
+    /// Backend that (like the static-shape PJRT kernel) can only serve
+    /// full-length sessions, and whose `compute_plan` fails as a whole
+    /// when any entry is short — the shape that used to take every
+    /// fused neighbour down with it.
+    struct StrictLenBackend;
+
+    impl crate::coordinator::backend::Backend for StrictLenBackend {
+        fn head_dim(&self) -> usize {
+            8
+        }
+        fn seq_len(&self) -> usize {
+            32
+        }
+        fn max_batch(&self) -> usize {
+            8
+        }
+        fn compute_plan(
+            &mut self,
+            plan: &[(&crate::coordinator::kvstore::KvEntry, &Mat)],
+        ) -> Result<Vec<Mat>> {
+            plan.iter()
+                .map(|&(kv, q)| {
+                    anyhow::ensure!(
+                        kv.prepared().n() == 32,
+                        "short session rejected by static kernel"
+                    );
+                    Ok(Mat::from_fn(q.rows, 8, |_, _| 1.0))
+                })
+                .collect()
+        }
+        fn name(&self) -> String {
+            "strict-len".into()
+        }
+    }
+
+    #[test]
+    fn fused_dispatch_isolates_per_session_backend_errors() {
+        // one valid and one invalid session fused into a dispatch: the
+        // invalid one must fail alone, the valid one must still be
+        // served (pre-fusion each session was its own dispatch, so the
+        // valid one always succeeded — fusion must not regress that)
+        let coord_cfg = CoordinatorConfig {
+            max_batch: 8,
+            max_total_batch: 64,
+            batch_window_us: 100_000, // generous window so the two fuse
+            workers: 1,
+            queue_depth: 16,
+        };
+        let kv = Arc::new(KvStore::new(32, 8, 4));
+        let mut rng = Rng::new(23);
+        kv.put("full", Mat::from_vec(32, 8, rng.normal_vec(256)),
+               Mat::from_vec(32, 8, rng.normal_vec(256))).unwrap();
+        kv.put("short", Mat::from_vec(16, 8, rng.normal_vec(128)),
+               Mat::from_vec(16, 8, rng.normal_vec(128))).unwrap();
+        let factories: Vec<BackendFactory> = vec![Box::new(|| {
+            Ok(Box::new(StrictLenBackend) as Box<dyn crate::coordinator::backend::Backend>)
+        })];
+        let srv = Server::start(&coord_cfg, kv, factories).unwrap();
+        let rx_full = srv.submit("full", rng.normal_vec(8)).unwrap();
+        let rx_short = srv.submit("short", rng.normal_vec(8)).unwrap();
+        let full = rx_full.recv().unwrap();
+        let short = rx_short.recv().unwrap();
+        assert!(full.ok(), "valid session must survive a neighbour's failure: {:?}", full.output);
+        assert_eq!(full.output.unwrap(), vec![1.0; 8]);
+        assert!(!short.ok(), "invalid session must fail alone");
+        assert!(short.output.unwrap_err().contains("short session rejected"));
+        srv.shutdown();
+    }
+
     #[test]
     fn append_then_attend_sees_grown_kv() {
         let coord_cfg = CoordinatorConfig {
             max_batch: 4,
+            max_total_batch: 64,
             batch_window_us: 100,
             workers: 1,
             queue_depth: 64,

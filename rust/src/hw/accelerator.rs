@@ -95,75 +95,119 @@ impl Accelerator {
         self.kv.is_some()
     }
 
-    /// Compute attention for a batch of queries, returning outputs and the
-    /// cycle-level timing of the run.
+    /// Compute attention for a batch of queries against the loaded
+    /// session, returning outputs and the cycle-level timing of the run.
+    /// The single-session case of [`Accelerator::compute_plan`] — same
+    /// arithmetic, same formulas.
     pub fn compute_batch(&self, q: &Mat) -> anyhow::Result<(Mat, CycleStats)> {
-        let kv = self.kv.as_ref().ok_or_else(|| anyhow::anyhow!("KV not loaded"))?;
-        anyhow::ensure!(q.cols == self.cfg.head_dim, "query dim mismatch");
-        let q = q.round_bf16();
+        let kv = self.kv.clone().ok_or_else(|| anyhow::anyhow!("KV not loaded"))?;
+        let (mut outs, stats) = self.compute_plan(&[(&kv, q)])?;
+        Ok((outs.pop().expect("one plan entry in, one output out"), stats))
+    }
+
+    /// Fused cross-session dispatch: one `(prepared KV, queries)` pair
+    /// per session.  Functionally, the H-FA arm schedules **all**
+    /// sessions' `(query-tile x KV-block)` grid cells through one pool
+    /// pass ([`crate::attention::prepared::attention_multi`]) with
+    /// per-query merges in block order, so each session's output is
+    /// bit-identical to computing it alone.  Timing models the
+    /// super-batch as **per-session sub-launches**: each session pays
+    /// the full `simulate` formula over its own resident length and
+    /// query count (the silicon's KV SRAM holds one session at a time,
+    /// so sub-launches serialize) and the stats are summed — identical
+    /// to `compute_batch` when the plan has one session.
+    pub fn compute_plan(
+        &self,
+        plan: &[(&Arc<PreparedKv>, &Mat)],
+    ) -> anyhow::Result<(Vec<Mat>, CycleStats)> {
+        anyhow::ensure!(!plan.is_empty(), "empty compute plan");
+        for (kv, q) in plan {
+            self.check_shape(kv.n(), kv.d(), kv.n(), kv.dv())?;
+            anyhow::ensure!(q.cols == self.cfg.head_dim, "query dim mismatch");
+        }
+        let qs: Vec<Mat> = plan.iter().map(|(_, q)| q.round_bf16()).collect();
 
         let p = self.cfg.kv_blocks;
-        let out = match self.arith {
+        let outs = match self.arith {
             Arith::Fa2 => {
-                // p block-FAUs -> ACC cascade (Eq. 1) -> DIV; each
-                // block's K/V is materialized from the chunk table (the
-                // same per-block copy the dense layout paid via
-                // `rows_slice`) — block boundaries are count-driven and
-                // unchanged, so the merge cascade is identical
-                let mut acc: Option<Vec<fa2::Fa2State>> = None;
-                for (lo, hi) in kv_block_ranges(kv.n(), p) {
-                    let kb = kv.k_rows(lo, hi);
-                    let vb = kv.v_rows(lo, hi);
-                    let st = fa2::partial_states(&q, &kb, &vb, None, None);
-                    acc = Some(match acc {
-                        None => st,
-                        Some(prev) => prev
-                            .iter()
-                            .zip(&st)
-                            .map(|(a, b)| merge::merge_fa2(a, b))
-                            .collect(),
-                    });
-                }
-                let states = acc.unwrap();
-                let mut out = Mat::zeros(q.rows, self.cfg.head_dim);
-                for (i, st) in states.iter().enumerate() {
-                    // DIV output rounds to BF16 on the way out
-                    for (j, x) in st.finalize().iter().enumerate() {
-                        out.set(i, j, crate::Bf16::from_f32(*x).to_f32());
-                    }
-                }
-                out
+                // p block-FAUs -> ACC cascade (Eq. 1) -> DIV, session by
+                // session; each block's K/V is materialized from the
+                // chunk table (the same per-block copy the dense layout
+                // paid via `rows_slice`) — block boundaries are
+                // count-driven and unchanged, so the merge cascade is
+                // identical
+                plan.iter()
+                    .zip(&qs)
+                    .map(|(&(kv, _), q)| {
+                        let mut acc: Option<Vec<fa2::Fa2State>> = None;
+                        for (lo, hi) in kv_block_ranges(kv.n(), p) {
+                            let kb = kv.k_rows(lo, hi);
+                            let vb = kv.v_rows(lo, hi);
+                            let st = fa2::partial_states(q, &kb, &vb, None, None);
+                            acc = Some(match acc {
+                                None => st,
+                                Some(prev) => prev
+                                    .iter()
+                                    .zip(&st)
+                                    .map(|(a, b)| merge::merge_fa2(a, b))
+                                    .collect(),
+                            });
+                        }
+                        let states = acc.unwrap();
+                        let mut out = Mat::zeros(q.rows, self.cfg.head_dim);
+                        for (i, st) in states.iter().enumerate() {
+                            // DIV output rounds to BF16 on the way out
+                            for (j, x) in st.finalize().iter().enumerate() {
+                                out.set(i, j, crate::Bf16::from_f32(*x).to_f32());
+                            }
+                        }
+                        out
+                    })
+                    .collect()
             }
-            // prepared path: resident LNS lanes resolved through the
-            // chunk table, batch compute grid-scheduled by the
-            // query-tiled kernel — the (query-tile x block-FAU) cells
-            // run as independent pool jobs and merge in block order
-            // (Eq. 16), mirroring Fig. 2's two parallel axes.
-            // Bit-identical to the sequential golden blocked model
-            // (tests below and rust/tests/hw_equivalence.rs).
-            Arith::Hfa => kv.attention_tiled(
-                &q,
-                p,
-                None,
-                crate::attention::kernel::DEFAULT_QUERY_TILE,
-            ),
+            // prepared path: resident LNS lanes resolved through each
+            // session's chunk table, all sessions' (query-tile x
+            // block-FAU) cells fanned out as one ragged grid and merged
+            // in block order (Eq. 16) — Fig. 2's two parallel axes plus
+            // the cross-session axis.  Bit-identical to the sequential
+            // golden blocked model per session (tests below and
+            // rust/tests/hw_equivalence.rs).
+            Arith::Hfa => {
+                let fused: Vec<(&PreparedKv, &Mat)> =
+                    plan.iter().zip(&qs).map(|(&(kv, _), q)| (kv.as_ref(), q)).collect();
+                crate::attention::prepared::attention_multi(
+                    &fused,
+                    p,
+                    None,
+                    crate::attention::kernel::DEFAULT_QUERY_TILE,
+                )
+            }
         };
 
-        // timing follows the *resident* length (== seq_len when full;
-        // shorter mid-decode), not the SRAM capacity.  The host-side
-        // grid schedule above does not enter the model: `simulate`
-        // prices the silicon's fixed p block-FAUs x parallel_queries
-        // datapath, which is unchanged by how the emulation spreads the
-        // same arithmetic over worker threads.
-        let stats = simulate(
-            self.cfg.head_dim,
-            kv.n(),
-            p,
-            self.cfg.parallel_queries,
-            q.rows,
-            self.lat,
-        );
-        Ok((out, stats))
+        // timing follows each session's *resident* length (== seq_len
+        // when full; shorter mid-decode), not the SRAM capacity.  The
+        // host-side grid schedule above does not enter the model:
+        // `simulate` prices the silicon's fixed p block-FAUs x
+        // parallel_queries datapath per sub-launch, which is unchanged
+        // by how the emulation spreads the same arithmetic over worker
+        // threads; sub-launches accumulate because the modelled SRAM
+        // swap serializes sessions.
+        let mut stats: Option<CycleStats> = None;
+        for (&(kv, _), q) in plan.iter().zip(&qs) {
+            let s = simulate(
+                self.cfg.head_dim,
+                kv.n(),
+                p,
+                self.cfg.parallel_queries,
+                q.rows,
+                self.lat,
+            );
+            stats = Some(match stats {
+                None => s,
+                Some(acc) => accumulate_launches(acc, s),
+            });
+        }
+        Ok((outs, stats.expect("non-empty plan")))
     }
 
     /// Datapath inventory of this instance.
@@ -179,6 +223,25 @@ impl Accelerator {
     /// KV SRAM subsystem of this instance (28 nm).
     pub fn sram(&self) -> SramConfig {
         SramConfig::kv_buffers(self.cfg.seq_len, self.cfg.head_dim, self.cfg.kv_blocks, Node::N28)
+    }
+}
+
+/// Combine two sequential sub-launches' timings: elapsed quantities
+/// (cycles, rounds, busy unit-cycles, SRAM reads) add; instantaneous
+/// quantities (unit counts — the same silicon runs every sub-launch)
+/// stay, and `keys_per_fau` reports the longest stream of any launch.
+fn accumulate_launches(a: CycleStats, b: CycleStats) -> CycleStats {
+    CycleStats {
+        cycles: a.cycles + b.cycles,
+        rounds: a.rounds + b.rounds,
+        keys_per_fau: a.keys_per_fau.max(b.keys_per_fau),
+        fau_busy: a.fau_busy + b.fau_busy,
+        acc_busy: a.acc_busy + b.acc_busy,
+        div_busy: a.div_busy + b.div_busy,
+        fau_units: a.fau_units.max(b.fau_units),
+        acc_units: a.acc_units.max(b.acc_units),
+        div_units: a.div_units.max(b.div_units),
+        sram_word_reads: a.sram_word_reads + b.sram_word_reads,
     }
 }
 
@@ -279,6 +342,70 @@ mod tests {
         assert_eq!(sg.cycles, sf.cycles);
         // capacity guard
         assert!(grown.append_kv(&Mat::zeros(1, 16), &Mat::zeros(1, 16)).is_err());
+    }
+
+    #[test]
+    fn compute_plan_bit_identical_to_per_session_batches_and_sums_timing() {
+        // a fused plan over sessions of different resident lengths must
+        // reproduce each session's solo compute_batch bitwise, and its
+        // timing must be exactly the sum of the per-session sub-launches
+        for arith in [Arith::Hfa, Arith::Fa2] {
+            let mut rng = Rng::new(91);
+            let cfg = AcceleratorConfig {
+                head_dim: 16,
+                seq_len: 128,
+                kv_blocks: 4,
+                parallel_queries: 1,
+                freq_mhz: 500.0,
+            };
+            let a = Accelerator::new(arith, cfg.clone());
+            let mk = |rng: &mut Rng, n: usize| {
+                Arc::new(PreparedKv::new(
+                    Mat::from_vec(n, 16, rng.normal_vec(n * 16)).round_bf16(),
+                    Mat::from_vec(n, 16, rng.normal_vec(n * 16)).round_bf16(),
+                ))
+            };
+            let sessions = [mk(&mut rng, 128), mk(&mut rng, 37), mk(&mut rng, 64)];
+            let queries: Vec<Mat> = [3usize, 1, 2]
+                .iter()
+                .map(|&b| Mat::from_vec(b, 16, rng.normal_vec(b * 16)))
+                .collect();
+            let plan: Vec<(&Arc<PreparedKv>, &Mat)> =
+                sessions.iter().zip(&queries).collect();
+            let (outs, fused_stats) = a.compute_plan(&plan).unwrap();
+            assert_eq!(outs.len(), 3);
+            let mut solo_cycles = 0u64;
+            let mut solo_reads = 0u64;
+            for ((kv, q), fused_out) in plan.iter().zip(&outs) {
+                let mut solo = Accelerator::new(arith, cfg.clone());
+                solo.load_prepared(Arc::clone(kv)).unwrap();
+                let (want, stats) = solo.compute_batch(q).unwrap();
+                assert_eq!(
+                    fused_out.data, want.data,
+                    "{arith:?}: fused output must match the solo launch bitwise"
+                );
+                solo_cycles += stats.cycles;
+                solo_reads += stats.sram_word_reads;
+            }
+            assert_eq!(fused_stats.cycles, solo_cycles, "{arith:?}: sub-launch cycles sum");
+            assert_eq!(fused_stats.sram_word_reads, solo_reads, "{arith:?}");
+        }
+    }
+
+    #[test]
+    fn compute_plan_validates_every_entry() {
+        let (a, _, _) = accel(Arith::Hfa, 16, 64, 2);
+        assert!(a.compute_plan(&[]).is_err(), "empty plan");
+        let good = Arc::new(PreparedKv::new(Mat::zeros(8, 16), Mat::zeros(8, 16)));
+        let wrong_d = Arc::new(PreparedKv::new(Mat::zeros(8, 8), Mat::zeros(8, 8)));
+        let q = Mat::zeros(1, 16);
+        assert!(a.compute_plan(&[(&good, &q)]).is_ok());
+        assert!(
+            a.compute_plan(&[(&good, &q), (&wrong_d, &q)]).is_err(),
+            "any bad session fails the whole plan"
+        );
+        let q_bad = Mat::zeros(1, 8);
+        assert!(a.compute_plan(&[(&good, &q_bad)]).is_err(), "query dim checked per entry");
     }
 
     #[test]

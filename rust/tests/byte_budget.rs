@@ -42,6 +42,7 @@ fn queued_queries_pin_their_session_against_eviction() {
     // to evict its session twice over
     let coord = CoordinatorConfig {
         max_batch: 8,
+        max_total_batch: 256,
         batch_window_us: 300_000, // long window: the query stays queued
         workers: 1,
         queue_depth: 64,
@@ -78,6 +79,7 @@ fn queued_queries_pin_their_session_against_eviction() {
 fn append_admission_errors_surface_through_server() {
     let coord = CoordinatorConfig {
         max_batch: 4,
+        max_total_batch: 256,
         batch_window_us: 100,
         workers: 1,
         queue_depth: 64,
@@ -127,6 +129,7 @@ fn byte_budget_serves_many_short_sessions_concurrently() {
     // space of two full sessions and serves them all
     let coord = CoordinatorConfig {
         max_batch: 4,
+        max_total_batch: 256,
         batch_window_us: 100,
         workers: 2,
         queue_depth: 64,

@@ -71,6 +71,7 @@ fn append_conversion_work_tracks_new_rows_only() {
     };
     let coord_cfg = CoordinatorConfig {
         max_batch: 4,
+        max_total_batch: 256,
         batch_window_us: 100,
         workers: 2,
         queue_depth: 64,

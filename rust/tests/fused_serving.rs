@@ -1,0 +1,253 @@
+//! Cross-session super-batch serving, end to end: a dispatch spanning
+//! many sessions must be invisible to every caller — outputs
+//! bit-identical to serving each session alone (the golden blocked
+//! model, which single-session serving is pinned against elsewhere),
+//! appends barriering only their own session, pins released per session
+//! and the KV byte accounting returning to baseline once the traffic
+//! drains.
+
+use std::sync::Arc;
+
+use hfa::attention::prepared::row_bytes;
+use hfa::config::{AcceleratorConfig, CoordinatorConfig};
+use hfa::coordinator::{KvStore, Server, SimBackend};
+use hfa::hw::Arith;
+use hfa::proptest::Rng;
+use hfa::Mat;
+
+const D: usize = 8;
+const SEQ: usize = 32;
+const KV_BLOCKS: usize = 4;
+
+fn accel_cfg() -> AcceleratorConfig {
+    AcceleratorConfig {
+        head_dim: D,
+        seq_len: SEQ,
+        kv_blocks: KV_BLOCKS,
+        parallel_queries: 1,
+        freq_mhz: 500.0,
+    }
+}
+
+/// Golden single-session serving result: the blocked H-FA model over the
+/// session's exact KV prefix (what `Server` is pinned to produce for a
+/// lone session by `coordinator::server::tests`).
+fn golden(q: &[f32], k: &Mat, v: &Mat, rows: usize) -> Vec<f32> {
+    hfa::attention::hfa::attention_blocked(
+        &Mat::from_vec(1, D, q.to_vec()).round_bf16(),
+        &k.rows_slice(0, rows).round_bf16(),
+        &v.rows_slice(0, rows).round_bf16(),
+        KV_BLOCKS,
+        None,
+        &mut None,
+    )
+    .row(0)
+    .to_vec()
+}
+
+// The acceptance pin: queries on several sessions landing inside one
+// forming window must ship as ONE dispatch (where the single-session
+// batcher needed one per session), and every output must still be
+// bit-identical to isolated serving.
+#[test]
+fn super_batch_spanning_sessions_is_one_dispatch_and_bit_identical() {
+    const SESSIONS: usize = 8;
+    let coord = CoordinatorConfig {
+        max_batch: 8,
+        max_total_batch: 64,
+        batch_window_us: 200_000, // generous: all submits land well inside
+        workers: 1,
+        queue_depth: 64,
+    };
+    let kv = Arc::new(KvStore::new(SEQ, D, SESSIONS));
+    let mut rng = Rng::new(41);
+    let mut kvs = Vec::new();
+    for s in 0..SESSIONS {
+        let k = Mat::from_vec(SEQ, D, rng.normal_vec(SEQ * D));
+        let v = Mat::from_vec(SEQ, D, rng.normal_vec(SEQ * D));
+        kv.put(&format!("sess-{s}"), k.clone(), v.clone()).unwrap();
+        kvs.push((k, v));
+    }
+    let srv =
+        Server::start(&coord, kv, vec![SimBackend::factory(Arith::Hfa, accel_cfg())]).unwrap();
+
+    // one query per session, submitted back to back — the fan-out
+    // regime where the single-session batcher degenerated to N
+    // batch-size-1 dispatches
+    let queries: Vec<Vec<f32>> = (0..SESSIONS).map(|_| rng.normal_vec(D)).collect();
+    let rxs: Vec<_> = queries
+        .iter()
+        .enumerate()
+        .map(|(s, q)| srv.submit(&format!("sess-{s}"), q.clone()).unwrap())
+        .collect();
+    for (s, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        assert!(resp.ok(), "session {s}: {:?}", resp.output);
+        assert_eq!(
+            resp.output.unwrap(),
+            golden(&queries[s], &kvs[s].0, &kvs[s].1, SEQ),
+            "session {s}: fused dispatch diverged from isolated serving"
+        );
+        assert_eq!(resp.batch_size, SESSIONS, "response must report the fused batch size");
+    }
+    let snap = srv.metrics.snapshot();
+    assert_eq!(snap.completed, SESSIONS as u64);
+    assert_eq!(
+        snap.batches, 1,
+        "{SESSIONS} one-query sessions must fuse into a single dispatch: {snap:?}"
+    );
+    assert_eq!(snap.mean_sessions, SESSIONS as f64);
+    assert_eq!(snap.mean_batch, SESSIONS as f64);
+    srv.shutdown();
+}
+
+// Many-session soak: 64 sessions running interleaved decode loops
+// (append one row, then attend) over the fused path.  Every attend must
+// be bit-identical to the golden model over that session's exact prefix,
+// appends must only ever grow their own session, and when the traffic
+// drains the store must hold zero pins and exactly the resident bytes
+// the sessions' final lengths account for (no leak across super-batches).
+#[test]
+fn many_session_decode_soak_stays_exact_and_leaks_nothing() {
+    const SESSIONS: usize = 64;
+    const PREFILL: usize = 8;
+    const STEPS: usize = 4;
+    let coord = CoordinatorConfig {
+        max_batch: 8,
+        max_total_batch: 256,
+        batch_window_us: 3_000,
+        workers: 3,
+        queue_depth: 512,
+    };
+    let kv = Arc::new(KvStore::new(SEQ, D, SESSIONS));
+    let mut rng = Rng::new(2027);
+    let mut mats = Vec::new();
+    for s in 0..SESSIONS {
+        let n = PREFILL + STEPS;
+        let k = Mat::from_vec(n, D, rng.normal_vec(n * D));
+        let v = Mat::from_vec(n, D, rng.normal_vec(n * D));
+        kv.put(&format!("sess-{s}"), k.rows_slice(0, PREFILL), v.rows_slice(0, PREFILL))
+            .unwrap();
+        mats.push((k, v));
+    }
+    let factories = (0..coord.workers)
+        .map(|_| SimBackend::factory(Arith::Hfa, accel_cfg()))
+        .collect();
+    let srv = Server::start(&coord, kv.clone(), factories).unwrap();
+
+    for step in 0..STEPS {
+        let at = PREFILL + step;
+        // decode writes for every session, then the barrier acks; each
+        // session's next attend is only submitted after its own ack, so
+        // per-session ordering is the client-enforced decode protocol
+        let acks: Vec<_> = (0..SESSIONS)
+            .map(|s| {
+                let (k, v) = &mats[s];
+                srv.submit_append(
+                    &format!("sess-{s}"),
+                    k.rows_slice(at, at + 1),
+                    v.rows_slice(at, at + 1),
+                )
+                .unwrap()
+            })
+            .collect();
+        for (s, ack) in acks.into_iter().enumerate() {
+            let a = ack.recv().unwrap();
+            assert!(a.ok(), "step {step} session {s} append: {:?}", a.output);
+        }
+        // one attend per session, submitted back to back so the window
+        // fuses them across sessions
+        let queries: Vec<Vec<f32>> = (0..SESSIONS).map(|_| rng.normal_vec(D)).collect();
+        let rxs: Vec<_> = (0..SESSIONS)
+            .map(|s| srv.submit(&format!("sess-{s}"), queries[s].clone()).unwrap())
+            .collect();
+        for (s, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            assert!(resp.ok(), "step {step} session {s}: {:?}", resp.output);
+            let (k, v) = &mats[s];
+            assert_eq!(
+                resp.output.unwrap(),
+                golden(&queries[s], k, v, at + 1),
+                "step {step} session {s}: fused decode attend diverged from golden \
+                 over {} rows",
+                at + 1
+            );
+        }
+    }
+
+    // the fused path must actually have fused: strictly fewer dispatches
+    // than requests, more than one session per dispatch on average
+    let snap = srv.metrics.snapshot();
+    assert_eq!(snap.completed, (SESSIONS * STEPS) as u64);
+    assert_eq!(snap.appends, (SESSIONS * STEPS) as u64);
+    assert_eq!(snap.failed, 0);
+    assert!(
+        snap.mean_sessions > 1.0,
+        "soak never exercised cross-session fusion: {snap:?}"
+    );
+
+    // no leak across super-batches: every ingress pin released, byte
+    // accounting equal to exactly the sessions' final resident lengths
+    assert_eq!(kv.pinned_sessions(), 0, "drained server must hold no pins");
+    assert_eq!(kv.resident(), SESSIONS);
+    let expect_bytes = SESSIONS * (PREFILL + STEPS) * row_bytes(D, D);
+    assert_eq!(kv.used_bytes(), expect_bytes, "byte accounting drifted over the soak");
+    srv.shutdown();
+    assert_eq!(kv.pinned_sessions(), 0, "shutdown must not re-pin anything");
+}
+
+// Append barriers must order within their own session only: a session
+// with a pending query closed by its append must see pre-append KV for
+// the query, while an unrelated session fused into neighbouring
+// dispatches is untouched.
+#[test]
+fn append_barriers_order_within_their_session_only() {
+    let coord = CoordinatorConfig {
+        max_batch: 8,
+        max_total_batch: 64,
+        batch_window_us: 100_000,
+        workers: 1,
+        queue_depth: 64,
+    };
+    let kv = Arc::new(KvStore::new(SEQ, D, 4));
+    let mut rng = Rng::new(97);
+    let n = 12;
+    let (ka, va) = (
+        Mat::from_vec(n, D, rng.normal_vec(n * D)),
+        Mat::from_vec(n, D, rng.normal_vec(n * D)),
+    );
+    let (kb, vb) = (
+        Mat::from_vec(SEQ, D, rng.normal_vec(SEQ * D)),
+        Mat::from_vec(SEQ, D, rng.normal_vec(SEQ * D)),
+    );
+    kv.put("a", ka.rows_slice(0, n - 1), va.rows_slice(0, n - 1)).unwrap();
+    kv.put("b", kb.clone(), vb.clone()).unwrap();
+    let factories = vec![SimBackend::factory(Arith::Hfa, accel_cfg())];
+    let srv = Server::start(&coord, kv, factories).unwrap();
+
+    // session a: query then append — the append closes the pair into one
+    // dispatch, query served against the pre-append prefix; session b's
+    // query rides the window independently
+    let qa = rng.normal_vec(D);
+    let qb = rng.normal_vec(D);
+    let rx_a = srv.submit("a", qa.clone()).unwrap();
+    let rx_b = srv.submit("b", qb.clone()).unwrap();
+    let rx_app =
+        srv.submit_append("a", ka.rows_slice(n - 1, n), va.rows_slice(n - 1, n)).unwrap();
+    let ra = rx_a.recv().unwrap();
+    let rapp = rx_app.recv().unwrap();
+    let rb = rx_b.recv().unwrap();
+    assert!(ra.ok() && rapp.ok() && rb.ok());
+    assert_eq!(
+        ra.output.unwrap(),
+        golden(&qa, &ka, &va, n - 1),
+        "query closed by its session's append must see pre-append KV"
+    );
+    assert_eq!(rb.output.unwrap(), golden(&qb, &kb, &vb, SEQ), "other session untouched");
+    // post-ack query sees the grown KV
+    let qa2 = rng.normal_vec(D);
+    let ra2 = srv.call("a", qa2.clone()).unwrap();
+    assert!(ra2.ok());
+    assert_eq!(ra2.output.unwrap(), golden(&qa2, &ka, &va, n));
+    srv.shutdown();
+}

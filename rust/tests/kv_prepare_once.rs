@@ -30,6 +30,7 @@ fn value_to_lns_runs_once_per_session_not_per_batch() {
     };
     let coord_cfg = CoordinatorConfig {
         max_batch: 4,
+        max_total_batch: 256,
         batch_window_us: 100,
         workers: 2,
         queue_depth: 128,
