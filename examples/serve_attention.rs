@@ -39,6 +39,7 @@ fn main() -> anyhow::Result<()> {
         batch_window_us: 200,
         workers,
         queue_depth: 256,
+        ..CoordinatorConfig::default()
     };
 
     // multiple resident KV sessions (different "documents"/heads)

@@ -72,6 +72,7 @@ fn main() -> anyhow::Result<()> {
         batch_window_us: 150,
         workers: 2,
         queue_depth: 256,
+        ..CoordinatorConfig::default()
     };
     let total: usize = env_usize("HFA_BENCH_REQS", 256);
     let mut json_rows: Vec<BenchRow> = Vec::new();
@@ -169,6 +170,7 @@ fn main() -> anyhow::Result<()> {
             batch_window_us: 500,
             workers: 2,
             queue_depth: fan_sessions.max(256),
+            ..CoordinatorConfig::default()
         };
         let kv = Arc::new(KvStore::new(n, d, fan_sessions));
         for s in 0..fan_sessions {

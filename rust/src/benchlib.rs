@@ -341,6 +341,218 @@ pub fn validate_json(s: &str) -> Result<(), String> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Schema validation for BENCH_*.json trajectory files
+// ---------------------------------------------------------------------------
+
+/// A parsed JSON value — just enough structure for schema checks over
+/// the small trajectory files (no serde offline; see DESIGN.md §9).
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Number(f64),
+    String(String),
+    Array(Vec<JsonValue>),
+    Object(Vec<(String, JsonValue)>),
+}
+
+/// Parse `s` into a [`JsonValue`].  Built on the same grammar as
+/// [`validate_json`]; errors carry the byte offset of the violation.
+pub fn parse_json(s: &str) -> Result<JsonValue, String> {
+    validate_json(s)?; // single error surface for malformed input
+    struct P<'a> {
+        b: &'a [u8],
+        i: usize,
+    }
+    impl P<'_> {
+        fn ws(&mut self) {
+            while matches!(self.b.get(self.i).copied(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+                self.i += 1;
+            }
+        }
+
+        fn string(&mut self) -> String {
+            self.i += 1; // opening quote
+            let mut out = String::new();
+            loop {
+                match self.b[self.i] {
+                    b'"' => {
+                        self.i += 1;
+                        return out;
+                    }
+                    b'\\' => {
+                        let esc = self.b[self.i + 1];
+                        self.i += 2;
+                        match esc {
+                            b'"' => out.push('"'),
+                            b'\\' => out.push('\\'),
+                            b'/' => out.push('/'),
+                            b'n' => out.push('\n'),
+                            b't' => out.push('\t'),
+                            b'r' => out.push('\r'),
+                            b'u' => {
+                                let hex =
+                                    std::str::from_utf8(&self.b[self.i..self.i + 4]).unwrap_or("");
+                                self.i += 4;
+                                if let Ok(cp) = u32::from_str_radix(hex, 16) {
+                                    out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                                }
+                            }
+                            c => out.push(c as char),
+                        }
+                    }
+                    _ => {
+                        // validate_json guaranteed well-formed UTF-8 input;
+                        // copy the raw char
+                        let rest = std::str::from_utf8(&self.b[self.i..]).unwrap_or("");
+                        let c = rest.chars().next().unwrap_or('\u{fffd}');
+                        out.push(c);
+                        self.i += c.len_utf8();
+                    }
+                }
+            }
+        }
+
+        fn value(&mut self) -> JsonValue {
+            self.ws();
+            match self.b[self.i] {
+                b'{' => {
+                    self.i += 1;
+                    self.ws();
+                    let mut members = Vec::new();
+                    if self.b[self.i] == b'}' {
+                        self.i += 1;
+                        return JsonValue::Object(members);
+                    }
+                    loop {
+                        self.ws();
+                        let key = self.string();
+                        self.ws();
+                        self.i += 1; // ':'
+                        let v = self.value();
+                        members.push((key, v));
+                        self.ws();
+                        if self.b[self.i] == b',' {
+                            self.i += 1;
+                        } else {
+                            self.i += 1; // '}'
+                            return JsonValue::Object(members);
+                        }
+                    }
+                }
+                b'[' => {
+                    self.i += 1;
+                    self.ws();
+                    let mut items = Vec::new();
+                    if self.b[self.i] == b']' {
+                        self.i += 1;
+                        return JsonValue::Array(items);
+                    }
+                    loop {
+                        items.push(self.value());
+                        self.ws();
+                        if self.b[self.i] == b',' {
+                            self.i += 1;
+                        } else {
+                            self.i += 1; // ']'
+                            return JsonValue::Array(items);
+                        }
+                    }
+                }
+                b'"' => JsonValue::String(self.string()),
+                b't' => {
+                    self.i += 4;
+                    JsonValue::Bool(true)
+                }
+                b'f' => {
+                    self.i += 5;
+                    JsonValue::Bool(false)
+                }
+                b'n' => {
+                    self.i += 4;
+                    JsonValue::Null
+                }
+                _ => {
+                    let start = self.i;
+                    while self
+                        .b
+                        .get(self.i)
+                        .is_some_and(|&c| c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E'))
+                    {
+                        self.i += 1;
+                    }
+                    let txt = std::str::from_utf8(&self.b[start..self.i]).unwrap_or("0");
+                    JsonValue::Number(txt.parse().unwrap_or(0.0))
+                }
+            }
+        }
+    }
+    let mut p = P { b: s.as_bytes(), i: 0 };
+    Ok(p.value())
+}
+
+/// Validate that `s` is a benchlib trajectory file: a JSON array whose
+/// every element is an object with **exactly** the [`BenchRow`] fields —
+/// `bench` (string), `shape` (string), `ns_per_step` (finite number
+/// >= 0), `kv_bytes_copied` (non-negative integer).  Returns the row
+/// count; the committed placeholder `[]` validates as 0 rows.  Run by
+/// CI over `BENCH_serving.json` so a writer drift (renamed field, NaN
+/// timing, stray key) fails the gate instead of silently producing an
+/// untoolable trajectory.
+pub fn validate_bench_schema(s: &str) -> Result<usize, String> {
+    let rows = match parse_json(s)? {
+        JsonValue::Array(rows) => rows,
+        _ => return Err("top-level value must be an array of bench rows".into()),
+    };
+    for (i, row) in rows.iter().enumerate() {
+        let members = match row {
+            JsonValue::Object(m) => m,
+            _ => return Err(format!("row {i}: expected an object")),
+        };
+        let mut keys: Vec<&str> = members.iter().map(|(k, _)| k.as_str()).collect();
+        keys.sort_unstable();
+        if keys != ["bench", "kv_bytes_copied", "ns_per_step", "shape"] {
+            return Err(format!(
+                "row {i}: expected exactly {{bench, shape, ns_per_step, kv_bytes_copied}}, got {{{}}}",
+                keys.join(", ")
+            ));
+        }
+        for (key, val) in members {
+            match (key.as_str(), val) {
+                ("bench" | "shape", JsonValue::String(v)) => {
+                    if v.is_empty() {
+                        return Err(format!("row {i}: {key} must be non-empty"));
+                    }
+                }
+                ("bench" | "shape", _) => {
+                    return Err(format!("row {i}: {key} must be a string"));
+                }
+                ("ns_per_step", JsonValue::Number(v)) => {
+                    if !v.is_finite() || *v < 0.0 {
+                        return Err(format!("row {i}: ns_per_step must be finite and >= 0"));
+                    }
+                }
+                ("ns_per_step", _) => {
+                    return Err(format!("row {i}: ns_per_step must be a number"));
+                }
+                ("kv_bytes_copied", JsonValue::Number(v)) => {
+                    if *v < 0.0 || v.fract() != 0.0 {
+                        return Err(format!(
+                            "row {i}: kv_bytes_copied must be a non-negative integer"
+                        ));
+                    }
+                }
+                ("kv_bytes_copied", _) => {
+                    return Err(format!("row {i}: kv_bytes_copied must be a number"));
+                }
+                _ => unreachable!("key set checked above"),
+            }
+        }
+    }
+    Ok(rows.len())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -404,6 +616,67 @@ mod tests {
         assert!(json.contains("\\\"quoted\\\\name\\\""));
         // empty row set is a valid (empty) array
         validate_json(&bench_rows_to_json(&[])).expect("empty array");
+    }
+
+    #[test]
+    fn parse_json_builds_values() {
+        let v = parse_json("[{\"a\": 1.5, \"b\": \"x\\ny\"}, true, null, -3]").unwrap();
+        let JsonValue::Array(items) = v else { panic!("expected array") };
+        assert_eq!(items.len(), 4);
+        assert_eq!(
+            items[0],
+            JsonValue::Object(vec![
+                ("a".into(), JsonValue::Number(1.5)),
+                ("b".into(), JsonValue::String("x\ny".into())),
+            ])
+        );
+        assert_eq!(items[1], JsonValue::Bool(true));
+        assert_eq!(items[2], JsonValue::Null);
+        assert_eq!(items[3], JsonValue::Number(-3.0));
+        assert!(parse_json("{nope").is_err());
+    }
+
+    #[test]
+    fn bench_schema_accepts_real_rows_and_the_placeholder() {
+        assert_eq!(validate_bench_schema("[]").unwrap(), 0, "committed placeholder");
+        let rows = vec![BenchRow {
+            bench: "serving_soak".into(),
+            shape: "S64_d8".into(),
+            ns_per_step: 123.0,
+            kv_bytes_copied: 4096,
+        }];
+        assert_eq!(validate_bench_schema(&bench_rows_to_json(&rows)).unwrap(), 1);
+    }
+
+    #[test]
+    fn bench_schema_rejects_drifted_rows() {
+        for (bad, why) in [
+            ("{}", "top-level object"),
+            ("[1]", "non-object row"),
+            ("[{\"bench\": \"b\", \"shape\": \"s\", \"ns_per_step\": 1}]", "missing field"),
+            (
+                "[{\"bench\": \"b\", \"shape\": \"s\", \"ns_per_step\": 1, \"kv_bytes_copied\": 0, \"extra\": 1}]",
+                "stray field",
+            ),
+            (
+                "[{\"bench\": \"\", \"shape\": \"s\", \"ns_per_step\": 1, \"kv_bytes_copied\": 0}]",
+                "empty bench name",
+            ),
+            (
+                "[{\"bench\": \"b\", \"shape\": \"s\", \"ns_per_step\": -1, \"kv_bytes_copied\": 0}]",
+                "negative timing",
+            ),
+            (
+                "[{\"bench\": \"b\", \"shape\": \"s\", \"ns_per_step\": 1, \"kv_bytes_copied\": 0.5}]",
+                "fractional bytes",
+            ),
+            (
+                "[{\"bench\": \"b\", \"shape\": \"s\", \"ns_per_step\": \"fast\", \"kv_bytes_copied\": 0}]",
+                "string timing",
+            ),
+        ] {
+            assert!(validate_bench_schema(bad).is_err(), "{why} must be rejected");
+        }
     }
 
     #[test]

@@ -54,6 +54,24 @@ pub struct CoordinatorConfig {
     pub workers: usize,
     /// Bounded queue depth before backpressure rejects.
     pub queue_depth: usize,
+    /// Default per-request deadline in microseconds from submit.  Past
+    /// it the request is shed with `ServeError::TimedOut` (batcher at
+    /// group close, workers before dispatch) instead of computing an
+    /// answer nobody is waiting for.
+    pub request_timeout_us: u64,
+    /// Admission gate: maximum requests in flight (accepted but not yet
+    /// answered) before `submit` rejects with `ServeError::Overloaded`.
+    pub max_pending_requests: usize,
+    /// Bounded retries for backend faults classified transient
+    /// (`TransientFault`); permanent faults are never retried.
+    pub max_retries: u32,
+    /// Base backoff between transient-fault retries in microseconds
+    /// (doubles per attempt).
+    pub retry_backoff_us: u64,
+    /// Pool-wide budget of worker respawns after backend panics: while
+    /// it lasts a panicked worker rebuilds its backend in place instead
+    /// of shrinking the pool toward zero.
+    pub worker_respawn_budget: u32,
 }
 
 impl Default for CoordinatorConfig {
@@ -64,6 +82,11 @@ impl Default for CoordinatorConfig {
             batch_window_us: 200,
             workers: 2,
             queue_depth: 256,
+            request_timeout_us: 5_000_000,
+            max_pending_requests: 4096,
+            max_retries: 2,
+            retry_backoff_us: 100,
+            worker_respawn_budget: 4,
         }
     }
 }
@@ -130,6 +153,20 @@ impl Config {
         if let Some(v) = map.get("batch_window_us") {
             cfg.coord.batch_window_us = v.parse().context("batch_window_us")?;
         }
+        if let Some(v) = map.get("request_timeout_us") {
+            cfg.coord.request_timeout_us = v.parse().context("request_timeout_us")?;
+        }
+        cfg.coord.max_pending_requests =
+            get_usize(&map, "max_pending_requests", cfg.coord.max_pending_requests)?;
+        if let Some(v) = map.get("max_retries") {
+            cfg.coord.max_retries = v.parse().context("max_retries")?;
+        }
+        if let Some(v) = map.get("retry_backoff_us") {
+            cfg.coord.retry_backoff_us = v.parse().context("retry_backoff_us")?;
+        }
+        if let Some(v) = map.get("worker_respawn_budget") {
+            cfg.coord.worker_respawn_budget = v.parse().context("worker_respawn_budget")?;
+        }
 
         anyhow::ensure!(
             cfg.accel.seq_len % cfg.accel.kv_blocks == 0,
@@ -163,6 +200,31 @@ mod tests {
         let c = Config::resolve(Some(&p), &args).unwrap();
         assert_eq!(c.accel.head_dim, 128); // CLI wins
         assert_eq!(c.accel.kv_blocks, 8); // file applies
+    }
+
+    #[test]
+    fn robustness_knobs_resolve() {
+        let args = Args::parse([
+            "--request-timeout-us".into(),
+            "2500".into(),
+            "--max-pending-requests".into(),
+            "9".into(),
+            "--max-retries".into(),
+            "5".into(),
+            "--retry-backoff-us".into(),
+            "777".into(),
+            "--worker-respawn-budget".into(),
+            "3".into(),
+        ]);
+        let c = Config::resolve(None, &args).unwrap();
+        assert_eq!(c.coord.request_timeout_us, 2500);
+        assert_eq!(c.coord.max_pending_requests, 9);
+        assert_eq!(c.coord.max_retries, 5);
+        assert_eq!(c.coord.retry_backoff_us, 777);
+        assert_eq!(c.coord.worker_respawn_budget, 3);
+        // defaults survive when unset
+        let c = Config::resolve(None, &Args::parse(Vec::<String>::new())).unwrap();
+        assert_eq!(c.coord, CoordinatorConfig::default());
     }
 
     #[test]

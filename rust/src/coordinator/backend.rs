@@ -19,8 +19,27 @@ use crate::Mat;
 
 /// Factory constructing a backend *on the worker's own thread* — required
 /// because PJRT executables are not `Send` (the xla crate wraps them in
-/// `Rc`); each worker owns a thread-local client + executable.
-pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send>;
+/// `Rc`); each worker owns a thread-local client + executable.  `Fn`
+/// (not `FnOnce`) so the worker watchdog can rebuild a backend in place
+/// after a panic instead of letting the pool shrink.
+pub type BackendFactory = Box<dyn Fn() -> Result<Box<dyn Backend>> + Send>;
+
+/// Marker error a backend attaches (via `anyhow::Error::new`) to faults
+/// that are worth retrying — a dropped device heartbeat, a transient
+/// queue-full, an injected chaos fault.  The serving loop downcasts for
+/// it and retries with backoff up to `CoordinatorConfig::max_retries`;
+/// any other error is treated as permanent and fails the request at
+/// once.
+#[derive(Debug, Clone)]
+pub struct TransientFault(pub String);
+
+impl std::fmt::Display for TransientFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "transient backend fault: {}", self.0)
+    }
+}
+
+impl std::error::Error for TransientFault {}
 
 /// Something that can compute batches of attention queries against
 /// session KV sets.  `compute_plan` receives one entry per session of a
@@ -217,7 +236,9 @@ impl SimBackend {
         arith: crate::hw::Arith,
         cfg: crate::config::AcceleratorConfig,
     ) -> BackendFactory {
-        Box::new(move || Ok(Box::new(SimBackend::new(Accelerator::new(arith, cfg))) as _))
+        Box::new(move || {
+            Ok(Box::new(SimBackend::new(Accelerator::new(arith, cfg.clone()))) as _)
+        })
     }
 }
 

@@ -209,6 +209,31 @@ impl Batcher {
         out
     }
 
+    /// Remove every pending request matched by `pred` — the
+    /// cancellation / deadline sweep.  Surviving groups keep their
+    /// forming stamp (a partially-drained group still closes at its
+    /// original window); groups left empty are dropped, their `forming`
+    /// entries going stale and popped lazily by [`Batcher::next_deadline`].
+    pub fn remove_matching(
+        &mut self,
+        mut pred: impl FnMut(&AttentionRequest) -> bool,
+    ) -> Vec<AttentionRequest> {
+        let mut removed = Vec::new();
+        self.pending.retain(|_, (_, reqs)| {
+            let mut kept = Vec::with_capacity(reqs.len());
+            for r in reqs.drain(..) {
+                if pred(&r) {
+                    removed.push(r);
+                } else {
+                    kept.push(r);
+                }
+            }
+            *reqs = kept;
+            !reqs.is_empty()
+        });
+        removed
+    }
+
     pub fn pending_requests(&self) -> usize {
         self.pending.values().map(|(_, v)| v.len()).sum()
     }
@@ -219,29 +244,37 @@ mod tests {
     use super::*;
     use crate::coordinator::request::Payload;
     use crate::Mat;
+    use std::sync::atomic::AtomicBool;
     use std::sync::mpsc::channel;
+    use std::sync::Arc;
     use std::time::Instant;
 
     fn req(id: u64, session: &str) -> AttentionRequest {
         let (tx, _rx) = channel();
+        let now = Instant::now();
         AttentionRequest {
             id,
             session: session.into(),
             payload: Payload::Query(vec![0.0; 4]),
-            arrived: Instant::now(),
+            arrived: now,
+            deadline: now + Duration::from_secs(300),
             pinned: false,
+            cancelled: Arc::new(AtomicBool::new(false)),
             reply: tx,
         }
     }
 
     fn append_req(id: u64, session: &str) -> AttentionRequest {
         let (tx, _rx) = channel();
+        let now = Instant::now();
         AttentionRequest {
             id,
             session: session.into(),
             payload: Payload::Append { k_rows: Mat::zeros(1, 4), v_rows: Mat::zeros(1, 4) },
-            arrived: Instant::now(),
+            arrived: now,
+            deadline: now + Duration::from_secs(300),
             pinned: false,
+            cancelled: Arc::new(AtomicBool::new(false)),
             reply: tx,
         }
     }
@@ -419,6 +452,31 @@ mod tests {
             assert_eq!(batch.sessions(), 1);
             assert_eq!(batch.total_requests(), 3);
         }
+    }
+
+    #[test]
+    fn remove_matching_drains_a_session_and_leaves_others_forming() {
+        let mut b = Batcher::new(100, 64, Duration::from_secs(60));
+        b.push(req(1, "doomed"));
+        b.push(req(2, "doomed"));
+        b.push(req(3, "live"));
+        let removed = b.remove_matching(|r| r.session == "doomed");
+        assert_eq!(removed.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(b.pending_requests(), 1, "unrelated session untouched");
+        // the survivor's forming window is intact: a sweep well before
+        // its window closes nothing, and its deadline is still exposed
+        assert!(b.close_expired(Instant::now()).is_empty());
+        assert!(b.next_deadline().is_some());
+        // a partially-drained group survives with its remainder
+        b.push(req(4, "live"));
+        let removed = b.remove_matching(|r| r.id == 3);
+        assert_eq!(removed.len(), 1);
+        let all = b.drain();
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].total_requests(), 1);
+        assert_eq!(all[0].groups[0].requests[0].id, 4);
+        // nothing pending: the sweep is a cheap no-op
+        assert!(b.remove_matching(|_| true).is_empty());
     }
 
     #[test]

@@ -1,0 +1,318 @@
+//! Fault-injection harness: a [`ChaosBackend`] wraps any [`Backend`]
+//! with a deterministic, seeded fault plan — compute errors, worker
+//! panics, artificial latency, and transient faults that succeed when
+//! retried — so the soak tests can prove the serving loop degrades
+//! gracefully (explicit error responses, no leaked pins, no lost
+//! workers while the respawn budget lasts) instead of hoping.
+//!
+//! Fault decisions are **content-keyed**, not call-sequence-keyed: each
+//! plan entry hashes its session length and packed query bits together
+//! with the seed, and that hash alone decides panic/fault/transient.
+//! The same request therefore draws the same fate no matter how the
+//! batcher composed its dispatch or which worker served it — a chaos
+//! run is reproducible under scheduling jitter, and a retry of a
+//! *permanent* fault deterministically fails again rather than flaking
+//! into success.  Transient faults are armed with a countdown
+//! ([`ChaosConfig::transient_failures`]); a retry replaying the same
+//! content decrements it and succeeds when it reaches zero, modelling a
+//! device fault that clears.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::backend::{Backend, BackendFactory, TransientFault};
+use super::kvstore::KvEntry;
+use crate::Mat;
+
+/// Knobs of one seeded fault plan.  Rates are probabilities in [0, 1]
+/// evaluated per plan entry from the entry's content hash; the bands are
+/// disjoint (panic is drawn first, then fault).
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// Seed mixed into every content hash: two runs with the same seed
+    /// and the same request contents inject identical faults.
+    pub seed: u64,
+    /// Probability that a plan entry panics the dispatch (a crashed
+    /// device thread) — exercises the worker watchdog.
+    pub panic_rate: f64,
+    /// Probability that a plan entry fails the plan with an error.
+    pub fault_rate: f64,
+    /// Fraction of faults that are transient ([`TransientFault`], the
+    /// serving loop retries them) rather than permanent.
+    pub transient_ratio: f64,
+    /// How many times a transient fault fails before the same content
+    /// succeeds — retries beyond this count recover.
+    pub transient_failures: u32,
+    /// Fixed artificial latency added to every dispatch.
+    pub latency: Duration,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> ChaosConfig {
+        ChaosConfig {
+            seed: 0x5EED,
+            panic_rate: 0.0,
+            fault_rate: 0.0,
+            transient_ratio: 0.5,
+            transient_failures: 1,
+            latency: Duration::ZERO,
+        }
+    }
+}
+
+/// SplitMix64 finalizer: turns an accumulated hash into a well-mixed
+/// 64-bit value (same construction as the deterministic RNGs elsewhere
+/// in the repo).
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// FNV-1a accumulation step.
+fn fnv(h: u64, x: u64) -> u64 {
+    (h ^ x).wrapping_mul(0x0000_0100_0000_01B3)
+}
+
+/// A fault-injecting wrapper around a real backend.
+pub struct ChaosBackend {
+    inner: Box<dyn Backend>,
+    cfg: ChaosConfig,
+    /// Countdown of remaining failures per armed transient fault, keyed
+    /// by content hash — a retry replays identical content, finds its
+    /// key here, and recovers once the countdown hits zero.
+    armed: HashMap<u64, u32>,
+    /// Faults injected so far (transient and permanent; diagnostics).
+    pub injected_faults: u64,
+    /// Panics injected so far (counted just before unwinding).
+    pub injected_panics: u64,
+}
+
+impl ChaosBackend {
+    pub fn new(cfg: ChaosConfig, inner: Box<dyn Backend>) -> ChaosBackend {
+        ChaosBackend { inner, cfg, armed: HashMap::new(), injected_faults: 0, injected_panics: 0 }
+    }
+
+    /// Wrap a backend factory so every (re)spawned worker backend gets
+    /// the same seeded fault plan — including watchdog respawns, which
+    /// rebuild through the same factory.
+    pub fn wrap_factory(cfg: ChaosConfig, inner: BackendFactory) -> BackendFactory {
+        Box::new(move || {
+            let be = inner()?;
+            Ok(Box::new(ChaosBackend::new(cfg.clone(), be)) as Box<dyn Backend>)
+        })
+    }
+
+    /// Content hash of one plan entry: seed + session length + packed
+    /// query bits.  Identical content (a retry) hashes identically.
+    fn entry_key(&self, entry: &KvEntry, q: &Mat) -> u64 {
+        let mut h = fnv(self.cfg.seed, 0x6368_616F_73); // "chaos"
+        h = fnv(h, entry.prepared().n() as u64);
+        h = fnv(h, q.rows as u64);
+        h = fnv(h, q.cols as u64);
+        for &x in &q.data {
+            h = fnv(h, u64::from(x.to_bits()));
+        }
+        splitmix(h)
+    }
+
+    /// Map a mixed key to a uniform draw in [0, 1).
+    fn unit(key: u64) -> f64 {
+        (key >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+}
+
+impl Backend for ChaosBackend {
+    fn head_dim(&self) -> usize {
+        self.inner.head_dim()
+    }
+
+    fn seq_len(&self) -> usize {
+        self.inner.seq_len()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+
+    fn compute_plan(&mut self, plan: &[(&KvEntry, &Mat)]) -> Result<Vec<Mat>> {
+        if !self.cfg.latency.is_zero() {
+            std::thread::sleep(self.cfg.latency);
+        }
+        for &(entry, q) in plan {
+            let key = self.entry_key(entry, q);
+            // armed transient fault: count the replay down to recovery
+            if let Some(remaining) = self.armed.get_mut(&key) {
+                if *remaining > 0 {
+                    *remaining -= 1;
+                    self.injected_faults += 1;
+                    return Err(anyhow::Error::new(TransientFault(format!(
+                        "chaos: injected transient fault (key {key:#018x})"
+                    ))));
+                }
+                self.armed.remove(&key);
+                continue; // recovered — serve this entry normally
+            }
+            let u = Self::unit(key);
+            if u < self.cfg.panic_rate {
+                self.injected_panics += 1;
+                panic!("chaos: injected backend panic (key {key:#018x})");
+            }
+            let f = u - self.cfg.panic_rate;
+            if f < self.cfg.fault_rate {
+                self.injected_faults += 1;
+                if f < self.cfg.fault_rate * self.cfg.transient_ratio {
+                    self.armed.insert(key, self.cfg.transient_failures.saturating_sub(1));
+                    return Err(anyhow::Error::new(TransientFault(format!(
+                        "chaos: injected transient fault (key {key:#018x})"
+                    ))));
+                }
+                anyhow::bail!("chaos: injected permanent fault (key {key:#018x})");
+            }
+        }
+        self.inner.compute_plan(plan)
+    }
+
+    fn name(&self) -> String {
+        format!("chaos({})", self.inner.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AcceleratorConfig;
+    use crate::coordinator::backend::{prepare_entry, SimBackend};
+    use crate::hw::{Accelerator, Arith};
+    use crate::proptest::Rng;
+
+    fn sim() -> Box<dyn Backend> {
+        let cfg = AcceleratorConfig {
+            head_dim: 8,
+            seq_len: 32,
+            kv_blocks: 4,
+            parallel_queries: 1,
+            freq_mhz: 500.0,
+        };
+        Box::new(SimBackend::new(Accelerator::new(Arith::Hfa, cfg)))
+    }
+
+    fn entry_and_query(rng: &mut Rng) -> (KvEntry, Mat) {
+        let e = prepare_entry(
+            Mat::from_vec(32, 8, rng.normal_vec(256)),
+            Mat::from_vec(32, 8, rng.normal_vec(256)),
+        );
+        let q = Mat::from_vec(1, 8, rng.normal_vec(8));
+        (e, q)
+    }
+
+    #[test]
+    fn zero_rates_are_a_transparent_passthrough() {
+        let mut chaos = ChaosBackend::new(ChaosConfig::default(), sim());
+        let mut plain = sim();
+        let mut rng = Rng::new(7);
+        let (e, q) = entry_and_query(&mut rng);
+        let a = chaos.compute_plan(&[(&e, &q)]).unwrap();
+        let b = plain.compute_plan(&[(&e, &q)]).unwrap();
+        assert_eq!(a[0].data, b[0].data, "inactive chaos must not perturb outputs");
+        assert_eq!(chaos.injected_faults, 0);
+        assert!(chaos.name().starts_with("chaos("));
+    }
+
+    #[test]
+    fn fault_decisions_are_content_keyed_and_reproducible() {
+        let cfg = ChaosConfig { seed: 99, fault_rate: 0.5, transient_ratio: 0.0, ..ChaosConfig::default() };
+        let mut a = ChaosBackend::new(cfg.clone(), sim());
+        let mut b = ChaosBackend::new(cfg.clone(), sim());
+        let mut rng = Rng::new(11);
+        let cases: Vec<_> = (0..24).map(|_| entry_and_query(&mut rng)).collect();
+        let mut faulted = 0;
+        for (e, q) in &cases {
+            let ra = a.compute_plan(&[(e, q)]).is_err();
+            let rb = b.compute_plan(&[(e, q)]).is_err();
+            assert_eq!(ra, rb, "same seed + same content must draw the same fate");
+            // permanent faults must stay failed on retry, not flake
+            assert_eq!(a.compute_plan(&[(e, q)]).is_err(), ra);
+            faulted += ra as usize;
+        }
+        assert!(faulted > 0 && faulted < cases.len(), "rate 0.5 must fault some, not all");
+        // a different seed redraws fates
+        let mut c =
+            ChaosBackend::new(ChaosConfig { seed: 100, ..cfg }, sim());
+        let redrawn = cases
+            .iter()
+            .filter(|(e, q)| c.compute_plan(&[(e, q)]).is_err())
+            .count();
+        assert_ne!(redrawn, 0);
+    }
+
+    #[test]
+    fn transient_faults_recover_after_their_countdown() {
+        let cfg = ChaosConfig {
+            fault_rate: 1.0,
+            transient_ratio: 1.0,
+            transient_failures: 2,
+            ..ChaosConfig::default()
+        };
+        let mut be = ChaosBackend::new(cfg, sim());
+        let mut rng = Rng::new(21);
+        let (e, q) = entry_and_query(&mut rng);
+        for attempt in 0..2 {
+            let err = be.compute_plan(&[(&e, &q)]).expect_err("armed fault must fail");
+            assert!(
+                err.downcast_ref::<TransientFault>().is_some(),
+                "attempt {attempt}: fault must be marked transient: {err}"
+            );
+        }
+        let out = be.compute_plan(&[(&e, &q)]).expect("third attempt recovers");
+        assert_eq!(out.len(), 1);
+        assert_eq!(be.injected_faults, 2);
+    }
+
+    #[test]
+    fn permanent_faults_are_not_marked_transient() {
+        let cfg =
+            ChaosConfig { fault_rate: 1.0, transient_ratio: 0.0, ..ChaosConfig::default() };
+        let mut be = ChaosBackend::new(cfg, sim());
+        let mut rng = Rng::new(31);
+        let (e, q) = entry_and_query(&mut rng);
+        let err = be.compute_plan(&[(&e, &q)]).expect_err("rate 1.0 always faults");
+        assert!(err.downcast_ref::<TransientFault>().is_none());
+        assert!(err.to_string().contains("permanent"));
+    }
+
+    #[test]
+    fn panic_rate_one_panics_every_dispatch() {
+        let cfg = ChaosConfig { panic_rate: 1.0, ..ChaosConfig::default() };
+        let mut be = ChaosBackend::new(cfg, sim());
+        let mut rng = Rng::new(41);
+        let (e, q) = entry_and_query(&mut rng);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = be.compute_plan(&[(&e, &q)]);
+        }));
+        assert!(caught.is_err(), "panic_rate 1.0 must panic the dispatch");
+    }
+
+    #[test]
+    fn wrapped_factory_builds_fresh_chaos_backends() {
+        let accel = AcceleratorConfig {
+            head_dim: 8,
+            seq_len: 32,
+            kv_blocks: 4,
+            parallel_queries: 1,
+            freq_mhz: 500.0,
+        };
+        let factory = ChaosBackend::wrap_factory(
+            ChaosConfig::default(),
+            SimBackend::factory(Arith::Hfa, accel),
+        );
+        // callable repeatedly — the watchdog respawn path needs `Fn`
+        let a = factory().unwrap();
+        let b = factory().unwrap();
+        assert_eq!(a.name(), b.name());
+        assert_eq!(a.head_dim(), 8);
+    }
+}

@@ -328,6 +328,23 @@ impl KvStore {
         }
     }
 
+    /// Forcibly remove a session regardless of pins — the cancellation
+    /// path, where a dead client must free its bytes mid-decode without
+    /// waiting for its queued requests to drain.  Safe because in-flight
+    /// computes hold `Arc<PreparedKv>` snapshots and a late `unpin` on a
+    /// gone session is a no-op.  (If the *same* session is re-`put`
+    /// before the cancelled requests are failed, their stale unpins can
+    /// release the fresh slot's pins early — callers cancelling with
+    /// eviction should treat the session name as dead.)  Returns the
+    /// freed bytes, or `None` when the session was not resident.
+    pub fn evict(&self, session: &str) -> Option<usize> {
+        let mut g = self.inner.lock().unwrap();
+        let slot = g.entries.remove(session)?;
+        g.used_bytes -= slot.bytes;
+        g.evictions += 1;
+        Some(slot.bytes)
+    }
+
     /// Is the session resident?  (No LRU refresh — diagnostics only.)
     pub fn contains(&self, session: &str) -> bool {
         self.inner.lock().unwrap().entries.contains_key(session)
@@ -383,6 +400,24 @@ mod tests {
         assert_eq!(e.prepared().n(), 16);
         assert_eq!(store.used_bytes(), 16 * row_bytes(8, 8));
         assert_eq!(store.session_resident_bytes("a"), Some(16 * row_bytes(8, 8)));
+    }
+
+    #[test]
+    fn evict_removes_even_pinned_sessions_and_frees_bytes() {
+        let store = KvStore::new(16, 8, 2);
+        let (k, v) = kv(16, 8, 1.0);
+        store.put("a", k, v).unwrap();
+        assert!(store.pin("a"));
+        // pinned sessions resist LRU eviction but not forced eviction
+        let freed = store.evict("a").expect("resident session evicts");
+        assert_eq!(freed, 16 * row_bytes(8, 8));
+        assert!(!store.contains("a"));
+        assert_eq!(store.used_bytes(), 0);
+        assert_eq!(store.evictions(), 1);
+        assert_eq!(store.pinned_sessions(), 0);
+        // the in-flight holder's late unpin is a harmless no-op
+        store.unpin("a");
+        assert!(store.evict("a").is_none(), "double evict reports not-resident");
     }
 
     #[test]

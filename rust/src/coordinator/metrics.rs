@@ -14,6 +14,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use super::request::ServeError;
+
 /// Fixed reservoir capacity: big enough for tight tail estimates
 /// (standard error of a quantile ~ sqrt(q(1-q)/cap) < 1.6% at p50),
 /// small enough that a snapshot sort is microseconds.
@@ -83,6 +85,29 @@ pub struct Metrics {
     /// super-batch counts each of its sessions); `/ batches` is the
     /// fan-out fusion factor the two-level batcher exists to raise.
     pub batched_sessions: AtomicU64,
+    /// Requests currently in flight: accepted at ingress but not yet
+    /// delivered a terminal response.  Gauge, not a counter — the
+    /// admission gate (`max_pending_requests`) reads it, and drain waits
+    /// for it to reach zero.
+    pub inflight: AtomicU64,
+    /// Requests shed before dispatch (deadline expired or session
+    /// cancelled while queued) — work the serving loop declined to do.
+    pub shed: AtomicU64,
+    /// Per-outcome failure tallies (each also counts under `failed`).
+    pub timed_out: AtomicU64,
+    pub cancelled: AtomicU64,
+    pub overloaded: AtomicU64,
+    pub backend_failed: AtomicU64,
+    pub kv_admission_failed: AtomicU64,
+    pub shutdown_failed: AtomicU64,
+    /// Re-dispatch attempts after transient backend faults.
+    pub retries: AtomicU64,
+    /// Workers whose backend was rebuilt in place after a panic.
+    pub worker_respawns: AtomicU64,
+    /// Terminal responses whose reply receiver was already dropped (the
+    /// caller went away — the implicit cancellation the server detects
+    /// at delivery time).
+    pub delivery_lost: AtomicU64,
     latencies_us: Mutex<Reservoir>,
 }
 
@@ -99,6 +124,17 @@ pub struct Snapshot {
     /// Mean sessions fused per dispatched batch (1.0 when every dispatch
     /// is single-session).
     pub mean_sessions: f64,
+    pub inflight: u64,
+    pub shed: u64,
+    pub timed_out: u64,
+    pub cancelled: u64,
+    pub overloaded: u64,
+    pub backend_failed: u64,
+    pub kv_admission_failed: u64,
+    pub shutdown_failed: u64,
+    pub retries: u64,
+    pub worker_respawns: u64,
+    pub delivery_lost: u64,
     pub p50_us: f64,
     pub p99_us: f64,
     pub mean_us: f64,
@@ -111,6 +147,21 @@ impl Metrics {
 
     pub fn observe_latency(&self, us: f64) {
         self.latencies_us.lock().unwrap().observe(us);
+    }
+
+    /// Count one failed terminal response: the aggregate `failed` plus
+    /// the per-outcome tally for the error's variant.
+    pub fn record_failure(&self, err: &ServeError) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+        let tally = match err {
+            ServeError::TimedOut => &self.timed_out,
+            ServeError::Overloaded => &self.overloaded,
+            ServeError::Cancelled => &self.cancelled,
+            ServeError::BackendFailed { .. } => &self.backend_failed,
+            ServeError::Shutdown(_) => &self.shutdown_failed,
+            ServeError::KvAdmission(_) => &self.kv_admission_failed,
+        };
+        tally.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Latency samples currently resident (bounded by the reservoir cap).
@@ -158,6 +209,17 @@ impl Metrics {
             } else {
                 self.batched_sessions.load(Ordering::Relaxed) as f64 / batches as f64
             },
+            inflight: self.inflight.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            timed_out: self.timed_out.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            overloaded: self.overloaded.load(Ordering::Relaxed),
+            backend_failed: self.backend_failed.load(Ordering::Relaxed),
+            kv_admission_failed: self.kv_admission_failed.load(Ordering::Relaxed),
+            shutdown_failed: self.shutdown_failed.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            worker_respawns: self.worker_respawns.load(Ordering::Relaxed),
+            delivery_lost: self.delivery_lost.load(Ordering::Relaxed),
             p50_us: pick(0.5),
             p99_us: pick(0.99),
             mean_us: if seen == 0 { 0.0 } else { sum / seen as f64 },
@@ -231,6 +293,25 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.p50_us, 0.0);
         assert_eq!(s.p99_us, 0.0);
+    }
+
+    #[test]
+    fn per_outcome_tallies_track_failure_variants() {
+        let m = Metrics::new();
+        m.record_failure(&ServeError::TimedOut);
+        m.record_failure(&ServeError::TimedOut);
+        m.record_failure(&ServeError::Cancelled);
+        m.record_failure(&ServeError::backend("boom"));
+        m.record_failure(&ServeError::Shutdown("drain".into()));
+        m.record_failure(&ServeError::KvAdmission("unknown".into()));
+        let s = m.snapshot();
+        assert_eq!(s.failed, 6, "every outcome also counts in the aggregate");
+        assert_eq!(s.timed_out, 2);
+        assert_eq!(s.cancelled, 1);
+        assert_eq!(s.backend_failed, 1);
+        assert_eq!(s.shutdown_failed, 1);
+        assert_eq!(s.kv_admission_failed, 1);
+        assert_eq!(s.overloaded, 0);
     }
 
     #[test]

@@ -27,16 +27,32 @@
 //! itself is [`KvStore::append`]: only the new rows are BF16-rounded
 //! and log-converted; resident rows are never touched, so per-step cost
 //! tracks the new tokens, not the sequence length.
+//!
+//! ## Robustness
+//!
+//! Every request carries an absolute deadline and every terminal
+//! outcome is a typed [`request::ServeError`].  Admission is bounded
+//! ([`Overloaded`](request::ServeError::Overloaded) past
+//! `max_pending_requests`), expired requests are shed at group-close
+//! and re-checked at dispatch ([`TimedOut`](request::ServeError::TimedOut)),
+//! sessions can be cancelled mid-flight ([`Server::cancel`]), transient
+//! backend faults ([`backend::TransientFault`]) are retried with
+//! backoff, a watchdog respawns panicked worker backends within a
+//! budget, and [`Server::drain`] stops admissions and serves what is in
+//! flight until a deadline.  The [`chaos`] module provides a seeded
+//! fault-injection wrapper used by the soak tests to prove all of it.
 
 pub mod batcher;
 pub mod backend;
+pub mod chaos;
 pub mod kvstore;
 pub mod metrics;
 pub mod request;
 pub mod server;
 
-pub use backend::{prepare_entry, Backend, BackendFactory, PjrtBackend, SimBackend};
+pub use backend::{prepare_entry, Backend, BackendFactory, PjrtBackend, SimBackend, TransientFault};
+pub use chaos::{ChaosBackend, ChaosConfig};
 pub use kvstore::{KvEntry, KvStore};
 pub use metrics::Metrics;
-pub use request::{AttentionRequest, AttentionResponse, Payload};
-pub use server::Server;
+pub use request::{AttentionRequest, AttentionResponse, Payload, ServeError};
+pub use server::{ResponseHandle, Server};

@@ -1,9 +1,80 @@
 //! Request/response types flowing through the coordinator.
 
+use std::fmt;
+use std::sync::atomic::AtomicBool;
 use std::sync::mpsc::Sender;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::Mat;
+
+/// Why the serving loop could not (or chose not to) answer a request.
+///
+/// Carried in [`AttentionResponse::output`] so clients and tests match on
+/// variants instead of error-message substrings; [`fmt::Display`] keeps
+/// the human-readable detail.  Submit-path rejections (`Overloaded`,
+/// `Shutdown`) are returned as an [`anyhow::Error`] wrapping the same
+/// variant — downcast with `err.downcast_ref::<ServeError>()`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request's deadline expired before it was served; the batcher
+    /// sheds expired requests at group close and workers re-check before
+    /// dispatch, so no compute is spent on an answer nobody awaits.
+    TimedOut,
+    /// Admission control rejected the request at submit: the in-flight
+    /// cap (`max_pending_requests`) was reached or the bounded ingress
+    /// queue was full (backpressure).
+    Overloaded,
+    /// The session was cancelled ([`crate::coordinator::Server::cancel`])
+    /// while this request was queued.
+    Cancelled,
+    /// The backend failed to compute the dispatch (plan error, shape
+    /// disagreement, or a panic).  `transient` marks faults the backend
+    /// classified as retryable; the serving loop retries those with
+    /// backoff before giving up, so a delivered transient error means
+    /// the retry budget was exhausted too.
+    BackendFailed { reason: String, transient: bool },
+    /// Serving stopped before the request could run (shutdown, drain
+    /// deadline expiry, or every worker gone).
+    Shutdown(String),
+    /// The KV store refused the operation: unknown session, geometry
+    /// mismatch, or byte-budget admission failure.
+    KvAdmission(String),
+}
+
+impl ServeError {
+    /// A permanent (non-transient) backend failure.
+    pub fn backend(reason: impl Into<String>) -> ServeError {
+        ServeError::BackendFailed { reason: reason.into(), transient: false }
+    }
+
+    /// Whether a retry might have succeeded (transient backend faults).
+    pub fn is_transient(&self) -> bool {
+        matches!(self, ServeError::BackendFailed { transient: true, .. })
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::TimedOut => write!(f, "request deadline expired before serving"),
+            ServeError::Overloaded => {
+                write!(f, "admission control rejected the request (server overloaded)")
+            }
+            ServeError::Cancelled => write!(f, "session cancelled while the request was queued"),
+            ServeError::BackendFailed { reason, transient: false } => {
+                write!(f, "backend failed: {reason}")
+            }
+            ServeError::BackendFailed { reason, transient: true } => {
+                write!(f, "backend failed (transient, retries exhausted): {reason}")
+            }
+            ServeError::Shutdown(reason) => write!(f, "{reason}"),
+            ServeError::KvAdmission(reason) => write!(f, "{reason}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// What a request asks the serving loop to do.
 #[derive(Debug)]
@@ -25,11 +96,21 @@ pub struct AttentionRequest {
     pub session: String,
     pub payload: Payload,
     pub arrived: Instant,
+    /// Absolute deadline: past it the request is shed with
+    /// [`ServeError::TimedOut`] instead of served.  Defaults to
+    /// `arrived + CoordinatorConfig::request_timeout_us`.
+    pub deadline: Instant,
     /// Whether ingress took a [`crate::coordinator::KvStore::pin`] on the
     /// session for this request (it was resident at submit time).  The
     /// pin keeps the session from being evicted while the request is
     /// queued; whoever delivers the response releases it.
     pub pinned: bool,
+    /// Per-request cancellation flag, shared with the caller's
+    /// [`crate::coordinator::server::ResponseHandle`]: dropping the
+    /// handle before a terminal response sets it, and every shed point
+    /// checks it so abandoned requests are failed fast instead of
+    /// computed into a dead channel.
+    pub cancelled: Arc<AtomicBool>,
     /// Completion channel.
     pub reply: Sender<AttentionResponse>,
 }
@@ -38,15 +119,20 @@ impl AttentionRequest {
     pub fn is_append(&self) -> bool {
         matches!(self.payload, Payload::Append { .. })
     }
+
+    /// Whether the deadline has passed at `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        now >= self.deadline
+    }
 }
 
 /// The served result.
 #[derive(Debug, Clone)]
 pub struct AttentionResponse {
     pub id: u64,
-    /// Attention output vector, or an error message.  Append
+    /// Attention output vector, or the typed serving error.  Append
     /// acknowledgements carry an empty vector.
-    pub output: Result<Vec<f32>, String>,
+    pub output: Result<Vec<f32>, ServeError>,
     /// Wall time from ingress to completion.
     pub latency_us: f64,
     /// Size of the batch this request was served in.
@@ -56,5 +142,28 @@ pub struct AttentionResponse {
 impl AttentionResponse {
     pub fn ok(&self) -> bool {
         self.output.is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_error_display_carries_detail() {
+        let e = ServeError::BackendFailed { reason: "device lost".into(), transient: true };
+        assert!(e.to_string().contains("device lost"));
+        assert!(e.to_string().contains("transient"));
+        assert!(e.is_transient());
+        assert!(!ServeError::backend("boom").is_transient());
+        assert!(ServeError::KvAdmission("unknown session \"x\"".into())
+            .to_string()
+            .contains("unknown session"));
+    }
+
+    #[test]
+    fn serve_error_downcasts_from_anyhow() {
+        let err = anyhow::Error::new(ServeError::Overloaded);
+        assert_eq!(err.downcast_ref::<ServeError>(), Some(&ServeError::Overloaded));
     }
 }

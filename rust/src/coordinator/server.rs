@@ -42,28 +42,145 @@
 //! longer be served — queued behind the shutdown message, or formed into
 //! a batch when every worker is gone — receive an **explicit error
 //! response** instead of a silently dropped reply channel.
+//!
+//! **Robustness** (see `coordinator::chaos` for the fault-injection side):
+//! every request carries an absolute deadline and admission is bounded —
+//! submit rejects with [`ServeError::Overloaded`] past
+//! `max_pending_requests`.  Requests that expire, get cancelled
+//! ([`Server::cancel`] or a dropped [`ResponseHandle`]), or outlive a
+//! drain deadline are *shed* at well-defined points (batcher group close,
+//! the cancel nudge, worker pre-dispatch) with a typed [`ServeError`]
+//! instead of being computed or silently dropped.  Transient backend
+//! faults are retried with exponential backoff up to `max_retries`; a
+//! panicked worker backend is rebuilt in place while the pool-wide
+//! `worker_respawn_budget` lasts.  [`Server::drain`] closes admissions,
+//! serves what is in flight until a deadline, then fails the remainder
+//! explicitly.  None of this touches kernel outputs: served responses
+//! stay bit-identical to the unfused, fault-free path.
 
-use std::collections::VecDeque;
+use std::cell::Cell;
+use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvError, RecvTimeoutError, Sender, SyncSender, TryRecvError, TrySendError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::backend::{Backend, BackendFactory};
+use super::backend::{Backend, BackendFactory, TransientFault};
 use super::batcher::{Batch, Batcher};
 use super::kvstore::{KvEntry, KvStore};
 use super::metrics::Metrics;
-use super::request::{AttentionRequest, AttentionResponse, Payload};
+use super::request::{AttentionRequest, AttentionResponse, Payload, ServeError};
 use crate::config::CoordinatorConfig;
 use crate::Mat;
 
 enum Msg {
     Req(AttentionRequest),
+    /// Nudge: a session was cancelled — sweep the batcher's pending
+    /// groups now instead of waiting for the next close.  Best-effort
+    /// (sent with `try_send`): if the ingress is full, the batcher is
+    /// busy and will shed the cancelled requests at group close anyway.
+    Cancel(String),
     Shutdown,
+}
+
+/// Shared robustness state threaded through the batcher and the workers:
+/// where shed decisions (deadline, cancel, drain), retry policy and the
+/// respawn budget live.
+struct ServeCtx {
+    kv: Arc<KvStore>,
+    metrics: Arc<Metrics>,
+    cancels: CancelRegistry,
+    /// Admissions closed ([`Server::drain`] in progress).
+    draining: AtomicBool,
+    /// Drain deadline expired: shed everything still queued with an
+    /// explicit `Shutdown` error instead of serving it.
+    shed_all: AtomicBool,
+    /// Remaining pool-wide worker respawns after backend panics.
+    respawn_budget: AtomicU32,
+    /// Bounded retries for transient backend faults.
+    max_retries: u32,
+    /// Base backoff between retries (doubles per attempt).
+    retry_backoff: Duration,
+}
+
+/// Session-level cancellation marks: session -> instant of the cancel.
+/// A request is cancelled iff its session was cancelled *at or after*
+/// its arrival, so traffic submitted after a cancel is served normally —
+/// the mark never has to be removed to reopen the session.
+#[derive(Default)]
+struct CancelRegistry {
+    inner: Mutex<HashMap<String, Instant>>,
+}
+
+impl CancelRegistry {
+    fn cancel(&self, session: &str) {
+        let mut g = self.inner.lock().unwrap();
+        let now = Instant::now();
+        if g.len() >= 1024 {
+            // bound the registry: marks older than any plausible queue
+            // residency are dead weight (queued requests outlive them
+            // only past their own deadline, where TimedOut sheds them)
+            g.retain(|_, t| now.duration_since(*t) < Duration::from_secs(30));
+        }
+        g.insert(session.to_string(), now);
+    }
+
+    fn cancelled_since(&self, session: &str, arrived: Instant) -> bool {
+        self.inner.lock().unwrap().get(session).is_some_and(|t| *t >= arrived)
+    }
+}
+
+/// Reply handle for a submitted request, wrapping the completion
+/// channel.  Exposes the channel's blocking receive API; **dropping the
+/// handle before the terminal response marks the request cancelled**, so
+/// the serving loop sheds it instead of computing an answer nobody will
+/// read (a caller that gave up is an implicit [`Server::cancel`] scoped
+/// to this one request).
+pub struct ResponseHandle {
+    rx: Receiver<AttentionResponse>,
+    cancelled: Arc<AtomicBool>,
+    done: Cell<bool>,
+}
+
+impl ResponseHandle {
+    pub fn recv(&self) -> std::result::Result<AttentionResponse, RecvError> {
+        let r = self.rx.recv();
+        if r.is_ok() {
+            self.done.set(true);
+        }
+        r
+    }
+
+    pub fn recv_timeout(
+        &self,
+        timeout: Duration,
+    ) -> std::result::Result<AttentionResponse, RecvTimeoutError> {
+        let r = self.rx.recv_timeout(timeout);
+        if r.is_ok() {
+            self.done.set(true);
+        }
+        r
+    }
+
+    pub fn try_recv(&self) -> std::result::Result<AttentionResponse, TryRecvError> {
+        let r = self.rx.try_recv();
+        if r.is_ok() {
+            self.done.set(true);
+        }
+        r
+    }
+}
+
+impl Drop for ResponseHandle {
+    fn drop(&mut self) {
+        if !self.done.get() {
+            self.cancelled.store(true, Ordering::Relaxed);
+        }
+    }
 }
 
 /// A running coordinator instance.
@@ -74,6 +191,12 @@ pub struct Server {
     pub metrics: Arc<Metrics>,
     pub kv: Arc<KvStore>,
     head_dim: usize,
+    /// Default per-request deadline from submit
+    /// (`CoordinatorConfig::request_timeout_us`).
+    request_timeout: Duration,
+    /// Admission gate: max requests in flight before submit rejects.
+    max_pending: usize,
+    ctx: Arc<ServeCtx>,
     /// The batcher hands the ingress receiver back here on exit, so
     /// shutdown can drain requests that raced into the queue after the
     /// batcher's final sweep (see [`Server::shutdown`]).
@@ -97,18 +220,27 @@ impl Server {
         let metrics = Arc::new(Metrics::new());
         let (in_tx, in_rx) = sync_channel::<Msg>(cfg.queue_depth);
         let queue = Arc::new(BatchQueue::new(cfg.queue_depth, factories.len()));
+        let ctx = Arc::new(ServeCtx {
+            kv: kv.clone(),
+            metrics: metrics.clone(),
+            cancels: CancelRegistry::default(),
+            draining: AtomicBool::new(false),
+            shed_all: AtomicBool::new(false),
+            respawn_budget: AtomicU32::new(cfg.worker_respawn_budget),
+            max_retries: cfg.max_retries,
+            retry_backoff: Duration::from_micros(cfg.retry_backoff_us),
+        });
 
         // batcher thread
         let window = Duration::from_micros(cfg.batch_window_us);
         let max_batch = cfg.max_batch;
         let max_total = cfg.max_total_batch;
-        let m = metrics.clone();
-        let kv_batcher = kv.clone();
+        let bctx = ctx.clone();
         let bq = queue.clone();
         let ingress_rx: Arc<Mutex<Option<Receiver<Msg>>>> = Arc::new(Mutex::new(None));
         let rx_back = ingress_rx.clone();
         let batcher_handle = std::thread::Builder::new().name("hfa-batcher".into()).spawn(
-            move || batcher_loop(in_rx, bq, max_batch, max_total, window, m, kv_batcher, rx_back),
+            move || batcher_loop(in_rx, bq, max_batch, max_total, window, bctx, rx_back),
         )?;
 
         // worker threads; each reports its backend-init outcome before
@@ -118,8 +250,7 @@ impl Server {
         let mut threads = vec![batcher_handle];
         for (i, factory) in factories.into_iter().enumerate() {
             let queue = queue.clone();
-            let kv = kv.clone();
-            let m = metrics.clone();
+            let wctx = ctx.clone();
             let init_tx = init_tx.clone();
             let h = std::thread::Builder::new().name(format!("hfa-worker-{i}")).spawn(
                 move || {
@@ -127,9 +258,9 @@ impl Server {
                     // return, failed init, or panic mid-batch — and the
                     // last worker out fails whatever batches remain
                     // queued instead of leaving their callers hanging
-                    let _exit = WorkerExit { queue: &*queue, kv: &*kv, metrics: &*m };
+                    let _exit = WorkerExit { queue: &*queue, ctx: &*wctx };
                     match factory() {
-                        Ok(mut be) => {
+                        Ok(be) => {
                             let _ = init_tx.send(Ok(()));
                             // release the handshake sender before
                             // serving, so start()'s recv() can observe a
@@ -137,7 +268,7 @@ impl Server {
                             // worker dies without reporting (e.g. a
                             // panicking factory)
                             drop(init_tx);
-                            worker_loop(&mut *be, &queue, &kv, &m)
+                            worker_loop(&factory, be, &queue, &wctx)
                         }
                         Err(e) => {
                             let _ = init_tx.send(Err(format!("hfa-worker-{i}: {e}")));
@@ -175,24 +306,60 @@ impl Server {
             metrics,
             kv,
             head_dim,
+            request_timeout: Duration::from_micros(cfg.request_timeout_us),
+            max_pending: cfg.max_pending_requests.max(1),
+            ctx,
             ingress_rx,
         })
     }
 
-    /// Submit one query; returns the reply receiver, or an error when the
-    /// ingress queue is full (backpressure).
-    pub fn submit(
-        &self,
-        session: &str,
-        query: Vec<f32>,
-    ) -> Result<std::sync::mpsc::Receiver<AttentionResponse>> {
+    fn validate_query(&self, query: &[f32]) -> Result<()> {
         anyhow::ensure!(
             query.len() == self.head_dim,
             "query dim {} != head dim {}",
             query.len(),
             self.head_dim
         );
-        self.enqueue(session, Payload::Query(query))
+        Ok(())
+    }
+
+    fn validate_append(&self, k_rows: &Mat, v_rows: &Mat) -> Result<()> {
+        anyhow::ensure!(
+            k_rows.cols == self.head_dim && v_rows.cols == self.head_dim,
+            "append dims {}x{} / {}x{} != head dim {}",
+            k_rows.rows,
+            k_rows.cols,
+            v_rows.rows,
+            v_rows.cols,
+            self.head_dim
+        );
+        anyhow::ensure!(
+            k_rows.rows == v_rows.rows && k_rows.rows > 0,
+            "K/V append row counts must match and be non-zero"
+        );
+        Ok(())
+    }
+
+    /// Submit one query with the default deadline
+    /// (`request_timeout_us` from now); returns the reply handle, or an
+    /// error when admission control rejects (`ServeError::Overloaded`
+    /// past the in-flight cap or a full ingress queue,
+    /// `ServeError::Shutdown` while draining — downcast to match).
+    pub fn submit(&self, session: &str, query: Vec<f32>) -> Result<ResponseHandle> {
+        self.submit_with_deadline(session, query, Instant::now() + self.request_timeout)
+    }
+
+    /// Submit one query that must be answered by `deadline`: past it the
+    /// serving loop sheds the request with [`ServeError::TimedOut`]
+    /// instead of computing an answer nobody awaits.
+    pub fn submit_with_deadline(
+        &self,
+        session: &str,
+        query: Vec<f32>,
+        deadline: Instant,
+    ) -> Result<ResponseHandle> {
+        self.validate_query(&query)?;
+        self.enqueue(session, Payload::Query(query), deadline).map(|(_, rx)| rx)
     }
 
     /// Submit a decode-step KV append; the acknowledgement (empty output
@@ -207,72 +374,154 @@ impl Server {
         session: &str,
         k_rows: Mat,
         v_rows: Mat,
-    ) -> Result<std::sync::mpsc::Receiver<AttentionResponse>> {
-        anyhow::ensure!(
-            k_rows.cols == self.head_dim && v_rows.cols == self.head_dim,
-            "append dims {}x{} / {}x{} != head dim {}",
-            k_rows.rows,
-            k_rows.cols,
-            v_rows.rows,
-            v_rows.cols,
-            self.head_dim
-        );
-        anyhow::ensure!(
-            k_rows.rows == v_rows.rows && k_rows.rows > 0,
-            "K/V append row counts must match and be non-zero"
-        );
-        self.enqueue(session, Payload::Append { k_rows, v_rows })
+    ) -> Result<ResponseHandle> {
+        self.submit_append_with_deadline(
+            session,
+            k_rows,
+            v_rows,
+            Instant::now() + self.request_timeout,
+        )
+    }
+
+    /// [`Server::submit_append`] with an explicit deadline.
+    pub fn submit_append_with_deadline(
+        &self,
+        session: &str,
+        k_rows: Mat,
+        v_rows: Mat,
+        deadline: Instant,
+    ) -> Result<ResponseHandle> {
+        self.validate_append(&k_rows, &v_rows)?;
+        self.enqueue(session, Payload::Append { k_rows, v_rows }, deadline).map(|(_, rx)| rx)
     }
 
     fn enqueue(
         &self,
         session: &str,
         payload: Payload,
-    ) -> Result<std::sync::mpsc::Receiver<AttentionResponse>> {
+        deadline: Instant,
+    ) -> Result<(u64, ResponseHandle)> {
+        if self.ctx.draining.load(Ordering::SeqCst) {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow::Error::new(ServeError::Shutdown(DRAINING_ERROR.into())));
+        }
+        // admission gate: bound the requests in flight (accepted but not
+        // yet answered) — past the cap, shedding at submit is cheaper
+        // and more honest than queueing work that will time out anyway
+        if self.metrics.inflight.load(Ordering::Relaxed) >= self.max_pending as u64 {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow::Error::new(ServeError::Overloaded));
+        }
         let (tx, rx) = channel();
         // pin the session so the LRU cannot evict it while this request
         // sits in the batcher (released at delivery); a not-yet-resident
         // session takes no pin and fails at serve time as before
         let pinned = self.kv.pin(session);
+        let cancelled = Arc::new(AtomicBool::new(false));
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = AttentionRequest {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            id,
             session: session.to_string(),
             payload,
             arrived: Instant::now(),
+            deadline,
             pinned,
+            cancelled: cancelled.clone(),
             reply: tx,
         };
+        // count in flight *before* handing over: the request can be
+        // served (and decrement) before try_send even returns, and a
+        // decrement racing ahead of the increment would underflow the
+        // gauge and wedge the admission gate
+        self.metrics.inflight.fetch_add(1, Ordering::SeqCst);
         match self.ingress.try_send(Msg::Req(req)) {
             Ok(()) => {
                 self.metrics.accepted.fetch_add(1, Ordering::Relaxed);
-                Ok(rx)
+                Ok((id, ResponseHandle { rx, cancelled, done: Cell::new(false) }))
             }
             Err(TrySendError::Full(_)) => {
+                self.metrics.inflight.fetch_sub(1, Ordering::SeqCst);
                 if pinned {
                     self.kv.unpin(session);
                 }
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                anyhow::bail!("ingress queue full (backpressure)")
+                Err(anyhow::Error::new(ServeError::Overloaded)
+                    .context("ingress queue full (backpressure)"))
             }
             Err(TrySendError::Disconnected(_)) => {
+                self.metrics.inflight.fetch_sub(1, Ordering::SeqCst);
                 if pinned {
                     self.kv.unpin(session);
                 }
-                anyhow::bail!("server stopped")
+                Err(anyhow::Error::new(ServeError::Shutdown("server stopped".into())))
             }
         }
     }
 
-    /// Submit and wait.
+    /// Submit and wait.  Bounded: waits until the request deadline (plus
+    /// a small delivery grace) and synthesizes a
+    /// [`ServeError::TimedOut`] response if nothing arrived — a lost
+    /// reply channel can never hang the caller.
     pub fn call(&self, session: &str, query: Vec<f32>) -> Result<AttentionResponse> {
-        let rx = self.submit(session, query)?;
-        Ok(rx.recv()?)
+        self.validate_query(&query)?;
+        let t0 = Instant::now();
+        let deadline = t0 + self.request_timeout;
+        let (id, rx) = self.enqueue(session, Payload::Query(query), deadline)?;
+        Ok(await_response(id, &rx, deadline, t0))
     }
 
-    /// Submit a KV append and wait for the acknowledgement.
+    /// Submit a KV append and wait for the acknowledgement (bounded by
+    /// the deadline like [`Server::call`]).
     pub fn append(&self, session: &str, k_rows: Mat, v_rows: Mat) -> Result<AttentionResponse> {
-        let rx = self.submit_append(session, k_rows, v_rows)?;
-        Ok(rx.recv()?)
+        self.validate_append(&k_rows, &v_rows)?;
+        let t0 = Instant::now();
+        let deadline = t0 + self.request_timeout;
+        let (id, rx) = self.enqueue(session, Payload::Append { k_rows, v_rows }, deadline)?;
+        Ok(await_response(id, &rx, deadline, t0))
+    }
+
+    /// Cancel a session: every queued request of the session submitted
+    /// before this call fails with [`ServeError::Cancelled`] and its pin
+    /// is released immediately; `evict_kv` additionally drops the
+    /// session's KV (freeing its bytes even while pinned — safe, since
+    /// in-flight computes hold `Arc` snapshots).  A request already
+    /// inside a formed batch is shed by the worker's pre-dispatch
+    /// re-check; one already being computed is delivered normally (its
+    /// receiver may be gone — counted as `delivery_lost`).  Requests
+    /// submitted *after* the cancel are served normally.
+    pub fn cancel(&self, session: &str, evict_kv: bool) {
+        self.ctx.cancels.cancel(session);
+        if evict_kv {
+            self.kv.evict(session);
+        }
+        let _ = self.ingress.try_send(Msg::Cancel(session.to_string()));
+    }
+
+    /// Graceful drain: stop admissions, keep serving what is already in
+    /// flight until `timeout` has elapsed, then fail the remainder with
+    /// an explicit [`ServeError::Shutdown`] and tear the server down.
+    /// Returns `true` when everything in flight completed before the
+    /// deadline (a clean drain); either way, every accepted request has
+    /// received its terminal response by the time this returns.
+    pub fn drain(mut self, timeout: Duration) -> bool {
+        self.ctx.draining.store(true, Ordering::SeqCst);
+        let deadline = Instant::now() + timeout;
+        let clean = loop {
+            if self.metrics.inflight.load(Ordering::SeqCst) == 0 {
+                break true;
+            }
+            if Instant::now() >= deadline {
+                break false;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        };
+        if !clean {
+            // past the deadline: the batcher's final sweep and the
+            // workers' pre-dispatch checks shed everything still queued
+            self.ctx.shed_all.store(true, Ordering::SeqCst);
+        }
+        self.shutdown_inner();
+        clean
     }
 
     pub fn shutdown(mut self) {
@@ -293,10 +542,13 @@ impl Server {
         if let Some(rx) = rx {
             loop {
                 match rx.try_recv() {
-                    Ok(Msg::Req(req)) => {
-                        fail_request(req, SHUTDOWN_ERROR, &self.kv, &self.metrics)
-                    }
-                    Ok(Msg::Shutdown) => {}
+                    Ok(Msg::Req(req)) => fail_request(
+                        req,
+                        ServeError::Shutdown(SHUTDOWN_ERROR.into()),
+                        &self.kv,
+                        &self.metrics,
+                    ),
+                    Ok(Msg::Cancel(_)) | Ok(Msg::Shutdown) => {}
                     Err(_) => break,
                 }
             }
@@ -312,10 +564,87 @@ impl Drop for Server {
     }
 }
 
-/// Error delivered to requests the serving loop can no longer execute.
+/// Error detail delivered to requests the serving loop can no longer
+/// execute (each becomes the matching [`ServeError`] variant).
 const SHUTDOWN_ERROR: &str = "server shutting down: request dropped before serving";
 const WORKERS_GONE_ERROR: &str = "no workers available (server shutting down?)";
 const BACKEND_PANIC_ERROR: &str = "backend panicked while serving this dispatch";
+const DRAINING_ERROR: &str = "server draining: admissions closed";
+const DRAIN_SHED_ERROR: &str = "drain deadline expired before this request was served";
+
+/// Bounded wait for a submitted request's response: until its deadline
+/// plus a small delivery grace.  A miss — deadline passed with nothing
+/// delivered yet, or a lost reply channel — synthesizes an explicit
+/// [`ServeError::TimedOut`] response instead of hanging the caller.
+/// (The in-pipeline request still receives its own terminal response;
+/// with this handle dropped, that delivery counts as `delivery_lost`.)
+fn await_response(
+    id: u64,
+    rx: &ResponseHandle,
+    deadline: Instant,
+    t0: Instant,
+) -> AttentionResponse {
+    let grace = Duration::from_millis(100);
+    let wait = (deadline + grace).saturating_duration_since(Instant::now());
+    match rx.recv_timeout(wait) {
+        Ok(resp) => resp,
+        Err(_) => AttentionResponse {
+            id,
+            output: Err(ServeError::TimedOut),
+            latency_us: t0.elapsed().as_secs_f64() * 1e6,
+            batch_size: 0,
+        },
+    }
+}
+
+/// Shed verdict for one queued request, checked at group close and again
+/// by the worker just before dispatch.
+fn shed_verdict(req: &AttentionRequest, now: Instant, shed_all: bool, ctx: &ServeCtx) -> Option<ServeError> {
+    if shed_all {
+        Some(ServeError::Shutdown(DRAIN_SHED_ERROR.into()))
+    } else if req.cancelled.load(Ordering::Relaxed)
+        || ctx.cancels.cancelled_since(&req.session, req.arrived)
+    {
+        Some(ServeError::Cancelled)
+    } else if req.expired(now) {
+        Some(ServeError::TimedOut)
+    } else {
+        None
+    }
+}
+
+/// Strip cancelled / deadline-expired / drain-shed requests out of a
+/// batch, delivering their terminal errors immediately; returns the
+/// batch if any requests survive.  Run twice per dispatch: by the
+/// batcher at group close (before the dispatch is counted) and by the
+/// worker right before serving (a batch can sit in the dispatch queue
+/// past deadlines or cancels).
+fn shed_batch(batch: Batch, ctx: &ServeCtx) -> Option<Batch> {
+    let now = Instant::now();
+    let shed_all = ctx.shed_all.load(Ordering::SeqCst);
+    let mut groups = Vec::with_capacity(batch.groups.len());
+    for mut g in batch.groups {
+        let mut kept = Vec::with_capacity(g.requests.len());
+        for req in g.requests.drain(..) {
+            match shed_verdict(&req, now, shed_all, ctx) {
+                Some(err) => {
+                    ctx.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                    fail_request(req, err, &ctx.kv, &ctx.metrics);
+                }
+                None => kept.push(req),
+            }
+        }
+        if !kept.is_empty() {
+            g.requests = kept;
+            groups.push(g);
+        }
+    }
+    if groups.is_empty() {
+        None
+    } else {
+        Some(Batch { groups })
+    }
+}
 
 /// Bounded dispatch queue between the batcher and the workers.
 ///
@@ -415,23 +744,28 @@ impl BatchQueue {
 /// exit path and fails batches stranded behind the last worker.
 struct WorkerExit<'a> {
     queue: &'a BatchQueue,
-    kv: &'a KvStore,
-    metrics: &'a Metrics,
+    ctx: &'a ServeCtx,
 }
 
 impl Drop for WorkerExit<'_> {
     fn drop(&mut self) {
+        let metrics = &self.ctx.metrics;
         for batch in self.queue.worker_exited() {
             // emit() counted this dispatch when it was handed over; it
             // never served, so roll the structural counters back before
             // failing it (same invariant as emit()'s push-failure path —
             // `batches`/`mean_sessions` must count served dispatches)
-            self.metrics.batches.fetch_sub(1, Ordering::Relaxed);
-            self.metrics
+            metrics.batches.fetch_sub(1, Ordering::Relaxed);
+            metrics
                 .batched_requests
                 .fetch_sub(batch.total_requests() as u64, Ordering::Relaxed);
-            self.metrics.batched_sessions.fetch_sub(batch.sessions() as u64, Ordering::Relaxed);
-            fail_batch(batch, WORKERS_GONE_ERROR, self.kv, self.metrics);
+            metrics.batched_sessions.fetch_sub(batch.sessions() as u64, Ordering::Relaxed);
+            fail_batch(
+                batch,
+                &ServeError::Shutdown(WORKERS_GONE_ERROR.into()),
+                &self.ctx.kv,
+                metrics,
+            );
         }
     }
 }
@@ -456,8 +790,7 @@ fn batcher_loop(
     max_batch: usize,
     max_total: usize,
     window: Duration,
-    metrics: Arc<Metrics>,
-    kv: Arc<KvStore>,
+    ctx: Arc<ServeCtx>,
     rx_back: Arc<Mutex<Option<Receiver<Msg>>>>,
 ) {
     // dropped last (declared first): the queue closes after the final
@@ -493,7 +826,21 @@ fn batcher_loop(
         match msg {
             Ok(Msg::Req(req)) => {
                 if let Some(b) = batcher.push(req) {
-                    emit(&queue, b, &metrics, &kv);
+                    emit(&queue, b, &ctx);
+                }
+            }
+            Ok(Msg::Cancel(_)) => {
+                // cancellation nudge: sweep the pending groups now so a
+                // cancelled session's requests fail (and release their
+                // pins) immediately instead of at the next group close
+                let now = Instant::now();
+                for req in batcher
+                    .remove_matching(|r| shed_verdict(r, now, false, &ctx).is_some())
+                {
+                    let err = shed_verdict(&req, now, false, &ctx)
+                        .expect("matched requests have a shed verdict");
+                    ctx.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                    fail_request(req, err, &ctx.kv, &ctx.metrics);
                 }
             }
             Ok(Msg::Shutdown) => {
@@ -502,8 +849,13 @@ fn batcher_loop(
                 // channel — deliver an explicit error instead
                 loop {
                     match in_rx.try_recv() {
-                        Ok(Msg::Req(req)) => fail_request(req, SHUTDOWN_ERROR, &kv, &metrics),
-                        Ok(Msg::Shutdown) => {}
+                        Ok(Msg::Req(req)) => fail_request(
+                            req,
+                            ServeError::Shutdown(SHUTDOWN_ERROR.into()),
+                            &ctx.kv,
+                            &ctx.metrics,
+                        ),
+                        Ok(Msg::Cancel(_)) | Ok(Msg::Shutdown) => {}
                         Err(_) => break,
                     }
                 }
@@ -517,12 +869,12 @@ fn batcher_loop(
         // trickles past their deadlines and defeat the fusion
         if wake.is_some_and(|at| Instant::now() >= at) {
             for b in batcher.close_expired(Instant::now()) {
-                emit(&queue, b, &metrics, &kv);
+                emit(&queue, b, &ctx);
             }
         }
     }
     for b in batcher.drain() {
-        emit(&queue, b, &metrics, &kv);
+        emit(&queue, b, &ctx);
     }
     // hand the ingress receiver back to the Server: a submit can race
     // its request into the queue between our final sweep above and this
@@ -533,7 +885,12 @@ fn batcher_loop(
     // `_close` drops here, closing the queue — workers exit once it drains
 }
 
-fn emit(queue: &BatchQueue, b: Batch, metrics: &Metrics, kv: &KvStore) {
+fn emit(queue: &BatchQueue, b: Batch, ctx: &ServeCtx) {
+    // group-close shed point: expired / cancelled / drain-shed requests
+    // fail here instead of being dispatched (and are excluded from the
+    // structural batch counters — they were never part of a dispatch)
+    let Some(b) = shed_batch(b, ctx) else { return };
+    let metrics = &ctx.metrics;
     let requests = b.total_requests() as u64;
     let sessions = b.sessions() as u64;
     // count the dispatch *before* handing it over: a worker can pop,
@@ -549,40 +906,76 @@ fn emit(queue: &BatchQueue, b: Batch, metrics: &Metrics, kv: &KvStore) {
         metrics.batches.fetch_sub(1, Ordering::Relaxed);
         metrics.batched_requests.fetch_sub(requests, Ordering::Relaxed);
         metrics.batched_sessions.fetch_sub(sessions, Ordering::Relaxed);
-        fail_batch(b, WORKERS_GONE_ERROR, kv, metrics);
+        fail_batch(b, &ServeError::Shutdown(WORKERS_GONE_ERROR.into()), &ctx.kv, metrics);
     }
 }
 
 /// Deliver an explicit error response to every request of a batch that
 /// will never be served.
-fn fail_batch(b: Batch, msg: &str, kv: &KvStore, metrics: &Metrics) {
+fn fail_batch(b: Batch, err: &ServeError, kv: &KvStore, metrics: &Metrics) {
     for group in b.groups {
         for req in group.requests {
-            fail_request(req, msg, kv, metrics);
+            fail_request(req, err.clone(), kv, metrics);
         }
     }
 }
 
 /// Deliver an explicit error response for a request that will never be
-/// served, releasing its session pin.
-fn fail_request(req: AttentionRequest, msg: &str, kv: &KvStore, metrics: &Metrics) {
+/// served, releasing its session pin.  A terminal delivery: decrements
+/// the in-flight gauge and records the per-outcome failure tally (but
+/// not the latency reservoir — the request was never computed, and
+/// shed/shutdown latencies would poison the serving percentiles).
+fn fail_request(req: AttentionRequest, err: ServeError, kv: &KvStore, metrics: &Metrics) {
     let AttentionRequest { id, session, arrived, pinned, reply, .. } = req;
     if pinned {
         kv.unpin(&session);
     }
-    metrics.failed.fetch_add(1, Ordering::Relaxed);
+    metrics.record_failure(&err);
+    metrics.inflight.fetch_sub(1, Ordering::SeqCst);
     let latency_us = arrived.elapsed().as_secs_f64() * 1e6;
-    let _ = reply.send(AttentionResponse {
-        id,
-        output: Err(msg.to_string()),
-        latency_us,
-        batch_size: 0,
-    });
+    let sent = reply.send(AttentionResponse { id, output: Err(err), latency_us, batch_size: 0 });
+    if sent.is_err() {
+        metrics.delivery_lost.fetch_add(1, Ordering::Relaxed);
+    }
 }
 
-fn worker_loop(be: &mut dyn Backend, queue: &BatchQueue, kv: &KvStore, metrics: &Metrics) {
+/// The worker's serve loop, wrapped in a watchdog: a backend panic
+/// (crashed device thread) is caught after [`serve_batch`] has delivered
+/// explicit errors for the whole dispatch, and — while the pool-wide
+/// respawn budget lasts — the backend is rebuilt in place through the
+/// same factory instead of letting the pool shrink toward zero.  Past
+/// the budget the panic propagates and [`WorkerExit`] accounts the
+/// death as before.
+fn worker_loop(
+    factory: &BackendFactory,
+    mut be: Box<dyn Backend>,
+    queue: &BatchQueue,
+    ctx: &ServeCtx,
+) {
     while let Some(batch) = queue.pop() {
-        serve_batch(be, batch, kv, metrics);
+        // pre-dispatch shed point: the batch may have sat in the queue
+        // past deadlines, cancels, or the drain cutoff
+        let Some(batch) = shed_batch(batch, ctx) else { continue };
+        let caught = catch_unwind(AssertUnwindSafe(|| serve_batch(&mut *be, batch, ctx)));
+        let Err(payload) = caught else { continue };
+        // every request of the panicked dispatch already received its
+        // explicit error (serve_batch guarantees that before re-raising)
+        let claimed = ctx
+            .respawn_budget
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |b| b.checked_sub(1))
+            .is_ok();
+        if !claimed {
+            resume_unwind(payload);
+        }
+        match factory() {
+            Ok(fresh) => {
+                ctx.metrics.worker_respawns.fetch_add(1, Ordering::Relaxed);
+                be = fresh;
+            }
+            // a budget unit is consumed by the failed attempt; the
+            // worker dies as it would have without a watchdog
+            Err(_) => resume_unwind(payload),
+        }
     }
 }
 
@@ -636,7 +1029,9 @@ impl Drop for PinGuard<'_> {
 /// affected group only, never worker panics.  Every response releases
 /// its ingress pin (before the reply is sent; panic-safe via the
 /// per-session [`PinGuard`]s).
-fn serve_batch(be: &mut dyn Backend, batch: Batch, kv: &KvStore, metrics: &Metrics) {
+fn serve_batch(be: &mut dyn Backend, batch: Batch, ctx: &ServeCtx) {
+    let kv = &*ctx.kv;
+    let metrics = &*ctx.metrics;
     let n = batch.total_requests();
     let mut guards: Vec<PinGuard> = batch
         .groups
@@ -648,18 +1043,23 @@ fn serve_batch(be: &mut dyn Backend, batch: Batch, kv: &KvStore, metrics: &Metri
         })
         .collect();
     if be.head_dim() != kv.head_dim() {
-        let msg = format!(
+        let err = ServeError::backend(format!(
             "backend head_dim {} != KV store head_dim {}",
             be.head_dim(),
             kv.head_dim()
-        );
+        ));
         for (guard, group) in guards.iter_mut().zip(batch.groups) {
             for req in group.requests {
+                let is_append = req.is_append();
                 let AttentionRequest { id, arrived, pinned, reply, .. } = req;
                 if pinned {
                     guard.release_one();
                 }
-                deliver(id, arrived, reply, Err(msg.clone()), n, metrics);
+                if is_append {
+                    deliver_append(id, arrived, reply, Err(err.clone()), n, metrics);
+                } else {
+                    deliver(id, arrived, reply, Err(err.clone()), n, metrics);
+                }
             }
         }
         return;
@@ -681,7 +1081,7 @@ fn serve_batch(be: &mut dyn Backend, batch: Batch, kv: &KvStore, metrics: &Metri
     // pass below covers requests not yet drained from their streams
     // (parked appends included) before the panic is re-raised
     let caught = catch_unwind(AssertUnwindSafe(|| {
-        serve_groups(be, &mut streams, &mut parked_append, kv, &mut guards, metrics, n)
+        serve_groups(be, &mut streams, &mut parked_append, ctx, &mut guards, n)
     }));
     if let Err(payload) = caught {
         for (gi, (_, stream)) in streams.iter_mut().enumerate() {
@@ -692,7 +1092,7 @@ fn serve_batch(be: &mut dyn Backend, batch: Batch, kv: &KvStore, metrics: &Metri
                 if pinned {
                     guards[gi].release_one();
                 }
-                let output = Err(BACKEND_PANIC_ERROR.to_string());
+                let output = Err(ServeError::backend(BACKEND_PANIC_ERROR));
                 if is_append {
                     deliver_append(id, arrived, reply, output, n, metrics);
                 } else {
@@ -711,11 +1111,11 @@ fn serve_groups(
     be: &mut dyn Backend,
     streams: &mut [GroupStream],
     parked_append: &mut [Option<AttentionRequest>],
-    kv: &KvStore,
+    ctx: &ServeCtx,
     guards: &mut [PinGuard<'_>],
-    metrics: &Metrics,
     n: usize,
 ) {
+    let metrics = &*ctx.metrics;
     loop {
         // phase 1: every group's next contiguous query run, fused into
         // one plan dispatch
@@ -741,7 +1141,7 @@ fn serve_groups(
         }
         let had_queries = !runs.is_empty();
         if had_queries {
-            flush_runs(be, streams, runs, kv, guards, metrics, n);
+            flush_runs(be, streams, runs, ctx, guards, n);
         }
         // phase 2: apply each group's parked append barrier
         let mut had_appends = false;
@@ -750,10 +1150,11 @@ fn serve_groups(
             had_appends = true;
             let AttentionRequest { id, payload, arrived, pinned, reply, .. } = req;
             let output = match payload {
-                Payload::Append { k_rows, v_rows } => kv
+                Payload::Append { k_rows, v_rows } => ctx
+                    .kv
                     .append(&streams[gi].0, k_rows, v_rows)
                     .map(|()| Vec::new())
-                    .map_err(|e| e.to_string()),
+                    .map_err(|e| ServeError::KvAdmission(e.to_string())),
                 Payload::Query(_) => unreachable!("parked request is an append"),
             };
             if pinned {
@@ -774,21 +1175,23 @@ fn flush_runs(
     be: &mut dyn Backend,
     streams: &[GroupStream],
     runs: Vec<(usize, Vec<PendingQuery>)>,
-    kv: &KvStore,
+    ctx: &ServeCtx,
     guards: &mut [PinGuard<'_>],
-    metrics: &Metrics,
     batch_size: usize,
 ) {
+    let metrics = &*ctx.metrics;
     let d = be.head_dim();
     let mut fused: Vec<FusedRun> = Vec::new();
     for (gi, run) in runs {
         let session = streams[gi].0.as_str();
-        let Some(entry) = kv.get(session) else {
-            fail_run(run, &format!("unknown session {session:?}"), gi, guards, metrics, batch_size);
+        let Some(entry) = ctx.kv.get(session) else {
+            let err = ServeError::KvAdmission(format!("unknown session {session:?}"));
+            fail_run(run, &err, gi, guards, metrics, batch_size);
             continue;
         };
         if run.iter().any(|(_, q, _, _, _)| q.len() != d) {
-            fail_run(run, &format!("query dim mismatch (expected {d})"), gi, guards, metrics, batch_size);
+            let err = ServeError::backend(format!("query dim mismatch (expected {d})"));
+            fail_run(run, &err, gi, guards, metrics, batch_size);
             continue;
         }
         let mut q = Mat::zeros(run.len(), d);
@@ -801,17 +1204,18 @@ fn flush_runs(
         return;
     }
     let plan: Vec<(&KvEntry, &Mat)> = fused.iter().map(|(_, _, e, q)| (e, q)).collect();
-    // a panicking backend (crashed device thread) still kills this
-    // worker — but the fused callers get an explicit error response
-    // first instead of dead reply channels for every innocent session
-    // that happened to share the dispatch
+    // a panicking backend (crashed device thread) still unwinds to the
+    // worker watchdog — but the fused callers get an explicit error
+    // response first instead of dead reply channels for every innocent
+    // session that happened to share the dispatch
     let result = catch_unwind(AssertUnwindSafe(|| be.compute_plan(&plan)));
     let plan_len = plan.len();
     drop(plan);
     match result {
         Err(payload) => {
+            let err = ServeError::backend(BACKEND_PANIC_ERROR);
             for (gi, run, _, _) in fused {
-                fail_run(run, BACKEND_PANIC_ERROR, gi, guards, metrics, batch_size);
+                fail_run(run, &err, gi, guards, metrics, batch_size);
             }
             resume_unwind(payload);
         }
@@ -821,42 +1225,95 @@ fn flush_runs(
             }
         }
         Ok(Ok(outs)) => {
-            let msg = format!(
+            let err = ServeError::backend(format!(
                 "backend returned {} outputs for a {plan_len}-session plan",
                 outs.len()
-            );
+            ));
             for (gi, run, _, _) in fused {
-                fail_run(run, &msg, gi, guards, metrics, batch_size);
+                fail_run(run, &err, gi, guards, metrics, batch_size);
             }
         }
-        Ok(Err(e)) if fused.len() == 1 => {
-            let (gi, run, _, _) = fused.into_iter().next().expect("one fused run");
-            fail_run(run, &e.to_string(), gi, guards, metrics, batch_size);
-        }
-        // error isolation: one bad session (e.g. a static-shape PJRT
-        // kernel rejecting a mid-decode session) must not fail its
-        // dispatch neighbours — retry each group as its own plan and
-        // deliver per-group results, matching pre-fusion behavior where
-        // every session was its own dispatch.  The retry's total work
-        // equals those pre-fusion dispatches; the aborted fused attempt
-        // costs at most the entries before the first failure (both
-        // in-tree backends validate eagerly / short-circuit at the
-        // first failing entry), so the error path stays ~one pass
-        Ok(Err(_)) => {
-            for (gi, run, entry, q) in fused {
-                match be.compute_plan(&[(&entry, &q)]) {
-                    Ok(outs) if outs.len() == 1 => {
-                        deliver_run(run, &outs[0], gi, guards, metrics, batch_size);
+        // error isolation + retry: one bad session (e.g. a static-shape
+        // PJRT kernel rejecting a mid-decode session, or an injected
+        // fault) must not fail its dispatch neighbours — retry each
+        // group as its own plan, with bounded backoff retries for faults
+        // the backend marked transient, and deliver per-group results.
+        // This matches pre-fusion behavior where every session was its
+        // own dispatch; the aborted fused attempt costs at most the
+        // entries before the first failure (both in-tree backends
+        // validate eagerly / short-circuit at the first failing entry),
+        // so the error path stays ~one pass
+        Ok(Err(e)) => {
+            if is_transient(&e) {
+                // the per-session re-dispatch below is itself the first
+                // retry of the transient fused failure
+                metrics.retries.fetch_add(1, Ordering::Relaxed);
+            }
+            // index loop over take-able slots: a panic mid-retry must
+            // still deliver explicit errors to the *remaining* runs
+            // before unwinding to the watchdog — exactly-one-response
+            // holds even when the retry pass itself crashes
+            let mut slots: Vec<Option<FusedRun>> = fused.into_iter().map(Some).collect();
+            for i in 0..slots.len() {
+                let (gi, run, entry, q) = slots[i].take().expect("slot visited once");
+                let caught = catch_unwind(AssertUnwindSafe(|| {
+                    compute_single_with_retry(&mut *be, &entry, &q, ctx)
+                }));
+                match caught {
+                    Err(payload) => {
+                        let err = ServeError::backend(BACKEND_PANIC_ERROR);
+                        fail_run(run, &err, gi, guards, metrics, batch_size);
+                        for slot in slots.iter_mut().skip(i + 1) {
+                            if let Some((gj, runj, _, _)) = slot.take() {
+                                fail_run(runj, &err, gj, guards, metrics, batch_size);
+                            }
+                        }
+                        resume_unwind(payload);
                     }
-                    Ok(outs) => {
-                        let msg = format!(
-                            "backend returned {} outputs for a 1-session plan",
-                            outs.len()
-                        );
-                        fail_run(run, &msg, gi, guards, metrics, batch_size);
-                    }
-                    Err(e) => fail_run(run, &e.to_string(), gi, guards, metrics, batch_size),
+                    Ok(Ok(out)) => deliver_run(run, &out, gi, guards, metrics, batch_size),
+                    Ok(Err(err)) => fail_run(run, &err, gi, guards, metrics, batch_size),
                 }
+            }
+        }
+    }
+}
+
+/// Whether any error in the chain is a [`TransientFault`] marker.
+fn is_transient(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| c.downcast_ref::<TransientFault>().is_some())
+}
+
+/// Serve one session's query run as its own single-entry plan, retrying
+/// faults the backend marked transient with exponential backoff, up to
+/// `max_retries` re-attempts.  Permanent faults are never retried.
+fn compute_single_with_retry(
+    be: &mut dyn Backend,
+    entry: &KvEntry,
+    q: &Mat,
+    ctx: &ServeCtx,
+) -> std::result::Result<Mat, ServeError> {
+    let mut attempt = 0u32;
+    loop {
+        match be.compute_plan(&[(entry, q)]) {
+            Ok(mut outs) if outs.len() == 1 => return Ok(outs.pop().expect("one output")),
+            Ok(outs) => {
+                return Err(ServeError::backend(format!(
+                    "backend returned {} outputs for a 1-session plan",
+                    outs.len()
+                )))
+            }
+            Err(e) => {
+                let transient = is_transient(&e);
+                if transient && attempt < ctx.max_retries {
+                    attempt += 1;
+                    ctx.metrics.retries.fetch_add(1, Ordering::Relaxed);
+                    let backoff = ctx.retry_backoff * (1u32 << (attempt - 1).min(10));
+                    if !backoff.is_zero() {
+                        std::thread::sleep(backoff);
+                    }
+                    continue;
+                }
+                return Err(ServeError::BackendFailed { reason: e.to_string(), transient });
             }
         }
     }
@@ -882,7 +1339,7 @@ fn deliver_run(
 /// Deliver the same error to every query of one group's run.
 fn fail_run(
     run: Vec<PendingQuery>,
-    msg: &str,
+    err: &ServeError,
     gi: usize,
     guards: &mut [PinGuard<'_>],
     metrics: &Metrics,
@@ -892,7 +1349,7 @@ fn fail_run(
         if pinned {
             guards[gi].release_one();
         }
-        deliver(id, arrived, reply, Err(msg.to_string()), batch_size, metrics);
+        deliver(id, arrived, reply, Err(err.clone()), batch_size, metrics);
     }
 }
 
@@ -900,18 +1357,25 @@ fn deliver(
     id: u64,
     arrived: Instant,
     reply: Sender<AttentionResponse>,
-    output: std::result::Result<Vec<f32>, String>,
+    output: std::result::Result<Vec<f32>, ServeError>,
     batch_size: usize,
     metrics: &Metrics,
 ) {
     let latency_us = arrived.elapsed().as_secs_f64() * 1e6;
-    if output.is_ok() {
-        metrics.completed.fetch_add(1, Ordering::Relaxed);
-    } else {
-        metrics.failed.fetch_add(1, Ordering::Relaxed);
+    match &output {
+        Ok(_) => {
+            metrics.completed.fetch_add(1, Ordering::Relaxed);
+        }
+        Err(e) => metrics.record_failure(e),
     }
     metrics.observe_latency(latency_us);
-    let _ = reply.send(AttentionResponse { id, output, latency_us, batch_size });
+    metrics.inflight.fetch_sub(1, Ordering::SeqCst);
+    if reply
+        .send(AttentionResponse { id, output, latency_us, batch_size })
+        .is_err()
+    {
+        metrics.delivery_lost.fetch_add(1, Ordering::Relaxed);
+    }
 }
 
 /// Acknowledge a KV append.  Counted under `Metrics::appends`, not
@@ -923,17 +1387,24 @@ fn deliver_append(
     id: u64,
     arrived: Instant,
     reply: Sender<AttentionResponse>,
-    output: std::result::Result<Vec<f32>, String>,
+    output: std::result::Result<Vec<f32>, ServeError>,
     batch_size: usize,
     metrics: &Metrics,
 ) {
     let latency_us = arrived.elapsed().as_secs_f64() * 1e6;
-    if output.is_ok() {
-        metrics.appends.fetch_add(1, Ordering::Relaxed);
-    } else {
-        metrics.failed.fetch_add(1, Ordering::Relaxed);
+    match &output {
+        Ok(_) => {
+            metrics.appends.fetch_add(1, Ordering::Relaxed);
+        }
+        Err(e) => metrics.record_failure(e),
     }
-    let _ = reply.send(AttentionResponse { id, output, latency_us, batch_size });
+    metrics.inflight.fetch_sub(1, Ordering::SeqCst);
+    if reply
+        .send(AttentionResponse { id, output, latency_us, batch_size })
+        .is_err()
+    {
+        metrics.delivery_lost.fetch_add(1, Ordering::Relaxed);
+    }
 }
 
 #[cfg(test)]
@@ -961,6 +1432,7 @@ mod tests {
             batch_window_us: 200,
             workers,
             queue_depth: 64,
+            ..CoordinatorConfig::default()
         };
         let kv = Arc::new(KvStore::new(32, 8, 4));
         let mut rng = Rng::new(1);
@@ -1060,6 +1532,7 @@ mod tests {
             batch_window_us: window_us,
             workers: 1,
             queue_depth: 64,
+            ..CoordinatorConfig::default()
         };
         let kv = Arc::new(KvStore::new(32, 8, 4));
         let mut rng = Rng::new(71);
@@ -1096,6 +1569,7 @@ mod tests {
             batch_window_us: 100,
             workers: 2,
             queue_depth: 16,
+            ..CoordinatorConfig::default()
         };
         let kv = Arc::new(KvStore::new(32, 8, 4));
         // all factories failing
@@ -1123,6 +1597,7 @@ mod tests {
             batch_window_us: 100,
             workers: 1,
             queue_depth: 16,
+            ..CoordinatorConfig::default()
         };
         let kv = Arc::new(KvStore::new(32, 8, 4));
         let mut rng = Rng::new(7);
@@ -1134,7 +1609,7 @@ mod tests {
             // two rounds: the worker must survive the first mismatch
             let resp = srv.call("sess", rng.normal_vec(8)).unwrap();
             assert!(!resp.ok());
-            assert!(resp.output.unwrap_err().contains("head_dim"));
+            assert!(resp.output.unwrap_err().to_string().contains("head_dim"));
         }
         srv.shutdown();
     }
@@ -1175,6 +1650,10 @@ mod tests {
             batch_window_us: 100,
             workers: 1,
             queue_depth: 16,
+            // a panicking backend must NOT be respawned here: this test
+            // is about the explicit-error path once the pool is gone
+            worker_respawn_budget: 0,
+            ..CoordinatorConfig::default()
         };
         let kv = Arc::new(KvStore::new(32, 8, 4));
         let mut rng = Rng::new(13);
@@ -1194,7 +1673,7 @@ mod tests {
         let resp = srv.call("sess", rng.normal_vec(8)).unwrap();
         assert!(!resp.ok());
         assert!(
-            resp.output.unwrap_err().contains("panicked"),
+            resp.output.unwrap_err().to_string().contains("panicked"),
             "caller must learn the backend crashed"
         );
         // let the worker thread finish unwinding
@@ -1202,7 +1681,7 @@ mod tests {
         // later requests must receive an explicit error response
         let resp = srv.call("sess", rng.normal_vec(8)).unwrap();
         assert!(!resp.ok());
-        let msg = resp.output.unwrap_err();
+        let msg = resp.output.unwrap_err().to_string();
         assert!(msg.contains("no workers"), "unexpected error text: {msg}");
         srv.shutdown();
     }
@@ -1254,6 +1733,7 @@ mod tests {
             batch_window_us: 100_000, // generous window so the two fuse
             workers: 1,
             queue_depth: 16,
+            ..CoordinatorConfig::default()
         };
         let kv = Arc::new(KvStore::new(32, 8, 4));
         let mut rng = Rng::new(23);
@@ -1272,7 +1752,7 @@ mod tests {
         assert!(full.ok(), "valid session must survive a neighbour's failure: {:?}", full.output);
         assert_eq!(full.output.unwrap(), vec![1.0; 8]);
         assert!(!short.ok(), "invalid session must fail alone");
-        assert!(short.output.unwrap_err().contains("short session rejected"));
+        assert!(short.output.unwrap_err().to_string().contains("short session rejected"));
         srv.shutdown();
     }
 
@@ -1284,6 +1764,7 @@ mod tests {
             batch_window_us: 100,
             workers: 1,
             queue_depth: 64,
+            ..CoordinatorConfig::default()
         };
         let kv = Arc::new(KvStore::new(32, 8, 4));
         let mut rng = Rng::new(11);
@@ -1321,6 +1802,203 @@ mod tests {
         let bad = srv.append("missing", Mat::zeros(1, 8), Mat::zeros(1, 8)).unwrap();
         assert!(!bad.ok());
         assert_eq!(srv.metrics.snapshot().failed, 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn expired_requests_are_shed_with_timed_out() {
+        let (srv, _, _) = test_server(1);
+        let mut rng = Rng::new(31);
+        // a deadline already in the past: the batcher must shed it at
+        // group close without spending backend compute on it
+        let rx = srv
+            .submit_with_deadline("sess", rng.normal_vec(8), Instant::now())
+            .unwrap();
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.output, Err(ServeError::TimedOut));
+        // live traffic alongside the shed request is unaffected
+        let live = srv.call("sess", rng.normal_vec(8)).unwrap();
+        assert!(live.ok(), "{:?}", live.output);
+        let snap = srv.metrics.snapshot();
+        assert_eq!(snap.timed_out, 1);
+        assert_eq!(snap.shed, 1);
+        assert_eq!(srv.kv.pinned_sessions(), 0, "shed request must release its pin");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn admission_gate_bounds_requests_in_flight() {
+        let coord_cfg = CoordinatorConfig {
+            max_batch: 4,
+            max_total_batch: 64,
+            // long window: the first request stays in flight while the
+            // second hits the gate
+            batch_window_us: 500_000,
+            workers: 1,
+            queue_depth: 16,
+            max_pending_requests: 1,
+            ..CoordinatorConfig::default()
+        };
+        let kv = Arc::new(KvStore::new(32, 8, 4));
+        let mut rng = Rng::new(37);
+        kv.put("sess", Mat::from_vec(32, 8, rng.normal_vec(256)),
+               Mat::from_vec(32, 8, rng.normal_vec(256))).unwrap();
+        let factories = vec![SimBackend::factory(Arith::Hfa, accel_cfg(8))];
+        let srv = Server::start(&coord_cfg, kv, factories).unwrap();
+        let rx = srv.submit("sess", rng.normal_vec(8)).unwrap();
+        let err = srv.submit("sess", rng.normal_vec(8)).expect_err("gate must reject");
+        assert_eq!(err.downcast_ref::<ServeError>(), Some(&ServeError::Overloaded));
+        assert_eq!(srv.metrics.snapshot().rejected, 1);
+        // once the in-flight request completes, capacity reopens
+        assert!(rx.recv().unwrap().ok());
+        let resp = srv.call("sess", rng.normal_vec(8)).unwrap();
+        assert!(resp.ok(), "{:?}", resp.output);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn cancel_sheds_queued_requests_and_releases_pins() {
+        let coord_cfg = CoordinatorConfig {
+            max_batch: 8,
+            max_total_batch: 64,
+            batch_window_us: 2_000_000, // long window: requests sit queued
+            workers: 1,
+            queue_depth: 16,
+            ..CoordinatorConfig::default()
+        };
+        let kv = Arc::new(KvStore::new(32, 8, 4));
+        let mut rng = Rng::new(41);
+        kv.put("sess", Mat::from_vec(32, 8, rng.normal_vec(256)),
+               Mat::from_vec(32, 8, rng.normal_vec(256))).unwrap();
+        let factories = vec![SimBackend::factory(Arith::Hfa, accel_cfg(8))];
+        let srv = Server::start(&coord_cfg, kv, factories).unwrap();
+        let rx1 = srv.submit("sess", rng.normal_vec(8)).unwrap();
+        let rx2 = srv.submit("sess", rng.normal_vec(8)).unwrap();
+        srv.cancel("sess", false);
+        assert_eq!(rx1.recv().unwrap().output, Err(ServeError::Cancelled));
+        assert_eq!(rx2.recv().unwrap().output, Err(ServeError::Cancelled));
+        assert_eq!(srv.kv.pinned_sessions(), 0, "cancel must release the pins");
+        let snap = srv.metrics.snapshot();
+        assert_eq!(snap.cancelled, 2);
+        assert_eq!(snap.shed, 2);
+        // the KV entry survives (evict_kv=false): new requests serve fine
+        assert!(srv.kv.contains("sess"));
+        let resp = srv.call("sess", rng.normal_vec(8)).unwrap();
+        assert!(resp.ok(), "post-cancel traffic must serve: {:?}", resp.output);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn dropped_response_handle_cancels_the_request() {
+        let coord_cfg = CoordinatorConfig {
+            max_batch: 8,
+            max_total_batch: 64,
+            batch_window_us: 100_000,
+            workers: 1,
+            queue_depth: 16,
+            ..CoordinatorConfig::default()
+        };
+        let kv = Arc::new(KvStore::new(32, 8, 4));
+        let mut rng = Rng::new(43);
+        kv.put("sess", Mat::from_vec(32, 8, rng.normal_vec(256)),
+               Mat::from_vec(32, 8, rng.normal_vec(256))).unwrap();
+        let factories = vec![SimBackend::factory(Arith::Hfa, accel_cfg(8))];
+        let srv = Server::start(&coord_cfg, kv, factories).unwrap();
+        drop(srv.submit("sess", rng.normal_vec(8)).unwrap());
+        // the abandoned request must reach a terminal outcome on its own
+        // (shed as cancelled at a shed point, or — if it raced past them
+        // all — delivered into the dropped channel)
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let snap = srv.metrics.snapshot();
+            if snap.cancelled + snap.completed + snap.delivery_lost >= 1 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "abandoned request never terminal: {snap:?}");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let snap = srv.metrics.snapshot();
+        assert_eq!(snap.inflight, 0, "in-flight gauge must return to zero");
+        assert_eq!(srv.kv.pinned_sessions(), 0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn drain_serves_inflight_before_the_deadline() {
+        let (srv, _, _) = test_server(1);
+        let mut rng = Rng::new(47);
+        let rx = srv.submit("sess", rng.normal_vec(8)).unwrap();
+        let metrics = Arc::clone(&srv.metrics);
+        assert!(srv.drain(Duration::from_secs(10)), "drain must complete cleanly");
+        let resp = rx.recv().unwrap();
+        assert!(resp.ok(), "in-flight request must be served through drain: {:?}", resp.output);
+        assert_eq!(metrics.snapshot().inflight, 0);
+    }
+
+    #[test]
+    fn drain_past_deadline_fails_the_remainder_explicitly() {
+        let coord_cfg = CoordinatorConfig {
+            max_batch: 8,
+            max_total_batch: 64,
+            batch_window_us: 10_000_000, // never closes on its own
+            workers: 1,
+            queue_depth: 16,
+            ..CoordinatorConfig::default()
+        };
+        let kv = Arc::new(KvStore::new(32, 8, 4));
+        let mut rng = Rng::new(53);
+        kv.put("sess", Mat::from_vec(32, 8, rng.normal_vec(256)),
+               Mat::from_vec(32, 8, rng.normal_vec(256))).unwrap();
+        let factories = vec![SimBackend::factory(Arith::Hfa, accel_cfg(8))];
+        let srv = Server::start(&coord_cfg, kv, factories).unwrap();
+        let rx = srv.submit("sess", rng.normal_vec(8)).unwrap();
+        let metrics = Arc::clone(&srv.metrics);
+        assert!(!srv.drain(Duration::ZERO), "expired drain must report unclean");
+        let resp = rx.recv().unwrap();
+        assert!(
+            matches!(resp.output, Err(ServeError::Shutdown(_))),
+            "remainder must fail explicitly: {:?}",
+            resp.output
+        );
+        assert_eq!(metrics.snapshot().inflight, 0);
+    }
+
+    #[test]
+    fn panicked_worker_respawns_until_budget_exhausted() {
+        let coord_cfg = CoordinatorConfig {
+            max_batch: 1, // no fusion: each call is its own dispatch
+            max_total_batch: 64,
+            batch_window_us: 100,
+            workers: 1,
+            queue_depth: 16,
+            worker_respawn_budget: 2,
+            ..CoordinatorConfig::default()
+        };
+        let kv = Arc::new(KvStore::new(32, 8, 4));
+        let mut rng = Rng::new(61);
+        kv.put("sess", Mat::from_vec(32, 8, rng.normal_vec(256)),
+               Mat::from_vec(32, 8, rng.normal_vec(256))).unwrap();
+        let factories: Vec<BackendFactory> = vec![Box::new(|| {
+            Ok(Box::new(PanicBackend) as Box<dyn crate::coordinator::backend::Backend>)
+        })];
+        let srv = Server::start(&coord_cfg, kv, factories).unwrap();
+        // each dispatch panics; the watchdog rebuilds the backend twice,
+        // so three requests in a row all get explicit backend errors
+        // from a live worker
+        for _ in 0..3 {
+            let resp = srv.call("sess", rng.normal_vec(8)).unwrap();
+            assert!(!resp.ok());
+            assert!(resp.output.unwrap_err().to_string().contains("panicked"));
+        }
+        // let the third unwind finish killing the worker (budget spent)
+        std::thread::sleep(Duration::from_millis(200));
+        assert_eq!(srv.metrics.snapshot().worker_respawns, 2);
+        let resp = srv.call("sess", rng.normal_vec(8)).unwrap();
+        assert!(
+            matches!(resp.output, Err(ServeError::Shutdown(_))),
+            "past the budget the pool is gone: {:?}",
+            resp.output
+        );
         srv.shutdown();
     }
 }

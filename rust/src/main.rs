@@ -8,6 +8,9 @@
 //!                                task-accuracy evaluation (native engine)
 //!   serve [--impl hfa|fa2] [--requests N] [--workers W] [--pjrt]
 //!                                run the serving coordinator on a workload
+//!   validate-bench [FILE]        check a BENCH_*.json trajectory file
+//!                                against the benchlib row schema
+//!                                (default: BENCH_serving.json)
 //!   reproduce --exp table1|table3|fig5|fig6|fig7|fig8|table4|e2e
 //!                                how to regenerate each paper table/figure
 
@@ -37,6 +40,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "simulate" => cmd_simulate(args),
         "eval" => cmd_eval(args),
         "serve" => cmd_serve(args),
+        "validate-bench" => cmd_validate_bench(args),
         "reproduce" => cmd_reproduce(args),
         _ => {
             print_help();
@@ -48,7 +52,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
 fn print_help() {
     println!(
         "hfa — hybrid float/log FlashAttention accelerator (paper reproduction)\n\n\
-         usage: hfa <info|simulate|eval|serve|reproduce> [options]\n\n\
+         usage: hfa <info|simulate|eval|serve|validate-bench|reproduce> [options]\n\n\
          see the module docs in rust/src/main.rs and README.md"
     );
 }
@@ -207,6 +211,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         requests as f64 / wall, snap.p50_us, snap.p99_us, snap.mean_batch, snap.rejected
     );
     server.shutdown();
+    Ok(())
+}
+
+/// Validate a machine-readable perf trajectory file against the benchlib
+/// row schema (`{bench, shape, ns_per_step, kv_bytes_copied}`) — the CI
+/// gate that keeps `BENCH_serving.json` toolable as rows accumulate.
+fn cmd_validate_bench(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("BENCH_serving.json");
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+    let rows = hfa::benchlib::validate_bench_schema(&text)
+        .map_err(|e| anyhow::anyhow!("{path}: schema violation: {e}"))?;
+    println!("{path}: ok ({rows} bench rows)");
     Ok(())
 }
 

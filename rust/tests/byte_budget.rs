@@ -46,6 +46,7 @@ fn queued_queries_pin_their_session_against_eviction() {
         batch_window_us: 300_000, // long window: the query stays queued
         workers: 1,
         queue_depth: 64,
+        ..CoordinatorConfig::default()
     };
     let kv = Arc::new(KvStore::new(32, D, 2)); // budget: two full sessions
     let mut rng = Rng::new(404);
@@ -83,6 +84,7 @@ fn append_admission_errors_surface_through_server() {
         batch_window_us: 100,
         workers: 1,
         queue_depth: 64,
+        ..CoordinatorConfig::default()
     };
     // budget: exactly 16 rows of prepared KV
     let kv = Arc::new(KvStore::with_byte_budget(16, D, 16 * row_bytes(D, D)));
@@ -102,7 +104,7 @@ fn append_admission_errors_surface_through_server() {
     let (k1, v1) = full_session(&mut rng, 1);
     let ack = srv.append("dec", k1.clone(), v1.clone()).unwrap();
     assert!(!ack.ok(), "over-budget append must fail, not silently evict a pinned session");
-    let msg = ack.output.unwrap_err();
+    let msg = ack.output.unwrap_err().to_string();
     assert!(msg.contains("pinned") || msg.contains("budget"), "unexpected error: {msg}");
     assert!(kv.contains("other"), "pinned session must survive");
     assert_eq!(kv.get("dec").unwrap().prepared().n(), 8, "failed append must not apply");
@@ -118,7 +120,7 @@ fn append_admission_errors_surface_through_server() {
     // error, not a hang) — admission control never strands a caller
     let resp = srv.call("other", rng.normal_vec(D)).unwrap();
     assert!(!resp.ok());
-    assert!(resp.output.unwrap_err().contains("unknown session"));
+    assert!(resp.output.unwrap_err().to_string().contains("unknown session"));
     srv.shutdown();
 }
 
@@ -133,6 +135,7 @@ fn byte_budget_serves_many_short_sessions_concurrently() {
         batch_window_us: 100,
         workers: 2,
         queue_depth: 64,
+        ..CoordinatorConfig::default()
     };
     let kv = Arc::new(KvStore::new(32, D, 2));
     let mut rng = Rng::new(606);

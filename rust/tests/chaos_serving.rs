@@ -1,0 +1,344 @@
+//! Seeded chaos soak: the serving stack under injected backend faults,
+//! panics, cancellations, deadline expiry and drain.
+//!
+//! The invariants proved here are the robustness contract of ISSUE 6:
+//! * every accepted request receives **exactly one** terminal response
+//!   (no hangs, no double delivery — the metrics tallies balance),
+//! * no session pin leaks (`pinned_sessions() == 0` after drain),
+//! * the KV store's `used_bytes` is exactly the bytes of the sessions
+//!   still resident, which in turn match the *acknowledged* appends —
+//!   a failed append must not grow a session, a cancelled+evicted
+//!   session must free its bytes.
+//!
+//! All fault decisions are content-keyed off a fixed seed
+//! (`coordinator::chaos`), so a failure here reproduces exactly.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use hfa::attention::prepared::row_bytes;
+use hfa::config::{AcceleratorConfig, CoordinatorConfig};
+use hfa::coordinator::{ChaosBackend, ChaosConfig, KvStore, ServeError, Server, SimBackend};
+use hfa::hw::Arith;
+use hfa::proptest::Rng;
+use hfa::Mat;
+
+const D: usize = 8;
+const SEQ: usize = 32;
+const SESSIONS: usize = 64;
+const PREFILL: usize = 16;
+const ROUNDS: usize = 3;
+
+fn accel() -> AcceleratorConfig {
+    AcceleratorConfig { head_dim: D, seq_len: SEQ, kv_blocks: 4, parallel_queries: 1, freq_mhz: 500.0 }
+}
+
+fn session_name(s: usize) -> String {
+    format!("s{s:02}")
+}
+
+fn chaos_factories(workers: usize, chaos: &ChaosConfig) -> Vec<hfa::coordinator::BackendFactory> {
+    (0..workers)
+        .map(|_| ChaosBackend::wrap_factory(chaos.clone(), SimBackend::factory(Arith::Hfa, accel())))
+        .collect()
+}
+
+#[test]
+fn seeded_soak_reaches_a_consistent_terminal_state() {
+    let coord = CoordinatorConfig {
+        max_batch: 4,
+        max_total_batch: 64,
+        batch_window_us: 2_000,
+        workers: 3,
+        queue_depth: 512,
+        // generous live-traffic deadline so only the deliberately
+        // pre-expired submits time out, even on slow CI machines
+        request_timeout_us: 30_000_000,
+        max_pending_requests: 4096,
+        max_retries: 3,
+        retry_backoff_us: 50,
+        worker_respawn_budget: 32,
+    };
+    let chaos = ChaosConfig {
+        seed: 0xC4A05,
+        panic_rate: 0.01,
+        fault_rate: 0.15,
+        transient_ratio: 0.5,
+        transient_failures: 1,
+        // a little per-dispatch latency keeps a backlog queued, so the
+        // mid-flight cancels below reliably find requests to shed
+        latency: Duration::from_millis(2),
+    };
+    // budget holds every session at full length: the only evictions in
+    // this soak are the deliberate cancel+evict ones
+    let kv = Arc::new(KvStore::new(SEQ, D, SESSIONS));
+    let mut rng = Rng::new(0xC4A05);
+    for s in 0..SESSIONS {
+        kv.put(
+            &session_name(s),
+            Mat::from_vec(PREFILL, D, rng.normal_vec(PREFILL * D)),
+            Mat::from_vec(PREFILL, D, rng.normal_vec(PREFILL * D)),
+        )
+        .unwrap();
+    }
+    let srv = Server::start(&coord, kv.clone(), chaos_factories(coord.workers, &chaos)).unwrap();
+
+    // traffic: per round, every session attends once and every fourth
+    // session appends one decode row; all reply handles are held so no
+    // request is implicitly cancelled
+    enum Kind {
+        Query,
+        Append,
+        Expired,
+    }
+    let mut pending: Vec<(usize, Kind, hfa::coordinator::ResponseHandle)> = Vec::new();
+    for _round in 0..ROUNDS {
+        for s in 0..SESSIONS {
+            let name = session_name(s);
+            let rx = srv.submit(&name, rng.normal_vec(D)).expect("submit within bounds");
+            pending.push((s, Kind::Query, rx));
+            if s % 4 == 1 {
+                let rx = srv
+                    .submit_append(
+                        &name,
+                        Mat::from_vec(1, D, rng.normal_vec(D)),
+                        Mat::from_vec(1, D, rng.normal_vec(D)),
+                    )
+                    .expect("append submit within bounds");
+                pending.push((s, Kind::Append, rx));
+            }
+        }
+    }
+    // a few requests arrive already expired: they must be shed, not served
+    for s in 0..4 {
+        let rx = srv
+            .submit_with_deadline(&session_name(s), rng.normal_vec(D), std::time::Instant::now())
+            .expect("expired submit is still admitted");
+        pending.push((s, Kind::Expired, rx));
+    }
+    // cancel the last four sessions mid-flight and evict their KV: their
+    // queued requests fail and their bytes come back
+    for s in SESSIONS - 4..SESSIONS {
+        srv.cancel(&session_name(s), true);
+    }
+
+    // every request: exactly one terminal response, within a bound
+    let submitted = pending.len();
+    let mut acked_appends = vec![0usize; SESSIONS];
+    let mut terminal = 0usize;
+    for (s, kind, rx) in &pending {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(60))
+            .unwrap_or_else(|e| panic!("session {s}: no terminal response: {e}"));
+        terminal += 1;
+        match kind {
+            Kind::Append => {
+                if resp.ok() {
+                    acked_appends[*s] += 1;
+                }
+            }
+            Kind::Expired => {
+                assert_eq!(
+                    resp.output,
+                    Err(ServeError::TimedOut),
+                    "pre-expired request must be shed as TimedOut"
+                );
+            }
+            Kind::Query => {
+                // chaos may fail it (permanent faults stay failed by
+                // design); what matters is the response is explicit
+                if let Err(e) = &resp.output {
+                    assert!(
+                        !matches!(e, ServeError::TimedOut),
+                        "live query must not time out, got {e}"
+                    );
+                }
+            }
+        }
+    }
+    assert_eq!(terminal, submitted, "every request gets exactly one terminal response");
+
+    // drain: admissions close, in-flight work is already done, teardown
+    // is clean
+    let metrics = Arc::clone(&srv.metrics);
+    assert!(srv.drain(Duration::from_secs(30)), "drain must complete cleanly");
+
+    // invariant: no leaked pins
+    assert_eq!(kv.pinned_sessions(), 0, "no session pin may leak through the chaos");
+
+    // invariant: exact byte accounting.  Resident sessions hold exactly
+    // PREFILL + acknowledged appends rows; evicted sessions hold none.
+    let mut expected_bytes = 0usize;
+    for s in 0..SESSIONS {
+        let name = session_name(s);
+        match kv.get(&name) {
+            Some(entry) => {
+                let rows = entry.prepared().n();
+                assert_eq!(
+                    rows,
+                    PREFILL + acked_appends[s],
+                    "session {name}: resident rows must equal prefill + acked appends"
+                );
+                expected_bytes += rows * row_bytes(D, D);
+            }
+            None => {
+                assert!(
+                    s >= SESSIONS - 4,
+                    "session {name} vanished without a cancel+evict"
+                );
+            }
+        }
+    }
+    assert_eq!(kv.used_bytes(), expected_bytes, "used_bytes must match resident rows exactly");
+
+    // invariant: the terminal tallies balance — every accepted request
+    // is exactly one of completed / append-acked / failed, and nothing
+    // was delivered into a dropped channel
+    let snap = metrics.snapshot();
+    assert_eq!(snap.accepted, submitted as u64);
+    assert_eq!(
+        snap.completed + snap.appends + snap.failed,
+        snap.accepted,
+        "terminal outcomes must balance accepted requests: {snap:?}"
+    );
+    assert_eq!(snap.delivery_lost, 0, "all receivers were held: {snap:?}");
+    assert_eq!(snap.inflight, 0);
+    assert!(snap.timed_out >= 4, "the pre-expired submits must be shed: {snap:?}");
+    assert!(snap.cancelled > 0, "the cancelled sessions had queued requests: {snap:?}");
+    // the seeded fault plan injects both kinds of faults at these rates
+    assert!(snap.failed > snap.timed_out + snap.cancelled, "chaos must fail some queries: {snap:?}");
+    assert!(snap.retries > 0, "transient faults must trigger retries: {snap:?}");
+}
+
+#[test]
+fn transient_faults_recover_through_server_retries() {
+    // every dispatch entry faults transiently exactly once: with retries
+    // enabled every query must still succeed, and the retry counter
+    // must show the loop earned those successes
+    let coord = CoordinatorConfig {
+        max_batch: 4,
+        max_total_batch: 64,
+        batch_window_us: 1_000,
+        workers: 2,
+        queue_depth: 64,
+        max_retries: 2,
+        retry_backoff_us: 10,
+        ..CoordinatorConfig::default()
+    };
+    let chaos = ChaosConfig {
+        seed: 7,
+        fault_rate: 1.0,
+        transient_ratio: 1.0,
+        transient_failures: 1,
+        ..ChaosConfig::default()
+    };
+    let kv = Arc::new(KvStore::new(SEQ, D, 4));
+    let mut rng = Rng::new(77);
+    kv.put(
+        "sess",
+        Mat::from_vec(SEQ, D, rng.normal_vec(SEQ * D)),
+        Mat::from_vec(SEQ, D, rng.normal_vec(SEQ * D)),
+    )
+    .unwrap();
+    let srv = Server::start(&coord, kv, chaos_factories(coord.workers, &chaos)).unwrap();
+    for i in 0..16 {
+        let resp = srv.call("sess", rng.normal_vec(D)).unwrap();
+        assert!(resp.ok(), "query {i} must recover through retry: {:?}", resp.output);
+    }
+    let snap = srv.metrics.snapshot();
+    assert_eq!(snap.completed, 16);
+    assert_eq!(snap.failed, 0, "transient faults must never surface with retries on");
+    assert!(snap.retries >= 16, "every query faulted once before recovering: {snap:?}");
+    srv.shutdown();
+}
+
+#[test]
+fn chaos_outputs_match_the_faultless_backend_bit_for_bit() {
+    // robustness must not buy accuracy drift: answers served through an
+    // active chaos wrapper (transient faults + retries) are bit-identical
+    // to the plain SimBackend's
+    let coord = CoordinatorConfig {
+        max_batch: 4,
+        max_total_batch: 64,
+        batch_window_us: 500,
+        workers: 1,
+        queue_depth: 64,
+        max_retries: 2,
+        retry_backoff_us: 10,
+        ..CoordinatorConfig::default()
+    };
+    let chaos = ChaosConfig {
+        seed: 13,
+        fault_rate: 1.0,
+        transient_ratio: 1.0,
+        transient_failures: 1,
+        ..ChaosConfig::default()
+    };
+    let mut rng = Rng::new(13);
+    let k = Mat::from_vec(SEQ, D, rng.normal_vec(SEQ * D));
+    let v = Mat::from_vec(SEQ, D, rng.normal_vec(SEQ * D));
+    let queries: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(D)).collect();
+
+    let serve = |factories: Vec<hfa::coordinator::BackendFactory>| -> Vec<Vec<f32>> {
+        let kv = Arc::new(KvStore::new(SEQ, D, 4));
+        kv.put("sess", k.clone(), v.clone()).unwrap();
+        let srv = Server::start(&coord, kv, factories).unwrap();
+        let outs = queries
+            .iter()
+            .map(|q| {
+                let r = srv.call("sess", q.clone()).unwrap();
+                r.output.unwrap_or_else(|e| panic!("query must serve: {e}"))
+            })
+            .collect();
+        srv.shutdown();
+        outs
+    };
+
+    let chaotic = serve(chaos_factories(1, &chaos));
+    let plain = serve(vec![SimBackend::factory(Arith::Hfa, accel())]);
+    assert_eq!(chaotic, plain, "fault injection must never perturb served outputs");
+}
+
+#[test]
+fn panic_heavy_chaos_fails_explicitly_once_the_respawn_budget_is_spent() {
+    // panic_rate 1.0: every dispatch kills its backend.  With a budget
+    // of one respawn, callers get explicit backend errors while the
+    // watchdog lasts and an explicit shutdown error after — never a hang.
+    let coord = CoordinatorConfig {
+        max_batch: 1,
+        max_total_batch: 64,
+        batch_window_us: 100,
+        workers: 1,
+        queue_depth: 16,
+        worker_respawn_budget: 1,
+        ..CoordinatorConfig::default()
+    };
+    let chaos = ChaosConfig { seed: 3, panic_rate: 1.0, ..ChaosConfig::default() };
+    let kv = Arc::new(KvStore::new(SEQ, D, 4));
+    let mut rng = Rng::new(3);
+    kv.put(
+        "sess",
+        Mat::from_vec(SEQ, D, rng.normal_vec(SEQ * D)),
+        Mat::from_vec(SEQ, D, rng.normal_vec(SEQ * D)),
+    )
+    .unwrap();
+    let srv = Server::start(&coord, kv.clone(), chaos_factories(1, &chaos)).unwrap();
+    for i in 0..2 {
+        let resp = srv.call("sess", rng.normal_vec(D)).unwrap();
+        assert!(!resp.ok(), "dispatch {i} must fail");
+        assert!(
+            resp.output.unwrap_err().to_string().contains("panicked"),
+            "dispatch {i}: caller must learn of the crash"
+        );
+    }
+    std::thread::sleep(Duration::from_millis(200)); // let the final unwind land
+    assert_eq!(srv.metrics.snapshot().worker_respawns, 1);
+    let resp = srv.call("sess", rng.normal_vec(D)).unwrap();
+    assert!(
+        matches!(resp.output, Err(ServeError::Shutdown(_))),
+        "past the budget the pool is gone: {:?}",
+        resp.output
+    );
+    assert_eq!(kv.pinned_sessions(), 0, "panic paths must not leak pins");
+    srv.shutdown();
+}

@@ -13,7 +13,7 @@ fn boot(workers: usize, queue_depth: usize, window_us: u64) -> Server {
     let accel = AcceleratorConfig {
         head_dim: 8, seq_len: 32, kv_blocks: 2, parallel_queries: 1, freq_mhz: 500.0,
     };
-    let coord = CoordinatorConfig { max_batch: 8, max_total_batch: 256, batch_window_us: window_us, workers, queue_depth };
+    let coord = CoordinatorConfig { max_batch: 8, max_total_batch: 256, batch_window_us: window_us, workers, queue_depth, ..CoordinatorConfig::default() };
     let kv = Arc::new(KvStore::new(32, 8, 8));
     let mut rng = Rng::new(77);
     kv.put("a", Mat::from_vec(32, 8, rng.normal_vec(256)),

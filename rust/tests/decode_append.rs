@@ -75,6 +75,7 @@ fn append_conversion_work_tracks_new_rows_only() {
         batch_window_us: 100,
         workers: 2,
         queue_depth: 64,
+        ..CoordinatorConfig::default()
     };
     let kv_store = Arc::new(KvStore::new(N, D, 2));
     let before_prefill = value_conversion_count();

@@ -58,6 +58,7 @@ fn super_batch_spanning_sessions_is_one_dispatch_and_bit_identical() {
         batch_window_us: 200_000, // generous: all submits land well inside
         workers: 1,
         queue_depth: 64,
+        ..CoordinatorConfig::default()
     };
     let kv = Arc::new(KvStore::new(SEQ, D, SESSIONS));
     let mut rng = Rng::new(41);
@@ -118,6 +119,7 @@ fn many_session_decode_soak_stays_exact_and_leaks_nothing() {
         batch_window_us: 3_000,
         workers: 3,
         queue_depth: 512,
+        ..CoordinatorConfig::default()
     };
     let kv = Arc::new(KvStore::new(SEQ, D, SESSIONS));
     let mut rng = Rng::new(2027);
@@ -208,6 +210,7 @@ fn append_barriers_order_within_their_session_only() {
         batch_window_us: 100_000,
         workers: 1,
         queue_depth: 64,
+        ..CoordinatorConfig::default()
     };
     let kv = Arc::new(KvStore::new(SEQ, D, 4));
     let mut rng = Rng::new(97);

@@ -34,6 +34,7 @@ fn value_to_lns_runs_once_per_session_not_per_batch() {
         batch_window_us: 100,
         workers: 2,
         queue_depth: 128,
+        ..CoordinatorConfig::default()
     };
 
     let kv = Arc::new(KvStore::new(N, D, 4));
