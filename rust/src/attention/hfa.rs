@@ -8,7 +8,10 @@
 //! * the **functional f64 path** with one switch per approximation
 //!   source, backing the Table III error-attribution study.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+// Always-std atomics (`counter`): `static` initializers need const `new`,
+// which loom's types lack, and this is a monotonic conversion counter,
+// not a synchronization protocol.
+use crate::sync::counter::{AtomicU64, Ordering};
 
 use crate::arith::bf16::Bf16;
 use crate::arith::fix::{quant_diff_q7, CLAMP_LO, FRAC_ONE, LOG2E_F32};
@@ -170,12 +173,16 @@ static VALUE_ROWS_CONVERTED: AtomicU64 = AtomicU64::new(0);
 /// How many value rows have been linear->log converted so far (across
 /// every path: prepared builds, traced runs, golden replays).
 pub fn value_conversion_count() -> u64 {
+    // ordering: Relaxed — monotonic counter read for reporting; no other
+    // memory is published through it.
     VALUE_ROWS_CONVERTED.load(Ordering::Relaxed)
 }
 
 /// Convert a value row (f32, BF16-valued) to `d+1` LNS lanes with the
 /// prepended constant-one lane (Eq. 12's `V = [1, v]`).
 pub fn value_to_lns(vrow: &[f32], hist: &mut Option<&mut MitchellHistogram>) -> LnsVec {
+    // ordering: Relaxed — counter increment only; totals are read after
+    // the converting calls return (program order suffices).
     VALUE_ROWS_CONVERTED.fetch_add(1, Ordering::Relaxed);
     let mut out = LnsVec::zeros(vrow.len() + 1);
     out.set(0, Lns { sign: 0, log: 0 }); // LNS of 1.0

@@ -35,7 +35,10 @@
 //! Masked calls hoist each query's mask row out of the inner loop (one
 //! slice per tile row, not one closure evaluation per `(query, key)`).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+// Always-std atomics (`counter`): `static` initializers need const `new`,
+// which loom's types lack, and this is a monotonic traffic counter, not a
+// synchronization protocol.
+use crate::sync::counter::{AtomicU64, Ordering};
 
 use crate::arith::lns::LnsMat;
 use crate::runtime::pool::{fan_out, fan_out_chunked};
@@ -73,6 +76,8 @@ static KV_STREAMED_BYTES: AtomicU64 = AtomicU64::new(0);
 /// Total KV bytes streamed through the tiled kernel so far
 /// (process-wide, all calls).
 pub fn kv_stream_bytes() -> u64 {
+    // ordering: Relaxed — monotonic counter read for reporting; no other
+    // memory is published through it.
     KV_STREAMED_BYTES.load(Ordering::Relaxed)
 }
 
@@ -86,6 +91,8 @@ pub fn row_stream_bytes(d: usize, dv: usize) -> u64 {
 
 #[inline]
 fn record_stream(bytes: u64) {
+    // ordering: Relaxed — counter increment only; totals are read after
+    // the streaming calls return (program order suffices).
     KV_STREAMED_BYTES.fetch_add(bytes, Ordering::Relaxed);
 }
 

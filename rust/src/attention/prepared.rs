@@ -40,8 +40,11 @@
 //! thread that computed them (pinned by `rust/tests/prepared_exec.rs`
 //! and the golden vectors in `rust/tests/golden_replay.rs`).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+// Always-std atomics (`counter`): `static` initializers need const `new`,
+// which loom's types lack, and this is a monotonic traffic counter, not a
+// synchronization protocol.
+use crate::sync::counter::{AtomicU64, Ordering};
+use crate::sync::Arc;
 
 use crate::arith::lns::LnsMat;
 use crate::tensor::Mat;
@@ -59,11 +62,15 @@ static KV_COPIED_BYTES: AtomicU64 = AtomicU64::new(0);
 
 /// Total prepared-KV bytes copied so far (process-wide, all sessions).
 pub fn kv_copy_bytes() -> u64 {
+    // ordering: Relaxed — monotonic counter read for reporting; no other
+    // memory is published through it.
     KV_COPIED_BYTES.load(Ordering::Relaxed)
 }
 
 #[inline]
 fn record_copy(bytes: usize) {
+    // ordering: Relaxed — counter increment only; totals are read after
+    // the traffic-generating calls return (program order suffices).
     KV_COPIED_BYTES.fetch_add(bytes as u64, Ordering::Relaxed);
 }
 

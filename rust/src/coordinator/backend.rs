@@ -7,7 +7,7 @@
 //! dispatch.  [`Backend::compute`] is the single-session convenience
 //! wrapper over it.
 
-use std::sync::Arc;
+use crate::sync::Arc;
 
 use anyhow::Result;
 
@@ -59,8 +59,13 @@ pub trait Backend {
     /// Single-session convenience wrapper over [`Backend::compute_plan`].
     fn compute(&mut self, kv: &KvEntry, q: &Mat) -> Result<Mat> {
         let mut outs = self.compute_plan(&[(kv, q)])?;
-        anyhow::ensure!(outs.len() == 1, "backend returned {} outputs for 1 entry", outs.len());
-        Ok(outs.pop().expect("checked length"))
+        let n = outs.len();
+        // pop-then-check: a non-conforming backend becomes an error,
+        // never a panic on a serve path
+        match outs.pop() {
+            Some(out) if n == 1 => Ok(out),
+            _ => anyhow::bail!("backend returned {n} outputs for 1 entry"),
+        }
     }
     fn name(&self) -> String;
 }

@@ -244,9 +244,9 @@ mod tests {
     use super::*;
     use crate::coordinator::request::Payload;
     use crate::Mat;
-    use std::sync::atomic::AtomicBool;
-    use std::sync::mpsc::channel;
-    use std::sync::Arc;
+    use crate::sync::atomic::AtomicBool;
+    use crate::sync::mpsc::channel;
+    use crate::sync::Arc;
     use std::time::Instant;
 
     fn req(id: u64, session: &str) -> AttentionRequest {
@@ -487,7 +487,7 @@ mod tests {
         b.push(req(1, "a"));
         let first = b.next_deadline().expect("deadline after first push");
         // a later session must not move the earliest deadline forward
-        std::thread::sleep(Duration::from_millis(5));
+        crate::sync::thread::sleep(Duration::from_millis(5));
         b.push(req(2, "b"));
         let still = b.next_deadline().expect("deadline with two groups");
         assert_eq!(still, first, "earliest deadline must stay the oldest group's");

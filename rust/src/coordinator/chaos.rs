@@ -140,7 +140,7 @@ impl Backend for ChaosBackend {
 
     fn compute_plan(&mut self, plan: &[(&KvEntry, &Mat)]) -> Result<Vec<Mat>> {
         if !self.cfg.latency.is_zero() {
-            std::thread::sleep(self.cfg.latency);
+            crate::sync::thread::sleep(self.cfg.latency);
         }
         for &(entry, q) in plan {
             let key = self.entry_key(entry, q);

@@ -39,7 +39,7 @@
 //! prefill length up to it.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use crate::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
@@ -120,9 +120,13 @@ impl Inner {
                 .map(|(name, _)| name.clone());
             match victim {
                 Some(name) => {
-                    let gone = self.entries.remove(&name).expect("victim resident");
-                    self.used_bytes -= gone.bytes;
-                    self.evictions += 1;
+                    // the victim was selected from the live map above,
+                    // but tolerate a phantom miss instead of panicking
+                    // a serve path holding the store lock
+                    if let Some(gone) = self.entries.remove(&name) {
+                        self.used_bytes -= gone.bytes;
+                        self.evictions += 1;
+                    }
                 }
                 None => bail!(
                     "KV byte budget exhausted admitting {session:?} ({new_bytes} B): \
@@ -222,7 +226,7 @@ impl KvStore {
         }
         let entry = KvEntry::new(k.round_bf16(), v.round_bf16());
         let bytes = entry.prepared.resident_bytes();
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         g.admit(session, bytes)?;
         g.install(session, entry, bytes);
         Ok(())
@@ -264,7 +268,7 @@ impl KvStore {
             // stamp is refreshed only on the successful swap-in, so a
             // rejected (e.g. over-capacity) append does not count as use
             let base = {
-                let g = self.inner.lock().unwrap();
+                let g = self.inner.lock();
                 match g.entries.get(session) {
                     Some(slot) => slot.entry.prepared.clone(),
                     None => bail!("unknown session {session:?}"),
@@ -282,7 +286,7 @@ impl KvStore {
             // swap in, unless the session was replaced meanwhile (a
             // concurrent put/append won the race) — then retry on the
             // new base so no write is ever silently dropped
-            let mut g = self.inner.lock().unwrap();
+            let mut g = self.inner.lock();
             match g.entries.get(session) {
                 Some(slot) if Arc::ptr_eq(&slot.entry.prepared, &base) => {}
                 Some(_) => continue,
@@ -296,7 +300,7 @@ impl KvStore {
 
     /// Fetch a session, refreshing its LRU stamp (O(1) under the lock).
     pub fn get(&self, session: &str) -> Option<KvEntry> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         let stamp = g.next_tick();
         let slot = g.entries.get_mut(session)?;
         slot.last_used = stamp;
@@ -307,7 +311,7 @@ impl KvStore {
     /// and excludes it from eviction until the matching [`KvStore::unpin`].
     /// Returns `false` (no pin taken) when the session is not resident.
     pub fn pin(&self, session: &str) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         let stamp = g.next_tick();
         match g.entries.get_mut(session) {
             Some(slot) => {
@@ -322,7 +326,7 @@ impl KvStore {
     /// Release one in-flight pin (the session becomes evictable again
     /// once its pin count reaches zero).  A no-op for unknown sessions.
     pub fn unpin(&self, session: &str) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         if let Some(slot) = g.entries.get_mut(session) {
             slot.pins = slot.pins.saturating_sub(1);
         }
@@ -338,7 +342,7 @@ impl KvStore {
     /// eviction should treat the session name as dead.)  Returns the
     /// freed bytes, or `None` when the session was not resident.
     pub fn evict(&self, session: &str) -> Option<usize> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         let slot = g.entries.remove(session)?;
         g.used_bytes -= slot.bytes;
         g.evictions += 1;
@@ -347,37 +351,37 @@ impl KvStore {
 
     /// Is the session resident?  (No LRU refresh — diagnostics only.)
     pub fn contains(&self, session: &str) -> bool {
-        self.inner.lock().unwrap().entries.contains_key(session)
+        self.inner.lock().entries.contains_key(session)
     }
 
     /// Byte charge of one resident session (diagnostics only).
     pub fn session_resident_bytes(&self, session: &str) -> Option<usize> {
-        self.inner.lock().unwrap().entries.get(session).map(|s| s.bytes)
+        self.inner.lock().entries.get(session).map(|s| s.bytes)
     }
 
     pub fn resident(&self) -> usize {
-        self.inner.lock().unwrap().entries.len()
+        self.inner.lock().entries.len()
     }
 
     /// Sessions currently holding at least one in-flight pin
     /// (diagnostics: a steady-state serving loop must return this to 0 —
     /// a leak here makes sessions permanently unevictable).
     pub fn pinned_sessions(&self) -> usize {
-        self.inner.lock().unwrap().entries.values().filter(|s| s.pins > 0).count()
+        self.inner.lock().entries.values().filter(|s| s.pins > 0).count()
     }
 
     /// Total byte charge of all resident sessions.
     pub fn used_bytes(&self) -> usize {
-        self.inner.lock().unwrap().used_bytes
+        self.inner.lock().used_bytes
     }
 
     /// The eviction budget, in prepared-plane bytes.
     pub fn budget_bytes(&self) -> usize {
-        self.inner.lock().unwrap().budget_bytes
+        self.inner.lock().budget_bytes
     }
 
     pub fn evictions(&self) -> u64 {
-        self.inner.lock().unwrap().evictions
+        self.inner.lock().evictions
     }
 }
 
@@ -648,7 +652,7 @@ mod tests {
         let mut handles = Vec::new();
         for t in 0..6usize {
             let store = store.clone();
-            handles.push(std::thread::spawn(move || {
+            handles.push(crate::sync::thread::spawn(move || {
                 let mut hits = 0u64;
                 for i in 0..500usize {
                     let s = (t + i) % 5;

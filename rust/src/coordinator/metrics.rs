@@ -11,8 +11,8 @@
 //! observation (running sum/count); percentiles are reservoir estimates
 //! that are exact until the reservoir first fills.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::Mutex;
 
 use super::request::ServeError;
 
@@ -68,7 +68,6 @@ impl Reservoir {
     }
 }
 
-#[derive(Default)]
 pub struct Metrics {
     pub accepted: AtomicU64,
     pub rejected: AtomicU64,
@@ -140,18 +139,52 @@ pub struct Snapshot {
     pub mean_us: f64,
 }
 
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics::new()
+    }
+}
+
 impl Metrics {
+    /// Explicit construction (not `derive(Default)`): the facade's loom
+    /// atomics do not implement `Default`, and spelling out every field
+    /// keeps the struct constructible under `--cfg loom`.
     pub fn new() -> Metrics {
-        Metrics::default()
+        let z = AtomicU64::new;
+        Metrics {
+            accepted: z(0),
+            rejected: z(0),
+            completed: z(0),
+            failed: z(0),
+            appends: z(0),
+            batches: z(0),
+            batched_requests: z(0),
+            batched_sessions: z(0),
+            inflight: z(0),
+            shed: z(0),
+            timed_out: z(0),
+            cancelled: z(0),
+            overloaded: z(0),
+            backend_failed: z(0),
+            kv_admission_failed: z(0),
+            shutdown_failed: z(0),
+            retries: z(0),
+            worker_respawns: z(0),
+            delivery_lost: z(0),
+            latencies_us: Mutex::new(Reservoir::default()),
+        }
     }
 
     pub fn observe_latency(&self, us: f64) {
-        self.latencies_us.lock().unwrap().observe(us);
+        self.latencies_us.lock().observe(us);
     }
 
     /// Count one failed terminal response: the aggregate `failed` plus
     /// the per-outcome tally for the error's variant.
     pub fn record_failure(&self, err: &ServeError) {
+        // ordering: Relaxed — statistical counters; readers that need a
+        // consistent view (tests, snapshots after shutdown) get their
+        // happens-before from joining the serving threads first
         self.failed.fetch_add(1, Ordering::Relaxed);
         let tally = match err {
             ServeError::TimedOut => &self.timed_out,
@@ -161,21 +194,24 @@ impl Metrics {
             ServeError::Shutdown(_) => &self.shutdown_failed,
             ServeError::KvAdmission(_) => &self.kv_admission_failed,
         };
+        // ordering: Relaxed — same statistical-counter rationale as above
         tally.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Latency samples currently resident (bounded by the reservoir cap).
     pub fn latency_samples(&self) -> usize {
-        self.latencies_us.lock().unwrap().samples.len()
+        self.latencies_us.lock().samples.len()
     }
 
     pub fn snapshot(&self) -> Snapshot {
         // bounded copy under the lock; the sort happens outside it
         let (mut lat, seen, sum) = {
-            let g = self.latencies_us.lock().unwrap();
+            let g = self.latencies_us.lock();
             (g.samples.clone(), g.seen, g.sum)
         };
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: latencies are finite by construction, but a NaN that
+        // ever slipped in must not panic the metrics endpoint
+        lat.sort_by(f64::total_cmp);
         // nearest-rank (ceil) percentile: the q-quantile is the smallest
         // sample with at least ceil(q * n) samples <= it.  The previous
         // `((n - 1) * q) as usize` truncated the rank, biasing tail
@@ -191,35 +227,40 @@ impl Metrics {
                 lat[rank.clamp(1, lat.len()) - 1]
             }
         };
-        let batches = self.batches.load(Ordering::Relaxed);
+        // ordering: Relaxed — a snapshot is an advisory point-in-time
+        // read of independent statistical counters, not a synchronization
+        // point; callers needing exact totals join the serving threads
+        // first (shutdown/drain), which supplies the happens-before edge
+        let ld = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        let batches = ld(&self.batches);
         Snapshot {
-            accepted: self.accepted.load(Ordering::Relaxed),
-            rejected: self.rejected.load(Ordering::Relaxed),
-            completed: self.completed.load(Ordering::Relaxed),
-            failed: self.failed.load(Ordering::Relaxed),
-            appends: self.appends.load(Ordering::Relaxed),
+            accepted: ld(&self.accepted),
+            rejected: ld(&self.rejected),
+            completed: ld(&self.completed),
+            failed: ld(&self.failed),
+            appends: ld(&self.appends),
             batches,
             mean_batch: if batches == 0 {
                 0.0
             } else {
-                self.batched_requests.load(Ordering::Relaxed) as f64 / batches as f64
+                ld(&self.batched_requests) as f64 / batches as f64
             },
             mean_sessions: if batches == 0 {
                 0.0
             } else {
-                self.batched_sessions.load(Ordering::Relaxed) as f64 / batches as f64
+                ld(&self.batched_sessions) as f64 / batches as f64
             },
-            inflight: self.inflight.load(Ordering::Relaxed),
-            shed: self.shed.load(Ordering::Relaxed),
-            timed_out: self.timed_out.load(Ordering::Relaxed),
-            cancelled: self.cancelled.load(Ordering::Relaxed),
-            overloaded: self.overloaded.load(Ordering::Relaxed),
-            backend_failed: self.backend_failed.load(Ordering::Relaxed),
-            kv_admission_failed: self.kv_admission_failed.load(Ordering::Relaxed),
-            shutdown_failed: self.shutdown_failed.load(Ordering::Relaxed),
-            retries: self.retries.load(Ordering::Relaxed),
-            worker_respawns: self.worker_respawns.load(Ordering::Relaxed),
-            delivery_lost: self.delivery_lost.load(Ordering::Relaxed),
+            inflight: ld(&self.inflight),
+            shed: ld(&self.shed),
+            timed_out: ld(&self.timed_out),
+            cancelled: ld(&self.cancelled),
+            overloaded: ld(&self.overloaded),
+            backend_failed: ld(&self.backend_failed),
+            kv_admission_failed: ld(&self.kv_admission_failed),
+            shutdown_failed: ld(&self.shutdown_failed),
+            retries: ld(&self.retries),
+            worker_respawns: ld(&self.worker_respawns),
+            delivery_lost: ld(&self.delivery_lost),
             p50_us: pick(0.5),
             p99_us: pick(0.99),
             mean_us: if seen == 0 { 0.0 } else { sum / seen as f64 },

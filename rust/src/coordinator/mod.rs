@@ -41,12 +41,24 @@
 //! budget, and [`Server::drain`] stops admissions and serves what is in
 //! flight until a deadline.  The [`chaos`] module provides a seeded
 //! fault-injection wrapper used by the soak tests to prove all of it.
+//!
+//! ## Verification
+//!
+//! The hand-rolled protocols (dispatch queue, cancellation registry,
+//! pin guard, admission gate) live in [`protocol`], built on the
+//! [`crate::sync`] facade so the loom suite (`tests/loom_models.rs`,
+//! `RUSTFLAGS="--cfg loom"`) model-checks the exact shipped
+//! implementations; `cargo run -p xtask -- lint` enforces the facade,
+//! the no-unwrap rule on serve paths, per-site atomic-ordering comments,
+//! and the KvStore → Metrics → queue lock order (see
+//! `rust/EXPERIMENTS.md` §Verification).
 
 pub mod batcher;
 pub mod backend;
 pub mod chaos;
 pub mod kvstore;
 pub mod metrics;
+pub mod protocol;
 pub mod request;
 pub mod server;
 

@@ -1,0 +1,369 @@
+//! The coordinator's hand-rolled concurrency protocols, extracted into
+//! one loom-checkable module: the bounded dispatch queue
+//! ([`BatchQueue`]), the session cancellation registry
+//! ([`CancelRegistry`]), the panic-safe pin guard ([`PinGuard`]), and
+//! the in-flight admission gate ([`try_admit`]/[`release`]).
+//!
+//! Everything here is built exclusively from the [`crate::sync`] facade,
+//! so under `RUSTFLAGS="--cfg loom"` the loom suite
+//! (`rust/tests/loom_models.rs`) model-checks these exact
+//! implementations — not simplified replicas — across every
+//! bounded-preemption interleaving.
+//!
+//! # Lock order
+//!
+//! When more than one of the coordinator's locks must be held, they are
+//! acquired in this fixed order (enforced textually by
+//! `cargo run -p xtask -- lint`):
+//!
+//! 1. `KvStore` (the store's slot-table mutex, via `pin`/`unpin`/`get`/
+//!    `put`/`append`/`evict`),
+//! 2. `Metrics` (the latency reservoir mutex, via `observe_latency`/
+//!    `snapshot`),
+//! 3. dispatch/pool queues ([`BatchQueue`], the worker pool's task
+//!    queue).
+//!
+//! In practice no path in the crate nests them at all — each acquisition
+//! is self-contained — and the linter keeps it that way: acquiring a
+//! lower-numbered lock while holding a higher-numbered one is the
+//! reversal that would let a future refactor deadlock against the
+//! existing order.
+
+use std::collections::{HashMap, VecDeque};
+use std::time::{Duration, Instant};
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{Condvar, Mutex};
+
+use super::kvstore::KvStore;
+
+/// Bounded dispatch queue between a producer (the batcher) and a fixed
+/// pool of consumers (the workers).
+///
+/// Replaces the former `Arc<Mutex<Receiver<Batch>>>`, whose lock was
+/// held **across the blocking `recv()`**: idle workers serialized on the
+/// mutex (one waiting inside `recv`, the rest queued on the lock) and
+/// shutdown could only wake them strictly one at a time.  Here the lock
+/// guards only the deque — waiting happens on the condvar with the lock
+/// released, so any number of workers park and wake independently.
+///
+/// Generic over the item so the loom suite can model-check the protocol
+/// on small payloads; the server instantiates `BatchQueue<Batch>`.
+pub struct BatchQueue<T> {
+    cap: usize,
+    inner: Mutex<BatchQueueInner<T>>,
+    /// Wakes workers: work available or queue closed.
+    available: Condvar,
+    /// Wakes the batcher: space freed or a worker died.
+    space: Condvar,
+}
+
+struct BatchQueueInner<T> {
+    queue: VecDeque<T>,
+    /// The producer is still feeding the queue.
+    open: bool,
+    /// Live worker threads (kept honest by the server's `WorkerExit`
+    /// guard, panic-safe).
+    workers: usize,
+}
+
+impl<T> BatchQueue<T> {
+    pub fn new(cap: usize, workers: usize) -> BatchQueue<T> {
+        BatchQueue {
+            cap: cap.max(1),
+            inner: Mutex::new(BatchQueueInner {
+                queue: VecDeque::new(),
+                open: true,
+                workers,
+            }),
+            available: Condvar::new(),
+            space: Condvar::new(),
+        }
+    }
+
+    /// Block until there is room, then enqueue.  `Err(item)` when every
+    /// worker is gone — the dispatch would hang its callers forever.
+    pub fn push(&self, b: T) -> Result<(), T> {
+        let mut g = self.inner.lock();
+        while g.queue.len() >= self.cap && g.workers > 0 {
+            g = self.space.wait(g);
+        }
+        if g.workers == 0 {
+            return Err(b);
+        }
+        g.queue.push_back(b);
+        drop(g);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    /// Consumer side: block for the next item; `None` once the queue is
+    /// closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock();
+        loop {
+            if let Some(b) = g.queue.pop_front() {
+                drop(g);
+                self.space.notify_one();
+                return Some(b);
+            }
+            if !g.open {
+                return None;
+            }
+            g = self.available.wait(g);
+        }
+    }
+
+    /// Producer exit: no more items will arrive; wake every idle worker.
+    pub fn close(&self) {
+        let mut g = self.inner.lock();
+        g.open = false;
+        drop(g);
+        self.available.notify_all();
+    }
+
+    /// One worker is gone (normal exit, failed init, or panic).  The
+    /// last worker out hands back whatever is still queued so the caller
+    /// can fail those requests explicitly.
+    pub fn worker_exited(&self) -> Vec<T> {
+        let mut g = self.inner.lock();
+        g.workers = g.workers.saturating_sub(1);
+        let residue: Vec<T> =
+            if g.workers == 0 { g.queue.drain(..).collect() } else { Vec::new() };
+        drop(g);
+        self.space.notify_all();
+        residue
+    }
+}
+
+/// Session-level cancellation marks: session -> instant of the cancel.
+/// A request is cancelled iff its session was cancelled *at or after*
+/// its arrival, so traffic submitted after a cancel is served normally —
+/// the mark never has to be removed to reopen the session.
+#[derive(Default)]
+pub struct CancelRegistry {
+    inner: Mutex<HashMap<String, Instant>>,
+}
+
+impl CancelRegistry {
+    /// Mark `session` cancelled as of now.
+    pub fn cancel(&self, session: &str) {
+        self.cancel_at(session, Instant::now());
+    }
+
+    /// Mark `session` cancelled as of `at` (split out so unit and loom
+    /// tests can pin timestamps instead of racing the clock).
+    pub fn cancel_at(&self, session: &str, at: Instant) {
+        let mut g = self.inner.lock();
+        if g.len() >= 1024 {
+            // bound the registry: marks older than any plausible queue
+            // residency are dead weight (queued requests outlive them
+            // only past their own deadline, where TimedOut sheds them)
+            g.retain(|_, t| at.duration_since(*t) < Duration::from_secs(30));
+        }
+        g.insert(session.to_string(), at);
+    }
+
+    /// Was `session` cancelled at or after `arrived`?  Inclusive on
+    /// purpose: a cancel and a submit carrying the *same* timestamp must
+    /// shed the request — the cancel covers everything already in the
+    /// pipeline at its instant.
+    pub fn cancelled_since(&self, session: &str, arrived: Instant) -> bool {
+        self.inner.lock().get(session).is_some_and(|t| *t >= arrived)
+    }
+}
+
+/// Hard admission gate: atomically claim one slot of an at-most-`max`
+/// in-flight budget tracked by `gauge`.  Increment-then-check: the slot
+/// is claimed *before* the bound is tested and rolled back on rejection,
+/// so two racing admitters can never both slip under the cap the way a
+/// check-then-increment gate lets them (each reads `max - 1`, both
+/// admit, gauge lands at `max + 1`).  Returns whether the caller owns a
+/// slot; a `true` must eventually be paired with exactly one
+/// [`release`].
+pub fn try_admit(gauge: &AtomicU64, max: u64) -> bool {
+    // ordering: SeqCst — the gauge synchronizes the admission gate with
+    // drain()'s `draining`-flag store and zero-poll (one total order
+    // across both), and the claim must be visible before the request is
+    // handed over (a served request's decrement racing ahead of this
+    // increment would underflow the gauge and wedge the gate)
+    let prev = gauge.fetch_add(1, Ordering::SeqCst);
+    if prev >= max {
+        // ordering: SeqCst — pairs with the claim above; the rollback
+        // must join the same total order the drain zero-poll reads
+        gauge.fetch_sub(1, Ordering::SeqCst);
+        return false;
+    }
+    true
+}
+
+/// Release one admission slot claimed by a successful [`try_admit`]
+/// (called at terminal response delivery, or on an ingress hand-over
+/// failure).
+pub fn release(gauge: &AtomicU64) {
+    // ordering: SeqCst — same total order as try_admit's claim, so
+    // drain()'s `inflight == 0` poll cannot observe zero while a claimed
+    // request is still unserved
+    gauge.fetch_sub(1, Ordering::SeqCst);
+}
+
+/// Releases one session group's not-yet-released pins on drop, so a
+/// panic anywhere in the serve path (e.g. a crashing backend) cannot
+/// leak pins — a leaked pin would make the session permanently
+/// unevictable under the byte budget.  One guard per session group of a
+/// super-batch; the happy path releases each pin explicitly
+/// ([`PinGuard::release_one`]) *before* the response is sent, so by the
+/// time a caller observes its response the session is evictable again.
+pub struct PinGuard<'a> {
+    kv: &'a KvStore,
+    session: String,
+    remaining: usize,
+}
+
+impl<'a> PinGuard<'a> {
+    /// Guard `remaining` pins of `session` held in `kv`.
+    pub fn new(kv: &'a KvStore, session: String, remaining: usize) -> PinGuard<'a> {
+        PinGuard { kv, session, remaining }
+    }
+
+    /// Release one guarded pin now (the happy path, before the reply is
+    /// sent); the guard's drop covers whatever was not released.
+    pub fn release_one(&mut self) {
+        if self.remaining > 0 {
+            self.remaining -= 1;
+            self.kv.unpin(&self.session);
+        }
+    }
+}
+
+impl Drop for PinGuard<'_> {
+    fn drop(&mut self) {
+        for _ in 0..self.remaining {
+            self.kv.unpin(&self.session);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sync::thread;
+    use crate::sync::Arc;
+    use crate::Mat;
+
+    #[test]
+    fn batch_queue_roundtrip_and_close() {
+        let q: BatchQueue<u32> = BatchQueue::new(2, 1);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        q.close();
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn push_fails_once_all_workers_exited() {
+        let q: BatchQueue<u32> = BatchQueue::new(4, 1);
+        q.push(7).unwrap();
+        let residue = q.worker_exited();
+        assert_eq!(residue, vec![7], "last worker out hands the queue back");
+        assert_eq!(q.push(8), Err(8), "push to a dead pool is refused");
+    }
+
+    #[test]
+    fn cancel_with_equal_timestamp_sheds_the_request() {
+        // cancel-then-immediate-resubmit where both carry the *same*
+        // Instant: the inclusive `>=` must shed the in-pipeline request
+        // (the cancel covers its instant), while anything arriving even
+        // one tick later is served normally
+        let reg = CancelRegistry::default();
+        let t = Instant::now();
+        reg.cancel_at("s", t);
+        assert!(reg.cancelled_since("s", t), "equal timestamps: cancelled");
+        assert!(
+            !reg.cancelled_since("s", t + Duration::from_nanos(1)),
+            "a later resubmit reopens the session with no unmark needed"
+        );
+    }
+
+    #[test]
+    fn cancel_of_unknown_session_is_inert() {
+        let reg = CancelRegistry::default();
+        reg.cancel("ghost");
+        assert!(!reg.cancelled_since("other", Instant::now() - Duration::from_secs(1)));
+        // re-cancelling and re-checking the same unknown-to-the-server
+        // session stays consistent: only "ghost" itself is marked
+        assert!(reg.cancelled_since("ghost", Instant::now() - Duration::from_secs(1)));
+    }
+
+    #[test]
+    fn cancel_registry_sweeps_stale_marks_at_capacity() {
+        let reg = CancelRegistry::default();
+        let old = Instant::now() - Duration::from_secs(60);
+        for i in 0..1024 {
+            reg.cancel_at(&format!("old-{i}"), old);
+        }
+        // the 1025th insert triggers the retention sweep; stale marks go
+        reg.cancel("fresh");
+        assert!(reg.cancelled_since("fresh", old));
+        assert!(!reg.cancelled_since("old-0", old), "stale mark swept");
+    }
+
+    #[test]
+    fn admission_gate_claims_and_rolls_back() {
+        let gauge = AtomicU64::new(0);
+        assert!(try_admit(&gauge, 2));
+        assert!(try_admit(&gauge, 2));
+        assert!(!try_admit(&gauge, 2), "cap reached");
+        // ordering: SeqCst — test-side read of the gauge's total order
+        assert_eq!(gauge.load(Ordering::SeqCst), 2, "rejection rolled back its claim");
+        release(&gauge);
+        assert!(try_admit(&gauge, 2), "released slot is reclaimable");
+    }
+
+    #[test]
+    fn admission_gate_is_a_hard_cap_under_contention() {
+        let gauge = Arc::new(AtomicU64::new(0));
+        let peak = Arc::new(AtomicU64::new(0));
+        let hs: Vec<_> = (0..8)
+            .map(|_| {
+                let gauge = gauge.clone();
+                let peak = peak.clone();
+                thread::spawn(move || {
+                    for _ in 0..200 {
+                        if try_admit(&gauge, 3) {
+                            // ordering: SeqCst — the admitted count and
+                            // its peak tracking must observe the same
+                            // total order as the gate itself
+                            let now = gauge.load(Ordering::SeqCst);
+                            peak.fetch_max(now, Ordering::SeqCst);
+                            release(&gauge);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        // ordering: SeqCst — post-join reads of the gate's total order
+        assert_eq!(gauge.load(Ordering::SeqCst), 0, "every claim released");
+        assert!(peak.load(Ordering::SeqCst) <= 3, "cap never overrun");
+    }
+
+    #[test]
+    fn pin_guard_releases_remainder_on_drop() {
+        let kv = KvStore::new(4, 2, 4);
+        kv.put("s", Mat::zeros(4, 2), Mat::zeros(4, 2)).unwrap();
+        assert!(kv.pin("s"));
+        assert!(kv.pin("s"));
+        {
+            let mut g = PinGuard::new(&kv, "s".into(), 2);
+            g.release_one();
+            assert_eq!(kv.pinned_sessions(), 1, "one pin still guarded");
+            // guard dropped here with one pin unreleased (panic analogue)
+        }
+        assert_eq!(kv.pinned_sessions(), 0, "drop released the remainder");
+    }
+}

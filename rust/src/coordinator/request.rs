@@ -1,9 +1,9 @@
 //! Request/response types flowing through the coordinator.
 
 use std::fmt;
-use std::sync::atomic::AtomicBool;
-use std::sync::mpsc::Sender;
-use std::sync::Arc;
+use crate::sync::atomic::AtomicBool;
+use crate::sync::mpsc::Sender;
+use crate::sync::Arc;
 use std::time::Instant;
 
 use crate::Mat;

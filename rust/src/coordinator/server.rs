@@ -59,20 +59,21 @@
 //! stay bit-identical to the unfused, fault-free path.
 
 use std::cell::Cell;
-use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, RecvError, RecvTimeoutError, Sender, SyncSender, TryRecvError, TrySendError};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
+
+use crate::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use crate::sync::mpsc::{channel, sync_channel, Receiver, RecvError, RecvTimeoutError, Sender, SyncSender, TryRecvError, TrySendError};
+use crate::sync::thread::JoinHandle;
+use crate::sync::{thread, Arc, Mutex};
 
 use super::backend::{Backend, BackendFactory, TransientFault};
 use super::batcher::{Batch, Batcher};
 use super::kvstore::{KvEntry, KvStore};
 use super::metrics::Metrics;
+use super::protocol::{self, BatchQueue, CancelRegistry, PinGuard};
 use super::request::{AttentionRequest, AttentionResponse, Payload, ServeError};
 use crate::config::CoordinatorConfig;
 use crate::Mat;
@@ -105,33 +106,6 @@ struct ServeCtx {
     max_retries: u32,
     /// Base backoff between retries (doubles per attempt).
     retry_backoff: Duration,
-}
-
-/// Session-level cancellation marks: session -> instant of the cancel.
-/// A request is cancelled iff its session was cancelled *at or after*
-/// its arrival, so traffic submitted after a cancel is served normally —
-/// the mark never has to be removed to reopen the session.
-#[derive(Default)]
-struct CancelRegistry {
-    inner: Mutex<HashMap<String, Instant>>,
-}
-
-impl CancelRegistry {
-    fn cancel(&self, session: &str) {
-        let mut g = self.inner.lock().unwrap();
-        let now = Instant::now();
-        if g.len() >= 1024 {
-            // bound the registry: marks older than any plausible queue
-            // residency are dead weight (queued requests outlive them
-            // only past their own deadline, where TimedOut sheds them)
-            g.retain(|_, t| now.duration_since(*t) < Duration::from_secs(30));
-        }
-        g.insert(session.to_string(), now);
-    }
-
-    fn cancelled_since(&self, session: &str, arrived: Instant) -> bool {
-        self.inner.lock().unwrap().get(session).is_some_and(|t| *t >= arrived)
-    }
 }
 
 /// Reply handle for a submitted request, wrapping the completion
@@ -178,6 +152,10 @@ impl ResponseHandle {
 impl Drop for ResponseHandle {
     fn drop(&mut self) {
         if !self.done.get() {
+            // ordering: Relaxed — a pure advisory flag with no data
+            // published behind it; the serving loop's shed points only
+            // need to see it eventually, and each re-checks right before
+            // dispatch
             self.cancelled.store(true, Ordering::Relaxed);
         }
     }
@@ -239,7 +217,7 @@ impl Server {
         let bq = queue.clone();
         let ingress_rx: Arc<Mutex<Option<Receiver<Msg>>>> = Arc::new(Mutex::new(None));
         let rx_back = ingress_rx.clone();
-        let batcher_handle = std::thread::Builder::new().name("hfa-batcher".into()).spawn(
+        let batcher_handle = thread::Builder::new().name("hfa-batcher".into()).spawn(
             move || batcher_loop(in_rx, bq, max_batch, max_total, window, bctx, rx_back),
         )?;
 
@@ -252,7 +230,7 @@ impl Server {
             let queue = queue.clone();
             let wctx = ctx.clone();
             let init_tx = init_tx.clone();
-            let h = std::thread::Builder::new().name(format!("hfa-worker-{i}")).spawn(
+            let h = thread::Builder::new().name(format!("hfa-worker-{i}")).spawn(
                 move || {
                     // releases this worker's queue slot on any exit —
                     // return, failed init, or panic mid-batch — and the
@@ -401,14 +379,26 @@ impl Server {
         payload: Payload,
         deadline: Instant,
     ) -> Result<(u64, ResponseHandle)> {
+        // ordering: SeqCst — pairs with drain()'s SeqCst store: once the
+        // drain flag is set, no submit may slip a claim past the zero
+        // poll (flag store, gauge claims and the poll share one total
+        // order)
         if self.ctx.draining.load(Ordering::SeqCst) {
+            // ordering: Relaxed — statistical counter, no data behind it
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
             return Err(anyhow::Error::new(ServeError::Shutdown(DRAINING_ERROR.into())));
         }
         // admission gate: bound the requests in flight (accepted but not
         // yet answered) — past the cap, shedding at submit is cheaper
-        // and more honest than queueing work that will time out anyway
-        if self.metrics.inflight.load(Ordering::Relaxed) >= self.max_pending as u64 {
+        // and more honest than queueing work that will time out anyway.
+        // try_admit claims the slot *before* testing the bound (rolling
+        // back on rejection), so racing submitters cannot both read
+        // `max - 1` and overshoot the cap the way the former
+        // check-then-increment gate could; the claim also lands before
+        // the request is handed over, so a served request's decrement
+        // can never race ahead of it and underflow the gauge
+        if !protocol::try_admit(&self.metrics.inflight, self.max_pending as u64) {
+            // ordering: Relaxed — statistical counter, no data behind it
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
             return Err(anyhow::Error::new(ServeError::Overloaded));
         }
@@ -418,6 +408,8 @@ impl Server {
         // session takes no pin and fails at serve time as before
         let pinned = self.kv.pin(session);
         let cancelled = Arc::new(AtomicBool::new(false));
+        // ordering: Relaxed — id allocation needs uniqueness only, no
+        // happens-before with anything else
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = AttentionRequest {
             id,
@@ -429,27 +421,24 @@ impl Server {
             cancelled: cancelled.clone(),
             reply: tx,
         };
-        // count in flight *before* handing over: the request can be
-        // served (and decrement) before try_send even returns, and a
-        // decrement racing ahead of the increment would underflow the
-        // gauge and wedge the admission gate
-        self.metrics.inflight.fetch_add(1, Ordering::SeqCst);
         match self.ingress.try_send(Msg::Req(req)) {
             Ok(()) => {
+                // ordering: Relaxed — statistical counter
                 self.metrics.accepted.fetch_add(1, Ordering::Relaxed);
                 Ok((id, ResponseHandle { rx, cancelled, done: Cell::new(false) }))
             }
             Err(TrySendError::Full(_)) => {
-                self.metrics.inflight.fetch_sub(1, Ordering::SeqCst);
+                protocol::release(&self.metrics.inflight);
                 if pinned {
                     self.kv.unpin(session);
                 }
+                // ordering: Relaxed — statistical counter
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 Err(anyhow::Error::new(ServeError::Overloaded)
                     .context("ingress queue full (backpressure)"))
             }
             Err(TrySendError::Disconnected(_)) => {
-                self.metrics.inflight.fetch_sub(1, Ordering::SeqCst);
+                protocol::release(&self.metrics.inflight);
                 if pinned {
                     self.kv.unpin(session);
                 }
@@ -504,20 +493,30 @@ impl Server {
     /// deadline (a clean drain); either way, every accepted request has
     /// received its terminal response by the time this returns.
     pub fn drain(mut self, timeout: Duration) -> bool {
+        // ordering: SeqCst — pairs with enqueue's SeqCst load: every
+        // submit either observes the flag (and rejects) or its gauge
+        // claim precedes the zero poll below in the single total order
         self.ctx.draining.store(true, Ordering::SeqCst);
         let deadline = Instant::now() + timeout;
         let clean = loop {
+            // ordering: SeqCst — the zero poll must join the gate's
+            // total order (protocol::try_admit/release); a Relaxed read
+            // could see zero while an already-claimed request is still
+            // unserved
             if self.metrics.inflight.load(Ordering::SeqCst) == 0 {
                 break true;
             }
             if Instant::now() >= deadline {
                 break false;
             }
-            std::thread::sleep(Duration::from_millis(1));
+            thread::sleep(Duration::from_millis(1));
         };
         if !clean {
             // past the deadline: the batcher's final sweep and the
             // workers' pre-dispatch checks shed everything still queued
+            // ordering: SeqCst — must be visible to every worker's next
+            // shed_batch check after this point; keeps the drain cutoff
+            // in the same total order as the gauge it is racing
             self.ctx.shed_all.store(true, Ordering::SeqCst);
         }
         self.shutdown_inner();
@@ -538,7 +537,7 @@ impl Server {
         // gone), so any request still sitting in the ingress queue gets
         // an explicit error — and its session pin released — instead of
         // a silently dropped reply channel
-        let rx = self.ingress_rx.lock().unwrap().take();
+        let rx = self.ingress_rx.lock().take();
         if let Some(rx) = rx {
             loop {
                 match rx.try_recv() {
@@ -602,6 +601,8 @@ fn await_response(
 fn shed_verdict(req: &AttentionRequest, now: Instant, shed_all: bool, ctx: &ServeCtx) -> Option<ServeError> {
     if shed_all {
         Some(ServeError::Shutdown(DRAIN_SHED_ERROR.into()))
+    // ordering: Relaxed — advisory drop-cancel flag (see ResponseHandle);
+    // a stale read only delays the shed to the next check point
     } else if req.cancelled.load(Ordering::Relaxed)
         || ctx.cancels.cancelled_since(&req.session, req.arrived)
     {
@@ -621,6 +622,8 @@ fn shed_verdict(req: &AttentionRequest, now: Instant, shed_all: bool, ctx: &Serv
 /// past deadlines or cancels).
 fn shed_batch(batch: Batch, ctx: &ServeCtx) -> Option<Batch> {
     let now = Instant::now();
+    // ordering: SeqCst — pairs with drain()'s shed_all store (same total
+    // order as the in-flight gauge the drain deadline races)
     let shed_all = ctx.shed_all.load(Ordering::SeqCst);
     let mut groups = Vec::with_capacity(batch.groups.len());
     for mut g in batch.groups {
@@ -628,6 +631,7 @@ fn shed_batch(batch: Batch, ctx: &ServeCtx) -> Option<Batch> {
         for req in g.requests.drain(..) {
             match shed_verdict(&req, now, shed_all, ctx) {
                 Some(err) => {
+                    // ordering: Relaxed — statistical counter
                     ctx.metrics.shed.fetch_add(1, Ordering::Relaxed);
                     fail_request(req, err, &ctx.kv, &ctx.metrics);
                 }
@@ -646,104 +650,12 @@ fn shed_batch(batch: Batch, ctx: &ServeCtx) -> Option<Batch> {
     }
 }
 
-/// Bounded dispatch queue between the batcher and the workers.
-///
-/// Replaces the former `Arc<Mutex<Receiver<Batch>>>`, whose lock was
-/// held **across the blocking `recv()`**: idle workers serialized on the
-/// mutex (one waiting inside `recv`, the rest queued on the lock) and
-/// shutdown could only wake them strictly one at a time.  Here the lock
-/// guards only the deque — waiting happens on the condvar with the lock
-/// released, so any number of workers park and wake independently.
-struct BatchQueue {
-    cap: usize,
-    inner: Mutex<BatchQueueInner>,
-    /// Wakes workers: work available or queue closed.
-    available: Condvar,
-    /// Wakes the batcher: space freed or a worker died.
-    space: Condvar,
-}
-
-struct BatchQueueInner {
-    queue: VecDeque<Batch>,
-    /// The batcher is still feeding the queue.
-    open: bool,
-    /// Live worker threads (kept honest by [`WorkerExit`], panic-safe).
-    workers: usize,
-}
-
-impl BatchQueue {
-    fn new(cap: usize, workers: usize) -> BatchQueue {
-        BatchQueue {
-            cap: cap.max(1),
-            inner: Mutex::new(BatchQueueInner {
-                queue: VecDeque::new(),
-                open: true,
-                workers,
-            }),
-            available: Condvar::new(),
-            space: Condvar::new(),
-        }
-    }
-
-    /// Block until there is room, then enqueue.  `Err(batch)` when every
-    /// worker is gone — the dispatch would hang its callers forever.
-    fn push(&self, b: Batch) -> std::result::Result<(), Batch> {
-        let mut g = self.inner.lock().unwrap();
-        while g.queue.len() >= self.cap && g.workers > 0 {
-            g = self.space.wait(g).unwrap();
-        }
-        if g.workers == 0 {
-            return Err(b);
-        }
-        g.queue.push_back(b);
-        drop(g);
-        self.available.notify_one();
-        Ok(())
-    }
-
-    /// Worker side: block for the next batch; `None` once the queue is
-    /// closed and drained.
-    fn pop(&self) -> Option<Batch> {
-        let mut g = self.inner.lock().unwrap();
-        loop {
-            if let Some(b) = g.queue.pop_front() {
-                drop(g);
-                self.space.notify_one();
-                return Some(b);
-            }
-            if !g.open {
-                return None;
-            }
-            g = self.available.wait(g).unwrap();
-        }
-    }
-
-    /// Batcher exit: no more batches will arrive; wake every idle worker.
-    fn close(&self) {
-        let mut g = self.inner.lock().unwrap();
-        g.open = false;
-        drop(g);
-        self.available.notify_all();
-    }
-
-    /// One worker is gone (normal exit, failed init, or panic).  The
-    /// last worker out hands back whatever is still queued so the caller
-    /// can fail those requests explicitly.
-    fn worker_exited(&self) -> Vec<Batch> {
-        let mut g = self.inner.lock().unwrap();
-        g.workers = g.workers.saturating_sub(1);
-        let residue: Vec<Batch> =
-            if g.workers == 0 { g.queue.drain(..).collect() } else { Vec::new() };
-        drop(g);
-        self.space.notify_all();
-        residue
-    }
-}
-
 /// Panic-safe worker accounting: decrements the live-worker count on any
-/// exit path and fails batches stranded behind the last worker.
+/// exit path and fails batches stranded behind the last worker.  (The
+/// dispatch queue itself lives in [`super::protocol::BatchQueue`], where
+/// the loom suite model-checks its park/wake/shutdown protocol.)
 struct WorkerExit<'a> {
-    queue: &'a BatchQueue,
+    queue: &'a BatchQueue<Batch>,
     ctx: &'a ServeCtx,
 }
 
@@ -755,6 +667,8 @@ impl Drop for WorkerExit<'_> {
             // never served, so roll the structural counters back before
             // failing it (same invariant as emit()'s push-failure path —
             // `batches`/`mean_sessions` must count served dispatches)
+            // ordering: Relaxed — statistical counters; the queue mutex
+            // inside worker_exited() already ordered the handoff itself
             metrics.batches.fetch_sub(1, Ordering::Relaxed);
             metrics
                 .batched_requests
@@ -775,7 +689,7 @@ impl Drop for WorkerExit<'_> {
 /// `available` condvar forever and hang shutdown's join.  (The replaced
 /// channel design was implicitly panic-safe: unwinding dropped the
 /// sender, disconnecting the workers' `recv()`.)
-struct CloseOnExit<'a>(&'a BatchQueue);
+struct CloseOnExit<'a>(&'a BatchQueue<Batch>);
 
 impl Drop for CloseOnExit<'_> {
     fn drop(&mut self) {
@@ -786,7 +700,7 @@ impl Drop for CloseOnExit<'_> {
 #[allow(clippy::too_many_arguments)] // thread entry point: every collaborator is passed once
 fn batcher_loop(
     in_rx: Receiver<Msg>,
-    queue: Arc<BatchQueue>,
+    queue: Arc<BatchQueue<Batch>>,
     max_batch: usize,
     max_total: usize,
     window: Duration,
@@ -837,8 +751,15 @@ fn batcher_loop(
                 for req in batcher
                     .remove_matching(|r| shed_verdict(r, now, false, &ctx).is_some())
                 {
+                    // the verdict is re-derived (same `now`, same ctx); the
+                    // registry's retention sweep could in principle drop
+                    // the mark between the two calls, so fall back to
+                    // Cancelled (the only sweepable verdict) instead of
+                    // panicking the batcher — the request was already
+                    // removed and must get its terminal response
                     let err = shed_verdict(&req, now, false, &ctx)
-                        .expect("matched requests have a shed verdict");
+                        .unwrap_or(ServeError::Cancelled);
+                    // ordering: Relaxed — statistical counter
                     ctx.metrics.shed.fetch_add(1, Ordering::Relaxed);
                     fail_request(req, err, &ctx.kv, &ctx.metrics);
                 }
@@ -881,11 +802,11 @@ fn batcher_loop(
     // thread's exit, and shutdown drains those authoritatively after
     // joining us (the window where a message is truly unreachable is
     // thereby closed)
-    *rx_back.lock().unwrap() = Some(in_rx);
+    *rx_back.lock() = Some(in_rx);
     // `_close` drops here, closing the queue — workers exit once it drains
 }
 
-fn emit(queue: &BatchQueue, b: Batch, ctx: &ServeCtx) {
+fn emit(queue: &BatchQueue<Batch>, b: Batch, ctx: &ServeCtx) {
     // group-close shed point: expired / cancelled / drain-shed requests
     // fail here instead of being dispatched (and are excluded from the
     // structural batch counters — they were never part of a dispatch)
@@ -897,12 +818,16 @@ fn emit(queue: &BatchQueue, b: Batch, ctx: &ServeCtx) {
     // serve and answer the batch before this thread runs again, and a
     // caller reading the metrics right after its response must already
     // see the dispatch
+    // ordering: Relaxed — statistical counters; the program-order
+    // count-before-push plus the queue mutex inside push() gives the
+    // worker (and anyone it answers) a happens-before on these adds
     metrics.batches.fetch_add(1, Ordering::Relaxed);
     metrics.batched_requests.fetch_add(requests, Ordering::Relaxed);
     metrics.batched_sessions.fetch_add(sessions, Ordering::Relaxed);
     if let Err(b) = queue.push(b) {
         // every worker is gone (all exited/panicked): the batch would
         // hang its callers forever — deliver explicit errors instead
+        // ordering: Relaxed — rollback of the statistical counts above
         metrics.batches.fetch_sub(1, Ordering::Relaxed);
         metrics.batched_requests.fetch_sub(requests, Ordering::Relaxed);
         metrics.batched_sessions.fetch_sub(sessions, Ordering::Relaxed);
@@ -931,10 +856,13 @@ fn fail_request(req: AttentionRequest, err: ServeError, kv: &KvStore, metrics: &
         kv.unpin(&session);
     }
     metrics.record_failure(&err);
-    metrics.inflight.fetch_sub(1, Ordering::SeqCst);
+    // terminal delivery: give the admission slot back (same total order
+    // as the gate — see protocol::release)
+    protocol::release(&metrics.inflight);
     let latency_us = arrived.elapsed().as_secs_f64() * 1e6;
     let sent = reply.send(AttentionResponse { id, output: Err(err), latency_us, batch_size: 0 });
     if sent.is_err() {
+        // ordering: Relaxed — statistical counter
         metrics.delivery_lost.fetch_add(1, Ordering::Relaxed);
     }
 }
@@ -949,7 +877,7 @@ fn fail_request(req: AttentionRequest, err: ServeError, kv: &KvStore, metrics: &
 fn worker_loop(
     factory: &BackendFactory,
     mut be: Box<dyn Backend>,
-    queue: &BatchQueue,
+    queue: &BatchQueue<Batch>,
     ctx: &ServeCtx,
 ) {
     while let Some(batch) = queue.pop() {
@@ -959,16 +887,29 @@ fn worker_loop(
         let caught = catch_unwind(AssertUnwindSafe(|| serve_batch(&mut *be, batch, ctx)));
         let Err(payload) = caught else { continue };
         // every request of the panicked dispatch already received its
-        // explicit error (serve_batch guarantees that before re-raising)
-        let claimed = ctx
-            .respawn_budget
-            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |b| b.checked_sub(1))
-            .is_ok();
+        // explicit error (serve_batch guarantees that before re-raising).
+        // CAS loop (not fetch_update) so the claim compiles against the
+        // facade's loom atomics too; semantics are identical
+        let claimed = loop {
+            // ordering: SeqCst — pool-wide budget: concurrent panicking
+            // workers must agree on exactly which claims succeeded
+            let b = ctx.respawn_budget.load(Ordering::SeqCst);
+            let Some(nb) = b.checked_sub(1) else { break false };
+            // ordering: SeqCst — the winning CAS is the budget claim
+            if ctx
+                .respawn_budget
+                .compare_exchange(b, nb, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                break true;
+            }
+        };
         if !claimed {
             resume_unwind(payload);
         }
         match factory() {
             Ok(fresh) => {
+                // ordering: Relaxed — statistical counter
                 ctx.metrics.worker_respawns.fetch_add(1, Ordering::Relaxed);
                 be = fresh;
             }
@@ -989,36 +930,6 @@ type GroupStream = (String, std::vec::IntoIter<AttentionRequest>);
 /// resolved KV entry, packed query rows)`.
 type FusedRun = (usize, Vec<PendingQuery>, KvEntry, Mat);
 
-/// Releases one session group's not-yet-released pins on drop, so a
-/// panic anywhere in the serve path (e.g. a crashing backend) cannot
-/// leak pins — a leaked pin would make the session permanently
-/// unevictable under the byte budget.  One guard per session group of a
-/// super-batch; the happy path releases each pin explicitly
-/// ([`PinGuard::release_one`]) *before* the response is sent, so by the
-/// time a caller observes its response the session is evictable again.
-struct PinGuard<'a> {
-    kv: &'a KvStore,
-    session: String,
-    remaining: usize,
-}
-
-impl PinGuard<'_> {
-    fn release_one(&mut self) {
-        if self.remaining > 0 {
-            self.remaining -= 1;
-            self.kv.unpin(&self.session);
-        }
-    }
-}
-
-impl Drop for PinGuard<'_> {
-    fn drop(&mut self) {
-        for _ in 0..self.remaining {
-            self.kv.unpin(&self.session);
-        }
-    }
-}
-
 /// Serve one super-batch.  Each session group runs in arrival order —
 /// contiguous query runs, then the append that barriered them — while
 /// *across* groups the leading query runs of every session are answered
@@ -1036,10 +947,10 @@ fn serve_batch(be: &mut dyn Backend, batch: Batch, ctx: &ServeCtx) {
     let mut guards: Vec<PinGuard> = batch
         .groups
         .iter()
-        .map(|g| PinGuard {
-            kv,
-            session: g.session.clone(),
-            remaining: g.requests.iter().filter(|r| r.pinned).count(),
+        .map(|g| {
+            // panic-safe pin accounting per session group; see
+            // protocol::PinGuard for the release-before-reply invariant
+            PinGuard::new(kv, g.session.clone(), g.requests.iter().filter(|r| r.pinned).count())
         })
         .collect();
     if be.head_dim() != kv.head_dim() {
@@ -1247,15 +1158,19 @@ fn flush_runs(
             if is_transient(&e) {
                 // the per-session re-dispatch below is itself the first
                 // retry of the transient fused failure
+                // ordering: Relaxed — statistical counter
                 metrics.retries.fetch_add(1, Ordering::Relaxed);
             }
             // index loop over take-able slots: a panic mid-retry must
             // still deliver explicit errors to the *remaining* runs
             // before unwinding to the watchdog — exactly-one-response
-            // holds even when the retry pass itself crashes
+            // holds even when the retry pass itself crashes.  Each slot
+            // is taken exactly once (here, or by the panic sweep below,
+            // which only visits indices past the current one), so an
+            // empty slot simply has nothing left to serve
             let mut slots: Vec<Option<FusedRun>> = fused.into_iter().map(Some).collect();
             for i in 0..slots.len() {
-                let (gi, run, entry, q) = slots[i].take().expect("slot visited once");
+                let Some((gi, run, entry, q)) = slots[i].take() else { continue };
                 let caught = catch_unwind(AssertUnwindSafe(|| {
                     compute_single_with_retry(&mut *be, &entry, &q, ctx)
                 }));
@@ -1295,21 +1210,29 @@ fn compute_single_with_retry(
     let mut attempt = 0u32;
     loop {
         match be.compute_plan(&[(entry, q)]) {
-            Ok(mut outs) if outs.len() == 1 => return Ok(outs.pop().expect("one output")),
-            Ok(outs) => {
-                return Err(ServeError::backend(format!(
-                    "backend returned {} outputs for a 1-session plan",
-                    outs.len()
-                )))
+            Ok(mut outs) => {
+                let n = outs.len();
+                // pop-then-check instead of indexing: a conforming
+                // backend returns exactly one output, and a broken one
+                // becomes an error response, never a worker panic
+                match outs.pop() {
+                    Some(out) if n == 1 => return Ok(out),
+                    _ => {
+                        return Err(ServeError::backend(format!(
+                            "backend returned {n} outputs for a 1-session plan"
+                        )))
+                    }
+                }
             }
             Err(e) => {
                 let transient = is_transient(&e);
                 if transient && attempt < ctx.max_retries {
                     attempt += 1;
+                    // ordering: Relaxed — statistical counter
                     ctx.metrics.retries.fetch_add(1, Ordering::Relaxed);
                     let backoff = ctx.retry_backoff * (1u32 << (attempt - 1).min(10));
                     if !backoff.is_zero() {
-                        std::thread::sleep(backoff);
+                        thread::sleep(backoff);
                     }
                     continue;
                 }
@@ -1364,16 +1287,20 @@ fn deliver(
     let latency_us = arrived.elapsed().as_secs_f64() * 1e6;
     match &output {
         Ok(_) => {
+            // ordering: Relaxed — statistical counter
             metrics.completed.fetch_add(1, Ordering::Relaxed);
         }
         Err(e) => metrics.record_failure(e),
     }
     metrics.observe_latency(latency_us);
-    metrics.inflight.fetch_sub(1, Ordering::SeqCst);
+    // terminal delivery: give the admission slot back (same total order
+    // as the gate — see protocol::release)
+    protocol::release(&metrics.inflight);
     if reply
         .send(AttentionResponse { id, output, latency_us, batch_size })
         .is_err()
     {
+        // ordering: Relaxed — statistical counter
         metrics.delivery_lost.fetch_add(1, Ordering::Relaxed);
     }
 }
@@ -1394,15 +1321,19 @@ fn deliver_append(
     let latency_us = arrived.elapsed().as_secs_f64() * 1e6;
     match &output {
         Ok(_) => {
+            // ordering: Relaxed — statistical counter
             metrics.appends.fetch_add(1, Ordering::Relaxed);
         }
         Err(e) => metrics.record_failure(e),
     }
-    metrics.inflight.fetch_sub(1, Ordering::SeqCst);
+    // terminal delivery: give the admission slot back (same total order
+    // as the gate — see protocol::release)
+    protocol::release(&metrics.inflight);
     if reply
         .send(AttentionResponse { id, output, latency_us, batch_size })
         .is_err()
     {
+        // ordering: Relaxed — statistical counter
         metrics.delivery_lost.fetch_add(1, Ordering::Relaxed);
     }
 }
@@ -1548,7 +1479,7 @@ mod tests {
         // background traffic on another session lands *just before* the
         // "slow" deadline — under fixed-tick sweeping this rescheduled
         // the next sweep a whole window later
-        std::thread::sleep(Duration::from_micros(window_us * 3 / 5));
+        thread::sleep(Duration::from_micros(window_us * 3 / 5));
         let _rx2 = srv.submit("other", rng.normal_vec(8)).unwrap();
         let resp = rx.recv().unwrap();
         assert!(resp.ok(), "{:?}", resp.output);
@@ -1677,7 +1608,7 @@ mod tests {
             "caller must learn the backend crashed"
         );
         // let the worker thread finish unwinding
-        std::thread::sleep(Duration::from_millis(200));
+        thread::sleep(Duration::from_millis(200));
         // later requests must receive an explicit error response
         let resp = srv.call("sess", rng.normal_vec(8)).unwrap();
         assert!(!resp.ok());
@@ -1915,7 +1846,7 @@ mod tests {
                 break;
             }
             assert!(Instant::now() < deadline, "abandoned request never terminal: {snap:?}");
-            std::thread::sleep(Duration::from_millis(10));
+            thread::sleep(Duration::from_millis(10));
         }
         let snap = srv.metrics.snapshot();
         assert_eq!(snap.inflight, 0, "in-flight gauge must return to zero");
@@ -1991,7 +1922,7 @@ mod tests {
             assert!(resp.output.unwrap_err().to_string().contains("panicked"));
         }
         // let the third unwind finish killing the worker (budget spent)
-        std::thread::sleep(Duration::from_millis(200));
+        thread::sleep(Duration::from_millis(200));
         assert_eq!(srv.metrics.snapshot().worker_respawns, 2);
         let resp = srv.call("sess", rng.normal_vec(8)).unwrap();
         assert!(

@@ -8,7 +8,7 @@
 //! float for FA-2, Eq. 16 in the log domain for H-FA), and the final
 //! DIV/LogDiv normalizes.
 
-use std::sync::Arc;
+use crate::sync::Arc;
 
 use crate::attention::prepared::{kv_block_ranges, PreparedKv};
 use crate::attention::{fa2, merge};

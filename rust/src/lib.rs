@@ -27,6 +27,11 @@
 //! Support substrates built in-repo (offline environment, see DESIGN.md §9):
 //! [`proptest`] (property testing), [`benchlib`] (criterion-style bench
 //! harness), [`cli`] (argument parsing), [`golden`] (golden-vector replay).
+//!
+//! All concurrency primitives are imported through the [`sync`] facade
+//! (std normally, loom under `--cfg loom`) so the protocols in
+//! [`coordinator::protocol`] can be exhaustively model-checked; see
+//! `rust/EXPERIMENTS.md` §Verification.
 
 pub mod arith;
 pub mod attention;
@@ -41,6 +46,7 @@ pub mod logging;
 pub mod model;
 pub mod proptest;
 pub mod runtime;
+pub mod sync;
 pub mod tensor;
 
 pub use arith::bf16::Bf16;

@@ -1,7 +1,11 @@
 //! Tiny leveled logger (the `log` facade alone has no emitter offline).
 
-use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
+
+// Always-std atomics (`counter`): a `static` initializer needs const `new`,
+// which loom's types do not provide, and the log level is not a protocol
+// under verification.
+use crate::sync::counter::{AtomicU8, Ordering};
 
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 
@@ -30,6 +34,8 @@ impl Level {
 }
 
 pub fn set_level(l: Level) {
+    // ordering: Relaxed — the level is an isolated knob; no other memory
+    // is published through it.
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
@@ -40,11 +46,13 @@ pub fn init_from_env() {
 }
 
 pub fn enabled(l: Level) -> bool {
+    // ordering: Relaxed — see `set_level`; a stale read only mis-gates a
+    // log line.
     (l as u8) <= LEVEL.load(Ordering::Relaxed)
 }
 
 fn t0() -> Instant {
-    use std::sync::OnceLock;
+    use crate::sync::OnceLock;
     static START: OnceLock<Instant> = OnceLock::new();
     *START.get_or_init(Instant::now)
 }

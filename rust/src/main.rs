@@ -160,7 +160,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     use hfa::coordinator::{KvStore, PjrtBackend, Server, SimBackend};
     use hfa::proptest::Rng;
-    use std::sync::Arc;
+    use hfa::sync::Arc;
 
     let cfg = Config::resolve(None, args)?;
     let requests = args.get_usize("requests", 256)?;
@@ -196,7 +196,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .map(|_| loop {
             match server.submit("demo", rng.normal_vec(d)) {
                 Ok(rx) => break rx,
-                Err(_) => std::thread::sleep(std::time::Duration::from_micros(50)),
+                Err(_) => hfa::sync::thread::sleep(std::time::Duration::from_micros(50)),
             }
         })
         .collect();

@@ -17,7 +17,8 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use crate::sync::{thread, Arc, Condvar, Mutex, OnceLock};
 
 /// Payload of a panicked job, kept so the submitter can re-raise it.
 type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
@@ -49,7 +50,7 @@ impl Latch {
     }
 
     fn complete(&self, panicked: Option<PanicPayload>) {
-        let mut g = self.state.lock().unwrap();
+        let mut g = self.state.lock();
         g.0 -= 1;
         if g.1.is_none() {
             g.1 = panicked;
@@ -61,14 +62,14 @@ impl Latch {
 
     /// All jobs of this latch completed (drained or executed elsewhere)?
     fn finished(&self) -> bool {
-        self.state.lock().unwrap().0 == 0
+        self.state.lock().0 == 0
     }
 
     /// Block until all jobs completed; returns the first panic payload.
     fn wait(&self) -> Option<PanicPayload> {
-        let mut g = self.state.lock().unwrap();
+        let mut g = self.state.lock();
         while g.0 > 0 {
-            g = self.done.wait(g).unwrap();
+            g = self.done.wait(g);
         }
         g.1.take()
     }
@@ -91,7 +92,7 @@ impl WorkerPool {
         let mut workers = 0;
         for i in 0..threads {
             let q = queue.clone();
-            let spawned = std::thread::Builder::new()
+            let spawned = thread::Builder::new()
                 .name(format!("hfa-pool-{i}"))
                 .spawn(move || worker_loop(q));
             if spawned.is_ok() {
@@ -114,7 +115,7 @@ impl WorkerPool {
         }
         let latch = Arc::new(Latch::new(jobs.len()));
         {
-            let mut g = self.queue.inner.lock().unwrap();
+            let mut g = self.queue.inner.lock();
             for job in jobs {
                 let l = latch.clone();
                 let wrapped: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
@@ -142,7 +143,7 @@ impl WorkerPool {
         // completion first, so the return can be delayed by at most one
         // foreign task's duration.
         while !latch.finished() {
-            let task = self.queue.inner.lock().unwrap().tasks.pop_front();
+            let task = self.queue.inner.lock().tasks.pop_front();
             match task {
                 Some(t) => t(),
                 None => break,
@@ -158,7 +159,7 @@ impl WorkerPool {
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        let mut g = self.queue.inner.lock().unwrap();
+        let mut g = self.queue.inner.lock();
         g.open = false;
         self.queue.available.notify_all();
     }
@@ -167,7 +168,7 @@ impl Drop for WorkerPool {
 fn worker_loop(queue: Arc<Queue>) {
     loop {
         let task = {
-            let mut g = queue.inner.lock().unwrap();
+            let mut g = queue.inner.lock();
             loop {
                 if let Some(t) = g.tasks.pop_front() {
                     break Some(t);
@@ -175,7 +176,7 @@ fn worker_loop(queue: Arc<Queue>) {
                 if !g.open {
                     break None;
                 }
-                g = queue.available.wait(g).unwrap();
+                g = queue.available.wait(g);
             }
         };
         match task {
@@ -250,7 +251,7 @@ pub fn global() -> &'static WorkerPool {
             .ok()
             .and_then(|s| s.parse::<usize>().ok())
             .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).saturating_sub(1)
+                thread::available_parallelism().map(|n| n.get()).unwrap_or(1).saturating_sub(1)
             });
         WorkerPool::new(workers)
     })
@@ -259,7 +260,7 @@ pub fn global() -> &'static WorkerPool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicUsize, Ordering};
+    use crate::sync::counter::{AtomicUsize, Ordering};
 
     #[test]
     fn runs_all_jobs_with_borrows() {
@@ -356,7 +357,7 @@ mod tests {
     fn global_pool_usable_from_many_threads() {
         let done: Vec<_> = (0..4)
             .map(|t| {
-                std::thread::spawn(move || {
+                crate::sync::thread::spawn(move || {
                     let mut acc = vec![0u64; 32];
                     let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = acc
                         .chunks_mut(8)

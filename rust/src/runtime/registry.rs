@@ -4,7 +4,8 @@
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::Mutex;
+
+use crate::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
@@ -44,7 +45,7 @@ impl AttnKernelSpec {
 pub struct ArtifactRegistry {
     engine: Engine,
     hlo_dir: PathBuf,
-    cache: Mutex<HashMap<String, std::sync::Arc<LoadedExecutable>>>,
+    cache: Mutex<HashMap<String, Arc<LoadedExecutable>>>,
 }
 
 impl ArtifactRegistry {
@@ -98,30 +99,30 @@ impl ArtifactRegistry {
         Ok(out)
     }
 
-    fn load_cached(&self, file: &str) -> Result<std::sync::Arc<LoadedExecutable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(file) {
+    fn load_cached(&self, file: &str) -> Result<Arc<LoadedExecutable>> {
+        if let Some(e) = self.cache.lock().get(file) {
             return Ok(e.clone());
         }
         let path = self.hlo_dir.join(file);
         if !path.is_file() {
             bail!("artifact {} not found — run `make artifacts`", path.display());
         }
-        let exe = std::sync::Arc::new(
+        let exe = Arc::new(
             self.engine
                 .load_hlo_text(&path)
                 .with_context(|| format!("loading {file}"))?,
         );
-        self.cache.lock().unwrap().insert(file.to_string(), exe.clone());
+        self.cache.lock().insert(file.to_string(), exe.clone());
         Ok(exe)
     }
 
     /// Load (and cache) an attention kernel.
-    pub fn attention_kernel(&self, spec: &AttnKernelSpec) -> Result<std::sync::Arc<LoadedExecutable>> {
+    pub fn attention_kernel(&self, spec: &AttnKernelSpec) -> Result<Arc<LoadedExecutable>> {
         self.load_cached(&spec.file_name())
     }
 
     /// Load (and cache) a full-model forward.
-    pub fn model(&self, size: &str, imp: &str) -> Result<std::sync::Arc<LoadedExecutable>> {
+    pub fn model(&self, size: &str, imp: &str) -> Result<Arc<LoadedExecutable>> {
         self.load_cached(&format!("model_{size}_{imp}.hlo.txt"))
     }
 }

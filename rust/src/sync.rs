@@ -1,0 +1,183 @@
+//! Concurrency facade: every module in this crate imports its
+//! synchronization primitives from here, never from `std::sync` /
+//! `std::thread` directly (enforced by `cargo run -p xtask -- lint`).
+//!
+//! Under a normal build the facade is a thin veneer over `std`.  Under
+//! `RUSTFLAGS="--cfg loom"` the *modeled* primitives — [`Mutex`],
+//! [`Condvar`], and the [`atomic`] module — switch to their
+//! [`loom`](https://docs.rs/loom) equivalents, so the protocol structs
+//! built from them ([`crate::coordinator::protocol`], the worker pool)
+//! can be exhaustively model-checked by `rust/tests/loom_models.rs`
+//! across every bounded-preemption interleaving, not just the ones a
+//! lucky CI run happens to schedule.
+//!
+//! What intentionally stays `std` under **both** cfgs:
+//!
+//! * [`Arc`] — used throughout for immutable snapshot sharing (prepared
+//!   KV chunk tables, backend caches), not as a protocol under test;
+//!   the copy-on-write append path also needs `Arc::make_mut` /
+//!   `Arc::strong_count`, which loom's `Arc` does not provide.  Loom
+//!   models that want modeled reference counting use `loom::sync::Arc`
+//!   directly in the test harness.
+//! * [`mpsc`] — loom's channel shim lacks `sync_channel` /
+//!   `recv_timeout`, which the ingress path is built on.  Channels are
+//!   exercised by the chaos soak + TSan lane instead; the loom suite
+//!   models the hand-rolled protocols (queue, guards, registry, gate)
+//!   that channels cannot express.
+//! * [`thread`] and [`OnceLock`] — thread *creation* is never performed
+//!   inside a loom model (models spawn `loom::thread` directly); the
+//!   server/pool spawning paths need `Builder`, `available_parallelism`
+//!   and `sleep`, none of which loom models.
+//! * [`counter`] — always-`std` atomics for `static` process-wide
+//!   counters (traffic/telemetry).  Loom atomics cannot live in a
+//!   `static` (no `const fn new`, and statics outlive any single model
+//!   execution), so these are declared unmodeled by construction.
+//!
+//! Poison handling: [`Mutex::lock`] and [`Condvar::wait`] are
+//! **infallible** — a poisoned lock hands back the inner guard instead
+//! of an `Err`.  Every critical section in this crate leaves its data
+//! structurally valid at each await/unlock point (documented per call
+//! site), and the serving loop's panic guards (`PinGuard`, `WorkerExit`,
+//! `CloseOnExit`) run in `Drop` during unwinds, where a poison
+//! `unwrap()` would escalate a caught backend panic into a double-panic
+//! abort of the whole process.
+
+/// Loom-aware atomics: `std::sync::atomic` normally, `loom`'s under
+/// `--cfg loom`.  Every non-`static` atomic in the crate comes from
+/// here so the loom suite can model it.
+pub mod atomic {
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+
+    #[cfg(loom)]
+    pub use loom::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+}
+
+/// Always-`std` atomics for `static` process-wide counters (KV traffic
+/// meters, log level).  Statics outlive any loom execution and loom's
+/// atomics have no `const fn new`, so these sites are explicitly
+/// *unmodeled*; they carry telemetry, never synchronization (each is
+/// documented `// ordering: Relaxed` at the use site, with thread
+/// `join()` providing the happens-before edge for tests that read them).
+pub mod counter {
+    pub use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+}
+
+/// Snapshot-sharing `Arc` (std under both cfgs — see module docs).
+pub use std::sync::Arc;
+
+/// Ingress/reply channels (std under both cfgs — see module docs).
+pub use std::sync::mpsc;
+
+/// One-time initialization for process-wide singletons (std under both
+/// cfgs; never touched inside a loom model).
+pub use std::sync::OnceLock;
+
+/// Thread spawning/sleeping (std under both cfgs — see module docs).
+/// Loom models never call these; they spawn `loom::thread` themselves.
+pub mod thread {
+    pub use std::thread::{available_parallelism, sleep, spawn, Builder, JoinHandle};
+}
+
+#[cfg(not(loom))]
+use std::sync as imp;
+
+#[cfg(loom)]
+use loom::sync as imp;
+
+/// Guard type returned by [`Mutex::lock`] / threaded through
+/// [`Condvar::wait`].
+pub type MutexGuard<'a, T> = imp::MutexGuard<'a, T>;
+
+/// Mutual exclusion with an **infallible** `lock()` (poison recovery —
+/// see module docs).  Backed by `loom::sync::Mutex` under `--cfg loom`.
+pub struct Mutex<T>(imp::Mutex<T>);
+
+impl<T> Mutex<T> {
+    pub fn new(t: T) -> Mutex<T> {
+        Mutex(imp::Mutex::new(t))
+    }
+
+    /// Acquire the lock, recovering the guard from a poisoned mutex (a
+    /// panicked holder): critical sections in this crate keep their data
+    /// valid at every unlock point, and the serving loop's `Drop` guards
+    /// must not double-panic during an unwind.
+    pub fn lock(&self) -> MutexGuard<'_, T> {
+        self.0.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Mutex<T> {
+        Mutex::new(T::default())
+    }
+}
+
+/// Condition variable whose `wait` is infallible under poisoning, to
+/// match [`Mutex::lock`].  Backed by `loom::sync::Condvar` under
+/// `--cfg loom`.
+pub struct Condvar(imp::Condvar);
+
+impl Condvar {
+    pub fn new() -> Condvar {
+        Condvar(imp::Condvar::new())
+    }
+
+    /// Release the guard's lock, park until notified, re-acquire.
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+        self.0.wait(guard).unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    pub fn notify_one(&self) {
+        self.0.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.0.notify_all();
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Condvar {
+        Condvar::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mutex_lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        // poison the mutex by panicking while holding it
+        let _ = thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison");
+        })
+        .join();
+        // an infallible lock still hands the data back
+        assert_eq!(*m.lock(), 7);
+        *m.lock() = 9;
+        assert_eq!(*m.lock(), 9);
+    }
+
+    #[test]
+    fn condvar_roundtrip() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let p2 = pair.clone();
+        let h = thread::spawn(move || {
+            let (lock, cv) = &*p2;
+            *lock.lock() = true;
+            cv.notify_one();
+        });
+        let (lock, cv) = &*pair;
+        let mut g = lock.lock();
+        while !*g {
+            g = cv.wait(g);
+        }
+        drop(g);
+        h.join().expect("signaller exits cleanly");
+    }
+}

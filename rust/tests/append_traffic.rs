@@ -9,9 +9,8 @@
 //! Kept as the sole test in this binary so the process-wide byte counter
 //! sees no concurrent traffic from unrelated tests.
 
-use std::sync::Arc;
-
 use hfa::attention::prepared::{kv_copy_bytes, row_bytes, PreparedKv};
+use hfa::sync::Arc;
 use hfa::coordinator::KvStore;
 use hfa::proptest::Rng;
 use hfa::Mat;
@@ -25,6 +24,11 @@ fn rand_kv(rng: &mut Rng, n: usize, d: usize) -> (Mat, Mat) {
 
 #[test]
 fn append_copy_traffic_tracks_appended_rows_not_resident() {
+    // pin the pool before its first use: the process-wide counter must
+    // see the same pool shape in every environment (local, CI, sanitizer
+    // lanes) rather than a machine-sized one — set here, not via ambient
+    // env, so the pin can't be forgotten by a new lane
+    std::env::set_var("HFA_POOL_THREADS", "1");
     const D: usize = 8;
     let rb = row_bytes(D, D) as u64;
     let mut rng = Rng::new(20_260_728);

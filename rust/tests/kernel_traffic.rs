@@ -15,6 +15,11 @@ use hfa::Mat;
 
 #[test]
 fn tile_streams_each_kv_row_once_per_tile_not_per_query() {
+    // pin the pool before its first use: the process-wide counter must
+    // see the same pool shape in every environment (local, CI, sanitizer
+    // lanes) rather than a machine-sized one — set here, not via ambient
+    // env, so the pin can't be forgotten by a new lane
+    std::env::set_var("HFA_POOL_THREADS", "1");
     let (b, n, d) = (16usize, 64usize, 8usize);
     let qt = kernel::DEFAULT_QUERY_TILE; // 8: b/qt = 2 tiles exactly
     let mut rng = Rng::new(20_260_728);

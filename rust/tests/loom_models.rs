@@ -1,0 +1,208 @@
+//! Loom model checks for the coordinator's hand-rolled protocols
+//! (`hfa::coordinator::protocol`).
+//!
+//! Build and run with:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test --release --test loom_models -- --test-threads=1
+//! ```
+//!
+//! Under `--cfg loom` the whole crate's `hfa::sync` facade resolves its
+//! Mutex/Condvar/atomics to loom's instrumented types, so these models
+//! exhaustively explore every bounded-preemption interleaving of the
+//! *shipped* protocol code — not a simplified replica.  Each model
+//! pins one liveness or safety property the serving stack depends on;
+//! a missed-wakeup, lost-item, leaked-pin or cap-overrun interleaving
+//! fails the lane deterministically.
+//!
+//! Preemption bound 3 (the loom paper's sweet spot: virtually all real
+//! bugs need <= 2 preemptions) keeps each model in the seconds range.
+
+#![cfg(loom)]
+
+use std::time::{Duration, Instant};
+
+use hfa::coordinator::protocol::{release, try_admit, BatchQueue, CancelRegistry, PinGuard};
+use hfa::coordinator::KvStore;
+use hfa::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use hfa::sync::Arc;
+use hfa::Mat;
+
+/// Run `f` under loom with the suite's preemption bound.
+fn model<F>(f: F)
+where
+    F: Fn() + Sync + Send + 'static,
+{
+    let mut b = loom::model::Builder::new();
+    b.preemption_bound = Some(3);
+    b.check(f);
+}
+
+/// Protocol 1 — BatchQueue park/wake/shutdown.
+///
+/// Two workers block in `pop`, a bounded producer blocks in `push` when
+/// the queue is full, and `close` ends the stream.  The property is
+/// liveness: no interleaving leaves a worker parked forever after the
+/// producer closed (a missed `notify` would deadlock the model and fail
+/// the check), and every pushed item is popped exactly once.
+#[test]
+fn batch_queue_park_wake_shutdown() {
+    model(|| {
+        let q: Arc<BatchQueue<u8>> = Arc::new(BatchQueue::new(1, 2));
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                let q = q.clone();
+                loom::thread::spawn(move || {
+                    let mut got = 0u8;
+                    while q.pop().is_some() {
+                        got += 1;
+                    }
+                    got
+                })
+            })
+            .collect();
+        // cap 1 with two items: the second push parks the producer until
+        // a worker frees the slot
+        q.push(1).expect("workers alive");
+        q.push(2).expect("workers alive");
+        q.close();
+        let total: u8 = workers.into_iter().map(|h| h.join().expect("worker model panicked")).sum();
+        assert_eq!(total, 2, "each item popped exactly once, none lost");
+    });
+}
+
+/// Protocol 2 — WorkerExit live-count and stranded-item handoff.
+///
+/// Workers race their exits against the producer's push.  The safety
+/// property is conservation: an accepted item (push returned `Ok`) is
+/// handed back in the last exiter's residue — no interleaving strands
+/// it silently in a dead queue — and once every worker is gone, push
+/// refuses the item instead of hanging its caller.
+#[test]
+fn worker_exit_hands_back_stranded_items() {
+    model(|| {
+        let q: Arc<BatchQueue<u8>> = Arc::new(BatchQueue::new(4, 2));
+        // both workers die without ever popping (failed init, panicked
+        // backend), racing the producer's push in every order the
+        // preemption bound allows
+        let crashers: Vec<_> = (0..2)
+            .map(|_| {
+                let q = q.clone();
+                loom::thread::spawn(move || q.worker_exited().len())
+            })
+            .collect();
+        let accepted = q.push(9).is_ok();
+        let residue: usize =
+            crashers.into_iter().map(|h| h.join().expect("crasher model panicked")).sum();
+        if accepted {
+            assert_eq!(residue, 1, "accepted item is handed back by the last exiter, never lost");
+        } else {
+            assert_eq!(residue, 0, "refused item stays with the caller");
+        }
+        assert_eq!(q.push(8), Err(8), "push to a dead pool is refused, not hung");
+    });
+}
+
+/// Protocol 3 — PinGuard release-before-reply ordering.
+///
+/// A worker serves a pinned session: it releases the pin, then publishes
+/// the reply (Release store).  The client observes the reply (Acquire
+/// load) and must find the session already evictable — the serving
+/// invariant that a caller holding its response never blocks eviction.
+/// The second half models the panic path: a guard dropped with an
+/// unreleased pin still unpins on drop.
+#[test]
+fn pin_guard_releases_before_reply() {
+    model(|| {
+        let kv = Arc::new(KvStore::new(2, 1, 4));
+        kv.put("s", Mat::zeros(2, 1), Mat::zeros(2, 1)).expect("put in model");
+        assert!(kv.pin("s"));
+        let replied = Arc::new(AtomicBool::new(false));
+
+        let worker = {
+            let (kv, replied) = (kv.clone(), replied.clone());
+            loom::thread::spawn(move || {
+                let mut guard = PinGuard::new(&kv, "s".into(), 1);
+                guard.release_one();
+                // ordering: Release — publishes the unpin above to the
+                // client's Acquire load of the reply flag
+                replied.store(true, Ordering::Release);
+            })
+        };
+
+        // ordering: Acquire — pairs with the worker's Release store; once
+        // the reply is visible, so is everything before it (the unpin)
+        if replied.load(Ordering::Acquire) {
+            assert_eq!(kv.pinned_sessions(), 0, "reply visible implies pin released");
+        }
+        worker.join().expect("worker model panicked");
+
+        // panic analogue: a guard dropped with its pin unreleased
+        assert!(kv.pin("s"));
+        drop(PinGuard::new(&kv, "s".into(), 1));
+        assert_eq!(kv.pinned_sessions(), 0, "drop path releases the remainder");
+    });
+}
+
+/// Protocol 4 — CancelRegistry mark-vs-serve race.
+///
+/// A cancel for session `s` at instant `t0` races a worker's
+/// `cancelled_since(s, t0)` check for a request that arrived at `t0`.
+/// Either outcome of the race is legal (served before the cancel landed,
+/// or shed), but the mark must be durable — after the race the registry
+/// always sheds `t0` traffic — and must never leak onto traffic
+/// submitted after the cancel instant (the resubmit path).
+#[test]
+fn cancel_mark_vs_serve_race() {
+    model(|| {
+        let reg = Arc::new(CancelRegistry::default());
+        let t0 = Instant::now();
+
+        let canceller = {
+            let reg = reg.clone();
+            loom::thread::spawn(move || reg.cancel_at("s", t0))
+        };
+        let worker = {
+            let reg = reg.clone();
+            loom::thread::spawn(move || reg.cancelled_since("s", t0))
+        };
+        let _served_or_shed: bool = worker.join().expect("worker model panicked");
+        canceller.join().expect("canceller model panicked");
+
+        assert!(reg.cancelled_since("s", t0), "the mark is durable after the race");
+        assert!(
+            !reg.cancelled_since("s", t0 + Duration::from_nanos(1)),
+            "a resubmit after the cancel instant is never shed"
+        );
+    });
+}
+
+/// Protocol 5 — admission gate increment/rollback under contention.
+///
+/// Two admitters race `try_admit` at cap 1 with no interleaved release:
+/// at most one may win (the increment-then-check gate's whole point —
+/// a check-then-increment gate admits both), a loser's rollback leaves
+/// no residue, and the gauge balances to zero after the winners release.
+#[test]
+fn admission_gate_bounds_and_rolls_back() {
+    model(|| {
+        let gauge = Arc::new(AtomicU64::new(0));
+        let admitters: Vec<_> = (0..2)
+            .map(|_| {
+                let gauge = gauge.clone();
+                loom::thread::spawn(move || try_admit(&gauge, 1))
+            })
+            .collect();
+        let admitted = admitters
+            .into_iter()
+            .map(|h| h.join().expect("admitter model panicked"))
+            .filter(|&ok| ok)
+            .count();
+        assert_eq!(admitted, 1, "cap 1: exactly one racing admitter wins");
+        // ordering: SeqCst — post-join read of the gate's total order
+        assert_eq!(gauge.load(Ordering::SeqCst), 1, "the loser's rollback left no residue");
+        release(&gauge);
+        // ordering: SeqCst — see above
+        assert_eq!(gauge.load(Ordering::SeqCst), 0, "gauge balances once the winner releases");
+    });
+}

@@ -1,0 +1,144 @@
+//! Miri lane: undefined-behavior check of the crate's bit-twiddling
+//! arithmetic, the prepared-KV chunk-view slicing, and the worker
+//! pool's one `unsafe` block (the lifetime-erasure transmute in
+//! `run_scoped`).
+//!
+//! Run with:
+//!
+//! ```text
+//! HFA_POOL_THREADS=0 MIRIFLAGS=-Zmiri-disable-isolation \
+//!     cargo +nightly miri test --test miri_kernels
+//! ```
+//!
+//! `HFA_POOL_THREADS=0` keeps the global pool from spawning detached
+//! workers (Miri rejects threads still alive at process exit); the
+//! zero-worker pool still routes every fan-out through `run_scoped`'s
+//! transmute + caller-drain path, so the unsafe code is exercised, just
+//! serially.  Shapes are deliberately tiny — Miri runs ~100x slower
+//! than native.
+
+use hfa::arith::bf16::Bf16;
+use hfa::arith::lns::{lns_add, Lns};
+use hfa::attention::prepared::PreparedKv;
+use hfa::proptest::Rng;
+use hfa::runtime::WorkerPool;
+use hfa::Mat;
+
+/// Pin the pool to zero workers for every test in this binary,
+/// whichever runs first (also set by the CI lane's environment).
+fn serial_pool() {
+    std::env::set_var("HFA_POOL_THREADS", "0");
+}
+
+fn bits(m: &Mat) -> Vec<u32> {
+    m.data.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn bf16_bit_manipulation_is_defined() {
+    serial_pool();
+    // sweep a structured set of bit patterns through the f32 <-> bf16
+    // round-trips and field extractors Miri checks for UB
+    for hi in [0x0000u16, 0x0001, 0x0080, 0x3f80, 0x7f7f, 0x7f80, 0x8000, 0xbf80, 0xff80] {
+        let b = Bf16::from_bits(hi);
+        assert_eq!(b.bits(), hi);
+        let f = b.to_f32();
+        if !b.is_nan() {
+            assert_eq!(Bf16::from_f32(f).bits(), hi, "bits 0x{hi:04x} round-trip");
+        }
+        let _ = (b.sign(), b.exponent(), b.mantissa(), b.is_zero_or_subnormal());
+    }
+    let mut rng = Rng::new(11);
+    for x in rng.normal_vec(64) {
+        let b = Bf16::from_f32(x);
+        assert_eq!(Bf16::from_f32(b.to_f32()).bits(), b.bits(), "bf16 values are fixed points");
+    }
+}
+
+#[test]
+fn lns_conversion_and_add_are_defined() {
+    serial_pool();
+    let mut rng = Rng::new(23);
+    for x in rng.normal_vec(48) {
+        let l = Lns::from_bf16(Bf16::from_f32(x));
+        let _ = l.to_bf16();
+        let _ = l.to_f64();
+        assert_eq!(lns_add(l, Lns::ZERO), l, "zero is the additive identity");
+        // exercise the PWL table walk (Eq. 19) across sign/magnitude
+        // combinations; bit-exact values are pinned by the tier-1 suite,
+        // Miri only vets the integer manipulation for UB
+        let _ = lns_add(l, l.neg());
+        let _ = lns_add(l, l.scaled(-3));
+    }
+}
+
+#[test]
+fn chunk_views_match_dense_planes_across_append() {
+    serial_pool();
+    let mut rng = Rng::new(5);
+    let (n, d) = (7, 3);
+    let k = Mat::from_vec(n, d, rng.normal_vec(n * d)).round_bf16();
+    let v = Mat::from_vec(n, d, rng.normal_vec(n * d)).round_bf16();
+    // chunk capacity 4 rows: row 4 starts chunk 1, views straddle the seam
+    let mut kv = PreparedKv::with_block_rows(k.clone(), v.clone(), 4);
+    for (lo, hi) in [(0, n), (2, 6), (3, 4), (4, 4)] {
+        assert_eq!(bits(&kv.k_rows(lo, hi)), bits(&k.rows_slice(lo, hi)), "K view [{lo},{hi})");
+        assert_eq!(bits(&kv.v_rows(lo, hi)), bits(&v.rows_slice(lo, hi)), "V view [{lo},{hi})");
+    }
+    for r in 0..n {
+        assert_eq!(kv.k_row(r), k.row(r), "chunk-resolved K row {r}");
+        let (signs, logs) = (kv.v_row_signs(r), kv.v_row_logs(r));
+        assert_eq!(signs.len(), d + 1, "sign lane width row {r}");
+        assert_eq!(logs.len(), d + 1, "log lane width row {r}");
+    }
+    // append crosses a chunk boundary (7 + 3 rows, capacity 4): the
+    // copy-on-write tail-chunk clone and fresh-chunk alloc both slice
+    let ka = Mat::from_vec(3, d, rng.normal_vec(3 * d)).round_bf16();
+    let va = Mat::from_vec(3, d, rng.normal_vec(3 * d)).round_bf16();
+    let grown = kv.appended(&ka, &va);
+    kv.append(&ka, &va);
+    assert_eq!(kv.n(), n + 3);
+    assert_eq!(bits(&kv.k_mat()), bits(&grown.k_mat()), "in-place == copy-on-write");
+    assert_eq!(kv.k_row(n + 2), ka.row(2), "appended rows resolve through the chunk table");
+}
+
+#[test]
+fn tiled_attention_matches_blocked_serially() {
+    serial_pool();
+    let mut rng = Rng::new(41);
+    let (b, n, d) = (3, 6, 2);
+    let q = Mat::from_vec(b, d, rng.normal_vec(b * d)).round_bf16();
+    let k = Mat::from_vec(n, d, rng.normal_vec(n * d)).round_bf16();
+    let v = Mat::from_vec(n, d, rng.normal_vec(n * d)).round_bf16();
+    let kv = PreparedKv::with_block_rows(k, v, 4);
+    let reference = kv.attention(&q, None, None);
+    let blocked = kv.attention_blocked(&q, 2, None);
+    let tiled = kv.attention_tiled(&q, 2, None, 2);
+    assert_eq!(bits(&reference), bits(&blocked), "blocked == dense, serial pool");
+    assert_eq!(bits(&blocked), bits(&tiled), "tile height never changes bits");
+}
+
+#[test]
+fn zero_worker_pool_transmute_is_sound() {
+    serial_pool();
+    // WorkerPool::new(0): no threads, but run_scoped still erases the
+    // job lifetimes through its unsafe transmute and drains on the
+    // caller — the exact code path Miri must vet for stacked-borrows UB
+    let pool = WorkerPool::new(0);
+    let mut out = vec![0usize; 12];
+    {
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            .chunks_mut(4)
+            .enumerate()
+            .map(|(c, chunk)| {
+                Box::new(move || {
+                    for (j, slot) in chunk.iter_mut().enumerate() {
+                        *slot = c * 4 + j + 1;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(jobs);
+    }
+    assert!(out.iter().enumerate().all(|(i, &x)| x == i + 1), "every borrowed slot written");
+}

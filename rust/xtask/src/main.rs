@@ -1,0 +1,495 @@
+//! Repo automation (cargo-xtask pattern).  `cargo run -p xtask -- lint`
+//! runs the concurrency-invariant linter over `rust/src`.
+//!
+//! The linter enforces the project's concurrency rules at the source
+//! level — cheap, deterministic, and independent of any nightly tooling
+//! (loom / Miri / TSan cover the *dynamic* side; this covers the rules a
+//! dynamic tool cannot see):
+//!
+//! * `facade` — all synchronization primitives are imported through
+//!   `crate::sync`; `std::sync` / `std::thread` appear nowhere else
+//!   (including test code).  This is what makes the loom suite
+//!   model-check the exact shipped implementations rather than a copy.
+//! * `no-unwrap` — no `.unwrap()` / `.expect(` in non-test coordinator
+//!   code.  A panicking worker strands its batch; every serve-path
+//!   failure must flow through `ServeError` / poison-recovery instead.
+//! * `ordering-comment` — every `Ordering::` use site in non-test code
+//!   carries an `// ordering: <Ord> — rationale` comment on the same
+//!   line or within the 4 preceding lines.  Keeps the release/acquire
+//!   audit (EXPERIMENTS.md §Verification) from rotting.
+//! * `lock-order` — coordinator locks are acquired in the documented
+//!   order KvStore → Metrics → queues (`coordinator/protocol.rs` module
+//!   docs), never reversed.  Tracked textually per scope via live
+//!   `let`-bound guards.
+//!
+//! Suppress a single finding with a trailing `// lint:allow(<rule>)`
+//! on the offending line.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => lint(),
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- lint");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// One reported rule violation.
+struct Finding {
+    file: PathBuf,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+fn lint() -> ExitCode {
+    let manifest = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+    let src = Path::new(&manifest).join("..").join("src");
+    let mut files = Vec::new();
+    collect_rs(&src, &mut files);
+    files.sort();
+
+    let mut findings = Vec::new();
+    for f in &files {
+        match std::fs::read_to_string(f) {
+            Ok(text) => lint_file(f, &text, &mut findings),
+            Err(e) => findings.push(Finding {
+                file: f.clone(),
+                line: 0,
+                rule: "io",
+                msg: format!("unreadable: {e}"),
+            }),
+        }
+    }
+
+    if findings.is_empty() {
+        println!("lint: OK ({} files)", files.len());
+        ExitCode::SUCCESS
+    } else {
+        let mut out = String::new();
+        for f in &findings {
+            let _ = writeln!(out, "{}:{}: [{}] {}", f.file.display(), f.line, f.rule, f.msg);
+        }
+        eprint!("{out}");
+        eprintln!("lint: {} finding(s) in {} files", findings.len(), files.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(rd) = std::fs::read_dir(dir) else { return };
+    for entry in rd.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// A source line split into its code text (string-literal bodies and
+/// comments blanked out, byte positions preserved) and its comment text.
+struct Line {
+    code: String,
+    comment: String,
+}
+
+/// Split `text` into per-line code/comment views with a small scanner
+/// that understands line comments, nested block comments, string
+/// literals (incl. raw strings), char literals, and lifetimes.
+fn split_lines(text: &str) -> Vec<Line> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Code,
+        Str,
+        RawStr(usize), // number of #s
+        Block(usize),  // nesting depth
+    }
+    let mut st = St::Code;
+    let mut lines = Vec::new();
+    for raw in text.lines() {
+        let b: Vec<char> = raw.chars().collect();
+        let mut code = String::with_capacity(b.len());
+        let mut comment = String::new();
+        let mut i = 0;
+        while i < b.len() {
+            match st {
+                St::Code => {
+                    let c = b[i];
+                    if c == '/' && i + 1 < b.len() && b[i + 1] == '/' {
+                        // line comment runs to EOL
+                        comment.push_str(&raw[raw.char_indices().nth(i).map(|(o, _)| o).unwrap_or(0)..]);
+                        while i < b.len() {
+                            code.push(' ');
+                            i += 1;
+                        }
+                    } else if c == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+                        st = St::Block(1);
+                        code.push(' ');
+                        code.push(' ');
+                        i += 2;
+                    } else if c == '"' {
+                        st = St::Str;
+                        code.push('"');
+                        i += 1;
+                    } else if c == 'r'
+                        && i + 1 < b.len()
+                        && (b[i + 1] == '"' || b[i + 1] == '#')
+                        && !prev_ident(&b, i)
+                    {
+                        // raw string r"..." / r#"..."#
+                        let mut hashes = 0;
+                        let mut j = i + 1;
+                        while j < b.len() && b[j] == '#' {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if j < b.len() && b[j] == '"' {
+                            st = St::RawStr(hashes);
+                            for _ in i..=j {
+                                code.push(' ');
+                            }
+                            i = j + 1;
+                        } else {
+                            code.push(c);
+                            i += 1;
+                        }
+                    } else if c == '\'' {
+                        // char literal vs lifetime: a char closes within
+                        // a couple of chars, a lifetime never closes
+                        let close = if i + 1 < b.len() && b[i + 1] == '\\' {
+                            (i + 2..b.len().min(i + 8)).find(|&j| b[j] == '\'')
+                        } else if i + 2 < b.len() && b[i + 2] == '\'' {
+                            Some(i + 2)
+                        } else {
+                            None
+                        };
+                        if let Some(j) = close {
+                            for _ in i..=j {
+                                code.push(' ');
+                            }
+                            i = j + 1;
+                        } else {
+                            code.push('\''); // lifetime tick
+                            i += 1;
+                        }
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+                St::Str => {
+                    let c = b[i];
+                    if c == '\\' && i + 1 < b.len() {
+                        code.push(' ');
+                        code.push(' ');
+                        i += 2;
+                    } else if c == '"' {
+                        st = St::Code;
+                        code.push('"');
+                        i += 1;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                St::RawStr(h) => {
+                    if b[i] == '"' && (i + 1..=i + h).all(|j| j < b.len() && b[j] == '#') {
+                        st = St::Code;
+                        for _ in 0..=h {
+                            code.push(' ');
+                        }
+                        i += 1 + h;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                St::Block(d) => {
+                    if b[i] == '*' && i + 1 < b.len() && b[i + 1] == '/' {
+                        st = if d == 1 { St::Code } else { St::Block(d - 1) };
+                        code.push(' ');
+                        code.push(' ');
+                        i += 2;
+                    } else if b[i] == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+                        st = St::Block(d + 1);
+                        code.push(' ');
+                        code.push(' ');
+                        i += 2;
+                    } else {
+                        comment.push(b[i]);
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+            }
+        }
+        // St::Str / St::RawStr / St::Block legitimately span lines in
+        // Rust; keep the state for the next line.
+        lines.push(Line { code, comment });
+    }
+    lines
+}
+
+fn prev_ident(b: &[char], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_')
+}
+
+/// Lock classes in their documented acquisition order.
+const LOCK_ORDER: [&str; 3] = ["KvStore", "Metrics", "queue"];
+
+/// A live `let`-bound lock guard inside the current scope.
+struct Guard {
+    name: String,
+    rank: usize,
+    depth: i32,
+    line: usize,
+}
+
+fn lint_file(path: &Path, text: &str, findings: &mut Vec<Finding>) {
+    let rel = path.to_string_lossy().replace('\\', "/");
+    let is_facade = rel.ends_with("/sync.rs") || rel.ends_with("src/sync.rs");
+    let in_coordinator = rel.contains("/coordinator/");
+    let raw_lines: Vec<&str> = text.lines().collect();
+    let lines = split_lines(text);
+
+    // Repo convention: the `#[cfg(test)] mod tests` block is the last
+    // item of a file, so everything from its attribute on is test code.
+    let test_start = lines
+        .iter()
+        .position(|l| l.code.trim() == "#[cfg(test)]")
+        .unwrap_or(lines.len());
+
+    let allowed = |idx: usize, rule: &str| -> bool {
+        raw_lines
+            .get(idx)
+            .is_some_and(|r| r.contains(&format!("lint:allow({rule})")))
+    };
+
+    let mut depth: i32 = 0;
+    let mut guards: Vec<Guard> = Vec::new();
+
+    for (idx, line) in lines.iter().enumerate() {
+        let code = &line.code;
+        let in_test = idx >= test_start;
+        let lineno = idx + 1;
+
+        // facade: no std::sync / std::thread outside the facade module
+        if !is_facade
+            && (code.contains("std::sync") || code.contains("std::thread"))
+            && !allowed(idx, "facade")
+        {
+            findings.push(Finding {
+                file: path.into(),
+                line: lineno,
+                rule: "facade",
+                msg: "import concurrency primitives through crate::sync, not std".into(),
+            });
+        }
+
+        // no-unwrap: coordinator non-test code must not panic on Results
+        if in_coordinator
+            && !in_test
+            && (code.contains(".unwrap()") || code.contains(".expect("))
+            && !allowed(idx, "no-unwrap")
+        {
+            findings.push(Finding {
+                file: path.into(),
+                line: lineno,
+                rule: "no-unwrap",
+                msg: "serve paths must not panic; return ServeError or recover".into(),
+            });
+        }
+
+        // ordering-comment: every atomic ordering site is documented.
+        // The `// ordering:` marker may sit above the site separated by
+        // at most 4 code lines; comment-only lines are free, so
+        // multi-line rationales and multi-line statements both work.
+        if !in_test && code.contains("Ordering::") && !allowed(idx, "ordering-comment") {
+            let mut near = line.comment.contains("ordering:");
+            let mut budget: i32 = 4;
+            let mut j = idx;
+            while !near && j > 0 && budget >= 0 {
+                j -= 1;
+                if lines[j].comment.contains("ordering:") {
+                    near = true;
+                    break;
+                }
+                let comment_only = lines[j].code.trim().is_empty() && !lines[j].comment.is_empty();
+                if !comment_only {
+                    budget -= 1;
+                }
+            }
+            if !near {
+                findings.push(Finding {
+                    file: path.into(),
+                    line: lineno,
+                    rule: "ordering-comment",
+                    msg: "atomic access without an `// ordering: <Ord> — why` comment nearby"
+                        .into(),
+                });
+            }
+        }
+
+        // lock-order: textual live-guard tracking (coordinator only)
+        if in_coordinator && !in_test {
+            if code.contains(".lock()") && !allowed(idx, "lock-order") {
+                let rank = classify_lock(&rel, code);
+                if let Some(held) = guards.iter().find(|g| g.rank > rank) {
+                    findings.push(Finding {
+                        file: path.into(),
+                        line: lineno,
+                        rule: "lock-order",
+                        msg: format!(
+                            "acquires {} while holding {} (line {}); order is {}",
+                            LOCK_ORDER[rank],
+                            LOCK_ORDER[held.rank],
+                            held.line,
+                            LOCK_ORDER.join(" -> ")
+                        ),
+                    });
+                }
+                // only `let`-bound guards outlive the statement
+                if let Some(name) = let_binding(code) {
+                    guards.push(Guard { name, rank, depth, line: lineno });
+                }
+            }
+            // explicit early release
+            for g in 0..guards.len() {
+                if code.contains(&format!("drop({})", guards[g].name)) {
+                    guards.remove(g);
+                    break;
+                }
+            }
+        }
+
+        for c in code.chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    guards.retain(|g| g.depth < depth + 1);
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+/// Rank a `.lock()` call site in the documented order
+/// KvStore(0) -> Metrics(1) -> queues/other(2).
+fn classify_lock(rel_path: &str, code: &str) -> usize {
+    if rel_path.ends_with("kvstore.rs") {
+        0
+    } else if rel_path.ends_with("metrics.rs") || code.contains("latencies") || code.contains("metrics.") {
+        1
+    } else {
+        2
+    }
+}
+
+/// `let [mut] <name> = ....lock()...` -> the bound guard name.
+fn let_binding(code: &str) -> Option<String> {
+    let t = code.trim_start();
+    let rest = t.strip_prefix("let ")?;
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+    let name: String = rest
+        .chars()
+        .take_while(|c| c.is_alphanumeric() || *c == '_')
+        .collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_src(rel: &str, src: &str) -> Vec<String> {
+        let mut f = Vec::new();
+        lint_file(Path::new(rel), src, &mut f);
+        f.into_iter().map(|x| format!("{}:{}", x.rule, x.line)).collect()
+    }
+
+    #[test]
+    fn facade_rule_flags_std_sync_and_thread() {
+        let hits = lint_src(
+            "src/runtime/pool.rs",
+            "use std::sync::Mutex;\nuse crate::sync::Arc;\nfn f() { std::thread::spawn(|| {}); }\n",
+        );
+        assert_eq!(hits, vec!["facade:1", "facade:3"]);
+    }
+
+    #[test]
+    fn facade_rule_ignores_comments_strings_and_the_facade_itself() {
+        assert!(lint_src("src/a.rs", "// std::sync is banned\nlet s = \"std::thread\";\n").is_empty());
+        assert!(lint_src("src/sync.rs", "pub use std::sync::Arc;\n").is_empty());
+    }
+
+    #[test]
+    fn no_unwrap_rule_is_coordinator_and_non_test_only() {
+        let src = "fn f() { x.unwrap(); }\n#[cfg(test)]\nmod tests { fn g() { y.unwrap(); } }\n";
+        assert_eq!(lint_src("src/coordinator/server.rs", src), vec!["no-unwrap:1"]);
+        assert!(lint_src("src/attention/kernel.rs", src).is_empty());
+    }
+
+    #[test]
+    fn ordering_comment_window_is_same_line_or_four_code_lines_above() {
+        let ok = "// ordering: Relaxed — counter\nx.load(Ordering::Relaxed);\n";
+        assert!(lint_src("src/a.rs", ok).is_empty());
+        let far = "// ordering: Relaxed\n\n\n\n\n\nx.load(Ordering::Relaxed);\n";
+        assert_eq!(lint_src("src/a.rs", far), vec!["ordering-comment:7"]);
+        let inline = "x.store(1, Ordering::SeqCst); // ordering: SeqCst — gate\n";
+        assert!(lint_src("src/a.rs", inline).is_empty());
+        // comment-only lines don't consume the window: a multi-line
+        // rationale block followed by a multi-line statement still passes
+        let block = "// ordering: Relaxed — stats\n// line two of the why\n// line three\nm\n    .counter\n    .fetch_add(1, Ordering::Relaxed);\n";
+        assert!(lint_src("src/a.rs", block).is_empty(), "{:?}", lint_src("src/a.rs", block));
+        let undocumented = "fn f() {\n    x.load(Ordering::Relaxed);\n}\n";
+        assert_eq!(lint_src("src/a.rs", undocumented), vec!["ordering-comment:2"]);
+    }
+
+    #[test]
+    fn lock_order_flags_reversed_acquisition() {
+        // holding a queue guard, then locking the KvStore: reversed
+        let src = "fn f(&self) {\n    let q = self.inner.lock();\n    let k = kv.inner.lock();\n}\n";
+        let hits = lint_src("src/coordinator/server.rs", src);
+        assert!(hits.is_empty(), "same-file ranks are both queue: {hits:?}");
+        let src_kv = "fn f(&self) {\n    let q = queue.lock();\n    let m = metrics.latencies_us.lock();\n}\n";
+        assert_eq!(lint_src("src/coordinator/server.rs", src_kv), vec!["lock-order:3"]);
+    }
+
+    #[test]
+    fn lock_order_guard_dies_at_scope_end_and_on_drop() {
+        let scoped =
+            "fn f(&self) {\n    {\n        let q = queue.lock();\n    }\n    let m = latencies.lock();\n}\n";
+        assert!(lint_src("src/coordinator/server.rs", scoped).is_empty());
+        let dropped =
+            "fn f(&self) {\n    let q = queue.lock();\n    drop(q);\n    let m = latencies.lock();\n}\n";
+        assert!(lint_src("src/coordinator/server.rs", dropped).is_empty());
+    }
+
+    #[test]
+    fn lint_allow_suppresses_a_single_line() {
+        let src = "use std::sync::Mutex; // lint:allow(facade)\n";
+        assert!(lint_src("src/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lifetimes_do_not_open_char_literals() {
+        // if '\'' handling is wrong, the rest of the file becomes a
+        // string and the std::thread below goes unseen
+        let src = "fn f<'a>(x: &'a str) {}\nuse std::thread;\n";
+        assert_eq!(lint_src("src/a.rs", src), vec!["facade:2"]);
+    }
+}
