@@ -4,6 +4,9 @@
 //! accelerator compute-batch wall time (coordinator overhead = difference),
 //! a decode-loop scenario (prefill once, then N append+attend steps)
 //! comparing the append-only path against rebuilding the session per step,
+//! a continuous-decode scenario (S resident sessions streaming one token
+//! per round through the slot-table scheduler — tokens/s plus the
+//! server-side inter-token p99),
 //! and the query-tiled kernel microbench (EXPERIMENTS.md §Tiling): exact
 //! K/V stream traffic per tile height plus the batch-1 two-axis decode
 //! grid.
@@ -374,6 +377,100 @@ fn main() -> anyhow::Result<()> {
         server.shutdown();
     }
     dt.emit("decode_loop");
+
+    // Continuous batching (EXPERIMENTS.md §Continuous-batching): S resident
+    // decode sessions each streaming one token per round (append ack, then
+    // attend), scheduled from the slot table — after the first round no
+    // request round-trips through the window batcher, so "admissions" stays
+    // at the S joins while "slot hits" grows with every decoded token.
+    // tokens/s counts decoded tokens (one append per session per round);
+    // inter-token p99 is the server-side decode-gap reservoir, measured
+    // between consecutive decode dispatches of the same session.
+    let cont_steps = env_usize("HFA_BENCH_CONT_STEPS", 32).min(n / 2);
+    let cont_prefill = (n / 4).max(1).min(n - cont_steps);
+    let mut ct = Table::new(
+        &format!(
+            "Continuous decode — S resident sessions x 1 token/round, \
+             prefill {cont_prefill} of N={n}, d={d}"
+        ),
+        &["sessions", "steps", "tokens/s", "inter-token p99 us", "admissions", "slot hits"],
+    );
+    for sessions in [1usize, 16, 64] {
+        let cont_coord = CoordinatorConfig {
+            max_batch: 16,
+            max_total_batch: 1024,
+            batch_window_us: 200,
+            workers: 2,
+            queue_depth: (2 * sessions).max(256),
+            ..CoordinatorConfig::default()
+        };
+        let kv = Arc::new(KvStore::new(n, d, sessions));
+        for s in 0..sessions {
+            kv.put(
+                &format!("cont-{s}"),
+                k.rows_slice(0, cont_prefill),
+                v.rows_slice(0, cont_prefill),
+            )?;
+        }
+        let factories = (0..cont_coord.workers)
+            .map(|_| SimBackend::factory(Arith::Hfa, accel_cfg.clone()))
+            .collect();
+        let server = Server::start(&cont_coord, kv, factories)?;
+        let t0 = Instant::now();
+        for step in 0..cont_steps {
+            let at = cont_prefill + step;
+            // one appended token per session (the first round's appends are
+            // the S admissions; later rounds hit the resident slots)...
+            let acks: Vec<_> = (0..sessions)
+                .map(|s| loop {
+                    match server.submit_append(
+                        &format!("cont-{s}"),
+                        k.rows_slice(at, at + 1),
+                        v.rows_slice(at, at + 1),
+                    ) {
+                        Ok(rx) => break rx,
+                        Err(_) => std::thread::sleep(Duration::from_micros(50)),
+                    }
+                })
+                .collect();
+            for rx in acks {
+                let r = rx.recv().expect("append ack");
+                assert!(r.ok(), "{:?}", r.output);
+            }
+            // ...then one ragged multi-session decode grid over the slots
+            let rxs: Vec<_> = (0..sessions)
+                .map(|s| loop {
+                    match server.submit(&format!("cont-{s}"), rng.normal_vec(d)) {
+                        Ok(rx) => break rx,
+                        Err(_) => std::thread::sleep(Duration::from_micros(50)),
+                    }
+                })
+                .collect();
+            for rx in rxs {
+                let r = rx.recv().expect("decode response");
+                assert!(r.ok(), "{:?}", r.output);
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let tokens_per_s = (sessions * cont_steps) as f64 / wall;
+        let snap = server.metrics.snapshot();
+        ct.row(&[
+            sessions.to_string(),
+            cont_steps.to_string(),
+            format!("{tokens_per_s:.0}"),
+            format!("{:.0}", snap.decode_gap_p99_us),
+            snap.batcher_admissions.to_string(),
+            snap.slot_hits.to_string(),
+        ]);
+        json_rows.push(BenchRow {
+            bench: format!("continuous_decode_s{sessions}"),
+            shape: format!("S{sessions}_N{n}_d{d}_prefill{cont_prefill}_steps{cont_steps}"),
+            ns_per_step: 1e9 / tokens_per_s.max(1e-9),
+            kv_bytes_copied: 0,
+        });
+        server.shutdown();
+    }
+    ct.emit("continuous_decode");
 
     // machine-readable trajectory file, self-validated so CI's smoke run
     // catches a writer regression

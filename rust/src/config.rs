@@ -72,6 +72,22 @@ pub struct CoordinatorConfig {
     /// it lasts a panicked worker rebuilds its backend in place instead
     /// of shrinking the pool toward zero.
     pub worker_respawn_budget: u32,
+    /// Continuous scheduler: max tokens (append rows + queries) one
+    /// prefill admission dispatch may carry.  `0` = unlimited.
+    pub max_batch_prefill_tokens: usize,
+    /// Continuous scheduler: max total resident tokens (KV rows of all
+    /// slot sessions plus the tokens being admitted) the running batch
+    /// may hold; under pressure idle slots are retired LRU before an
+    /// admission is deferred.  `0` = unlimited.
+    pub max_batch_total_tokens: usize,
+    /// Continuous scheduler: decode keeps priority until the waiting
+    /// queue reaches `ceil(waiting_served_ratio * running_slots)` groups
+    /// (TGI's `waiting_served_ratio`); then decode pauses one iteration
+    /// to admit prefills.  An empty running batch always admits.
+    pub waiting_served_ratio: f64,
+    /// Starvation override: a waiting group older than this many decode
+    /// iterations is admitted even below the ratio threshold.
+    pub max_waiting_iters: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -87,6 +103,10 @@ impl Default for CoordinatorConfig {
             max_retries: 2,
             retry_backoff_us: 100,
             worker_respawn_budget: 4,
+            max_batch_prefill_tokens: 0,
+            max_batch_total_tokens: 0,
+            waiting_served_ratio: 1.2,
+            max_waiting_iters: 4,
         }
     }
 }
@@ -167,6 +187,16 @@ impl Config {
         if let Some(v) = map.get("worker_respawn_budget") {
             cfg.coord.worker_respawn_budget = v.parse().context("worker_respawn_budget")?;
         }
+        cfg.coord.max_batch_prefill_tokens =
+            get_usize(&map, "max_batch_prefill_tokens", cfg.coord.max_batch_prefill_tokens)?;
+        cfg.coord.max_batch_total_tokens =
+            get_usize(&map, "max_batch_total_tokens", cfg.coord.max_batch_total_tokens)?;
+        if let Some(v) = map.get("waiting_served_ratio") {
+            cfg.coord.waiting_served_ratio = v.parse().context("waiting_served_ratio")?;
+        }
+        if let Some(v) = map.get("max_waiting_iters") {
+            cfg.coord.max_waiting_iters = v.parse().context("max_waiting_iters")?;
+        }
 
         anyhow::ensure!(
             cfg.accel.seq_len % cfg.accel.kv_blocks == 0,
@@ -225,6 +255,31 @@ mod tests {
         // defaults survive when unset
         let c = Config::resolve(None, &Args::parse(Vec::<String>::new())).unwrap();
         assert_eq!(c.coord, CoordinatorConfig::default());
+    }
+
+    #[test]
+    fn continuous_batching_knobs_resolve() {
+        let args = Args::parse([
+            "--max-batch-prefill-tokens".into(),
+            "4096".into(),
+            "--max-batch-total-tokens".into(),
+            "16384".into(),
+            "--waiting-served-ratio".into(),
+            "0.3".into(),
+            "--max-waiting-iters".into(),
+            "20".into(),
+        ]);
+        let c = Config::resolve(None, &args).unwrap();
+        assert_eq!(c.coord.max_batch_prefill_tokens, 4096);
+        assert_eq!(c.coord.max_batch_total_tokens, 16384);
+        assert_eq!(c.coord.waiting_served_ratio, 0.3);
+        assert_eq!(c.coord.max_waiting_iters, 20);
+        // defaults: budgets unlimited, TGI-like ratio, bounded starvation
+        let c = Config::resolve(None, &Args::parse(Vec::<String>::new())).unwrap();
+        assert_eq!(c.coord.max_batch_prefill_tokens, 0);
+        assert_eq!(c.coord.max_batch_total_tokens, 0);
+        assert_eq!(c.coord.waiting_served_ratio, 1.2);
+        assert_eq!(c.coord.max_waiting_iters, 4);
     }
 
     #[test]

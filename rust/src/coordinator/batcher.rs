@@ -27,6 +27,7 @@
 use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
 
+use super::protocol::{BatchKind, IterToken};
 use super::request::AttentionRequest;
 
 /// One session's slice of a super-batch: requests in arrival order (any
@@ -41,11 +42,24 @@ pub struct SessionBatch {
 /// keys pending groups by session), ordered oldest deadline first.
 pub struct Batch {
     pub groups: Vec<SessionBatch>,
+    /// Which scheduling lane formed this dispatch (the batcher always
+    /// emits `Formed`; the continuous scheduler re-tags its admissions
+    /// as `Prefill` and its iteration assemblies as `Decode`).
+    pub kind: BatchKind,
+    /// Iteration completion token for gated dispatches: dropped when the
+    /// batch is fully retired — served, shed, or failed, on every path
+    /// including worker panic unwind — reopening the scheduler's lane.
+    pub done: Option<IterToken>,
 }
 
 impl Batch {
+    /// An ungated dispatch (window/cap/barrier front-end, drain path).
+    pub fn formed(groups: Vec<SessionBatch>) -> Batch {
+        Batch { groups, kind: BatchKind::Formed, done: None }
+    }
+
     fn single(session: String, requests: Vec<AttentionRequest>) -> Batch {
-        Batch { groups: vec![SessionBatch { session, requests }] }
+        Batch::formed(vec![SessionBatch { session, requests }])
     }
 
     /// Total requests across every session group.
@@ -197,14 +211,14 @@ impl Batcher {
         let mut cur_total = 0usize;
         for g in groups {
             if !cur.is_empty() && cur_total + g.requests.len() > self.max_total {
-                out.push(Batch { groups: std::mem::take(&mut cur) });
+                out.push(Batch::formed(std::mem::take(&mut cur)));
                 cur_total = 0;
             }
             cur_total += g.requests.len();
             cur.push(g);
         }
         if !cur.is_empty() {
-            out.push(Batch { groups: cur });
+            out.push(Batch::formed(cur));
         }
         out
     }
@@ -236,6 +250,13 @@ impl Batcher {
 
     pub fn pending_requests(&self) -> usize {
         self.pending.values().map(|(_, v)| v.len()).sum()
+    }
+
+    /// Whether `session` has a group still forming.  The continuous
+    /// scheduler must not route around a forming group (arrival order
+    /// would break), so its slot routing checks this first.
+    pub fn has_pending_session(&self, session: &str) -> bool {
+        self.pending.contains_key(session)
     }
 }
 

@@ -359,6 +359,13 @@ impl KvStore {
         self.inner.lock().entries.get(session).map(|s| s.bytes)
     }
 
+    /// Resident KV rows (tokens) of one session, or `None` when it is
+    /// not resident.  No LRU refresh — the continuous scheduler's
+    /// token-budget accounting must not count as a use.
+    pub fn session_rows(&self, session: &str) -> Option<usize> {
+        self.inner.lock().entries.get(session).map(|s| s.entry.prepared.n())
+    }
+
     pub fn resident(&self) -> usize {
         self.inner.lock().entries.len()
     }
@@ -476,6 +483,27 @@ mod tests {
         assert_eq!(store.get("s").unwrap().prepared().n(), 6);
         assert!(store.append("s", k1, v1).is_ok());
         assert_eq!(store.get("s").unwrap().prepared().n(), 7);
+    }
+
+    #[test]
+    fn session_rows_reports_growth_without_refreshing_lru() {
+        let store = KvStore::new(8, 4, 2); // budget: two full 8-row sessions
+        let (k, v) = kv(6, 4, 0.0);
+        store.put("a", k, v).unwrap();
+        let (kf, vf) = kv(8, 4, 0.0);
+        store.put("b", kf.clone(), vf.clone()).unwrap();
+        assert_eq!(store.session_rows("a"), Some(6));
+        assert_eq!(store.session_rows("missing"), None);
+        let (k1, v1) = kv(1, 4, 1.0);
+        store.append("a", k1, v1).unwrap();
+        assert_eq!(store.session_rows("a"), Some(7), "row count tracks appends");
+        store.get("a"); // make "a" most recently *used*
+        // probe "b" last: were the probe an LRU touch, "b" would now be
+        // the most recent and "a" the victim below
+        assert_eq!(store.session_rows("b"), Some(8));
+        store.put("c", kf, vf).unwrap(); // over budget: evicts the true LRU
+        assert!(store.contains("a"));
+        assert!(!store.contains("b"), "session_rows must not refresh LRU");
     }
 
     #[test]

@@ -107,7 +107,29 @@ pub struct Metrics {
     /// caller went away — the implicit cancellation the server detects
     /// at delivery time).
     pub delivery_lost: AtomicU64,
+    /// Sessions admitted into scheduler residency through the batcher
+    /// front-end (slot creations).  A continuous decode loop pays this
+    /// once per session, not once per token — the structural win the
+    /// acceptance test pins (`batcher_admissions == 1` for an N-token
+    /// decode).
+    pub batcher_admissions: AtomicU64,
+    /// Requests routed straight into a resident slot, bypassing the
+    /// window/barrier batcher entirely.
+    pub slot_hits: AtomicU64,
+    /// Prefill dispatches assembled by the continuous scheduler.
+    pub prefill_iters: AtomicU64,
+    /// Decode iterations assembled by the continuous scheduler.
+    pub decode_iters: AtomicU64,
     latencies_us: Mutex<Reservoir>,
+    /// Ingress -> dispatch span (time queued in the batcher, the waiting
+    /// queue, or a resident slot before a worker picked the request up).
+    queue_wait_us: Mutex<Reservoir>,
+    /// Wall time of prefill dispatches (admission to completion).
+    prefill_us: Mutex<Reservoir>,
+    /// Inter-token decode gap: per-slot time between consecutive decode
+    /// iterations that carried the slot's work — the token cadence whose
+    /// p99 the continuous scheduler exists to bound.
+    decode_gap_us: Mutex<Reservoir>,
 }
 
 /// A point-in-time metrics summary.
@@ -137,6 +159,16 @@ pub struct Snapshot {
     pub p50_us: f64,
     pub p99_us: f64,
     pub mean_us: f64,
+    pub batcher_admissions: u64,
+    pub slot_hits: u64,
+    pub prefill_iters: u64,
+    pub decode_iters: u64,
+    pub queue_wait_p50_us: f64,
+    pub queue_wait_p99_us: f64,
+    pub prefill_p50_us: f64,
+    pub prefill_p99_us: f64,
+    pub decode_gap_p50_us: f64,
+    pub decode_gap_p99_us: f64,
 }
 
 impl Default for Metrics {
@@ -171,12 +203,34 @@ impl Metrics {
             retries: z(0),
             worker_respawns: z(0),
             delivery_lost: z(0),
+            batcher_admissions: z(0),
+            slot_hits: z(0),
+            prefill_iters: z(0),
+            decode_iters: z(0),
             latencies_us: Mutex::new(Reservoir::default()),
+            queue_wait_us: Mutex::new(Reservoir::default()),
+            prefill_us: Mutex::new(Reservoir::default()),
+            decode_gap_us: Mutex::new(Reservoir::default()),
         }
     }
 
     pub fn observe_latency(&self, us: f64) {
         self.latencies_us.lock().observe(us);
+    }
+
+    /// Record one request's queue-wait span (ingress to worker pickup).
+    pub fn observe_queue_wait(&self, us: f64) {
+        self.queue_wait_us.lock().observe(us);
+    }
+
+    /// Record one prefill dispatch's wall time.
+    pub fn observe_prefill(&self, us: f64) {
+        self.prefill_us.lock().observe(us);
+    }
+
+    /// Record one slot's inter-token decode gap.
+    pub fn observe_decode_gap(&self, us: f64) {
+        self.decode_gap_us.lock().observe(us);
     }
 
     /// Count one failed terminal response: the aggregate `failed` plus
@@ -203,15 +257,29 @@ impl Metrics {
         self.latencies_us.lock().samples.len()
     }
 
+    /// Sorted copy of one span reservoir's samples (bounded copy under
+    /// its lock, sort outside; each reservoir mutex is taken alone).
+    fn sorted_samples(r: &Mutex<Reservoir>) -> Vec<f64> {
+        let mut v = {
+            let g = r.lock();
+            g.samples.clone()
+        };
+        // total_cmp: latencies are finite by construction, but a NaN that
+        // ever slipped in must not panic the metrics endpoint
+        v.sort_by(f64::total_cmp);
+        v
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         // bounded copy under the lock; the sort happens outside it
         let (mut lat, seen, sum) = {
             let g = self.latencies_us.lock();
             (g.samples.clone(), g.seen, g.sum)
         };
-        // total_cmp: latencies are finite by construction, but a NaN that
-        // ever slipped in must not panic the metrics endpoint
         lat.sort_by(f64::total_cmp);
+        let queue_wait = Metrics::sorted_samples(&self.queue_wait_us);
+        let prefill = Metrics::sorted_samples(&self.prefill_us);
+        let decode_gap = Metrics::sorted_samples(&self.decode_gap_us);
         // nearest-rank (ceil) percentile: the q-quantile is the smallest
         // sample with at least ceil(q * n) samples <= it.  The previous
         // `((n - 1) * q) as usize` truncated the rank, biasing tail
@@ -219,14 +287,15 @@ impl Metrics {
         // the *minimum* as p99, and at n = 4 the 3rd-smallest instead of
         // the max, collapsing p99 toward p50 exactly where the reservoir
         // is sparsest.
-        let pick = |q: f64| {
-            if lat.is_empty() {
+        let rank = |sorted: &[f64], q: f64| {
+            if sorted.is_empty() {
                 0.0
             } else {
-                let rank = (lat.len() as f64 * q).ceil() as usize;
-                lat[rank.clamp(1, lat.len()) - 1]
+                let rank = (sorted.len() as f64 * q).ceil() as usize;
+                sorted[rank.clamp(1, sorted.len()) - 1]
             }
         };
+        let pick = |q: f64| rank(&lat, q);
         // ordering: Relaxed — a snapshot is an advisory point-in-time
         // read of independent statistical counters, not a synchronization
         // point; callers needing exact totals join the serving threads
@@ -264,6 +333,16 @@ impl Metrics {
             p50_us: pick(0.5),
             p99_us: pick(0.99),
             mean_us: if seen == 0 { 0.0 } else { sum / seen as f64 },
+            batcher_admissions: ld(&self.batcher_admissions),
+            slot_hits: ld(&self.slot_hits),
+            prefill_iters: ld(&self.prefill_iters),
+            decode_iters: ld(&self.decode_iters),
+            queue_wait_p50_us: rank(&queue_wait, 0.5),
+            queue_wait_p99_us: rank(&queue_wait, 0.99),
+            prefill_p50_us: rank(&prefill, 0.5),
+            prefill_p99_us: rank(&prefill, 0.99),
+            decode_gap_p50_us: rank(&decode_gap, 0.5),
+            decode_gap_p99_us: rank(&decode_gap, 0.99),
         }
     }
 }
@@ -334,6 +413,33 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.p50_us, 0.0);
         assert_eq!(s.p99_us, 0.0);
+    }
+
+    #[test]
+    fn latency_spans_are_recorded_and_summarized_separately() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.observe_queue_wait(i as f64); // 1..=100
+            m.observe_prefill(10.0 * i as f64); // 10..=1000
+            m.observe_decode_gap(0.5 * i as f64); // 0.5..=50
+        }
+        // ordering: Relaxed — statistical counters, test-side writes
+        m.batcher_admissions.fetch_add(1, Ordering::Relaxed);
+        m.slot_hits.fetch_add(7, Ordering::Relaxed);
+        m.prefill_iters.fetch_add(2, Ordering::Relaxed);
+        m.decode_iters.fetch_add(4, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.queue_wait_p50_us, 50.0);
+        assert_eq!(s.queue_wait_p99_us, 99.0);
+        assert_eq!(s.prefill_p50_us, 500.0);
+        assert_eq!(s.prefill_p99_us, 990.0);
+        assert_eq!(s.decode_gap_p50_us, 25.0);
+        assert_eq!(s.decode_gap_p99_us, 49.5);
+        assert_eq!((s.batcher_admissions, s.slot_hits), (1, 7));
+        assert_eq!((s.prefill_iters, s.decode_iters), (2, 4));
+        // the spans never leak into the end-to-end latency reservoir
+        assert_eq!(m.latency_samples(), 0);
+        assert_eq!(s.p50_us, 0.0);
     }
 
     #[test]

@@ -1,16 +1,34 @@
 //! The serving coordinator — the L3 system a deployment would run around
-//! the accelerator: bounded ingress with backpressure, a **two-level**
-//! dynamic batcher (vLLM-router-style per-session groups fused into
-//! cross-session super-batches), session-keyed KV buffer management,
-//! worker threads owning plan-based execution backends (simulated
-//! accelerator or PJRT executable), and metrics.
+//! the accelerator: bounded ingress with backpressure, a **continuous
+//! scheduler** (TGI-style iteration-level batching over a slot table of
+//! resident decode sessions, with the window/barrier batcher surviving
+//! as the group-assembly front-end), session-keyed KV buffer
+//! management, worker threads owning plan-based execution backends
+//! (simulated accelerator or PJRT executable), and metrics.
 //!
 //! Built on std threads + channels (tokio is unavailable offline —
 //! DESIGN.md §9); the architecture is the same: one ingress queue, a
-//! batch-forming stage, N workers, per-request completion channels.
+//! scheduling stage, N workers, per-request completion channels.
 //! A dispatch may span many sessions ([`batcher::Batch`]); the worker
 //! answers all of them through one [`backend::Backend::compute_plan`]
 //! call whose outputs are bit-identical to serving each session alone.
+//!
+//! ## Continuous batching
+//!
+//! A session's *first* traffic takes the classic path: the
+//! [`batcher::Batcher`] forms its per-session group inside the batching
+//! window, and the closed group enters the [`scheduler::Scheduler`]'s
+//! waiting queue.  Admission (a `Prefill` dispatch, governed by
+//! `max_batch_prefill_tokens` / `max_batch_total_tokens` /
+//! `waiting_served_ratio` / `max_waiting_iters`) makes the session a
+//! **resident slot**; from then on its decode traffic is routed
+//! straight into the slot and served by per-iteration `Decode`
+//! dispatches assembled from all resident slots — an N-token decode
+//! costs one batcher admission instead of N round-trips, and a long
+//! prefill never stalls resident sessions' token cadence.  Sessions
+//! join and leave the running batch between iterations (cancellation
+//! and handle drops retire slots at the next boundary); outputs stay
+//! bit-identical to solo serving (`rust/tests/continuous_batching.rs`).
 //!
 //! ## Decode/append protocol
 //!
@@ -60,6 +78,7 @@ pub mod kvstore;
 pub mod metrics;
 pub mod protocol;
 pub mod request;
+pub mod scheduler;
 pub mod server;
 
 pub use backend::{prepare_entry, Backend, BackendFactory, PjrtBackend, SimBackend, TransientFault};
@@ -67,4 +86,5 @@ pub use chaos::{ChaosBackend, ChaosConfig};
 pub use kvstore::{KvEntry, KvStore};
 pub use metrics::Metrics;
 pub use request::{AttentionRequest, AttentionResponse, Payload, ServeError};
+pub use scheduler::{Scheduler, SchedulerCfg};
 pub use server::{ResponseHandle, Server};

@@ -1,8 +1,9 @@
 //! The coordinator's hand-rolled concurrency protocols, extracted into
 //! one loom-checkable module: the bounded dispatch queue
 //! ([`BatchQueue`]), the session cancellation registry
-//! ([`CancelRegistry`]), the panic-safe pin guard ([`PinGuard`]), and
-//! the in-flight admission gate ([`try_admit`]/[`release`]).
+//! ([`CancelRegistry`]), the panic-safe pin guard ([`PinGuard`]), the
+//! in-flight admission gate ([`try_admit`]/[`release`]), and the
+//! continuous-batching iteration gate ([`IterGate`]/[`IterToken`]).
 //!
 //! Everything here is built exclusively from the [`crate::sync`] facade,
 //! so under `RUSTFLAGS="--cfg loom"` the loom suite
@@ -32,8 +33,8 @@
 use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
 
-use crate::sync::atomic::{AtomicU64, Ordering};
-use crate::sync::{Condvar, Mutex};
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::{Arc, Condvar, Mutex};
 
 use super::kvstore::KvStore;
 
@@ -207,6 +208,114 @@ pub fn release(gauge: &AtomicU64) {
     gauge.fetch_sub(1, Ordering::SeqCst);
 }
 
+/// Which scheduling lane formed a dispatch.  The continuous scheduler
+/// keeps at most one `Prefill` and one `Decode` dispatch in flight at a
+/// time (the TGI-style iteration model: the running batch advances one
+/// step, then is reassembled); `Formed` marks ungated dispatches from
+/// the legacy window/cap/barrier front-end and the drain path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchKind {
+    /// Window/cap/barrier-closed batch, not iteration-gated.
+    Formed,
+    /// Waiting groups entering residency (one prefill step).
+    Prefill,
+    /// One decode iteration over resident slots.
+    Decode,
+}
+
+/// Per-lane iteration gate: at most one `Prefill` and one `Decode`
+/// dispatch may be in flight at once.  The scheduler loop is the only
+/// claimer (single-threaded), so `claim` never races another claim; the
+/// flags exist so *workers* finishing a dispatch (via [`IterToken`]
+/// drop, on every path including panic unwind) reopen the lane and the
+/// loop can observe completion without joining the worker.
+#[derive(Default)]
+pub struct IterGate {
+    prefill: AtomicBool,
+    decode: AtomicBool,
+}
+
+impl IterGate {
+    pub fn new() -> IterGate {
+        IterGate { prefill: AtomicBool::new(false), decode: AtomicBool::new(false) }
+    }
+
+    fn slot(&self, kind: BatchKind) -> Option<&AtomicBool> {
+        match kind {
+            BatchKind::Formed => None,
+            BatchKind::Prefill => Some(&self.prefill),
+            BatchKind::Decode => Some(&self.decode),
+        }
+    }
+
+    /// Claim the lane for one dispatch.  `Formed` is ungated and always
+    /// claims.  A `true` must be paired with exactly one
+    /// [`IterGate::finish`] (normally via [`IterToken`] drop).
+    pub fn claim(&self, kind: BatchKind) -> bool {
+        match self.slot(kind) {
+            None => true,
+            // ordering: SeqCst — the claim joins one total order with
+            // finish() so the single-threaded scheduler loop can never
+            // observe a lane both free (inflight() false) and still
+            // claimed by an unretired dispatch
+            Some(flag) => {
+                flag.compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst).is_ok()
+            }
+        }
+    }
+
+    /// Reopen the lane: the dispatch claimed for `kind` is fully retired
+    /// (served, shed, or failed).  No-op for `Formed`.
+    pub fn finish(&self, kind: BatchKind) {
+        if let Some(flag) = self.slot(kind) {
+            // ordering: SeqCst — pairs with claim(); the store must be
+            // visible before any wake the finisher sends, or the loop
+            // could wake, read the lane as busy, and park again
+            flag.store(false, Ordering::SeqCst);
+        }
+    }
+
+    /// Is a dispatch of `kind` still in flight?
+    pub fn inflight(&self, kind: BatchKind) -> bool {
+        match self.slot(kind) {
+            None => false,
+            // ordering: SeqCst — same total order as claim/finish
+            Some(flag) => flag.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// Completion token attached to an iteration-gated dispatch: dropping it
+/// — on delivery, shed, worker panic unwind, dead-pool hand-back, any
+/// path — reopens the dispatch's gate lane and fires the best-effort
+/// wake `nudge` (the scheduler loop's backstop `recv_timeout` covers a
+/// lost nudge).  Finish-then-nudge order matters: the woken loop must
+/// observe the lane already free.
+pub struct IterToken {
+    gate: Arc<IterGate>,
+    kind: BatchKind,
+    nudge: Option<Box<dyn Fn() + Send>>,
+}
+
+impl IterToken {
+    pub fn new(
+        gate: Arc<IterGate>,
+        kind: BatchKind,
+        nudge: Option<Box<dyn Fn() + Send>>,
+    ) -> IterToken {
+        IterToken { gate, kind, nudge }
+    }
+}
+
+impl Drop for IterToken {
+    fn drop(&mut self) {
+        self.gate.finish(self.kind);
+        if let Some(nudge) = &self.nudge {
+            nudge();
+        }
+    }
+}
+
 /// Releases one session group's not-yet-released pins on drop, so a
 /// panic anywhere in the serve path (e.g. a crashing backend) cannot
 /// leak pins — a leaked pin would make the session permanently
@@ -350,6 +459,56 @@ mod tests {
         // ordering: SeqCst — post-join reads of the gate's total order
         assert_eq!(gauge.load(Ordering::SeqCst), 0, "every claim released");
         assert!(peak.load(Ordering::SeqCst) <= 3, "cap never overrun");
+    }
+
+    #[test]
+    fn iter_gate_serializes_each_lane_independently() {
+        let gate = IterGate::new();
+        assert!(!gate.inflight(BatchKind::Decode));
+        assert!(gate.claim(BatchKind::Decode), "free lane claims");
+        assert!(!gate.claim(BatchKind::Decode), "lane busy until finished");
+        assert!(gate.claim(BatchKind::Prefill), "lanes are independent");
+        assert!(gate.inflight(BatchKind::Decode) && gate.inflight(BatchKind::Prefill));
+        gate.finish(BatchKind::Decode);
+        assert!(!gate.inflight(BatchKind::Decode));
+        assert!(gate.inflight(BatchKind::Prefill), "finishing one lane leaves the other");
+        assert!(gate.claim(BatchKind::Decode), "finished lane reclaims");
+        // Formed dispatches are ungated: always claimable, never in flight
+        assert!(gate.claim(BatchKind::Formed));
+        assert!(gate.claim(BatchKind::Formed));
+        assert!(!gate.inflight(BatchKind::Formed));
+        gate.finish(BatchKind::Formed); // no-op
+    }
+
+    #[test]
+    fn iter_token_drop_reopens_lane_then_nudges() {
+        let gate = Arc::new(IterGate::new());
+        let nudged = Arc::new(AtomicU64::new(0));
+        assert!(gate.claim(BatchKind::Prefill));
+        let token = {
+            let (gate2, nudged) = (gate.clone(), nudged.clone());
+            IterToken::new(
+                gate.clone(),
+                BatchKind::Prefill,
+                Some(Box::new(move || {
+                    assert!(
+                        !gate2.inflight(BatchKind::Prefill),
+                        "nudge must observe the lane already reopened"
+                    );
+                    // ordering: SeqCst — test-side tally in the gate's order
+                    nudged.fetch_add(1, Ordering::SeqCst);
+                })),
+            )
+        };
+        assert!(gate.inflight(BatchKind::Prefill), "token held: lane busy");
+        drop(token);
+        assert!(!gate.inflight(BatchKind::Prefill), "drop reopened the lane");
+        // ordering: SeqCst — post-drop read of the tally
+        assert_eq!(nudged.load(Ordering::SeqCst), 1, "nudge fired exactly once");
+        // a token without a nudge still reopens its lane
+        assert!(gate.claim(BatchKind::Decode));
+        drop(IterToken::new(gate.clone(), BatchKind::Decode, None));
+        assert!(!gate.inflight(BatchKind::Decode));
     }
 
     #[test]

@@ -124,6 +124,17 @@ impl AttentionRequest {
     pub fn expired(&self, now: Instant) -> bool {
         now >= self.deadline
     }
+
+    /// Token charge against the scheduler's batch budgets
+    /// (`max_batch_prefill_tokens` / `max_batch_total_tokens`): an
+    /// append makes `k_rows.rows` new tokens resident, a query attends
+    /// for one output token.
+    pub fn token_cost(&self) -> usize {
+        match &self.payload {
+            Payload::Query(_) => 1,
+            Payload::Append { k_rows, .. } => k_rows.rows.max(1),
+        }
+    }
 }
 
 /// The served result.
@@ -165,5 +176,26 @@ mod tests {
     fn serve_error_downcasts_from_anyhow() {
         let err = anyhow::Error::new(ServeError::Overloaded);
         assert_eq!(err.downcast_ref::<ServeError>(), Some(&ServeError::Overloaded));
+    }
+
+    #[test]
+    fn token_cost_charges_append_rows_and_one_per_query() {
+        let mk = |payload| {
+            let (tx, _rx) = crate::sync::mpsc::channel();
+            let now = Instant::now();
+            AttentionRequest {
+                id: 0,
+                session: "s".into(),
+                payload,
+                arrived: now,
+                deadline: now,
+                pinned: false,
+                cancelled: Arc::new(AtomicBool::new(false)),
+                reply: tx,
+            }
+        };
+        assert_eq!(mk(Payload::Query(vec![0.0; 4])).token_cost(), 1);
+        let app = Payload::Append { k_rows: Mat::zeros(3, 4), v_rows: Mat::zeros(3, 4) };
+        assert_eq!(mk(app).token_cost(), 3);
     }
 }

@@ -1,0 +1,892 @@
+//! Continuous-batching scheduler: a **resident running batch** whose
+//! decode sessions stay in flight across iterations while new work joins
+//! and leaves between steps (the TGI `router/src/infer.rs` iteration
+//! model, adapted to this crate's thread-per-stage serving loop).
+//!
+//! The window/barrier [`super::batcher::Batcher`] survives only as the
+//! group-assembly front-end: it forms per-session groups exactly as
+//! before, but closed groups no longer dispatch directly — they enter
+//! the scheduler's **waiting queue**, and admission moves them into the
+//! **slot table** of resident sessions.  From then on the session's
+//! decode traffic is routed straight into its slot
+//! ([`Scheduler::route`]) and served by iteration-assembled `Decode`
+//! dispatches: an N-token decode pays **one** batcher admission, not N.
+//!
+//! Two independent dispatch lanes (serialized per lane by
+//! [`IterGate`], at most one dispatch of each kind in flight):
+//!
+//! * **Prefill** ([`BatchKind::Prefill`]): waiting groups entering
+//!   residency, packed under `max_batch_prefill_tokens` and the
+//!   running-batch `max_batch_total_tokens` budget.  Admission is
+//!   deferred while decode has priority — until the waiting queue
+//!   reaches `ceil(waiting_served_ratio × running)` groups or the front
+//!   group has aged `max_waiting_iters` decode iterations (the TGI
+//!   starvation override) — so a long prefill never steals the token
+//!   cadence of resident sessions, and a starved prefill still lands.
+//! * **Decode** ([`BatchKind::Decode`]): one iteration's ragged
+//!   multi-session grid, assembled from resident slots in rotation
+//!   order (round-robin fairness), up to `max_batch` requests per slot
+//!   and `max_total_batch` total.  Dispatched through the same
+//!   `compute_plan` / fused-grid path as before — outputs are
+//!   bit-identical to solo serving (pinned by
+//!   `rust/tests/continuous_batching.rs`).
+//!
+//! **Ordering.**  Within a session, arrival order is execution order
+//! (the append-barrier contract).  The scheduler preserves it by
+//! construction: a session's requests flow through exactly one channel
+//! at a time — while the session has batcher-pending or waiting-queue
+//! state, new arrivals keep flowing through the batcher behind it
+//! ([`Scheduler::route`] refuses them); only a quiescent resident slot
+//! accepts direct routing.  Slots admitted by a prefill are excluded
+//! from decode assembly until that prefill's gate lane reopens, so a
+//! session is never split across concurrently-executing dispatches.
+//!
+//! **Residency is routing state, not a KV pin.**  Slots hold *no* idle
+//! pins — per-request pins work exactly as before (taken at ingress for
+//! resident sessions, released at delivery), so an idle resident slot
+//! leaves `KvStore::pinned_sessions() == 0` and the byte-budget LRU
+//! free to evict cold sessions.  Cancellation retires the slot at the
+//! next iteration boundary and `KvStore::evict` frees the bytes
+//! immediately (in-flight computes hold `Arc` snapshots).
+//!
+//! The scheduler itself is single-threaded state owned by the serving
+//! loop — no internal locks; every method is a plain call, which keeps
+//! the whole policy synchronously unit-testable.
+
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
+
+use crate::sync::atomic::Ordering;
+use crate::sync::Arc;
+
+use super::batcher::{Batch, SessionBatch};
+use super::kvstore::KvStore;
+use super::metrics::Metrics;
+use super::protocol::{BatchKind, IterGate};
+use super::request::AttentionRequest;
+
+/// Slot-table bound: beyond this many resident sessions, admitting a new
+/// one first retires the least-recently-active *idle* slot, so the table
+/// cannot grow without bound under session-churn traffic (busy slots are
+/// never retired; in-flight work is already bounded by admission).
+const MAX_SLOTS: usize = 1024;
+
+/// Scheduler policy knobs (resolved from
+/// [`crate::config::CoordinatorConfig`]).
+#[derive(Clone, Debug)]
+pub struct SchedulerCfg {
+    /// Max requests one slot contributes per decode iteration.
+    pub max_batch: usize,
+    /// Max total requests per assembled dispatch (either lane).
+    pub max_total_batch: usize,
+    /// Max tokens one prefill dispatch may admit (0 = unlimited).
+    pub max_batch_prefill_tokens: usize,
+    /// Max resident tokens of the running batch (0 = unlimited).
+    pub max_batch_total_tokens: usize,
+    /// Decode priority: prefill waits until `waiting >= ceil(ratio *
+    /// running)` (an empty running batch always admits).
+    pub waiting_served_ratio: f64,
+    /// Starvation override: admit once the front waiting group has aged
+    /// this many decode iterations regardless of the ratio.
+    pub max_waiting_iters: u64,
+}
+
+impl Default for SchedulerCfg {
+    fn default() -> SchedulerCfg {
+        SchedulerCfg {
+            max_batch: 16,
+            max_total_batch: 256,
+            max_batch_prefill_tokens: 0,
+            max_batch_total_tokens: 0,
+            waiting_served_ratio: 1.2,
+            max_waiting_iters: 4,
+        }
+    }
+}
+
+/// One resident decode session's scheduling state (no KV pin — see the
+/// module docs).
+struct Slot {
+    /// Requests routed directly into the slot, arrival order.
+    pending: Vec<AttentionRequest>,
+    /// Last admission/routing/assembly touch — the idle-retirement LRU
+    /// stamp.
+    last_active: Instant,
+    /// Previous decode iteration that carried this slot's work; the
+    /// distance to the next one is the inter-token gap span.
+    last_decode_at: Option<Instant>,
+    /// Admitted by a prefill dispatch that has not retired yet: excluded
+    /// from decode assembly until the prefill lane reopens, so one
+    /// session never runs in two concurrent dispatches.
+    in_prefill: bool,
+}
+
+/// A closed front-end group parked for admission.
+struct WaitingGroup {
+    group: SessionBatch,
+    /// Token charge against `max_batch_prefill_tokens`.
+    prefill_tokens: usize,
+    /// Decode-iteration stamp at enqueue (starvation aging).
+    enqueued_iter: u64,
+}
+
+/// The continuous scheduler: slot table + waiting queue + admission
+/// policy.  Owned (unshared) by the serving loop; see the module docs.
+pub struct Scheduler {
+    cfg: SchedulerCfg,
+    slots: HashMap<String, Slot>,
+    /// Round-robin order over resident slots (each session appears at
+    /// most once; entries for retired slots are dropped lazily).
+    rotation: VecDeque<String>,
+    waiting: VecDeque<WaitingGroup>,
+    /// Decode iterations assembled so far (waiting-group aging clock).
+    iter: u64,
+    kv: Arc<KvStore>,
+    metrics: Arc<Metrics>,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerCfg, kv: Arc<KvStore>, metrics: Arc<Metrics>) -> Scheduler {
+        Scheduler {
+            cfg: SchedulerCfg {
+                max_batch: cfg.max_batch.max(1),
+                max_total_batch: cfg.max_total_batch.max(cfg.max_batch.max(1)),
+                ..cfg
+            },
+            slots: HashMap::new(),
+            rotation: VecDeque::new(),
+            waiting: VecDeque::new(),
+            iter: 0,
+            kv,
+            metrics,
+        }
+    }
+
+    /// Does `session` hold a resident slot?
+    pub fn is_resident(&self, session: &str) -> bool {
+        self.slots.contains_key(session)
+    }
+
+    fn waiting_has(&self, session: &str) -> bool {
+        self.waiting.iter().any(|w| w.group.session == session)
+    }
+
+    /// Try to route a request straight into its resident slot, bypassing
+    /// the batcher.  Returns the request back when it must take the
+    /// front-end path instead: session not resident, or the session
+    /// still has earlier traffic in flight through the front end
+    /// (`front_end_pending`, i.e. batcher-pending, or a waiting group) —
+    /// routing around it would reorder the session's arrival order.
+    pub fn route(
+        &mut self,
+        req: AttentionRequest,
+        now: Instant,
+        front_end_pending: bool,
+    ) -> Option<AttentionRequest> {
+        if front_end_pending || self.waiting_has(&req.session) {
+            return Some(req);
+        }
+        match self.slots.get_mut(&req.session) {
+            Some(slot) => {
+                slot.pending.push(req);
+                slot.last_active = now;
+                // ordering: Relaxed — statistical counter
+                self.metrics.slot_hits.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            None => Some(req),
+        }
+    }
+
+    /// Park a front-end-closed batch's groups for admission.  A group
+    /// whose session is resident with no waiting-queue state ahead of it
+    /// extends the slot directly (order-safe: later arrivals were
+    /// refused direct routing while this group was forming).
+    pub fn enqueue_closed(&mut self, batch: Batch, now: Instant) {
+        for g in batch.groups {
+            let resident_and_clear =
+                self.slots.contains_key(&g.session) && !self.waiting_has(&g.session);
+            if resident_and_clear {
+                if let Some(slot) = self.slots.get_mut(&g.session) {
+                    // ordering: Relaxed — statistical counter
+                    self.metrics.slot_hits.fetch_add(g.requests.len() as u64, Ordering::Relaxed);
+                    slot.pending.extend(g.requests);
+                    slot.last_active = now;
+                    continue;
+                }
+            }
+            let prefill_tokens = g.requests.iter().map(AttentionRequest::token_cost).sum();
+            self.waiting.push_back(WaitingGroup {
+                group: g,
+                prefill_tokens,
+                enqueued_iter: self.iter,
+            });
+        }
+    }
+
+    /// Assemble this iteration's dispatches: at most one `Prefill` and
+    /// one `Decode` batch, only for lanes the gate reports free.  The
+    /// caller (the serving loop, the gate's only claimer) claims the
+    /// lane and attaches the [`super::protocol::IterToken`] before
+    /// emitting each returned batch.
+    pub fn dispatch(&mut self, now: Instant, gate: &IterGate) -> Vec<Batch> {
+        let prefill_free = !gate.inflight(BatchKind::Prefill);
+        if prefill_free {
+            // iteration boundary: the previously admitted prefill (if
+            // any) has fully retired, so its slots become decodable
+            for slot in self.slots.values_mut() {
+                slot.in_prefill = false;
+            }
+        }
+        let mut out = Vec::new();
+        if prefill_free && self.prefill_due() {
+            if let Some(b) = self.assemble_prefill(now) {
+                out.push(b);
+            }
+        }
+        if !gate.inflight(BatchKind::Decode) {
+            if let Some(b) = self.assemble_decode(now) {
+                out.push(b);
+            }
+        }
+        out
+    }
+
+    /// Decode-priority gate: is it time to pause decode and admit?
+    fn prefill_due(&self) -> bool {
+        if self.waiting.is_empty() {
+            return false;
+        }
+        let running =
+            self.slots.values().filter(|s| !s.pending.is_empty() || s.in_prefill).count();
+        if running == 0 {
+            return true;
+        }
+        let need = (self.cfg.waiting_served_ratio * running as f64).ceil().max(1.0) as usize;
+        if self.waiting.len() >= need {
+            return true;
+        }
+        self.waiting
+            .front()
+            .is_some_and(|w| self.iter.saturating_sub(w.enqueued_iter) >= self.cfg.max_waiting_iters)
+    }
+
+    /// Pack waiting groups (FIFO) under the prefill-token, total-token
+    /// and total-request budgets into one `Prefill` dispatch, admitting
+    /// their sessions into the slot table.
+    fn assemble_prefill(&mut self, now: Instant) -> Option<Batch> {
+        let mut groups: Vec<SessionBatch> = Vec::new();
+        let mut tokens = 0usize;
+        let mut reqs = 0usize;
+        loop {
+            let Some(front) = self.waiting.front() else { break };
+            let t = front.prefill_tokens;
+            let n = front.group.requests.len();
+            if !groups.is_empty() {
+                if self.cfg.max_batch_prefill_tokens > 0
+                    && tokens + t > self.cfg.max_batch_prefill_tokens
+                {
+                    break; // budget full; the rest waits for the next admission
+                }
+                if reqs + n > self.cfg.max_total_batch {
+                    break;
+                }
+            }
+            let session = front.group.session.clone();
+            if !self.admit_total_tokens(&session, t) {
+                // running batch is token-full and nothing idle to
+                // retire: head-of-line waits for decode to drain
+                break;
+            }
+            let Some(w) = self.waiting.pop_front() else { break };
+            tokens += t;
+            reqs += n;
+            self.admit_slot(&session, now);
+            match groups.iter_mut().find(|g| g.session == session) {
+                // two waiting groups of one session admitted together
+                // merge FIFO — arrival order is preserved
+                Some(g) => g.requests.extend(w.group.requests),
+                None => groups.push(w.group),
+            }
+        }
+        if groups.is_empty() {
+            return None;
+        }
+        // ordering: Relaxed — statistical counter
+        self.metrics.prefill_iters.fetch_add(1, Ordering::Relaxed);
+        Some(Batch { groups, kind: BatchKind::Prefill, done: None })
+    }
+
+    /// Running-batch token budget: can `incoming_tokens` for `session`
+    /// join?  Retires least-recently-active *idle* slots to make room;
+    /// refuses (group stays waiting) when only busy slots remain.
+    fn admit_total_tokens(&mut self, session: &str, incoming_tokens: usize) -> bool {
+        if self.cfg.max_batch_total_tokens == 0 {
+            return true;
+        }
+        loop {
+            let resident: usize = self
+                .slots
+                .keys()
+                .map(|s| self.kv.session_rows(s).unwrap_or(0))
+                .sum();
+            let incoming_resident = if self.slots.contains_key(session) {
+                0 // already counted in the resident sum
+            } else {
+                self.kv.session_rows(session).unwrap_or(0)
+            };
+            if resident + incoming_resident + incoming_tokens <= self.cfg.max_batch_total_tokens {
+                return true;
+            }
+            if !self.retire_idle_lru(Some(session)) {
+                return false;
+            }
+        }
+    }
+
+    /// Retire the least-recently-active idle slot (no pending work, not
+    /// mid-prefill), excluding `keep`.  Returns whether one was retired.
+    fn retire_idle_lru(&mut self, keep: Option<&str>) -> bool {
+        let victim = self
+            .slots
+            .iter()
+            .filter(|(name, s)| {
+                s.pending.is_empty() && !s.in_prefill && keep != Some(name.as_str())
+            })
+            .min_by_key(|(_, s)| s.last_active)
+            .map(|(name, _)| name.clone());
+        match victim {
+            Some(name) => {
+                self.slots.remove(&name);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Create (or re-touch) the slot for an admitted session, marked
+    /// `in_prefill` until the admitting dispatch retires.
+    fn admit_slot(&mut self, session: &str, now: Instant) {
+        if let Some(slot) = self.slots.get_mut(session) {
+            slot.in_prefill = true;
+            slot.last_active = now;
+            return;
+        }
+        if self.slots.len() >= MAX_SLOTS {
+            // bound the table; if nothing is idle the table grows past
+            // the soft cap (in-flight work is bounded by admission)
+            self.retire_idle_lru(None);
+        }
+        self.rotation.retain(|s| s != session); // drop any stale entry
+        self.rotation.push_back(session.to_string());
+        self.slots.insert(
+            session.to_string(),
+            Slot { pending: Vec::new(), last_active: now, last_decode_at: None, in_prefill: true },
+        );
+        // ordering: Relaxed — statistical counter (the acceptance test
+        // reads it after joining the serving threads)
+        self.metrics.batcher_admissions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Assemble one decode iteration: resident slots with pending work,
+    /// rotation (round-robin) order, `max_batch` per slot, capped at
+    /// `max_total_batch` total.
+    fn assemble_decode(&mut self, now: Instant) -> Option<Batch> {
+        let mut groups: Vec<SessionBatch> = Vec::new();
+        let mut total = 0usize;
+        let mut capped = false;
+        let rot_len = self.rotation.len();
+        for _ in 0..rot_len {
+            if total >= self.cfg.max_total_batch {
+                capped = true;
+                break;
+            }
+            let Some(session) = self.rotation.pop_front() else { break };
+            if !self.slots.contains_key(&session) {
+                continue; // stale entry for a retired slot: drop it
+            }
+            self.rotation.push_back(session.clone());
+            let max_batch = self.cfg.max_batch;
+            let room = self.cfg.max_total_batch - total;
+            let Some(slot) = self.slots.get_mut(&session) else { continue };
+            if slot.in_prefill || slot.pending.is_empty() {
+                continue;
+            }
+            let take = slot.pending.len().min(max_batch).min(room);
+            let requests: Vec<AttentionRequest> = slot.pending.drain(..take).collect();
+            if let Some(prev) = slot.last_decode_at {
+                self.metrics.observe_decode_gap(now.duration_since(prev).as_secs_f64() * 1e6);
+            }
+            slot.last_decode_at = Some(now);
+            slot.last_active = now;
+            total += requests.len();
+            groups.push(SessionBatch { session, requests });
+        }
+        if capped {
+            // the early break already left the first unserved slot at
+            // the rotation front for the next iteration
+        } else if let Some(front) = self.rotation.pop_front() {
+            // full scan: advance the start by one so a slot capped at
+            // `max_batch` cannot permanently shadow the slots behind it
+            self.rotation.push_back(front);
+        }
+        if groups.is_empty() {
+            return None;
+        }
+        self.iter += 1;
+        // ordering: Relaxed — statistical counter
+        self.metrics.decode_iters.fetch_add(1, Ordering::Relaxed);
+        Some(Batch { groups, kind: BatchKind::Decode, done: None })
+    }
+
+    /// Remove every queued request matched by `pred` from the waiting
+    /// queue and the slot table — the cancellation / deadline sweep.
+    /// Emptied waiting groups are dropped (their admission never
+    /// happens); emptied slots stay resident (routing state).
+    pub fn remove_matching(
+        &mut self,
+        mut pred: impl FnMut(&AttentionRequest) -> bool,
+    ) -> Vec<AttentionRequest> {
+        let mut removed = Vec::new();
+        let mut sieve = |reqs: &mut Vec<AttentionRequest>| {
+            let mut kept = Vec::with_capacity(reqs.len());
+            for r in reqs.drain(..) {
+                if pred(&r) {
+                    removed.push(r);
+                } else {
+                    kept.push(r);
+                }
+            }
+            *reqs = kept;
+        };
+        for w in self.waiting.iter_mut() {
+            sieve(&mut w.group.requests);
+            w.prefill_tokens =
+                w.group.requests.iter().map(AttentionRequest::token_cost).sum();
+        }
+        self.waiting.retain(|w| !w.group.requests.is_empty());
+        for slot in self.slots.values_mut() {
+            sieve(&mut slot.pending);
+        }
+        removed
+    }
+
+    /// Evict a session's resident slot (cancellation path: the serving
+    /// loop calls this at the iteration boundary where it processes the
+    /// cancel).  Returns the slot's still-pending requests for the
+    /// caller to fail; a dispatch already in flight is unaffected (it
+    /// holds its own KV snapshot).
+    pub fn retire(&mut self, session: &str) -> Vec<AttentionRequest> {
+        self.rotation.retain(|s| s != session);
+        self.slots.remove(session).map(|s| s.pending).unwrap_or_default()
+    }
+
+    /// Flush everything for shutdown: waiting groups and slot pendings
+    /// packed into ungated `Formed` batches (the drain path serves or
+    /// sheds them; residency ends).
+    pub fn drain_all(&mut self) -> Vec<Batch> {
+        let mut groups: Vec<SessionBatch> = Vec::new();
+        for w in self.waiting.drain(..) {
+            groups.push(w.group);
+        }
+        let mut slots: Vec<(String, Slot)> = self.slots.drain().collect();
+        slots.sort_by_key(|(_, s)| s.last_active);
+        for (session, slot) in slots {
+            if !slot.pending.is_empty() {
+                groups.push(SessionBatch { session, requests: slot.pending });
+            }
+        }
+        self.rotation.clear();
+        let mut out: Vec<Batch> = Vec::new();
+        let mut cur: Vec<SessionBatch> = Vec::new();
+        let mut cur_total = 0usize;
+        for g in groups {
+            if !cur.is_empty() && cur_total + g.requests.len() > self.cfg.max_total_batch {
+                out.push(Batch::formed(std::mem::take(&mut cur)));
+                cur_total = 0;
+            }
+            cur_total += g.requests.len();
+            cur.push(g);
+        }
+        if !cur.is_empty() {
+            out.push(Batch::formed(cur));
+        }
+        out
+    }
+
+    /// Is there any queued work (waiting groups or slot pendings)?
+    pub fn has_backlog(&self) -> bool {
+        !self.waiting.is_empty() || self.slots.values().any(|s| !s.pending.is_empty())
+    }
+
+    /// Resident slot count (diagnostics/tests).
+    pub fn resident_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Waiting (unadmitted) group count (diagnostics/tests).
+    pub fn waiting_groups(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Queued requests across waiting groups and slots.
+    pub fn pending_requests(&self) -> usize {
+        self.waiting.iter().map(|w| w.group.requests.len()).sum::<usize>()
+            + self.slots.values().map(|s| s.pending.len()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Payload;
+    use crate::sync::atomic::AtomicBool;
+    use crate::sync::mpsc::channel;
+    use crate::Mat;
+    use std::time::Duration;
+
+    fn req(id: u64, session: &str) -> AttentionRequest {
+        let (tx, _rx) = channel();
+        let now = Instant::now();
+        AttentionRequest {
+            id,
+            session: session.into(),
+            payload: Payload::Query(vec![0.0; 4]),
+            arrived: now,
+            deadline: now + Duration::from_secs(300),
+            pinned: false,
+            cancelled: Arc::new(AtomicBool::new(false)),
+            reply: tx,
+        }
+    }
+
+    fn append_req(id: u64, session: &str, rows: usize) -> AttentionRequest {
+        let (tx, _rx) = channel();
+        let now = Instant::now();
+        AttentionRequest {
+            id,
+            session: session.into(),
+            payload: Payload::Append {
+                k_rows: Mat::zeros(rows, 4),
+                v_rows: Mat::zeros(rows, 4),
+            },
+            arrived: now,
+            deadline: now + Duration::from_secs(300),
+            pinned: false,
+            cancelled: Arc::new(AtomicBool::new(false)),
+            reply: tx,
+        }
+    }
+
+    fn sched(cfg: SchedulerCfg) -> Scheduler {
+        Scheduler::new(cfg, Arc::new(KvStore::new(64, 4, 8)), Arc::new(Metrics::new()))
+    }
+
+    fn sched_with_kv(cfg: SchedulerCfg, kv: Arc<KvStore>) -> Scheduler {
+        Scheduler::new(cfg, kv, Arc::new(Metrics::new()))
+    }
+
+    /// Park `group` (one session, these requests) in the waiting queue.
+    fn park(s: &mut Scheduler, session: &str, reqs: Vec<AttentionRequest>) {
+        s.enqueue_closed(
+            Batch::formed(vec![SessionBatch { session: session.into(), requests: reqs }]),
+            Instant::now(),
+        );
+    }
+
+    fn ids(b: &Batch) -> Vec<u64> {
+        b.groups.iter().flat_map(|g| g.requests.iter().map(|r| r.id)).collect()
+    }
+
+    #[test]
+    fn empty_running_batch_admits_immediately_as_one_prefill() {
+        let mut s = sched(SchedulerCfg::default());
+        let gate = IterGate::new();
+        for i in 0..8u64 {
+            park(&mut s, &format!("sess-{i}"), vec![req(i, &format!("sess-{i}"))]);
+        }
+        let batches = s.dispatch(Instant::now(), &gate);
+        assert_eq!(batches.len(), 1, "all waiting groups admit as ONE prefill dispatch");
+        assert_eq!(batches[0].kind, BatchKind::Prefill);
+        assert_eq!(batches[0].groups.len(), 8);
+        assert_eq!(s.resident_slots(), 8);
+        assert_eq!(s.waiting_groups(), 0);
+        // a second dispatch with nothing pending assembles nothing
+        assert!(s.dispatch(Instant::now(), &gate).is_empty());
+    }
+
+    #[test]
+    fn routed_decode_traffic_never_reenters_admission() {
+        let mut s = sched(SchedulerCfg::default());
+        let gate = IterGate::new();
+        let now = Instant::now();
+        park(&mut s, "s", vec![append_req(0, "s", 1)]);
+        let admitted = s.dispatch(now, &gate);
+        assert_eq!(admitted.len(), 1);
+        // prefill retired (gate never claimed in this test): decode next
+        for i in 1..=10u64 {
+            let r = req(i, "s");
+            assert!(s.route(r, now, false).is_none(), "resident slot takes the request");
+            let batches = s.dispatch(now, &gate);
+            assert_eq!(batches.len(), 1);
+            assert_eq!(batches[0].kind, BatchKind::Decode);
+            assert_eq!(ids(&batches[0]), vec![i]);
+        }
+        // ordering: Relaxed — test-side counter reads
+        assert_eq!(s.metrics.batcher_admissions.load(Ordering::Relaxed), 1);
+        assert_eq!(s.metrics.slot_hits.load(Ordering::Relaxed), 10);
+        assert_eq!(s.metrics.decode_iters.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn route_refuses_nonresident_and_order_hazards() {
+        let mut s = sched(SchedulerCfg::default());
+        let now = Instant::now();
+        assert!(s.route(req(1, "s"), now, false).is_some(), "not resident: front end");
+        park(&mut s, "s", vec![req(1, "s")]);
+        // waiting state ahead: direct routing would reorder
+        assert!(s.route(req(2, "s"), now, false).is_some());
+        let gate = IterGate::new();
+        s.dispatch(now, &gate);
+        assert!(s.is_resident("s"));
+        // front-end pending (batcher) ahead: still refused
+        assert!(s.route(req(3, "s"), now, true).is_some());
+        assert!(s.route(req(4, "s"), now, false).is_none(), "quiescent slot routes");
+    }
+
+    #[test]
+    fn prefill_token_budget_splits_admissions() {
+        let mut s = sched(SchedulerCfg { max_batch_prefill_tokens: 4, ..SchedulerCfg::default() });
+        let gate = IterGate::new();
+        // three groups of 3 tokens each (append of 2 rows + 1 query)
+        for i in 0..3u64 {
+            let sess = format!("s{i}");
+            park(&mut s, &sess, vec![append_req(10 * i, &sess, 2), req(10 * i + 1, &sess)]);
+        }
+        let first = s.dispatch(Instant::now(), &gate);
+        assert_eq!(first.len(), 1);
+        assert_eq!(first[0].groups.len(), 1, "3 + 3 > 4: one group per admission");
+        assert_eq!(s.waiting_groups(), 2);
+        let second = s.dispatch(Instant::now(), &gate);
+        assert_eq!(second[0].groups[0].session, "s1", "FIFO admission order");
+        // an oversized lone group still admits alone (never wedges)
+        let mut s = sched(SchedulerCfg { max_batch_prefill_tokens: 2, ..SchedulerCfg::default() });
+        park(&mut s, "big", vec![append_req(0, "big", 8)]);
+        let b = s.dispatch(Instant::now(), &gate);
+        assert_eq!(b.len(), 1, "head-of-line oversized group admits alone");
+        assert_eq!(s.waiting_groups(), 0);
+    }
+
+    #[test]
+    fn decode_keeps_priority_until_ratio_then_starvation_override() {
+        let mut s = sched(SchedulerCfg {
+            waiting_served_ratio: 2.0,
+            max_waiting_iters: 3,
+            ..SchedulerCfg::default()
+        });
+        let gate = IterGate::new();
+        let now = Instant::now();
+        park(&mut s, "resident", vec![req(0, "resident")]);
+        s.dispatch(now, &gate); // admit: slot resident
+        // keep the resident slot busy, then park one waiting group:
+        // 1 < ceil(2.0 * 1) = 2, so decode keeps priority
+        assert!(s.route(req(1, "resident"), now, false).is_none());
+        park(&mut s, "newbie", vec![req(100, "newbie")]);
+        let batches = s.dispatch(now, &gate);
+        assert_eq!(batches.len(), 1, "below the ratio: decode only");
+        assert_eq!(batches[0].kind, BatchKind::Decode);
+        assert_eq!(s.waiting_groups(), 1);
+        // two more decode iterations age the waiting group to the
+        // starvation override (enqueued at iter 1; admitted at iter 4)
+        for _ in 0..2 {
+            let now = Instant::now();
+            assert!(s.route(req(2, "resident"), now, false).is_none());
+            let batches = s.dispatch(now, &gate);
+            assert_eq!(batches.len(), 1);
+            assert_eq!(batches[0].kind, BatchKind::Decode);
+        }
+        assert!(s.route(req(3, "resident"), now, false).is_none());
+        let batches = s.dispatch(Instant::now(), &gate);
+        assert_eq!(batches.len(), 2, "starved prefill admitted alongside decode");
+        assert_eq!(batches[0].kind, BatchKind::Prefill);
+        assert_eq!(batches[0].groups[0].session, "newbie");
+        assert_eq!(batches[1].kind, BatchKind::Decode);
+        // a second waiting group reaches the ratio threshold directly
+        assert!(s.route(req(4, "resident"), now, false).is_none());
+        park(&mut s, "w1", vec![req(101, "w1")]);
+        park(&mut s, "w2", vec![req(102, "w2")]);
+        park(&mut s, "w3", vec![req(103, "w3")]);
+        let batches = s.dispatch(Instant::now(), &gate);
+        // running = 2 busy slots? "newbie" has no pending; running is
+        // "resident" (+ any in_prefill) — 3 >= ceil(2.0 * running)
+        assert_eq!(batches[0].kind, BatchKind::Prefill, "ratio reached: prefill admitted");
+        assert_eq!(batches[0].groups.len(), 3);
+    }
+
+    #[test]
+    fn total_token_budget_retires_idle_slots_then_defers() {
+        let kv = Arc::new(KvStore::new(64, 4, 16));
+        kv.put("idle", Mat::zeros(4, 4), Mat::zeros(4, 4)).unwrap();
+        kv.put("busy", Mat::zeros(4, 4), Mat::zeros(4, 4)).unwrap();
+        kv.put("new", Mat::zeros(9, 4), Mat::zeros(9, 4)).unwrap();
+        let mut s = sched_with_kv(
+            SchedulerCfg { max_batch_total_tokens: 16, ..SchedulerCfg::default() },
+            kv,
+        );
+        let gate = IterGate::new();
+        let now = Instant::now();
+        park(&mut s, "idle", vec![req(0, "idle")]);
+        park(&mut s, "busy", vec![req(1, "busy")]);
+        let first = s.dispatch(now, &gate);
+        assert_eq!(first[0].groups.len(), 2, "4 + 4 + 2 query tokens fit the budget");
+        assert_eq!(s.resident_slots(), 2);
+        // keep "busy" busy; admitting "new" (9 resident + 1 query) needs
+        // 8 + 10 > 16 — the idle slot must be retired to make room.
+        // running=1, waiting=1 < ceil(1.2*1)=2: age past max_waiting_iters
+        assert!(s.route(req(2, "busy"), now, false).is_none());
+        park(&mut s, "new", vec![req(100, "new")]);
+        for _ in 0..4 {
+            assert!(s.route(req(3, "busy"), Instant::now(), false).is_none());
+            s.dispatch(Instant::now(), &gate);
+        }
+        assert!(s.route(req(4, "busy"), Instant::now(), false).is_none());
+        let batches = s.dispatch(Instant::now(), &gate);
+        assert_eq!(batches[0].kind, BatchKind::Prefill);
+        assert!(!s.is_resident("idle"), "idle slot retired to fund the admission");
+        assert!(s.is_resident("busy") && s.is_resident("new"));
+        // now the running batch holds 4 (busy) + 9 (new) = 13 tokens; a
+        // 9-token group cannot fit and nothing is idle — it must defer
+        park(&mut s, "x", vec![append_req(200, "x", 9)]);
+        for _ in 0..6 {
+            assert!(s.route(req(5, "busy"), Instant::now(), false).is_none());
+            assert!(s.route(req(6, "new"), Instant::now(), false).is_none());
+            let batches = s.dispatch(Instant::now(), &gate);
+            assert!(
+                batches.iter().all(|b| b.kind == BatchKind::Decode),
+                "token-full running batch defers admission even past aging"
+            );
+        }
+        assert_eq!(s.waiting_groups(), 1, "the group stays waiting");
+    }
+
+    #[test]
+    fn decode_assembly_is_round_robin_and_caps_per_slot() {
+        let mut s = sched(SchedulerCfg { max_batch: 2, max_total_batch: 3, ..Default::default() });
+        let gate = IterGate::new();
+        let now = Instant::now();
+        park(&mut s, "a", vec![req(0, "a")]);
+        park(&mut s, "b", vec![req(1, "b")]);
+        s.dispatch(now, &gate); // admit both
+        // a: 3 pending, b: 2 pending; per-slot cap 2, total cap 3
+        for i in 0..3u64 {
+            assert!(s.route(req(10 + i, "a"), now, false).is_none());
+        }
+        for i in 0..2u64 {
+            assert!(s.route(req(20 + i, "b"), now, false).is_none());
+        }
+        let first = s.dispatch(now, &gate);
+        assert_eq!(first.len(), 1);
+        let d = &first[0];
+        assert_eq!(d.kind, BatchKind::Decode);
+        assert_eq!(d.groups.len(), 2, "both slots served in one iteration");
+        assert_eq!(ids(d), vec![10, 11, 20], "2 from a (cap), 1 from b (total cap)");
+        let second = s.dispatch(now, &gate);
+        // rotation moved on: b first this time
+        assert_eq!(ids(&second[0]), vec![21, 12], "round-robin starts at b's remainder");
+        assert!(!s.has_backlog());
+    }
+
+    #[test]
+    fn gate_lanes_serialize_dispatches() {
+        // ratio 0.5: one waiting group against one running slot is
+        // already past the admission threshold
+        let mut s = sched(SchedulerCfg { waiting_served_ratio: 0.5, ..Default::default() });
+        let gate = IterGate::new();
+        let now = Instant::now();
+        park(&mut s, "s", vec![req(0, "s")]);
+        let batches = s.dispatch(now, &gate);
+        assert_eq!(batches[0].kind, BatchKind::Prefill);
+        assert!(gate.claim(BatchKind::Prefill), "loop claims the lane before emit");
+        // while the prefill is in flight its slot must not decode, and
+        // no second prefill may assemble
+        park(&mut s, "t", vec![req(1, "t")]);
+        assert!(s.route(req(2, "s"), now, true).is_some(), "front end busy: refused");
+        park(&mut s, "s", vec![req(2, "s")]);
+        let during = s.dispatch(now, &gate);
+        assert!(during.is_empty(), "in-flight prefill: slot excluded, lane busy");
+        gate.finish(BatchKind::Prefill);
+        let after = s.dispatch(now, &gate);
+        assert_eq!(after.len(), 2, "lane reopened: next prefill + decode iteration");
+        assert_eq!(after[0].kind, BatchKind::Prefill);
+        assert_eq!(after[1].kind, BatchKind::Decode);
+        assert_eq!(ids(&after[1]), vec![2], "the retired prefill's slot decodes now");
+        // decode lane serializes identically
+        assert!(gate.claim(BatchKind::Decode));
+        assert!(s.route(req(3, "s"), now, false).is_none());
+        assert!(s.dispatch(now, &gate).iter().all(|b| b.kind != BatchKind::Decode));
+        gate.finish(BatchKind::Decode);
+        gate.finish(BatchKind::Prefill);
+        let b = s.dispatch(now, &gate);
+        assert!(b.iter().any(|b| b.kind == BatchKind::Decode));
+    }
+
+    #[test]
+    fn remove_matching_sweeps_waiting_and_slots() {
+        let mut s = sched(SchedulerCfg::default());
+        let gate = IterGate::new();
+        let now = Instant::now();
+        park(&mut s, "live", vec![req(0, "live")]);
+        s.dispatch(now, &gate);
+        assert!(s.route(req(1, "live"), now, false).is_none());
+        assert!(s.route(req(2, "live"), now, false).is_none());
+        park(&mut s, "doomed", vec![req(3, "doomed"), req(4, "doomed")]);
+        park(&mut s, "mixed", vec![req(5, "mixed"), req(6, "mixed")]);
+        let removed = s.remove_matching(|r| r.session == "doomed" || r.id == 5 || r.id == 1);
+        let mut got: Vec<u64> = removed.iter().map(|r| r.id).collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 3, 4, 5]);
+        assert_eq!(s.waiting_groups(), 1, "emptied waiting group dropped");
+        assert_eq!(s.pending_requests(), 2, "survivors: slot req 2 + waiting req 6");
+        assert!(s.is_resident("live"), "drained slot stays resident");
+        // retire evicts the slot and hands back its pending
+        let left = s.retire("live");
+        assert_eq!(left.len(), 1);
+        assert_eq!(left[0].id, 2);
+        assert!(!s.is_resident("live"));
+        assert!(s.retire("live").is_empty(), "double retire is inert");
+    }
+
+    #[test]
+    fn drain_all_flushes_waiting_and_slots_as_formed_batches() {
+        let mut s = sched(SchedulerCfg { max_total_batch: 2, max_batch: 2, ..Default::default() });
+        let gate = IterGate::new();
+        let now = Instant::now();
+        park(&mut s, "a", vec![req(0, "a")]);
+        s.dispatch(now, &gate);
+        assert!(s.route(req(1, "a"), now, false).is_none());
+        park(&mut s, "w", vec![req(2, "w"), req(3, "w")]);
+        let batches = s.drain_all();
+        assert_eq!(batches.iter().map(|b| b.groups.len()).sum::<usize>(), 2);
+        assert_eq!(
+            batches.iter().flat_map(ids).count(),
+            3,
+            "every queued request is flushed exactly once"
+        );
+        assert!(batches.iter().all(|b| b.kind == BatchKind::Formed && b.done.is_none()));
+        assert_eq!(s.resident_slots(), 0);
+        assert_eq!(s.waiting_groups(), 0);
+        assert!(!s.has_backlog());
+    }
+
+    #[test]
+    fn merged_same_session_waiting_groups_admit_in_fifo_order() {
+        let mut s = sched(SchedulerCfg::default());
+        let gate = IterGate::new();
+        park(&mut s, "s", vec![req(1, "s"), append_req(2, "s", 1)]);
+        park(&mut s, "s", vec![req(3, "s")]);
+        let batches = s.dispatch(Instant::now(), &gate);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].groups.len(), 1, "same session merges into one group");
+        assert_eq!(ids(&batches[0]), vec![1, 2, 3], "FIFO = arrival order preserved");
+    }
+}

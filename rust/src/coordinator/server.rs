@@ -1,5 +1,6 @@
-//! The serving loop: bounded ingress -> batcher thread -> worker threads
-//! owning backends -> per-request reply channels.
+//! The serving loop: bounded ingress -> scheduler thread (continuous
+//! batching) -> worker threads owning backends -> per-request reply
+//! channels.
 //!
 //! Requests are either attention queries or decode-step KV appends
 //! ([`Payload`]); an append acts as a per-session barrier in the batcher,
@@ -8,14 +9,30 @@
 //! interleave `append`/`call` to run an autoregressive decode loop whose
 //! KV conversion cost tracks the new tokens only.
 //!
-//! Batches are **cross-session super-batches** ([`Batch`]): the batcher
-//! fuses window-expired per-session groups into one dispatch, and the
-//! worker answers every session's queries through a single plan-based
-//! backend call ([`Backend::compute_plan`]) — the high-fan-out serving
-//! regime (N sessions x 1 query) runs as one fused grid launch instead
-//! of N single-query dispatches.  Fusion is a scheduling choice only:
+//! Batches are **cross-session super-batches** ([`Batch`]): a dispatch
+//! fuses many sessions' per-session groups, and the worker answers every
+//! session's queries through a single plan-based backend call
+//! ([`Backend::compute_plan`]) — the high-fan-out serving regime
+//! (N sessions x 1 query) runs as one fused grid launch instead of N
+//! single-query dispatches.  Fusion is a scheduling choice only:
 //! outputs are bit-identical to serving each session alone, appends
 //! barrier only their own session, and pins release per session.
+//!
+//! **Continuous batching** ([`scheduler_loop`], replacing the old
+//! window/barrier-only batcher loop): the [`Batcher`] survives as the
+//! group-assembly front-end for a session's *first* traffic, but closed
+//! groups no longer dispatch directly — they enter the
+//! [`Scheduler`]'s waiting queue, and a `Prefill` admission makes the
+//! session a resident slot.  From then on its decode traffic is routed
+//! straight into the slot (no batcher round-trip: an N-token decode
+//! costs one admission) and served by per-iteration `Decode` dispatches
+//! assembled from every resident slot — the TGI iteration model, where
+//! sessions join and leave the running batch between iterations.
+//! Prefill and decode are separate gate lanes ([`IterGate`], at most
+//! one in-flight dispatch per lane, serialized by an [`IterToken`] the
+//! worker drops at completion), so a long prefill never stalls resident
+//! sessions' token cadence.  Cancellation ([`Server::cancel`], dropped
+//! handles) retires the session's slot at the next iteration boundary.
 //!
 //! Ingress **pins** the request's session in the KV store
 //! (`KvStore::pin`), and the pin is released when the response is
@@ -73,8 +90,9 @@ use super::backend::{Backend, BackendFactory, TransientFault};
 use super::batcher::{Batch, Batcher};
 use super::kvstore::{KvEntry, KvStore};
 use super::metrics::Metrics;
-use super::protocol::{self, BatchQueue, CancelRegistry, PinGuard};
+use super::protocol::{self, BatchKind, BatchQueue, CancelRegistry, IterGate, IterToken, PinGuard};
 use super::request::{AttentionRequest, AttentionResponse, Payload, ServeError};
+use super::scheduler::{Scheduler, SchedulerCfg};
 use crate::config::CoordinatorConfig;
 use crate::Mat;
 
@@ -85,6 +103,12 @@ enum Msg {
     /// (sent with `try_send`): if the ingress is full, the batcher is
     /// busy and will shed the cancelled requests at group close anyway.
     Cancel(String),
+    /// Wake-only nudge from a dropping [`IterToken`]: an iteration's
+    /// dispatch retired and its gate lane reopened, so the scheduler
+    /// should reassemble now instead of sleeping out its timeout.
+    /// Best-effort (`try_send`); a gated-backlog poll in the loop covers
+    /// the lost-nudge case.
+    IterDone,
     Shutdown,
 }
 
@@ -209,16 +233,24 @@ impl Server {
             retry_backoff: Duration::from_micros(cfg.retry_backoff_us),
         });
 
-        // batcher thread
+        // scheduler thread (continuous batching; the Batcher lives
+        // inside it as the group-assembly front-end)
         let window = Duration::from_micros(cfg.batch_window_us);
-        let max_batch = cfg.max_batch;
-        let max_total = cfg.max_total_batch;
+        let sched_cfg = SchedulerCfg {
+            max_batch: cfg.max_batch,
+            max_total_batch: cfg.max_total_batch,
+            max_batch_prefill_tokens: cfg.max_batch_prefill_tokens,
+            max_batch_total_tokens: cfg.max_batch_total_tokens,
+            waiting_served_ratio: cfg.waiting_served_ratio,
+            max_waiting_iters: cfg.max_waiting_iters,
+        };
         let bctx = ctx.clone();
         let bq = queue.clone();
+        let loop_tx = in_tx.clone();
         let ingress_rx: Arc<Mutex<Option<Receiver<Msg>>>> = Arc::new(Mutex::new(None));
         let rx_back = ingress_rx.clone();
-        let batcher_handle = thread::Builder::new().name("hfa-batcher".into()).spawn(
-            move || batcher_loop(in_rx, bq, max_batch, max_total, window, bctx, rx_back),
+        let batcher_handle = thread::Builder::new().name("hfa-scheduler".into()).spawn(
+            move || scheduler_loop(in_rx, loop_tx, bq, window, sched_cfg, bctx, rx_back),
         )?;
 
         // worker threads; each reports its backend-init outcome before
@@ -547,7 +579,7 @@ impl Server {
                         &self.kv,
                         &self.metrics,
                     ),
-                    Ok(Msg::Cancel(_)) | Ok(Msg::Shutdown) => {}
+                    Ok(Msg::Cancel(_)) | Ok(Msg::IterDone) | Ok(Msg::Shutdown) => {}
                     Err(_) => break,
                 }
             }
@@ -625,8 +657,9 @@ fn shed_batch(batch: Batch, ctx: &ServeCtx) -> Option<Batch> {
     // ordering: SeqCst — pairs with drain()'s shed_all store (same total
     // order as the in-flight gauge the drain deadline races)
     let shed_all = ctx.shed_all.load(Ordering::SeqCst);
-    let mut groups = Vec::with_capacity(batch.groups.len());
-    for mut g in batch.groups {
+    let Batch { groups: old_groups, kind, done } = batch;
+    let mut groups = Vec::with_capacity(old_groups.len());
+    for mut g in old_groups {
         let mut kept = Vec::with_capacity(g.requests.len());
         for req in g.requests.drain(..) {
             match shed_verdict(&req, now, shed_all, ctx) {
@@ -644,9 +677,11 @@ fn shed_batch(batch: Batch, ctx: &ServeCtx) -> Option<Batch> {
         }
     }
     if groups.is_empty() {
+        // `done` (if any) drops here, finishing its gate lane — a fully
+        // shed iteration must reopen the lane like a served one
         None
     } else {
-        Some(Batch { groups })
+        Some(Batch { groups, kind, done })
     }
 }
 
@@ -697,35 +732,62 @@ impl Drop for CloseOnExit<'_> {
     }
 }
 
+/// The continuous-batching scheduling loop (replaces the seed's pure
+/// window/barrier `batcher_loop`).
+///
+/// A session's first traffic still forms per-session groups inside the
+/// [`Batcher`]'s window, but closed groups are no longer dispatched
+/// directly: they enter the [`Scheduler`]'s waiting queue, and a
+/// `Prefill` admission makes the session a **resident slot**.  Resident
+/// sessions' traffic is routed straight into their slots (no batcher
+/// round-trip) and served by per-iteration `Decode` dispatches
+/// assembled round-robin from every slot with work — the TGI iteration
+/// model, where sessions join/leave the running batch at iteration
+/// boundaries instead of the whole batch forming and retiring together.
+///
+/// Iteration pacing: each dispatch carries an [`IterToken`] holding its
+/// gate lane ([`IterGate`]; prefill and decode are independent lanes,
+/// so a long prefill never blocks decode cadence).  The worker drops
+/// the token when the dispatch retires, which reopens the lane and
+/// `try_send`s a wake-only [`Msg::IterDone`] nudge back into the
+/// ingress; a bounded poll below covers a lost nudge (full channel).
 #[allow(clippy::too_many_arguments)] // thread entry point: every collaborator is passed once
-fn batcher_loop(
+fn scheduler_loop(
     in_rx: Receiver<Msg>,
+    in_tx: SyncSender<Msg>,
     queue: Arc<BatchQueue<Batch>>,
-    max_batch: usize,
-    max_total: usize,
     window: Duration,
+    sched_cfg: SchedulerCfg,
     ctx: Arc<ServeCtx>,
     rx_back: Arc<Mutex<Option<Receiver<Msg>>>>,
 ) {
     // dropped last (declared first): the queue closes after the final
     // drain below on a normal exit, and on any panic path too
     let _close = CloseOnExit(&queue);
-    let mut batcher = Batcher::new(max_batch, max_total, window);
+    let mut batcher = Batcher::new(sched_cfg.max_batch, sched_cfg.max_total_batch, window);
+    let mut scheduler = Scheduler::new(sched_cfg, ctx.kv.clone(), ctx.metrics.clone());
+    let gate = Arc::new(IterGate::new());
     // Fusion slack: expiry sweeps run at `earliest deadline + window/4`
     // instead of per-group deadlines, so every group whose window lapses
     // inside one slack interval closes in the *same* sweep and packs
     // into one cross-session super-batch.  Worst-case close latency is
     // 1.25x the window (pinned < 1.5x by the close-latency regression
     // test) — the bounded price of fusing N idle sessions' singleton
-    // groups into one dispatch instead of N deadline-ordered ones.  The
-    // seed's fixed `max(window, 50us)` tick could be ~2x late *and*
-    // still dispatched per session.
+    // groups into one dispatch instead of N deadline-ordered ones.
     let slack = window / 4;
     loop {
-        // sleep exactly until the earliest pending group's sweep point;
-        // an idle batcher (nothing forming) blocks on the channel with
-        // no timeout at all — no fixed-tick polling, no late closes
-        let wake = batcher.next_deadline().map(|d| d + slack);
+        // sleep until the earliest pending group's sweep point; while a
+        // lane is in flight over a backlog, also poll on a short bound
+        // in case the worker's IterDone nudge was lost to a full ingress
+        // channel.  A fully idle loop blocks on the channel with no
+        // timeout at all — no fixed-tick polling.
+        let mut wake = batcher.next_deadline().map(|d| d + slack);
+        if scheduler.has_backlog()
+            && (gate.inflight(BatchKind::Prefill) || gate.inflight(BatchKind::Decode))
+        {
+            let poll = Instant::now() + Duration::from_micros(500);
+            wake = Some(wake.map_or(poll, |w| w.min(poll)));
+        }
         let msg = match wake {
             None => in_rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
             Some(at) => {
@@ -739,24 +801,41 @@ fn batcher_loop(
         };
         match msg {
             Ok(Msg::Req(req)) => {
-                if let Some(b) = batcher.push(req) {
-                    emit(&queue, b, &ctx);
+                // slot routing honors arrival order: while the session
+                // has a group still forming (or parked in the waiting
+                // queue), new traffic must follow it through the same
+                // channel, so route() refuses and the batcher takes it
+                let front_end_pending = batcher.has_pending_session(&req.session);
+                if let Some(req) = scheduler.route(req, Instant::now(), front_end_pending) {
+                    if let Some(b) = batcher.push(req) {
+                        scheduler.enqueue_closed(b, Instant::now());
+                    }
                 }
             }
-            Ok(Msg::Cancel(_)) => {
-                // cancellation nudge: sweep the pending groups now so a
-                // cancelled session's requests fail (and release their
-                // pins) immediately instead of at the next group close
+            Ok(Msg::IterDone) => {
+                // wake-only: a dispatch retired and its lane reopened;
+                // the dispatch pass below reassembles
+            }
+            Ok(Msg::Cancel(session)) => {
+                // cancellation nudge: sweep the pending groups, waiting
+                // queue and slot backlogs now so a cancelled session's
+                // requests fail (and release their pins) immediately,
+                // and retire the session's slot at this iteration
+                // boundary — its residency ends here, not at drain
                 let now = Instant::now();
-                for req in batcher
-                    .remove_matching(|r| shed_verdict(r, now, false, &ctx).is_some())
-                {
-                    // the verdict is re-derived (same `now`, same ctx); the
-                    // registry's retention sweep could in principle drop
-                    // the mark between the two calls, so fall back to
-                    // Cancelled (the only sweepable verdict) instead of
-                    // panicking the batcher — the request was already
-                    // removed and must get its terminal response
+                let mut shed: Vec<AttentionRequest> = batcher
+                    .remove_matching(|r| shed_verdict(r, now, false, &ctx).is_some());
+                shed.extend(
+                    scheduler.remove_matching(|r| shed_verdict(r, now, false, &ctx).is_some()),
+                );
+                shed.extend(scheduler.retire(&session));
+                for req in shed {
+                    // the verdict is re-derived (same `now`, same ctx);
+                    // the registry's retention sweep could in principle
+                    // drop the mark between the two calls, so fall back
+                    // to Cancelled (the only sweepable verdict) instead
+                    // of panicking the scheduler — the request was
+                    // already removed and must get its terminal response
                     let err = shed_verdict(&req, now, false, &ctx)
                         .unwrap_or(ServeError::Cancelled);
                     // ordering: Relaxed — statistical counter
@@ -776,7 +855,7 @@ fn batcher_loop(
                             &ctx.kv,
                             &ctx.metrics,
                         ),
-                        Ok(Msg::Cancel(_)) | Ok(Msg::Shutdown) => {}
+                        Ok(Msg::Cancel(_)) | Ok(Msg::IterDone) | Ok(Msg::Shutdown) => {}
                         Err(_) => break,
                     }
                 }
@@ -789,12 +868,37 @@ fn batcher_loop(
         // message, which would close groups one by one as traffic
         // trickles past their deadlines and defeat the fusion
         if wake.is_some_and(|at| Instant::now() >= at) {
-            for b in batcher.close_expired(Instant::now()) {
-                emit(&queue, b, &ctx);
+            let now = Instant::now();
+            for b in batcher.close_expired(now) {
+                scheduler.enqueue_closed(b, now);
             }
+        }
+        // iteration dispatch: at most one batch per free gate lane.  The
+        // token claims the lane before the handoff; its Drop (worker
+        // side, on any path — served, shed, panic unwind, queue residue)
+        // finishes the lane and nudges this loop to reassemble.
+        for mut b in scheduler.dispatch(Instant::now(), &gate) {
+            let kind = b.kind;
+            if gate.claim(kind) {
+                // this loop is the sole claimer, so the claim always
+                // succeeds (dispatch() only assembles for free lanes);
+                // `Formed` batches are ungated and skip the token
+                let tx = in_tx.clone();
+                b.done = Some(IterToken::new(
+                    gate.clone(),
+                    kind,
+                    Some(Box::new(move || {
+                        let _ = tx.try_send(Msg::IterDone);
+                    })),
+                ));
+            }
+            emit(&queue, b, &ctx);
         }
     }
     for b in batcher.drain() {
+        emit(&queue, b, &ctx);
+    }
+    for b in scheduler.drain_all() {
         emit(&queue, b, &ctx);
     }
     // hand the ingress receiver back to the Server: a submit can race
@@ -812,6 +916,15 @@ fn emit(queue: &BatchQueue<Batch>, b: Batch, ctx: &ServeCtx) {
     // structural batch counters — they were never part of a dispatch)
     let Some(b) = shed_batch(b, ctx) else { return };
     let metrics = &ctx.metrics;
+    // queue-wait span closes at dispatch handoff: time from submit to
+    // the request leaving the scheduling stage (forming + waiting/slot
+    // time), separate from the compute latency the serve path records
+    let now = Instant::now();
+    for g in &b.groups {
+        for req in &g.requests {
+            metrics.observe_queue_wait(now.duration_since(req.arrived).as_secs_f64() * 1e6);
+        }
+    }
     let requests = b.total_requests() as u64;
     let sessions = b.sessions() as u64;
     // count the dispatch *before* handing it over: a worker can pop,
@@ -883,9 +996,21 @@ fn worker_loop(
     while let Some(batch) = queue.pop() {
         // pre-dispatch shed point: the batch may have sat in the queue
         // past deadlines, cancels, or the drain cutoff
-        let Some(batch) = shed_batch(batch, ctx) else { continue };
+        let Some(mut batch) = shed_batch(batch, ctx) else { continue };
+        // hold the iteration token on this frame, not inside the batch:
+        // it must drop (reopening the gate lane and nudging the
+        // scheduler) when the dispatch retires on *any* path — served,
+        // panic unwind through catch_unwind, or respawn
+        let kind = batch.kind;
+        let _done = batch.done.take();
+        let t0 = Instant::now();
         let caught = catch_unwind(AssertUnwindSafe(|| serve_batch(&mut *be, batch, ctx)));
-        let Err(payload) = caught else { continue };
+        let Err(payload) = caught else {
+            if kind == BatchKind::Prefill {
+                ctx.metrics.observe_prefill(t0.elapsed().as_secs_f64() * 1e6);
+            }
+            continue;
+        };
         // every request of the panicked dispatch already received its
         // explicit error (serve_batch guarantees that before re-raising).
         // CAS loop (not fetch_update) so the claim compiles against the

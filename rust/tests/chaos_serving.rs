@@ -58,6 +58,7 @@ fn seeded_soak_reaches_a_consistent_terminal_state() {
         max_retries: 3,
         retry_backoff_us: 50,
         worker_respawn_budget: 32,
+        ..CoordinatorConfig::default()
     };
     let chaos = ChaosConfig {
         seed: 0xC4A05,

@@ -1,0 +1,536 @@
+//! Continuous (iteration-level) batching, end to end: a resident decode
+//! session must cost ONE batcher admission for its whole token stream
+//! (not one per token), a long prefill must never stall resident
+//! sessions' decode cadence, sessions joining and leaving the running
+//! batch must leave every output bit-identical to solo serving, and
+//! cancellation must retire a session's slot and free its KV bytes
+//! before its queued requests drain.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use hfa::config::{AcceleratorConfig, CoordinatorConfig};
+use hfa::coordinator::{Backend, BackendFactory, KvEntry, KvStore, Server, SimBackend};
+use hfa::hw::Arith;
+use hfa::proptest::Rng;
+use hfa::Mat;
+
+const D: usize = 8;
+const SEQ: usize = 32;
+const KV_BLOCKS: usize = 4;
+
+fn accel_cfg() -> AcceleratorConfig {
+    AcceleratorConfig {
+        head_dim: D,
+        seq_len: SEQ,
+        kv_blocks: KV_BLOCKS,
+        parallel_queries: 1,
+        freq_mhz: 500.0,
+    }
+}
+
+/// Golden single-session serving result: the blocked H-FA model over the
+/// session's exact KV prefix (what `Server` is pinned to produce for a
+/// lone session by `coordinator::server::tests`).
+fn golden(q: &[f32], k: &Mat, v: &Mat, rows: usize) -> Vec<f32> {
+    hfa::attention::hfa::attention_blocked(
+        &Mat::from_vec(1, D, q.to_vec()).round_bf16(),
+        &k.rows_slice(0, rows).round_bf16(),
+        &v.rows_slice(0, rows).round_bf16(),
+        KV_BLOCKS,
+        None,
+        &mut None,
+    )
+    .row(0)
+    .to_vec()
+}
+
+// The acceptance pin: an N-token decode loop must cost exactly ONE
+// batcher admission (the join), with every subsequent append/query
+// routed straight into the resident slot and served by per-iteration
+// decode dispatches — and every output bit-identical to the golden
+// single-session model.
+#[test]
+fn decode_loop_costs_one_admission_not_one_per_token() {
+    const PREFILL: usize = 8;
+    const STEPS: usize = 8;
+    let coord = CoordinatorConfig {
+        max_batch: 8,
+        max_total_batch: 64,
+        batch_window_us: 500,
+        workers: 1,
+        queue_depth: 64,
+        ..CoordinatorConfig::default()
+    };
+    let kv = Arc::new(KvStore::new(SEQ, D, 4));
+    let mut rng = Rng::new(71);
+    let n = PREFILL + STEPS;
+    let k = Mat::from_vec(n, D, rng.normal_vec(n * D));
+    let v = Mat::from_vec(n, D, rng.normal_vec(n * D));
+    kv.put("sess", k.rows_slice(0, PREFILL), v.rows_slice(0, PREFILL)).unwrap();
+    let srv = Server::start(
+        &coord,
+        kv.clone(),
+        vec![SimBackend::factory(Arith::Hfa, accel_cfg())],
+    )
+    .unwrap();
+
+    // the client-serialized decode loop: append row t, await the ack,
+    // attend, await the output — the protocol every decode client runs
+    for step in 0..STEPS {
+        let at = PREFILL + step;
+        let ack = srv
+            .append("sess", k.rows_slice(at, at + 1), v.rows_slice(at, at + 1))
+            .unwrap();
+        assert!(ack.ok(), "step {step} append: {:?}", ack.output);
+        let q = rng.normal_vec(D);
+        let resp = srv.call("sess", q.clone()).unwrap();
+        assert!(resp.ok(), "step {step}: {:?}", resp.output);
+        assert_eq!(
+            resp.output.unwrap(),
+            golden(&q, &k, &v, at + 1),
+            "step {step}: continuous decode diverged from golden over {} rows",
+            at + 1
+        );
+    }
+
+    let snap = srv.metrics.snapshot();
+    // ONE admission for the whole stream: only the first append (the
+    // join) went through the window/barrier batcher
+    assert_eq!(
+        snap.batcher_admissions, 1,
+        "an N-token decode must cost one admission, not N: {snap:?}"
+    );
+    // everything after the join bypassed the batcher: (STEPS-1) appends
+    // + STEPS queries routed straight into the resident slot
+    assert_eq!(snap.slot_hits, (2 * STEPS - 1) as u64, "{snap:?}");
+    assert_eq!(snap.prefill_iters, 1, "{snap:?}");
+    // client serialization means each routed request is its own decode
+    // iteration (one request per dispatch)
+    assert_eq!(snap.decode_iters, (2 * STEPS - 1) as u64, "{snap:?}");
+    assert_eq!(snap.completed, STEPS as u64);
+    assert_eq!(snap.appends, STEPS as u64);
+    assert_eq!(snap.failed, 0);
+    // the latency spans recorded something sensible in each stage
+    assert!(snap.queue_wait_p99_us > 0.0, "no queue-wait samples: {snap:?}");
+    assert!(snap.prefill_p99_us > 0.0, "no prefill samples: {snap:?}");
+    assert!(snap.decode_gap_p99_us > 0.0, "no decode-gap samples: {snap:?}");
+    assert_eq!(kv.pinned_sessions(), 0, "resident slots must hold no idle pins");
+    srv.shutdown();
+}
+
+/// Backend that parks any dispatch touching a "big" session (>= SEQ
+/// resident rows) until released — a deterministic stand-in for a long
+/// prefill compute, so the cadence test can prove decode iterations
+/// keep flowing while the prefill lane is occupied (no sleeps, no
+/// timing races).
+struct GatedBackend {
+    inner: Box<dyn Backend>,
+    entered: Arc<AtomicBool>,
+    release: Arc<AtomicBool>,
+}
+
+impl GatedBackend {
+    fn wrap_factory(
+        inner: BackendFactory,
+        entered: Arc<AtomicBool>,
+        release: Arc<AtomicBool>,
+    ) -> BackendFactory {
+        Box::new(move || {
+            let be = inner()?;
+            Ok(Box::new(GatedBackend {
+                inner: be,
+                entered: entered.clone(),
+                release: release.clone(),
+            }) as Box<dyn Backend>)
+        })
+    }
+}
+
+impl Backend for GatedBackend {
+    fn head_dim(&self) -> usize {
+        self.inner.head_dim()
+    }
+
+    fn seq_len(&self) -> usize {
+        self.inner.seq_len()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+
+    fn compute_plan(&mut self, plan: &[(&KvEntry, &Mat)]) -> Result<Vec<Mat>> {
+        if plan.iter().any(|(kv, _)| kv.prepared().n() >= SEQ) {
+            self.entered.store(true, Ordering::SeqCst);
+            while !self.release.load(Ordering::SeqCst) {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        self.inner.compute_plan(plan)
+    }
+
+    fn name(&self) -> String {
+        format!("gated({})", self.inner.name())
+    }
+}
+
+// Decode-cadence starvation: while a long prefill occupies its lane (a
+// worker parked inside the big session's first compute), a resident
+// session's decode steps must keep completing through the independent
+// decode lane — the whole point of scheduling prefill separately.
+#[test]
+fn long_prefill_does_not_stall_resident_decode_cadence() {
+    const PREFILL: usize = 8;
+    const STEPS_DURING: usize = 4;
+    let coord = CoordinatorConfig {
+        max_batch: 8,
+        max_total_batch: 64,
+        batch_window_us: 1_000,
+        workers: 2, // one parks in the prefill, the other serves decode
+        queue_depth: 64,
+        ..CoordinatorConfig::default()
+    };
+    let kv = Arc::new(KvStore::new(SEQ, D, 4));
+    let mut rng = Rng::new(503);
+    let n = PREFILL + STEPS_DURING;
+    let (kr, vr) = (
+        Mat::from_vec(n, D, rng.normal_vec(n * D)),
+        Mat::from_vec(n, D, rng.normal_vec(n * D)),
+    );
+    let (kb, vb) = (
+        Mat::from_vec(SEQ, D, rng.normal_vec(SEQ * D)),
+        Mat::from_vec(SEQ, D, rng.normal_vec(SEQ * D)),
+    );
+    kv.put("res", kr.rows_slice(0, PREFILL), vr.rows_slice(0, PREFILL)).unwrap();
+    kv.put("big", kb.clone(), vb.clone()).unwrap();
+    let entered = Arc::new(AtomicBool::new(false));
+    let release = Arc::new(AtomicBool::new(false));
+    let factories = (0..coord.workers)
+        .map(|_| {
+            GatedBackend::wrap_factory(
+                SimBackend::factory(Arith::Hfa, accel_cfg()),
+                entered.clone(),
+                release.clone(),
+            )
+        })
+        .collect();
+    let srv = Server::start(&coord, kv, factories).unwrap();
+
+    // make "res" resident: its first query forms a group, closes at the
+    // window and admits (an 8-row dispatch, which passes the gate)
+    let q0 = rng.normal_vec(D);
+    let r0 = srv.call("res", q0.clone()).unwrap();
+    assert!(r0.ok(), "{:?}", r0.output);
+    assert_eq!(r0.output.unwrap(), golden(&q0, &kr, &vr, PREFILL));
+
+    // the big session's first traffic: one query over its full SEQ-row
+    // KV — admitted as a prefill whose compute parks on the gate
+    let big_q = rng.normal_vec(D);
+    let big_rx = srv.submit("big", big_q.clone()).unwrap();
+    let t0 = std::time::Instant::now();
+    while !entered.load(Ordering::SeqCst) {
+        assert!(t0.elapsed() < Duration::from_secs(10), "prefill never reached a worker");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let decode_iters_before = srv.metrics.snapshot().decode_iters;
+
+    // with the prefill lane parked, the resident session's decode loop
+    // must keep its cadence through the decode lane.  recv_timeout so a
+    // starved decode fails the test with a message instead of hanging.
+    for step in 0..STEPS_DURING {
+        let at = PREFILL + step;
+        let ack = srv
+            .submit_append("res", kr.rows_slice(at, at + 1), vr.rows_slice(at, at + 1))
+            .unwrap();
+        let a = ack
+            .recv_timeout(Duration::from_secs(5))
+            .expect("decode append stalled behind the in-flight prefill");
+        assert!(a.ok(), "step {step} append: {:?}", a.output);
+        let q = rng.normal_vec(D);
+        let rx = srv.submit("res", q.clone()).unwrap();
+        let resp = rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("decode query stalled behind the in-flight prefill");
+        assert!(resp.ok(), "step {step}: {:?}", resp.output);
+        assert_eq!(
+            resp.output.unwrap(),
+            golden(&q, &kr, &vr, at + 1),
+            "step {step}: decode under concurrent prefill diverged from golden"
+        );
+    }
+    let decode_iters_during = srv.metrics.snapshot().decode_iters - decode_iters_before;
+    assert!(
+        decode_iters_during >= (2 * STEPS_DURING) as u64,
+        "decode iterations must advance while the prefill lane is parked \
+         (got {decode_iters_during})"
+    );
+    assert!(
+        big_rx.try_recv().is_err(),
+        "the gated prefill cannot have completed yet"
+    );
+
+    // release the prefill; its output must be untouched by everything
+    // that decoded around it
+    release.store(true, Ordering::SeqCst);
+    let big = big_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    assert!(big.ok(), "{:?}", big.output);
+    assert_eq!(
+        big.output.unwrap(),
+        golden(&big_q, &kb, &vb, SEQ),
+        "prefill served around live decode traffic diverged from golden"
+    );
+    srv.shutdown();
+}
+
+// Join/leave soak: sessions enter the running batch at staggered steps,
+// decode together, and two of them leave (cancel + evict) mid-soak.
+// Every output must stay bit-identical to solo serving, each join must
+// cost exactly one admission, and a leave must not disturb survivors.
+#[test]
+fn join_leave_soak_stays_bit_identical_one_admission_per_join() {
+    const SESSIONS: usize = 5;
+    const STEPS: usize = 8;
+    const PREFILL: usize = 6;
+    const LEAVE_AFTER: usize = 5; // sessions 0 and 1 leave after this step
+    let coord = CoordinatorConfig {
+        max_batch: 8,
+        max_total_batch: 256,
+        batch_window_us: 2_000,
+        workers: 2,
+        queue_depth: 256,
+        ..CoordinatorConfig::default()
+    };
+    let kv = Arc::new(KvStore::new(SEQ, D, SESSIONS));
+    let mut rng = Rng::new(6007);
+    let mats: Vec<(Mat, Mat)> = (0..SESSIONS)
+        .map(|_| {
+            let n = PREFILL + STEPS;
+            (
+                Mat::from_vec(n, D, rng.normal_vec(n * D)),
+                Mat::from_vec(n, D, rng.normal_vec(n * D)),
+            )
+        })
+        .collect();
+    let factories = (0..coord.workers)
+        .map(|_| SimBackend::factory(Arith::Hfa, accel_cfg()))
+        .collect();
+    let srv = Server::start(&coord, kv.clone(), factories).unwrap();
+
+    let mut joins = 0u64;
+    let mut routed = 0u64; // expected slot_hits
+    let mut queries_total = 0u64;
+    let mut appends_total = 0u64;
+    let active = |s: usize, step: usize| -> bool {
+        s <= step && !(s < 2 && step > LEAVE_AFTER)
+    };
+    for step in 0..STEPS {
+        // join: session `step` puts its prefill and sends its first
+        // append (the admission); already-resident sessions decode
+        let mut acks = Vec::new();
+        for s in 0..SESSIONS {
+            if !active(s, step) {
+                continue;
+            }
+            let (k, v) = &mats[s];
+            let at = PREFILL + (step - s);
+            if s == step {
+                kv.put(&format!("sess-{s}"), k.rows_slice(0, PREFILL), v.rows_slice(0, PREFILL))
+                    .unwrap();
+                joins += 1;
+            } else {
+                routed += 1;
+            }
+            appends_total += 1;
+            acks.push((
+                s,
+                srv.submit_append(
+                    &format!("sess-{s}"),
+                    k.rows_slice(at, at + 1),
+                    v.rows_slice(at, at + 1),
+                )
+                .unwrap(),
+            ));
+        }
+        for (s, ack) in acks {
+            let a = ack.recv().unwrap();
+            assert!(a.ok(), "step {step} session {s} append: {:?}", a.output);
+        }
+        // interleaved attends across the whole running batch — decode
+        // iterations may fuse several sessions into one ragged dispatch
+        let mut rxs = Vec::new();
+        for s in 0..SESSIONS {
+            if !active(s, step) {
+                continue;
+            }
+            let q = rng.normal_vec(D);
+            routed += 1;
+            queries_total += 1;
+            rxs.push((s, q.clone(), srv.submit(&format!("sess-{s}"), q).unwrap()));
+        }
+        for (s, q, rx) in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(resp.ok(), "step {step} session {s}: {:?}", resp.output);
+            let (k, v) = &mats[s];
+            let rows = PREFILL + (step - s) + 1;
+            assert_eq!(
+                resp.output.unwrap(),
+                golden(&q, k, v, rows),
+                "step {step} session {s}: join/leave soak diverged from golden over {rows} rows"
+            );
+        }
+        if step == LEAVE_AFTER {
+            // sessions 0 and 1 leave: slots retire at the iteration
+            // boundary, KV bytes freed immediately
+            for s in 0..2 {
+                srv.cancel(&format!("sess-{s}"), true);
+                assert!(!kv.contains(&format!("sess-{s}")), "evicted KV must be gone");
+            }
+        }
+    }
+
+    let snap = srv.metrics.snapshot();
+    assert_eq!(snap.batcher_admissions, joins, "one admission per join, none per token: {snap:?}");
+    assert_eq!(snap.slot_hits, routed, "{snap:?}");
+    assert_eq!(snap.completed, queries_total);
+    assert_eq!(snap.appends, appends_total);
+    assert_eq!(snap.failed, 0, "soak must not shed anything: {snap:?}");
+    assert_eq!(kv.pinned_sessions(), 0, "drained server must hold no pins");
+    srv.shutdown();
+}
+
+// Cancellation with eviction: the session's KV bytes are freed
+// synchronously (before its queued requests have drained), the queued
+// requests fail with Cancelled, and the slot is retired — a rejoin is a
+// fresh admission, not a hit on a stale slot.
+#[test]
+fn cancel_evicts_kv_and_retires_slot_before_queued_requests_drain() {
+    const ROWS: usize = 16;
+    let coord = CoordinatorConfig {
+        max_batch: 8,
+        max_total_batch: 64,
+        batch_window_us: 500_000, // long window: queued queries sit forming
+        workers: 1,
+        queue_depth: 64,
+        ..CoordinatorConfig::default()
+    };
+    let kv = Arc::new(KvStore::new(SEQ, D, 4));
+    let mut rng = Rng::new(911);
+    let (k, v) = (
+        Mat::from_vec(ROWS + 2, D, rng.normal_vec((ROWS + 2) * D)),
+        Mat::from_vec(ROWS + 2, D, rng.normal_vec((ROWS + 2) * D)),
+    );
+    kv.put("s", k.rows_slice(0, ROWS), v.rows_slice(0, ROWS)).unwrap();
+    let srv = Server::start(
+        &coord,
+        kv.clone(),
+        vec![SimBackend::factory(Arith::Hfa, accel_cfg())],
+    )
+    .unwrap();
+
+    // two queries parked in the forming window (the window is huge, so
+    // they cannot dispatch before the cancel lands)
+    let rx1 = srv.submit("s", rng.normal_vec(D)).unwrap();
+    let rx2 = srv.submit("s", rng.normal_vec(D)).unwrap();
+    assert!(kv.used_bytes() > 0);
+    srv.cancel("s", true);
+    // eviction is synchronous with the cancel call: bytes are gone
+    // before the queued requests have received their terminal errors
+    assert_eq!(kv.used_bytes(), 0, "cancel(evict_kv=true) must free bytes immediately");
+    assert!(!kv.contains("s"));
+    for rx in [rx1, rx2] {
+        let resp = rx.recv().unwrap();
+        let err = resp.output.unwrap_err();
+        assert!(
+            matches!(err, hfa::coordinator::ServeError::Cancelled),
+            "queued request must drain as Cancelled, got {err:?}"
+        );
+    }
+    assert_eq!(kv.pinned_sessions(), 0, "cancelled requests must release their pins");
+
+    // rejoin: the slot was retired, so fresh traffic is a NEW admission
+    // (and serves correctly against re-put KV)
+    kv.put("s", k.rows_slice(0, ROWS), v.rows_slice(0, ROWS)).unwrap();
+    let ack = srv
+        .append("s", k.rows_slice(ROWS, ROWS + 1), v.rows_slice(ROWS, ROWS + 1))
+        .unwrap();
+    assert!(ack.ok(), "{:?}", ack.output);
+    let q = rng.normal_vec(D);
+    let resp = srv.call("s", q.clone()).unwrap();
+    assert!(resp.ok(), "{:?}", resp.output);
+    assert_eq!(resp.output.unwrap(), golden(&q, &k, &v, ROWS + 1));
+    let snap = srv.metrics.snapshot();
+    assert_eq!(
+        snap.batcher_admissions, 1,
+        "the rejoin after retire must be the only admission (the first \
+         two queries were cancelled while still forming): {snap:?}"
+    );
+    assert_eq!(snap.shed, 2);
+    assert_eq!(snap.cancelled, 2);
+    srv.shutdown();
+}
+
+// Prefill token budget, end to end through the config knob: four
+// sessions' first traffic arriving together must split across separate
+// prefill admissions when each group alone reaches the budget.
+#[test]
+fn prefill_token_budget_splits_joins_across_admissions() {
+    const SESSIONS: usize = 4;
+    const JOIN_ROWS: usize = 4;
+    let coord = CoordinatorConfig {
+        max_batch: 8,
+        max_total_batch: 64,
+        batch_window_us: 1_000,
+        workers: 1,
+        queue_depth: 64,
+        max_batch_prefill_tokens: JOIN_ROWS, // one join's rows fill the budget
+        ..CoordinatorConfig::default()
+    };
+    let kv = Arc::new(KvStore::new(SEQ, D, SESSIONS));
+    let mut rng = Rng::new(313);
+    let mats: Vec<(Mat, Mat)> = (0..SESSIONS)
+        .map(|_| {
+            (
+                Mat::from_vec(JOIN_ROWS, D, rng.normal_vec(JOIN_ROWS * D)),
+                Mat::from_vec(JOIN_ROWS, D, rng.normal_vec(JOIN_ROWS * D)),
+            )
+        })
+        .collect();
+    let srv = Server::start(
+        &coord,
+        kv.clone(),
+        vec![SimBackend::factory(Arith::Hfa, accel_cfg())],
+    )
+    .unwrap();
+
+    // every session joins by appending its first rows into an empty
+    // store — each append is a JOIN_ROWS-token group, so the budget
+    // admits them one prefill dispatch at a time
+    let acks: Vec<_> = (0..SESSIONS)
+        .map(|s| {
+            let (k, v) = &mats[s];
+            srv.submit_append(&format!("sess-{s}"), k.clone(), v.clone()).unwrap()
+        })
+        .collect();
+    for (s, ack) in acks.into_iter().enumerate() {
+        let a = ack.recv().unwrap();
+        assert!(a.ok(), "session {s} join append: {:?}", a.output);
+    }
+    let qs: Vec<Vec<f32>> = (0..SESSIONS).map(|_| rng.normal_vec(D)).collect();
+    for (s, q) in qs.iter().enumerate() {
+        let resp = srv.call(&format!("sess-{s}"), q.clone()).unwrap();
+        assert!(resp.ok(), "session {s}: {:?}", resp.output);
+        let (k, v) = &mats[s];
+        assert_eq!(resp.output.unwrap(), golden(q, k, v, JOIN_ROWS));
+    }
+    let snap = srv.metrics.snapshot();
+    assert_eq!(snap.batcher_admissions, SESSIONS as u64, "{snap:?}");
+    assert_eq!(
+        snap.prefill_iters, SESSIONS as u64,
+        "a {JOIN_ROWS}-token budget must admit the {SESSIONS} joins one \
+         prefill dispatch each: {snap:?}"
+    );
+    srv.shutdown();
+}

@@ -22,7 +22,9 @@
 
 use std::time::{Duration, Instant};
 
-use hfa::coordinator::protocol::{release, try_admit, BatchQueue, CancelRegistry, PinGuard};
+use hfa::coordinator::protocol::{
+    release, try_admit, BatchKind, BatchQueue, CancelRegistry, IterGate, IterToken, PinGuard,
+};
 use hfa::coordinator::KvStore;
 use hfa::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use hfa::sync::Arc;
@@ -204,5 +206,79 @@ fn admission_gate_bounds_and_rolls_back() {
         release(&gauge);
         // ordering: SeqCst — see above
         assert_eq!(gauge.load(Ordering::SeqCst), 0, "gauge balances once the winner releases");
+    });
+}
+
+/// Protocol 6 — IterGate lane claim/finish race.
+///
+/// The continuous scheduler keeps at most one dispatch per lane in
+/// flight, and workers retire dispatches by dropping an [`IterToken`]
+/// (finish-then-nudge).  Two racing claimers of the same lane must
+/// never both win (a double claim would put two decode iterations in
+/// flight at once and break the iteration protocol); the other lane is
+/// independent and stays claimable throughout; a winner's token drop —
+/// racing a fresh claim — always reopens the lane and fires its nudge
+/// exactly once per retirement.
+#[test]
+fn iter_gate_single_claim_per_lane_and_token_reopens() {
+    model(|| {
+        let gate = Arc::new(IterGate::new());
+        let nudges = Arc::new(AtomicU64::new(0));
+        let holders = Arc::new(AtomicU64::new(0));
+        // two workers race to claim the decode lane and, on winning,
+        // hold it (holders must never exceed one), then retire their
+        // dispatch via the token drop
+        let claimers: Vec<_> = (0..2)
+            .map(|_| {
+                let gate = gate.clone();
+                let nudges = nudges.clone();
+                let holders = holders.clone();
+                loom::thread::spawn(move || {
+                    if gate.claim(BatchKind::Decode) {
+                        // ordering: SeqCst — the holders probe must join
+                        // the claim/finish total order to witness a
+                        // double claim
+                        let was = holders.fetch_add(1, Ordering::SeqCst);
+                        assert_eq!(was, 0, "two dispatches in flight on one lane");
+                        // ordering: SeqCst — released before the token
+                        // drop reopens the lane for the other claimer
+                        holders.fetch_sub(1, Ordering::SeqCst);
+                        let n = nudges.clone();
+                        drop(IterToken::new(
+                            gate,
+                            BatchKind::Decode,
+                            // ordering: SeqCst — joins the lane's total
+                            // order; the count must match retirements
+                            Some(Box::new(move || {
+                                n.fetch_add(1, Ordering::SeqCst);
+                            })),
+                        ));
+                        true
+                    } else {
+                        false
+                    }
+                })
+            })
+            .collect();
+        // the prefill lane is independent: claimable no matter where the
+        // decode racers are, and its ungated Formed kind always claims
+        assert!(gate.claim(BatchKind::Prefill), "lanes are independent");
+        assert!(gate.claim(BatchKind::Formed), "Formed is ungated");
+        assert!(!gate.inflight(BatchKind::Formed));
+        let wins = claimers
+            .into_iter()
+            .map(|h| h.join().expect("claimer model panicked"))
+            .filter(|&won| won)
+            .count();
+        assert!(wins >= 1, "an uncontended or winning claim must succeed");
+        // ordering: SeqCst — post-join read of the lane's total order
+        assert_eq!(
+            nudges.load(Ordering::SeqCst),
+            wins as u64,
+            "each retirement fires its nudge exactly once"
+        );
+        assert!(!gate.inflight(BatchKind::Decode), "every token drop reopened the lane");
+        assert!(gate.claim(BatchKind::Decode), "the lane is claimable again after retirement");
+        gate.finish(BatchKind::Decode);
     });
 }

@@ -11,8 +11,10 @@
 //!   (including test code).  This is what makes the loom suite
 //!   model-check the exact shipped implementations rather than a copy.
 //! * `no-unwrap` — no `.unwrap()` / `.expect(` in non-test coordinator
-//!   code.  A panicking worker strands its batch; every serve-path
-//!   failure must flow through `ServeError` / poison-recovery instead.
+//!   code (the serve loop, the continuous scheduler's slot table, the
+//!   KV store).  A panicking worker strands its batch and a panicking
+//!   scheduler strands every queue; every serve-path failure must flow
+//!   through `ServeError` / poison-recovery instead.
 //! * `ordering-comment` — every `Ordering::` use site in non-test code
 //!   carries an `// ordering: <Ord> — rationale` comment on the same
 //!   line or within the 4 preceding lines.  Keeps the release/acquire
@@ -477,6 +479,33 @@ mod tests {
         let dropped =
             "fn f(&self) {\n    let q = queue.lock();\n    drop(q);\n    let m = latencies.lock();\n}\n";
         assert!(lint_src("src/coordinator/server.rs", dropped).is_empty());
+    }
+
+    #[test]
+    fn scheduler_slot_table_is_covered_by_coordinator_rules() {
+        // the continuous scheduler (coordinator/scheduler.rs) is serve
+        // path: the coordinator-scoped rules must bind to it exactly as
+        // they do to server.rs — no-unwrap on non-test code, documented
+        // atomic orderings, and the KvStore -> Metrics -> queue order
+        let rel = "src/coordinator/scheduler.rs";
+        assert_eq!(
+            lint_src(rel, "fn admit(&mut self) { self.slots.get(\"s\").unwrap(); }\n"),
+            vec!["no-unwrap:1"]
+        );
+        assert_eq!(
+            lint_src(rel, "fn hit(&self) { self.metrics.slot_hits.fetch_add(1, Ordering::Relaxed); }\n"),
+            vec!["ordering-comment:1"]
+        );
+        assert_eq!(
+            lint_src(
+                rel,
+                "fn f(&self) {\n    let q = queue.lock();\n    let m = metrics.latencies_us.lock();\n}\n"
+            ),
+            vec!["lock-order:3"]
+        );
+        // the scheduler's own #[cfg(test)] module keeps the usual exemption
+        let test_src = "#[cfg(test)]\nmod tests { fn g() { sched().dispatch().unwrap(); } }\n";
+        assert!(lint_src(rel, test_src).is_empty());
     }
 
     #[test]
