@@ -202,6 +202,14 @@ impl Config {
             cfg.accel.seq_len % cfg.accel.kv_blocks == 0,
             "seq_len must be divisible by kv_blocks"
         );
+        // zero/negative/NaN would make the scheduler's prefill-due need
+        // clamp to 1 and silently defeat decode priority (a prefill
+        // admitted on every iteration with any waiting group)
+        anyhow::ensure!(
+            cfg.coord.waiting_served_ratio.is_finite() && cfg.coord.waiting_served_ratio > 0.0,
+            "waiting_served_ratio must be finite and > 0, got {}",
+            cfg.coord.waiting_served_ratio
+        );
         Ok(cfg)
     }
 }
@@ -286,5 +294,18 @@ mod tests {
     fn rejects_bad_geometry() {
         let args = Args::parse(["--seq-len".into(), "100".into(), "--kv-blocks".into(), "3".into()]);
         assert!(Config::resolve(None, &args).is_err());
+    }
+
+    #[test]
+    fn rejects_nonpositive_or_nonfinite_waiting_served_ratio() {
+        for bad in ["0", "-1.5", "NaN", "inf"] {
+            let args = Args::parse(["--waiting-served-ratio".into(), bad.into()]);
+            assert!(
+                Config::resolve(None, &args).is_err(),
+                "waiting_served_ratio={bad} must be rejected"
+            );
+        }
+        let args = Args::parse(["--waiting-served-ratio".into(), "0.01".into()]);
+        assert!(Config::resolve(None, &args).is_ok(), "small positive ratio is valid");
     }
 }

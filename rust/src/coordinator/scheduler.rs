@@ -49,6 +49,16 @@
 //! next iteration boundary and `KvStore::evict` frees the bytes
 //! immediately (in-flight computes hold `Arc` snapshots).
 //!
+//! **Deadlines.**  Queued requests can sit past their deadline while
+//! parked — a waiting group deferred by the total-token budget against a
+//! persistently busy running batch never reaches a dispatch-side shed
+//! point.  The scheduler therefore maintains a lower bound on the
+//! earliest queued deadline ([`Scheduler::next_request_deadline`]); the
+//! serving loop folds it into its wake timer and sweeps expired or
+//! cancelled requests out via [`Scheduler::remove_matching`] on every
+//! timed wake (not only on a cancel nudge), so a deferred request always
+//! gets its terminal `TimedOut` response and releases its ingress pin.
+//!
 //! The scheduler itself is single-threaded state owned by the serving
 //! loop — no internal locks; every method is a plain call, which keeps
 //! the whole policy synchronously unit-testable.
@@ -119,6 +129,13 @@ struct Slot {
     /// from decode assembly until the prefill lane reopens, so one
     /// session never runs in two concurrent dispatches.
     in_prefill: bool,
+    /// Contributed requests to the decode dispatch currently in flight
+    /// (set at assembly, cleared when the decode lane reopens).  Such a
+    /// slot looks idle — its pending drained into the dispatch — but
+    /// retiring it would let the session's next request re-admit through
+    /// the independent prefill lane and run concurrently with the
+    /// still-executing decode, so `retire_idle_lru` must skip it.
+    in_decode: bool,
 }
 
 /// A closed front-end group parked for admission.
@@ -141,6 +158,15 @@ pub struct Scheduler {
     waiting: VecDeque<WaitingGroup>,
     /// Decode iterations assembled so far (waiting-group aging clock).
     iter: u64,
+    /// Lower bound on the earliest deadline across all queued requests
+    /// (waiting groups + slot pendings): tightened on every insert,
+    /// recomputed exactly by [`Scheduler::remove_matching`] (the sweep
+    /// the serving loop schedules at this instant).  A stale-low bound
+    /// only costs one spurious sweep; it is never later than the true
+    /// minimum, so a parked request can never outlive its deadline
+    /// unobserved — even when token-budget admission defers it
+    /// indefinitely.
+    min_deadline: Option<Instant>,
     kv: Arc<KvStore>,
     metrics: Arc<Metrics>,
 }
@@ -157,9 +183,36 @@ impl Scheduler {
             rotation: VecDeque::new(),
             waiting: VecDeque::new(),
             iter: 0,
+            min_deadline: None,
             kv,
             metrics,
         }
+    }
+
+    /// Earliest deadline across queued requests (waiting + slots), as a
+    /// lower bound (see the `min_deadline` field docs).  The serving
+    /// loop folds this into its wake timer and runs
+    /// [`Scheduler::remove_matching`] with the shed verdict once it
+    /// passes, so deferred/parked requests still expire on time.
+    pub fn next_request_deadline(&self) -> Option<Instant> {
+        self.min_deadline
+    }
+
+    fn note_deadline(&mut self, d: Instant) {
+        self.min_deadline = Some(self.min_deadline.map_or(d, |m| m.min(d)));
+    }
+
+    /// Recompute `min_deadline` exactly from the remaining queued
+    /// requests (O(pending); called only at sweep points, not per
+    /// message).
+    fn refresh_deadline(&mut self) {
+        self.min_deadline = self
+            .waiting
+            .iter()
+            .flat_map(|w| w.group.requests.iter())
+            .chain(self.slots.values().flat_map(|s| s.pending.iter()))
+            .map(|r| r.deadline)
+            .min();
     }
 
     /// Does `session` hold a resident slot?
@@ -186,16 +239,18 @@ impl Scheduler {
         if front_end_pending || self.waiting_has(&req.session) {
             return Some(req);
         }
+        let deadline = req.deadline;
         match self.slots.get_mut(&req.session) {
             Some(slot) => {
                 slot.pending.push(req);
                 slot.last_active = now;
                 // ordering: Relaxed — statistical counter
                 self.metrics.slot_hits.fetch_add(1, Ordering::Relaxed);
-                None
             }
-            None => Some(req),
+            None => return Some(req),
         }
+        self.note_deadline(deadline);
+        None
     }
 
     /// Park a front-end-closed batch's groups for admission.  A group
@@ -204,6 +259,9 @@ impl Scheduler {
     /// refused direct routing while this group was forming).
     pub fn enqueue_closed(&mut self, batch: Batch, now: Instant) {
         for g in batch.groups {
+            if let Some(d) = g.requests.iter().map(|r| r.deadline).min() {
+                self.note_deadline(d);
+            }
             let resident_and_clear =
                 self.slots.contains_key(&g.session) && !self.waiting_has(&g.session);
             if resident_and_clear {
@@ -236,6 +294,15 @@ impl Scheduler {
             // any) has fully retired, so its slots become decodable
             for slot in self.slots.values_mut() {
                 slot.in_prefill = false;
+            }
+        }
+        if !gate.inflight(BatchKind::Decode) {
+            // the previous decode dispatch (if any) has fully retired:
+            // its slots become genuinely idle (retirable) again.
+            // Cleared before prefill assembly so admission's LRU
+            // retirement sees accurate flags.
+            for slot in self.slots.values_mut() {
+                slot.in_decode = false;
             }
         }
         let mut out = Vec::new();
@@ -345,13 +412,17 @@ impl Scheduler {
     }
 
     /// Retire the least-recently-active idle slot (no pending work, not
-    /// mid-prefill), excluding `keep`.  Returns whether one was retired.
+    /// mid-prefill, not feeding the in-flight decode dispatch),
+    /// excluding `keep`.  Returns whether one was retired.
     fn retire_idle_lru(&mut self, keep: Option<&str>) -> bool {
         let victim = self
             .slots
             .iter()
             .filter(|(name, s)| {
-                s.pending.is_empty() && !s.in_prefill && keep != Some(name.as_str())
+                s.pending.is_empty()
+                    && !s.in_prefill
+                    && !s.in_decode
+                    && keep != Some(name.as_str())
             })
             .min_by_key(|(_, s)| s.last_active)
             .map(|(name, _)| name.clone());
@@ -381,7 +452,13 @@ impl Scheduler {
         self.rotation.push_back(session.to_string());
         self.slots.insert(
             session.to_string(),
-            Slot { pending: Vec::new(), last_active: now, last_decode_at: None, in_prefill: true },
+            Slot {
+                pending: Vec::new(),
+                last_active: now,
+                last_decode_at: None,
+                in_prefill: true,
+                in_decode: false,
+            },
         );
         // ordering: Relaxed — statistical counter (the acceptance test
         // reads it after joining the serving threads)
@@ -414,6 +491,7 @@ impl Scheduler {
             }
             let take = slot.pending.len().min(max_batch).min(room);
             let requests: Vec<AttentionRequest> = slot.pending.drain(..take).collect();
+            slot.in_decode = true;
             if let Some(prev) = slot.last_decode_at {
                 self.metrics.observe_decode_gap(now.duration_since(prev).as_secs_f64() * 1e6);
             }
@@ -468,6 +546,10 @@ impl Scheduler {
         for slot in self.slots.values_mut() {
             sieve(&mut slot.pending);
         }
+        // sweep point: re-tighten the deadline bound exactly (dispatch
+        // assembly can leave it stale-low, which schedules one spurious
+        // sweep — corrected here)
+        self.refresh_deadline();
         removed
     }
 
@@ -478,7 +560,11 @@ impl Scheduler {
     /// holds its own KV snapshot).
     pub fn retire(&mut self, session: &str) -> Vec<AttentionRequest> {
         self.rotation.retain(|s| s != session);
-        self.slots.remove(session).map(|s| s.pending).unwrap_or_default()
+        let pending = self.slots.remove(session).map(|s| s.pending).unwrap_or_default();
+        if !pending.is_empty() {
+            self.refresh_deadline();
+        }
+        pending
     }
 
     /// Flush everything for shutdown: waiting groups and slot pendings
@@ -497,6 +583,7 @@ impl Scheduler {
             }
         }
         self.rotation.clear();
+        self.min_deadline = None;
         let mut out: Vec<Batch> = Vec::new();
         let mut cur: Vec<SessionBatch> = Vec::new();
         let mut cur_total = 0usize;
@@ -876,6 +963,68 @@ mod tests {
         assert_eq!(s.resident_slots(), 0);
         assert_eq!(s.waiting_groups(), 0);
         assert!(!s.has_backlog());
+    }
+
+    #[test]
+    fn slot_feeding_inflight_decode_is_not_retired_by_token_budget() {
+        let kv = Arc::new(KvStore::new(64, 4, 16));
+        kv.put("a", Mat::zeros(4, 4), Mat::zeros(4, 4)).unwrap();
+        kv.put("b", Mat::zeros(9, 4), Mat::zeros(9, 4)).unwrap();
+        let mut s = sched_with_kv(
+            SchedulerCfg { max_batch_total_tokens: 12, ..SchedulerCfg::default() },
+            kv,
+        );
+        let gate = IterGate::new();
+        let now = Instant::now();
+        park(&mut s, "a", vec![req(0, "a")]);
+        s.dispatch(now, &gate); // prefill admits "a" (4 resident + 1 query <= 12)
+        // drain a's next request into a decode dispatch kept in flight
+        assert!(s.route(req(1, "a"), now, false).is_none());
+        let d = s.dispatch(now, &gate);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].kind, BatchKind::Decode);
+        assert!(gate.claim(BatchKind::Decode), "decode dispatch in flight");
+        // "b" (9 resident + 1 query) cannot fit beside a's 4 resident
+        // tokens; a's pending is drained but its work is mid-flight, so
+        // a must NOT be retired to fund the admission — "b" defers.
+        // (Retiring it would let a's next request re-admit through the
+        // prefill lane concurrently with the running decode.)
+        park(&mut s, "b", vec![req(2, "b")]);
+        let during = s.dispatch(Instant::now(), &gate);
+        assert!(during.iter().all(|b| b.kind != BatchKind::Prefill), "admission deferred");
+        assert!(s.is_resident("a"), "slot feeding the in-flight decode must survive");
+        assert_eq!(s.waiting_groups(), 1);
+        // once the decode retires, the genuinely idle slot funds it
+        gate.finish(BatchKind::Decode);
+        let after = s.dispatch(Instant::now(), &gate);
+        assert_eq!(after[0].kind, BatchKind::Prefill);
+        assert!(!s.is_resident("a"), "idle slot retired once its dispatch completed");
+        assert!(s.is_resident("b"));
+    }
+
+    #[test]
+    fn deadline_bound_tracks_queued_requests_and_refreshes_after_sweep() {
+        let mut s = sched(SchedulerCfg::default());
+        let gate = IterGate::new();
+        let now = Instant::now();
+        assert!(s.next_request_deadline().is_none());
+        let r0 = req(0, "w");
+        let d0 = r0.deadline;
+        park(&mut s, "w", vec![r0]);
+        assert_eq!(s.next_request_deadline(), Some(d0), "waiting group sets the bound");
+        s.dispatch(now, &gate); // admits "w" (bound may stay stale-low)
+        // a routed request with an earlier deadline tightens the bound
+        let mut r1 = req(1, "w");
+        r1.deadline = now + Duration::from_millis(5);
+        let d1 = r1.deadline;
+        assert!(s.route(r1, now, false).is_none());
+        assert_eq!(s.next_request_deadline(), Some(d1));
+        // the sweep removes the expired request and re-tightens exactly
+        let later = now + Duration::from_millis(10);
+        let removed = s.remove_matching(|r| r.expired(later));
+        assert_eq!(removed.len(), 1);
+        assert_eq!(removed[0].id, 1);
+        assert!(s.next_request_deadline().is_none(), "no queued work: bound cleared");
     }
 
     #[test]

@@ -776,12 +776,18 @@ fn scheduler_loop(
     // groups into one dispatch instead of N deadline-ordered ones.
     let slack = window / 4;
     loop {
-        // sleep until the earliest pending group's sweep point; while a
-        // lane is in flight over a backlog, also poll on a short bound
-        // in case the worker's IterDone nudge was lost to a full ingress
-        // channel.  A fully idle loop blocks on the channel with no
-        // timeout at all — no fixed-tick polling.
+        // sleep until the earliest of: the earliest pending group's
+        // sweep point, the earliest queued-request deadline inside the
+        // scheduler (a waiting group deferred by the token budget never
+        // reaches a dispatch-side shed point, so its expiry must wake
+        // this loop), and — while a lane is in flight over a backlog — a
+        // short poll bound in case the worker's IterDone nudge was lost
+        // to a full ingress channel.  A fully idle loop blocks on the
+        // channel with no timeout at all — no fixed-tick polling.
         let mut wake = batcher.next_deadline().map(|d| d + slack);
+        if let Some(d) = scheduler.next_request_deadline() {
+            wake = Some(wake.map_or(d, |w| w.min(d)));
+        }
         if scheduler.has_backlog()
             && (gate.inflight(BatchKind::Prefill) || gate.inflight(BatchKind::Decode))
         {
@@ -871,6 +877,26 @@ fn scheduler_loop(
             let now = Instant::now();
             for b in batcher.close_expired(now) {
                 scheduler.enqueue_closed(b, now);
+            }
+            // deadline sweep over the scheduler's own queues (waiting
+            // groups + slot backlogs), gated on its deadline bound so
+            // the O(pending) scan runs only when something can actually
+            // have expired — NOT only on a Cancel nudge: a group parked
+            // by token-budget deferral would otherwise hang past its
+            // deadline with its pin held (remove_matching re-tightens
+            // the bound, so a stale-low bound costs one empty pass)
+            if scheduler.next_request_deadline().is_some_and(|d| now >= d) {
+                for req in
+                    scheduler.remove_matching(|r| shed_verdict(r, now, false, &ctx).is_some())
+                {
+                    // same re-derivation fallback rationale as the
+                    // Cancel arm; here expiry is the usual verdict
+                    let err = shed_verdict(&req, now, false, &ctx)
+                        .unwrap_or(ServeError::TimedOut);
+                    // ordering: Relaxed — statistical counter
+                    ctx.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                    fail_request(req, err, &ctx.kv, &ctx.metrics);
+                }
             }
         }
         // iteration dispatch: at most one batch per free gate lane.  The

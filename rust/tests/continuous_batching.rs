@@ -121,29 +121,35 @@ fn decode_loop_costs_one_admission_not_one_per_token() {
     srv.shutdown();
 }
 
-/// Backend that parks any dispatch touching a "big" session (>= SEQ
-/// resident rows) until released — a deterministic stand-in for a long
-/// prefill compute, so the cadence test can prove decode iterations
-/// keep flowing while the prefill lane is occupied (no sleeps, no
-/// timing races).
+/// Backend that (while `armed`) parks any dispatch touching a session
+/// with >= `min_rows` resident rows until released — a deterministic
+/// stand-in for a long compute, so tests can prove what keeps flowing
+/// (or stays deferred) while a lane is occupied, with no sleeps and no
+/// timing races.
 struct GatedBackend {
     inner: Box<dyn Backend>,
+    armed: Arc<AtomicBool>,
     entered: Arc<AtomicBool>,
     release: Arc<AtomicBool>,
+    min_rows: usize,
 }
 
 impl GatedBackend {
     fn wrap_factory(
         inner: BackendFactory,
+        armed: Arc<AtomicBool>,
         entered: Arc<AtomicBool>,
         release: Arc<AtomicBool>,
+        min_rows: usize,
     ) -> BackendFactory {
         Box::new(move || {
             let be = inner()?;
             Ok(Box::new(GatedBackend {
                 inner: be,
+                armed: armed.clone(),
                 entered: entered.clone(),
                 release: release.clone(),
+                min_rows,
             }) as Box<dyn Backend>)
         })
     }
@@ -163,7 +169,9 @@ impl Backend for GatedBackend {
     }
 
     fn compute_plan(&mut self, plan: &[(&KvEntry, &Mat)]) -> Result<Vec<Mat>> {
-        if plan.iter().any(|(kv, _)| kv.prepared().n() >= SEQ) {
+        if self.armed.load(Ordering::SeqCst)
+            && plan.iter().any(|(kv, _)| kv.prepared().n() >= self.min_rows)
+        {
             self.entered.store(true, Ordering::SeqCst);
             while !self.release.load(Ordering::SeqCst) {
                 std::thread::sleep(Duration::from_millis(1));
@@ -206,14 +214,17 @@ fn long_prefill_does_not_stall_resident_decode_cadence() {
     );
     kv.put("res", kr.rows_slice(0, PREFILL), vr.rows_slice(0, PREFILL)).unwrap();
     kv.put("big", kb.clone(), vb.clone()).unwrap();
+    let armed = Arc::new(AtomicBool::new(true)); // park from the start
     let entered = Arc::new(AtomicBool::new(false));
     let release = Arc::new(AtomicBool::new(false));
     let factories = (0..coord.workers)
         .map(|_| {
             GatedBackend::wrap_factory(
                 SimBackend::factory(Arith::Hfa, accel_cfg()),
+                armed.clone(),
                 entered.clone(),
                 release.clone(),
+                SEQ,
             )
         })
         .collect();
@@ -532,5 +543,108 @@ fn prefill_token_budget_splits_joins_across_admissions() {
         "a {JOIN_ROWS}-token budget must admit the {SESSIONS} joins one \
          prefill dispatch each: {snap:?}"
     );
+    srv.shutdown();
+}
+
+// Deadline enforcement for parked admissions: a join deferred by the
+// total-token budget against a persistently busy running batch never
+// reaches a dispatch-side shed point, so the scheduler's own deadline
+// sweep must fail it as TimedOut at its deadline and release its pin —
+// not park it (and hang its caller) until the running batch drains.
+// (Regression: the waiting queue used to be swept only on a Cancel.)
+#[test]
+fn token_budget_deferred_request_times_out_instead_of_hanging() {
+    const BUSY_ROWS: usize = 12;
+    const NEW_ROWS: usize = 9;
+    let coord = CoordinatorConfig {
+        max_batch: 8,
+        max_total_batch: 64,
+        batch_window_us: 500,
+        workers: 1,
+        queue_depth: 64,
+        // busy (12 resident) + new (9 resident + 1 query) cannot coexist
+        max_batch_total_tokens: 16,
+        ..CoordinatorConfig::default()
+    };
+    let kv = Arc::new(KvStore::new(SEQ, D, 4));
+    let mut rng = Rng::new(4242);
+    let (kb, vb) = (
+        Mat::from_vec(BUSY_ROWS, D, rng.normal_vec(BUSY_ROWS * D)),
+        Mat::from_vec(BUSY_ROWS, D, rng.normal_vec(BUSY_ROWS * D)),
+    );
+    kv.put("busy", kb.clone(), vb.clone()).unwrap();
+    kv.put(
+        "new",
+        Mat::from_vec(NEW_ROWS, D, rng.normal_vec(NEW_ROWS * D)),
+        Mat::from_vec(NEW_ROWS, D, rng.normal_vec(NEW_ROWS * D)),
+    )
+    .unwrap();
+    let armed = Arc::new(AtomicBool::new(false)); // let the admission serve
+    let entered = Arc::new(AtomicBool::new(false));
+    let release = Arc::new(AtomicBool::new(false));
+    let srv = Server::start(
+        &coord,
+        kv.clone(),
+        vec![GatedBackend::wrap_factory(
+            SimBackend::factory(Arith::Hfa, accel_cfg()),
+            armed.clone(),
+            entered.clone(),
+            release.clone(),
+            BUSY_ROWS,
+        )],
+    )
+    .unwrap();
+
+    // make "busy" resident (its admission serves normally, unarmed)
+    let q0 = rng.normal_vec(D);
+    let r0 = srv.call("busy", q0.clone()).unwrap();
+    assert!(r0.ok(), "{:?}", r0.output);
+    assert_eq!(r0.output.unwrap(), golden(&q0, &kb, &vb, BUSY_ROWS));
+
+    // park the running batch: busy's next decode step holds the lone
+    // worker (and the decode lane) until released, so its slot stays
+    // mid-flight — never idle, never retirable
+    armed.store(true, Ordering::SeqCst);
+    let q1 = rng.normal_vec(D);
+    let busy_rx = srv
+        .submit_with_deadline("busy", q1.clone(), std::time::Instant::now() + Duration::from_secs(60))
+        .unwrap();
+    let t0 = std::time::Instant::now();
+    while !entered.load(Ordering::SeqCst) {
+        assert!(t0.elapsed() < Duration::from_secs(10), "decode never reached the worker");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // the join that cannot fit: 12 + (9 + 1) > 16 and nothing is idle to
+    // retire — admission defers.  Its deadline must still be enforced.
+    let new_rx = srv
+        .submit_with_deadline(
+            "new",
+            rng.normal_vec(D),
+            std::time::Instant::now() + Duration::from_millis(300),
+        )
+        .unwrap();
+    let resp = new_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("deferred join must be shed at its deadline, not parked forever");
+    let err = resp.output.unwrap_err();
+    assert!(
+        matches!(err, hfa::coordinator::ServeError::TimedOut),
+        "deferred join must time out, got {err:?}"
+    );
+    assert!(
+        busy_rx.try_recv().is_err(),
+        "the running batch is still parked: the shed came from the waiting queue"
+    );
+    let snap = srv.metrics.snapshot();
+    assert_eq!(snap.timed_out, 1, "{snap:?}");
+    assert_eq!(snap.shed, 1, "{snap:?}");
+
+    // unpark; the resident session's decode is untouched by the shed
+    release.store(true, Ordering::SeqCst);
+    let busy = busy_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    assert!(busy.ok(), "{:?}", busy.output);
+    assert_eq!(busy.output.unwrap(), golden(&q1, &kb, &vb, BUSY_ROWS));
+    assert_eq!(kv.pinned_sessions(), 0, "shed + served requests released every pin");
     srv.shutdown();
 }
