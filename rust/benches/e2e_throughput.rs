@@ -7,6 +7,9 @@
 //! a continuous-decode scenario (S resident sessions streaming one token
 //! per round through the slot-table scheduler — tokens/s plus the
 //! server-side inter-token p99),
+//! a streaming-ingress scenario (S loopback socket clients, one token
+//! frame per decode step through the framed front end — end-to-end
+//! tokens/s plus first-token / inter-token delivery p99),
 //! and the query-tiled kernel microbench (EXPERIMENTS.md §Tiling): exact
 //! K/V stream traffic per tile height plus the batch-1 two-axis decode
 //! grid.
@@ -471,6 +474,119 @@ fn main() -> anyhow::Result<()> {
         server.shutdown();
     }
     ct.emit("continuous_decode");
+
+    // Streaming ingress (EXPERIMENTS.md §Streaming): S loopback clients,
+    // each prefilling a session over the wire and streaming one token
+    // frame per decode step through the framed-socket front end.
+    // tokens/s is end-to-end (framing + write queue + TCP included);
+    // first-token / inter-token p99 are the client-visible delivery
+    // spans sampled as each frame enters the write queue.  Shed and
+    // disconnect counts must be zero here — a behaving client is never
+    // shed — and the drain must come back clean, so the bench doubles
+    // as a load smoke.
+    let stream_steps = env_usize("HFA_BENCH_STREAM_STEPS", 16).min(n / 2);
+    let stream_prefill = (n / 4).max(1).min(n - stream_steps);
+    let mut gt = Table::new(
+        &format!(
+            "Streaming ingress — S loopback clients x {stream_steps} streamed tokens, \
+             prefill {stream_prefill} of N={n}, d={d}"
+        ),
+        &[
+            "sessions",
+            "steps",
+            "tokens/s",
+            "first-token p99 us",
+            "inter-token p99 us",
+            "shed",
+            "disconnects",
+        ],
+    );
+    for sessions in [1usize, 16, 64] {
+        use hfa::coordinator::{Client, Ingress, StreamEvent, StreamStep};
+        let stream_coord = CoordinatorConfig {
+            max_batch: 16,
+            max_total_batch: 1024,
+            batch_window_us: 200,
+            workers: 2,
+            queue_depth: (2 * sessions).max(256),
+            ingress_max_connections: (2 * sessions).max(64),
+            ..CoordinatorConfig::default()
+        };
+        let kv = Arc::new(KvStore::new(n, d, sessions));
+        let factories = (0..stream_coord.workers)
+            .map(|_| SimBackend::factory(Arith::Hfa, accel_cfg.clone()))
+            .collect();
+        let server = Server::start(&stream_coord, kv, factories)?;
+        let ing = Ingress::bind("127.0.0.1:0", server, &stream_coord)?;
+        let addr = ing.local_addr();
+        let metrics = ing.metrics();
+        let t0 = Instant::now();
+        let clients: Vec<_> = (0..sessions)
+            .map(|s| {
+                let (k, v) = (k.clone(), v.clone());
+                std::thread::spawn(move || -> anyhow::Result<()> {
+                    let mut rng = Rng::new(0x57E0 ^ ((s as u64) << 8));
+                    let mut cl = Client::connect(&addr)?;
+                    let sess = format!("stream-{s}");
+                    cl.put(
+                        &sess,
+                        k.rows_slice(0, stream_prefill),
+                        v.rows_slice(0, stream_prefill),
+                    )?;
+                    let plan: Vec<StreamStep> = (0..stream_steps)
+                        .map(|t| {
+                            let at = stream_prefill + t;
+                            StreamStep {
+                                k: k.rows_slice(at, at + 1),
+                                v: v.rows_slice(at, at + 1),
+                                q: rng.normal_vec(k.cols),
+                            }
+                        })
+                        .collect();
+                    let events = cl.stream(&sess, plan)?;
+                    let tokens =
+                        events.iter().filter(|e| matches!(e, StreamEvent::Token { .. })).count();
+                    anyhow::ensure!(tokens == stream_steps, "{sess}: {tokens}/{stream_steps}");
+                    anyhow::ensure!(
+                        matches!(events.last(), Some(StreamEvent::End { .. })),
+                        "{sess}: missing terminal End: {:?}",
+                        events.last()
+                    );
+                    cl.goodbye()?;
+                    Ok(())
+                })
+            })
+            .collect();
+        for c in clients {
+            c.join().map_err(|_| anyhow::anyhow!("stream client panicked"))??;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let tokens_per_s = (sessions * stream_steps) as f64 / wall;
+        let snap = metrics.snapshot();
+        gt.row(&[
+            sessions.to_string(),
+            stream_steps.to_string(),
+            format!("{tokens_per_s:.0}"),
+            format!("{:.0}", snap.first_token_p99_us),
+            format!("{:.0}", snap.inter_token_p99_us),
+            snap.slow_consumer_shed.to_string(),
+            snap.disconnects.to_string(),
+        ]);
+        // the latency spans and shed tallies ride in the shape string —
+        // the row schema is fixed at 4 keys
+        json_rows.push(BenchRow {
+            bench: format!("streaming_s{sessions}"),
+            shape: format!(
+                "S{sessions}_N{n}_d{d}_prefill{stream_prefill}_steps{stream_steps}_ftp99us{:.0}_itp99us{:.0}_shed{}",
+                snap.first_token_p99_us, snap.inter_token_p99_us, snap.slow_consumer_shed
+            ),
+            ns_per_step: 1e9 / tokens_per_s.max(1e-9),
+            kv_bytes_copied: 0,
+        });
+        let report = ing.drain(Duration::from_secs(30));
+        anyhow::ensure!(report.clean(), "streaming bench drain must be clean: {report}");
+    }
+    gt.emit("streaming_ingress");
 
     // machine-readable trajectory file, self-validated so CI's smoke run
     // catches a writer regression

@@ -88,6 +88,31 @@ pub struct CoordinatorConfig {
     /// Starvation override: a waiting group older than this many decode
     /// iterations is admitted even below the ratio threshold.
     pub max_waiting_iters: u64,
+    /// Grace period in microseconds added past a request's deadline when
+    /// the caller blocks for its response (`Server::call` / `append`, and
+    /// the ingress terminal-frame waits): the serving loop sheds expired
+    /// work itself, so the terminal response normally lands within the
+    /// deadline — the grace only bounds how long a caller waits for that
+    /// shed to be delivered before synthesizing `TimedOut` locally.
+    pub response_grace_us: u64,
+    /// Streaming ingress: max concurrently accepted connections; past it
+    /// new connections get a terminal `Overloaded` frame and are closed.
+    pub ingress_max_connections: usize,
+    /// Streaming ingress: max wire requests in flight across all
+    /// connections (each holds its gate slot from admission to terminal
+    /// frame), layered above the server's own `max_pending_requests`.
+    pub ingress_max_requests: usize,
+    /// Streaming ingress: bounded per-connection write queue, in frames.
+    /// A full queue blocks that session's decode routing (backpressure);
+    /// the stall budget below bounds how long.
+    pub ingress_write_queue: usize,
+    /// Streaming ingress: slow-consumer stall budget in microseconds — a
+    /// session whose write queue stays full this long is shed with
+    /// `ServeError::Cancelled` and its KV evicted, so one laggard can
+    /// never wedge the iteration loop or strand KV bytes.
+    pub ingress_stall_budget_us: u64,
+    /// Streaming ingress: listener (accept) thread-pool size.
+    pub ingress_acceptors: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -107,6 +132,12 @@ impl Default for CoordinatorConfig {
             max_batch_total_tokens: 0,
             waiting_served_ratio: 1.2,
             max_waiting_iters: 4,
+            response_grace_us: 100_000,
+            ingress_max_connections: 256,
+            ingress_max_requests: 1024,
+            ingress_write_queue: 64,
+            ingress_stall_budget_us: 2_000_000,
+            ingress_acceptors: 2,
         }
     }
 }
@@ -197,6 +228,20 @@ impl Config {
         if let Some(v) = map.get("max_waiting_iters") {
             cfg.coord.max_waiting_iters = v.parse().context("max_waiting_iters")?;
         }
+        if let Some(v) = map.get("response_grace_us") {
+            cfg.coord.response_grace_us = v.parse().context("response_grace_us")?;
+        }
+        cfg.coord.ingress_max_connections =
+            get_usize(&map, "ingress_max_connections", cfg.coord.ingress_max_connections)?;
+        cfg.coord.ingress_max_requests =
+            get_usize(&map, "ingress_max_requests", cfg.coord.ingress_max_requests)?;
+        cfg.coord.ingress_write_queue =
+            get_usize(&map, "ingress_write_queue", cfg.coord.ingress_write_queue)?;
+        if let Some(v) = map.get("ingress_stall_budget_us") {
+            cfg.coord.ingress_stall_budget_us = v.parse().context("ingress_stall_budget_us")?;
+        }
+        cfg.coord.ingress_acceptors =
+            get_usize(&map, "ingress_acceptors", cfg.coord.ingress_acceptors)?;
 
         anyhow::ensure!(
             cfg.accel.seq_len % cfg.accel.kv_blocks == 0,
@@ -210,6 +255,27 @@ impl Config {
             "waiting_served_ratio must be finite and > 0, got {}",
             cfg.coord.waiting_served_ratio
         );
+        // a zero grace would synthesize TimedOut the instant a deadline
+        // passes, racing the serving loop's own shed-and-deliver path
+        anyhow::ensure!(
+            cfg.coord.response_grace_us > 0,
+            "response_grace_us must be > 0, got {}",
+            cfg.coord.response_grace_us
+        );
+        // zero-sized ingress resources wedge rather than shed: no
+        // connection could ever be accepted / no frame ever queued, and a
+        // zero stall budget sheds every consumer on its first full queue
+        anyhow::ensure!(
+            cfg.coord.ingress_max_connections > 0,
+            "ingress_max_connections must be > 0"
+        );
+        anyhow::ensure!(cfg.coord.ingress_max_requests > 0, "ingress_max_requests must be > 0");
+        anyhow::ensure!(cfg.coord.ingress_write_queue > 0, "ingress_write_queue must be > 0");
+        anyhow::ensure!(
+            cfg.coord.ingress_stall_budget_us > 0,
+            "ingress_stall_budget_us must be > 0"
+        );
+        anyhow::ensure!(cfg.coord.ingress_acceptors > 0, "ingress_acceptors must be > 0");
         Ok(cfg)
     }
 }
@@ -288,6 +354,47 @@ mod tests {
         assert_eq!(c.coord.max_batch_total_tokens, 0);
         assert_eq!(c.coord.waiting_served_ratio, 1.2);
         assert_eq!(c.coord.max_waiting_iters, 4);
+    }
+
+    #[test]
+    fn streaming_ingress_knobs_resolve_and_validate() {
+        let args = Args::parse([
+            "--response-grace-us".into(),
+            "250000".into(),
+            "--ingress-max-connections".into(),
+            "33".into(),
+            "--ingress-max-requests".into(),
+            "77".into(),
+            "--ingress-write-queue".into(),
+            "8".into(),
+            "--ingress-stall-budget-us".into(),
+            "500000".into(),
+            "--ingress-acceptors".into(),
+            "4".into(),
+        ]);
+        let c = Config::resolve(None, &args).unwrap();
+        assert_eq!(c.coord.response_grace_us, 250_000);
+        assert_eq!(c.coord.ingress_max_connections, 33);
+        assert_eq!(c.coord.ingress_max_requests, 77);
+        assert_eq!(c.coord.ingress_write_queue, 8);
+        assert_eq!(c.coord.ingress_stall_budget_us, 500_000);
+        assert_eq!(c.coord.ingress_acceptors, 4);
+        // defaults survive when unset
+        let c = Config::resolve(None, &Args::parse(Vec::<String>::new())).unwrap();
+        assert_eq!(c.coord.response_grace_us, 100_000);
+        assert_eq!(c.coord.ingress_write_queue, 64);
+        // zero is rejected for every ingress knob and the grace
+        for knob in [
+            "--response-grace-us",
+            "--ingress-max-connections",
+            "--ingress-max-requests",
+            "--ingress-write-queue",
+            "--ingress-stall-budget-us",
+            "--ingress-acceptors",
+        ] {
+            let args = Args::parse([knob.into(), "0".into()]);
+            assert!(Config::resolve(None, &args).is_err(), "{knob}=0 must be rejected");
+        }
     }
 
     #[test]

@@ -181,6 +181,77 @@ impl Backend for ChaosBackend {
     }
 }
 
+/// What a chaos-driven client does to its connection mid-stream — the
+/// connection-level counterpart of [`ChaosBackend`], used by the
+/// streaming soak (`rust/tests/streaming_ingress.rs`) to script client
+/// misbehavior deterministically.  Fates are drawn per connection key
+/// (same seed + same key = same fate), so a soak failure replays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConnFate {
+    /// Behave: read every token, take the terminal frame, say goodbye.
+    Healthy,
+    /// Drop the socket after reading this many tokens — a mid-stream
+    /// disconnect the server must answer by cancelling the stream and
+    /// freeing its KV.
+    DisconnectAfter(u32),
+    /// Stop reading just before this token until the server sheds the
+    /// connection as a slow consumer (stall budget exceeded).
+    StallBefore(u32),
+    /// Send a deliberately torn frame (a length prefix promising more
+    /// bytes than follow, then close) — exercises the reader's
+    /// torn-frame handling.
+    TornFrame,
+}
+
+/// Seeded plan of connection-level faults.  Rates are probabilities in
+/// [0, 1] drawn per connection key; the bands are disjoint and drawn in
+/// order (disconnect, then stall, then torn).
+#[derive(Debug, Clone)]
+pub struct ConnChaos {
+    /// Seed mixed into every key hash.
+    pub seed: u64,
+    /// Probability a connection disconnects mid-stream.
+    pub disconnect_rate: f64,
+    /// Probability a connection stalls its reads until shed.
+    pub stall_rate: f64,
+    /// Probability a connection sends a torn frame and drops.
+    pub torn_rate: f64,
+    /// Upper bound (exclusive, min 1) for the token index drawn into
+    /// [`ConnFate::DisconnectAfter`] / [`ConnFate::StallBefore`].
+    pub max_step: u32,
+}
+
+impl Default for ConnChaos {
+    fn default() -> ConnChaos {
+        ConnChaos { seed: 0x5EED, disconnect_rate: 0.0, stall_rate: 0.0, torn_rate: 0.0, max_step: 4 }
+    }
+}
+
+impl ConnChaos {
+    /// The fate of the connection identified by `conn_key` (typically
+    /// its session name).  Pure: same seed + same key, same fate.
+    pub fn fate(&self, conn_key: &str) -> ConnFate {
+        let mut h = fnv(self.seed, 0x636F_6E6E); // "conn"
+        for b in conn_key.bytes() {
+            h = fnv(h, u64::from(b));
+        }
+        let key = splitmix(h);
+        let u = ChaosBackend::unit(key);
+        let step = (splitmix(key) % u64::from(self.max_step.max(1))) as u32;
+        if u < self.disconnect_rate {
+            return ConnFate::DisconnectAfter(step);
+        }
+        let u = u - self.disconnect_rate;
+        if u < self.stall_rate {
+            return ConnFate::StallBefore(step);
+        }
+        if u - self.stall_rate < self.torn_rate {
+            return ConnFate::TornFrame;
+        }
+        ConnFate::Healthy
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -294,6 +365,45 @@ mod tests {
             let _ = be.compute_plan(&[(&e, &q)]);
         }));
         assert!(caught.is_err(), "panic_rate 1.0 must panic the dispatch");
+    }
+
+    #[test]
+    fn conn_fates_are_key_deterministic_and_band_disjoint() {
+        let plan = ConnChaos {
+            seed: 7,
+            disconnect_rate: 0.25,
+            stall_rate: 0.25,
+            torn_rate: 0.25,
+            max_step: 6,
+        };
+        let mut tally = [0usize; 4];
+        for i in 0..64 {
+            let key = format!("sess-{i}");
+            let fate = plan.fate(&key);
+            assert_eq!(fate, plan.fate(&key), "same seed + key must redraw the same fate");
+            match fate {
+                ConnFate::Healthy => tally[0] += 1,
+                ConnFate::DisconnectAfter(s) => {
+                    assert!(s < 6);
+                    tally[1] += 1;
+                }
+                ConnFate::StallBefore(s) => {
+                    assert!(s < 6);
+                    tally[2] += 1;
+                }
+                ConnFate::TornFrame => tally[3] += 1,
+            }
+        }
+        assert!(tally.iter().all(|&n| n > 0), "every band must be drawn at 0.25 each: {tally:?}");
+        // a different seed redraws at least one fate
+        let reseeded = ConnChaos { seed: 8, ..plan.clone() };
+        assert!(
+            (0..64).any(|i| reseeded.fate(&format!("sess-{i}")) != plan.fate(&format!("sess-{i}"))),
+            "reseeding must change some fates"
+        );
+        // zero rates are all-healthy
+        let calm = ConnChaos::default();
+        assert!((0..16).all(|i| calm.fate(&format!("sess-{i}")) == ConnFate::Healthy));
     }
 
     #[test]

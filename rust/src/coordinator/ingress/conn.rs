@@ -1,0 +1,643 @@
+//! Per-connection lifecycle: one reader, one driver, one writer.
+//!
+//! * **reader** (the connection's own thread) — performs the handshake,
+//!   then decodes frames off the socket with a short read timeout
+//!   ([`TICK`]) so it notices shutdown/drain between frames.  `Cancel`
+//!   frames land in the shared cancel set immediately (they must take
+//!   effect while the driver is mid-stream); work frames are forwarded
+//!   to the driver's channel.  EOF or a torn frame is the disconnect
+//!   signal: the `dead` flag stops the active stream at its next step
+//!   boundary, which cancels the session and frees its KV.
+//! * **driver** — executes work frames strictly in order (the wire is a
+//!   per-connection program: `Put`, then `Append`/`Query`/`Stream`
+//!   against what is resident).  It owns the door: shape/geometry
+//!   validation (typed `Error { code: 0 }` frames), the wire-request
+//!   gate (`ingress_max_requests`, layered over the server's own
+//!   admission control), and the drain refusal (`Error { code:
+//!   Shutdown }` for work arriving after admissions closed).
+//! * **writer** — drains the bounded [`WriteQueue`] to the socket.  Any
+//!   write error means the connection is beyond resync: the queue is
+//!   aborted and `dead` is raised.
+//!
+//! The threads share no locks beyond the write queue and the cancel
+//! set; teardown is by flags + channel closure, so every thread exits
+//! within one tick of any terminal condition and the connection thread
+//! can join all of them deterministically.
+
+use std::collections::HashSet;
+use std::net::{Shutdown, TcpStream};
+use std::time::{Duration, Instant};
+
+use super::super::protocol::{self, WriteQueue};
+use super::super::request::ServeError;
+use super::super::server::Server;
+use super::frame::{self, Frame, ReadOutcome, WIRE_VERSION};
+use super::stream::{error_frame, run_stream, StreamCtx};
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::mpsc::{channel, RecvTimeoutError};
+use crate::sync::{thread, Arc, Mutex};
+
+/// Reader/driver tick: the socket read timeout, and therefore the
+/// cadence at which parked loops notice stop/drain/teardown flags.
+pub(super) const TICK: Duration = Duration::from_millis(50);
+
+/// Patience for the opening `Hello` before the connection is refused.
+const HANDSHAKE_PATIENCE: Duration = Duration::from_secs(5);
+
+/// Per-frame socket write bound: a peer that stops reading cannot park
+/// the writer forever (the drain join depends on it).  A timed-out
+/// write may be partial — beyond resync — so it tears the connection.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Ingress-wide state shared by every connection (and the acceptors).
+pub(super) struct Shared {
+    pub server: Arc<Server>,
+    /// Hard stop: acceptors, readers and idle drivers exit at their
+    /// next tick.
+    pub stop: AtomicBool,
+    /// Soft drain: work frames are refused with a wire `Shutdown`
+    /// error; idle connections are told `Bye` and closed.
+    pub draining: AtomicBool,
+    /// Wire-request gate (`ingress_max_requests`): requests admitted
+    /// past the door across all connections, held for a stream's whole
+    /// lifetime.  Layered over the server's own `max_pending_requests`.
+    pub active_requests: AtomicU64,
+    /// Connection gate (`ingress_max_connections`), claimed by the
+    /// acceptor and released when the connection thread exits.
+    pub active_conns: AtomicU64,
+    pub knobs: Knobs,
+}
+
+/// The ingress knobs a connection needs (resolved from
+/// `CoordinatorConfig` at bind).
+pub(super) struct Knobs {
+    pub max_requests: u64,
+    pub write_queue: usize,
+    pub stall_budget: Duration,
+}
+
+/// Serve one accepted connection to completion.  Called on the
+/// connection's own thread; joins its writer/driver before returning,
+/// so `Ingress::drain` can join connection threads and know the whole
+/// cell is gone.
+pub(super) fn run_conn(sock: TcpStream, shared: Arc<Shared>) {
+    if sock.set_read_timeout(Some(TICK)).is_err() {
+        return;
+    }
+    let write_half = match sock.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let out = Arc::new(WriteQueue::new(shared.knobs.write_queue));
+    let dead = Arc::new(AtomicBool::new(false));
+    let writer = {
+        let out = Arc::clone(&out);
+        let dead = Arc::clone(&dead);
+        thread::spawn(move || writer_loop(write_half, &out, &dead))
+    };
+
+    let mut sock = sock;
+    if handshake(&mut sock, &shared, &out) {
+        serve_frames(&mut sock, &shared, &out, &dead);
+    }
+    // graceful close flushes whatever is queued (terminals, Bye);
+    // abortive paths already emptied it
+    out.close();
+    let _ = writer.join();
+    let _ = sock.shutdown(Shutdown::Both);
+}
+
+/// Expect `Hello`, answer `HelloAck` with the negotiated version and
+/// the KV geometry the door validates against.  Anything else is a
+/// `Bye` + refusal.
+fn handshake(sock: &mut TcpStream, shared: &Shared, out: &WriteQueue<Frame>) -> bool {
+    let deadline = Instant::now() + HANDSHAKE_PATIENCE;
+    let stop = || {
+        // ordering: Relaxed — advisory shutdown flag; a stale read only
+        // delays the refusal one tick
+        shared.stop.load(Ordering::Relaxed) || Instant::now() >= deadline
+    };
+    let refused = |detail: String| {
+        let _ = out.push_unbounded(Frame::Bye { detail });
+        false
+    };
+    match frame::read_frame(sock, &stop) {
+        Ok(ReadOutcome::Frame(Frame::Hello { version })) => {
+            if version != WIRE_VERSION {
+                return refused(format!(
+                    "version mismatch: client speaks {version}, server speaks {WIRE_VERSION}"
+                ));
+            }
+            let ack = Frame::HelloAck {
+                version: WIRE_VERSION,
+                head_dim: shared.server.head_dim() as u32,
+                seq_len: shared.server.kv.seq_len() as u32,
+            };
+            out.push_unbounded(ack).is_ok()
+        }
+        Ok(ReadOutcome::Frame(f)) => {
+            refused(format!("handshake violation: expected Hello, got {}", frame_name(&f)))
+        }
+        Ok(ReadOutcome::Eof) | Err(_) => false,
+        Ok(ReadOutcome::Stopped) => refused("handshake timed out or server stopping".into()),
+    }
+}
+
+/// The post-handshake reader loop plus driver thread (see module docs).
+fn serve_frames(
+    sock: &mut TcpStream,
+    shared: &Arc<Shared>,
+    out: &Arc<WriteQueue<Frame>>,
+    dead: &Arc<AtomicBool>,
+) {
+    let cancels: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
+    // raised by the driver once it has said `Bye`: the reader exits at
+    // its next tick instead of waiting for client EOF
+    let closing = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = channel::<Frame>();
+    let driver = {
+        let shared = Arc::clone(shared);
+        let out = Arc::clone(out);
+        let cancels = Arc::clone(&cancels);
+        let dead = Arc::clone(dead);
+        let closing = Arc::clone(&closing);
+        thread::spawn(move || {
+            driver_loop(&shared, &out, &rx, &cancels, &dead, &closing);
+        })
+    };
+
+    let stop = {
+        let shared = Arc::clone(shared);
+        let closing = Arc::clone(&closing);
+        let dead = Arc::clone(dead);
+        move || {
+            // ordering: Relaxed — advisory teardown flags; a stale read
+            // only delays the reader's exit one tick
+            shared.stop.load(Ordering::Relaxed)
+                || closing.load(Ordering::Relaxed)
+                || dead.load(Ordering::Relaxed)
+        }
+    };
+
+    let mut disconnected = false;
+    loop {
+        match frame::read_frame(sock, &stop) {
+            Ok(ReadOutcome::Frame(f)) => match f {
+                // cancels bypass the driver queue: they must take
+                // effect while the driver is mid-stream
+                Frame::Cancel { id } => {
+                    cancels.lock().insert(id);
+                }
+                Frame::Goodbye => {
+                    let _ = tx.send(Frame::Goodbye);
+                    break;
+                }
+                work @ (Frame::Put { .. }
+                | Frame::Query { .. }
+                | Frame::Append { .. }
+                | Frame::Stream { .. }) => {
+                    if tx.send(work).is_err() {
+                        break; // driver gone (drain Bye raced the send)
+                    }
+                }
+                other => {
+                    // a server->client tag or a second Hello: the peer
+                    // is off-protocol; say why and hang up
+                    let _ = out.push_unbounded(Frame::Bye {
+                        detail: format!("protocol violation: unexpected {}", frame_name(&other)),
+                    });
+                    break;
+                }
+            },
+            Ok(ReadOutcome::Eof) => {
+                disconnected = true;
+                break;
+            }
+            Ok(ReadOutcome::Stopped) => break,
+            Err(_) => {
+                // torn frame or socket error: same as a disconnect
+                disconnected = true;
+                break;
+            }
+        }
+    }
+    if disconnected {
+        // ordering: Relaxed — advisory teardown flag (the active stream
+        // sheds at its next step boundary and frees the session's KV)
+        dead.store(true, Ordering::Relaxed);
+        // ordering: Relaxed — statistical counter
+        shared.server.metrics.disconnects.fetch_add(1, Ordering::Relaxed);
+    }
+    drop(tx); // driver finishes its backlog, then exits
+    let _ = driver.join();
+}
+
+/// Sequential executor for the connection's work frames.
+fn driver_loop(
+    shared: &Shared,
+    out: &WriteQueue<Frame>,
+    rx: &crate::sync::mpsc::Receiver<Frame>,
+    cancels: &Mutex<HashSet<u64>>,
+    dead: &AtomicBool,
+    closing: &AtomicBool,
+) {
+    loop {
+        match rx.recv_timeout(TICK) {
+            Ok(Frame::Goodbye) => {
+                let _ = out.push_unbounded(Frame::Bye { detail: "goodbye".into() });
+                break;
+            }
+            Ok(work) => exec(shared, out, cancels, dead, work),
+            Err(RecvTimeoutError::Timeout) => {
+                // ordering: Relaxed — advisory flags checked each tick
+                if shared.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                // ordering: Relaxed — see above
+                if shared.draining.load(Ordering::Relaxed) {
+                    // idle under drain: explicit terminal farewell
+                    let _ = out.push_unbounded(Frame::Bye { detail: "server draining".into() });
+                    break;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => break, // reader exited
+        }
+    }
+    // ordering: Relaxed — advisory flag; the reader exits at its next tick
+    closing.store(true, Ordering::Relaxed);
+    out.close();
+}
+
+/// Execute one admitted work frame to its single terminal frame.
+fn exec(
+    shared: &Shared,
+    out: &WriteQueue<Frame>,
+    cancels: &Mutex<HashSet<u64>>,
+    dead: &AtomicBool,
+    f: Frame,
+) {
+    let id = match f.id() {
+        Some(id) => id,
+        None => return,
+    };
+    // work arriving after admissions closed is refused, typed
+    // ordering: Relaxed — advisory drain flag; Server::enqueue re-checks
+    // with SeqCst, this refusal is just the earlier, cheaper door
+    if shared.draining.load(Ordering::Relaxed) {
+        let shutdown = ServeError::Shutdown("server draining: admissions closed".into());
+        let _ = out.push_unbounded(Frame::serve_error(id, &shutdown));
+        return;
+    }
+    // the wire-request gate: concurrent requests across all connections
+    if !protocol::try_admit(&shared.active_requests, shared.knobs.max_requests) {
+        let _ = out.push_unbounded(Frame::serve_error(id, &ServeError::Overloaded));
+        return;
+    }
+    if let Err(detail) = door_check(&shared.server, &f) {
+        let _ = out.push_unbounded(Frame::invalid(id, detail));
+        protocol::release(&shared.active_requests);
+        return;
+    }
+    match f {
+        Frame::Put { id, session, k, v } => {
+            let reply = match shared.server.kv.put(&session, k, v) {
+                Ok(()) => Frame::Ack { id },
+                Err(e) => Frame::serve_error(id, &ServeError::KvAdmission(e.to_string())),
+            };
+            let _ = out.push_unbounded(reply);
+        }
+        Frame::Query { id, session, q } => {
+            let reply = match shared.server.call(&session, q) {
+                Ok(resp) => match resp.output {
+                    Ok(outv) => Frame::Output { id, out: outv },
+                    Err(se) => Frame::serve_error(id, &se),
+                },
+                Err(e) => error_frame(id, &e),
+            };
+            let _ = out.push_unbounded(reply);
+        }
+        Frame::Append { id, session, k, v } => {
+            let reply = match shared.server.append(&session, k, v) {
+                Ok(resp) => match resp.output {
+                    Ok(_) => Frame::Ack { id },
+                    Err(se) => Frame::serve_error(id, &se),
+                },
+                Err(e) => error_frame(id, &e),
+            };
+            let _ = out.push_unbounded(reply);
+        }
+        Frame::Stream { id, session, steps } => {
+            let ctx = StreamCtx {
+                server: &shared.server,
+                out,
+                stall: shared.knobs.stall_budget,
+                cancels,
+                dead,
+            };
+            run_stream(&ctx, id, &session, steps);
+        }
+        _ => {}
+    }
+    protocol::release(&shared.active_requests);
+}
+
+/// Door validation: shape/geometry/length checks against the server's
+/// KV geometry, refused with a typed `Error { code: 0 }` before any
+/// server resource is touched.
+fn door_check(server: &Server, f: &Frame) -> Result<(), String> {
+    let hd = server.head_dim();
+    let seq = server.kv.seq_len();
+    let check_session = |s: &str| -> Result<(), String> {
+        if s.is_empty() {
+            return Err("session name must be non-empty".into());
+        }
+        Ok(())
+    };
+    let check_kv = |k: &crate::Mat, v: &crate::Mat| -> Result<(), String> {
+        if k.cols != hd || v.cols != hd {
+            return Err(format!("K/V dims {}x{} / {}x{} != head_dim {hd}", k.rows, k.cols, v.rows, v.cols));
+        }
+        if k.rows != v.rows || k.rows == 0 {
+            return Err("K/V row counts must match and be non-zero".into());
+        }
+        if k.rows > seq {
+            return Err(format!("{} rows exceed seq_len {seq}", k.rows));
+        }
+        Ok(())
+    };
+    let check_q = |q: &[f32]| -> Result<(), String> {
+        if q.len() != hd {
+            return Err(format!("query dim {} != head_dim {hd}", q.len()));
+        }
+        Ok(())
+    };
+    match f {
+        Frame::Put { session, k, v, .. } | Frame::Append { session, k, v, .. } => {
+            check_session(session)?;
+            check_kv(k, v)
+        }
+        Frame::Query { session, q, .. } => {
+            check_session(session)?;
+            check_q(q)
+        }
+        Frame::Stream { session, steps, .. } => {
+            check_session(session)?;
+            if steps.is_empty() {
+                return Err("stream must carry at least one step".into());
+            }
+            for (i, s) in steps.iter().enumerate() {
+                check_kv(&s.k, &s.v).map_err(|e| format!("step {i}: {e}"))?;
+                check_q(&s.q).map_err(|e| format!("step {i}: {e}"))?;
+            }
+            Ok(())
+        }
+        _ => Ok(()),
+    }
+}
+
+/// Writer: drain the queue to the socket until it closes (graceful
+/// paths flush the backlog) or a write fails (abort — nothing can be
+/// delivered past a partial write).
+fn writer_loop(mut sock: TcpStream, out: &WriteQueue<Frame>, dead: &AtomicBool) {
+    let _ = sock.set_write_timeout(Some(WRITE_TIMEOUT));
+    while let Some(f) = out.pop() {
+        if frame::write_frame(&mut sock, &f).is_err() {
+            // ordering: Relaxed — advisory teardown flag (streams shed
+            // at their next step boundary)
+            dead.store(true, Ordering::Relaxed);
+            out.abort();
+            break;
+        }
+    }
+    let _ = sock.shutdown(Shutdown::Write);
+}
+
+/// Short human-readable frame kind (for `Bye` details — never the
+/// payload, which may be megabytes of KV).
+fn frame_name(f: &Frame) -> &'static str {
+    match f {
+        Frame::Hello { .. } => "Hello",
+        Frame::Put { .. } => "Put",
+        Frame::Query { .. } => "Query",
+        Frame::Append { .. } => "Append",
+        Frame::Stream { .. } => "Stream",
+        Frame::Cancel { .. } => "Cancel",
+        Frame::Goodbye => "Goodbye",
+        Frame::HelloAck { .. } => "HelloAck",
+        Frame::Ack { .. } => "Ack",
+        Frame::Output { .. } => "Output",
+        Frame::Token { .. } => "Token",
+        Frame::End { .. } => "End",
+        Frame::Error { .. } => "Error",
+        Frame::Bye { .. } => "Bye",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AcceleratorConfig, CoordinatorConfig};
+    use crate::coordinator::backend::SimBackend;
+    use crate::coordinator::ingress::frame::StreamStep;
+    use crate::coordinator::kvstore::KvStore;
+    use crate::hw::Arith;
+    use crate::Mat;
+    use std::net::TcpListener;
+
+    fn accel(head_dim: usize) -> AcceleratorConfig {
+        AcceleratorConfig { head_dim, seq_len: 32, kv_blocks: 4, parallel_queries: 1, freq_mhz: 500.0 }
+    }
+
+    fn shared() -> Arc<Shared> {
+        let cfg = CoordinatorConfig { workers: 1, ..CoordinatorConfig::default() };
+        let kv = Arc::new(KvStore::new(32, 8, 8));
+        let server = Server::start(&cfg, kv, vec![SimBackend::factory(Arith::Hfa, accel(8))])
+            .expect("server starts");
+        Arc::new(Shared {
+            server: Arc::new(server),
+            stop: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
+            active_requests: AtomicU64::new(0),
+            active_conns: AtomicU64::new(0),
+            knobs: Knobs {
+                max_requests: 64,
+                write_queue: 16,
+                stall_budget: Duration::from_secs(2),
+            },
+        })
+    }
+
+    /// Spin up one served connection; returns the client socket and the
+    /// conn thread handle.
+    fn one_conn(sh: &Arc<Shared>) -> (TcpStream, thread::JoinHandle<()>) {
+        let l = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = l.local_addr().expect("addr");
+        let sh2 = Arc::clone(sh);
+        let h = thread::spawn(move || {
+            let (sock, _) = l.accept().expect("accept");
+            run_conn(sock, sh2);
+        });
+        let client = TcpStream::connect(addr).expect("connect");
+        (client, h)
+    }
+
+    fn send(c: &mut TcpStream, f: &Frame) {
+        frame::write_frame(c, f).expect("client write");
+    }
+
+    fn recv(c: &mut TcpStream) -> Frame {
+        match frame::read_frame(c, &|| false).expect("client read") {
+            ReadOutcome::Frame(f) => f,
+            other => panic!("expected frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn handshake_then_put_query_append_roundtrip() {
+        let sh = shared();
+        let (mut c, h) = one_conn(&sh);
+        send(&mut c, &Frame::Hello { version: WIRE_VERSION });
+        match recv(&mut c) {
+            Frame::HelloAck { version, head_dim, seq_len } => {
+                assert_eq!((version, head_dim, seq_len), (WIRE_VERSION, 8, 32));
+            }
+            other => panic!("expected HelloAck, got {other:?}"),
+        }
+        let k = Mat::from_vec(2, 8, (0..16).map(|i| i as f32 * 0.1).collect());
+        send(&mut c, &Frame::Put { id: 1, session: "s".into(), k: k.clone(), v: k.clone() });
+        assert_eq!(recv(&mut c), Frame::Ack { id: 1 });
+        send(&mut c, &Frame::Query { id: 2, session: "s".into(), q: vec![0.5; 8] });
+        match recv(&mut c) {
+            Frame::Output { id, out } => {
+                assert_eq!(id, 2);
+                assert_eq!(out.len(), 8);
+            }
+            other => panic!("expected Output, got {other:?}"),
+        }
+        let row = Mat::from_vec(1, 8, vec![0.25; 8]);
+        send(&mut c, &Frame::Append { id: 3, session: "s".into(), k: row.clone(), v: row });
+        assert_eq!(recv(&mut c), Frame::Ack { id: 3 });
+        send(&mut c, &Frame::Goodbye);
+        assert!(matches!(recv(&mut c), Frame::Bye { .. }));
+        h.join().expect("conn thread exits");
+        match Arc::try_unwrap(sh) {
+            Ok(s) => match Arc::try_unwrap(s.server) {
+                Ok(srv) => srv.shutdown(),
+                Err(_) => panic!("server Arc must be unique after the conn joined"),
+            },
+            Err(_) => panic!("shared Arc must be unique after the conn joined"),
+        }
+    }
+
+    #[test]
+    fn door_rejects_bad_shapes_with_code_zero_and_keeps_serving() {
+        let sh = shared();
+        let (mut c, h) = one_conn(&sh);
+        send(&mut c, &Frame::Hello { version: WIRE_VERSION });
+        let _ = recv(&mut c);
+        // wrong query dim
+        send(&mut c, &Frame::Query { id: 1, session: "s".into(), q: vec![0.5; 3] });
+        match recv(&mut c) {
+            Frame::Error { id, code, ref detail, .. } => {
+                assert_eq!((id, code), (1, frame::CODE_INVALID));
+                assert!(detail.contains("head_dim"), "{detail}");
+            }
+            other => panic!("expected Error, got {other:?}"),
+        }
+        // mismatched K/V rows
+        send(&mut c, &Frame::Put {
+            id: 2,
+            session: "s".into(),
+            k: Mat::zeros(2, 8),
+            v: Mat::zeros(3, 8),
+        });
+        assert!(matches!(recv(&mut c), Frame::Error { id: 2, code: 0, .. }));
+        // empty session name
+        send(&mut c, &Frame::Query { id: 3, session: String::new(), q: vec![0.0; 8] });
+        assert!(matches!(recv(&mut c), Frame::Error { id: 3, code: 0, .. }));
+        // rows past seq_len
+        send(&mut c, &Frame::Put {
+            id: 4,
+            session: "s".into(),
+            k: Mat::zeros(33, 8),
+            v: Mat::zeros(33, 8),
+        });
+        assert!(matches!(recv(&mut c), Frame::Error { id: 4, code: 0, .. }));
+        // an empty stream
+        send(&mut c, &Frame::Stream { id: 5, session: "s".into(), steps: vec![] });
+        assert!(matches!(recv(&mut c), Frame::Error { id: 5, code: 0, .. }));
+        // the door is stateless: a valid request still lands
+        send(&mut c, &Frame::Put { id: 6, session: "s".into(), k: Mat::zeros(2, 8), v: Mat::zeros(2, 8) });
+        assert_eq!(recv(&mut c), Frame::Ack { id: 6 });
+        // gate must be fully released after rejections
+        // ordering: Relaxed — quiesced single-threaded readback
+        assert_eq!(sh.active_requests.load(Ordering::Relaxed), 0);
+        send(&mut c, &Frame::Goodbye);
+        let _ = recv(&mut c);
+        h.join().expect("conn thread exits");
+    }
+
+    #[test]
+    fn handshake_violations_get_a_bye() {
+        // version mismatch
+        let sh = shared();
+        let (mut c, h) = one_conn(&sh);
+        send(&mut c, &Frame::Hello { version: 999 });
+        match recv(&mut c) {
+            Frame::Bye { detail } => assert!(detail.contains("version mismatch"), "{detail}"),
+            other => panic!("expected Bye, got {other:?}"),
+        }
+        h.join().expect("conn thread exits");
+
+        // first frame is not Hello
+        let (mut c2, h2) = one_conn(&sh);
+        send(&mut c2, &Frame::Ack { id: 1 });
+        match recv(&mut c2) {
+            Frame::Bye { detail } => assert!(detail.contains("expected Hello"), "{detail}"),
+            other => panic!("expected Bye, got {other:?}"),
+        }
+        h2.join().expect("conn thread exits");
+    }
+
+    #[test]
+    fn unknown_wire_error_codes_do_not_round_trip_but_door_codes_do() {
+        // a door rejection decodes client-side as "no ServeError" (code 0)
+        let f = Frame::invalid(9, "query dim 3 != head_dim 8");
+        match f {
+            Frame::Error { code, transient, ref detail, .. } => {
+                assert_eq!(ServeError::from_wire(code, transient, detail), None);
+            }
+            other => panic!("expected Error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn disconnect_mid_stream_is_counted_and_frees_the_session() {
+        let sh = shared();
+        sh.server.kv.put("d", Mat::zeros(2, 8), Mat::zeros(2, 8)).expect("put");
+        let (mut c, h) = one_conn(&sh);
+        send(&mut c, &Frame::Hello { version: WIRE_VERSION });
+        let _ = recv(&mut c);
+        // a long stream, then vanish after the first token
+        let steps: Vec<StreamStep> = (0..64)
+            .map(|_| StreamStep {
+                k: Mat::from_vec(1, 8, vec![0.1; 8]),
+                v: Mat::from_vec(1, 8, vec![0.1; 8]),
+                q: vec![0.5; 8],
+            })
+            .collect();
+        send(&mut c, &Frame::Stream { id: 1, session: "d".into(), steps });
+        let first = recv(&mut c);
+        assert!(matches!(first, Frame::Token { id: 1, step: 0, .. }), "{first:?}");
+        drop(c); // disconnect with 63 steps outstanding
+        h.join().expect("conn thread exits");
+        // ordering: Relaxed — quiesced readback after the join
+        assert_eq!(sh.server.metrics.disconnects.load(Ordering::Relaxed), 1);
+        assert!(
+            sh.server.kv.session_rows("d").is_none(),
+            "disconnect mid-decode must evict the session's KV"
+        );
+        // ordering: Relaxed — quiesced readback after the join
+        assert_eq!(sh.active_requests.load(Ordering::Relaxed), 0, "gate released");
+    }
+}

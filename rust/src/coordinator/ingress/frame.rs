@@ -1,0 +1,613 @@
+//! Wire codec for the streaming ingress: length-prefixed binary frames
+//! over a byte stream (hand-rolled — no serialization deps offline,
+//! matching the repo's JSON-by-hand stance in `benchlib`).
+//!
+//! ## Framing
+//!
+//! Every frame is `u32 LE body length | body`, where the body is
+//! `u8 tag | tag-specific fields` and the length counts the body only.
+//! Bodies are capped at [`MAX_FRAME`] so a corrupt or hostile length
+//! prefix cannot make the reader allocate unboundedly.  Field encoding:
+//!
+//! * integers — little-endian fixed width (`u16`/`u32`/`u64`)
+//! * strings — `u16 LE byte length | UTF-8 bytes`
+//! * f32 vectors — `u32 LE count | count * f32 LE`
+//! * matrices — `u32 LE rows | u32 LE cols | rows*cols * f32 LE`
+//!
+//! ## Reading
+//!
+//! [`read_frame`] distinguishes the three ways a socket read ends:
+//! a complete frame, a clean EOF **at a frame boundary** (the peer
+//! closed after a whole frame — [`ReadOutcome::Eof`]), and a torn frame
+//! (EOF with a length prefix or body half-read — an
+//! [`io::ErrorKind::UnexpectedEof`] error, because data was lost).
+//! Timeout errors (`WouldBlock`/`TimedOut`) never lose bytes: the
+//! partial frame is accumulated across retries inside the call, and the
+//! caller-supplied `stop` predicate is polled at each timeout tick so a
+//! reader parked on an idle socket can still notice shutdown.
+
+use std::io::{self, Read, Write};
+
+use super::super::request::ServeError;
+use crate::Mat;
+
+/// Protocol version carried by `Hello`/`HelloAck`; bumped on any wire
+/// change.  A version mismatch is refused at the handshake.
+pub const WIRE_VERSION: u32 = 1;
+
+/// Upper bound on a frame body (16 MiB) — large enough for a full
+/// `Put` of any geometry this repo benchmarks, small enough that a
+/// corrupt length prefix cannot OOM the reader.
+pub const MAX_FRAME: usize = 16 << 20;
+
+/// Wire error code for protocol-level rejections decided at the door
+/// (malformed or shape-invalid requests that never became a
+/// [`ServeError`]); serving errors use [`ServeError::wire_code`] (1..=6).
+pub const CODE_INVALID: u8 = 0;
+
+// Client -> server tags.
+const T_HELLO: u8 = 0x01;
+const T_PUT: u8 = 0x02;
+const T_QUERY: u8 = 0x03;
+const T_APPEND: u8 = 0x04;
+const T_STREAM: u8 = 0x05;
+const T_CANCEL: u8 = 0x06;
+const T_GOODBYE: u8 = 0x07;
+// Server -> client tags (high bit set).
+const T_HELLO_ACK: u8 = 0x81;
+const T_ACK: u8 = 0x82;
+const T_OUTPUT: u8 = 0x83;
+const T_TOKEN: u8 = 0x84;
+const T_END: u8 = 0x85;
+const T_ERROR: u8 = 0x86;
+const T_BYE: u8 = 0x87;
+
+/// One decode step of a [`Frame::Stream`]: the step's new K/V rows and
+/// the query to attend with once they are resident — the wire image of
+/// the decode loop's `append(k_t, v_t); call(q_t)` pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamStep {
+    pub k: Mat,
+    pub v: Mat,
+    pub q: Vec<f32>,
+}
+
+/// Every frame of the ingress protocol (both directions).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    // -- client -> server --
+    /// Handshake opener; must be the first frame on a connection.
+    Hello { version: u32 },
+    /// Install a session's prefill KV (server replies `Ack` / `Error`).
+    Put { id: u64, session: String, k: Mat, v: Mat },
+    /// One attention query (server replies `Output` / `Error`).
+    Query { id: u64, session: String, q: Vec<f32> },
+    /// One decode-step KV append (server replies `Ack` / `Error`).
+    Append { id: u64, session: String, k: Mat, v: Mat },
+    /// A whole decode stream: the server executes the steps in order
+    /// and pushes a `Token` frame per step as the scheduler's decode
+    /// iteration completes, then exactly one terminal `End` / `Error`.
+    Stream { id: u64, session: String, steps: Vec<StreamStep> },
+    /// Cancel an in-flight request by id (streams shed at the next
+    /// step boundary with `Error { code: Cancelled }`).
+    Cancel { id: u64 },
+    /// Graceful close: the server flushes replies and answers `Bye`.
+    Goodbye,
+
+    // -- server -> client --
+    /// Handshake reply: negotiated version plus the KV geometry the
+    /// door validates against.
+    HelloAck { version: u32, head_dim: u32, seq_len: u32 },
+    /// Terminal success for `Put` / `Append`.
+    Ack { id: u64 },
+    /// Terminal success for `Query`: the attention output.
+    Output { id: u64, out: Vec<f32> },
+    /// One streamed decode step's output (non-terminal).
+    Token { id: u64, step: u32, out: Vec<f32> },
+    /// Stream completed: all `steps` tokens were delivered (terminal).
+    End { id: u64, steps: u32 },
+    /// Terminal failure; `code` is [`ServeError::wire_code`] or
+    /// [`CODE_INVALID`] for door rejections, `detail` is human-readable.
+    Error { id: u64, code: u8, transient: bool, detail: String },
+    /// Connection-level farewell (drain, handshake refusal, protocol
+    /// violation); the server closes after sending it.
+    Bye { detail: String },
+}
+
+impl Frame {
+    /// Whether this frame ends a request (exactly one of these is
+    /// delivered per accepted request — the invariant the soak asserts).
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, Frame::Ack { .. } | Frame::Output { .. } | Frame::End { .. } | Frame::Error { .. })
+    }
+
+    /// The request id this frame belongs to, if any.
+    pub fn id(&self) -> Option<u64> {
+        match self {
+            Frame::Put { id, .. }
+            | Frame::Query { id, .. }
+            | Frame::Append { id, .. }
+            | Frame::Stream { id, .. }
+            | Frame::Cancel { id }
+            | Frame::Ack { id }
+            | Frame::Output { id, .. }
+            | Frame::Token { id, .. }
+            | Frame::End { id, .. }
+            | Frame::Error { id, .. } => Some(*id),
+            _ => None,
+        }
+    }
+
+    /// An `Error` frame carrying a [`ServeError`]'s wire code + detail.
+    pub fn serve_error(id: u64, e: &ServeError) -> Frame {
+        Frame::Error { id, code: e.wire_code(), transient: e.is_transient(), detail: e.to_string() }
+    }
+
+    /// An `Error` frame for a door rejection ([`CODE_INVALID`]).
+    pub fn invalid(id: u64, detail: impl Into<String>) -> Frame {
+        Frame::Error { id, code: CODE_INVALID, transient: false, detail: detail.into() }
+    }
+
+    fn encode_body(&self, b: &mut Vec<u8>) {
+        match self {
+            Frame::Hello { version } => {
+                b.push(T_HELLO);
+                put_u32(b, *version);
+            }
+            Frame::Put { id, session, k, v } => {
+                b.push(T_PUT);
+                put_u64(b, *id);
+                put_str(b, session);
+                put_mat(b, k);
+                put_mat(b, v);
+            }
+            Frame::Query { id, session, q } => {
+                b.push(T_QUERY);
+                put_u64(b, *id);
+                put_str(b, session);
+                put_f32s(b, q);
+            }
+            Frame::Append { id, session, k, v } => {
+                b.push(T_APPEND);
+                put_u64(b, *id);
+                put_str(b, session);
+                put_mat(b, k);
+                put_mat(b, v);
+            }
+            Frame::Stream { id, session, steps } => {
+                b.push(T_STREAM);
+                put_u64(b, *id);
+                put_str(b, session);
+                put_u32(b, steps.len() as u32);
+                for s in steps {
+                    put_mat(b, &s.k);
+                    put_mat(b, &s.v);
+                    put_f32s(b, &s.q);
+                }
+            }
+            Frame::Cancel { id } => {
+                b.push(T_CANCEL);
+                put_u64(b, *id);
+            }
+            Frame::Goodbye => b.push(T_GOODBYE),
+            Frame::HelloAck { version, head_dim, seq_len } => {
+                b.push(T_HELLO_ACK);
+                put_u32(b, *version);
+                put_u32(b, *head_dim);
+                put_u32(b, *seq_len);
+            }
+            Frame::Ack { id } => {
+                b.push(T_ACK);
+                put_u64(b, *id);
+            }
+            Frame::Output { id, out } => {
+                b.push(T_OUTPUT);
+                put_u64(b, *id);
+                put_f32s(b, out);
+            }
+            Frame::Token { id, step, out } => {
+                b.push(T_TOKEN);
+                put_u64(b, *id);
+                put_u32(b, *step);
+                put_f32s(b, out);
+            }
+            Frame::End { id, steps } => {
+                b.push(T_END);
+                put_u64(b, *id);
+                put_u32(b, *steps);
+            }
+            Frame::Error { id, code, transient, detail } => {
+                b.push(T_ERROR);
+                put_u64(b, *id);
+                b.push(*code);
+                b.push(u8::from(*transient));
+                put_str(b, detail);
+            }
+            Frame::Bye { detail } => {
+                b.push(T_BYE);
+                put_str(b, detail);
+            }
+        }
+    }
+
+    fn decode_body(body: &[u8]) -> io::Result<Frame> {
+        let mut c = Cur { b: body, pos: 0 };
+        let tag = c.u8()?;
+        let f = match tag {
+            T_HELLO => Frame::Hello { version: c.u32()? },
+            T_PUT => Frame::Put { id: c.u64()?, session: c.str()?, k: c.mat()?, v: c.mat()? },
+            T_QUERY => Frame::Query { id: c.u64()?, session: c.str()?, q: c.f32s()? },
+            T_APPEND => Frame::Append { id: c.u64()?, session: c.str()?, k: c.mat()?, v: c.mat()? },
+            T_STREAM => {
+                let id = c.u64()?;
+                let session = c.str()?;
+                let n = c.u32()? as usize;
+                let mut steps = Vec::new();
+                for _ in 0..n {
+                    steps.push(StreamStep { k: c.mat()?, v: c.mat()?, q: c.f32s()? });
+                }
+                Frame::Stream { id, session, steps }
+            }
+            T_CANCEL => Frame::Cancel { id: c.u64()? },
+            T_GOODBYE => Frame::Goodbye,
+            T_HELLO_ACK => {
+                Frame::HelloAck { version: c.u32()?, head_dim: c.u32()?, seq_len: c.u32()? }
+            }
+            T_ACK => Frame::Ack { id: c.u64()? },
+            T_OUTPUT => Frame::Output { id: c.u64()?, out: c.f32s()? },
+            T_TOKEN => Frame::Token { id: c.u64()?, step: c.u32()?, out: c.f32s()? },
+            T_END => Frame::End { id: c.u64()?, steps: c.u32()? },
+            T_ERROR => Frame::Error {
+                id: c.u64()?,
+                code: c.u8()?,
+                transient: c.u8()? != 0,
+                detail: c.str()?,
+            },
+            T_BYE => Frame::Bye { detail: c.str()? },
+            t => return Err(bad(format!("unknown frame tag 0x{t:02x}"))),
+        };
+        if c.pos != body.len() {
+            return Err(bad(format!("{} trailing bytes after frame body", body.len() - c.pos)));
+        }
+        Ok(f)
+    }
+}
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+fn put_u16(b: &mut Vec<u8>, v: u16) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    let n = bytes.len().min(u16::MAX as usize);
+    put_u16(b, n as u16);
+    b.extend_from_slice(&bytes[..n]);
+}
+
+fn put_f32s(b: &mut Vec<u8>, v: &[f32]) {
+    put_u32(b, v.len() as u32);
+    for x in v {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_mat(b: &mut Vec<u8>, m: &Mat) {
+    put_u32(b, m.rows as u32);
+    put_u32(b, m.cols as u32);
+    for x in &m.data {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Bounds-checked body cursor: every read validates the remaining
+/// length before touching the slice, so a malformed frame decodes to a
+/// typed `InvalidData` error instead of a panic.
+struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl Cur<'_> {
+    fn take(&mut self, n: usize) -> io::Result<&[u8]> {
+        if self.b.len() - self.pos < n {
+            return Err(bad(format!(
+                "frame truncated: need {n} bytes, {} remain",
+                self.b.len() - self.pos
+            )));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> io::Result<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        let s = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(s);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn str(&mut self) -> io::Result<String> {
+        let n = self.u16()? as usize;
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec()).map_err(|_| bad("string field is not UTF-8".into()))
+    }
+
+    fn f32s(&mut self) -> io::Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        // length check before the allocation: the count field must be
+        // covered by bytes actually present in the (MAX_FRAME-capped) body
+        let s = self.take(n.checked_mul(4).ok_or_else(|| bad("f32 count overflow".into()))?)?;
+        Ok(s.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    fn mat(&mut self) -> io::Result<Mat> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let n = rows.checked_mul(cols).ok_or_else(|| bad("matrix shape overflow".into()))?;
+        let s = self.take(n.checked_mul(4).ok_or_else(|| bad("matrix size overflow".into()))?)?;
+        let data: Vec<f32> =
+            s.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+        Ok(Mat { rows, cols, data })
+    }
+}
+
+/// How a [`read_frame`] call ended.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    /// A complete frame was decoded.
+    Frame(Frame),
+    /// Clean EOF at a frame boundary: the peer closed the stream with
+    /// no partial frame in flight.
+    Eof,
+    /// The `stop` predicate fired at a read-timeout tick (shutdown).
+    Stopped,
+}
+
+/// Write one frame: `u32 LE length | body`.  Any I/O error means the
+/// connection is unusable (a partial write cannot be resynchronized);
+/// the caller tears the connection down.
+pub fn write_frame(w: &mut impl Write, f: &Frame) -> io::Result<()> {
+    let mut body = Vec::new();
+    f.encode_body(&mut body);
+    if body.len() > MAX_FRAME {
+        return Err(bad(format!("frame body {} exceeds MAX_FRAME {MAX_FRAME}", body.len())));
+    }
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&body)
+}
+
+/// Read one frame, accumulating across read-timeout ticks (so a socket
+/// read timeout loses no bytes) and polling `stop` at each tick.
+///
+/// * clean EOF before any byte of the length prefix → [`ReadOutcome::Eof`]
+/// * EOF mid-prefix or mid-body → `UnexpectedEof` ("torn frame")
+/// * `stop()` true at a timeout tick → [`ReadOutcome::Stopped`]
+pub fn read_frame(r: &mut impl Read, stop: &dyn Fn() -> bool) -> io::Result<ReadOutcome> {
+    let mut prefix = [0u8; 4];
+    match read_full(r, &mut prefix, true, stop)? {
+        Progress::Done => {}
+        Progress::Eof => return Ok(ReadOutcome::Eof),
+        Progress::Stopped => return Ok(ReadOutcome::Stopped),
+    }
+    let len = u32::from_le_bytes(prefix) as usize;
+    if len > MAX_FRAME {
+        return Err(bad(format!("frame length {len} exceeds MAX_FRAME {MAX_FRAME}")));
+    }
+    let mut body = vec![0u8; len];
+    match read_full(r, &mut body, false, stop)? {
+        Progress::Done => Frame::decode_body(&body).map(ReadOutcome::Frame),
+        // a length prefix was consumed: EOF here lost data
+        Progress::Eof => Err(io::Error::new(
+            io::ErrorKind::UnexpectedEof,
+            "torn frame: peer closed mid-body",
+        )),
+        Progress::Stopped => Ok(ReadOutcome::Stopped),
+    }
+}
+
+enum Progress {
+    Done,
+    Eof,
+    Stopped,
+}
+
+/// Fill `buf` completely, retrying across `WouldBlock`/`TimedOut`
+/// (socket read-timeout ticks) without losing partial progress.
+/// `eof_ok_at_start` permits a clean EOF only before the first byte.
+fn read_full(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    eof_ok_at_start: bool,
+    stop: &dyn Fn() -> bool,
+) -> io::Result<Progress> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 && eof_ok_at_start {
+                    return Ok(Progress::Eof);
+                }
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "torn frame: peer closed mid-frame",
+                ));
+            }
+            Ok(n) => filled += n,
+            Err(e) => match e.kind() {
+                io::ErrorKind::Interrupted => {}
+                io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => {
+                    if stop() {
+                        return Ok(Progress::Stopped);
+                    }
+                }
+                _ => return Err(e),
+            },
+        }
+    }
+    Ok(Progress::Done)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(f: Frame) {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).unwrap();
+        let mut r = Cursor::new(buf);
+        match read_frame(&mut r, &|| false).unwrap() {
+            ReadOutcome::Frame(back) => assert_eq!(back, f),
+            other => panic!("expected a frame, got {other:?}"),
+        }
+        // and a clean EOF right at the boundary
+        assert!(matches!(read_frame(&mut r, &|| false).unwrap(), ReadOutcome::Eof));
+    }
+
+    #[test]
+    fn every_frame_kind_roundtrips() {
+        let m = Mat::from_vec(2, 3, vec![1.0, -2.5, 3.25, 0.0, f32::MIN_POSITIVE, 7.5]);
+        roundtrip(Frame::Hello { version: WIRE_VERSION });
+        roundtrip(Frame::Put { id: 7, session: "sess".into(), k: m.clone(), v: m.clone() });
+        roundtrip(Frame::Query { id: 8, session: "s2".into(), q: vec![0.5, -0.5] });
+        roundtrip(Frame::Append { id: 9, session: "s3".into(), k: m.clone(), v: m.clone() });
+        roundtrip(Frame::Stream {
+            id: 10,
+            session: "s4".into(),
+            steps: vec![
+                StreamStep { k: m.clone(), v: m.clone(), q: vec![1.0, 2.0] },
+                StreamStep { k: m.clone(), v: m.clone(), q: vec![3.0] },
+            ],
+        });
+        roundtrip(Frame::Cancel { id: 11 });
+        roundtrip(Frame::Goodbye);
+        roundtrip(Frame::HelloAck { version: 1, head_dim: 8, seq_len: 32 });
+        roundtrip(Frame::Ack { id: 12 });
+        roundtrip(Frame::Output { id: 13, out: vec![1.0; 8] });
+        roundtrip(Frame::Token { id: 14, step: 3, out: vec![-1.0; 4] });
+        roundtrip(Frame::End { id: 15, steps: 16 });
+        roundtrip(Frame::Error {
+            id: 16,
+            code: 3,
+            transient: true,
+            detail: "session cancelled".into(),
+        });
+        roundtrip(Frame::Bye { detail: "drain".into() });
+    }
+
+    #[test]
+    fn serve_errors_cross_the_wire_typed() {
+        let e = ServeError::BackendFailed { reason: "device lost".into(), transient: true };
+        let f = Frame::serve_error(21, &e);
+        match f {
+            Frame::Error { id, code, transient, ref detail } => {
+                assert_eq!((id, code, transient), (21, 4, true));
+                assert_eq!(
+                    ServeError::from_wire(code, transient, detail),
+                    Some(ServeError::BackendFailed { reason: detail.clone(), transient: true })
+                );
+            }
+            other => panic!("expected Error, got {other:?}"),
+        }
+        assert!(matches!(Frame::invalid(1, "bad shape"),
+            Frame::Error { code: CODE_INVALID, .. }));
+    }
+
+    #[test]
+    fn terminal_classification_matches_the_protocol() {
+        assert!(Frame::Ack { id: 1 }.is_terminal());
+        assert!(Frame::Output { id: 1, out: vec![] }.is_terminal());
+        assert!(Frame::End { id: 1, steps: 2 }.is_terminal());
+        assert!(Frame::invalid(1, "x").is_terminal());
+        assert!(!Frame::Token { id: 1, step: 0, out: vec![] }.is_terminal());
+        assert!(!Frame::Bye { detail: String::new() }.is_terminal());
+        assert_eq!(Frame::Cancel { id: 9 }.id(), Some(9));
+        assert_eq!(Frame::Goodbye.id(), None);
+    }
+
+    #[test]
+    fn torn_and_oversized_frames_are_typed_errors() {
+        // torn mid-body: write a frame, truncate the bytes
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Ack { id: 5 }).unwrap();
+        let torn = &buf[..buf.len() - 3];
+        let err = match read_frame(&mut Cursor::new(torn.to_vec()), &|| false) {
+            Err(e) => e,
+            Ok(o) => panic!("torn frame must error, got {o:?}"),
+        };
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+
+        // torn mid-prefix
+        let err2 = match read_frame(&mut Cursor::new(vec![1u8, 0]), &|| false) {
+            Err(e) => e,
+            Ok(o) => panic!("torn prefix must error, got {o:?}"),
+        };
+        assert_eq!(err2.kind(), io::ErrorKind::UnexpectedEof);
+
+        // hostile length prefix
+        let huge = ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec();
+        let err3 = match read_frame(&mut Cursor::new(huge), &|| false) {
+            Err(e) => e,
+            Ok(o) => panic!("oversized frame must error, got {o:?}"),
+        };
+        assert_eq!(err3.kind(), io::ErrorKind::InvalidData);
+
+        // unknown tag
+        let mut bad_tag = Vec::new();
+        bad_tag.extend_from_slice(&1u32.to_le_bytes());
+        bad_tag.push(0x7f);
+        assert!(read_frame(&mut Cursor::new(bad_tag), &|| false).is_err());
+
+        // trailing garbage after a valid body
+        let mut trailing = Vec::new();
+        trailing.extend_from_slice(&10u32.to_le_bytes());
+        trailing.push(super::T_GOODBYE);
+        trailing.extend_from_slice(&[0u8; 9]);
+        assert!(read_frame(&mut Cursor::new(trailing), &|| false).is_err());
+    }
+
+    #[test]
+    fn truncated_count_fields_cannot_allocate_past_the_body() {
+        // a Query whose f32 count claims more data than the body holds
+        let mut body = vec![T_QUERY];
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.extend_from_slice(&1u16.to_le_bytes());
+        body.push(b's');
+        body.extend_from_slice(&u32::MAX.to_le_bytes()); // absurd count
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&body);
+        let err = match read_frame(&mut Cursor::new(buf), &|| false) {
+            Err(e) => e,
+            Ok(o) => panic!("must reject, got {o:?}"),
+        };
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+}

@@ -1,0 +1,592 @@
+//! Streaming socket front end for the coordinator: a framed,
+//! length-prefixed binary protocol ([`frame`]) served by a listener
+//! pool, with per-connection reader/driver/writer threads ([`conn`]),
+//! per-token output streaming with bounded write queues and the
+//! slow-consumer shedding policy ([`stream`]), and a drain that
+//! integrates with [`Server::drain`].
+//!
+//! ## Lifecycle
+//!
+//! [`Ingress::bind`] takes **ownership** of the [`Server`]: the ingress
+//! is the server's front door, and connection threads share it through
+//! one `Arc` that [`Ingress::drain`] reclaims after every thread has
+//! joined — so the server's own drain (which consumes it) always runs
+//! exactly once, after the last socket is quiet.
+//!
+//! Drain sequencing:
+//!
+//! 1. raise `draining` — acceptors exit, drivers refuse new work with
+//!    typed wire `Shutdown` errors, idle connections get `Bye`;
+//! 2. give in-flight streams the drain deadline to reach their
+//!    terminal frames (each decode step is still served and streamed);
+//! 3. past the deadline, force the stragglers: readers are stopped and
+//!    their sockets shut down, which sheds active streams at the next
+//!    step boundary (cancelling their sessions and freeing KV);
+//! 4. join everything, reclaim the server, and run [`Server::drain`]
+//!    with whatever budget remains.
+//!
+//! The combined outcome is an [`IngressDrainReport`].
+//!
+//! ## Gates
+//!
+//! Two admission gates, both built on [`protocol::try_admit`]: a
+//! connection gate (`ingress_max_connections`, claimed at accept) and a
+//! wire-request gate (`ingress_max_requests`, claimed at the door and
+//! held for a stream's entire lifetime).  Both sit *in front of* the
+//! server's own `max_pending_requests` admission control — refusals are
+//! typed `Overloaded` wire errors, never silent drops.
+
+pub mod conn;
+pub mod frame;
+pub mod stream;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use self::conn::{Knobs, Shared};
+use self::frame::ReadOutcome;
+pub use self::frame::{Frame, StreamStep, CODE_INVALID, MAX_FRAME, WIRE_VERSION};
+use super::protocol;
+use super::request::ServeError;
+use super::server::{DrainReport, Server};
+use crate::config::CoordinatorConfig;
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::thread::{self, JoinHandle};
+use crate::sync::{Arc, Mutex};
+
+/// Accept-poll cadence (the listener is non-blocking so acceptors can
+/// notice shutdown without a wakeup connection).
+const ACCEPT_TICK: Duration = Duration::from_millis(10);
+
+/// One accepted connection being tracked for drain: the socket clone
+/// lets a force-teardown unblock the reader/writer from outside.
+struct ConnCell {
+    sock: TcpStream,
+    handle: JoinHandle<()>,
+}
+
+/// The framed-socket front end.  See the module docs for the lifecycle.
+pub struct Ingress {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    acceptors: Vec<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<ConnCell>>>,
+}
+
+impl Ingress {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start serving connections against `server`, which the ingress
+    /// now owns.  Knobs come from the same [`CoordinatorConfig`] that
+    /// started the server (`ingress_*`, validated > 0 at resolve).
+    pub fn bind(addr: &str, server: Server, cfg: &CoordinatorConfig) -> Result<Ingress> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("ingress: cannot bind {addr}"))?;
+        listener.set_nonblocking(true).context("ingress: set_nonblocking")?;
+        let local = listener.local_addr().context("ingress: local_addr")?;
+        let shared = Arc::new(Shared {
+            server: Arc::new(server),
+            stop: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
+            active_requests: AtomicU64::new(0),
+            active_conns: AtomicU64::new(0),
+            knobs: Knobs {
+                max_requests: cfg.ingress_max_requests as u64,
+                write_queue: cfg.ingress_write_queue,
+                stall_budget: Duration::from_micros(cfg.ingress_stall_budget_us.max(1)),
+            },
+        });
+        let conns: Arc<Mutex<Vec<ConnCell>>> = Arc::new(Mutex::new(Vec::new()));
+        let max_conns = cfg.ingress_max_connections as u64;
+        let mut acceptors = Vec::new();
+        for _ in 0..cfg.ingress_acceptors.max(1) {
+            let l = listener.try_clone().context("ingress: clone listener")?;
+            let shared = Arc::clone(&shared);
+            let conns = Arc::clone(&conns);
+            acceptors.push(thread::spawn(move || accept_loop(&l, &shared, &conns, max_conns)));
+        }
+        Ok(Ingress { shared, addr: local, acceptors, conns })
+    }
+
+    /// The bound address (resolves the ephemeral port of `":0"` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The served [`Server`]'s metrics (live view for tests/benches).
+    pub fn metrics(&self) -> Arc<super::metrics::Metrics> {
+        Arc::clone(&self.shared.server.metrics)
+    }
+
+    /// Graceful shutdown: close the door, let in-flight streams finish
+    /// their terminal frames within `timeout`, force the stragglers,
+    /// then run [`Server::drain`] on the reclaimed server with the
+    /// remaining budget.  See the module docs for the exact sequencing.
+    pub fn drain(self, timeout: Duration) -> IngressDrainReport {
+        let deadline = Instant::now() + timeout;
+        // 1. close the door: acceptors exit, drivers refuse new work and
+        //    Bye idle connections at their next tick
+        // ordering: Relaxed — advisory flag polled every tick; the
+        // server's own SeqCst draining flag is the authoritative gate
+        self.shared.draining.store(true, Ordering::Relaxed);
+        for a in self.acceptors {
+            let _ = a.join();
+        }
+        // 2. grace: in-flight connections wind down on their own
+        let mut graceful = 0u64;
+        loop {
+            let pending = {
+                let g = self.conns.lock();
+                g.iter().filter(|c| !c.handle.is_finished()).count()
+            };
+            if pending == 0 || Instant::now() >= deadline {
+                break;
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+        // 3. force the stragglers: stop readers, shut their sockets so
+        //    blocked reads/writes return, streams shed at the next step
+        //    boundary (cancel + evict)
+        // ordering: Relaxed — advisory stop flag polled every tick
+        self.shared.stop.store(true, Ordering::Relaxed);
+        let mut forced = 0u64;
+        let cells: Vec<ConnCell> = {
+            let mut g = self.conns.lock();
+            g.drain(..).collect()
+        };
+        for cell in &cells {
+            if cell.handle.is_finished() {
+                graceful += 1;
+            } else {
+                forced += 1;
+                let _ = cell.sock.shutdown(std::net::Shutdown::Both);
+            }
+        }
+        for cell in cells {
+            let _ = cell.handle.join();
+        }
+        // 4. reclaim the server (every thread that held it has joined)
+        //    and drain it with whatever budget remains
+        let server = match Arc::try_unwrap(self.shared) {
+            Ok(shared) => match Arc::try_unwrap(shared.server) {
+                Ok(server) => Some(server),
+                Err(_) => None,
+            },
+            Err(_) => None,
+        };
+        let report = match server {
+            Some(server) => {
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                IngressDrainReport {
+                    graceful_conns: graceful,
+                    forced_conns: forced,
+                    server: server.drain(remaining),
+                }
+            }
+            None => {
+                // a thread leaked its Arc — should be impossible after
+                // the joins above; report it instead of panicking
+                crate::warnlog!(
+                    "coordinator::ingress",
+                    "drain could not reclaim the server: an Arc is still held"
+                );
+                IngressDrainReport {
+                    graceful_conns: graceful,
+                    forced_conns: forced,
+                    server: DrainReport { clean: false, served: 0, force_failed: 0, sessions_evicted: 0 },
+                }
+            }
+        };
+        if report.clean() {
+            crate::info!("coordinator::ingress", "{report}");
+        } else {
+            crate::warnlog!("coordinator::ingress", "{report}");
+        }
+        report
+    }
+}
+
+/// Combined outcome of an [`Ingress::drain`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IngressDrainReport {
+    /// Connections that wound down (terminal frames + `Bye`) within the
+    /// drain deadline.
+    pub graceful_conns: u64,
+    /// Connections force-shutdown past it (their active streams were
+    /// shed with cancel + evict).
+    pub forced_conns: u64,
+    /// The reclaimed server's own drain outcome.
+    pub server: DrainReport,
+}
+
+impl IngressDrainReport {
+    /// Fully graceful: no forced connections and a clean server drain.
+    pub fn clean(&self) -> bool {
+        self.forced_conns == 0 && self.server.clean
+    }
+}
+
+impl std::fmt::Display for IngressDrainReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "ingress drain: {} graceful conns, {} forced; {}",
+            self.graceful_conns, self.forced_conns, self.server
+        )
+    }
+}
+
+/// Listener-pool body: non-blocking accepts on a shared listener, the
+/// connection gate, and conn-thread spawning.
+fn accept_loop(
+    listener: &TcpListener,
+    shared: &Arc<Shared>,
+    conns: &Arc<Mutex<Vec<ConnCell>>>,
+    max_conns: u64,
+) {
+    loop {
+        // ordering: Relaxed — advisory flags polled every tick
+        if shared.stop.load(Ordering::Relaxed) || shared.draining.load(Ordering::Relaxed) {
+            return;
+        }
+        match listener.accept() {
+            Ok((sock, _peer)) => {
+                if !protocol::try_admit(&shared.active_conns, max_conns) {
+                    // ordering: Relaxed — statistical counter
+                    shared.server.metrics.conns_rejected.fetch_add(1, Ordering::Relaxed);
+                    // best-effort typed refusal before the close; the
+                    // short drain read afterwards keeps an already-sent
+                    // Hello from turning the close into an RST that
+                    // would discard the Bye on the peer's side
+                    let mut s = sock;
+                    let _ = s.set_write_timeout(Some(Duration::from_millis(250)));
+                    let _ = frame::write_frame(
+                        &mut s,
+                        &Frame::Bye { detail: "connection limit reached".into() },
+                    );
+                    let _ = s.shutdown(std::net::Shutdown::Write);
+                    let _ = s.set_read_timeout(Some(Duration::from_millis(250)));
+                    let mut sink = [0u8; 256];
+                    let _ = std::io::Read::read(&mut s, &mut sink);
+                    continue;
+                }
+                // ordering: Relaxed — statistical counter
+                shared.server.metrics.conns_accepted.fetch_add(1, Ordering::Relaxed);
+                let track = match sock.try_clone() {
+                    Ok(c) => c,
+                    Err(_) => {
+                        protocol::release(&shared.active_conns);
+                        continue;
+                    }
+                };
+                let shared2 = Arc::clone(shared);
+                let handle = thread::spawn(move || {
+                    conn::run_conn(sock, Arc::clone(&shared2));
+                    protocol::release(&shared2.active_conns);
+                });
+                let mut g = conns.lock();
+                // reap finished cells so a long-lived ingress does not
+                // accumulate handles without bound
+                g.retain(|c| !c.handle.is_finished());
+                g.push(ConnCell { sock: track, handle });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(ACCEPT_TICK);
+            }
+            Err(_) => {
+                // transient accept error (EMFILE, aborted connection):
+                // back off a tick and keep listening
+                thread::sleep(ACCEPT_TICK);
+            }
+        }
+    }
+}
+
+/// One event of a streamed request, as the client sees it.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamEvent {
+    /// One decode step's output (non-terminal).
+    Token { step: u32, out: Vec<f32> },
+    /// The stream's terminal success.
+    End { steps: u32 },
+    /// The stream's terminal failure; `err` is the decoded
+    /// [`ServeError`] when the code carried one (door rejections with
+    /// code 0 decode to `None`).
+    Failed { err: Option<ServeError>, detail: String },
+}
+
+impl StreamEvent {
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, StreamEvent::Token { .. })
+    }
+}
+
+/// Minimal blocking client for the wire protocol — the scripted side of
+/// the loopback tests, the CI smoke, and the `serve` CLI demo.  One
+/// request at a time (the protocol itself allows pipelining; this
+/// helper does not).
+pub struct Client {
+    sock: TcpStream,
+    next_id: u64,
+    head_dim: usize,
+    seq_len: usize,
+}
+
+impl Client {
+    /// Connect and handshake.
+    pub fn connect(addr: &SocketAddr) -> Result<Client> {
+        let mut sock = TcpStream::connect(addr)
+            .with_context(|| format!("client: cannot connect {addr}"))?;
+        frame::write_frame(&mut sock, &Frame::Hello { version: WIRE_VERSION })
+            .context("client: hello")?;
+        match read_one(&mut sock)? {
+            Frame::HelloAck { version, head_dim, seq_len } => {
+                anyhow::ensure!(
+                    version == WIRE_VERSION,
+                    "client: server speaks wire version {version}, not {WIRE_VERSION}"
+                );
+                Ok(Client {
+                    sock,
+                    next_id: 1,
+                    head_dim: head_dim as usize,
+                    seq_len: seq_len as usize,
+                })
+            }
+            Frame::Bye { detail } => anyhow::bail!("client: refused at handshake: {detail}"),
+            other => anyhow::bail!("client: expected HelloAck, got {other:?}"),
+        }
+    }
+
+    /// The geometry the server validates against (from the handshake).
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn alloc_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Install a session's prefill KV.
+    pub fn put(&mut self, session: &str, k: crate::Mat, v: crate::Mat) -> Result<()> {
+        let id = self.alloc_id();
+        frame::write_frame(
+            &mut self.sock,
+            &Frame::Put { id, session: session.to_string(), k, v },
+        )?;
+        match read_one(&mut self.sock)? {
+            Frame::Ack { id: rid } if rid == id => Ok(()),
+            Frame::Error { code, transient, detail, .. } => {
+                Err(wire_error(code, transient, &detail))
+            }
+            other => anyhow::bail!("client: expected Ack for put, got {other:?}"),
+        }
+    }
+
+    /// One attention query; the output vector on success.
+    pub fn query(&mut self, session: &str, q: Vec<f32>) -> Result<Vec<f32>> {
+        let id = self.alloc_id();
+        frame::write_frame(
+            &mut self.sock,
+            &Frame::Query { id, session: session.to_string(), q },
+        )?;
+        match read_one(&mut self.sock)? {
+            Frame::Output { id: rid, out } if rid == id => Ok(out),
+            Frame::Error { code, transient, detail, .. } => {
+                Err(wire_error(code, transient, &detail))
+            }
+            other => anyhow::bail!("client: expected Output, got {other:?}"),
+        }
+    }
+
+    /// One decode-step KV append.
+    pub fn append(&mut self, session: &str, k: crate::Mat, v: crate::Mat) -> Result<()> {
+        let id = self.alloc_id();
+        frame::write_frame(
+            &mut self.sock,
+            &Frame::Append { id, session: session.to_string(), k, v },
+        )?;
+        match read_one(&mut self.sock)? {
+            Frame::Ack { id: rid } if rid == id => Ok(()),
+            Frame::Error { code, transient, detail, .. } => {
+                Err(wire_error(code, transient, &detail))
+            }
+            other => anyhow::bail!("client: expected Ack for append, got {other:?}"),
+        }
+    }
+
+    /// Open a stream; returns its request id.  Pair with
+    /// [`Client::next_event`] (or use [`Client::stream`] to collect).
+    pub fn start_stream(&mut self, session: &str, steps: Vec<StreamStep>) -> Result<u64> {
+        let id = self.alloc_id();
+        frame::write_frame(
+            &mut self.sock,
+            &Frame::Stream { id, session: session.to_string(), steps },
+        )?;
+        Ok(id)
+    }
+
+    /// Read the next event of the open stream (blocking).
+    pub fn next_event(&mut self) -> Result<StreamEvent> {
+        match read_one(&mut self.sock)? {
+            Frame::Token { step, out, .. } => Ok(StreamEvent::Token { step, out }),
+            Frame::End { steps, .. } => Ok(StreamEvent::End { steps }),
+            Frame::Error { code, transient, detail, .. } => Ok(StreamEvent::Failed {
+                err: ServeError::from_wire(code, transient, &detail),
+                detail,
+            }),
+            other => anyhow::bail!("client: unexpected frame mid-stream: {other:?}"),
+        }
+    }
+
+    /// Run a whole stream, collecting every event through the terminal.
+    pub fn stream(&mut self, session: &str, steps: Vec<StreamStep>) -> Result<Vec<StreamEvent>> {
+        self.start_stream(session, steps)?;
+        let mut events = Vec::new();
+        loop {
+            let ev = self.next_event()?;
+            let terminal = ev.is_terminal();
+            events.push(ev);
+            if terminal {
+                return Ok(events);
+            }
+        }
+    }
+
+    /// Cancel an in-flight request by id (fire-and-forget; the server
+    /// answers with the request's terminal `Error { Cancelled }`).
+    pub fn cancel(&mut self, id: u64) -> Result<()> {
+        frame::write_frame(&mut self.sock, &Frame::Cancel { id })?;
+        Ok(())
+    }
+
+    /// Graceful close: `Goodbye`, wait for `Bye`.
+    pub fn goodbye(mut self) -> Result<String> {
+        frame::write_frame(&mut self.sock, &Frame::Goodbye)?;
+        loop {
+            match read_one(&mut self.sock)? {
+                Frame::Bye { detail } => return Ok(detail),
+                // late frames of finished requests may still flush
+                _ => {}
+            }
+        }
+    }
+
+    /// The raw socket (tests use it to simulate stalls/disconnects).
+    pub fn socket(&self) -> &TcpStream {
+        &self.sock
+    }
+}
+
+/// Blocking single-frame read for the client side; EOF is an error here
+/// (the client always expects an answer).
+fn read_one(sock: &mut TcpStream) -> Result<Frame> {
+    match frame::read_frame(sock, &|| false)? {
+        ReadOutcome::Frame(f) => Ok(f),
+        ReadOutcome::Eof => anyhow::bail!("client: server closed the connection"),
+        ReadOutcome::Stopped => anyhow::bail!("client: read interrupted"),
+    }
+}
+
+/// Decode a wire `Error` frame into the typed [`ServeError`] when it
+/// carries one (so `downcast_ref::<ServeError>()` works on the client
+/// side exactly like on the in-process API).
+fn wire_error(code: u8, transient: bool, detail: &str) -> anyhow::Error {
+    match ServeError::from_wire(code, transient, detail) {
+        Some(e) => anyhow::Error::new(e),
+        None => anyhow::anyhow!("refused at the door: {detail}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AcceleratorConfig;
+    use crate::coordinator::backend::SimBackend;
+    use crate::coordinator::kvstore::KvStore;
+    use crate::hw::Arith;
+    use crate::Mat;
+
+    fn cfg() -> CoordinatorConfig {
+        CoordinatorConfig { workers: 1, ..CoordinatorConfig::default() }
+    }
+
+    fn accel(head_dim: usize) -> AcceleratorConfig {
+        AcceleratorConfig { head_dim, seq_len: 32, kv_blocks: 4, parallel_queries: 1, freq_mhz: 500.0 }
+    }
+
+    fn ingress(c: &CoordinatorConfig) -> Ingress {
+        let kv = Arc::new(KvStore::new(32, 8, 8));
+        let server = Server::start(c, kv, vec![SimBackend::factory(Arith::Hfa, accel(8))])
+            .expect("server starts");
+        Ingress::bind("127.0.0.1:0", server, c).expect("ingress binds")
+    }
+
+    #[test]
+    fn end_to_end_decode_loop_over_the_socket() {
+        let c = cfg();
+        let ing = ingress(&c);
+        let metrics = ing.metrics();
+        let mut cl = Client::connect(&ing.local_addr()).expect("connect");
+        assert_eq!((cl.head_dim(), cl.seq_len()), (8, 32));
+        cl.put("s", Mat::zeros(2, 8), Mat::zeros(2, 8)).expect("put");
+        let steps: Vec<StreamStep> = (0..3)
+            .map(|i| StreamStep {
+                k: Mat::from_vec(1, 8, vec![0.1 * (i + 1) as f32; 8]),
+                v: Mat::from_vec(1, 8, vec![0.2 * (i + 1) as f32; 8]),
+                q: vec![0.5; 8],
+            })
+            .collect();
+        let events = cl.stream("s", steps).expect("stream");
+        let tokens = events.iter().filter(|e| matches!(e, StreamEvent::Token { .. })).count();
+        assert_eq!(tokens, 3);
+        assert_eq!(*events.last().expect("terminal"), StreamEvent::End { steps: 3 });
+        cl.goodbye().expect("goodbye");
+        let report = ing.drain(Duration::from_secs(10));
+        assert!(report.clean(), "{report}");
+        assert_eq!(report.forced_conns, 0);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.conns_accepted, 1);
+        assert_eq!(snap.streams_opened, 1);
+        assert_eq!(snap.stream_tokens, 3);
+    }
+
+    #[test]
+    fn connection_gate_refuses_the_overflow_with_a_typed_bye() {
+        let c = CoordinatorConfig { ingress_max_connections: 1, ..cfg() };
+        let ing = ingress(&c);
+        let metrics = ing.metrics();
+        let _held = Client::connect(&ing.local_addr()).expect("first connect");
+        // the second connection is refused before the handshake (the
+        // exact error shape depends on whether the Bye outraces the
+        // close on this host, so only the refusal itself is asserted)
+        assert!(Client::connect(&ing.local_addr()).is_err(), "second connection must be refused");
+        assert_eq!(metrics.conns_rejected.load(Ordering::Relaxed), 1);
+        let report = ing.drain(Duration::from_secs(5));
+        assert!(report.server.clean, "{report}");
+    }
+
+    #[test]
+    fn drain_refuses_new_work_and_byes_idle_connections() {
+        let c = cfg();
+        let ing = ingress(&c);
+        let cl = Client::connect(&ing.local_addr()).expect("connect");
+        let report = ing.drain(Duration::from_secs(10));
+        assert!(report.clean(), "idle conn must wind down gracefully: {report}");
+        assert_eq!(report.graceful_conns, 1);
+        // the idle client was told Bye
+        let mut sock = cl.sock;
+        match frame::read_frame(&mut sock, &|| false).expect("read") {
+            ReadOutcome::Frame(Frame::Bye { detail }) => {
+                assert!(detail.contains("draining"), "{detail}")
+            }
+            other => panic!("expected Bye, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,455 @@
+//! Stream execution: drives one `Stream` request's decode steps against
+//! the server, pushing each step's output as its own `Token` frame when
+//! the scheduler's decode iteration completes — never buffering the
+//! stream to the end — and enforcing the slow-consumer policy.
+//!
+//! ## Per-step protocol
+//!
+//! Each [`StreamStep`] is one decode step: `server.append(k, v)` makes
+//! the step's rows resident (the per-session barrier orders it against
+//! the step's query), then `server.call(q)` attends over the grown KV.
+//! Both are the same blocking entry points an in-process client uses,
+//! so streamed outputs are bit-identical to the solo path by
+//! construction — the wire adds framing, not arithmetic.
+//!
+//! ## Slow-consumer policy
+//!
+//! The token push goes through the connection's bounded
+//! [`WriteQueue`] with the configured stall budget
+//! (`ingress_stall_budget_us`).  While the queue is full the *push
+//! blocks* — which blocks this stream's next decode step, which stops
+//! the session's slot from being fed: backpressure reaches the
+//! scheduler without touching any other session's cadence.  Once the
+//! budget is spent with the queue still full, the stream is shed:
+//! `slow_consumer_shed` is counted, the session is cancelled with its
+//! KV evicted ([`Server::cancel`] with `evict_kv = true`), and the
+//! terminal `Error { code: Cancelled }` frame is pushed past the bound
+//! ([`WriteQueue::push_unbounded`]) so the exactly-one-terminal
+//! contract holds even against a full queue.
+//!
+//! ## Termination
+//!
+//! Exactly one terminal frame per stream: `End` after the last token,
+//! or `Error` on the first failure (door rejections are refused before
+//! this module runs).  A disconnect observed at a step boundary cancels
+//! the session mid-decode and evicts its KV; no terminal frame is owed
+//! to a peer that is gone (the write queue is aborted by then anyway).
+
+use std::collections::HashSet;
+use std::time::{Duration, Instant};
+
+use super::super::metrics::Metrics;
+use super::super::protocol::{PushError, WriteQueue};
+use super::super::request::ServeError;
+use super::super::server::Server;
+use super::frame::{Frame, StreamStep};
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::Mutex;
+
+/// Everything a stream needs from its connection.
+pub(super) struct StreamCtx<'a> {
+    pub server: &'a Server,
+    /// The connection's bounded write queue (shared with the writer
+    /// thread and any terminal pushed by the driver).
+    pub out: &'a WriteQueue<Frame>,
+    /// Stall budget for bounded token pushes (`ingress_stall_budget_us`).
+    pub stall: Duration,
+    /// Request ids cancelled over the wire (fed by the reader thread,
+    /// checked at every step boundary).
+    pub cancels: &'a Mutex<HashSet<u64>>,
+    /// Set by the reader on EOF / torn frame: the peer is gone.
+    pub dead: &'a AtomicBool,
+}
+
+impl StreamCtx<'_> {
+    fn metrics(&self) -> &Metrics {
+        &self.server.metrics
+    }
+
+    /// Step-boundary shed check: a disconnected peer or a wire `Cancel`
+    /// ends the stream *now*, cancelling the session and evicting its
+    /// KV so an abandoned decode never holds memory.  Returns `true`
+    /// when the stream must stop (the cancel path has already pushed
+    /// its terminal frame; the disconnect path owes none).
+    fn shed_if_abandoned(&self, id: u64, session: &str) -> bool {
+        // ordering: Relaxed — advisory disconnect flag; a stale read
+        // only delays the shed to the next step boundary
+        if self.dead.load(Ordering::Relaxed) {
+            self.server.cancel(session, true);
+            return true;
+        }
+        let cancelled = self.cancels.lock().contains(&id);
+        if cancelled {
+            self.server.cancel(session, true);
+            let _ = self.out.push_unbounded(Frame::serve_error(id, &ServeError::Cancelled));
+            return true;
+        }
+        false
+    }
+
+    /// Deliver a terminal `Error` frame (unbounded: terminal frames are
+    /// never dropped for backpressure — one per request bounds the
+    /// overshoot).  A `Closed` refusal means the connection died; the
+    /// session is cancelled so its KV cannot leak.
+    fn fail(&self, id: u64, session: &str, frame: Frame) {
+        if self.out.push_unbounded(frame).is_err() {
+            self.server.cancel(session, true);
+        }
+    }
+}
+
+/// Map a submit-path rejection (an `anyhow::Error` wrapping a
+/// [`ServeError`], or a validation message) onto its wire frame.
+pub(super) fn error_frame(id: u64, err: &anyhow::Error) -> Frame {
+    match err.downcast_ref::<ServeError>() {
+        Some(e) => Frame::serve_error(id, e),
+        None => Frame::invalid(id, err.to_string()),
+    }
+}
+
+/// Execute one `Stream` request to its single terminal frame.
+pub(super) fn run_stream(ctx: &StreamCtx<'_>, id: u64, session: &str, steps: Vec<StreamStep>) {
+    // ordering: Relaxed — statistical counter
+    ctx.metrics().streams_opened.fetch_add(1, Ordering::Relaxed);
+    let total = steps.len() as u32;
+    let t0 = Instant::now();
+    let mut last_token: Option<Instant> = None;
+    for (step, s) in steps.into_iter().enumerate() {
+        if ctx.shed_if_abandoned(id, session) {
+            return;
+        }
+        // the decode step's write half: rows resident before the query
+        match ctx.server.append(session, s.k, s.v) {
+            Ok(resp) => {
+                if let Err(se) = resp.output {
+                    ctx.fail(id, session, Frame::serve_error(id, &se));
+                    return;
+                }
+            }
+            Err(e) => {
+                ctx.fail(id, session, error_frame(id, &e));
+                return;
+            }
+        }
+        if ctx.shed_if_abandoned(id, session) {
+            return;
+        }
+        let out = match ctx.server.call(session, s.q) {
+            Ok(resp) => match resp.output {
+                Ok(v) => v,
+                Err(se) => {
+                    ctx.fail(id, session, Frame::serve_error(id, &se));
+                    return;
+                }
+            },
+            Err(e) => {
+                ctx.fail(id, session, error_frame(id, &e));
+                return;
+            }
+        };
+        // stream the step's output as its own frame now — the decode
+        // iteration just completed; nothing is buffered to stream end
+        match ctx.out.push(Frame::Token { id, step: step as u32, out }, ctx.stall) {
+            Ok(()) => {}
+            Err(PushError::Stalled(_)) => {
+                // slow-consumer policy: the queue stayed full past the
+                // stall budget — shed this stream, free its KV, and say
+                // so with the one terminal frame
+                // ordering: Relaxed — statistical counter
+                ctx.metrics().slow_consumer_shed.fetch_add(1, Ordering::Relaxed);
+                ctx.server.cancel(session, true);
+                ctx.fail(id, session, Frame::serve_error(id, &ServeError::Cancelled));
+                return;
+            }
+            Err(PushError::Closed(_)) => {
+                // the connection died under us: nothing is deliverable;
+                // free the session's KV and stop
+                ctx.server.cancel(session, true);
+                return;
+            }
+        }
+        // latency spans: first-token from stream start, inter-token
+        // between consecutive deliveries into the write queue
+        let now = Instant::now();
+        match last_token {
+            None => ctx.metrics().observe_first_token(now.duration_since(t0).as_secs_f64() * 1e6),
+            Some(prev) => {
+                ctx.metrics().observe_inter_token(now.duration_since(prev).as_secs_f64() * 1e6)
+            }
+        }
+        last_token = Some(now);
+        // ordering: Relaxed — statistical counter
+        ctx.metrics().stream_tokens.fetch_add(1, Ordering::Relaxed);
+    }
+    ctx.fail(id, session, Frame::End { id, steps: total });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AcceleratorConfig, CoordinatorConfig};
+    use crate::coordinator::backend::SimBackend;
+    use crate::coordinator::kvstore::KvStore;
+    use crate::hw::Arith;
+    use crate::sync::{thread, Arc};
+    use crate::Mat;
+
+    fn accel(head_dim: usize) -> AcceleratorConfig {
+        AcceleratorConfig { head_dim, seq_len: 32, kv_blocks: 4, parallel_queries: 1, freq_mhz: 500.0 }
+    }
+
+    fn server() -> Server {
+        let cfg = CoordinatorConfig { workers: 1, ..CoordinatorConfig::default() };
+        let kv = Arc::new(KvStore::new(32, 8, 8));
+        Server::start(&cfg, kv, vec![SimBackend::factory(Arith::Hfa, accel(8))]).unwrap()
+    }
+
+    fn steps(n: usize, dim: usize) -> Vec<StreamStep> {
+        (0..n)
+            .map(|i| StreamStep {
+                k: Mat::from_vec(1, dim, vec![0.1 * (i + 1) as f32; dim]),
+                v: Mat::from_vec(1, dim, vec![0.2 * (i + 1) as f32; dim]),
+                q: vec![0.3; dim],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn stream_delivers_every_token_then_exactly_one_end() {
+        let srv = server();
+        srv.kv.put("s", Mat::zeros(2, 8), Mat::zeros(2, 8)).unwrap();
+        let out = WriteQueue::new(64);
+        let cancels = Mutex::new(HashSet::new());
+        let dead = AtomicBool::new(false);
+        let ctx = StreamCtx {
+            server: &srv,
+            out: &out,
+            stall: Duration::from_secs(5),
+            cancels: &cancels,
+            dead: &dead,
+        };
+        run_stream(&ctx, 42, "s", steps(4, 8));
+        out.close();
+        let mut tokens = 0;
+        let mut terminals = 0;
+        while let Some(f) = out.pop() {
+            match f {
+                Frame::Token { id, step, ref out } => {
+                    assert_eq!(id, 42);
+                    assert_eq!(step, tokens);
+                    assert_eq!(out.len(), 8);
+                    tokens += 1;
+                }
+                Frame::End { id, steps } => {
+                    assert_eq!((id, steps), (42, 4));
+                    terminals += 1;
+                }
+                other => panic!("unexpected frame {other:?}"),
+            }
+        }
+        assert_eq!(tokens, 4, "one Token frame per decode step");
+        assert_eq!(terminals, 1, "exactly one terminal frame");
+        let snap = srv.metrics.snapshot();
+        assert_eq!(snap.streams_opened, 1);
+        assert_eq!(snap.stream_tokens, 4);
+        assert!(snap.first_token_p99_us > 0.0, "first-token span observed");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn stalled_consumer_is_shed_with_kv_evicted_and_one_terminal() {
+        let srv = server();
+        srv.kv.put("slow", Mat::zeros(2, 8), Mat::zeros(2, 8)).unwrap();
+        let out = WriteQueue::new(1); // nobody pops: fills after 1 frame
+        let cancels = Mutex::new(HashSet::new());
+        let dead = AtomicBool::new(false);
+        let ctx = StreamCtx {
+            server: &srv,
+            out: &out,
+            stall: Duration::from_millis(30),
+            cancels: &cancels,
+            dead: &dead,
+        };
+        run_stream(&ctx, 7, "slow", steps(6, 8));
+        assert_eq!(srv.metrics.slow_consumer_shed.load(Ordering::Relaxed), 1);
+        assert!(srv.kv.session_rows("slow").is_none(), "shed stream's KV must be evicted");
+        out.close();
+        let mut terminals = Vec::new();
+        let mut tokens = 0;
+        while let Some(f) = out.pop() {
+            match f {
+                Frame::Token { .. } => tokens += 1,
+                Frame::Error { code, .. } => terminals.push(code),
+                other => panic!("unexpected frame {other:?}"),
+            }
+        }
+        assert_eq!(tokens, 1, "the queue held one token when the consumer stalled");
+        assert_eq!(
+            terminals,
+            vec![ServeError::Cancelled.wire_code()],
+            "exactly one terminal, and it is the Cancelled error"
+        );
+        srv.shutdown();
+    }
+
+    #[test]
+    fn wire_cancel_and_disconnect_stop_the_stream_at_a_step_boundary() {
+        // wire cancel: one terminal Cancelled error frame
+        let srv = server();
+        srv.kv.put("c", Mat::zeros(2, 8), Mat::zeros(2, 8)).unwrap();
+        let out = WriteQueue::new(64);
+        let cancels = Mutex::new(HashSet::from([9u64]));
+        let dead = AtomicBool::new(false);
+        let ctx = StreamCtx {
+            server: &srv,
+            out: &out,
+            stall: Duration::from_secs(1),
+            cancels: &cancels,
+            dead: &dead,
+        };
+        run_stream(&ctx, 9, "c", steps(3, 8));
+        out.close();
+        let frames: Vec<Frame> = std::iter::from_fn(|| out.pop()).collect();
+        assert_eq!(frames.len(), 1, "cancelled before step 0: terminal only");
+        assert!(
+            matches!(frames[0], Frame::Error { id: 9, code, .. }
+                if code == ServeError::Cancelled.wire_code()),
+            "terminal must be the Cancelled error: {frames:?}"
+        );
+        assert!(srv.kv.session_rows("c").is_none(), "cancel evicts the KV");
+        srv.shutdown();
+
+        // disconnect: no terminal owed, KV freed
+        let srv2 = server();
+        srv2.kv.put("d", Mat::zeros(2, 8), Mat::zeros(2, 8)).unwrap();
+        let out2 = WriteQueue::new(64);
+        let cancels2 = Mutex::new(HashSet::new());
+        let dead2 = AtomicBool::new(true);
+        let ctx2 = StreamCtx {
+            server: &srv2,
+            out: &out2,
+            stall: Duration::from_secs(1),
+            cancels: &cancels2,
+            dead: &dead2,
+        };
+        run_stream(&ctx2, 10, "d", steps(3, 8));
+        assert!(out2.is_empty(), "a dead peer is owed no frames");
+        assert!(srv2.kv.session_rows("d").is_none(), "disconnect mid-decode evicts the KV");
+        srv2.shutdown();
+    }
+
+    #[test]
+    fn stalled_stream_does_not_delay_another_sessions_cadence() {
+        // the isolation claim of the slow-consumer policy: a stalled
+        // stream blocks only its *own* routing — another session's
+        // stream completes every step while the stalled one is still
+        // parked inside its stall budget, and only the stalled one is
+        // shed.  Deterministic at the write-queue layer (PR-8 style):
+        // the budget (3 s) dwarfs the healthy stream's full runtime.
+        let srv = Arc::new(server());
+        srv.kv.put("slow", Mat::zeros(2, 8), Mat::zeros(2, 8)).unwrap();
+        srv.kv.put("fast", Mat::zeros(2, 8), Mat::zeros(2, 8)).unwrap();
+        let stall = Duration::from_secs(3);
+
+        // stream A: queue of 1 that nobody pops — parks at its second
+        // token until the budget sheds it
+        let slow_out = Arc::new(WriteQueue::new(1));
+        let srv_a = Arc::clone(&srv);
+        let slow_out_a = Arc::clone(&slow_out);
+        let a = thread::spawn(move || {
+            let cancels = Mutex::new(HashSet::new());
+            let dead = AtomicBool::new(false);
+            let ctx = StreamCtx {
+                server: &srv_a,
+                out: &slow_out_a,
+                stall,
+                cancels: &cancels,
+                dead: &dead,
+            };
+            run_stream(&ctx, 1, "slow", steps(6, 8));
+        });
+
+        // stream B: actively drained — must run to End while A is parked
+        let fast_out = Arc::new(WriteQueue::new(1));
+        let fast_out_d = Arc::clone(&fast_out);
+        let drainer = thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(f) = fast_out_d.pop() {
+                got.push(f);
+            }
+            got
+        });
+        let cancels = Mutex::new(HashSet::new());
+        let dead = AtomicBool::new(false);
+        let ctx = StreamCtx {
+            server: &srv,
+            out: &fast_out,
+            stall,
+            cancels: &cancels,
+            dead: &dead,
+        };
+        let t0 = Instant::now();
+        run_stream(&ctx, 2, "fast", steps(6, 8));
+        let fast_elapsed = t0.elapsed();
+        fast_out.close();
+        let got = drainer.join().unwrap();
+
+        // B finished whole while A was still inside its stall window
+        assert!(
+            fast_elapsed < stall,
+            "healthy stream took {fast_elapsed:?} — it must not wait on the stalled one"
+        );
+        assert_eq!(
+            srv.metrics.slow_consumer_shed.load(Ordering::Relaxed),
+            0,
+            "the stalled stream must still be parked when the healthy one finishes"
+        );
+        let tokens = got.iter().filter(|f| matches!(f, Frame::Token { .. })).count();
+        let ends = got.iter().filter(|f| matches!(f, Frame::End { .. })).count();
+        assert_eq!((tokens, ends), (6, 1), "every healthy token + exactly one End: {got:?}");
+
+        // then the budget runs out: only the stalled session is shed
+        a.join().unwrap();
+        assert_eq!(srv.metrics.slow_consumer_shed.load(Ordering::Relaxed), 1);
+        assert!(srv.kv.session_rows("slow").is_none(), "shed stream's KV is evicted");
+        assert!(srv.kv.session_rows("fast").is_some(), "healthy stream's KV is untouched");
+        match Arc::try_unwrap(srv) {
+            Ok(s) => s.shutdown(),
+            Err(_) => panic!("server Arc must be unique after the joins"),
+        }
+    }
+
+    #[test]
+    fn blocked_stream_resumes_when_the_writer_catches_up() {
+        let srv = server();
+        srv.kv.put("r", Mat::zeros(2, 8), Mat::zeros(2, 8)).unwrap();
+        let out = Arc::new(WriteQueue::new(1));
+        let cancels = Mutex::new(HashSet::new());
+        let dead = AtomicBool::new(false);
+        // slow consumer that still beats the generous stall budget
+        let out2 = Arc::clone(&out);
+        let drainer = thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(f) = out2.pop() {
+                thread::sleep(Duration::from_millis(5));
+                got.push(f);
+            }
+            got
+        });
+        let ctx = StreamCtx {
+            server: &srv,
+            out: &out,
+            stall: Duration::from_secs(10),
+            cancels: &cancels,
+            dead: &dead,
+        };
+        run_stream(&ctx, 11, "r", steps(5, 8));
+        out.close();
+        let got = drainer.join().unwrap();
+        let tokens = got.iter().filter(|f| matches!(f, Frame::Token { .. })).count();
+        let ends = got.iter().filter(|f| matches!(f, Frame::End { .. })).count();
+        assert_eq!((tokens, ends), (5, 1), "backpressure blocks, then every frame lands");
+        assert_eq!(srv.metrics.slow_consumer_shed.load(Ordering::Relaxed), 0);
+        srv.shutdown();
+    }
+}

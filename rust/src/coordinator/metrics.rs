@@ -120,6 +120,23 @@ pub struct Metrics {
     pub prefill_iters: AtomicU64,
     /// Decode iterations assembled by the continuous scheduler.
     pub decode_iters: AtomicU64,
+    /// Streaming ingress: connections accepted past the connection gate.
+    pub conns_accepted: AtomicU64,
+    /// Streaming ingress: connections refused at the door (gate full or
+    /// handshake rejected).
+    pub conns_rejected: AtomicU64,
+    /// Streaming ingress: client disconnects observed mid-session (the
+    /// wire analogue of a dropped `ResponseHandle`).
+    pub disconnects: AtomicU64,
+    /// Streaming ingress: token streams opened (one per `Stream` frame).
+    pub streams_opened: AtomicU64,
+    /// Streaming ingress: token frames delivered into write queues.
+    pub stream_tokens: AtomicU64,
+    /// Streaming ingress: sessions shed for exhausting their slow-consumer
+    /// stall budget (each also cancels + evicts the session's KV).
+    pub slow_consumer_shed: AtomicU64,
+    /// Sessions whose KV was evicted by cancellation or drain teardown.
+    pub sessions_evicted: AtomicU64,
     latencies_us: Mutex<Reservoir>,
     /// Ingress -> dispatch span (time queued in the batcher, the waiting
     /// queue, or a resident slot before a worker picked the request up).
@@ -130,6 +147,11 @@ pub struct Metrics {
     /// iterations that carried the slot's work — the token cadence whose
     /// p99 the continuous scheduler exists to bound.
     decode_gap_us: Mutex<Reservoir>,
+    /// Streaming ingress: stream-open to first token frame queued.
+    first_token_us: Mutex<Reservoir>,
+    /// Streaming ingress: gap between consecutive token frames of one
+    /// stream — the client-visible cadence (decode gap + delivery).
+    inter_token_us: Mutex<Reservoir>,
 }
 
 /// A point-in-time metrics summary.
@@ -169,6 +191,17 @@ pub struct Snapshot {
     pub prefill_p99_us: f64,
     pub decode_gap_p50_us: f64,
     pub decode_gap_p99_us: f64,
+    pub conns_accepted: u64,
+    pub conns_rejected: u64,
+    pub disconnects: u64,
+    pub streams_opened: u64,
+    pub stream_tokens: u64,
+    pub slow_consumer_shed: u64,
+    pub sessions_evicted: u64,
+    pub first_token_p50_us: f64,
+    pub first_token_p99_us: f64,
+    pub inter_token_p50_us: f64,
+    pub inter_token_p99_us: f64,
 }
 
 impl Default for Metrics {
@@ -207,10 +240,19 @@ impl Metrics {
             slot_hits: z(0),
             prefill_iters: z(0),
             decode_iters: z(0),
+            conns_accepted: z(0),
+            conns_rejected: z(0),
+            disconnects: z(0),
+            streams_opened: z(0),
+            stream_tokens: z(0),
+            slow_consumer_shed: z(0),
+            sessions_evicted: z(0),
             latencies_us: Mutex::new(Reservoir::default()),
             queue_wait_us: Mutex::new(Reservoir::default()),
             prefill_us: Mutex::new(Reservoir::default()),
             decode_gap_us: Mutex::new(Reservoir::default()),
+            first_token_us: Mutex::new(Reservoir::default()),
+            inter_token_us: Mutex::new(Reservoir::default()),
         }
     }
 
@@ -231,6 +273,16 @@ impl Metrics {
     /// Record one slot's inter-token decode gap.
     pub fn observe_decode_gap(&self, us: f64) {
         self.decode_gap_us.lock().observe(us);
+    }
+
+    /// Record one stream's open-to-first-token span.
+    pub fn observe_first_token(&self, us: f64) {
+        self.first_token_us.lock().observe(us);
+    }
+
+    /// Record one stream's gap between consecutive token frames.
+    pub fn observe_inter_token(&self, us: f64) {
+        self.inter_token_us.lock().observe(us);
     }
 
     /// Count one failed terminal response: the aggregate `failed` plus
@@ -280,6 +332,8 @@ impl Metrics {
         let queue_wait = Metrics::sorted_samples(&self.queue_wait_us);
         let prefill = Metrics::sorted_samples(&self.prefill_us);
         let decode_gap = Metrics::sorted_samples(&self.decode_gap_us);
+        let first_token = Metrics::sorted_samples(&self.first_token_us);
+        let inter_token = Metrics::sorted_samples(&self.inter_token_us);
         // nearest-rank (ceil) percentile: the q-quantile is the smallest
         // sample with at least ceil(q * n) samples <= it.  The previous
         // `((n - 1) * q) as usize` truncated the rank, biasing tail
@@ -343,6 +397,17 @@ impl Metrics {
             prefill_p99_us: rank(&prefill, 0.99),
             decode_gap_p50_us: rank(&decode_gap, 0.5),
             decode_gap_p99_us: rank(&decode_gap, 0.99),
+            conns_accepted: ld(&self.conns_accepted),
+            conns_rejected: ld(&self.conns_rejected),
+            disconnects: ld(&self.disconnects),
+            streams_opened: ld(&self.streams_opened),
+            stream_tokens: ld(&self.stream_tokens),
+            slow_consumer_shed: ld(&self.slow_consumer_shed),
+            sessions_evicted: ld(&self.sessions_evicted),
+            first_token_p50_us: rank(&first_token, 0.5),
+            first_token_p99_us: rank(&first_token, 0.99),
+            inter_token_p50_us: rank(&inter_token, 0.5),
+            inter_token_p99_us: rank(&inter_token, 0.99),
         }
     }
 }
@@ -438,6 +503,34 @@ mod tests {
         assert_eq!((s.batcher_admissions, s.slot_hits), (1, 7));
         assert_eq!((s.prefill_iters, s.decode_iters), (2, 4));
         // the spans never leak into the end-to-end latency reservoir
+        assert_eq!(m.latency_samples(), 0);
+        assert_eq!(s.p50_us, 0.0);
+    }
+
+    #[test]
+    fn streaming_spans_and_counters_are_summarized_separately() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.observe_first_token(2.0 * i as f64); // 2..=200
+            m.observe_inter_token(i as f64); // 1..=100
+        }
+        // ordering: Relaxed — statistical counters, test-side writes
+        m.conns_accepted.fetch_add(3, Ordering::Relaxed);
+        m.conns_rejected.fetch_add(1, Ordering::Relaxed);
+        m.disconnects.fetch_add(2, Ordering::Relaxed);
+        m.streams_opened.fetch_add(5, Ordering::Relaxed);
+        m.stream_tokens.fetch_add(40, Ordering::Relaxed);
+        m.slow_consumer_shed.fetch_add(1, Ordering::Relaxed);
+        m.sessions_evicted.fetch_add(6, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.first_token_p50_us, 100.0);
+        assert_eq!(s.first_token_p99_us, 198.0);
+        assert_eq!(s.inter_token_p50_us, 50.0);
+        assert_eq!(s.inter_token_p99_us, 99.0);
+        assert_eq!((s.conns_accepted, s.conns_rejected, s.disconnects), (3, 1, 2));
+        assert_eq!((s.streams_opened, s.stream_tokens), (5, 40));
+        assert_eq!((s.slow_consumer_shed, s.sessions_evicted), (1, 6));
+        // the streaming spans never leak into the end-to-end reservoir
         assert_eq!(m.latency_samples(), 0);
         assert_eq!(s.p50_us, 0.0);
     }

@@ -57,8 +57,28 @@
 //! backend faults ([`backend::TransientFault`]) are retried with
 //! backoff, a watchdog respawns panicked worker backends within a
 //! budget, and [`Server::drain`] stops admissions and serves what is in
-//! flight until a deadline.  The [`chaos`] module provides a seeded
-//! fault-injection wrapper used by the soak tests to prove all of it.
+//! flight until a deadline, reporting what it served / force-failed /
+//! evicted ([`server::DrainReport`]).  The [`chaos`] module provides a
+//! seeded fault-injection wrapper used by the soak tests to prove all
+//! of it.
+//!
+//! ## Streaming ingress
+//!
+//! [`ingress`] puts a framed-socket front end over the server: a
+//! length-prefixed binary protocol (hand-rolled, no new deps — see
+//! `rust/EXPERIMENTS.md` §Streaming for the wire format), door
+//! validation that maps shape/geometry rejections and every
+//! [`request::ServeError`] 1:1 onto typed error frames, per-connection
+//! reader/driver/writer threads, and per-token streaming: each decode
+//! step's output is pushed as its own frame when the scheduler's decode
+//! iteration completes, not buffered until the stream ends.  Writes go
+//! through a bounded [`protocol::WriteQueue`] — a slow consumer first
+//! blocks its own stream's routing, then past the configured stall
+//! budget is shed with [`Cancelled`](request::ServeError::Cancelled)
+//! and its session's KV evicted, so one stalled client never perturbs
+//! other sessions' token cadence.  [`ingress::Ingress::drain`] closes
+//! the door, lets in-flight streams finish their terminal frames, and
+//! hands the remainder to [`Server::drain`].
 //!
 //! ## Verification
 //!
@@ -74,6 +94,7 @@
 pub mod batcher;
 pub mod backend;
 pub mod chaos;
+pub mod ingress;
 pub mod kvstore;
 pub mod metrics;
 pub mod protocol;
@@ -82,9 +103,11 @@ pub mod scheduler;
 pub mod server;
 
 pub use backend::{prepare_entry, Backend, BackendFactory, PjrtBackend, SimBackend, TransientFault};
-pub use chaos::{ChaosBackend, ChaosConfig};
+pub use chaos::{ChaosBackend, ChaosConfig, ConnChaos, ConnFate};
+pub use ingress::{Client, Frame, Ingress, IngressDrainReport, StreamEvent, StreamStep};
 pub use kvstore::{KvEntry, KvStore};
 pub use metrics::Metrics;
+pub use protocol::{PushError, WriteQueue};
 pub use request::{AttentionRequest, AttentionResponse, Payload, ServeError};
 pub use scheduler::{Scheduler, SchedulerCfg};
-pub use server::{ResponseHandle, Server};
+pub use server::{DrainReport, ResponseHandle, Server};

@@ -137,6 +137,144 @@ impl<T> BatchQueue<T> {
     }
 }
 
+/// Why a [`WriteQueue::push`] did not enqueue; the item comes back so
+/// the caller can substitute a terminal frame or count the loss.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    /// The queue stayed full past the caller's stall budget — the
+    /// consumer is too slow and the slow-consumer policy applies.
+    Stalled(T),
+    /// The queue was closed (connection torn down); nothing will drain
+    /// it again.
+    Closed(T),
+}
+
+/// Bounded per-connection write queue between the stream drivers
+/// (producers) and the connection's single writer thread (consumer).
+///
+/// The bound is the backpressure: a full queue blocks the producing
+/// stream — and with it that session's decode routing — up to the
+/// caller's stall budget, after which [`PushError::Stalled`] hands the
+/// frame back and the slow-consumer policy (cancel + evict) takes over.
+/// Terminal frames bypass the bound ([`WriteQueue::push_unbounded`])
+/// so the exactly-one-terminal-frame contract survives a full queue:
+/// shedding must never have to *drop* another request's terminal frame
+/// to say "you were shed".
+pub struct WriteQueue<T> {
+    cap: usize,
+    inner: Mutex<WriteQueueInner<T>>,
+    /// Wakes the writer thread: frame available or queue closed.
+    available: Condvar,
+    /// Wakes producers: space freed or queue closed.
+    space: Condvar,
+}
+
+struct WriteQueueInner<T> {
+    queue: VecDeque<T>,
+    open: bool,
+}
+
+impl<T> WriteQueue<T> {
+    pub fn new(cap: usize) -> WriteQueue<T> {
+        WriteQueue {
+            cap: cap.max(1),
+            inner: Mutex::new(WriteQueueInner { queue: VecDeque::new(), open: true }),
+            available: Condvar::new(),
+            space: Condvar::new(),
+        }
+    }
+
+    /// Enqueue `item`, blocking while the queue is full for at most
+    /// `stall`.  `Stalled` hands the item back once the budget is spent
+    /// with the queue still full; `Closed` once the queue is closed.
+    pub fn push(&self, item: T, stall: Duration) -> Result<(), PushError<T>> {
+        let deadline = Instant::now() + stall;
+        let mut g = self.inner.lock();
+        while g.open && g.queue.len() >= self.cap {
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(PushError::Stalled(item));
+            }
+            let (guard, _timed_out) = self.space.wait_timeout(g, deadline - now);
+            g = guard;
+        }
+        if !g.open {
+            return Err(PushError::Closed(item));
+        }
+        g.queue.push_back(item);
+        drop(g);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    /// Enqueue past the bound, never stalling — reserved for terminal
+    /// frames (one per request, so the overshoot is bounded by the
+    /// requests in flight on the connection).  Only a closed queue
+    /// refuses.
+    pub fn push_unbounded(&self, item: T) -> Result<(), PushError<T>> {
+        let mut g = self.inner.lock();
+        if !g.open {
+            return Err(PushError::Closed(item));
+        }
+        g.queue.push_back(item);
+        drop(g);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    /// Consumer side: block for the next frame; `None` once the queue is
+    /// closed **and** drained (a graceful close flushes the backlog).
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock();
+        loop {
+            if let Some(item) = g.queue.pop_front() {
+                drop(g);
+                self.space.notify_one();
+                return Some(item);
+            }
+            if !g.open {
+                return None;
+            }
+            g = self.available.wait(g);
+        }
+    }
+
+    /// Graceful close: no more frames will be accepted, but the writer
+    /// still drains what is queued (push the terminal frames *before*
+    /// closing).  Wakes every parked producer and the writer.
+    pub fn close(&self) {
+        let mut g = self.inner.lock();
+        g.open = false;
+        drop(g);
+        self.available.notify_all();
+        self.space.notify_all();
+    }
+
+    /// Abortive close for a dead connection: close *and* discard the
+    /// backlog (nothing can be delivered), returning how many frames
+    /// were dropped so the caller can count the delivery losses.
+    pub fn abort(&self) -> usize {
+        let mut g = self.inner.lock();
+        g.open = false;
+        let dropped = g.queue.len();
+        g.queue.clear();
+        drop(g);
+        self.available.notify_all();
+        self.space.notify_all();
+        dropped
+    }
+
+    /// Queued frame count (diagnostics/tests).
+    pub fn len(&self) -> usize {
+        self.inner.lock().queue.len()
+    }
+
+    /// Whether the queue is empty (clippy pairing for [`WriteQueue::len`]).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// Session-level cancellation marks: session -> instant of the cancel.
 /// A request is cancelled iff its session was cancelled *at or after*
 /// its arrival, so traffic submitted after a cancel is served normally —
@@ -509,6 +647,52 @@ mod tests {
         assert!(gate.claim(BatchKind::Decode));
         drop(IterToken::new(gate.clone(), BatchKind::Decode, None));
         assert!(!gate.inflight(BatchKind::Decode));
+    }
+
+    #[test]
+    fn write_queue_bounds_producers_and_flushes_on_graceful_close() {
+        let q: WriteQueue<u32> = WriteQueue::new(2);
+        q.push(1, Duration::from_secs(1)).unwrap();
+        q.push(2, Duration::from_secs(1)).unwrap();
+        // full queue + tiny stall budget: the push hands the frame back
+        let t0 = Instant::now();
+        assert_eq!(q.push(3, Duration::from_millis(20)), Err(PushError::Stalled(3)));
+        assert!(t0.elapsed() >= Duration::from_millis(20), "stall budget is honoured");
+        // terminal frames bypass the bound
+        q.push_unbounded(99).unwrap();
+        assert_eq!(q.len(), 3);
+        // graceful close still drains the backlog in order
+        q.close();
+        assert_eq!(q.push(4, Duration::from_secs(1)), Err(PushError::Closed(4)));
+        assert_eq!(q.push_unbounded(5), Err(PushError::Closed(5)));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(99));
+        assert_eq!(q.pop(), None, "closed and drained");
+    }
+
+    #[test]
+    fn write_queue_push_wakes_when_the_writer_frees_space() {
+        let q: Arc<WriteQueue<u32>> = Arc::new(WriteQueue::new(1));
+        q.push(1, Duration::from_secs(1)).unwrap();
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.push(2, Duration::from_secs(30)));
+        // the producer parks on the full queue; popping frees its slot
+        thread::sleep(Duration::from_millis(10));
+        assert_eq!(q.pop(), Some(1));
+        h.join().expect("producer exits").expect("freed slot admits the parked push");
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn write_queue_abort_discards_the_backlog_and_reports_it() {
+        let q: WriteQueue<u32> = WriteQueue::new(8);
+        q.push(1, Duration::from_secs(1)).unwrap();
+        q.push(2, Duration::from_secs(1)).unwrap();
+        assert_eq!(q.abort(), 2, "both undelivered frames are counted");
+        assert_eq!(q.pop(), None, "nothing to drain after an abort");
+        assert_eq!(q.push(3, Duration::from_secs(1)), Err(PushError::Closed(3)));
+        assert!(q.is_empty());
     }
 
     #[test]

@@ -52,6 +52,37 @@ impl ServeError {
     pub fn is_transient(&self) -> bool {
         matches!(self, ServeError::BackendFailed { transient: true, .. })
     }
+
+    /// Stable wire code for the streaming ingress's `Error` frames —
+    /// a 1:1 mapping over the variants (code `0` is reserved for
+    /// protocol-level rejections that never were a `ServeError`, e.g. a
+    /// malformed or shape-invalid request refused at the door).
+    pub fn wire_code(&self) -> u8 {
+        match self {
+            ServeError::TimedOut => 1,
+            ServeError::Overloaded => 2,
+            ServeError::Cancelled => 3,
+            ServeError::BackendFailed { .. } => 4,
+            ServeError::Shutdown(_) => 5,
+            ServeError::KvAdmission(_) => 6,
+        }
+    }
+
+    /// Inverse of [`ServeError::wire_code`] for the client-side decoder.
+    /// `detail` repopulates the variants that carry a reason; stateless
+    /// variants ignore it.  Unknown codes (0 included) have no variant —
+    /// `None` tells the client to surface the raw frame instead.
+    pub fn from_wire(code: u8, transient: bool, detail: &str) -> Option<ServeError> {
+        match code {
+            1 => Some(ServeError::TimedOut),
+            2 => Some(ServeError::Overloaded),
+            3 => Some(ServeError::Cancelled),
+            4 => Some(ServeError::BackendFailed { reason: detail.to_string(), transient }),
+            5 => Some(ServeError::Shutdown(detail.to_string())),
+            6 => Some(ServeError::KvAdmission(detail.to_string())),
+            _ => None,
+        }
+    }
 }
 
 impl fmt::Display for ServeError {
@@ -170,6 +201,39 @@ mod tests {
         assert!(ServeError::KvAdmission("unknown session \"x\"".into())
             .to_string()
             .contains("unknown session"));
+    }
+
+    #[test]
+    fn wire_codes_roundtrip_every_variant() {
+        let variants = [
+            ServeError::TimedOut,
+            ServeError::Overloaded,
+            ServeError::Cancelled,
+            ServeError::BackendFailed { reason: "device lost".into(), transient: true },
+            ServeError::backend("boom"),
+            ServeError::Shutdown("server draining".into()),
+            ServeError::KvAdmission("unknown session".into()),
+        ];
+        for e in &variants {
+            let code = e.wire_code();
+            assert!(code >= 1, "0 is reserved for protocol-level rejection");
+            let detail = match e {
+                ServeError::BackendFailed { reason, .. } => reason.clone(),
+                ServeError::Shutdown(r) | ServeError::KvAdmission(r) => r.clone(),
+                _ => String::new(),
+            };
+            let back = ServeError::from_wire(code, e.is_transient(), &detail)
+                .unwrap_or_else(|| panic!("code {code} must decode"));
+            assert_eq!(&back, e, "wire code {code} must roundtrip");
+        }
+        // distinct variants map to distinct codes (1:1)
+        let mut codes: Vec<u8> = variants.iter().map(ServeError::wire_code).collect();
+        codes.dedup(); // the two BackendFailed entries share one code
+        codes.sort_unstable();
+        codes.dedup();
+        assert_eq!(codes.len(), 6);
+        assert_eq!(ServeError::from_wire(0, false, "bad shape"), None);
+        assert_eq!(ServeError::from_wire(200, false, ""), None);
     }
 
     #[test]

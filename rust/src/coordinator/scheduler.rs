@@ -569,8 +569,13 @@ impl Scheduler {
 
     /// Flush everything for shutdown: waiting groups and slot pendings
     /// packed into ungated `Formed` batches (the drain path serves or
-    /// sheds them; residency ends).
+    /// sheds them; residency ends).  Every retired slot is tallied into
+    /// `sessions_evicted` so [`crate::coordinator::DrainReport`] can
+    /// account for the residencies the teardown released.
     pub fn drain_all(&mut self) -> Vec<Batch> {
+        // ordering: Relaxed — statistical counter; the drain reads it
+        // after joining the serving threads
+        self.metrics.sessions_evicted.fetch_add(self.slots.len() as u64, Ordering::Relaxed);
         let mut groups: Vec<SessionBatch> = Vec::new();
         for w in self.waiting.drain(..) {
             groups.push(w.group);
@@ -963,6 +968,11 @@ mod tests {
         assert_eq!(s.resident_slots(), 0);
         assert_eq!(s.waiting_groups(), 0);
         assert!(!s.has_backlog());
+        assert_eq!(
+            s.metrics.sessions_evicted.load(Ordering::Relaxed),
+            1,
+            "the one resident slot retired by the flush is tallied"
+        );
     }
 
     #[test]

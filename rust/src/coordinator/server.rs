@@ -76,6 +76,7 @@
 //! stay bit-identical to the unfused, fault-free path.
 
 use std::cell::Cell;
+use std::fmt;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::time::{Duration, Instant};
 
@@ -196,6 +197,12 @@ pub struct Server {
     /// Default per-request deadline from submit
     /// (`CoordinatorConfig::request_timeout_us`).
     request_timeout: Duration,
+    /// Delivery grace past a request's deadline for blocking waits
+    /// (`CoordinatorConfig::response_grace_us`, validated > 0): how long
+    /// `call`/`append` — and the ingress's terminal-frame waits — allow
+    /// the serving loop's own shed to deliver before synthesizing
+    /// `TimedOut` locally.
+    delivery_grace: Duration,
     /// Admission gate: max requests in flight before submit rejects.
     max_pending: usize,
     ctx: Arc<ServeCtx>,
@@ -317,6 +324,7 @@ impl Server {
             kv,
             head_dim,
             request_timeout: Duration::from_micros(cfg.request_timeout_us),
+            delivery_grace: Duration::from_micros(cfg.response_grace_us.max(1)),
             max_pending: cfg.max_pending_requests.max(1),
             ctx,
             ingress_rx,
@@ -480,15 +488,15 @@ impl Server {
     }
 
     /// Submit and wait.  Bounded: waits until the request deadline (plus
-    /// a small delivery grace) and synthesizes a
-    /// [`ServeError::TimedOut`] response if nothing arrived — a lost
-    /// reply channel can never hang the caller.
+    /// the configured delivery grace, `response_grace_us`) and
+    /// synthesizes a [`ServeError::TimedOut`] response if nothing
+    /// arrived — a lost reply channel can never hang the caller.
     pub fn call(&self, session: &str, query: Vec<f32>) -> Result<AttentionResponse> {
         self.validate_query(&query)?;
         let t0 = Instant::now();
         let deadline = t0 + self.request_timeout;
         let (id, rx) = self.enqueue(session, Payload::Query(query), deadline)?;
-        Ok(await_response(id, &rx, deadline, t0))
+        Ok(await_response(id, &rx, deadline, t0, self.delivery_grace))
     }
 
     /// Submit a KV append and wait for the acknowledgement (bounded by
@@ -498,7 +506,23 @@ impl Server {
         let t0 = Instant::now();
         let deadline = t0 + self.request_timeout;
         let (id, rx) = self.enqueue(session, Payload::Append { k_rows, v_rows }, deadline)?;
-        Ok(await_response(id, &rx, deadline, t0))
+        Ok(await_response(id, &rx, deadline, t0, self.delivery_grace))
+    }
+
+    /// The configured delivery grace (`response_grace_us`): the streaming
+    /// ingress reuses it to bound its terminal-frame waits.
+    pub fn delivery_grace(&self) -> Duration {
+        self.delivery_grace
+    }
+
+    /// The default per-request deadline span (`request_timeout_us`).
+    pub fn request_timeout(&self) -> Duration {
+        self.request_timeout
+    }
+
+    /// The KV geometry this server validates requests against.
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
     }
 
     /// Cancel a session: every queued request of the session submitted
@@ -512,8 +536,10 @@ impl Server {
     /// submitted *after* the cancel are served normally.
     pub fn cancel(&self, session: &str, evict_kv: bool) {
         self.ctx.cancels.cancel(session);
-        if evict_kv {
-            self.kv.evict(session);
+        if evict_kv && self.kv.evict(session).is_some() {
+            // ordering: Relaxed — statistical counter (drain reports its
+            // delta after joining the serving threads)
+            self.metrics.sessions_evicted.fetch_add(1, Ordering::Relaxed);
         }
         let _ = self.ingress.try_send(Msg::Cancel(session.to_string()));
     }
@@ -521,10 +547,20 @@ impl Server {
     /// Graceful drain: stop admissions, keep serving what is already in
     /// flight until `timeout` has elapsed, then fail the remainder with
     /// an explicit [`ServeError::Shutdown`] and tear the server down.
-    /// Returns `true` when everything in flight completed before the
-    /// deadline (a clean drain); either way, every accepted request has
-    /// received its terminal response by the time this returns.
-    pub fn drain(mut self, timeout: Duration) -> bool {
+    /// Returns a [`DrainReport`]: `clean` when everything in flight
+    /// completed before the deadline, plus the counts of requests served
+    /// and force-failed during the drain and the sessions whose
+    /// residency/KV was torn down.  Either way, every accepted request
+    /// has received its terminal response by the time this returns.
+    pub fn drain(mut self, timeout: Duration) -> DrainReport {
+        // baseline for the report's deltas: everything terminal from
+        // here on happened *during* the drain
+        // ordering: Relaxed — statistical counters; the exact totals are
+        // read again after the serving threads are joined
+        let served0 = self.metrics.completed.load(Ordering::Relaxed)
+            + self.metrics.appends.load(Ordering::Relaxed);
+        let failed0 = self.metrics.failed.load(Ordering::Relaxed);
+        let evicted0 = self.metrics.sessions_evicted.load(Ordering::Relaxed);
         // ordering: SeqCst — pairs with enqueue's SeqCst load: every
         // submit either observes the flag (and rejects) or its gauge
         // claim precedes the zero poll below in the single total order
@@ -552,7 +588,27 @@ impl Server {
             self.ctx.shed_all.store(true, Ordering::SeqCst);
         }
         self.shutdown_inner();
-        clean
+        // the joins above supply the happens-before edge: these reads see
+        // every terminal outcome the serving threads recorded
+        // ordering: Relaxed — post-join reads of statistical counters
+        let report = DrainReport {
+            clean,
+            served: (self.metrics.completed.load(Ordering::Relaxed)
+                + self.metrics.appends.load(Ordering::Relaxed))
+            .saturating_sub(served0),
+            force_failed: self.metrics.failed.load(Ordering::Relaxed).saturating_sub(failed0),
+            sessions_evicted: self
+                .metrics
+                .sessions_evicted
+                .load(Ordering::Relaxed)
+                .saturating_sub(evicted0),
+        };
+        if report.clean {
+            crate::info!("coordinator::server", "{report}");
+        } else {
+            crate::warnlog!("coordinator::server", "{report}");
+        }
+        report
     }
 
     pub fn shutdown(mut self) {
@@ -603,19 +659,53 @@ const BACKEND_PANIC_ERROR: &str = "backend panicked while serving this dispatch"
 const DRAINING_ERROR: &str = "server draining: admissions closed";
 const DRAIN_SHED_ERROR: &str = "drain deadline expired before this request was served";
 
+/// Outcome of a [`Server::drain`]: whether it was clean plus the deltas
+/// of terminal outcomes recorded across the drain call itself (requests
+/// served to completion, requests force-failed past the deadline, and
+/// sessions whose residency/KV was torn down — by cancels racing the
+/// drain or by the scheduler retiring resident slots at teardown).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DrainReport {
+    /// Everything in flight completed before the drain deadline.
+    pub clean: bool,
+    /// Queries completed + appends acknowledged during the drain.
+    pub served: u64,
+    /// Requests failed during the drain (deadline sheds, cancels, and
+    /// the explicit [`ServeError::Shutdown`] force-fails past the
+    /// drain deadline).
+    pub force_failed: u64,
+    /// Sessions evicted during the drain (KV freed, residency retired).
+    pub sessions_evicted: u64,
+}
+
+impl fmt::Display for DrainReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "drain {}: served={} force_failed={} sessions_evicted={}",
+            if self.clean { "clean" } else { "past deadline" },
+            self.served,
+            self.force_failed,
+            self.sessions_evicted
+        )
+    }
+}
+
 /// Bounded wait for a submitted request's response: until its deadline
-/// plus a small delivery grace.  A miss — deadline passed with nothing
-/// delivered yet, or a lost reply channel — synthesizes an explicit
-/// [`ServeError::TimedOut`] response instead of hanging the caller.
-/// (The in-pipeline request still receives its own terminal response;
-/// with this handle dropped, that delivery counts as `delivery_lost`.)
+/// plus the configured delivery `grace`
+/// ([`crate::config::CoordinatorConfig::response_grace_us`]).  A miss —
+/// deadline passed with nothing delivered yet, or a lost reply channel —
+/// synthesizes an explicit [`ServeError::TimedOut`] response instead of
+/// hanging the caller.  (The in-pipeline request still receives its own
+/// terminal response; with this handle dropped, that delivery counts as
+/// `delivery_lost`.)
 fn await_response(
     id: u64,
     rx: &ResponseHandle,
     deadline: Instant,
     t0: Instant,
+    grace: Duration,
 ) -> AttentionResponse {
-    let grace = Duration::from_millis(100);
     let wait = (deadline + grace).saturating_duration_since(Instant::now());
     match rx.recv_timeout(wait) {
         Ok(resp) => resp,
@@ -2011,7 +2101,10 @@ mod tests {
         let mut rng = Rng::new(47);
         let rx = srv.submit("sess", rng.normal_vec(8)).unwrap();
         let metrics = Arc::clone(&srv.metrics);
-        assert!(srv.drain(Duration::from_secs(10)), "drain must complete cleanly");
+        let report = srv.drain(Duration::from_secs(10));
+        assert!(report.clean, "drain must complete cleanly: {report}");
+        assert_eq!(report.served, 1, "the in-flight query completed during the drain");
+        assert_eq!(report.force_failed, 0, "a clean drain force-fails nothing");
         let resp = rx.recv().unwrap();
         assert!(resp.ok(), "in-flight request must be served through drain: {:?}", resp.output);
         assert_eq!(metrics.snapshot().inflight, 0);
@@ -2035,7 +2128,9 @@ mod tests {
         let srv = Server::start(&coord_cfg, kv, factories).unwrap();
         let rx = srv.submit("sess", rng.normal_vec(8)).unwrap();
         let metrics = Arc::clone(&srv.metrics);
-        assert!(!srv.drain(Duration::ZERO), "expired drain must report unclean");
+        let report = srv.drain(Duration::ZERO);
+        assert!(!report.clean, "expired drain must report unclean: {report}");
+        assert_eq!(report.force_failed, 1, "the shed remainder is counted");
         let resp = rx.recv().unwrap();
         assert!(
             matches!(resp.output, Err(ServeError::Shutdown(_))),

@@ -8,6 +8,11 @@
 //!                                task-accuracy evaluation (native engine)
 //!   serve [--impl hfa|fa2] [--requests N] [--workers W] [--pjrt]
 //!                                run the serving coordinator on a workload
+//!   serve --listen ADDR [--smoke N] [--steps S]
+//!                                framed-socket streaming front end
+//!                                (`--smoke N` runs N scripted loopback
+//!                                streaming clients, then drains and
+//!                                exits; without it, Enter drains)
 //!   validate-bench [FILE]        check a BENCH_*.json trajectory file
 //!                                against the benchlib row schema
 //!                                (default: BENCH_serving.json)
@@ -163,6 +168,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use hfa::sync::Arc;
 
     let cfg = Config::resolve(None, args)?;
+    if let Some(addr) = args.get("listen") {
+        return serve_socket(args, &cfg, addr);
+    }
     let requests = args.get_usize("requests", 256)?;
     let arith = match args.get_or("impl", "hfa") {
         "fa2" => Arith::Fa2,
@@ -211,6 +219,101 @@ fn cmd_serve(args: &Args) -> Result<()> {
         requests as f64 / wall, snap.p50_us, snap.p99_us, snap.mean_batch, snap.rejected
     );
     server.shutdown();
+    Ok(())
+}
+
+/// Framed-socket streaming mode: bind the ingress on `--listen ADDR`
+/// (":0" picks an ephemeral port).  `--smoke N` runs N concurrent
+/// scripted loopback clients — prefill, an S-step token stream, goodbye
+/// — then drains and exits non-zero unless the drain was clean; it is
+/// the CI streaming smoke.  Without `--smoke`, serves until Enter.
+fn serve_socket(args: &Args, cfg: &Config, addr: &str) -> Result<()> {
+    use hfa::coordinator::{Client, Ingress, KvStore, Server, SimBackend, StreamEvent, StreamStep};
+    use hfa::proptest::Rng;
+    use hfa::sync::Arc;
+
+    let arith = match args.get_or("impl", "hfa") {
+        "fa2" => Arith::Fa2,
+        _ => Arith::Hfa,
+    };
+    let smoke = args.get_usize("smoke", 0)?;
+    let steps = args.get_usize("steps", 8)?;
+    let d = cfg.accel.head_dim;
+    let n = cfg.accel.seq_len;
+    let coord = cfg.coord.clone();
+    let kv = Arc::new(KvStore::new(n, d, smoke.max(4)));
+    let factories: Vec<hfa::coordinator::BackendFactory> =
+        (0..coord.workers).map(|_| SimBackend::factory(arith, cfg.accel.clone())).collect();
+    let server = Server::start(&coord, kv, factories)?;
+    let ing = Ingress::bind(addr, server, &coord)?;
+    let local = ing.local_addr();
+    let metrics = ing.metrics();
+    println!("listening on {local} (head_dim {d}, seq_len {n}, {} workers)", coord.workers);
+
+    if smoke == 0 {
+        println!("press Enter to drain");
+        let mut line = String::new();
+        let _ = std::io::stdin().read_line(&mut line);
+    } else {
+        let t0 = std::time::Instant::now();
+        let clients: Vec<_> = (0..smoke)
+            .map(|i| {
+                hfa::sync::thread::spawn(move || -> Result<()> {
+                    let mut rng = Rng::new(0xC11 + i as u64);
+                    let mut cl = Client::connect(&local)?;
+                    let sess = format!("smoke-{i}");
+                    let rows = 4.min(n);
+                    cl.put(
+                        &sess,
+                        hfa::Mat::from_vec(rows, d, rng.normal_vec(rows * d)),
+                        hfa::Mat::from_vec(rows, d, rng.normal_vec(rows * d)),
+                    )?;
+                    let plan: Vec<StreamStep> = (0..steps)
+                        .map(|_| StreamStep {
+                            k: hfa::Mat::from_vec(1, d, rng.normal_vec(d)),
+                            v: hfa::Mat::from_vec(1, d, rng.normal_vec(d)),
+                            q: rng.normal_vec(d),
+                        })
+                        .collect();
+                    let events = cl.stream(&sess, plan)?;
+                    let tokens =
+                        events.iter().filter(|e| matches!(e, StreamEvent::Token { .. })).count();
+                    anyhow::ensure!(tokens == steps, "{sess}: {tokens}/{steps} tokens");
+                    anyhow::ensure!(
+                        matches!(events.last(), Some(StreamEvent::End { .. })),
+                        "{sess}: stream did not end cleanly: {:?}",
+                        events.last()
+                    );
+                    cl.goodbye()?;
+                    Ok(())
+                })
+            })
+            .collect();
+        for c in clients {
+            c.join().map_err(|_| anyhow::anyhow!("smoke client panicked"))??;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "smoke: {smoke} clients x {steps} streamed tokens in {wall:.3}s = {:.0} tokens/s",
+            (smoke * steps) as f64 / wall
+        );
+    }
+
+    let report = ing.drain(std::time::Duration::from_secs(30));
+    let snap = metrics.snapshot();
+    println!("{report}");
+    println!(
+        "streams {} tokens {} | first-token p50/p99 {:.0}/{:.0} us | inter-token p50/p99 {:.0}/{:.0} us | shed {} disconnects {}",
+        snap.streams_opened,
+        snap.stream_tokens,
+        snap.first_token_p50_us,
+        snap.first_token_p99_us,
+        snap.inter_token_p50_us,
+        snap.inter_token_p99_us,
+        snap.slow_consumer_shed,
+        snap.disconnects
+    );
+    anyhow::ensure!(report.clean(), "drain was not clean: {report}");
     Ok(())
 }
 

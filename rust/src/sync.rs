@@ -128,6 +128,33 @@ impl Condvar {
         self.0.wait(guard).unwrap_or_else(|poisoned| poisoned.into_inner())
     }
 
+    /// Timed wait: park until notified or `dur` elapses; the bool is
+    /// whether the wait ended by timeout.  Under `--cfg loom` this
+    /// degrades to an untimed [`Condvar::wait`] reporting `false` — loom
+    /// has no time model, and the protocols that lean on the timeout
+    /// (the ingress write queue's stall budget) are exercised by the
+    /// chaos soak + TSan lane, not the loom suite.
+    #[cfg(not(loom))]
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: std::time::Duration,
+    ) -> (MutexGuard<'a, T>, bool) {
+        let (g, res) =
+            self.0.wait_timeout(guard, dur).unwrap_or_else(|poisoned| poisoned.into_inner());
+        (g, res.timed_out())
+    }
+
+    /// Loom stand-in for the timed wait (see the `cfg(not(loom))` docs).
+    #[cfg(loom)]
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        _dur: std::time::Duration,
+    ) -> (MutexGuard<'a, T>, bool) {
+        (self.wait(guard), false)
+    }
+
     pub fn notify_one(&self) {
         self.0.notify_one();
     }

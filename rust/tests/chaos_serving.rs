@@ -162,7 +162,16 @@ fn seeded_soak_reaches_a_consistent_terminal_state() {
     // drain: admissions close, in-flight work is already done, teardown
     // is clean
     let metrics = Arc::clone(&srv.metrics);
-    assert!(srv.drain(Duration::from_secs(30)), "drain must complete cleanly");
+    let report = srv.drain(Duration::from_secs(30));
+    assert!(report.clean, "drain must complete cleanly: {report}");
+    assert_eq!(
+        report.force_failed, 0,
+        "nothing was in flight at drain, so nothing may be force-failed: {report}"
+    );
+    assert_eq!(
+        report.served, 0,
+        "every terminal response landed before the drain began: {report}"
+    );
 
     // invariant: no leaked pins
     assert_eq!(kv.pinned_sessions(), 0, "no session pin may leak through the chaos");

@@ -509,6 +509,46 @@ mod tests {
     }
 
     #[test]
+    fn streaming_ingress_is_covered_by_coordinator_rules() {
+        // the framed-socket front end (coordinator/ingress/) is serve
+        // path: every file under it must bind to the coordinator-scoped
+        // rules exactly like server.rs — no-unwrap on non-test code,
+        // documented atomic orderings, and the lock order — and the
+        // facade rule must hold even in its test code
+        for rel in [
+            "src/coordinator/ingress/mod.rs",
+            "src/coordinator/ingress/conn.rs",
+            "src/coordinator/ingress/stream.rs",
+            "src/coordinator/ingress/frame.rs",
+        ] {
+            assert_eq!(
+                lint_src(rel, "fn f(out: &WriteQueue<Frame>) { out.push(f, stall).unwrap(); }\n"),
+                vec!["no-unwrap:1"],
+                "{rel}"
+            );
+            assert_eq!(
+                lint_src(rel, "fn f(&self) { self.dead.store(true, Ordering::Relaxed); }\n"),
+                vec!["ordering-comment:1"],
+                "{rel}"
+            );
+            assert_eq!(
+                lint_src(
+                    rel,
+                    "fn f(&self) {\n    let q = queue.lock();\n    let m = metrics.latencies_us.lock();\n}\n"
+                ),
+                vec!["lock-order:3"],
+                "{rel}"
+            );
+            // std::net is deliberately NOT facaded (loom has no sockets;
+            // the ingress tick-polls its reads instead), but std::sync /
+            // std::thread stay banned — even inside ingress test code
+            assert!(lint_src(rel, "use std::net::TcpStream;\n").is_empty(), "{rel}");
+            let test_src = "#[cfg(test)]\nmod tests { use std::sync::Mutex; }\n";
+            assert_eq!(lint_src(rel, test_src), vec!["facade:2"], "{rel}");
+        }
+    }
+
+    #[test]
     fn lint_allow_suppresses_a_single_line() {
         let src = "use std::sync::Mutex; // lint:allow(facade)\n";
         assert!(lint_src("src/a.rs", src).is_empty());
