@@ -588,6 +588,101 @@ fn main() -> anyhow::Result<()> {
     }
     gt.emit("streaming_ingress");
 
+    // Prefix-sharing fleet (EXPERIMENTS.md §Prefix-sharing): S sessions
+    // admit the same P-row prefix plus an 8-row private tail through
+    // the radix cache, then each forks one beam child — the shared-
+    // system-prompt fleet the prefix index exists for.  bytes/session
+    // and dedup-hit counts are exact structural numbers from the store
+    // and the metrics gauges (machine-independent); ns/step times the
+    // put+fork admissions, whose dedup path skips conversion for every
+    // full prefix chunk.  The geometry is independent of HFA_BENCH_N:
+    // sharing happens at DEFAULT_BLOCK_ROWS granularity, so the prefix
+    // must span full chunks even in the CI smoke shape.
+    let pfx_sessions = env_usize("HFA_BENCH_PREFIX_SESSIONS", 32).max(2);
+    let pfx_prefix = env_usize(
+        "HFA_BENCH_PREFIX_ROWS",
+        2 * hfa::attention::prepared::DEFAULT_BLOCK_ROWS,
+    );
+    let pfx_tail = 8usize;
+    let pfx_rows = pfx_prefix + pfx_tail;
+    let mut pt = Table::new(
+        &format!(
+            "Prefix-sharing fleet — {pfx_sessions} sessions x ({pfx_prefix}-row shared \
+             prefix + {pfx_tail}-row tail) + 1 fork each, d={d}"
+        ),
+        &[
+            "resident sessions",
+            "bytes/session solo",
+            "bytes/session fleet",
+            "shared KiB",
+            "dedup hits",
+            "us/admission",
+        ],
+    );
+    {
+        let rb = hfa::attention::prepared::row_bytes(d, d);
+        let kv = Arc::new(KvStore::new(pfx_rows, d, 2 * pfx_sessions));
+        let metrics = Arc::new(hfa::coordinator::Metrics::new());
+        kv.attach_metrics(Arc::clone(&metrics));
+        let kp = rng.normal_vec(pfx_prefix * d);
+        let vp = rng.normal_vec(pfx_prefix * d);
+        let mats: Vec<(Mat, Mat)> = (0..pfx_sessions)
+            .map(|_| {
+                let mut kd = kp.clone();
+                let mut vd = vp.clone();
+                kd.extend(rng.normal_vec(pfx_tail * d));
+                vd.extend(rng.normal_vec(pfx_tail * d));
+                (Mat::from_vec(pfx_rows, d, kd), Mat::from_vec(pfx_rows, d, vd))
+            })
+            .collect();
+        let copy0 = hfa::attention::prepared::kv_copy_bytes();
+        let t0 = Instant::now();
+        for (s, (km, vm)) in mats.iter().enumerate() {
+            kv.put(&format!("pfx-{s}"), km.clone(), vm.clone())?;
+        }
+        for s in 0..pfx_sessions {
+            kv.fork(&format!("pfx-{s}"), &format!("beam-{s}"))?;
+        }
+        let admissions = 2 * pfx_sessions;
+        let wall = t0.elapsed().as_secs_f64();
+        let copied = hfa::attention::prepared::kv_copy_bytes() - copy0;
+        // the exact fleet equation the test suite pins, re-asserted here
+        // so a perf run can never report numbers from a broken cache
+        anyhow::ensure!(
+            kv.used_bytes() == pfx_rows * rb + (pfx_sessions - 1) * pfx_tail * rb,
+            "prefix fleet bytes drifted: {} used",
+            kv.used_bytes()
+        );
+        let snap = metrics.snapshot();
+        anyhow::ensure!(
+            snap.kv_resident_sessions == admissions as u64 && snap.kv_dedup_hits > 0,
+            "sharing gauges missing: {snap:?}"
+        );
+        let solo = pfx_rows * rb;
+        pt.row(&[
+            admissions.to_string(),
+            solo.to_string(),
+            snap.kv_mean_session_bytes.to_string(),
+            format!("{:.1}", snap.kv_shared_bytes as f64 / 1024.0),
+            snap.kv_dedup_hits.to_string(),
+            format!("{:.1}", wall / admissions as f64 * 1e6),
+        ]);
+        // bytes-per-session + dedup hits ride in the shape string (the
+        // row schema is fixed at 4 keys); kv_bytes_copied is the real
+        // copy traffic of the whole fleet admission — proportional to
+        // unique rows, not sessions x rows
+        json_rows.push(BenchRow {
+            bench: format!("prefix_fleet_s{pfx_sessions}"),
+            shape: format!(
+                "S{pfx_sessions}_P{pfx_prefix}_d{d}_tail{pfx_tail}_bps{}_solo{solo}_dedup{}",
+                snap.kv_mean_session_bytes, snap.kv_dedup_hits
+            ),
+            ns_per_step: wall / admissions as f64 * 1e9,
+            kv_bytes_copied: copied,
+        });
+    }
+    pt.emit("prefix_fleet");
+
     // machine-readable trajectory file, self-validated so CI's smoke run
     // catches a writer regression
     let path = write_bench_json("BENCH_attention.json", &json_rows)?;

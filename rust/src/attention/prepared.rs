@@ -114,6 +114,69 @@ pub fn kv_block_ranges(n: usize, num_blocks: usize) -> Vec<(usize, usize)> {
 /// the paper's Section VI-C geometry (N=1024 over four 256-row blocks).
 pub const DEFAULT_BLOCK_ROWS: usize = 256;
 
+// FNV-1a 64 parameters for the chunk content hash.  FNV is enough here:
+// the hash is a *lookup key* for the KV store's prefix index, and every
+// resolved chunk is installed by pointer — a collision can at worst
+// alias two prefixes in the index, and the store re-keys per chunk
+// position through [`chain_link`], so dedup correctness never rests on
+// hash uniqueness alone (outputs stay bit-identical either way because
+// rows are BF16-rounded before hashing and before building).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+#[inline]
+fn fnv_u32(mut h: u64, w: u32) -> u64 {
+    for b in w.to_le_bytes() {
+        h = (h ^ u64::from(b)).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Content hash of source rows `[lo, hi)` — the identity of the chunk
+/// those rows would build.  Hashes the exact f32 bit patterns of the K
+/// and V rows (callers hash the same BF16-rounded matrices they build
+/// from) plus the row dims, so two sessions that `put` byte-identical
+/// prefixes produce identical hashes and a dedup hit reuses a chunk
+/// whose planes are bit-for-bit the ones a fresh build would write.
+pub fn chunk_row_hash(k: &Mat, v: &Mat, lo: usize, hi: usize) -> u64 {
+    assert_eq!(k.rows, v.rows, "K/V row count mismatch");
+    assert!(lo <= hi && hi <= k.rows, "chunk hash range out of bounds");
+    let mut h = FNV_OFFSET;
+    h = fnv_u32(h, k.cols as u32);
+    h = fnv_u32(h, v.cols as u32);
+    h = fnv_u32(h, (hi - lo) as u32);
+    for r in lo..hi {
+        for &x in k.row(r) {
+            h = fnv_u32(h, x.to_bits());
+        }
+        for &x in v.row(r) {
+            h = fnv_u32(h, x.to_bits());
+        }
+    }
+    h
+}
+
+/// Root link of a prefix-chain for the given chunk geometry.  The KV
+/// store's radix index keys chunk *positions*, not bare contents: chunk
+/// `i`'s key is `chain_link(link_{i-1}, hash_i)` starting from this
+/// root, so a chunk only resolves when the entire prefix before it
+/// matched too (and geometry mismatches can never alias).
+pub fn chain_root(d: usize, dv: usize, block_rows: usize) -> u64 {
+    let mut h = fnv_u32(FNV_OFFSET, 0x5052_4658); // "PRFX" domain tag
+    h = fnv_u32(h, d as u32);
+    h = fnv_u32(h, dv as u32);
+    h = fnv_u32(h, block_rows as u32);
+    h
+}
+
+/// Extend a prefix-chain link by one chunk hash (see [`chain_root`]).
+pub fn chain_link(parent: u64, chunk_hash: u64) -> u64 {
+    let mut h = parent;
+    h = fnv_u32(h, (chunk_hash & 0xffff_ffff) as u32);
+    h = fnv_u32(h, (chunk_hash >> 32) as u32);
+    h
+}
+
 /// Partition `n` rows into fixed-capacity blocks of `block_rows` with a
 /// ragged tail.  Unlike [`kv_block_ranges`] (count-driven, boundaries
 /// move as `n` changes), this capacity-driven partition is append-stable:
@@ -235,6 +298,60 @@ impl PreparedKv {
         PreparedKv::with_block_rows(k, v, DEFAULT_BLOCK_ROWS)
     }
 
+    /// [`PreparedKv::with_block_rows`] with a prefix resolver: before
+    /// each **full** (capacity-aligned) chunk is built, `resolve` is
+    /// offered `(chunk index, content hash of its rows)` and may return
+    /// an existing `Arc<KvChunk>` to install verbatim — those rows then
+    /// pay zero copy bytes and zero `value_to_lns` conversions, and the
+    /// attention grid streams the exact same planes every other holder
+    /// streams (dedup is a storage choice, never a numeric one).  A
+    /// `None` (or a hit whose geometry does not match) builds the chunk
+    /// fresh, exactly like the unshared path; the ragged tail is always
+    /// built fresh and privately owned.  This is the KV store's
+    /// prefix-dedup ingest path: hashes are resolved against its radix
+    /// index *before* any conversion work, so LNS conversion cost is
+    /// proportional to unique rows fleet-wide, not sessions x rows.
+    pub fn with_shared_chunks(
+        k: &Mat,
+        v: &Mat,
+        block_rows: usize,
+        mut resolve: impl FnMut(usize, u64) -> Option<Arc<KvChunk>>,
+    ) -> PreparedKv {
+        assert_eq!(k.rows, v.rows, "K/V row count mismatch");
+        let block_rows = block_rows.max(1);
+        let n = k.rows;
+        let full = n / block_rows;
+        let mut chunks = Vec::with_capacity(n.div_ceil(block_rows));
+        for c in 0..full {
+            let (lo, hi) = (c * block_rows, (c + 1) * block_rows);
+            let hit = resolve(c, chunk_row_hash(k, v, lo, hi)).filter(|ch| {
+                ch.rows() == block_rows && ch.k.cols == k.cols && ch.v.cols == v.cols
+            });
+            match hit {
+                Some(ch) => chunks.push(ch),
+                None => {
+                    let mut fresh = KvChunk::with_capacity(block_rows, k.cols, v.cols);
+                    fresh.push_rows(k, v, lo, hi);
+                    chunks.push(Arc::new(fresh));
+                }
+            }
+        }
+        if n % block_rows != 0 {
+            let lo = full * block_rows;
+            let mut tail = KvChunk::with_capacity(n - lo, k.cols, v.cols);
+            tail.push_rows(k, v, lo, n);
+            chunks.push(Arc::new(tail));
+        }
+        PreparedKv {
+            d: k.cols,
+            dv: v.cols,
+            block_rows,
+            n,
+            chunks,
+            blocks: fixed_block_ranges(n, block_rows),
+        }
+    }
+
     /// [`PreparedKv::new`] with an explicit chunk capacity.
     pub fn with_block_rows(k: Mat, v: Mat, block_rows: usize) -> PreparedKv {
         assert_eq!(k.rows, v.rows, "K/V row count mismatch");
@@ -332,6 +449,39 @@ impl PreparedKv {
     /// clone) is not charged.
     pub fn resident_bytes(&self) -> usize {
         self.chunks.iter().map(|c| c.bytes()).sum()
+    }
+
+    /// [`PreparedKv::resident_bytes`] split into `(owned, shared)`:
+    /// a chunk counts as *shared* when its `Arc` has other holders — a
+    /// deduped sibling session, a forked ancestor/descendant, or an
+    /// in-flight generation still streaming it — and *owned* when this
+    /// table is the sole holder.  The two always sum to
+    /// `resident_bytes()`.  This is a point-in-time observation (strong
+    /// counts move as generations retire); the KV store's budget
+    /// accounting uses its own refcount registry, not this split.
+    pub fn partitioned_bytes(&self) -> (usize, usize) {
+        let mut owned = 0;
+        let mut shared = 0;
+        for c in &self.chunks {
+            if Arc::strong_count(c) > 1 {
+                shared += c.bytes();
+            } else {
+                owned += c.bytes();
+            }
+        }
+        (owned, shared)
+    }
+
+    /// Bytes of chunks this table holds exclusively (see
+    /// [`PreparedKv::partitioned_bytes`]).
+    pub fn owned_bytes(&self) -> usize {
+        self.partitioned_bytes().0
+    }
+
+    /// Bytes of chunks shared with other holders (see
+    /// [`PreparedKv::partitioned_bytes`]).
+    pub fn shared_bytes(&self) -> usize {
+        self.partitioned_bytes().1
     }
 
     /// The resident chunk table (chunk `i` covers stored block `i`).
@@ -859,6 +1009,85 @@ mod tests {
         for qt in [1usize, 2, 3, 7, 16, 500] {
             assert_eq!(kv.attention_tiled(&q, 4, None, qt).data, want, "qt={qt}");
         }
+    }
+
+    #[test]
+    fn chunk_row_hash_tracks_content_and_geometry() {
+        let mut rng = Rng::new(67);
+        let (k, v) = rand_kv(&mut rng, 16, 4);
+        // deterministic, range-sensitive, content-sensitive
+        assert_eq!(chunk_row_hash(&k, &v, 0, 8), chunk_row_hash(&k, &v, 0, 8));
+        assert_ne!(chunk_row_hash(&k, &v, 0, 8), chunk_row_hash(&k, &v, 8, 16));
+        let mut v2 = v.clone();
+        v2.data[5] = (v2.data[5] + 1.0).max(1.0);
+        assert_ne!(chunk_row_hash(&k, &v, 0, 8), chunk_row_hash(&k, &v2, 0, 8));
+        // identical content at a different source offset hashes the same
+        // (positional identity comes from the store's chain, not here)
+        let mut kk = k.rows_slice(0, 8);
+        let mut vv = v.rows_slice(0, 8);
+        for r in 0..8 {
+            kk.append_row(k.row(r));
+            vv.append_row(v.row(r));
+        }
+        assert_eq!(chunk_row_hash(&kk, &vv, 8, 16), chunk_row_hash(&k, &v, 0, 8));
+        // chain links separate position and geometry
+        let root = chain_root(4, 4, 8);
+        let h = chunk_row_hash(&k, &v, 0, 8);
+        assert_ne!(chain_link(root, h), chain_link(chain_link(root, h), h));
+        assert_ne!(chain_root(4, 4, 8), chain_root(4, 4, 16));
+    }
+
+    #[test]
+    fn with_shared_chunks_reuses_hits_and_matches_fresh_build() {
+        let mut rng = Rng::new(71);
+        let (k, v) = rand_kv(&mut rng, 21, 4);
+        let donor = PreparedKv::with_block_rows(k.clone(), v.clone(), 8);
+        let mut offered = Vec::new();
+        let shared = PreparedKv::with_shared_chunks(&k, &v, 8, |c, h| {
+            offered.push((c, h));
+            Some(Arc::clone(&donor.chunks()[c]))
+        });
+        // only the two full chunks are offered; the 5-row tail is private
+        assert_eq!(offered.len(), 2);
+        assert_eq!(offered[0].1, chunk_row_hash(&k, &v, 0, 8));
+        assert!(Arc::ptr_eq(&shared.chunks()[0], &donor.chunks()[0]));
+        assert!(Arc::ptr_eq(&shared.chunks()[1], &donor.chunks()[1]));
+        assert!(!Arc::ptr_eq(&shared.chunks()[2], &donor.chunks()[2]));
+        // bit-identical to the unshared build, blocks and planes alike
+        assert_eq!(shared.blocks(), donor.blocks());
+        assert_eq!(shared.k_mat().data, donor.k_mat().data);
+        assert_eq!(shared.v_lns_mat(), donor.v_lns_mat());
+        let q = Mat::from_vec(2, 4, rng.normal_vec(8)).round_bf16();
+        assert_eq!(
+            shared.attention(&q, None, None).data,
+            donor.attention(&q, None, None).data
+        );
+        // resolver misses (and geometry-mismatched hits) build fresh
+        let fresh = PreparedKv::with_shared_chunks(&k, &v, 8, |_, _| None);
+        assert!(!Arc::ptr_eq(&fresh.chunks()[0], &donor.chunks()[0]));
+        assert_eq!(fresh.v_lns_mat(), donor.v_lns_mat());
+        let wrong = PreparedKv::with_block_rows(k.rows_slice(0, 4), v.rows_slice(0, 4), 4);
+        let guarded = PreparedKv::with_shared_chunks(&k, &v, 8, |_, _| {
+            Some(Arc::clone(&wrong.chunks()[0]))
+        });
+        assert_eq!(guarded.chunks()[0].rows(), 8, "bad-geometry hit must be rejected");
+        assert_eq!(guarded.v_lns_mat(), donor.v_lns_mat());
+    }
+
+    #[test]
+    fn partitioned_bytes_splits_owned_from_shared() {
+        let mut rng = Rng::new(73);
+        let (k, v) = rand_kv(&mut rng, 10, 4);
+        let base = PreparedKv::with_block_rows(k, v, 4); // chunks 4/4/2
+        let rb = row_bytes(4, 4);
+        assert_eq!(base.partitioned_bytes(), (10 * rb, 0));
+        let (k1, v1) = rand_kv(&mut rng, 1, 4);
+        let grown = base.appended(&k1, &v1); // shares the two full chunks
+        assert_eq!(grown.partitioned_bytes(), (3 * rb, 8 * rb));
+        assert_eq!(base.partitioned_bytes(), (2 * rb, 8 * rb));
+        assert_eq!(grown.owned_bytes() + grown.shared_bytes(), grown.resident_bytes());
+        drop(base);
+        assert_eq!(grown.partitioned_bytes(), (11 * rb, 0));
     }
 
     // NOTE: kv_copy_bytes assertions live in `rust/tests/append_traffic.rs`

@@ -31,7 +31,7 @@ use std::time::{Duration, Instant};
 use super::super::protocol::{self, WriteQueue};
 use super::super::request::ServeError;
 use super::super::server::Server;
-use super::frame::{self, Frame, ReadOutcome, WIRE_VERSION};
+use super::frame::{self, Frame, ReadOutcome, MIN_WIRE_VERSION, WIRE_VERSION};
 use super::stream::{error_frame, run_stream, StreamCtx};
 use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use crate::sync::mpsc::{channel, RecvTimeoutError};
@@ -123,13 +123,17 @@ fn handshake(sock: &mut TcpStream, shared: &Shared, out: &WriteQueue<Frame>) -> 
     };
     match frame::read_frame(sock, &stop) {
         Ok(ReadOutcome::Frame(Frame::Hello { version })) => {
-            if version != WIRE_VERSION {
+            if !(MIN_WIRE_VERSION..=WIRE_VERSION).contains(&version) {
                 return refused(format!(
-                    "version mismatch: client speaks {version}, server speaks {WIRE_VERSION}"
+                    "version mismatch: client speaks {version}, server speaks \
+                     {MIN_WIRE_VERSION}..={WIRE_VERSION}"
                 ));
             }
+            // echo the *client's* version: every frame a vN client can
+            // send is encoded identically in vN+, so the server simply
+            // speaks the client's dialect (a v1 client never sends Fork)
             let ack = Frame::HelloAck {
-                version: WIRE_VERSION,
+                version,
                 head_dim: shared.server.head_dim() as u32,
                 seq_len: shared.server.kv.seq_len() as u32,
             };
@@ -195,7 +199,8 @@ fn serve_frames(
                 work @ (Frame::Put { .. }
                 | Frame::Query { .. }
                 | Frame::Append { .. }
-                | Frame::Stream { .. }) => {
+                | Frame::Stream { .. }
+                | Frame::Fork { .. }) => {
                     if tx.send(work).is_err() {
                         break; // driver gone (drain Bye raced the send)
                     }
@@ -326,6 +331,15 @@ fn exec(
             };
             let _ = out.push_unbounded(reply);
         }
+        Frame::Fork { id, parent, child } => {
+            // a direct store operation like Put: no backend dispatch,
+            // admission failures surface as typed KvAdmission errors
+            let reply = match shared.server.fork(&parent, &child) {
+                Ok(()) => Frame::Ack { id },
+                Err(e) => Frame::serve_error(id, &ServeError::KvAdmission(e.to_string())),
+            };
+            let _ = out.push_unbounded(reply);
+        }
         Frame::Stream { id, session, steps } => {
             let ctx = StreamCtx {
                 server: &shared.server,
@@ -380,6 +394,14 @@ fn door_check(server: &Server, f: &Frame) -> Result<(), String> {
             check_session(session)?;
             check_q(q)
         }
+        Frame::Fork { parent, child, .. } => {
+            check_session(parent)?;
+            check_session(child)?;
+            if parent == child {
+                return Err("fork parent and child must be distinct sessions".into());
+            }
+            Ok(())
+        }
         Frame::Stream { session, steps, .. } => {
             check_session(session)?;
             if steps.is_empty() {
@@ -421,6 +443,7 @@ fn frame_name(f: &Frame) -> &'static str {
         Frame::Query { .. } => "Query",
         Frame::Append { .. } => "Append",
         Frame::Stream { .. } => "Stream",
+        Frame::Fork { .. } => "Fork",
         Frame::Cancel { .. } => "Cancel",
         Frame::Goodbye => "Goodbye",
         Frame::HelloAck { .. } => "HelloAck",
@@ -572,6 +595,70 @@ mod tests {
         // gate must be fully released after rejections
         // ordering: Relaxed — quiesced single-threaded readback
         assert_eq!(sh.active_requests.load(Ordering::Relaxed), 0);
+        send(&mut c, &Frame::Goodbye);
+        let _ = recv(&mut c);
+        h.join().expect("conn thread exits");
+    }
+
+    #[test]
+    fn fork_over_the_wire_shares_and_serves_the_child() {
+        let sh = shared();
+        let (mut c, h) = one_conn(&sh);
+        send(&mut c, &Frame::Hello { version: WIRE_VERSION });
+        let _ = recv(&mut c);
+        let k = Mat::from_vec(2, 8, (0..16).map(|i| i as f32 * 0.125).collect());
+        send(&mut c, &Frame::Put { id: 1, session: "base".into(), k: k.clone(), v: k.clone() });
+        assert_eq!(recv(&mut c), Frame::Ack { id: 1 });
+        send(&mut c, &Frame::Fork { id: 2, parent: "base".into(), child: "beam".into() });
+        assert_eq!(recv(&mut c), Frame::Ack { id: 2 });
+        // the forked child stores zero new bytes and answers queries
+        assert_eq!(sh.server.kv.used_bytes(), sh.server.kv.shared_bytes());
+        send(&mut c, &Frame::Query { id: 3, session: "beam".into(), q: vec![0.5; 8] });
+        let beam_out = match recv(&mut c) {
+            Frame::Output { id, out } => {
+                assert_eq!(id, 3);
+                out
+            }
+            other => panic!("expected Output, got {other:?}"),
+        };
+        send(&mut c, &Frame::Query { id: 4, session: "base".into(), q: vec![0.5; 8] });
+        match recv(&mut c) {
+            Frame::Output { out, .. } => assert_eq!(out, beam_out, "fork is bit-identical"),
+            other => panic!("expected Output, got {other:?}"),
+        }
+        // door rejections: self-fork and empty child
+        send(&mut c, &Frame::Fork { id: 5, parent: "base".into(), child: "base".into() });
+        assert!(matches!(recv(&mut c), Frame::Error { id: 5, code: 0, .. }));
+        send(&mut c, &Frame::Fork { id: 6, parent: "base".into(), child: String::new() });
+        assert!(matches!(recv(&mut c), Frame::Error { id: 6, code: 0, .. }));
+        // unknown parent passes the door but fails typed in the store
+        send(&mut c, &Frame::Fork { id: 7, parent: "nope".into(), child: "x".into() });
+        match recv(&mut c) {
+            Frame::Error { id, code, ref detail, .. } => {
+                assert_eq!((id, code), (7, ServeError::KvAdmission(String::new()).wire_code()));
+                assert!(detail.contains("unknown parent"), "{detail}");
+            }
+            other => panic!("expected Error, got {other:?}"),
+        }
+        send(&mut c, &Frame::Goodbye);
+        let _ = recv(&mut c);
+        h.join().expect("conn thread exits");
+    }
+
+    #[test]
+    fn v1_clients_still_handshake_and_serve() {
+        let sh = shared();
+        let (mut c, h) = one_conn(&sh);
+        send(&mut c, &Frame::Hello { version: MIN_WIRE_VERSION });
+        match recv(&mut c) {
+            Frame::HelloAck { version, .. } => {
+                assert_eq!(version, MIN_WIRE_VERSION, "the ack echoes the client's dialect");
+            }
+            other => panic!("expected HelloAck, got {other:?}"),
+        }
+        // a v1 workload is served unchanged
+        send(&mut c, &Frame::Put { id: 1, session: "s".into(), k: Mat::zeros(2, 8), v: Mat::zeros(2, 8) });
+        assert_eq!(recv(&mut c), Frame::Ack { id: 1 });
         send(&mut c, &Frame::Goodbye);
         let _ = recv(&mut c);
         h.join().expect("conn thread exits");

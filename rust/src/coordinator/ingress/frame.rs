@@ -32,8 +32,17 @@ use super::super::request::ServeError;
 use crate::Mat;
 
 /// Protocol version carried by `Hello`/`HelloAck`; bumped on any wire
-/// change.  A version mismatch is refused at the handshake.
-pub const WIRE_VERSION: u32 = 1;
+/// change.  v2 added the `Fork` frame (cross-session KV prefix
+/// sharing).  The handshake negotiates: the server accepts any client
+/// in [`MIN_WIRE_VERSION`]`..=`[`WIRE_VERSION`] and echoes the
+/// *client's* version in `HelloAck`, so a v1 client keeps working
+/// unchanged (it never sends `Fork`); anything outside the range is
+/// refused at the handshake.
+pub const WIRE_VERSION: u32 = 2;
+
+/// Oldest client version the server still speaks (every v1 frame is
+/// encoded identically in v2 — the bump is purely additive).
+pub const MIN_WIRE_VERSION: u32 = 1;
 
 /// Upper bound on a frame body (16 MiB) — large enough for a full
 /// `Put` of any geometry this repo benchmarks, small enough that a
@@ -53,6 +62,7 @@ const T_APPEND: u8 = 0x04;
 const T_STREAM: u8 = 0x05;
 const T_CANCEL: u8 = 0x06;
 const T_GOODBYE: u8 = 0x07;
+const T_FORK: u8 = 0x08; // wire v2+
 // Server -> client tags (high bit set).
 const T_HELLO_ACK: u8 = 0x81;
 const T_ACK: u8 = 0x82;
@@ -91,6 +101,10 @@ pub enum Frame {
     /// Cancel an in-flight request by id (streams shed at the next
     /// step boundary with `Error { code: Cancelled }`).
     Cancel { id: u64 },
+    /// Fork `child` from resident session `parent` (wire v2+): the
+    /// child copy-on-writes the parent's KV chunk table — zero bytes
+    /// copied at fork time (server replies `Ack` / `Error`).
+    Fork { id: u64, parent: String, child: String },
     /// Graceful close: the server flushes replies and answers `Bye`.
     Goodbye,
 
@@ -128,6 +142,7 @@ impl Frame {
             | Frame::Query { id, .. }
             | Frame::Append { id, .. }
             | Frame::Stream { id, .. }
+            | Frame::Fork { id, .. }
             | Frame::Cancel { id }
             | Frame::Ack { id }
             | Frame::Output { id, .. }
@@ -184,6 +199,12 @@ impl Frame {
                     put_mat(b, &s.v);
                     put_f32s(b, &s.q);
                 }
+            }
+            Frame::Fork { id, parent, child } => {
+                b.push(T_FORK);
+                put_u64(b, *id);
+                put_str(b, parent);
+                put_str(b, child);
             }
             Frame::Cancel { id } => {
                 b.push(T_CANCEL);
@@ -248,6 +269,7 @@ impl Frame {
                 }
                 Frame::Stream { id, session, steps }
             }
+            T_FORK => Frame::Fork { id: c.u64()?, parent: c.str()?, child: c.str()? },
             T_CANCEL => Frame::Cancel { id: c.u64()? },
             T_GOODBYE => Frame::Goodbye,
             T_HELLO_ACK => {
@@ -506,6 +528,7 @@ mod tests {
                 StreamStep { k: m.clone(), v: m.clone(), q: vec![3.0] },
             ],
         });
+        roundtrip(Frame::Fork { id: 17, parent: "base".into(), child: "beam-0".into() });
         roundtrip(Frame::Cancel { id: 11 });
         roundtrip(Frame::Goodbye);
         roundtrip(Frame::HelloAck { version: 1, head_dim: 8, seq_len: 32 });

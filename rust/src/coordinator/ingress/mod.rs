@@ -47,7 +47,7 @@ use anyhow::{Context, Result};
 
 use self::conn::{Knobs, Shared};
 use self::frame::ReadOutcome;
-pub use self::frame::{Frame, StreamStep, CODE_INVALID, MAX_FRAME, WIRE_VERSION};
+pub use self::frame::{Frame, StreamStep, CODE_INVALID, MAX_FRAME, MIN_WIRE_VERSION, WIRE_VERSION};
 use super::protocol;
 use super::request::ServeError;
 use super::server::{DrainReport, Server};
@@ -342,9 +342,12 @@ impl Client {
             .context("client: hello")?;
         match read_one(&mut sock)? {
             Frame::HelloAck { version, head_dim, seq_len } => {
+                // a well-behaved server echoes our own version back;
+                // anything in our supported range is still acceptable
                 anyhow::ensure!(
-                    version == WIRE_VERSION,
-                    "client: server speaks wire version {version}, not {WIRE_VERSION}"
+                    (MIN_WIRE_VERSION..=WIRE_VERSION).contains(&version),
+                    "client: server speaks wire version {version}, not \
+                     {MIN_WIRE_VERSION}..={WIRE_VERSION}"
                 );
                 Ok(Client {
                     sock,
@@ -386,6 +389,24 @@ impl Client {
                 Err(wire_error(code, transient, &detail))
             }
             other => anyhow::bail!("client: expected Ack for put, got {other:?}"),
+        }
+    }
+
+    /// Fork `child` from resident session `parent` (wire v2): the child
+    /// shares the parent's KV chunks server-side, so this costs one
+    /// tiny frame instead of re-sending the whole prefix.
+    pub fn fork(&mut self, parent: &str, child: &str) -> Result<()> {
+        let id = self.alloc_id();
+        frame::write_frame(
+            &mut self.sock,
+            &Frame::Fork { id, parent: parent.to_string(), child: child.to_string() },
+        )?;
+        match read_one(&mut self.sock)? {
+            Frame::Ack { id: rid } if rid == id => Ok(()),
+            Frame::Error { code, transient, detail, .. } => {
+                Err(wire_error(code, transient, &detail))
+            }
+            other => anyhow::bail!("client: expected Ack for fork, got {other:?}"),
         }
     }
 

@@ -37,14 +37,45 @@
 //! `rust/tests/decode_append.rs` and `rust/tests/append_traffic.rs`).
 //! `seq_len` is the maximum a session may grow to; `put()` accepts any
 //! prefill length up to it.
+//!
+//! ## Cross-session prefix sharing (the paged radix cache)
+//!
+//! Chunks are already append-stable and `Arc`-shared *within* a session;
+//! the store exploits that *across* sessions too.  A radix **prefix
+//! index** keys every full (capacity-aligned) chunk by the chain of
+//! content hashes leading to it ([`chain_root`] -> [`chain_link`] over
+//! [`chunk_row_hash`] values), so a `put` whose rounded rows repeat a
+//! resident prefix resolves those chunks to the existing `Arc<KvChunk>`s
+//! *before* any LNS conversion happens — a fleet of S sessions sharing a
+//! P-row prompt stores and converts the prefix once, not S times
+//! (pinned by `rust/tests/prefix_sharing.rs`).  [`KvStore::fork`] goes
+//! further: the child session's chunk table is a copy of the parent's
+//! (every chunk shared, tail included), and the first append to either
+//! branch copy-on-writes only that branch's tail chunk.
+//!
+//! Byte accounting is **refcount-aware**: a registry keyed on chunk
+//! pointer identity charges each unique chunk once fleet-wide
+//! (`used_bytes` is the sum over *unique* resident chunks), admission
+//! credits dedup hits (a fully-shared put or fork admits at near-zero
+//! cost), and eviction releases references — bytes are freed only when
+//! the last resident session referencing a chunk goes, so no eviction
+//! path can free a chunk another resident session still streams.
+//! Deduped and forked sessions serve the exact same chunk objects the
+//! grid already streams, so every output stays bit-identical to solo
+//! serving by construction.
 
-use std::collections::HashMap;
-use crate::sync::{Arc, Mutex};
+use std::collections::{HashMap, HashSet};
+use crate::sync::atomic::Ordering;
+use crate::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{bail, Result};
 
-use crate::attention::prepared::{row_bytes, PreparedKv};
+use crate::attention::prepared::{
+    chain_link, chain_root, chunk_row_hash, row_bytes, KvChunk, PreparedKv, DEFAULT_BLOCK_ROWS,
+};
 use crate::Mat;
+
+use super::metrics::Metrics;
 
 /// One resident session's KV data.  A single `Arc<PreparedKv>` is the
 /// whole state: it owns the raw BF16-rounded matrices (PJRT backends
@@ -78,10 +109,41 @@ struct Slot {
     pins: u32,
 }
 
+/// Fleet-wide registry record of one resident chunk: how many session
+/// tables reference it, its byte charge (charged once however many
+/// sessions share it), and the prefix-index links resolving to it
+/// (removed eagerly when the last reference drops, so the index never
+/// holds a chunk no resident session references).
+struct ChunkRef {
+    bytes: usize,
+    refs: u32,
+    links: Vec<u64>,
+}
+
+/// Registry key: chunk pointer identity.  Valid because a registered
+/// chunk is kept alive by the referencing entries (the `Arc` cannot be
+/// dropped — and its address reused — while its refcount here is
+/// nonzero), and the copy-on-write append path never mutates a chunk
+/// whose `Arc` has other holders in place.
+fn chunk_key(c: &Arc<KvChunk>) -> usize {
+    Arc::as_ptr(c) as usize
+}
+
 struct Inner {
     budget_bytes: usize,
+    /// Bytes of *unique* resident chunks: each chunk charged once
+    /// fleet-wide, however many sessions' tables share it.
     used_bytes: usize,
+    /// Bytes of chunks referenced by two or more resident sessions.
+    shared_bytes: usize,
     entries: HashMap<String, Slot>,
+    /// Refcount registry over every chunk referenced by a resident
+    /// entry, keyed by pointer identity ([`chunk_key`]).
+    chunk_refs: HashMap<usize, ChunkRef>,
+    /// Radix prefix index: hash-chain link ([`chain_root`] +
+    /// [`chain_link`]) of each registered full chunk -> that chunk.
+    /// Values are always registry-live (eager cleanup on last unref).
+    prefix_index: HashMap<u64, Arc<KvChunk>>,
     /// Monotonic access generation counter.
     tick: u64,
     evictions: u64,
@@ -93,23 +155,115 @@ impl Inner {
         self.tick
     }
 
-    /// Make room for `new_bytes` to be charged to `session` (whose
-    /// current charge, if resident, is about to be released): evict
-    /// unpinned LRU victims — never `session` itself — until the budget
-    /// holds, or fail if only pinned sessions remain.  Call *before*
-    /// applying the insert/replace so a rejected write leaves the store
-    /// untouched.
-    fn admit(&mut self, session: &str, new_bytes: usize) -> Result<()> {
-        if new_bytes > self.budget_bytes {
-            bail!(
-                "session {session:?} needs {new_bytes} B, exceeding the whole KV byte budget \
-                 ({} B)",
-                self.budget_bytes
-            );
+    /// Take one reference per chunk of `prepared`, charging bytes only
+    /// for chunks not already resident (the dedup credit).
+    fn ref_chunks(&mut self, prepared: &PreparedKv) {
+        for c in prepared.chunks() {
+            match self.chunk_refs.get_mut(&chunk_key(c)) {
+                Some(cr) => {
+                    cr.refs += 1;
+                    if cr.refs == 2 {
+                        self.shared_bytes += cr.bytes;
+                    }
+                }
+                None => {
+                    let bytes = c.bytes();
+                    self.used_bytes += bytes;
+                    self.chunk_refs
+                        .insert(chunk_key(c), ChunkRef { bytes, refs: 1, links: Vec::new() });
+                }
+            }
         }
+    }
+
+    /// Drop one reference per chunk of `prepared`.  A chunk reaching
+    /// zero references is uncharged and its prefix-index links removed;
+    /// a chunk another resident session still references frees nothing.
+    /// Returns the bytes actually freed.
+    fn unref_chunks(&mut self, prepared: &PreparedKv) -> usize {
+        let mut freed = 0;
+        for c in prepared.chunks() {
+            let key = chunk_key(c);
+            let gone = match self.chunk_refs.get_mut(&key) {
+                Some(cr) => {
+                    cr.refs = cr.refs.saturating_sub(1);
+                    if cr.refs == 1 {
+                        self.shared_bytes -= cr.bytes;
+                    }
+                    cr.refs == 0
+                }
+                None => false,
+            };
+            if gone {
+                if let Some(cr) = self.chunk_refs.remove(&key) {
+                    freed += cr.bytes;
+                    self.used_bytes -= cr.bytes;
+                    for link in cr.links {
+                        if self.prefix_index.get(&link).is_some_and(|ix| Arc::ptr_eq(ix, c)) {
+                            self.prefix_index.remove(&link);
+                        }
+                    }
+                }
+            }
+        }
+        freed
+    }
+
+    /// Byte movement of swapping `session`'s entry (if any) for `next`:
+    /// `(added, freed)`.  `added` counts next's unique chunks that would
+    /// not be resident once the old entry releases — dedup hits and
+    /// fork-shared chunks cost nothing; `freed` counts old chunks no
+    /// *other* session references.  Chunks shared between old and new
+    /// (an append's filled prefix) appear in both terms and cancel.
+    fn swap_delta(&self, session: &str, next: &PreparedKv) -> (usize, usize) {
+        let mut old_counts: HashMap<usize, u32> = HashMap::new();
+        if let Some(slot) = self.entries.get(session) {
+            for c in slot.entry.prepared.chunks() {
+                *old_counts.entry(chunk_key(c)).or_insert(0) += 1;
+            }
+        }
+        let mut freed = 0;
+        for (key, &n) in &old_counts {
+            if let Some(cr) = self.chunk_refs.get(key) {
+                if cr.refs <= n {
+                    freed += cr.bytes;
+                }
+            }
+        }
+        let mut added = 0;
+        let mut seen: HashSet<usize> = HashSet::new();
+        for c in next.chunks() {
+            let key = chunk_key(c);
+            if !seen.insert(key) {
+                continue; // charged once per unique chunk
+            }
+            let refs = self.chunk_refs.get(&key).map(|cr| cr.refs).unwrap_or(0);
+            let surviving = refs.saturating_sub(old_counts.get(&key).copied().unwrap_or(0));
+            if surviving == 0 {
+                added += c.bytes();
+            }
+        }
+        (added, freed)
+    }
+
+    /// Make room to swap `session`'s entry for `next`: evict unpinned
+    /// LRU victims — never `session` itself — until the budget holds the
+    /// refcount-aware delta ([`Inner::swap_delta`]), or fail if only
+    /// pinned sessions remain.  The delta is recomputed after every
+    /// eviction: evicting a victim that shared chunks with `next` grows
+    /// the bytes this install must newly charge.  Call *before* applying
+    /// the swap so a rejected write leaves the store untouched.
+    fn admit_swap(&mut self, session: &str, next: &PreparedKv) -> Result<()> {
         loop {
-            let replaced = self.entries.get(session).map(|s| s.bytes).unwrap_or(0);
-            if self.used_bytes - replaced + new_bytes <= self.budget_bytes {
+            let (added, freed) = self.swap_delta(session, next);
+            if added > self.budget_bytes {
+                bail!(
+                    "session {session:?} needs {added} B, exceeding the whole KV byte budget \
+                     ({} B)",
+                    self.budget_bytes
+                );
+            }
+            if self.used_bytes - freed + added <= self.budget_bytes {
                 return Ok(());
             }
             let victim = self
@@ -124,33 +278,39 @@ impl Inner {
                     // but tolerate a phantom miss instead of panicking
                     // a serve path holding the store lock
                     if let Some(gone) = self.entries.remove(&name) {
-                        self.used_bytes -= gone.bytes;
+                        self.unref_chunks(&gone.entry.prepared);
                         self.evictions += 1;
                     }
                 }
                 None => bail!(
-                    "KV byte budget exhausted admitting {session:?} ({new_bytes} B): \
+                    "KV byte budget exhausted admitting {session:?} ({added} B): \
                      {} of {} B used and every other resident session is pinned",
-                    self.used_bytes - replaced,
+                    self.used_bytes - freed,
                     self.budget_bytes
                 ),
             }
         }
     }
 
-    /// Charge `bytes` to `session`, replacing its entry (pins and any
-    /// prior charge carry over correctly).
-    fn install(&mut self, session: &str, entry: KvEntry, bytes: usize) {
+    /// Swap in `session`'s entry, releasing the old one's chunk
+    /// references and taking the new one's (pins carry over; the byte
+    /// movement is exactly the [`Inner::swap_delta`] the caller
+    /// admitted).
+    fn install(&mut self, session: &str, entry: KvEntry) {
         let stamp = self.next_tick();
+        if let Some(slot) = self.entries.get(session) {
+            let old = Arc::clone(&slot.entry.prepared);
+            self.unref_chunks(&old);
+        }
+        self.ref_chunks(&entry.prepared);
+        let bytes = entry.prepared.resident_bytes();
         match self.entries.get_mut(session) {
             Some(slot) => {
-                self.used_bytes = self.used_bytes - slot.bytes + bytes;
                 slot.entry = entry;
                 slot.bytes = bytes;
                 slot.last_used = stamp;
             }
             None => {
-                self.used_bytes += bytes;
                 self.entries.insert(
                     session.to_string(),
                     Slot { entry, last_used: stamp, bytes, pins: 0 },
@@ -158,14 +318,64 @@ impl Inner {
             }
         }
     }
+
+    /// Resolve a chain of full-chunk content hashes against the prefix
+    /// index.  The chain stops at the first miss — a deeper link can
+    /// only exist if every link before it was registered by the same
+    /// prefix — and the returned vector is padded with `None` to
+    /// `hashes.len()` so it indexes 1:1 with the put's full chunks.
+    fn resolve_prefix(&self, root: u64, hashes: &[u64]) -> Vec<Option<Arc<KvChunk>>> {
+        let mut out = Vec::with_capacity(hashes.len());
+        let mut link = root;
+        for &h in hashes {
+            link = chain_link(link, h);
+            match self.prefix_index.get(&link) {
+                Some(c) => out.push(Some(Arc::clone(c))),
+                None => break,
+            }
+        }
+        out.resize(hashes.len(), None);
+        out
+    }
+
+    /// Register `prepared`'s full prefix chunks under their chain links
+    /// (after install, so every indexed chunk is registry-live).  An
+    /// existing live mapping is kept — the first registration is
+    /// canonical; a racing duplicate build simply goes unindexed and is
+    /// freed with its session.
+    fn index_prefix(&mut self, root: u64, hashes: &[u64], prepared: &PreparedKv) {
+        let mut link = root;
+        for (i, &h) in hashes.iter().enumerate() {
+            link = chain_link(link, h);
+            let c = &prepared.chunks()[i];
+            let occupied = self
+                .prefix_index
+                .get(&link)
+                .is_some_and(|ix| self.chunk_refs.contains_key(&chunk_key(ix)));
+            if !occupied {
+                if let Some(cr) = self.chunk_refs.get_mut(&chunk_key(c)) {
+                    if !cr.links.contains(&link) {
+                        cr.links.push(link);
+                    }
+                    self.prefix_index.insert(link, Arc::clone(c));
+                }
+            }
+        }
+    }
 }
 
-/// Thread-safe KV session store with byte-budget LRU eviction and
-/// in-flight pinning.
+/// Thread-safe KV session store with byte-budget LRU eviction,
+/// in-flight pinning, and cross-session prefix sharing (see the module
+/// docs' radix-cache section).
 pub struct KvStore {
     seq_len: usize,
     head_dim: usize,
     inner: Mutex<Inner>,
+    /// Attached metrics sink ([`KvStore::attach_metrics`]); gauge
+    /// publication is atomics-only, so no lock is ever taken through
+    /// this (the KvStore -> Metrics -> queue lock order of
+    /// `coordinator/protocol.rs` stays un-nested).
+    metrics: OnceLock<Arc<Metrics>>,
 }
 
 impl KvStore {
@@ -186,10 +396,42 @@ impl KvStore {
             inner: Mutex::new(Inner {
                 budget_bytes: budget_bytes.max(1),
                 used_bytes: 0,
+                shared_bytes: 0,
                 entries: HashMap::new(),
+                chunk_refs: HashMap::new(),
+                prefix_index: HashMap::new(),
                 tick: 0,
                 evictions: 0,
             }),
+            metrics: OnceLock::new(),
+        }
+    }
+
+    /// Attach a metrics sink: the store publishes its byte/sharing
+    /// gauges (`kv_resident_bytes`, `kv_shared_bytes`,
+    /// `kv_resident_sessions`) and the `kv_dedup_hits` counter after
+    /// every state change.  Publication is atomics-only — no Metrics
+    /// lock is taken, even with the store lock held.  Counting happens
+    /// only after a successful admit+install, so a put or fork that
+    /// fails admission leaves every figure untouched (the rollback
+    /// discipline of `batched_sessions`: a rejected operation never
+    /// shows in the snapshot).  Idempotent; the first attach wins.
+    pub fn attach_metrics(&self, metrics: Arc<Metrics>) {
+        let _ = self.metrics.set(metrics);
+    }
+
+    /// Publish the store's gauges into the attached [`Metrics`] sink.
+    /// Call with the `Inner` guard still held so the published figures
+    /// are a consistent cut of store state.
+    fn publish(&self, g: &Inner, dedup_hits: u64) {
+        let Some(m) = self.metrics.get() else { return };
+        // ordering: Relaxed — telemetry gauges/counters only; snapshot
+        // readers do not synchronize store state through them.
+        m.kv_resident_bytes.store(g.used_bytes as u64, Ordering::Relaxed);
+        m.kv_shared_bytes.store(g.shared_bytes as u64, Ordering::Relaxed);
+        m.kv_resident_sessions.store(g.entries.len() as u64, Ordering::Relaxed);
+        if dedup_hits > 0 {
+            m.kv_dedup_hits.fetch_add(dedup_hits, Ordering::Relaxed);
         }
     }
 
@@ -214,6 +456,13 @@ impl KvStore {
     /// preparation happen *outside* the lock.  Fails (without touching
     /// the store) when the session cannot fit inside the byte budget
     /// after evicting every unpinned resident session.
+    ///
+    /// Full (capacity-aligned) prefix chunks of the rounded rows are
+    /// first resolved against the radix prefix index: a hit installs
+    /// the already-resident `Arc<KvChunk>` verbatim — no copy, no LNS
+    /// conversion, near-zero byte charge — so both `value_to_lns` work
+    /// and `used_bytes` scale with *unique* rows fleet-wide, not
+    /// sessions x rows (pinned by `rust/tests/prefix_sharing.rs`).
     pub fn put(&self, session: &str, k: Mat, v: Mat) -> Result<()> {
         if !(1..=self.seq_len).contains(&k.rows) || k.cols != self.head_dim {
             bail!(
@@ -224,11 +473,76 @@ impl KvStore {
         if v.rows != k.rows || v.cols != k.cols {
             bail!("V shape mismatch");
         }
-        let entry = KvEntry::new(k.round_bf16(), v.round_bf16());
-        let bytes = entry.prepared.resident_bytes();
+        let k = k.round_bf16();
+        let v = v.round_bf16();
+        // hash the full prefix chunks of the *rounded* rows (chunk
+        // planes hold exactly these bits, so equal hash input means a
+        // reused chunk is bit-for-bit what a fresh build would write),
+        // then resolve them under a brief lock before building anything
+        let block_rows = DEFAULT_BLOCK_ROWS;
+        let root = chain_root(k.cols, v.cols, block_rows);
+        let hashes: Vec<u64> = (0..k.rows / block_rows)
+            .map(|c| chunk_row_hash(&k, &v, c * block_rows, (c + 1) * block_rows))
+            .collect();
+        let hits = if hashes.is_empty() {
+            Vec::new()
+        } else {
+            self.inner.lock().resolve_prefix(root, &hashes)
+        };
+        let dedup_hits = hits.iter().flatten().count() as u64;
+        // build outside the lock: only missed chunks and the ragged
+        // tail convert and copy (two sessions racing the same new
+        // prefix may both build it — benign: one registration wins the
+        // index and the loser's copy is freed with its session)
+        let prepared = PreparedKv::with_shared_chunks(&k, &v, block_rows, |c, _| {
+            hits.get(c).cloned().flatten()
+        });
+        let entry = KvEntry { prepared: Arc::new(prepared) };
+        let installed = Arc::clone(&entry.prepared);
         let mut g = self.inner.lock();
-        g.admit(session, bytes)?;
-        g.install(session, entry, bytes);
+        g.admit_swap(session, &entry.prepared)?;
+        g.install(session, entry);
+        g.index_prefix(root, &hashes, &installed);
+        self.publish(&g, dedup_hits);
+        Ok(())
+    }
+
+    /// Fork `parent` into a new resident session `child` whose chunk
+    /// table copy-on-writes from the shared ancestor: the child
+    /// references the exact same `Arc<KvChunk>`s (tail included), so it
+    /// admits at zero added bytes, converts nothing, and serves
+    /// bit-identical outputs — beam/parallel sampling over a common
+    /// prefix is free until the branches diverge.  The first append to
+    /// either branch copies only that branch's tail chunk
+    /// ([`PreparedKv::append`]'s copy-on-write), charging only the
+    /// delta bytes.  Fails when `parent` is not resident or `child`
+    /// already is (forking over a live session would silently drop its
+    /// state).  Counts as a use of `parent` (LRU refresh).
+    pub fn fork(&self, parent: &str, child: &str) -> Result<()> {
+        if parent.is_empty() || child.is_empty() {
+            bail!("fork: empty session name");
+        }
+        if parent == child {
+            bail!("fork: parent and child must be distinct sessions");
+        }
+        let mut g = self.inner.lock();
+        let stamp = g.next_tick();
+        let base = match g.entries.get_mut(parent) {
+            Some(slot) => {
+                slot.last_used = stamp;
+                Arc::clone(&slot.entry.prepared)
+            }
+            None => bail!("fork: unknown parent session {parent:?}"),
+        };
+        if g.entries.contains_key(child) {
+            bail!("fork: session {child:?} is already resident");
+        }
+        let shared = base.chunks().len() as u64;
+        // a table copy, not a plane copy: one Arc pointer per chunk
+        let entry = KvEntry { prepared: Arc::new((*base).clone()) };
+        g.admit_swap(child, &entry.prepared)?;
+        g.install(child, entry);
+        self.publish(&g, shared);
         Ok(())
     }
 
@@ -248,6 +562,15 @@ impl KvStore {
     /// behind a decode session); the swap-in re-checks by `Arc` identity
     /// that the session was not concurrently replaced and retries
     /// against the new base if it was.
+    ///
+    /// When the session's tail chunk is shared — a forked branch, or a
+    /// sibling that deduped the same full prefix — exactly that chunk is
+    /// copied on write, and the refcount-aware swap charges only the
+    /// delta bytes: the shared prefix stays charged once fleet-wide,
+    /// the branch's new private tail is charged to this session, and
+    /// the ancestor's tail stays charged as long as any other session
+    /// references it (`kv_copy_bytes` counts the CoW'd tail plus the
+    /// appended rows, pinned by `rust/tests/append_traffic.rs`).
     pub fn append(&self, session: &str, k_rows: Mat, v_rows: Mat) -> Result<()> {
         if k_rows.cols != self.head_dim || v_rows.cols != self.head_dim {
             bail!(
@@ -282,7 +605,6 @@ impl KvStore {
             }
             // rebuild outside the lock
             let next = Arc::new(base.appended(&kb, &vb));
-            let bytes = next.resident_bytes();
             // swap in, unless the session was replaced meanwhile (a
             // concurrent put/append won the race) — then retry on the
             // new base so no write is ever silently dropped
@@ -292,8 +614,9 @@ impl KvStore {
                 Some(_) => continue,
                 None => bail!("unknown session {session:?}"),
             }
-            g.admit(session, bytes)?;
-            g.install(session, KvEntry { prepared: next }, bytes);
+            g.admit_swap(session, &next)?;
+            g.install(session, KvEntry { prepared: next });
+            self.publish(&g, 0);
             return Ok(());
         }
     }
@@ -340,13 +663,18 @@ impl KvStore {
     /// before the cancelled requests are failed, their stale unpins can
     /// release the fresh slot's pins early — callers cancelling with
     /// eviction should treat the session name as dead.)  Returns the
-    /// freed bytes, or `None` when the session was not resident.
+    /// bytes actually freed, or `None` when the session was not
+    /// resident.  Freed means *uniquely held*: chunks another resident
+    /// session still references (a forked branch, a deduped sibling)
+    /// stay charged and alive — evicting a fork parent frees only its
+    /// unshared bytes.
     pub fn evict(&self, session: &str) -> Option<usize> {
         let mut g = self.inner.lock();
         let slot = g.entries.remove(session)?;
-        g.used_bytes -= slot.bytes;
+        let freed = g.unref_chunks(&slot.entry.prepared);
         g.evictions += 1;
-        Some(slot.bytes)
+        self.publish(&g, 0);
+        Some(freed)
     }
 
     /// Is the session resident?  (No LRU refresh — diagnostics only.)
@@ -354,7 +682,10 @@ impl KvStore {
         self.inner.lock().entries.contains_key(session)
     }
 
-    /// Byte charge of one resident session (diagnostics only).
+    /// Bytes of prepared planes one resident session *references*
+    /// (diagnostics only).  Under sharing this can exceed the session's
+    /// marginal charge: a chunk referenced by many sessions shows in
+    /// each of their footprints but in [`KvStore::used_bytes`] once.
     pub fn session_resident_bytes(&self, session: &str) -> Option<usize> {
         self.inner.lock().entries.get(session).map(|s| s.bytes)
     }
@@ -377,9 +708,32 @@ impl KvStore {
         self.inner.lock().entries.values().filter(|s| s.pins > 0).count()
     }
 
-    /// Total byte charge of all resident sessions.
+    /// Total byte charge of all resident sessions — the sum over
+    /// **unique** resident chunks, each charged once however many
+    /// sessions share it.
     pub fn used_bytes(&self) -> usize {
         self.inner.lock().used_bytes
+    }
+
+    /// Bytes of chunks currently referenced by two or more resident
+    /// sessions (the fleet's dedup/fork savings are
+    /// `sum(session_resident_bytes) - used_bytes`; this gauge is the
+    /// shared portion counted once).
+    pub fn shared_bytes(&self) -> usize {
+        self.inner.lock().shared_bytes
+    }
+
+    /// Unique chunks in the refcount registry (diagnostics: returns to
+    /// 0 when the store drains; a leak here means an unref was missed).
+    pub fn registered_chunks(&self) -> usize {
+        self.inner.lock().chunk_refs.len()
+    }
+
+    /// Live entries in the radix prefix index (diagnostics; always
+    /// bounded by registered full chunks — entries are removed eagerly
+    /// when their chunk's last reference drops).
+    pub fn indexed_prefixes(&self) -> usize {
+        self.inner.lock().prefix_index.len()
     }
 
     /// The eviction budget, in prepared-plane bytes.
@@ -702,5 +1056,145 @@ mod tests {
         let hits: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
         assert!(hits > 0, "at least some gets must land on resident sessions");
         assert!(store.resident() <= 3, "resident {} sessions exceed budget", store.resident());
+    }
+
+    // -- prefix sharing / fork ------------------------------------------
+    // (exact conversion/copy-counter equations live in
+    // `rust/tests/prefix_sharing.rs` and `rust/tests/append_traffic.rs`,
+    // whose binaries own the process-wide counters)
+
+    fn prefix_val(r: usize, c: usize) -> f32 {
+        ((r * 4 + c) % 97) as f32 * 0.0625 - 3.0
+    }
+
+    /// 520 rows = two full DEFAULT_BLOCK_ROWS chunks + an 8-row tail;
+    /// the prefix is shared, the tail is `fill`-specific.
+    fn prefixed_kv(fill: f32) -> (Mat, Mat) {
+        (
+            Mat::from_fn(520, 4, |r, c| if r < 512 { prefix_val(r, c) } else { fill }),
+            Mat::from_fn(520, 4, |r, c| if r < 512 { -prefix_val(r, c) } else { -fill }),
+        )
+    }
+
+    #[test]
+    fn put_dedups_shared_full_prefix_chunks() {
+        let store = KvStore::new(600, 4, 4);
+        let rb = row_bytes(4, 4);
+        let (k1, v1) = prefixed_kv(1.0);
+        store.put("s1", k1, v1).unwrap();
+        assert_eq!(store.used_bytes(), 520 * rb);
+        assert_eq!(store.shared_bytes(), 0);
+        assert_eq!(store.indexed_prefixes(), 2, "both full chunks registered");
+        let (k2, v2) = prefixed_kv(2.0);
+        store.put("s2", k2, v2).unwrap();
+        // the 512-row prefix (two full chunks) is stored once; only the
+        // 8-row tails are per-session
+        assert_eq!(store.used_bytes(), 520 * rb + 8 * rb);
+        assert_eq!(store.shared_bytes(), 512 * rb);
+        assert_eq!(store.session_resident_bytes("s2"), Some(520 * rb));
+        let a = store.get("s1").unwrap();
+        let b = store.get("s2").unwrap();
+        assert!(Arc::ptr_eq(&a.prepared().chunks()[0], &b.prepared().chunks()[0]));
+        assert!(Arc::ptr_eq(&a.prepared().chunks()[1], &b.prepared().chunks()[1]));
+        assert!(!Arc::ptr_eq(&a.prepared().chunks()[2], &b.prepared().chunks()[2]));
+        // reads resolve through the shared chunks bit-for-bit
+        assert_eq!(b.prepared().k_row(100), a.prepared().k_row(100));
+        assert_eq!(b.prepared().k_row(515)[3], 2.0);
+        // evicting one sibling frees only its tail; the last one frees
+        // the prefix too, and the index entries die with their chunks
+        assert_eq!(store.evict("s1"), Some(8 * rb));
+        assert_eq!(store.used_bytes(), 520 * rb);
+        assert_eq!(store.shared_bytes(), 0);
+        assert_eq!(store.evict("s2"), Some(520 * rb));
+        assert_eq!(store.used_bytes(), 0);
+        assert_eq!(store.registered_chunks(), 0);
+        assert_eq!(store.indexed_prefixes(), 0);
+    }
+
+    #[test]
+    fn prefix_chain_stops_at_first_divergence() {
+        // radix semantics: a chunk resolves only when the entire prefix
+        // before it matched — equal content behind a divergent first
+        // chunk must NOT alias
+        let store = KvStore::new(600, 4, 4);
+        let rb = row_bytes(4, 4);
+        let (k1, v1) = prefixed_kv(1.0);
+        store.put("s1", k1, v1).unwrap();
+        let (mut k3, v3) = prefixed_kv(3.0);
+        for i in 0..256 * 4 {
+            k3.data[i] = 7.0; // divergent first chunk, identical second
+        }
+        store.put("s3", k3, v3).unwrap();
+        assert_eq!(store.used_bytes(), 520 * rb + 520 * rb, "no cross-prefix aliasing");
+        let a = store.get("s1").unwrap();
+        let b = store.get("s3").unwrap();
+        assert!(!Arc::ptr_eq(&a.prepared().chunks()[1], &b.prepared().chunks()[1]));
+    }
+
+    #[test]
+    fn fork_shares_every_chunk_and_cow_append_diverges() {
+        let store = KvStore::new(16, 4, 4);
+        let rb = row_bytes(4, 4);
+        let (k, v) = kv(10, 4, 1.0);
+        store.put("parent", k, v).unwrap();
+        store.fork("parent", "child").unwrap();
+        assert_eq!(store.resident(), 2);
+        assert_eq!(store.used_bytes(), 10 * rb, "a pure fork adds zero bytes");
+        assert_eq!(store.shared_bytes(), 10 * rb);
+        let p = store.get("parent").unwrap();
+        let c = store.get("child").unwrap();
+        assert!(Arc::ptr_eq(&p.prepared().chunks()[0], &c.prepared().chunks()[0]));
+        assert_eq!(p.prepared().k_mat().data, c.prepared().k_mat().data);
+        // the child's first append copy-on-writes exactly the shared
+        // tail and charges only the child's new private chunk
+        let (k1, v1) = kv(1, 4, 2.0);
+        store.append("child", k1, v1).unwrap();
+        assert_eq!(store.used_bytes(), 10 * rb + 11 * rb);
+        assert_eq!(store.shared_bytes(), 0);
+        assert_eq!(store.get("parent").unwrap().prepared().n(), 10, "parent untouched");
+        assert_eq!(store.get("child").unwrap().prepared().n(), 11);
+        // evicting the parent frees only its now-unshared chunk
+        assert_eq!(store.evict("parent"), Some(10 * rb));
+        assert_eq!(store.used_bytes(), 11 * rb);
+        assert_eq!(store.registered_chunks(), 1);
+    }
+
+    #[test]
+    fn fork_error_paths_and_zero_cost_admission() {
+        let store = KvStore::new(8, 4, 2);
+        let (k, v) = kv(4, 4, 1.0);
+        store.put("p", k.clone(), v.clone()).unwrap();
+        assert!(store.fork("missing", "c").is_err(), "unknown parent");
+        assert!(store.fork("p", "p").is_err(), "self fork");
+        assert!(store.fork("p", "").is_err(), "empty child");
+        store.put("other", k, v).unwrap();
+        assert!(store.fork("p", "other").is_err(), "child already resident");
+        assert_eq!(store.resident(), 2, "failed forks leave the store untouched");
+        store.fork("p", "c").unwrap();
+        store.fork("c", "grandchild").unwrap();
+        assert_eq!(store.resident(), 4);
+        // forks admit at zero added bytes: nothing was evicted even
+        // though four sessions now share a two-full-session budget
+        assert_eq!(store.evictions(), 0);
+        assert_eq!(store.used_bytes(), 8 * row_bytes(4, 4));
+    }
+
+    #[test]
+    fn attached_metrics_track_sharing_gauges() {
+        let store = KvStore::new(16, 4, 4);
+        let rb = row_bytes(4, 4);
+        let m = Arc::new(Metrics::new());
+        store.attach_metrics(Arc::clone(&m));
+        let (k, v) = kv(10, 4, 1.0);
+        store.put("p", k, v).unwrap();
+        store.fork("p", "c").unwrap();
+        let snap = m.snapshot();
+        assert_eq!(snap.kv_shared_bytes, (10 * rb) as u64);
+        assert_eq!(snap.kv_dedup_hits, 1, "the fork shared one chunk");
+        assert_eq!(snap.kv_mean_session_bytes, (10 * rb / 2) as u64);
+        store.evict("c");
+        let snap = m.snapshot();
+        assert_eq!(snap.kv_shared_bytes, 0);
+        assert_eq!(snap.kv_mean_session_bytes, (10 * rb) as u64);
     }
 }

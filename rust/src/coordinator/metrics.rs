@@ -137,6 +137,20 @@ pub struct Metrics {
     pub slow_consumer_shed: AtomicU64,
     /// Sessions whose KV was evicted by cancellation or drain teardown.
     pub sessions_evicted: AtomicU64,
+    /// KV bytes resident fleet-wide (gauge; each unique chunk charged
+    /// once no matter how many sessions reference it).
+    pub kv_resident_bytes: AtomicU64,
+    /// KV bytes referenced by two or more resident sessions (gauge; the
+    /// portion of `kv_resident_bytes` the prefix cache deduplicated).
+    pub kv_shared_bytes: AtomicU64,
+    /// Sessions currently resident in the KV store (gauge).
+    pub kv_resident_sessions: AtomicU64,
+    /// Full prefix chunks resolved to an already-resident `Arc<KvChunk>`
+    /// at put/fork instead of being rebuilt + LNS-converted.  Counted
+    /// only after the session is admitted and installed, so a failed
+    /// admission contributes nothing (same discipline as
+    /// `batched_sessions`).
+    pub kv_dedup_hits: AtomicU64,
     latencies_us: Mutex<Reservoir>,
     /// Ingress -> dispatch span (time queued in the batcher, the waiting
     /// queue, or a resident slot before a worker picked the request up).
@@ -198,6 +212,14 @@ pub struct Snapshot {
     pub stream_tokens: u64,
     pub slow_consumer_shed: u64,
     pub sessions_evicted: u64,
+    pub kv_resident_bytes: u64,
+    pub kv_shared_bytes: u64,
+    pub kv_resident_sessions: u64,
+    pub kv_dedup_hits: u64,
+    /// Mean resident KV bytes charged per resident session — with
+    /// prefix sharing this drops below a solo session's footprint,
+    /// which is the sessions-per-box lever the radix cache exists for.
+    pub kv_mean_session_bytes: u64,
     pub first_token_p50_us: f64,
     pub first_token_p99_us: f64,
     pub inter_token_p50_us: f64,
@@ -247,6 +269,10 @@ impl Metrics {
             stream_tokens: z(0),
             slow_consumer_shed: z(0),
             sessions_evicted: z(0),
+            kv_resident_bytes: z(0),
+            kv_shared_bytes: z(0),
+            kv_resident_sessions: z(0),
+            kv_dedup_hits: z(0),
             latencies_us: Mutex::new(Reservoir::default()),
             queue_wait_us: Mutex::new(Reservoir::default()),
             prefill_us: Mutex::new(Reservoir::default()),
@@ -404,6 +430,12 @@ impl Metrics {
             stream_tokens: ld(&self.stream_tokens),
             slow_consumer_shed: ld(&self.slow_consumer_shed),
             sessions_evicted: ld(&self.sessions_evicted),
+            kv_resident_bytes: ld(&self.kv_resident_bytes),
+            kv_shared_bytes: ld(&self.kv_shared_bytes),
+            kv_resident_sessions: ld(&self.kv_resident_sessions),
+            kv_dedup_hits: ld(&self.kv_dedup_hits),
+            kv_mean_session_bytes: ld(&self.kv_resident_bytes)
+                / ld(&self.kv_resident_sessions).max(1),
             first_token_p50_us: rank(&first_token, 0.5),
             first_token_p99_us: rank(&first_token, 0.99),
             inter_token_p50_us: rank(&inter_token, 0.5),
@@ -533,6 +565,25 @@ mod tests {
         // the streaming spans never leak into the end-to-end reservoir
         assert_eq!(m.latency_samples(), 0);
         assert_eq!(s.p50_us, 0.0);
+    }
+
+    #[test]
+    fn kv_sharing_gauges_summarize_in_snapshot() {
+        let m = Metrics::new();
+        // ordering: Relaxed — statistical counters, test-side writes
+        m.kv_resident_bytes.store(9_000, Ordering::Relaxed);
+        m.kv_shared_bytes.store(6_000, Ordering::Relaxed);
+        m.kv_resident_sessions.store(3, Ordering::Relaxed);
+        m.kv_dedup_hits.fetch_add(5, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.kv_resident_bytes, 9_000);
+        assert_eq!(s.kv_shared_bytes, 6_000);
+        assert_eq!(s.kv_resident_sessions, 3);
+        assert_eq!(s.kv_dedup_hits, 5);
+        assert_eq!(s.kv_mean_session_bytes, 3_000);
+        // empty fleet: mean guards the zero-session divide
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.kv_mean_session_bytes, 0);
     }
 
     #[test]

@@ -49,6 +49,15 @@
 //! next iteration boundary and `KvStore::evict` frees the bytes
 //! immediately (in-flight computes hold `Arc` snapshots).
 //!
+//! **Prefix sharing changes none of this.**  A pin (or a slot) covers
+//! one *session*; the chunks under it may be shared with siblings or
+//! forked children, but chunk lifetime is the store's refcount
+//! registry's problem — evicting a pinned-out cold parent frees only
+//! bytes no other resident session references, and a forked child
+//! enters the slot table exactly like any other session the first time
+//! a request routes to it (`Server::fork` touches only the KV store;
+//! there is no scheduler-side fork state to reconcile).
+//!
 //! **Deadlines.**  Queued requests can sit past their deadline while
 //! parked — a waiting group deferred by the total-token budget against a
 //! persistently busy running batch never reaches a dispatch-side shed

@@ -227,6 +227,10 @@ impl Server {
         anyhow::ensure!(!factories.is_empty(), "need at least one backend");
         let head_dim = kv.head_dim();
         let metrics = Arc::new(Metrics::new());
+        // KV residency/sharing gauges publish through the same sink the
+        // serving loop reports into (first server wins if the store is
+        // ever shared across instances)
+        kv.attach_metrics(metrics.clone());
         let (in_tx, in_rx) = sync_channel::<Msg>(cfg.queue_depth);
         let queue = Arc::new(BatchQueue::new(cfg.queue_depth, factories.len()));
         let ctx = Arc::new(ServeCtx {
@@ -507,6 +511,24 @@ impl Server {
         let deadline = t0 + self.request_timeout;
         let (id, rx) = self.enqueue(session, Payload::Append { k_rows, v_rows }, deadline)?;
         Ok(await_response(id, &rx, deadline, t0, self.delivery_grace))
+    }
+
+    /// Fork `child` from resident session `parent`: the child becomes a
+    /// resident session whose chunk table aliases every parent chunk
+    /// (zero bytes copied, zero rows re-converted), diverging lazily via
+    /// the chunk-level copy-on-write that `append` already performs on
+    /// shared tails — beam/parallel sampling for the price of a chunk
+    /// table clone.  The fork is a direct store operation (no queue
+    /// round-trip, same as `KvStore::put` from the ingress): it needs no
+    /// backend work and must be visible to a submit racing in right
+    /// after.  Refuses while draining, mirroring the admission gate.
+    pub fn fork(&self, parent: &str, child: &str) -> Result<()> {
+        // ordering: Relaxed — advisory drain flag, same as enqueue's gate
+        anyhow::ensure!(
+            !self.ctx.draining.load(Ordering::Relaxed),
+            "server is draining"
+        );
+        self.kv.fork(parent, child)
     }
 
     /// The configured delivery grace (`response_grace_us`): the streaming

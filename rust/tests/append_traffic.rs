@@ -120,4 +120,31 @@ fn append_copy_traffic_tracks_appended_rows_not_resident() {
     let expect: u64 = (9..9 + steps).map(|t| (t + 1) * rb).sum();
     assert_eq!(total, expect, "decode-loop traffic = sum of (tail + appended) rows");
     assert_eq!(long_store.get("s").unwrap().prepared().n(), 533);
+
+    // --- fork + shared-tail CoW: exact accounting under sharing -----------
+    // "s" is 533 rows = 2 full chunks + a 21-row tail; forking moves no
+    // row data, and the child's first append CoWs exactly the shared
+    // tail (21 rows) plus the new row — the full prefix chunks stay
+    // aliased, so the byte-budget charge is the child's delta only
+    let before = kv_copy_bytes();
+    long_store.fork("s", "f").unwrap();
+    assert_eq!(kv_copy_bytes() - before, 0, "fork copies no rows");
+    assert_eq!(long_store.shared_bytes(), 533 * rb as usize, "every chunk aliased");
+    let (k1, v1) = rand_kv(&mut rng, 1, D);
+    let before = kv_copy_bytes();
+    let used_before = long_store.used_bytes();
+    long_store.append("f", k1, v1).unwrap();
+    assert_eq!(
+        kv_copy_bytes() - before,
+        21 * rb + rb,
+        "forked append copies the 21-row shared tail + 1 new row"
+    );
+    assert_eq!(
+        long_store.used_bytes() - used_before,
+        22 * rb as usize,
+        "only the child's diverged tail chunk is newly charged"
+    );
+    assert_eq!(long_store.get("s").unwrap().prepared().n(), 533, "parent untouched");
+    assert_eq!(long_store.get("f").unwrap().prepared().n(), 534);
+    assert_eq!(long_store.shared_bytes(), 512 * rb as usize, "full prefix still aliased");
 }

@@ -1,0 +1,179 @@
+//! Cross-session KV prefix sharing, end to end: S sessions sharing a
+//! P-row prefix store each full prefix chunk exactly once (exact
+//! `used_bytes` equation), LNS conversion cost is proportional to
+//! *unique* rows rather than S×P, forked and dedup-admitted sessions
+//! decode bitwise-identically to independently-put sessions across a
+//! join/leave/evict soak, and no eviction ever frees a chunk another
+//! resident session still references.
+//!
+//! Kept as the sole test in this binary: the conversion and copy
+//! counters are process-wide, so concurrent unrelated tests would break
+//! the exact equations.
+
+use std::sync::Arc;
+
+use hfa::attention::hfa::value_conversion_count;
+use hfa::attention::prepared::row_bytes;
+use hfa::config::{AcceleratorConfig, CoordinatorConfig};
+use hfa::coordinator::{KvStore, Server, SimBackend};
+use hfa::hw::Arith;
+use hfa::proptest::Rng;
+use hfa::Mat;
+
+const D: usize = 8;
+/// Two full DEFAULT_BLOCK_ROWS (256) chunks.
+const PREFIX: usize = 512;
+/// Per-session private suffix rows at put time.
+const TAIL: usize = 8;
+const ROWS: usize = PREFIX + TAIL;
+const STEPS: usize = 4;
+const SEQ: usize = 600;
+const SESSIONS: usize = 5;
+const KV_BLOCKS: usize = 4;
+
+fn accel_cfg() -> AcceleratorConfig {
+    AcceleratorConfig {
+        head_dim: D,
+        seq_len: SEQ,
+        kv_blocks: KV_BLOCKS,
+        parallel_queries: 1,
+        freq_mhz: 500.0,
+    }
+}
+
+/// Golden single-session result over the session's exact KV prefix.
+fn golden(q: &[f32], k: &Mat, v: &Mat, rows: usize) -> Vec<f32> {
+    hfa::attention::hfa::attention_blocked(
+        &Mat::from_vec(1, D, q.to_vec()).round_bf16(),
+        &k.rows_slice(0, rows).round_bf16(),
+        &v.rows_slice(0, rows).round_bf16(),
+        KV_BLOCKS,
+        None,
+        &mut None,
+    )
+    .row(0)
+    .to_vec()
+}
+
+/// A session's full K or V trajectory: `PREFIX` rows shared by every
+/// session, then `TAIL + STEPS` rows drawn per-session.
+fn session_mat(prefix: &Mat, rng: &mut Rng) -> Mat {
+    let n = ROWS + STEPS;
+    let mut m = Mat::zeros(n, D);
+    m.data[..PREFIX * D].copy_from_slice(&prefix.data);
+    let suffix = rng.normal_vec((TAIL + STEPS) * D);
+    m.data[PREFIX * D..].copy_from_slice(&suffix);
+    m
+}
+
+#[test]
+fn prefix_sharing_stores_once_and_decodes_bit_identically() {
+    // deterministic pool shape for the process-wide counters (same
+    // rationale as tests/append_traffic.rs)
+    std::env::set_var("HFA_POOL_THREADS", "1");
+    let rb = row_bytes(D, D);
+    let mut rng = Rng::new(20_260_808);
+    let kp = Mat::from_vec(PREFIX, D, rng.normal_vec(PREFIX * D));
+    let vp = Mat::from_vec(PREFIX, D, rng.normal_vec(PREFIX * D));
+    let mats: Vec<(Mat, Mat)> =
+        (0..SESSIONS).map(|_| (session_mat(&kp, &mut rng), session_mat(&vp, &mut rng))).collect();
+
+    // --- (a) S puts of a shared P-row prefix: stored once, converted once --
+    let kv = Arc::new(KvStore::new(SEQ, D, SESSIONS + 2));
+    let conv0 = value_conversion_count();
+    for (s, (k, v)) in mats.iter().enumerate() {
+        kv.put(&format!("sess-{s}"), k.rows_slice(0, ROWS), v.rows_slice(0, ROWS)).unwrap();
+    }
+    assert_eq!(
+        value_conversion_count() - conv0,
+        (ROWS + (SESSIONS - 1) * TAIL) as u64,
+        "LNS conversion must be proportional to unique rows, not S x P"
+    );
+    assert_eq!(
+        kv.used_bytes(),
+        ROWS * rb + (SESSIONS - 1) * TAIL * rb,
+        "the prefix chunks are charged exactly once fleet-wide"
+    );
+    assert_eq!(kv.shared_bytes(), PREFIX * rb);
+    for s in 0..SESSIONS {
+        assert_eq!(kv.session_resident_bytes(&format!("sess-{s}")), Some(ROWS * rb));
+    }
+
+    // --- (b) fork + dedup decode soak: bitwise-equal to independent puts --
+    // "beam" forks from sess-0; "indep" re-puts sess-0's exact prefill
+    // (its full chunks dedup to the same Arcs).  Both then run the same
+    // decode trajectory as sess-0 would and must match the golden model
+    // (and each other) bit for bit, while unrelated sessions join and
+    // leave around them.
+    let coord = CoordinatorConfig {
+        max_batch: 8,
+        max_total_batch: 64,
+        batch_window_us: 3_000,
+        workers: 2,
+        queue_depth: 64,
+        ..CoordinatorConfig::default()
+    };
+    let factories =
+        (0..coord.workers).map(|_| SimBackend::factory(Arith::Hfa, accel_cfg())).collect();
+    let srv = Server::start(&coord, kv.clone(), factories).unwrap();
+    srv.fork("sess-0", "beam").unwrap();
+    let (k0, v0) = &mats[0];
+    let conv0 = value_conversion_count();
+    kv.put("indep", k0.rows_slice(0, ROWS), v0.rows_slice(0, ROWS)).unwrap();
+    assert_eq!(
+        value_conversion_count() - conv0,
+        TAIL as u64,
+        "a dedup-admitted put re-converts only its non-full tail"
+    );
+    for step in 0..STEPS {
+        let at = ROWS + step;
+        for who in ["beam", "indep"] {
+            let r = srv
+                .append(who, k0.rows_slice(at, at + 1), v0.rows_slice(at, at + 1))
+                .unwrap();
+            assert!(r.ok(), "step {step} {who} append: {:?}", r.output);
+        }
+        let q = rng.normal_vec(D);
+        let beam = srv.call("beam", q.clone()).unwrap().output.unwrap();
+        let indep = srv.call("indep", q.clone()).unwrap().output.unwrap();
+        assert_eq!(beam, indep, "step {step}: forked vs independently-put decode diverged");
+        assert_eq!(beam, golden(&q, k0, v0, at + 1), "step {step}: diverged from golden");
+        // churn: a sibling leaves (freeing only its private tail — the
+        // prefix is still referenced by everyone else) and rejoins via
+        // the dedup path
+        let churn = format!("sess-{}", 1 + (step % (SESSIONS - 1)));
+        let used = kv.used_bytes();
+        srv.cancel(&churn, true);
+        assert_eq!(used - kv.used_bytes(), TAIL * rb, "churn evict freed a shared chunk");
+        let s = 1 + (step % (SESSIONS - 1));
+        let (ks, vs) = &mats[s];
+        kv.put(&churn, ks.rows_slice(0, ROWS), vs.rows_slice(0, ROWS)).unwrap();
+        assert_eq!(kv.used_bytes(), used, "rejoin via dedup restored the exact accounting");
+    }
+
+    // --- (c) evicting the parent frees only its unshared bytes ------------
+    // sess-0's prefix chunks are shared with every session; its 8-row
+    // put-time tail was CoW-diverged by beam's first append, so evicting
+    // it frees exactly that private tail chunk.
+    let before = kv.used_bytes();
+    assert_eq!(kv.evict("sess-0"), Some(TAIL * rb), "parent eviction freed shared bytes");
+    assert_eq!(before - kv.used_bytes(), TAIL * rb);
+    // the orphaned child still serves, still bit-identical
+    let q = rng.normal_vec(D);
+    let beam = srv.call("beam", q.clone()).unwrap().output.unwrap();
+    assert_eq!(beam, golden(&q, k0, v0, ROWS + STEPS), "child diverged after parent eviction");
+
+    // drain: no pin leaks, and tearing every session down returns the
+    // registry to empty (nothing freed early, nothing leaked)
+    assert_eq!(kv.pinned_sessions(), 0, "drained serving must hold no pins");
+    srv.shutdown();
+    assert_eq!(kv.pinned_sessions(), 0, "shutdown must not re-pin anything");
+    for s in (0..SESSIONS).map(|s| format!("sess-{s}")).chain(["beam".into(), "indep".into()]) {
+        kv.evict(&s);
+    }
+    assert_eq!(kv.resident(), 0);
+    assert_eq!(kv.used_bytes(), 0);
+    assert_eq!(kv.shared_bytes(), 0);
+    assert_eq!(kv.registered_chunks(), 0, "eviction leaked or double-freed chunks");
+    assert_eq!(kv.indexed_prefixes(), 0, "prefix index entries must die with their chunks");
+}

@@ -549,6 +549,39 @@ mod tests {
     }
 
     #[test]
+    fn prefix_sharing_layer_is_covered_by_coordinator_rules() {
+        // the prefix-index + refcount registry lives *inside* the
+        // KvStore inner mutex (no second lock to order), so the store
+        // keeps rank 0: taking it while a Metrics guard is live must
+        // flag, and the publish path must therefore stay atomics-only
+        let rel = "src/coordinator/kvstore.rs";
+        assert_eq!(
+            lint_src(
+                rel,
+                "fn f(&self) {\n    let m = metrics.latencies_us.lock();\n    let g = self.inner.lock();\n}\n"
+            ),
+            vec!["lock-order:3"]
+        );
+        // registry bookkeeping is serve path: no-unwrap + documented
+        // orderings bind exactly as in server.rs
+        assert_eq!(
+            lint_src(rel, "fn f(&self) { self.inner.lock().chunk_refs.get(&p).unwrap(); }\n"),
+            vec!["no-unwrap:1"]
+        );
+        assert_eq!(
+            lint_src(rel, "fn f(&self, m: &Metrics) { m.kv_dedup_hits.fetch_add(1, Ordering::Relaxed); }\n"),
+            vec!["ordering-comment:1"]
+        );
+        // chunk hashing lives in attention/prepared.rs — outside the
+        // coordinator-scoped rules, but the facade ban still binds
+        assert_eq!(
+            lint_src("src/attention/prepared.rs", "use std::sync::Arc;\n"),
+            vec!["facade:1"]
+        );
+        assert!(lint_src("src/attention/prepared.rs", "use crate::sync::Arc;\n").is_empty());
+    }
+
+    #[test]
     fn lint_allow_suppresses_a_single_line() {
         let src = "use std::sync::Mutex; // lint:allow(facade)\n";
         assert!(lint_src("src/a.rs", src).is_empty());
