@@ -114,13 +114,15 @@ pub fn kv_block_ranges(n: usize, num_blocks: usize) -> Vec<(usize, usize)> {
 /// the paper's Section VI-C geometry (N=1024 over four 256-row blocks).
 pub const DEFAULT_BLOCK_ROWS: usize = 256;
 
-// FNV-1a 64 parameters for the chunk content hash.  FNV is enough here:
-// the hash is a *lookup key* for the KV store's prefix index, and every
-// resolved chunk is installed by pointer — a collision can at worst
-// alias two prefixes in the index, and the store re-keys per chunk
-// position through [`chain_link`], so dedup correctness never rests on
-// hash uniqueness alone (outputs stay bit-identical either way because
-// rows are BF16-rounded before hashing and before building).
+// FNV-1a 64 parameters for the chunk content hash.  FNV is only a
+// *lookup key* for the KV store's prefix index — it is not collision
+// resistant, and `put` is reachable by arbitrary wire clients, so dedup
+// correctness must never rest on hash uniqueness.  It doesn't: before a
+// resolved chunk is installed, [`PreparedKv::with_shared_chunks`]
+// byte-compares its stored K/V planes against the source rows
+// ([`KvChunk::matches_rows`]), so a collision — accidental, birthday-
+// bound, or adversarially crafted — costs one wasted compare and a
+// fresh build, never a wrong or cross-session chunk.
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
 
@@ -258,6 +260,28 @@ impl KvChunk {
         }
         record_copy((hi - lo) * row_bytes(self.k.cols, self.v.cols));
     }
+
+    /// Bitwise equality of this chunk's stored K/V planes against source
+    /// rows `[lo, hi)` — f32 bit patterns, so signed zeros and NaN
+    /// payloads compare exactly.  The dedup install gate: a prefix-index
+    /// hit is accepted only when this holds, so chunk reuse rests on the
+    /// bytes themselves and the content hash stays a pure lookup key.
+    /// Cheap next to the LNS conversion a hit skips (a memcmp-shaped
+    /// scan of rows the hasher already streamed once).
+    pub fn matches_rows(&self, k_src: &Mat, v_src: &Mat, lo: usize, hi: usize) -> bool {
+        if self.rows() != hi - lo || self.k.cols != k_src.cols || self.v.cols != v_src.cols {
+            return false;
+        }
+        (lo..hi).all(|r| {
+            let o = r - lo;
+            bits_eq(self.k.row(o), k_src.row(r)) && bits_eq(self.v.row(o), v_src.row(r))
+        })
+    }
+}
+
+#[inline]
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
 }
 
 /// A session's KV prepared for repeated attention calls, stored as a
@@ -304,8 +328,12 @@ impl PreparedKv {
     /// an existing `Arc<KvChunk>` to install verbatim — those rows then
     /// pay zero copy bytes and zero `value_to_lns` conversions, and the
     /// attention grid streams the exact same planes every other holder
-    /// streams (dedup is a storage choice, never a numeric one).  A
-    /// `None` (or a hit whose geometry does not match) builds the chunk
+    /// streams (dedup is a storage choice, never a numeric one).  Every
+    /// hit is verified before it is installed: the chunk's stored K/V
+    /// planes must byte-match the source rows
+    /// ([`KvChunk::matches_rows`]), so a stale or hash-colliding index
+    /// entry can never substitute another session's data.  A `None` (or
+    /// a hit whose geometry or bytes do not match) builds the chunk
     /// fresh, exactly like the unshared path; the ragged tail is always
     /// built fresh and privately owned.  This is the KV store's
     /// prefix-dedup ingest path: hashes are resolved against its radix
@@ -324,9 +352,10 @@ impl PreparedKv {
         let mut chunks = Vec::with_capacity(n.div_ceil(block_rows));
         for c in 0..full {
             let (lo, hi) = (c * block_rows, (c + 1) * block_rows);
-            let hit = resolve(c, chunk_row_hash(k, v, lo, hi)).filter(|ch| {
-                ch.rows() == block_rows && ch.k.cols == k.cols && ch.v.cols == v.cols
-            });
+            // matches_rows covers geometry (rows == block_rows via
+            // hi - lo, both col dims) and the plane bytes themselves
+            let hit =
+                resolve(c, chunk_row_hash(k, v, lo, hi)).filter(|ch| ch.matches_rows(k, v, lo, hi));
             match hit {
                 Some(ch) => chunks.push(ch),
                 None => {
@@ -1072,6 +1101,32 @@ mod tests {
         });
         assert_eq!(guarded.chunks()[0].rows(), 8, "bad-geometry hit must be rejected");
         assert_eq!(guarded.v_lns_mat(), donor.v_lns_mat());
+    }
+
+    #[test]
+    fn content_mismatched_hits_are_rejected_and_built_fresh() {
+        // a hash-colliding (or stale, or adversarially planted) index
+        // entry has the right geometry but the wrong bytes: the install
+        // gate must byte-verify and fall back to a fresh build, never
+        // serve another session's planes
+        let mut rng = Rng::new(79);
+        let (k, v) = rand_kv(&mut rng, 16, 4);
+        let (ko, vo) = rand_kv(&mut rng, 16, 4);
+        let other = PreparedKv::with_block_rows(ko, vo, 8); // same geometry
+        let built = PreparedKv::with_shared_chunks(&k, &v, 8, |c, _| {
+            Some(Arc::clone(&other.chunks()[c]))
+        });
+        assert!(!Arc::ptr_eq(&built.chunks()[0], &other.chunks()[0]));
+        assert!(!Arc::ptr_eq(&built.chunks()[1], &other.chunks()[1]));
+        assert_eq!(built.k_mat().data, k.data, "wrong-content hit must not be installed");
+        assert_eq!(built.v_lns_mat(), convert_values(&v));
+        // matches_rows is exact: same chunk vs its own source rows holds,
+        // a single flipped bit breaks it
+        assert!(built.chunks()[0].matches_rows(&k, &v, 0, 8));
+        let mut k2 = k.clone();
+        k2.data[3] = f32::from_bits(k2.data[3].to_bits() ^ 1);
+        assert!(!built.chunks()[0].matches_rows(&k2, &v, 0, 8));
+        assert!(!built.chunks()[0].matches_rows(&k, &v, 8, 16), "offset rows differ");
     }
 
     #[test]

@@ -31,7 +31,7 @@ use std::time::{Duration, Instant};
 use super::super::protocol::{self, WriteQueue};
 use super::super::request::ServeError;
 use super::super::server::Server;
-use super::frame::{self, Frame, ReadOutcome, MIN_WIRE_VERSION, WIRE_VERSION};
+use super::frame::{self, Frame, ReadOutcome, FORK_WIRE_VERSION, MIN_WIRE_VERSION, WIRE_VERSION};
 use super::stream::{error_frame, run_stream, StreamCtx};
 use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use crate::sync::mpsc::{channel, RecvTimeoutError};
@@ -97,8 +97,8 @@ pub(super) fn run_conn(sock: TcpStream, shared: Arc<Shared>) {
     };
 
     let mut sock = sock;
-    if handshake(&mut sock, &shared, &out) {
-        serve_frames(&mut sock, &shared, &out, &dead);
+    if let Some(version) = handshake(&mut sock, &shared, &out) {
+        serve_frames(&mut sock, &shared, &out, &dead, version);
     }
     // graceful close flushes whatever is queued (terminals, Bye);
     // abortive paths already emptied it
@@ -109,8 +109,9 @@ pub(super) fn run_conn(sock: TcpStream, shared: Arc<Shared>) {
 
 /// Expect `Hello`, answer `HelloAck` with the negotiated version and
 /// the KV geometry the door validates against.  Anything else is a
-/// `Bye` + refusal.
-fn handshake(sock: &mut TcpStream, shared: &Shared, out: &WriteQueue<Frame>) -> bool {
+/// `Bye` + refusal.  Returns the negotiated version on success — the
+/// connection's dialect, which the door enforces per-frame.
+fn handshake(sock: &mut TcpStream, shared: &Shared, out: &WriteQueue<Frame>) -> Option<u32> {
     let deadline = Instant::now() + HANDSHAKE_PATIENCE;
     let stop = || {
         // ordering: Relaxed — advisory shutdown flag; a stale read only
@@ -119,7 +120,7 @@ fn handshake(sock: &mut TcpStream, shared: &Shared, out: &WriteQueue<Frame>) -> 
     };
     let refused = |detail: String| {
         let _ = out.push_unbounded(Frame::Bye { detail });
-        false
+        None
     };
     match frame::read_frame(sock, &stop) {
         Ok(ReadOutcome::Frame(Frame::Hello { version })) => {
@@ -131,18 +132,19 @@ fn handshake(sock: &mut TcpStream, shared: &Shared, out: &WriteQueue<Frame>) -> 
             }
             // echo the *client's* version: every frame a vN client can
             // send is encoded identically in vN+, so the server simply
-            // speaks the client's dialect (a v1 client never sends Fork)
+            // speaks the client's dialect (frames newer than it — e.g.
+            // Fork on a v1 connection — are refused at the door)
             let ack = Frame::HelloAck {
                 version,
                 head_dim: shared.server.head_dim() as u32,
                 seq_len: shared.server.kv.seq_len() as u32,
             };
-            out.push_unbounded(ack).is_ok()
+            out.push_unbounded(ack).ok().map(|_| version)
         }
         Ok(ReadOutcome::Frame(f)) => {
             refused(format!("handshake violation: expected Hello, got {}", frame_name(&f)))
         }
-        Ok(ReadOutcome::Eof) | Err(_) => false,
+        Ok(ReadOutcome::Eof) | Err(_) => None,
         Ok(ReadOutcome::Stopped) => refused("handshake timed out or server stopping".into()),
     }
 }
@@ -153,6 +155,7 @@ fn serve_frames(
     shared: &Arc<Shared>,
     out: &Arc<WriteQueue<Frame>>,
     dead: &Arc<AtomicBool>,
+    wire_version: u32,
 ) {
     let cancels: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
     // raised by the driver once it has said `Bye`: the reader exits at
@@ -166,7 +169,7 @@ fn serve_frames(
         let dead = Arc::clone(dead);
         let closing = Arc::clone(&closing);
         thread::spawn(move || {
-            driver_loop(&shared, &out, &rx, &cancels, &dead, &closing);
+            driver_loop(&shared, &out, &rx, &cancels, &dead, &closing, wire_version);
         })
     };
 
@@ -245,6 +248,7 @@ fn driver_loop(
     cancels: &Mutex<HashSet<u64>>,
     dead: &AtomicBool,
     closing: &AtomicBool,
+    wire_version: u32,
 ) {
     loop {
         match rx.recv_timeout(TICK) {
@@ -252,7 +256,7 @@ fn driver_loop(
                 let _ = out.push_unbounded(Frame::Bye { detail: "goodbye".into() });
                 break;
             }
-            Ok(work) => exec(shared, out, cancels, dead, work),
+            Ok(work) => exec(shared, out, cancels, dead, wire_version, work),
             Err(RecvTimeoutError::Timeout) => {
                 // ordering: Relaxed — advisory flags checked each tick
                 if shared.stop.load(Ordering::Relaxed) {
@@ -279,6 +283,7 @@ fn exec(
     out: &WriteQueue<Frame>,
     cancels: &Mutex<HashSet<u64>>,
     dead: &AtomicBool,
+    wire_version: u32,
     f: Frame,
 ) {
     let id = match f.id() {
@@ -298,7 +303,7 @@ fn exec(
         let _ = out.push_unbounded(Frame::serve_error(id, &ServeError::Overloaded));
         return;
     }
-    if let Err(detail) = door_check(&shared.server, &f) {
+    if let Err(detail) = door_check(&shared.server, &f, wire_version) {
         let _ = out.push_unbounded(Frame::invalid(id, detail));
         protocol::release(&shared.active_requests);
         return;
@@ -356,9 +361,10 @@ fn exec(
 }
 
 /// Door validation: shape/geometry/length checks against the server's
-/// KV geometry, refused with a typed `Error { code: 0 }` before any
-/// server resource is touched.
-fn door_check(server: &Server, f: &Frame) -> Result<(), String> {
+/// KV geometry, plus dialect enforcement (frames newer than the
+/// connection's negotiated wire version are refused), all answered with
+/// a typed `Error { code: 0 }` before any server resource is touched.
+fn door_check(server: &Server, f: &Frame, wire_version: u32) -> Result<(), String> {
     let hd = server.head_dim();
     let seq = server.kv.seq_len();
     let check_session = |s: &str| -> Result<(), String> {
@@ -395,6 +401,14 @@ fn door_check(server: &Server, f: &Frame) -> Result<(), String> {
             check_q(q)
         }
         Frame::Fork { parent, child, .. } => {
+            // "a v1 client never sends Fork" is an enforced invariant,
+            // not a convention: the negotiated dialect gates the frame
+            if wire_version < FORK_WIRE_VERSION {
+                return Err(format!(
+                    "Fork requires wire v{FORK_WIRE_VERSION}+; this connection negotiated \
+                     v{wire_version}"
+                ));
+            }
             check_session(parent)?;
             check_session(child)?;
             if parent == child {
@@ -659,6 +673,35 @@ mod tests {
         // a v1 workload is served unchanged
         send(&mut c, &Frame::Put { id: 1, session: "s".into(), k: Mat::zeros(2, 8), v: Mat::zeros(2, 8) });
         assert_eq!(recv(&mut c), Frame::Ack { id: 1 });
+        send(&mut c, &Frame::Goodbye);
+        let _ = recv(&mut c);
+        h.join().expect("conn thread exits");
+    }
+
+    #[test]
+    fn v1_connections_cannot_fork() {
+        let sh = shared();
+        sh.server.kv.put("base", Mat::zeros(2, 8), Mat::zeros(2, 8)).expect("put");
+        let (mut c, h) = one_conn(&sh);
+        send(&mut c, &Frame::Hello { version: MIN_WIRE_VERSION });
+        let _ = recv(&mut c);
+        // the negotiated dialect is enforced per-frame: a v1 connection
+        // sending the v2-only Fork gets a typed door refusal
+        send(&mut c, &Frame::Fork { id: 1, parent: "base".into(), child: "beam".into() });
+        match recv(&mut c) {
+            Frame::Error { id, code, ref detail, .. } => {
+                assert_eq!((id, code), (1, frame::CODE_INVALID));
+                assert!(detail.contains("negotiated v1"), "{detail}");
+            }
+            other => panic!("expected Error, got {other:?}"),
+        }
+        assert!(!sh.server.kv.contains("beam"), "refused fork must not create the child");
+        // the refusal is per-frame, not connection-fatal
+        send(&mut c, &Frame::Put { id: 2, session: "s".into(), k: Mat::zeros(2, 8), v: Mat::zeros(2, 8) });
+        assert_eq!(recv(&mut c), Frame::Ack { id: 2 });
+        // gate fully released after the rejection
+        // ordering: Relaxed — quiesced single-threaded readback
+        assert_eq!(sh.active_requests.load(Ordering::Relaxed), 0);
         send(&mut c, &Frame::Goodbye);
         let _ = recv(&mut c);
         h.join().expect("conn thread exits");

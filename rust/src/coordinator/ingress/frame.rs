@@ -36,13 +36,19 @@ use crate::Mat;
 /// sharing).  The handshake negotiates: the server accepts any client
 /// in [`MIN_WIRE_VERSION`]`..=`[`WIRE_VERSION`] and echoes the
 /// *client's* version in `HelloAck`, so a v1 client keeps working
-/// unchanged (it never sends `Fork`); anything outside the range is
-/// refused at the handshake.
+/// unchanged; anything outside the range is refused at the handshake.
+/// The negotiated version is an enforced invariant, not a convention:
+/// the door rejects frames newer than the connection's dialect (a v1
+/// connection sending `Fork` gets a typed per-frame refusal).
 pub const WIRE_VERSION: u32 = 2;
 
 /// Oldest client version the server still speaks (every v1 frame is
 /// encoded identically in v2 — the bump is purely additive).
 pub const MIN_WIRE_VERSION: u32 = 1;
+
+/// First wire version that carries `Fork`; the door refuses the frame
+/// on connections that negotiated anything older.
+pub const FORK_WIRE_VERSION: u32 = 2;
 
 /// Upper bound on a frame body (16 MiB) — large enough for a full
 /// `Put` of any geometry this repo benchmarks, small enough that a

@@ -48,7 +48,11 @@
 //! resident prefix resolves those chunks to the existing `Arc<KvChunk>`s
 //! *before* any LNS conversion happens — a fleet of S sessions sharing a
 //! P-row prompt stores and converts the prefix once, not S times
-//! (pinned by `rust/tests/prefix_sharing.rs`).  [`KvStore::fork`] goes
+//! (pinned by `rust/tests/prefix_sharing.rs`).  Hashes are lookup keys
+//! only: every resolved chunk is byte-verified against the rounded
+//! source rows before it is installed ([`KvChunk::matches_rows`]), so a
+//! hash collision can never alias one session's chunk into another's
+//! table.  [`KvStore::fork`] goes
 //! further: the child session's chunk table is a copy of the parent's
 //! (every chunk shared, tail included), and the first append to either
 //! branch copy-on-writes only that branch's tail chunk.
@@ -252,7 +256,10 @@ impl Inner {
     /// pinned sessions remain.  The delta is recomputed after every
     /// eviction: evicting a victim that shared chunks with `next` grows
     /// the bytes this install must newly charge.  Call *before* applying
-    /// the swap so a rejected write leaves the store untouched.
+    /// the swap so a rejected write never lands — though evictions
+    /// performed while trying to make room persist even when admission
+    /// ultimately fails, so callers must republish gauges on the error
+    /// path too.
     fn admit_swap(&mut self, session: &str, next: &PreparedKv) -> Result<()> {
         loop {
             let (added, freed) = self.swap_delta(session, next);
@@ -411,11 +418,13 @@ impl KvStore {
     /// gauges (`kv_resident_bytes`, `kv_shared_bytes`,
     /// `kv_resident_sessions`) and the `kv_dedup_hits` counter after
     /// every state change.  Publication is atomics-only — no Metrics
-    /// lock is taken, even with the store lock held.  Counting happens
-    /// only after a successful admit+install, so a put or fork that
-    /// fails admission leaves every figure untouched (the rollback
+    /// lock is taken, even with the store lock held.  The `kv_dedup_hits`
+    /// counter moves only on a successful admit+install (the rollback
     /// discipline of `batched_sessions`: a rejected operation never
-    /// shows in the snapshot).  Idempotent; the first attach wins.
+    /// counts a hit); the byte/session gauges are republished even when
+    /// admission fails, because evictions performed while trying to
+    /// make room persist and must show in the snapshot immediately.
+    /// Idempotent; the first attach wins.
     pub fn attach_metrics(&self, metrics: Arc<Metrics>) {
         let _ = self.metrics.set(metrics);
     }
@@ -453,16 +462,20 @@ impl KvStore {
     /// Insert (or replace) a session's KV matrices.  The prefill may be
     /// any length `1..=seq_len` (a decode session grows the rest via
     /// [`KvStore::append`]).  The BF16 rounding and the one-time V->LNS
-    /// preparation happen *outside* the lock.  Fails (without touching
-    /// the store) when the session cannot fit inside the byte budget
-    /// after evicting every unpinned resident session.
+    /// preparation happen *outside* the lock.  Fails — leaving the
+    /// session itself untouched, though evictions performed while
+    /// trying to make room persist — when the session cannot fit inside
+    /// the byte budget after evicting every unpinned resident session.
     ///
     /// Full (capacity-aligned) prefix chunks of the rounded rows are
-    /// first resolved against the radix prefix index: a hit installs
-    /// the already-resident `Arc<KvChunk>` verbatim — no copy, no LNS
-    /// conversion, near-zero byte charge — so both `value_to_lns` work
-    /// and `used_bytes` scale with *unique* rows fleet-wide, not
-    /// sessions x rows (pinned by `rust/tests/prefix_sharing.rs`).
+    /// first resolved against the radix prefix index: a hit whose
+    /// stored planes byte-match the rounded source rows (the
+    /// [`KvChunk::matches_rows`] install gate — hashes are lookup keys,
+    /// never trusted for content) installs the already-resident
+    /// `Arc<KvChunk>` verbatim — no copy, no LNS conversion, near-zero
+    /// byte charge — so both `value_to_lns` work and `used_bytes` scale
+    /// with *unique* rows fleet-wide, not sessions x rows (pinned by
+    /// `rust/tests/prefix_sharing.rs`).
     pub fn put(&self, session: &str, k: Mat, v: Mat) -> Result<()> {
         if !(1..=self.seq_len).contains(&k.rows) || k.cols != self.head_dim {
             bail!(
@@ -476,9 +489,11 @@ impl KvStore {
         let k = k.round_bf16();
         let v = v.round_bf16();
         // hash the full prefix chunks of the *rounded* rows (chunk
-        // planes hold exactly these bits, so equal hash input means a
-        // reused chunk is bit-for-bit what a fresh build would write),
-        // then resolve them under a brief lock before building anything
+        // planes hold exactly these bits), then resolve them under a
+        // brief lock before building anything; the hits are only
+        // candidates — with_shared_chunks byte-verifies each one
+        // against the rounded rows before installing it, so a hash
+        // collision can never alias another session's chunk
         let block_rows = DEFAULT_BLOCK_ROWS;
         let root = chain_root(k.cols, v.cols, block_rows);
         let hashes: Vec<u64> = (0..k.rows / block_rows)
@@ -489,7 +504,6 @@ impl KvStore {
         } else {
             self.inner.lock().resolve_prefix(root, &hashes)
         };
-        let dedup_hits = hits.iter().flatten().count() as u64;
         // build outside the lock: only missed chunks and the ragged
         // tail convert and copy (two sessions racing the same new
         // prefix may both build it — benign: one registration wins the
@@ -497,10 +511,24 @@ impl KvStore {
         let prepared = PreparedKv::with_shared_chunks(&k, &v, block_rows, |c, _| {
             hits.get(c).cloned().flatten()
         });
+        // count hits the verify gate actually installed, not resolver
+        // candidates (a byte-mismatched candidate builds fresh)
+        let dedup_hits = prepared
+            .chunks()
+            .iter()
+            .zip(&hits)
+            .filter(|&(c, h)| h.as_ref().is_some_and(|hc| Arc::ptr_eq(c, hc)))
+            .count() as u64;
         let entry = KvEntry { prepared: Arc::new(prepared) };
         let installed = Arc::clone(&entry.prepared);
         let mut g = self.inner.lock();
-        g.admit_swap(session, &entry.prepared)?;
+        if let Err(e) = g.admit_swap(session, &entry.prepared) {
+            // evictions performed while trying to make room persist:
+            // refresh the gauges so a failed admission never leaves
+            // them stale until the next successful operation
+            self.publish(&g, 0);
+            return Err(e);
+        }
         g.install(session, entry);
         g.index_prefix(root, &hashes, &installed);
         self.publish(&g, dedup_hits);
@@ -517,7 +545,9 @@ impl KvStore {
     /// ([`PreparedKv::append`]'s copy-on-write), charging only the
     /// delta bytes.  Fails when `parent` is not resident or `child`
     /// already is (forking over a live session would silently drop its
-    /// state).  Counts as a use of `parent` (LRU refresh).
+    /// state).  Counts as a use of `parent` (LRU refresh) — but only
+    /// once validation passes, so a rejected fork leaves eviction
+    /// order untouched.
     pub fn fork(&self, parent: &str, child: &str) -> Result<()> {
         if parent.is_empty() || child.is_empty() {
             bail!("fork: empty session name");
@@ -526,6 +556,11 @@ impl KvStore {
             bail!("fork: parent and child must be distinct sessions");
         }
         let mut g = self.inner.lock();
+        // validate the child before touching the parent's LRU stamp:
+        // a rejected fork must not mutate eviction order
+        if g.entries.contains_key(child) {
+            bail!("fork: session {child:?} is already resident");
+        }
         let stamp = g.next_tick();
         let base = match g.entries.get_mut(parent) {
             Some(slot) => {
@@ -534,13 +569,14 @@ impl KvStore {
             }
             None => bail!("fork: unknown parent session {parent:?}"),
         };
-        if g.entries.contains_key(child) {
-            bail!("fork: session {child:?} is already resident");
-        }
         let shared = base.chunks().len() as u64;
         // a table copy, not a plane copy: one Arc pointer per chunk
         let entry = KvEntry { prepared: Arc::new((*base).clone()) };
-        g.admit_swap(child, &entry.prepared)?;
+        if let Err(e) = g.admit_swap(child, &entry.prepared) {
+            // see put(): evictions from the failed admission persist
+            self.publish(&g, 0);
+            return Err(e);
+        }
         g.install(child, entry);
         self.publish(&g, shared);
         Ok(())
@@ -614,7 +650,11 @@ impl KvStore {
                 Some(_) => continue,
                 None => bail!("unknown session {session:?}"),
             }
-            g.admit_swap(session, &next)?;
+            if let Err(e) = g.admit_swap(session, &next) {
+                // see put(): evictions from the failed admission persist
+                self.publish(&g, 0);
+                return Err(e);
+            }
             g.install(session, KvEntry { prepared: next });
             self.publish(&g, 0);
             return Ok(());
@@ -1177,6 +1217,42 @@ mod tests {
         // though four sessions now share a two-full-session budget
         assert_eq!(store.evictions(), 0);
         assert_eq!(store.used_bytes(), 8 * row_bytes(4, 4));
+    }
+
+    #[test]
+    fn failed_fork_does_not_refresh_parent_lru() {
+        let store = KvStore::new(4, 4, 2); // budget: two full sessions
+        let (k, v) = kv(4, 4, 1.0);
+        store.put("a", k.clone(), v.clone()).unwrap();
+        store.put("b", k.clone(), v.clone()).unwrap();
+        // "a" is LRU; a rejected fork (child already resident) must not
+        // count as a use of the parent
+        assert!(store.fork("a", "b").is_err());
+        store.put("c", k, v).unwrap(); // evicts the true LRU
+        assert!(!store.contains("a"), "failed fork must not refresh the parent's stamp");
+        assert!(store.contains("b"));
+    }
+
+    #[test]
+    fn failed_admission_evictions_still_publish_gauges() {
+        // budget: 8 rows; "old" (4 rows, unpinned) + "pinned" (4 rows)
+        let store = KvStore::with_byte_budget(16, 4, 8 * row_bytes(4, 4));
+        let m = Arc::new(Metrics::new());
+        store.attach_metrics(Arc::clone(&m));
+        let (k, v) = kv(4, 4, 1.0);
+        store.put("old", k.clone(), v.clone()).unwrap();
+        store.put("pinned", k, v).unwrap();
+        assert!(store.pin("pinned"));
+        // 8 new rows fit the budget alone but not beside the pinned 4:
+        // admission evicts "old", then fails on the pinned remainder —
+        // the eviction persists and the gauges must say so immediately
+        let (kb, vb) = kv(8, 4, 2.0);
+        assert!(store.put("big", kb, vb).is_err());
+        assert!(!store.contains("old"), "eviction from the failed admission persists");
+        let snap = m.snapshot();
+        assert_eq!(snap.kv_resident_sessions, 1, "gauge must reflect the eviction");
+        assert_eq!(snap.kv_resident_bytes, (4 * row_bytes(4, 4)) as u64);
+        store.unpin("pinned");
     }
 
     #[test]
